@@ -1,0 +1,46 @@
+//! Memory planner: the paper's §3.3 memory model as a tool. Given a model
+//! size and batch/seq, print the peak-memory composition and what 8-bit
+//! weight/activation/optimizer storage would save (Figs. 2, 14, 15 analytic
+//! substrate).
+//!
+//! Run: `cargo run --release --example memory_planner -- [small|medium|large|xl] [batch] [seq]`
+
+use qpretrain::memmodel::{peak_memory, peak_memory_quantized, profile_model};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let size = args.get(1).map(String::as_str).unwrap_or("small");
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let seq: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1024);
+
+    let model = profile_model(size);
+    println!(
+        "GPT-2 {size}: {} layers, d={}, {:.0}M params, batch {batch} x seq {seq}\n",
+        model.n_layer,
+        model.d_model,
+        model.n_params as f64 / 1e6
+    );
+
+    let fp = peak_memory(&model, batch, seq);
+    println!("bf16 mixed-precision training (peak at {}):", fp.peak_phase);
+    for (name, frac) in fp.fractions() {
+        println!("  {name:<12} {:>8.2} GB  ({:.1}%)", gb(frac * fp.total() as f64), 100.0 * frac);
+    }
+    println!("  {:<12} {:>8.2} GB", "TOTAL", gb(fp.total() as f64));
+
+    println!("\nwith the paper's recipe (8-bit weights+activations, 8-bit Adam states):");
+    let q = peak_memory_quantized(&model, batch, seq, 8, 8, 8);
+    for (name, frac) in q.fractions() {
+        println!("  {name:<12} {:>8.2} GB  ({:.1}%)", gb(frac * q.total() as f64), 100.0 * frac);
+    }
+    println!("  {:<12} {:>8.2} GB", "TOTAL", gb(q.total() as f64));
+    println!(
+        "\nsavings: {:.2} GB ({:.1}% of peak)",
+        gb((fp.total() - q.total()) as f64),
+        100.0 * (fp.total() - q.total()) as f64 / fp.total() as f64
+    );
+}
+
+fn gb(bytes: f64) -> f64 {
+    bytes / 1e9
+}

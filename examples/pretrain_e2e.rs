@@ -1,0 +1,110 @@
+//! End-to-end validation (DESIGN.md §E-E2E): pre-train the ~100M-parameter
+//! `gpt2s` model (12L/768d/12h, 8k vocab) for a few hundred steps with the
+//! paper's recommended W8A8 recipe, logging the loss curve and throughput,
+//! then evaluate perplexity on the held-out sets.
+//!
+//! Run: `cargo run --release --example pretrain_e2e -- [steps] [base|wa]`
+//! Defaults to 150 steps of the `wa` (W8 per-channel + A8 per-token) recipe.
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::time::Instant;
+
+use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
+use qpretrain::eval::{perplexity_suite, EvalQuant};
+use qpretrain::runtime::Runtime;
+use qpretrain::train::{train, TrainCfg};
+use qpretrain::util::{artifact_dir, repo_root};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let structure = args.get(2).cloned().unwrap_or_else(|| "wa".to_string());
+
+    let rt = Runtime::new(&artifact_dir())?;
+    let model = rt.manifest.model("gpt2s")?.clone();
+    println!(
+        "gpt2s: {} layers, d={}, {} params ({:.1}M), batch {} x seq {}",
+        model.n_layer,
+        model.d_model,
+        model.n_params,
+        model.n_params as f64 / 1e6,
+        model.batch,
+        model.seq
+    );
+
+    let bits = if structure == "base" {
+        BitWidths::none()
+    } else {
+        BitWidths {
+            weights: 8,
+            acts: 8,
+            ..BitWidths::none()
+        }
+    };
+    let mut cfg = TrainCfg::new(
+        "gpt2s",
+        QuantRunCfg {
+            structure: structure.clone(),
+            bits,
+        },
+        TrainHp {
+            steps,
+            lr_max: 6e-4, // the paper's GPT-2 learning rate
+            lr_min: 6e-5,
+            warmup: steps / 10,
+            eval_every: (steps / 4).max(1),
+            eval_batches: 2,
+            log_every: 1,
+            ..TrainHp::default()
+        },
+    );
+    let out = repo_root().join("runs/e2e").join(format!("{structure}_s{steps}"));
+    cfg.out_dir = Some(out.clone());
+    cfg.save_ckpt = true;
+
+    println!("training {} for {steps} steps ...", cfg.quant.label());
+    let t0 = Instant::now();
+    let r = train(&rt, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens_per_step = (model.batch * model.seq) as f64;
+
+    println!("\nloss curve (every {} steps):", (steps / 20).max(1));
+    for (i, l) in r.losses.iter().enumerate() {
+        if (i + 1) % (steps / 20).max(1) == 0 {
+            println!("  step {:>4}: {l:.4}", i + 1);
+        }
+    }
+    println!(
+        "\nthroughput: {:.2} steps/s = {:.0} tokens/s (wall {:.0}s)",
+        r.steps_per_sec,
+        r.steps_per_sec * tokens_per_step,
+        wall
+    );
+    println!(
+        "loss: {:.4} -> {:.4} (val {:.4}), diverged={}",
+        r.losses.first().unwrap_or(&f64::NAN),
+        r.final_loss(),
+        r.final_val_loss(),
+        r.diverged
+    );
+
+    let params = r.final_state.param_literals(&model)?;
+    let q = EvalQuant {
+        qmax_w: bits.qmax_scalars()[0],
+        qmax_a: bits.qmax_scalars()[1],
+    };
+    let eval_art = if structure == "base" {
+        "gpt2s/eval/base".to_string()
+    } else {
+        // gpt2s ships a base eval artifact; W8A8 fwd-quant eval uses qmax on
+        // the t4-style wa eval only for t4 — for gpt2s we score unquantized.
+        "gpt2s/eval/base".to_string()
+    };
+    let ppl = perplexity_suite(&rt, &eval_art, &model, &params, 2, q)?;
+    println!("\nheld-out perplexity:");
+    for (k, v) in &ppl {
+        println!("  {k}: {v:.2}");
+    }
+    println!("\nrun artifacts -> {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! The paper's §4.5 recipe in action: train the study model under
+//! (a) fp32 baseline, (b) W8A8 (recommended), (c) W8A8G8 (not recommended),
+//! and compare validation loss + downstream accuracy — reproducing the
+//! Fig. 13 conclusion that W+A quantization tracks the baseline while adding
+//! gradient quantization costs real performance.
+//!
+//! Run: `cargo run --release --example quant_recipe -- [steps]`
+
+use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
+use qpretrain::eval::{fewshot_suite, EvalQuant};
+use qpretrain::runtime::Runtime;
+use qpretrain::train::{train, TrainCfg};
+use qpretrain::util::artifact_dir;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let rt = Runtime::new(&artifact_dir())?;
+    let model = rt.manifest.model("t4")?.clone();
+
+    let configs = [
+        ("baseline", "base", BitWidths::none()),
+        (
+            "W8A8 (recipe)",
+            "wa",
+            BitWidths {
+                weights: 8,
+                acts: 8,
+                ..BitWidths::none()
+            },
+        ),
+        (
+            "W8A8G8",
+            "wag",
+            BitWidths {
+                weights: 8,
+                acts: 8,
+                grads: 8,
+                ..BitWidths::none()
+            },
+        ),
+    ];
+
+    println!("| config | final val loss | few-shot avg |");
+    println!("|---|---|---|");
+    for (name, structure, bits) in configs {
+        let cfg = TrainCfg::new(
+            "t4",
+            QuantRunCfg {
+                structure: structure.into(),
+                bits,
+            },
+            TrainHp {
+                steps,
+                ..TrainHp::default()
+            },
+        );
+        let r = train(&rt, &cfg)?;
+        let params = r.final_state.param_literals(&model)?;
+        let q = EvalQuant {
+            qmax_w: bits.qmax_scalars()[0],
+            qmax_a: bits.qmax_scalars()[1],
+        };
+        let fs = fewshot_suite(&rt, &cfg.eval_artifact(), &model, &params, 16, 2, q)?;
+        println!(
+            "| {name} | {:.4} | {:.1}% |",
+            r.final_val_loss(),
+            100.0 * fs.average
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load the AOT artifacts, pre-train the study model for a few
+//! steps with the paper's recommended recipe (8-bit per-channel weights +
+//! 8-bit per-token activations), and print the loss curve.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once).
+
+use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
+use qpretrain::runtime::Runtime;
+use qpretrain::train::{train, TrainCfg};
+use qpretrain::util::artifact_dir;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    println!(
+        "loaded manifest: {} artifacts, models: {:?}",
+        rt.manifest.artifacts.len(),
+        rt.manifest.models.keys().collect::<Vec<_>>()
+    );
+
+    let cfg = TrainCfg::new(
+        "t4",
+        QuantRunCfg {
+            structure: "wa".into(), // W8 per-channel + A8 per-token (paper §4.5)
+            bits: BitWidths {
+                weights: 8,
+                acts: 8,
+                ..BitWidths::none()
+            },
+        },
+        TrainHp {
+            steps: 60,
+            eval_every: 20,
+            ..TrainHp::default()
+        },
+    );
+    println!("training {} on {} ...", cfg.quant.label(), cfg.model);
+    let r = train(&rt, &cfg)?;
+
+    println!("\nstep  loss");
+    for (i, l) in r.losses.iter().enumerate() {
+        if (i + 1) % 10 == 0 {
+            println!("{:>4}  {l:.4}", i + 1);
+        }
+    }
+    for (s, v) in &r.val {
+        println!("val @ {s}: {v:.4}");
+    }
+    println!(
+        "\n{}: final loss {:.4} ({:.2} steps/s), diverged={}",
+        r.label,
+        r.final_loss(),
+        r.steps_per_sec,
+        r.diverged
+    );
+    Ok(())
+}

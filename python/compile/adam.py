@@ -1,0 +1,73 @@
+"""AdamW with optionally fake-quantized optimizer states (paper §4.4).
+
+The paper's protocol: the quantized moment values are what is *stored*
+between iterations; at each step the stored (already fake-quantized) moments
+are combined with the fresh gradient, the update is applied from the newly
+quantized moments (so the update sees exactly the storage format), and the
+quantized moments are carried to the next step.
+
+This is what makes the second moment fragile (Fig. 12): symmetric linear
+quantization around zero collapses the many tiny v-values into the zero bin,
+and since v sits in the denominator of the Adam update the de-quantized
+zeros produce excessively large steps.
+
+Weight decay is decoupled (AdamW) and applied only to >=2D weights;
+gradients are clipped by global norm before the moment update (nanoGPT
+setup, Appendix A). The global gradient norm is returned so the coordinator
+can track the paper's Fig. 10 spikes.
+"""
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from .configs import HP, HyperParams, ModelCfg
+from .model import param_defs
+from .quantizer import QuantConfig, moment_qdq
+
+
+def global_norm(tree: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in tree.values()))
+
+
+def adamw_update(
+    cfg: ModelCfg,
+    qcfg: QuantConfig,
+    params: Dict[str, jnp.ndarray],
+    grads: Dict[str, jnp.ndarray],
+    m: Dict[str, jnp.ndarray],
+    v: Dict[str, jnp.ndarray],
+    lr: jnp.ndarray,
+    t: jnp.ndarray,  # 1-based step counter, f32 scalar
+    qmax_m1: jnp.ndarray,
+    qmax_m2: jnp.ndarray,
+    hp: HyperParams = HP,
+) -> Tuple[Dict, Dict, Dict, jnp.ndarray]:
+    """One AdamW step. Returns (params', m', v', pre-clip grad global norm)."""
+    defs = {d.name: d for d in param_defs(cfg)}
+
+    gnorm = global_norm(grads)
+    clip_coef = jnp.minimum(1.0, hp.grad_clip / (gnorm + 1e-12))
+    grads = {k: g * clip_coef for k, g in grads.items()}
+
+    bc1 = 1.0 - hp.beta1 ** t
+    bc2 = 1.0 - hp.beta2 ** t
+
+    new_params, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k]
+        stacked = defs[k].stacked
+        m_new = hp.beta1 * m[k] + (1.0 - hp.beta1) * g
+        v_new = hp.beta2 * v[k] + (1.0 - hp.beta2) * g * g
+        # store fake-quantized; the update reads the stored representation
+        m_new = moment_qdq(m_new, qmax_m1, qcfg.m1, stacked)
+        v_new = moment_qdq(v_new, qmax_m2, qcfg.m2, stacked)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        step = m_hat / (jnp.sqrt(v_hat) + hp.eps)
+        if defs[k].decay:
+            step = step + hp.weight_decay * p
+        new_params[k] = p - lr * step
+        new_m[k] = m_new
+        new_v[k] = v_new
+    return new_params, new_m, new_v, gnorm

@@ -1,0 +1,557 @@
+"""AOT artifact builder: lower every step function to HLO *text* + manifest.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+The builder is incremental: each artifact's config hash (spec + source tree
++ jax version) is recorded in `manifest.json`; unchanged artifacts are
+skipped, so `make artifacts` is cheap to re-run.
+
+Artifact inventory (see DESIGN.md §6):
+  t4/train/<structure>     17 granularity structures incl. the pallas-backend
+                           composition proof (bit-width is a runtime scalar)
+  t4/eval/<structure>       8 forward structures (PTQ-activation reuses these)
+  t4/probe/{act,grad}       outlier / gradient-snapshot probes (Figs 6, 8, 10)
+  gpt2s/{train_base,train_wa,eval_base}   ~100M end-to-end configs
+  prof/{linear,attn}_<size>_s<seq>        Fig. 3 timing blocks
+  k/*                       standalone L1 kernel artifacts (runtime validation
+                            + rust-side kernel benches)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import steps
+from .configs import GPT2S, PROF, T4, ModelCfg
+from .quantizer import QuantConfig, QuantSpec
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(names_shapes):
+    return [
+        {"name": n, "dtype": d, "shape": list(s)} for (n, d, s) in names_shapes
+    ]
+
+
+def _spec_of(sig):
+    dt = {"f32": F32, "i32": I32}
+    return [jax.ShapeDtypeStruct(tuple(e["shape"]), dt[e["dtype"]]) for e in sig]
+
+
+def _param_sig(cfg: ModelCfg, prefix=""):
+    return [(prefix + d.name, "f32", d.shape) for d in M.param_defs(cfg)]
+
+
+def quant_json(q: QuantConfig):
+    def spec(s):
+        if s is None:
+            return None
+        return {
+            "granularity": s.granularity,
+            "asymmetric": s.asymmetric,
+            "backend": s.backend,
+        }
+
+    return {
+        "weights": spec(q.weights),
+        "acts": spec(q.acts),
+        "grads": spec(q.grads),
+        "quantize_act_grads": q.quantize_act_grads,
+        "m1": spec(q.m1),
+        "m2": spec(q.m2),
+    }
+
+
+# ---------------------------------------------------------------------------
+# quant structures under study (bit-width is runtime, so e.g. w4_pt and w8_pt
+# share the "w_pt" artifact)
+# ---------------------------------------------------------------------------
+
+S = QuantSpec
+
+TRAIN_STRUCTURES = {
+    "base": QuantConfig(),
+    "w_pt": QuantConfig(weights=S("per_tensor")),
+    "w_pc": QuantConfig(weights=S("per_channel")),
+    "a_pt": QuantConfig(acts=S("per_tensor")),
+    "a_ptok": QuantConfig(acts=S("per_token")),
+    "a_ptok_asym": QuantConfig(acts=S("per_token", asymmetric=True)),
+    "a_pc": QuantConfig(acts=S("per_channel")),
+    "g_pt": QuantConfig(grads=S("per_tensor")),
+    "g_ptok": QuantConfig(grads=S("per_token")),
+    "g_ptok_actgrad": QuantConfig(grads=S("per_token"), quantize_act_grads=True),
+    "m1_pt": QuantConfig(m1=S("per_tensor")),
+    "m1_pc": QuantConfig(m1=S("per_channel")),
+    "m2_pt": QuantConfig(m2=S("per_tensor")),
+    "m2_pc": QuantConfig(m2=S("per_channel")),
+    "wa": QuantConfig(weights=S("per_channel"), acts=S("per_token")),
+    "wag": QuantConfig(
+        weights=S("per_channel"), acts=S("per_token"), grads=S("per_token")
+    ),
+    # L1 composition proof: the pallas kernel lowers inside the train step
+    "w_pc_pallas": QuantConfig(weights=S("per_channel", backend="pallas")),
+}
+
+EVAL_STRUCTURES = {
+    k: TRAIN_STRUCTURES[k]
+    for k in [
+        "base", "w_pt", "w_pc", "a_pt", "a_ptok", "a_ptok_asym", "a_pc", "wa",
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# artifact specs
+# ---------------------------------------------------------------------------
+
+
+def train_inputs(cfg: ModelCfg):
+    sig = (
+        _param_sig(cfg)
+        + _param_sig(cfg, "m.")
+        + _param_sig(cfg, "v.")
+        + [
+            ("x", "i32", (cfg.batch, cfg.seq)),
+            ("y", "i32", (cfg.batch, cfg.seq)),
+            ("lr", "f32", ()),
+            ("t", "f32", ()),
+            ("qmax_w", "f32", ()),
+            ("qmax_a", "f32", ()),
+            ("qmax_g", "f32", ()),
+            ("qmax_m1", "f32", ()),
+            ("qmax_m2", "f32", ()),
+        ]
+    )
+    return _sig(sig)
+
+
+def train_outputs(cfg: ModelCfg):
+    sig = (
+        _param_sig(cfg)
+        + _param_sig(cfg, "m.")
+        + _param_sig(cfg, "v.")
+        + [("loss", "f32", ()), ("gnorm", "f32", ())]
+    )
+    return _sig(sig)
+
+
+def eval_inputs(cfg: ModelCfg):
+    return _sig(
+        _param_sig(cfg)
+        + [
+            ("x", "i32", (cfg.batch, cfg.seq)),
+            ("y", "i32", (cfg.batch, cfg.seq)),
+            ("mask", "f32", (cfg.batch, cfg.seq)),
+            ("qmax_w", "f32", ()),
+            ("qmax_a", "f32", ()),
+        ]
+    )
+
+
+def eval_outputs(cfg: ModelCfg):
+    return _sig(
+        [("mean_nll", "f32", ()), ("per_pos_nll", "f32", (cfg.batch, cfg.seq))]
+    )
+
+
+def collect_artifacts():
+    """Yield dicts: {name, fn, inputs, outputs, meta}."""
+    arts = []
+
+    def add(name, fn, inputs, outputs, **meta):
+        arts.append(
+            {"name": name, "fn": fn, "inputs": inputs, "outputs": outputs, "meta": meta}
+        )
+
+    # --- t4 study model ---
+    for sname, qcfg in TRAIN_STRUCTURES.items():
+        add(
+            f"t4/train/{sname}",
+            steps.make_train_step(T4, qcfg),
+            train_inputs(T4),
+            train_outputs(T4),
+            kind="train",
+            model="t4",
+            quant=quant_json(qcfg),
+        )
+    for sname, qcfg in EVAL_STRUCTURES.items():
+        add(
+            f"t4/eval/{sname}",
+            steps.make_eval_step(T4, qcfg),
+            eval_inputs(T4),
+            eval_outputs(T4),
+            kind="eval",
+            model="t4",
+            quant=quant_json(qcfg),
+        )
+
+    probe_layer = T4.n_layer - 1
+    add(
+        "t4/probe/act",
+        steps.make_act_probe(T4, QuantConfig(), probe_layer),
+        _sig(
+            _param_sig(T4)
+            + [("x", "i32", (T4.batch, T4.seq)), ("qmax_w", "f32", ()), ("qmax_a", "f32", ())]
+        ),
+        _sig(
+            [
+                ("proj_in", "f32", (T4.batch, T4.seq, T4.d_model)),
+                ("fc2_in", "f32", (T4.batch, T4.seq, T4.d_ff)),
+            ]
+        ),
+        kind="act_probe",
+        model="t4",
+        probe_layer=probe_layer,
+    )
+    add(
+        "t4/probe/grad",
+        steps.make_grad_probe(T4, QuantConfig()),
+        _sig(
+            _param_sig(T4)
+            + [
+                ("x", "i32", (T4.batch, T4.seq)),
+                ("y", "i32", (T4.batch, T4.seq)),
+                ("qmax_w", "f32", ()),
+                ("qmax_a", "f32", ()),
+                ("qmax_g", "f32", ()),
+            ]
+        ),
+        _sig(
+            [
+                ("d_qkv_w0", "f32", (T4.d_model, 3 * T4.d_model)),
+                ("d_ctx0", "f32", (T4.batch, T4.seq, T4.d_model)),
+            ]
+        ),
+        kind="grad_probe",
+        model="t4",
+    )
+
+    # --- gpt2s end-to-end (~100M params) ---
+    for sname in ["base", "wa"]:
+        add(
+            f"gpt2s/train/{sname}",
+            steps.make_train_step(GPT2S, TRAIN_STRUCTURES[sname]),
+            train_inputs(GPT2S),
+            train_outputs(GPT2S),
+            kind="train",
+            model="gpt2s",
+            quant=quant_json(TRAIN_STRUCTURES[sname]),
+        )
+    add(
+        "gpt2s/eval/base",
+        steps.make_eval_step(GPT2S, QuantConfig()),
+        eval_inputs(GPT2S),
+        eval_outputs(GPT2S),
+        kind="eval",
+        model="gpt2s",
+        quant=quant_json(QuantConfig()),
+    )
+
+    # --- Fig. 3 profiling blocks (fwd+bwd) ---
+    for size, pcfg in PROF.items():
+        d, f, nh, hd = pcfg.d_model, pcfg.d_ff, pcfg.n_head, pcfg.d_head
+        for seq in [128, 256, 512, 1024]:
+            B = 1
+
+            def make_linear(d=d, f=f, seq=seq, B=B):
+                def fwd(x, qkv_w, proj_w, fc1_w, fc2_w):
+                    h = x.reshape(B * seq, d)
+                    a = h @ qkv_w
+                    b = a[:, :d] @ proj_w
+                    c = jax.nn.gelu(b @ fc1_w, approximate=True)
+                    return jnp.sum(c @ fc2_w)
+
+                return jax.value_and_grad(fwd, argnums=(0, 1, 2, 3, 4))
+
+            def make_attn(nh=nh, hd=hd, seq=seq, B=B):
+                def fwd(q, k, v):
+                    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+                    mask = jnp.tril(jnp.ones((seq, seq), bool))
+                    att = jax.nn.softmax(jnp.where(mask, att, -1e30), axis=-1)
+                    return jnp.sum(jnp.einsum("bhqk,bhkd->bhqd", att, v))
+
+                return jax.value_and_grad(fwd, argnums=(0, 1, 2))
+
+            lin_in = _sig(
+                [
+                    ("x", "f32", (B, seq, d)),
+                    ("qkv_w", "f32", (d, 3 * d)),
+                    ("proj_w", "f32", (d, d)),
+                    ("fc1_w", "f32", (d, f)),
+                    ("fc2_w", "f32", (f, d)),
+                ]
+            )
+            add(
+                f"prof/linear_{size}_s{seq}",
+                make_linear(),
+                lin_in,
+                _sig([("loss", "f32", ())]),  # grads omitted from meta
+                kind="prof_linear",
+                model=size,
+                seq=seq,
+                flops=2 * B * seq * (d * 3 * d + d * d + d * f + f * d) * 3,
+            )
+            attn_in = _sig(
+                [
+                    ("q", "f32", (B, nh, seq, hd)),
+                    ("k", "f32", (B, nh, seq, hd)),
+                    ("v", "f32", (B, nh, seq, hd)),
+                ]
+            )
+            add(
+                f"prof/attn_{size}_s{seq}",
+                make_attn(),
+                attn_in,
+                _sig([("loss", "f32", ())]),
+                kind="prof_attn",
+                model=size,
+                seq=seq,
+                flops=2 * B * nh * seq * seq * hd * 2 * 3,
+            )
+
+    # --- standalone L1 kernel artifacts ---
+    from .kernels import qmatmul as K_mm
+    from .kernels import quant as K_q
+    from .kernels import ref as K_ref
+
+    M_, N_, K_ = 256, 512, 256
+    x_sig = [("x", "f32", (M_, N_)), ("qmax", "f32", ())]
+    for gran, short in [
+        ("per_tensor", "pt"),
+        ("per_channel", "pc"),
+        ("per_token", "ptok"),
+    ]:
+        add(
+            f"k/qdq_{short}_pallas",
+            (lambda g: lambda x, qmax: (K_q.qdq(x, qmax, g),))(gran),
+            _sig(x_sig),
+            _sig([("out", "f32", (M_, N_))]),
+            kind="kernel",
+            gran=gran,
+        )
+    add(
+        "k/qdq_ptok_asym_pallas",
+        lambda x, qmax: (K_q.qdq(x, qmax, "per_token", asymmetric=True),),
+        _sig(x_sig),
+        _sig([("out", "f32", (M_, N_))]),
+        kind="kernel",
+        gran="per_token_asym",
+    )
+    add(
+        "k/qdq_pt_jnp",
+        lambda x, qmax: (K_ref.qdq(x, qmax, "per_tensor"),),
+        _sig(x_sig),
+        _sig([("out", "f32", (M_, N_))]),
+        kind="kernel",
+        gran="per_tensor_jnp",
+    )
+    mm_sig = [
+        ("x", "f32", (M_, N_)),
+        ("w", "f32", (N_, K_)),
+        ("qmax_a", "f32", ()),
+        ("qmax_w", "f32", ()),
+    ]
+    add(
+        "k/qmatmul_pallas",
+        lambda x, w, qa, qw: (K_mm.qmatmul(x, w, qa, qw),),
+        _sig(mm_sig),
+        _sig([("out", "f32", (M_, K_))]),
+        kind="kernel",
+        gran="qmatmul",
+    )
+    add(
+        "k/matmul_ref",
+        lambda x, w, qa, qw: (x @ w,),
+        _sig(mm_sig),
+        _sig([("out", "f32", (M_, K_))]),
+        kind="kernel",
+        gran="matmul",
+    )
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# build driver
+# ---------------------------------------------------------------------------
+
+
+def source_hash() -> str:
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    h.update(jax.__version__.encode())
+    return h.hexdigest()
+
+
+def model_json(cfg: ModelCfg):
+    return {
+        "n_layer": cfg.n_layer,
+        "d_model": cfg.d_model,
+        "n_head": cfg.n_head,
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "d_ff": cfg.d_ff,
+        "n_params": cfg.n_params(),
+        "params": [
+            {
+                "name": d.name,
+                "shape": list(d.shape),
+                "stacked": d.stacked,
+                "decay": d.decay,
+                "init": d.init,
+            }
+            for d in M.param_defs(cfg)
+        ],
+    }
+
+
+def write_goldens(out_dir: str):
+    """Emit golden .npy cases for the rust quant module's bit-exactness tests.
+
+    The input grid is constructed from exact small rationals so that rust can
+    regenerate it bit-identically: x[i,j] = ((31*i + 17*j) mod 257 - 128)/16.
+    """
+    import numpy as np
+
+    from .kernels import ref as K_ref
+
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    i = np.arange(64)[:, None]
+    j = np.arange(48)[None, :]
+    x = (((31 * i + 17 * j) % 257 - 128) / 16.0).astype(np.float32)
+    np.save(os.path.join(gdir, "input.npy"), x)
+    for gran, short in [
+        ("per_tensor", "pt"),
+        ("per_token", "ptok"),
+        ("per_channel", "pc"),
+    ]:
+        for bits in [2, 4, 8]:
+            qmax = K_ref.bits_to_qmax(bits)
+            out = np.asarray(K_ref.qdq(jnp.asarray(x), qmax, gran))
+            np.save(os.path.join(gdir, f"qdq_{short}_b{bits}.npy"), out)
+            if gran == "per_token":
+                out = np.asarray(
+                    K_ref.qdq(jnp.asarray(x), qmax, gran, asymmetric=True)
+                )
+                np.save(os.path.join(gdir, f"qdq_{short}_asym_b{bits}.npy"), out)
+    # an asymmetric-friendly positive input (post-GELU-like)
+    xp = np.abs(x) + 0.25
+    np.save(os.path.join(gdir, "input_pos.npy"), xp.astype(np.float32))
+    for bits in [4, 8]:
+        qmax = K_ref.bits_to_qmax(bits)
+        out = np.asarray(
+            K_ref.qdq(jnp.asarray(xp.astype(np.float32)), qmax, "per_token", asymmetric=True)
+        )
+        np.save(os.path.join(gdir, f"qdq_pos_ptok_asym_b{bits}.npy"), out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter of artifact names")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    old = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f).get("artifacts", {})
+
+    src_hash = source_hash()
+    arts = collect_artifacts()
+    manifest = {
+        "jax_version": jax.__version__,
+        "source_hash": src_hash,
+        "models": {
+            "t4": model_json(T4),
+            "gpt2s": model_json(GPT2S),
+            **{k: model_json(v) for k, v in PROF.items()},
+        },
+        "artifacts": {},
+    }
+
+    n_built = n_skipped = 0
+    for art in arts:
+        name = art["name"]
+        fname = name.replace("/", "__") + ".hlo.txt"
+        fpath = os.path.join(out_dir, fname)
+        key_src = json.dumps(
+            {"inputs": art["inputs"], "meta": art["meta"], "src": src_hash},
+            sort_keys=True,
+        )
+        key = hashlib.sha256(key_src.encode()).hexdigest()
+        entry = {
+            "file": fname,
+            "hash": key,
+            "inputs": art["inputs"],
+            "outputs": art["outputs"],
+            **art["meta"],
+        }
+        manifest["artifacts"][name] = entry
+
+        prev = old.get(name)
+        if (
+            prev is not None
+            and prev.get("hash") == key
+            and os.path.exists(fpath)
+            and (args.only is None or args.only not in name)
+        ):
+            n_skipped += 1
+            continue
+        if args.only is not None and args.only not in name:
+            # still need the artifact to exist; rebuild if missing
+            if prev is not None and os.path.exists(fpath):
+                n_skipped += 1
+                continue
+
+        t0 = time.time()
+        # keep_unused=True: structures that don't use some qmax scalars must
+        # still accept them, so every train artifact shares one input order.
+        lowered = jax.jit(art["fn"], keep_unused=True).lower(*_spec_of(art["inputs"]))
+        text = to_hlo_text(lowered)
+        with open(fpath, "w") as f:
+            f.write(text)
+        n_built += 1
+        print(
+            f"built {name}  ({len(text) / 1e6:.2f} MB HLO, {time.time() - t0:.1f}s)",
+            flush=True,
+        )
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    write_goldens(out_dir)
+    print(f"artifacts: {n_built} built, {n_skipped} up-to-date -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Model-size presets shared between aot.py and the manifest consumed by rust.
+
+`t4` is the study model: every quantization experiment in the paper is run on
+it (the paper used GPT-2 small; see DESIGN.md §4 for the scaling argument).
+`gpt2s` is the ~100M-parameter end-to-end configuration. The `prof_*`
+configs mirror the paper's Fig. 2/3 profiling sizes (GPT-2 Small / Medium /
+Large / XL shapes).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    vocab: int
+    seq: int
+    batch: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def n_params(self) -> int:
+        d, L, V, T = self.d_model, self.n_layer, self.vocab, self.seq
+        per_layer = (
+            2 * d  # ln1
+            + d * 3 * d + 3 * d  # qkv
+            + d * d + d  # proj
+            + 2 * d  # ln2
+            + d * self.d_ff + self.d_ff  # fc1
+            + self.d_ff * d + d  # fc2
+        )
+        return V * d + T * d + L * per_layer + 2 * d  # wte, wpe, layers, lnf
+
+
+# Study model: all per-component quantization experiments run here.
+T4 = ModelCfg("t4", n_layer=4, d_model=128, n_head=4, vocab=512, seq=128, batch=16)
+
+# ~100M-parameter end-to-end config (12L/768d like GPT-2 small, 8k vocab).
+GPT2S = ModelCfg("gpt2s", n_layer=12, d_model=768, n_head=12, vocab=8192, seq=256, batch=2)
+
+# Fig. 2 / Fig. 3 profiling shapes (single block is profiled, so n_layer is
+# the bookkeeping value used by the analytic memory model only).
+PROF = {
+    "small": ModelCfg("small", 12, 768, 12, 50257, 1024, 1),
+    "medium": ModelCfg("medium", 24, 1024, 16, 50257, 1024, 1),
+    "large": ModelCfg("large", 36, 1280, 20, 50257, 1024, 1),
+    "xl": ModelCfg("xl", 48, 1600, 25, 50257, 1024, 1),
+}
+
+MODELS = {"t4": T4, "gpt2s": GPT2S}
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperParams:
+    """AdamW hyperparameters (paper Appendix A: nanoGPT/FlashAttention setup)."""
+
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+HP = HyperParams()

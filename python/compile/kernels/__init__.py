@@ -1,0 +1,2 @@
+# L1: Pallas fake-quantization kernels + pure-jnp oracle.
+from . import qmatmul, quant, ref  # noqa: F401

@@ -1,0 +1,206 @@
+"""L1 Pallas fake-quantization kernels.
+
+TPU-oriented expression of the paper's Eq. 1 (see `ref.py` for the oracle):
+the (tokens x channels) operand is tiled into VMEM-sized blocks; the scale
+reduction (abs-max, or min/max for the asymmetric scheme) happens in-register
+on the block the elementwise round/clip/rescale is applied to, so the fake
+quantization costs no extra HBM traffic.
+
+All kernels run with `interpret=True`: this environment executes on the CPU
+PJRT client, and real-TPU Pallas lowering emits Mosaic custom-calls that the
+CPU plugin cannot run. `interpret=True` lowers to plain HLO, which both the
+python tests and the rust runtime execute. Real-TPU VMEM/MXU estimates for
+these BlockSpecs are recorded in DESIGN.md §Perf.
+
+Tiling strategy per granularity (input reshaped to 2D (M, N)):
+  per_token   — grid over row blocks, block (bm, N): a scale needs the whole
+                row, so the row (token) lives in one block; bm rows at a time.
+  per_channel — grid over column blocks, block (M, bn): whole column in VMEM.
+  per_tensor  — two stages: a grid-accumulated abs-max reduction into a (1,1)
+                output, then an elementwise kernel taking the scale as input.
+
+Block sizes prefer the TPU-native 128 lanes and cap the sublane dimension at
+512 rows; they always divide the input (AOT shapes are static).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target, preferring powers of two."""
+    if dim <= target:
+        return dim
+    b = target
+    while b > 1:
+        if dim % b == 0:
+            return b
+        b //= 2
+    return 1
+
+
+def _as_2d(x):
+    if x.ndim == 2:
+        return x, None
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+def _restore(y, shape):
+    return y if shape is None else y.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# per-token (row scales)
+# ---------------------------------------------------------------------------
+
+
+def _qdq_per_token_kernel(x_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    qmax = qmax_ref[0, 0]
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    s = jnp.maximum(amax / qmax, ref.EPS)
+    o_ref[...] = s * jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax)
+
+
+def _qdq_per_token_asym_kernel(x_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    qmax = qmax_ref[0, 0]
+    n = -qmax - 1.0
+    xmin = jnp.min(x, axis=1, keepdims=True)
+    xmax = jnp.max(x, axis=1, keepdims=True)
+    s = jnp.maximum((xmax - xmin) / (2.0 * qmax + 1.0), ref.EPS)
+    z = jnp.round(xmin / s) - n
+    x_int = jnp.clip(jnp.round(x / s) - z, n, qmax)
+    o_ref[...] = s * (x_int + z)
+
+
+def qdq_per_token(x, qmax, asymmetric: bool = False):
+    """Fake-quantize with one (a)symmetric scale per row (token)."""
+    x2, shape = _as_2d(x)
+    m, n = x2.shape
+    bm = _block(m, 512)
+    qmax_arr = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    kernel = _qdq_per_token_asym_kernel if asymmetric else _qdq_per_token_kernel
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2.dtype),
+        interpret=INTERPRET,
+    )(x2, qmax_arr)
+    return _restore(out, shape)
+
+
+# ---------------------------------------------------------------------------
+# per-channel (column scales)
+# ---------------------------------------------------------------------------
+
+
+def _qdq_per_channel_kernel(x_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    qmax = qmax_ref[0, 0]
+    amax = jnp.max(jnp.abs(x), axis=0, keepdims=True)
+    s = jnp.maximum(amax / qmax, ref.EPS)
+    o_ref[...] = s * jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax)
+
+
+def qdq_per_channel(x, qmax):
+    """Fake-quantize with one symmetric scale per column (output channel)."""
+    x2, shape = _as_2d(x)
+    m, n = x2.shape
+    bn = _block(n, 128)
+    qmax_arr = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _qdq_per_channel_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2.dtype),
+        interpret=INTERPRET,
+    )(x2, qmax_arr)
+    return _restore(out, shape)
+
+
+# ---------------------------------------------------------------------------
+# per-tensor (single scale; two-stage reduce + elementwise)
+# ---------------------------------------------------------------------------
+
+
+def _absmax_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, 0] = jnp.maximum(o_ref[0, 0], jnp.max(jnp.abs(x_ref[...])))
+
+
+def _qdq_elementwise_kernel(x_ref, s_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    s = jnp.maximum(s_ref[0, 0], ref.EPS)
+    qmax = qmax_ref[0, 0]
+    o_ref[...] = s * jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax)
+
+
+def qdq_per_tensor(x, qmax):
+    """Fake-quantize with a single symmetric scale for the whole tensor."""
+    x2, shape = _as_2d(x)
+    m, n = x2.shape
+    bm = _block(m, 512)
+    qmax_arr = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    amax = pl.pallas_call(
+        _absmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x2.dtype),
+        interpret=INTERPRET,
+    )(x2)
+    s = amax / qmax_arr
+    out = pl.pallas_call(
+        _qdq_elementwise_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2.dtype),
+        interpret=INTERPRET,
+    )(x2, s, qmax_arr)
+    return _restore(out, shape)
+
+
+# ---------------------------------------------------------------------------
+# dispatch mirroring ref.qdq
+# ---------------------------------------------------------------------------
+
+
+def qdq(x, qmax, granularity: str, asymmetric: bool = False):
+    """Pallas-backed fake quantization matching `ref.qdq` bit-for-bit.
+
+    Asymmetric is implemented for per-token (the only asymmetric variant the
+    paper studies: 4-bit per-token asymmetric activations); other asymmetric
+    granularities fall back to the jnp oracle.
+    """
+    if granularity == "per_token":
+        return qdq_per_token(x, qmax, asymmetric=asymmetric)
+    if asymmetric:
+        return ref.qdq_asym(x, qmax, granularity)
+    if granularity == "per_channel":
+        return qdq_per_channel(x, qmax)
+    if granularity == "per_tensor":
+        return qdq_per_tensor(x, qmax)
+    raise ValueError(f"unknown granularity {granularity!r}")

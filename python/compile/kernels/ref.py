@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for the fake-quantization kernels (paper Eq. 1).
+
+This module is the single source of truth for the quantization numerics.
+Every Pallas kernel in `quant.py` / `qmatmul.py` and the rust `quant` module
+must match these functions bit-for-bit (same rounding mode: jnp.round is
+round-half-to-even, mirrored by rust `f32::round_ties_even`).
+
+Paper (Chitsaz et al., EMNLP 2024 Findings), Eq. 1:
+
+    X_int = clip(round(X / s) - z; N, P)
+    X_hat = s * (X_int + z)
+
+with N = -2^(b-1), P = 2^(b-1) - 1 (signed grid).
+
+Symmetric scheme (default): s = max|X| / P, z = 0.
+Asymmetric scheme:          s = (max X - min X) / (2^b - 1),
+                            z = round(min X / s) - N,
+so that min(X) maps to the integer N and max(X) to P.
+
+The bit-width enters only through qmax = P = 2^(b-1) - 1, which is passed as
+a *runtime scalar* so that a single lowered artifact serves every bit-width.
+
+Granularity convention (shared with rust::quant::Granularity):
+  per_tensor  — one scale for the whole tensor.
+  per_token   — one scale per row: reduce the LAST axis only
+                (activations/gradients of shape (..., tokens, channels)).
+  per_channel — one scale per column: reduce ALL axes except the last
+                (weights of shape (d_in, d_out): one scale per output
+                channel; Adam moments likewise, the paper's "per-column").
+"""
+
+import jax.numpy as jnp
+
+# Guard against zero scales (all-zero tensors quantize to zero).
+EPS = 1e-12
+
+
+def _axes(x, granularity: str):
+    if granularity == "per_tensor":
+        return tuple(range(x.ndim))
+    if granularity == "per_token":
+        return (x.ndim - 1,)
+    if granularity == "per_channel":
+        return tuple(range(x.ndim - 1))
+    raise ValueError(f"unknown granularity {granularity!r}")
+
+
+def quant_params_sym(x, qmax, granularity: str):
+    """Return the scale `s` (broadcastable to x) for symmetric quantization."""
+    axes = _axes(x, granularity)
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    s = amax / qmax
+    return jnp.maximum(s, EPS)
+
+
+def quant_params_asym(x, qmax, granularity: str):
+    """Return (s, z) for asymmetric quantization. z is the paper's offset."""
+    axes = _axes(x, granularity)
+    xmin = jnp.min(x, axis=axes, keepdims=True)
+    xmax = jnp.max(x, axis=axes, keepdims=True)
+    n = -qmax - 1.0
+    s = (xmax - xmin) / (2.0 * qmax + 1.0)
+    s = jnp.maximum(s, EPS)
+    z = jnp.round(xmin / s) - n
+    return s, z
+
+
+def qdq_sym(x, qmax, granularity: str):
+    """Symmetric fake quantization (quantize -> dequantize), Eq. 1 with z=0."""
+    s = quant_params_sym(x, qmax, granularity)
+    n = -qmax - 1.0
+    x_int = jnp.clip(jnp.round(x / s), n, qmax)
+    return s * x_int
+
+
+def qdq_asym(x, qmax, granularity: str):
+    """Asymmetric fake quantization, Eq. 1 with the min-anchored offset z."""
+    s, z = quant_params_asym(x, qmax, granularity)
+    n = -qmax - 1.0
+    x_int = jnp.clip(jnp.round(x / s) - z, n, qmax)
+    return s * (x_int + z)
+
+
+def qdq(x, qmax, granularity: str, asymmetric: bool = False):
+    """Dispatching oracle used by tests and by the jnp backend."""
+    if asymmetric:
+        return qdq_asym(x, qmax, granularity)
+    return qdq_sym(x, qmax, granularity)
+
+
+def qmatmul_ref(x, w, qmax_a, qmax_w):
+    """Oracle for the fused QDQ-matmul kernel.
+
+    Activations are quantized per-token (row scales), weights per-channel
+    (column scales) — the paper's recommended granularity pairing, and the
+    one that folds into a GEMM epilogue on real hardware.
+    """
+    xq = qdq_sym(x, qmax_a, "per_token")
+    wq = qdq_sym(w, qmax_w, "per_channel")
+    return xq @ wq
+
+
+def bits_to_qmax(bits: int) -> float:
+    """qmax = 2^(b-1) - 1 for signed b-bit quantization."""
+    return float(2 ** (bits - 1) - 1)

@@ -1,0 +1,199 @@
+"""L2: GPT-2 style transformer LM in JAX with fake quantization injected at
+every linear layer, per the paper's Fig. 1.
+
+The model is pre-LN GPT-2 (causal self-attention, GELU MLP, learned
+positional embeddings, tied input/output embeddings). Quantization error is
+injected at the four block linears (QKV, attention out-proj, FC1, FC2) via
+`quantizer.make_qlinear`; the embedding / LM head matmuls are not quantized
+(the paper targets "linear layer components" of the blocks).
+
+Layer parameters are stacked with a leading `n_layer` axis and the blocks
+run under `jax.lax.scan`, keeping the lowered HLO size independent of depth.
+A separate *unrolled* forward (`forward_probed`) exposes a chosen layer's
+attention-out-proj input and FC2 input for the paper's outlier analyses
+(Figs. 6, 8) — it is only lowered for the tiny probe artifacts.
+"""
+
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelCfg
+from .quantizer import QuantConfig, make_qlinear
+
+
+class ParamDef(NamedTuple):
+    name: str
+    shape: Tuple[int, ...]
+    stacked: bool  # leading n_layer axis
+    decay: bool  # weight decay applies (2D linear weights only)
+    init: str  # "normal:<std>" | "zeros" | "ones" | "residual"
+
+
+def param_defs(cfg: ModelCfg) -> List[ParamDef]:
+    """Canonical, ordered parameter layout. This order IS the artifact input
+    order; rust reproduces it from the manifest."""
+    L, d, V, T, f = cfg.n_layer, cfg.d_model, cfg.vocab, cfg.seq, cfg.d_ff
+    return [
+        ParamDef("wte", (V, d), False, True, "normal:0.02"),
+        ParamDef("wpe", (T, d), False, True, "normal:0.01"),
+        ParamDef("ln1_w", (L, d), True, False, "ones"),
+        ParamDef("ln1_b", (L, d), True, False, "zeros"),
+        ParamDef("qkv_w", (L, d, 3 * d), True, True, "normal:0.02"),
+        ParamDef("qkv_b", (L, 3 * d), True, False, "zeros"),
+        ParamDef("proj_w", (L, d, d), True, True, "residual"),
+        ParamDef("proj_b", (L, d), True, False, "zeros"),
+        ParamDef("ln2_w", (L, d), True, False, "ones"),
+        ParamDef("ln2_b", (L, d), True, False, "zeros"),
+        ParamDef("fc1_w", (L, d, f), True, True, "normal:0.02"),
+        ParamDef("fc1_b", (L, f), True, False, "zeros"),
+        ParamDef("fc2_w", (L, f, d), True, True, "residual"),
+        ParamDef("fc2_b", (L, d), True, False, "zeros"),
+        ParamDef("lnf_w", (d,), False, False, "ones"),
+        ParamDef("lnf_b", (d,), False, False, "zeros"),
+    ]
+
+
+PARAM_NAMES = [d.name for d in param_defs(ModelCfg("x", 1, 4, 1, 8, 8, 1))]
+
+LAYER_KEYS = [
+    "ln1_w", "ln1_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+    "ln2_w", "ln2_b", "fc1_w", "fc1_b", "fc2_w", "fc2_b",
+]
+
+
+def _layer_norm(x, w, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+class QMax(NamedTuple):
+    """Runtime quantization ranges (qmax = 2^(b-1)-1), one per component."""
+
+    w: jnp.ndarray
+    a: jnp.ndarray
+    g: jnp.ndarray
+
+    @staticmethod
+    def ones():
+        one = jnp.ones((), jnp.float32)
+        return QMax(one, one, one)
+
+
+def _block(h, lp: Dict[str, jnp.ndarray], cfg: ModelCfg, qlinear, qmax: QMax,
+           collect: bool = False):
+    """One transformer block. Returns (h_out, probes-or-None)."""
+    B, T, d = h.shape
+    nh, hd = cfg.n_head, cfg.d_head
+
+    def lin(x2d, wname, bname):
+        y = qlinear(x2d, lp[wname], qmax.w, qmax.a, qmax.g)
+        return y + lp[bname]
+
+    # --- attention ---
+    a_in = _layer_norm(h, lp["ln1_w"], lp["ln1_b"])
+    qkv = lin(a_in.reshape(B * T, d), "qkv_w", "qkv_b").reshape(B, T, 3 * d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, T, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, T, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T, nh, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B, T, d)  # out-proj INPUT (Fig. 6)
+    h = h + lin(ctx.reshape(B * T, d), "proj_w", "proj_b").reshape(B, T, d)
+
+    # --- MLP ---
+    m_in = _layer_norm(h, lp["ln2_w"], lp["ln2_b"])
+    hid = lin(m_in.reshape(B * T, d), "fc1_w", "fc1_b")
+    hid = jax.nn.gelu(hid, approximate=True)  # fc2 INPUT (Fig. 8 outliers)
+    h = h + lin(hid, "fc2_w", "fc2_b").reshape(B, T, d)
+
+    probes = (ctx, hid.reshape(B, T, cfg.d_ff)) if collect else None
+    return h, probes
+
+
+def _block_with_ctx_delta(h, lp, cfg: ModelCfg, qlinear, qmax: QMax,
+                          ctx_delta: Optional[jnp.ndarray]):
+    """Block variant that adds `ctx_delta` to the attention out-proj input.
+
+    Differentiating the loss wrt a zero `ctx_delta` yields the activation
+    gradient at that point (paper Fig. 10's dL/d(attn-out input)).
+    """
+    B, T, d = h.shape
+    nh, hd = cfg.n_head, cfg.d_head
+
+    def lin(x2d, wname, bname):
+        return qlinear(x2d, lp[wname], qmax.w, qmax.a, qmax.g) + lp[bname]
+
+    a_in = _layer_norm(h, lp["ln1_w"], lp["ln1_b"])
+    qkv = lin(a_in.reshape(B * T, d), "qkv_w", "qkv_b").reshape(B, T, 3 * d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, T, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, T, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T, nh, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jax.nn.softmax(jnp.where(mask, att, -1e30), axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(B, T, d)
+    if ctx_delta is not None:
+        ctx = ctx + ctx_delta
+    h = h + lin(ctx.reshape(B * T, d), "proj_w", "proj_b").reshape(B, T, d)
+
+    m_in = _layer_norm(h, lp["ln2_w"], lp["ln2_b"])
+    hid = jax.nn.gelu(lin(m_in.reshape(B * T, d), "fc1_w", "fc1_b"), approximate=True)
+    h = h + lin(hid, "fc2_w", "fc2_b").reshape(B, T, d)
+    return h, None
+
+
+def forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelCfg,
+            qcfg: QuantConfig, qmax: QMax) -> jnp.ndarray:
+    """Scan-based forward pass. x: (B, T) int32 tokens -> (B, T, V) logits."""
+    qlinear = make_qlinear(qcfg)
+    B, T = x.shape
+    h = params["wte"][x] + params["wpe"][None, :T, :]
+
+    stacked = {k: params[k] for k in LAYER_KEYS}
+
+    def body(h, lp):
+        h, _ = _block(h, lp, cfg, qlinear, qmax)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, stacked)
+    h = _layer_norm(h, params["lnf_w"], params["lnf_b"])
+    return h @ params["wte"].T  # tied LM head (not quantized)
+
+
+def forward_probed(params, x, cfg: ModelCfg, qcfg: QuantConfig, qmax: QMax,
+                   probe_layer: int):
+    """Unrolled forward that also returns (attn out-proj input, fc2 input)
+    of `probe_layer` — the tensors the paper's Figs. 6/8 histogram."""
+    qlinear = make_qlinear(qcfg)
+    B, T = x.shape
+    h = params["wte"][x] + params["wpe"][None, :T, :]
+    probes: Optional[Tuple] = None
+    for l in range(cfg.n_layer):
+        lp = {k: params[k][l] for k in LAYER_KEYS}
+        h, p = _block(h, lp, cfg, qlinear, qmax, collect=(l == probe_layer))
+        if p is not None:
+            probes = p
+    h = _layer_norm(h, params["lnf_w"], params["lnf_b"])
+    logits = h @ params["wte"].T
+    assert probes is not None
+    return logits, probes
+
+
+def nll(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Per-position negative log-likelihood, shape (B, T)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(params, x, y, cfg, qcfg, qmax: QMax):
+    """Mean next-token cross-entropy."""
+    logits = forward(params, x, cfg, qcfg, qmax)
+    return jnp.mean(nll(logits, y))

@@ -1,0 +1,145 @@
+"""Quantization configuration + STE plumbing for the L2 model graph.
+
+Implements the paper's Fig. 1 placement of quantization error exactly:
+
+  forward:  y = qdq_a(x) @ qdq_w(W)          (fake-quant both operands)
+  backward: dW = qdq_a(x)^T @ qdq_g(g)       (output-grad quantized for the
+                                              weight update only)
+            dx = g @ qdq_w(W)^T              (REAL output gradient; the
+                                              `quantize_act_grads` variant
+                                              uses qdq_g(g) here instead and
+                                              reproduces the paper's Fig. 10
+                                              instability)
+
+Weight updates use the straight-through estimator: the fake-quant ops are
+opaque to autodiff (custom_vjp), so gradients flow to the *latent* fp32
+weights as if quantization were identity — while the matmuls in both passes
+see the quantized tensors, exactly as STE training does.
+
+The bit-width is a runtime scalar (`qmax = 2^(b-1)-1`), so one lowered
+artifact per *granularity structure* serves every bit-width.
+"""
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quant as pallas_quant
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How to quantize one tensor class (weights, acts, grads, or a moment)."""
+
+    granularity: str  # per_tensor | per_token | per_channel
+    asymmetric: bool = False
+    backend: str = "jnp"  # jnp | pallas
+
+    def short(self) -> str:
+        g = {"per_tensor": "pt", "per_token": "ptok", "per_channel": "pc"}[
+            self.granularity
+        ]
+        a = "_asym" if self.asymmetric else ""
+        b = "_pallas" if self.backend == "pallas" else ""
+        return f"{g}{a}{b}"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Which model components are fake-quantized (the paper's §4 axes)."""
+
+    weights: Optional[QuantSpec] = None
+    acts: Optional[QuantSpec] = None
+    grads: Optional[QuantSpec] = None
+    quantize_act_grads: bool = False  # Fig. 10 variant: quantize dx path too
+    m1: Optional[QuantSpec] = None  # Adam first moment
+    m2: Optional[QuantSpec] = None  # Adam second moment
+
+    def name(self) -> str:
+        parts = []
+        if self.weights:
+            parts.append(f"w_{self.weights.short()}")
+        if self.acts:
+            parts.append(f"a_{self.acts.short()}")
+        if self.grads:
+            parts.append(f"g_{self.grads.short()}")
+            if self.quantize_act_grads:
+                parts.append("actgrad")
+        if self.m1:
+            parts.append(f"m1_{self.m1.short()}")
+        if self.m2:
+            parts.append(f"m2_{self.m2.short()}")
+        return "_".join(parts) if parts else "base"
+
+
+def qdq(x, qmax, spec: QuantSpec):
+    """Fake-quantize `x` according to `spec` (value only, no STE)."""
+    if spec.backend == "pallas":
+        return pallas_quant.qdq(x, qmax, spec.granularity, spec.asymmetric)
+    return ref.qdq(x, qmax, spec.granularity, spec.asymmetric)
+
+
+def ste_qdq(x, qmax, spec: Optional[QuantSpec]):
+    """Fake-quantize with a straight-through gradient (identity jacobian)."""
+    if spec is None:
+        return x
+    return x + jax.lax.stop_gradient(qdq(x, qmax, spec) - x)
+
+
+def make_qlinear(cfg: QuantConfig):
+    """Build the quantized 2D matmul `y = qdq_a(x) @ qdq_w(w)` with the
+    paper's asymmetric backward treatment of the output gradient.
+
+    Returns fn(x2d, w, qmax_w, qmax_a, qmax_g) -> y2d. The granularity
+    structure is baked (static); the qmax values are traced scalars.
+    """
+
+    @jax.custom_vjp
+    def qlinear(x, w, qmax_w, qmax_a, qmax_g):
+        xq = qdq(x, qmax_a, cfg.acts) if cfg.acts else x
+        wq = qdq(w, qmax_w, cfg.weights) if cfg.weights else w
+        return xq @ wq
+
+    def fwd(x, w, qmax_w, qmax_a, qmax_g):
+        xq = qdq(x, qmax_a, cfg.acts) if cfg.acts else x
+        wq = qdq(w, qmax_w, cfg.weights) if cfg.weights else w
+        return xq @ wq, (xq, wq, qmax_g)
+
+    def bwd(res, g):
+        xq, wq, qmax_g = res
+        if cfg.grads is not None:
+            gq = qdq(g, qmax_g, cfg.grads)
+        else:
+            gq = g
+        # weight gradient: always from the quantized output gradient
+        dw = xq.T @ gq
+        # input (activation) gradient: real-valued g unless the unstable
+        # quantize_act_grads variant is requested (paper Fig. 10)
+        gx = gq if (cfg.grads is not None and cfg.quantize_act_grads) else g
+        dx = gx @ wq.T
+        zero = jnp.zeros((), jnp.float32)
+        return dx, dw, zero, zero, zero
+
+    qlinear.defvjp(fwd, bwd)
+    return qlinear
+
+
+def moment_qdq(x, qmax, spec: Optional[QuantSpec], stacked: bool):
+    """Fake-quantize an optimizer moment for storage.
+
+    Only tensors of >=2 dims (linear-layer moments) are quantized, matching
+    the paper's focus on linear layer components; 1-D bias/LN moments stay
+    fp32. Stacked per-layer tensors (leading L axis) are quantized per layer
+    so that per_tensor means "per layer-tensor", as in the paper.
+    """
+    if spec is None:
+        return x
+    base_ndim = x.ndim - (1 if stacked else 0)
+    if base_ndim < 2:
+        return x
+    if stacked:
+        return jax.vmap(lambda a: qdq(a, qmax, spec))(x)
+    return qdq(x, qmax, spec)

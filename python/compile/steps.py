@@ -1,0 +1,143 @@
+"""Step functions lowered to AOT artifacts.
+
+Each builder returns (fn, input_signature) where fn takes a *flat* argument
+list in the canonical order recorded in the manifest:
+
+  train_step:  params(16) + m(16) + v(16) + [x, y, lr, t,
+               qmax_w, qmax_a, qmax_g, qmax_m1, qmax_m2]
+            -> params'(16) + m'(16) + v'(16) + [loss, gnorm]
+
+  eval_step:   params(16) + [x, y, mask, qmax_w, qmax_a]
+            -> [mean_nll, per_pos_nll(B,T)]
+
+  act_probe:   params(16) + [x, qmax_w, qmax_a]
+            -> [attn out-proj input (B,T,d), fc2 input (B,T,4d)]
+
+  grad_probe:  params(16) + [x, y, qmax_w, qmax_a, qmax_g]
+            -> [d qkv_w (layer 0), d attn-out activation-grad (layer 0 ctx)]
+
+The flat order is fixed by `model.param_defs`; qmax scalars make bit-width a
+runtime knob (one artifact per granularity structure).
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .adam import adamw_update
+from .configs import ModelCfg
+from .model import QMax
+from .quantizer import QuantConfig
+
+
+def _unflatten(cfg: ModelCfg, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    names = [d.name for d in M.param_defs(cfg)]
+    assert len(flat) == len(names)
+    return dict(zip(names, flat))
+
+
+def _flatten(cfg: ModelCfg, tree: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [tree[d.name] for d in M.param_defs(cfg)]
+
+
+def n_params_tensors(cfg: ModelCfg) -> int:
+    return len(M.param_defs(cfg))
+
+
+def make_train_step(cfg: ModelCfg, qcfg: QuantConfig):
+    NP = n_params_tensors(cfg)
+
+    def train_step(*args):
+        params = _unflatten(cfg, list(args[:NP]))
+        m = _unflatten(cfg, list(args[NP : 2 * NP]))
+        v = _unflatten(cfg, list(args[2 * NP : 3 * NP]))
+        x, y, lr, t, qmax_w, qmax_a, qmax_g, qmax_m1, qmax_m2 = args[3 * NP :]
+        qmax = QMax(qmax_w, qmax_a, qmax_g)
+
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, x, y, cfg, qcfg, qmax)
+        )(params)
+        new_p, new_m, new_v, gnorm = adamw_update(
+            cfg, qcfg, params, grads, m, v, lr, t, qmax_m1, qmax_m2
+        )
+        return tuple(
+            _flatten(cfg, new_p) + _flatten(cfg, new_m) + _flatten(cfg, new_v)
+            + [loss, gnorm]
+        )
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelCfg, qcfg: QuantConfig):
+    NP = n_params_tensors(cfg)
+
+    def eval_step(*args):
+        params = _unflatten(cfg, list(args[:NP]))
+        x, y, mask, qmax_w, qmax_a = args[NP:]
+        qmax = QMax(qmax_w, qmax_a, jnp.ones((), jnp.float32))
+        logits = M.forward(params, x, cfg, qcfg, qmax)
+        per_pos = M.nll(logits, y)
+        mean_nll = jnp.sum(per_pos * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return (mean_nll, per_pos)
+
+    return eval_step
+
+
+def make_act_probe(cfg: ModelCfg, qcfg: QuantConfig, probe_layer: int):
+    NP = n_params_tensors(cfg)
+
+    def act_probe(*args):
+        params = _unflatten(cfg, list(args[:NP]))
+        x, qmax_w, qmax_a = args[NP:]
+        qmax = QMax(qmax_w, qmax_a, jnp.ones((), jnp.float32))
+        _, (proj_in, fc2_in) = M.forward_probed(
+            params, x, cfg, qcfg, qmax, probe_layer
+        )
+        return (proj_in, fc2_in)
+
+    return act_probe
+
+
+def make_grad_probe(cfg: ModelCfg, qcfg: QuantConfig):
+    """Gradient snapshot for Fig. 10: the QKV weight gradient of layer 0 and
+    the activation gradient flowing into layer 0's attention output."""
+    NP = n_params_tensors(cfg)
+
+    def grad_probe(*args):
+        params = _unflatten(cfg, list(args[:NP]))
+        x, y, qmax_w, qmax_a, qmax_g = args[NP:]
+        qmax = QMax(qmax_w, qmax_a, qmax_g)
+
+        grads = jax.grad(
+            lambda p: jnp.mean(M.nll(M.forward(p, x, cfg, qcfg, qmax), y))
+        )(params)
+        dctx = _ctx_grad(params, x, y, cfg, qcfg, qmax)
+        return (grads["qkv_w"][0], dctx)
+
+    return grad_probe
+
+
+def _ctx_grad(params, x, y, cfg, qcfg, qmax):
+    """Gradient of the loss wrt layer-0's attention out-proj input, computed
+    by splitting the forward at that tensor (additive zero injection)."""
+
+    def f(ctx_delta):
+        from .quantizer import make_qlinear
+
+        qlinear = make_qlinear(qcfg)
+        B, T = x.shape
+        h = params["wte"][x] + params["wpe"][None, :T, :]
+        for l in range(cfg.n_layer):
+            lp = {k: params[k][l] for k in M.LAYER_KEYS}
+            h, p = M._block_with_ctx_delta(
+                h, lp, cfg, qlinear, qmax, ctx_delta if l == 0 else None
+            )
+        h = M._layer_norm(h, params["lnf_w"], params["lnf_b"])
+        logits = h @ params["wte"].T
+        return jnp.mean(M.nll(logits, y))
+
+    B, T = x.shape
+    zero = jnp.zeros((B, T, cfg.d_model), jnp.float32)
+    return jax.grad(f)(zero)

@@ -1,0 +1,44 @@
+"""Golden-file sanity: the cross-language test vectors are valid oracles."""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+GDIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "golden")
+
+
+def need_goldens():
+    if not os.path.isdir(GDIR):
+        pytest.skip("goldens not built (run `make artifacts`)")
+
+
+def test_input_grid_formula():
+    need_goldens()
+    x = np.load(os.path.join(GDIR, "input.npy"))
+    i = np.arange(64)[:, None]
+    j = np.arange(48)[None, :]
+    expect = (((31 * i + 17 * j) % 257 - 128) / 16.0).astype(np.float32)
+    np.testing.assert_array_equal(x, expect)
+
+
+@pytest.mark.parametrize("short,gran", [("pt", "per_tensor"), ("ptok", "per_token"), ("pc", "per_channel")])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_goldens_match_oracle(short, gran, bits):
+    need_goldens()
+    x = jnp.asarray(np.load(os.path.join(GDIR, "input.npy")))
+    out = np.load(os.path.join(GDIR, f"qdq_{short}_b{bits}.npy"))
+    expect = np.asarray(ref.qdq(x, ref.bits_to_qmax(bits), gran))
+    np.testing.assert_array_equal(out, expect)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_goldens_asym_positive(bits):
+    need_goldens()
+    xp = jnp.asarray(np.load(os.path.join(GDIR, "input_pos.npy")))
+    out = np.load(os.path.join(GDIR, f"qdq_pos_ptok_asym_b{bits}.npy"))
+    expect = np.asarray(ref.qdq(xp, ref.bits_to_qmax(bits), "per_token", asymmetric=True))
+    np.testing.assert_array_equal(out, expect)

@@ -1,0 +1,214 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+The oracle itself is additionally pinned against hand-computed values so a
+bug cannot hide in both implementations at once.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qmatmul, quant, ref
+
+GRANS = ["per_tensor", "per_token", "per_channel"]
+BITS = [2, 3, 4, 6, 8]
+
+
+def rnd(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# oracle pinned against hand-computed values
+# ---------------------------------------------------------------------------
+
+
+def test_oracle_hand_computed_per_tensor():
+    # x = [-4, -1, 0, 2], 3 bits -> qmax = 3, s = 4/3
+    x = jnp.asarray([[-4.0, -1.0, 0.0, 2.0]])
+    out = ref.qdq(x, 3.0, "per_tensor")
+    s = 4.0 / 3.0
+    # round(x/s) = round([-3, -0.75, 0, 1.5]) = [-3, -1, 0, 2] (ties-to-even)
+    np.testing.assert_allclose(out, np.array([[-3.0, -1.0, 0.0, 2.0]]) * s, rtol=1e-6)
+
+
+def test_oracle_hand_computed_clip():
+    # negative extreme must clip at N = -qmax-1... values below N*s clip
+    x = jnp.asarray([[-10.0, 10.0]])
+    out = ref.qdq(x, 1.0, "per_tensor")  # 2 bits: N=-2, P=1, s=10
+    np.testing.assert_allclose(out, [[-10.0, 10.0]])  # -10/10->-1->-10; 10->1->10
+    x = jnp.asarray([[-30.0, 10.0]])
+    out = ref.qdq(x, 1.0, "per_tensor")  # s=30: round(10/30)=0 -> 0
+    np.testing.assert_allclose(out, [[-30.0, 0.0]])
+
+
+def test_oracle_round_half_even():
+    # s = 1 when max|x| == qmax; 0.5 rounds to 0, 1.5 rounds to 2
+    x = jnp.asarray([[0.5, 1.5, -0.5, -1.5, 3.0]])
+    out = ref.qdq(x, 3.0, "per_tensor")
+    np.testing.assert_allclose(out, [[0.0, 2.0, 0.0, -2.0, 3.0]])
+
+
+def test_oracle_asym_maps_min_max():
+    x = jnp.asarray([[0.0, 1.0, 2.0, 3.0]])  # all-positive, like post-GELU
+    out = ref.qdq(x, 7.0, "per_token", asymmetric=True)
+    # asymmetric must represent the endpoints (sym would waste half the grid)
+    np.testing.assert_allclose(out[0, 0], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[0, -1], 3.0, atol=1e-5)
+
+
+def test_asym_beats_sym_on_positive_data():
+    x = jnp.abs(rnd((64, 64), seed=3)) + 0.5
+    sym_err = float(jnp.mean((ref.qdq(x, 7.0, "per_token") - x) ** 2))
+    asym_err = float(jnp.mean((ref.qdq(x, 7.0, "per_token", asymmetric=True) - x) ** 2))
+    assert asym_err < sym_err
+
+
+# ---------------------------------------------------------------------------
+# pallas vs oracle: exact match
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gran", GRANS)
+@pytest.mark.parametrize("bits", BITS)
+def test_pallas_matches_ref(gran, bits):
+    x = rnd((128, 96), seed=bits)
+    qmax = ref.bits_to_qmax(bits)
+    a = ref.qdq(x, qmax, gran)
+    b = quant.qdq(x, qmax, gran)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_pallas_asym_matches_ref(bits):
+    x = rnd((64, 48), seed=bits + 100)
+    qmax = ref.bits_to_qmax(bits)
+    a = ref.qdq(x, qmax, "per_token", asymmetric=True)
+    b = quant.qdq(x, qmax, "per_token", asymmetric=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("gran", GRANS)
+def test_pallas_3d_input(gran):
+    x = rnd((4, 16, 32), seed=7)
+    a = ref.qdq(x, 127.0, gran)
+    b = quant.qdq(x, 127.0, gran)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bits=st.sampled_from(BITS),
+    gran=st.sampled_from(GRANS),
+    asym=st.booleans(),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from([1e-4, 1.0, 1e4]),
+)
+def test_pallas_matches_ref_hypothesis(m, n, bits, gran, asym, seed, scale):
+    if asym and gran != "per_token":
+        gran = "per_token"
+    x = rnd((m, n), seed=seed, scale=scale)
+    qmax = ref.bits_to_qmax(bits)
+    a = ref.qdq(x, qmax, gran, asymmetric=asym)
+    b = quant.qdq(x, qmax, gran, asymmetric=asym)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# adversarial inputs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gran", GRANS)
+def test_all_zero_tensor(gran):
+    x = jnp.zeros((32, 32), jnp.float32)
+    out = quant.qdq(x, 127.0, gran)
+    assert np.all(np.asarray(out) == 0.0)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_single_outlier_channel_per_tensor_destroys_small_values():
+    """The paper's Fig. 6/8 mechanism: one outlier channel forces the shared
+    scale so high that ordinary channels quantize to zero (per-tensor), while
+    per-channel scales preserve them."""
+    x = np.full((64, 64), 0.01, np.float32)
+    x[:, 13] = 100.0
+    x = jnp.asarray(x)
+    pt = np.asarray(quant.qdq(x, 7.0, "per_tensor"))
+    pc = np.asarray(quant.qdq(x, 7.0, "per_channel"))
+    assert np.all(pt[:, 0] == 0.0)  # ordinary channels flushed to zero
+    assert np.all(np.abs(pc[:, 0] - 0.01) < 2e-3)  # preserved per-channel
+
+
+@pytest.mark.parametrize("gran", GRANS)
+def test_idempotence(gran):
+    x = rnd((32, 64), seed=11)
+    once = quant.qdq(x, 7.0, gran)
+    twice = quant.qdq(once, 7.0, gran)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+@pytest.mark.parametrize("gran", GRANS)
+@pytest.mark.parametrize("bits", BITS)
+def test_error_bound(gran, bits):
+    """Within the clip range, |x_hat - x| <= s/2 (round-to-nearest)."""
+    x = rnd((48, 40), seed=bits)
+    qmax = ref.bits_to_qmax(bits)
+    s = np.asarray(ref.quant_params_sym(x, qmax, gran))
+    out = np.asarray(ref.qdq(x, qmax, gran))
+    err = np.abs(out - np.asarray(x))
+    assert np.all(err <= s / 2 + 1e-7)
+
+
+def test_more_bits_less_error():
+    x = rnd((64, 64), seed=5)
+    errs = [
+        float(jnp.mean((ref.qdq(x, ref.bits_to_qmax(b), "per_tensor") - x) ** 2))
+        for b in [2, 4, 8]
+    ]
+    assert errs[0] > errs[1] > errs[2]
+
+
+# ---------------------------------------------------------------------------
+# fused qmatmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qmatmul_matches_ref(bits):
+    x = rnd((128, 64), seed=1)
+    w = rnd((64, 96), seed=2)
+    q = ref.bits_to_qmax(bits)
+    a = ref.qmatmul_ref(x, w, q, q)
+    b = qmatmul.qmatmul(x, w, q, q)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 100]),
+    k=st.sampled_from([16, 64]),
+    n=st.sampled_from([8, 48, 128]),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 1000),
+)
+def test_qmatmul_hypothesis(m, k, n, bits, seed):
+    x = rnd((m, k), seed=seed)
+    w = rnd((k, n), seed=seed + 1)
+    q = ref.bits_to_qmax(bits)
+    a = ref.qmatmul_ref(x, w, q, q)
+    b = qmatmul.qmatmul(x, w, q, q)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_8bit_close_to_fp():
+    x = rnd((64, 64), seed=9)
+    w = rnd((64, 64), seed=10)
+    exact = np.asarray(x @ w)
+    q8 = np.asarray(qmatmul.qmatmul(x, w, 127.0, 127.0))
+    rel = np.abs(q8 - exact).mean() / np.abs(exact).mean()
+    assert rel < 0.02  # 8-bit per-token/channel GEMM stays within ~2%

@@ -1,0 +1,122 @@
+"""L2 model correctness: shapes, causality, init loss, scan/unroll parity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import ModelCfg
+from compile.model import QMax
+from compile.quantizer import QuantConfig, QuantSpec
+
+CFG = ModelCfg("mini", 2, 32, 2, 64, 16, 4)
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for d in M.param_defs(cfg):
+        if d.init == "ones":
+            out[d.name] = jnp.ones(d.shape, jnp.float32)
+        elif d.init == "zeros":
+            out[d.name] = jnp.zeros(d.shape, jnp.float32)
+        else:
+            std = (
+                0.02 / np.sqrt(2 * cfg.n_layer)
+                if d.init == "residual"
+                else float(d.init.split(":")[1])
+            )
+            out[d.name] = jnp.asarray(rng.normal(0, std, d.shape).astype(np.float32))
+    return out
+
+
+def tokens(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32))
+
+
+def test_forward_shapes():
+    params = init_params(CFG)
+    logits = M.forward(params, tokens(CFG), CFG, QuantConfig(), QMax.ones())
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_init_loss_near_log_vocab():
+    params = init_params(CFG)
+    x, y = tokens(CFG, 1), tokens(CFG, 2)
+    loss = M.loss_fn(params, x, y, CFG, QuantConfig(), QMax.ones())
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.2
+
+
+def test_causality():
+    """Perturbing a future token must not change past logits."""
+    params = init_params(CFG)
+    x = tokens(CFG, 3)
+    l1 = M.forward(params, x, CFG, QuantConfig(), QMax.ones())
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % CFG.vocab)
+    l2 = M.forward(params, x2, CFG, QuantConfig(), QMax.ones())
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]), atol=1e-5
+    )
+    assert float(jnp.abs(l1[:, -1] - l2[:, -1]).max()) > 1e-4
+
+
+def test_scan_matches_unrolled_probe_forward():
+    params = init_params(CFG)
+    x = tokens(CFG, 4)
+    for qcfg in [
+        QuantConfig(),
+        QuantConfig(weights=QuantSpec("per_channel"), acts=QuantSpec("per_token")),
+    ]:
+        a = M.forward(params, x, CFG, qcfg, QMax.ones() if qcfg.weights is None else
+                      QMax(jnp.asarray(127.0), jnp.asarray(127.0), jnp.ones(())))
+        qmax = (QMax.ones() if qcfg.weights is None
+                else QMax(jnp.asarray(127.0), jnp.asarray(127.0), jnp.ones(())))
+        b, probes = M.forward_probed(params, x, CFG, qcfg, qmax, probe_layer=1)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+        assert probes[0].shape == (CFG.batch, CFG.seq, CFG.d_model)
+        assert probes[1].shape == (CFG.batch, CFG.seq, CFG.d_ff)
+
+
+def test_weight_quant_changes_logits():
+    params = init_params(CFG)
+    x = tokens(CFG, 5)
+    base = M.forward(params, x, CFG, QuantConfig(), QMax.ones())
+    q4 = M.forward(
+        params, x, CFG, QuantConfig(weights=QuantSpec("per_tensor")),
+        QMax(jnp.asarray(7.0), jnp.ones(()), jnp.ones(())),
+    )
+    assert float(jnp.abs(base - q4).max()) > 1e-4
+
+
+def test_lower_bits_more_logit_error():
+    params = init_params(CFG)
+    x = tokens(CFG, 6)
+    base = M.forward(params, x, CFG, QuantConfig(), QMax.ones())
+    errs = []
+    for qmax in [1.0, 7.0, 127.0]:  # 2, 4, 8 bits
+        q = M.forward(
+            params, x, CFG, QuantConfig(weights=QuantSpec("per_channel")),
+            QMax(jnp.asarray(qmax), jnp.ones(()), jnp.ones(())),
+        )
+        errs.append(float(jnp.mean((q - base) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_nll_matches_manual():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 5)).astype(np.float32))
+    y = jnp.asarray([[0, 1, 2], [3, 4, 0]], dtype=jnp.int32)
+    out = M.nll(logits, y)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    manual = -np.take_along_axis(np.asarray(lp), np.asarray(y)[..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(np.asarray(out), manual, rtol=1e-6)
+
+
+def test_param_count_formula():
+    for cfg in [CFG, ModelCfg("t", 4, 128, 4, 512, 128, 16)]:
+        total = sum(
+            int(np.prod(d.shape)) for d in M.param_defs(cfg)
+        )
+        assert total == cfg.n_params()

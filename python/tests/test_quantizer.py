@@ -1,0 +1,105 @@
+"""STE and custom-vjp behaviour of the quantized linear layer (paper Fig. 1)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.quantizer import QuantConfig, QuantSpec, make_qlinear, qdq, ste_qdq
+from compile.kernels import ref
+
+
+def rnd(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+
+
+def test_ste_identity_gradient():
+    """d/dx [ste_qdq(x)] must be exactly 1 (straight-through)."""
+    x = rnd((16, 16), seed=1)
+    spec = QuantSpec("per_tensor")
+    g = jax.grad(lambda a: jnp.sum(ste_qdq(a, 7.0, spec) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones_like(g), rtol=1e-6)
+
+
+def test_ste_value_is_quantized():
+    x = rnd((8, 8), seed=2)
+    spec = QuantSpec("per_channel")
+    np.testing.assert_array_equal(
+        np.asarray(ste_qdq(x, 7.0, spec)), np.asarray(ref.qdq(x, 7.0, "per_channel"))
+    )
+
+
+def test_qlinear_forward_quantizes_both_operands():
+    x, w = rnd((32, 16), 3), rnd((16, 24), 4)
+    cfg = QuantConfig(weights=QuantSpec("per_channel"), acts=QuantSpec("per_token"))
+    f = make_qlinear(cfg)
+    y = f(x, w, 127.0, 127.0, 1.0)
+    expect = ref.qdq(x, 127.0, "per_token") @ ref.qdq(w, 127.0, "per_channel")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), rtol=1e-6)
+
+
+def test_qlinear_weight_grad_uses_quantized_output_grad():
+    """dW = qdq_a(x)^T @ qdq_g(g); dx = g @ qdq_w(w)^T with REAL g."""
+    x, w = rnd((32, 16), 5), rnd((16, 24), 6)
+    up = rnd((32, 24), 7)  # upstream gradient
+    cfg = QuantConfig(
+        weights=QuantSpec("per_channel"),
+        acts=QuantSpec("per_token"),
+        grads=QuantSpec("per_token"),
+    )
+    f = make_qlinear(cfg)
+    dx, dw = jax.grad(
+        lambda a, b: jnp.sum(f(a, b, 127.0, 127.0, 7.0) * up), argnums=(0, 1)
+    )(x, w)
+
+    xq = ref.qdq(x, 127.0, "per_token")
+    wq = ref.qdq(w, 127.0, "per_channel")
+    gq = ref.qdq(up, 7.0, "per_token")
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(xq.T @ gq), rtol=1e-5)
+    # dx uses the REAL (unquantized) upstream gradient
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(up @ wq.T), rtol=1e-5)
+
+
+def test_qlinear_actgrad_variant_quantizes_dx_path():
+    x, w = rnd((16, 8), 8), rnd((8, 12), 9)
+    up = rnd((16, 12), 10)
+    cfg = QuantConfig(grads=QuantSpec("per_token"), quantize_act_grads=True)
+    f = make_qlinear(cfg)
+    dx = jax.grad(lambda a: jnp.sum(f(a, w, 1.0, 1.0, 7.0) * up))(x)
+    gq = ref.qdq(up, 7.0, "per_token")
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(gq @ w.T), rtol=1e-5)
+
+
+def test_qlinear_no_quant_is_plain_matmul():
+    x, w = rnd((8, 8), 11), rnd((8, 8), 12)
+    f = make_qlinear(QuantConfig())
+    np.testing.assert_allclose(
+        np.asarray(f(x, w, 1.0, 1.0, 1.0)), np.asarray(x @ w), rtol=1e-6
+    )
+    dx = jax.grad(lambda a: jnp.sum(f(a, w, 1.0, 1.0, 1.0)))(x)
+    np.testing.assert_allclose(
+        np.asarray(dx), np.asarray(jnp.ones((8, 8)) @ w.T), rtol=1e-6
+    )
+
+
+def test_pallas_backend_matches_jnp_backend():
+    x = rnd((64, 32), 13)
+    for gran in ["per_tensor", "per_token", "per_channel"]:
+        a = qdq(x, 7.0, QuantSpec(gran, backend="jnp"))
+        b = qdq(x, 7.0, QuantSpec(gran, backend="pallas"))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quant_config_names():
+    assert QuantConfig().name() == "base"
+    assert QuantConfig(weights=QuantSpec("per_tensor")).name() == "w_pt"
+    assert (
+        QuantConfig(
+            weights=QuantSpec("per_channel"), acts=QuantSpec("per_token")
+        ).name()
+        == "w_pc_a_ptok"
+    )
+    assert (
+        QuantConfig(acts=QuantSpec("per_token", asymmetric=True)).name()
+        == "a_ptok_asym"
+    )

@@ -1,0 +1,156 @@
+"""End-to-end step functions: training reduces loss; eval/train consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import steps
+from compile.configs import ModelCfg
+from compile.quantizer import QuantConfig, QuantSpec
+from .test_model import init_params, tokens
+
+CFG = ModelCfg("mini", 2, 32, 2, 64, 16, 8)
+SC = lambda v: jnp.asarray(v, jnp.float32)
+
+
+def flat_params(cfg, seed=0):
+    from compile import model as M
+
+    p = init_params(cfg, seed)
+    return [p[d.name] for d in M.param_defs(cfg)]
+
+
+def zeros_like_params(cfg):
+    from compile import model as M
+
+    return [jnp.zeros(d.shape, jnp.float32) for d in M.param_defs(cfg)]
+
+
+def markov_batch(cfg, seed):
+    """Learnable synthetic stream: x[t+1] = (3*x[t] + 7) mod V with noise."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((cfg.batch, cfg.seq + 1), np.int64)
+    x[:, 0] = rng.integers(0, cfg.vocab, cfg.batch)
+    for t in range(cfg.seq):
+        nxt = (3 * x[:, t] + 7) % cfg.vocab
+        noise = rng.integers(0, cfg.vocab, cfg.batch)
+        take_noise = rng.random(cfg.batch) < 0.1
+        x[:, t + 1] = np.where(take_noise, noise, nxt)
+    return (
+        jnp.asarray(x[:, :-1].astype(np.int32)),
+        jnp.asarray(x[:, 1:].astype(np.int32)),
+    )
+
+
+def run_steps(qcfg, n=30, qmaxes=(127.0,) * 5, seed=0):
+    ts = jax.jit(steps.make_train_step(CFG, qcfg))
+    NP = steps.n_params_tensors(CFG)
+    state = flat_params(CFG, seed) + zeros_like_params(CFG) + zeros_like_params(CFG)
+    losses = []
+    for i in range(n):
+        x, y = markov_batch(CFG, 100 + i)
+        out = ts(*state, x, y, SC(3e-3), SC(i + 1), *map(SC, qmaxes))
+        state = list(out[: 3 * NP])
+        losses.append(float(out[-2]))
+    return losses
+
+
+def test_baseline_training_reduces_loss():
+    losses = run_steps(QuantConfig())
+    assert losses[-1] < losses[0] - 0.3
+    assert all(np.isfinite(losses))
+
+
+def test_w8_pc_training_tracks_baseline():
+    base = run_steps(QuantConfig())
+    w8 = run_steps(QuantConfig(weights=QuantSpec("per_channel")))
+    assert abs(w8[-1] - base[-1]) < 0.35
+
+
+def test_wa8_training_converges():
+    losses = run_steps(
+        QuantConfig(weights=QuantSpec("per_channel"), acts=QuantSpec("per_token"))
+    )
+    assert losses[-1] < losses[0] - 0.25
+
+
+def test_w2_training_much_worse_than_w8():
+    """2-bit weights (qmax=1) should degrade much more than 8-bit."""
+    w8 = run_steps(QuantConfig(weights=QuantSpec("per_tensor")))
+    w2 = run_steps(
+        QuantConfig(weights=QuantSpec("per_tensor")), qmaxes=(1.0, 127.0, 127.0, 127.0, 127.0)
+    )
+    # direction must hold; at 30 tiny steps the separation is modest
+    assert w2[-1] > w8[-1] + 0.05
+
+
+def test_m2_per_tensor_quant_degrades_or_diverges():
+    base = run_steps(QuantConfig(), n=15)
+    m2 = run_steps(QuantConfig(m2=QuantSpec("per_tensor")), n=15)
+    # Fig. 12: second-moment quantization destabilizes from the onset
+    assert (not np.isfinite(m2[-1])) or m2[-1] > base[-1] + 0.5
+
+
+def test_train_loss_equals_eval_loss_on_same_state():
+    qcfg = QuantConfig(weights=QuantSpec("per_channel"), acts=QuantSpec("per_token"))
+    ts = jax.jit(steps.make_train_step(CFG, qcfg))
+    es = jax.jit(steps.make_eval_step(CFG, qcfg))
+    NP = steps.n_params_tensors(CFG)
+    state = flat_params(CFG, 1) + zeros_like_params(CFG) + zeros_like_params(CFG)
+    x, y = markov_batch(CFG, 0)
+    out = ts(*state, x, y, SC(0.0), SC(1.0), *[SC(127.0)] * 5)
+    train_loss = float(out[-2])
+    mean_nll, per_pos = es(*state[:NP], x, y, jnp.ones((CFG.batch, CFG.seq)), SC(127.0), SC(127.0))
+    assert abs(train_loss - float(mean_nll)) < 1e-4
+    np.testing.assert_allclose(float(jnp.mean(per_pos)), float(mean_nll), rtol=1e-5)
+
+
+def test_eval_mask():
+    es = jax.jit(steps.make_eval_step(CFG, QuantConfig()))
+    state = flat_params(CFG, 2)
+    x, y = markov_batch(CFG, 1)
+    mask = jnp.zeros((CFG.batch, CFG.seq)).at[:, -1].set(1.0)
+    mean_nll, per_pos = es(*state, x, y, mask, SC(1.0), SC(1.0))
+    np.testing.assert_allclose(
+        float(mean_nll), float(jnp.mean(per_pos[:, -1])), rtol=1e-5
+    )
+
+
+def test_zero_lr_keeps_params():
+    ts = jax.jit(steps.make_train_step(CFG, QuantConfig()))
+    NP = steps.n_params_tensors(CFG)
+    state = flat_params(CFG, 3) + zeros_like_params(CFG) + zeros_like_params(CFG)
+    x, y = markov_batch(CFG, 2)
+    out = ts(*state, x, y, SC(0.0), SC(1.0), *[SC(1.0)] * 5)
+    for a, b in zip(state[:NP], out[:NP]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gnorm_positive_and_finite():
+    ts = jax.jit(steps.make_train_step(CFG, QuantConfig()))
+    state = flat_params(CFG, 4) + zeros_like_params(CFG) + zeros_like_params(CFG)
+    x, y = markov_batch(CFG, 3)
+    out = ts(*state, x, y, SC(1e-3), SC(1.0), *[SC(1.0)] * 5)
+    g = float(out[-1])
+    assert np.isfinite(g) and g > 0
+
+
+def test_grad_probe_outputs_nonzero():
+    gp = jax.jit(steps.make_grad_probe(CFG, QuantConfig()))
+    state = flat_params(CFG, 5)
+    x, y = markov_batch(CFG, 4)
+    dqkv, dctx = gp(*state, x, y, SC(1.0), SC(1.0), SC(1.0))
+    assert float(jnp.abs(dqkv).max()) > 0
+    assert float(jnp.abs(dctx).max()) > 0
+    assert dqkv.shape == (CFG.d_model, 3 * CFG.d_model)
+
+
+def test_act_probe_matches_manual_forward():
+    ap = jax.jit(steps.make_act_probe(CFG, QuantConfig(), 0))
+    state = flat_params(CFG, 6)
+    x, _ = markov_batch(CFG, 5)
+    proj_in, fc2_in = ap(*state, x, SC(1.0), SC(1.0))
+    assert bool(jnp.all(jnp.isfinite(proj_in))) and bool(jnp.all(jnp.isfinite(fc2_in)))
+    # post-GELU fc2 input is bounded below by GELU's minimum (~ -0.17)
+    assert float(fc2_in.min()) > -0.2

@@ -1,0 +1,42 @@
+//! Bit-width ablation bench (extension of §4.1): because qmax is a runtime
+//! scalar, one per-channel weight artifact serves every bit-width. Trains a
+//! short run at 2..8 bits and reports final loss — the knee of the curve is
+//! the paper's 4-vs-8-bit story.
+
+use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
+use qpretrain::runtime::Runtime;
+use qpretrain::train::{train, TrainCfg};
+use qpretrain::util::artifact_dir;
+
+fn main() {
+    let rt = Runtime::new(&artifact_dir()).expect("run `make artifacts` first");
+    let steps = 25;
+    println!("w_pc weight quantization, {steps} steps, runtime qmax sweep:");
+    println!("bits  final_loss  diverged");
+    for bits in [0u32, 2, 3, 4, 5, 6, 8] {
+        let structure = if bits == 0 { "base" } else { "w_pc" };
+        let cfg = TrainCfg::new(
+            "t4",
+            QuantRunCfg {
+                structure: structure.into(),
+                bits: BitWidths {
+                    weights: bits,
+                    ..BitWidths::none()
+                },
+            },
+            TrainHp {
+                steps,
+                eval_every: 0,
+                log_every: usize::MAX,
+                ..TrainHp::default()
+            },
+        );
+        let r = train(&rt, &cfg).unwrap();
+        println!(
+            "{:>4}  {:>10.4}  {}",
+            if bits == 0 { "fp".into() } else { bits.to_string() },
+            r.final_loss(),
+            r.diverged
+        );
+    }
+}

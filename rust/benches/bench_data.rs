@@ -1,0 +1,31 @@
+//! Data-pipeline throughput: the synthetic Zipf–Markov corpus generator and
+//! few-shot episode generation must never bottleneck the training loop.
+
+use qpretrain::data::fewshot::{Task, TaskGen};
+use qpretrain::data::{BatchIter, CorpusCfg};
+use qpretrain::util::bench::{bench_throughput, section};
+
+fn main() {
+    section("corpus generation");
+    let cfg = CorpusCfg::train_default(512);
+    let mut it = BatchIter::new(cfg.clone(), 16, 128);
+    bench_throughput("corpus/batch_16x128", (16 * 128) as u64, || it.next_batch());
+
+    let cfg8k = CorpusCfg::train_default(8192);
+    let mut it8k = BatchIter::new(cfg8k, 2, 256);
+    bench_throughput("corpus/gpt2s_batch_2x256", (2 * 256) as u64, || {
+        it8k.next_batch()
+    });
+
+    let mut raw = BatchIter::new(cfg.clone(), 1, 1);
+    bench_throughput("corpus/raw_tokens_64k", 65536, || raw.tokens(65536));
+
+    section("few-shot episode generation");
+    let gen = TaskGen::new(CorpusCfg::train_default(512));
+    bench_throughput("fewshot/mnli_24_episodes", 24, || {
+        gen.episodes(Task::Mnli, 24, 1, 5)
+    });
+    bench_throughput("fewshot/hellaswag_24_episodes", 24, || {
+        gen.episodes(Task::Hellaswag, 24, 1, 5)
+    });
+}

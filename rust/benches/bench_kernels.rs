@@ -1,0 +1,35 @@
+//! L1 kernel benches through the full AOT path: pallas-lowered HLO vs
+//! pure-jnp HLO vs plain matmul, executed on the PJRT CPU client.
+//! (interpret=True pallas on CPU measures *structure*, not TPU speed — see
+//! DESIGN.md §Perf for the VMEM/MXU estimates.)
+
+use qpretrain::runtime::{lit_f32, lit_scalar, Runtime};
+use qpretrain::util::bench::{bench, section};
+use qpretrain::util::{artifact_dir, rng::Rng};
+
+fn main() {
+    let rt = Runtime::new(&artifact_dir()).expect("run `make artifacts` first");
+    let mut rng = Rng::new(2);
+    let (m, n, k) = (256usize, 512usize, 256usize);
+    let x = lit_f32(&rng.normal_vec(m * n, 0.0, 1.0), &[m, n]).unwrap();
+    let w = lit_f32(&rng.normal_vec(n * k, 0.0, 1.0), &[n, k]).unwrap();
+    let q = lit_scalar(127.0);
+
+    section("L1 qdq kernels via PJRT (256x512 f32)");
+    for art in [
+        "k/qdq_pt_pallas",
+        "k/qdq_pc_pallas",
+        "k/qdq_ptok_pallas",
+        "k/qdq_ptok_asym_pallas",
+        "k/qdq_pt_jnp",
+    ] {
+        let exe = rt.exec(art).unwrap();
+        bench(art, || exe.run(&[&x, &q]).unwrap());
+    }
+
+    section("fused QDQ-matmul vs plain matmul (256x512 @ 512x256)");
+    let qmm = rt.exec("k/qmatmul_pallas").unwrap();
+    bench("k/qmatmul_pallas", || qmm.run(&[&x, &w, &q, &q]).unwrap());
+    let mm = rt.exec("k/matmul_ref").unwrap();
+    bench("k/matmul_ref", || mm.run(&[&x, &w, &q, &q]).unwrap());
+}

@@ -1,0 +1,36 @@
+//! Fig. 3 regeneration: measured share of block fwd+bwd time spent in linear
+//! layers vs the attention core, across GPT-2 sizes and sequence lengths,
+//! on the PJRT CPU client (plus the analytic FLOPs-model prediction).
+
+use qpretrain::runtime::Runtime;
+use qpretrain::timemodel::{fig3_rows, rows_to_csv};
+use qpretrain::util::artifact_dir;
+
+fn main() {
+    let rt = Runtime::new(&artifact_dir()).expect("run `make artifacts` first");
+    let rows = fig3_rows(&rt, 2).expect("timing failed");
+    print!("{}", rows_to_csv(&rows));
+
+    // the paper's qualitative claims, checked on the measured numbers
+    let f = |size: &str, seq: usize| {
+        rows.iter()
+            .find(|r| r.size == size && r.seq == seq)
+            .map(|r| r.measured_frac)
+            .unwrap_or(f64::NAN)
+    };
+    println!("\npaper shape checks:");
+    println!(
+        "  small s128 linear share {:.1}% (paper: >80% at short seq)",
+        100.0 * f("small", 128)
+    );
+    println!(
+        "  small: s128 {:.1}% -> s1024 {:.1}% (paper: decreasing in seq)",
+        100.0 * f("small", 128),
+        100.0 * f("small", 1024)
+    );
+    println!(
+        "  s512: small {:.1}% vs xl {:.1}% (paper: increasing in model size)",
+        100.0 * f("small", 512),
+        100.0 * f("xl", 512)
+    );
+}

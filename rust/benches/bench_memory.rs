@@ -1,0 +1,21 @@
+//! Fig. 2 / 14 / 15 regeneration: the analytic peak-memory tables the paper
+//! reports from the PyTorch profiler (see memmodel for the accounting).
+
+use qpretrain::memmodel::{fig15_table, fig2_table};
+
+fn main() {
+    println!("=== Fig 2/14: peak memory vs batch size (ctx 1024) ===");
+    print!("{}", fig2_table(&["small", "medium", "large"], &[4, 8, 16, 32, 64], 1024));
+    println!("\n=== Fig 15: peak memory vs sequence length (batch 4) ===");
+    print!(
+        "{}",
+        fig15_table(&["small", "medium", "large"], &[128, 256, 512, 1024, 2048], 4)
+    );
+    println!("\npaper shape checks:");
+    let small64 = qpretrain::memmodel::peak_memory(&qpretrain::memmodel::profile_model("small"), 64, 1024);
+    println!(
+        "  small@batch64: activations+logits share = {:.1}% (paper: activations dominate)",
+        100.0 * (small64.activations + small64.logits) as f64 / small64.total() as f64
+    );
+    println!("  small@batch64 peak phase = {} (paper App. B: grads absent at peak)", small64.peak_phase);
+}

@@ -1,0 +1,55 @@
+//! PTQ throughput: time to post-training-quantize full model checkpoints
+//! (all block linear weights) at GPT-2-small scale — the Table 10 substrate
+//! must be interactive.
+
+use qpretrain::config::{Granularity, Scheme};
+use qpretrain::quant::{qdq, PackedTensor};
+use qpretrain::util::bench::{bench_throughput, section};
+use qpretrain::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    // GPT-2 small block linears: 12 layers x (qkv 768x2304 + proj 768x768 +
+    // fc1 768x3072 + fc2 3072x768)
+    let shapes: Vec<(usize, usize)> = (0..12)
+        .flat_map(|_| [(768, 2304), (768, 768), (768, 3072), (3072, 768)])
+        .collect();
+    let tensors: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|(r, c)| rng.normal_vec(r * c, 0.0, 0.02))
+        .collect();
+    let total: u64 = shapes.iter().map(|(r, c)| (r * c) as u64).sum();
+    println!("checkpoint linear weights: {:.1}M params", total as f64 / 1e6);
+
+    section("full-checkpoint fake-quant PTQ (85M linear params)");
+    for gran in [Granularity::PerTensor, Granularity::PerChannel] {
+        for bits in [4, 8] {
+            let scheme = Scheme::new(bits, gran);
+            bench_throughput(
+                &format!("ptq/{}/b{bits}", gran.as_str()),
+                total,
+                || {
+                    let mut out = 0usize;
+                    for ((r, c), t) in shapes.iter().zip(&tensors) {
+                        let mut copy = t.clone();
+                        qdq(&mut copy, *r, *c, scheme);
+                        out += copy.len();
+                    }
+                    out
+                },
+            );
+        }
+    }
+
+    section("packed int4 export (deployment format)");
+    bench_throughput("pack_all/b4", total, || {
+        shapes
+            .iter()
+            .zip(&tensors)
+            .map(|((r, c), t)| {
+                PackedTensor::quantize(t, *r, *c, Scheme::new(4, Granularity::PerChannel))
+                    .storage_bytes()
+            })
+            .sum::<usize>()
+    });
+}

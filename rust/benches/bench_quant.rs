@@ -1,0 +1,45 @@
+//! L3 quant-library throughput: fake-quant and packed quantization across
+//! granularities / bit-widths on GPT-2-small-sized weight tensors.
+//! (Feeds the §3.3 efficiency discussion: PTQ of a full checkpoint must be
+//! fast enough to be interactive.)
+
+use qpretrain::config::{Granularity, Scheme};
+use qpretrain::quant::{qdq_copy, PackedTensor};
+use qpretrain::util::bench::{bench_throughput, section};
+use qpretrain::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let (rows, cols) = (768, 3 * 768); // GPT-2 small QKV projection
+    let data = rng.normal_vec(rows * cols, 0.0, 0.02);
+    let n = (rows * cols) as u64;
+
+    section("fake-quant (qdq) on 768x2304 f32");
+    for gran in [
+        Granularity::PerTensor,
+        Granularity::PerToken,
+        Granularity::PerChannel,
+    ] {
+        for bits in [4, 8] {
+            let scheme = Scheme::new(bits, gran);
+            bench_throughput(
+                &format!("qdq/{}/b{}", gran.as_str(), bits),
+                n,
+                || qdq_copy(&data, rows, cols, scheme),
+            );
+        }
+    }
+    bench_throughput("qdq/per_token_asym/b4", n, || {
+        qdq_copy(&data, rows, cols, Scheme::asym(4, Granularity::PerToken))
+    });
+
+    section("packed int storage (quantize + dequantize)");
+    for bits in [4, 8] {
+        let scheme = Scheme::new(bits, Granularity::PerChannel);
+        bench_throughput(&format!("pack/b{bits}"), n, || {
+            PackedTensor::quantize(&data, rows, cols, scheme)
+        });
+        let packed = PackedTensor::quantize(&data, rows, cols, scheme);
+        bench_throughput(&format!("unpack/b{bits}"), n, || packed.dequantize());
+    }
+}

@@ -1,0 +1,418 @@
+//! Analyses behind the paper's diagnostic figures: m-sharpness and loss
+//! surfaces (Fig. 5), activation-outlier tracking (Figs. 6 & 8), gradient
+//! statistics (Fig. 10), and the Adam second-moment zero-bin histogram
+//! (Fig. 12).
+
+use anyhow::Result;
+
+use crate::config::Scheme;
+use crate::data::corpus::{BatchIter, CorpusCfg};
+use crate::eval::EvalQuant;
+use crate::model::HostState;
+use crate::quant;
+use crate::runtime::{lit_i32, lit_scalar, to_f32, ModelInfo, Runtime};
+use crate::util::rng::Rng;
+use crate::util::stats::{channel_abs_max, kurtosis, sparsity, Histogram};
+
+// ---------------------------------------------------------------------------
+// sharpness (Fig. 5 top)
+// ---------------------------------------------------------------------------
+
+/// A filter-normalized random direction: per-tensor gaussian noise rescaled
+/// so that each tensor's perturbation norm matches its parameter norm
+/// (Li et al., 2018). Skips 1-D tensors (LN/bias), like the visualization
+/// paper does.
+pub fn filter_normalized_direction(state: &HostState, model: &ModelInfo, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    model
+        .params
+        .iter()
+        .zip(&state.params)
+        .map(|(info, w)| {
+            if info.shape.len() < 2 {
+                return vec![0.0; w.len()];
+            }
+            let mut d = rng.normal_vec(w.len(), 0.0, 1.0);
+            let wn = w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            let dn = d.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            let scale = if dn > 0.0 { (wn / dn) as f32 } else { 0.0 };
+            for x in d.iter_mut() {
+                *x *= scale;
+            }
+            d
+        })
+        .collect()
+}
+
+fn perturbed(state: &HostState, dirs: &[(&Vec<Vec<f32>>, f32)]) -> Vec<Vec<f32>> {
+    state
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let mut out = w.clone();
+            for (d, a) in dirs {
+                for (o, dv) in out.iter_mut().zip(&d[i]) {
+                    *o += a * dv;
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+fn loss_of_params(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    params_host: &[Vec<f32>],
+    n_batches: usize,
+    q: EvalQuant,
+) -> Result<f64> {
+    let lits: Vec<xla::Literal> = model
+        .params
+        .iter()
+        .zip(params_host)
+        .map(|(p, d)| crate::runtime::lit_f32(d, &p.shape))
+        .collect::<Result<_>>()?;
+    crate::eval::corpus_nll(
+        rt,
+        eval_artifact,
+        model,
+        &lits,
+        &CorpusCfg {
+            seed: 77_777,
+            ..CorpusCfg::train_default(model.vocab)
+        },
+        n_batches,
+        q,
+    )
+}
+
+/// m-sharpness proxy: for each radius, max over `n_dirs` random
+/// filter-normalized directions of `L(w + rho d) - L(w)`, averaged over
+/// `n_batches` minibatches. (The paper uses SAM's ascent direction; the
+/// random-direction proxy preserves the sharpness *ordering* across models —
+/// see DESIGN.md §4.)
+pub struct SharpnessCurve {
+    pub radii: Vec<f64>,
+    pub sharpness: Vec<f64>, // max loss increase at each radius
+    pub base_loss: f64,
+}
+
+pub fn m_sharpness(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    state: &HostState,
+    radii: &[f64],
+    n_dirs: usize,
+    n_batches: usize,
+    q: EvalQuant,
+) -> Result<SharpnessCurve> {
+    let base = loss_of_params(rt, eval_artifact, model, &state.params, n_batches, q)?;
+    let dirs: Vec<Vec<Vec<f32>>> = (0..n_dirs)
+        .map(|i| filter_normalized_direction(state, model, 0xD1B0 + i as u64))
+        .collect();
+    let mut sharp = Vec::with_capacity(radii.len());
+    for &rho in radii {
+        let mut worst = f64::NEG_INFINITY;
+        for d in &dirs {
+            let p = perturbed(state, &[(d, rho as f32)]);
+            let l = loss_of_params(rt, eval_artifact, model, &p, n_batches, q)?;
+            worst = worst.max(l - base);
+        }
+        sharp.push(worst);
+    }
+    Ok(SharpnessCurve {
+        radii: radii.to_vec(),
+        sharpness: sharp,
+        base_loss: base,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// 2-D loss surface (Fig. 5 bottom)
+// ---------------------------------------------------------------------------
+
+pub struct LossSurface {
+    pub alphas: Vec<f64>,
+    pub betas: Vec<f64>,
+    pub loss: Vec<Vec<f64>>, // loss[i][j] at (alphas[i], betas[j])
+}
+
+pub fn loss_surface(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    state: &HostState,
+    extent: f64,
+    grid: usize,
+    n_batches: usize,
+    q: EvalQuant,
+) -> Result<LossSurface> {
+    let d1 = filter_normalized_direction(state, model, 0xFACE);
+    let d2 = filter_normalized_direction(state, model, 0xBEEF);
+    let coords: Vec<f64> = (0..grid)
+        .map(|i| -extent + 2.0 * extent * i as f64 / (grid - 1) as f64)
+        .collect();
+    let mut loss = Vec::with_capacity(grid);
+    for &a in &coords {
+        let mut row = Vec::with_capacity(grid);
+        for &b in &coords {
+            let p = perturbed(state, &[(&d1, a as f32), (&d2, b as f32)]);
+            row.push(loss_of_params(rt, eval_artifact, model, &p, n_batches, q)?);
+        }
+        loss.push(row);
+    }
+    Ok(LossSurface {
+        alphas: coords.clone(),
+        betas: coords,
+        loss,
+    })
+}
+
+impl LossSurface {
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("alpha\\beta");
+        for b in &self.betas {
+            out.push_str(&format!(",{b:.4}"));
+        }
+        out.push('\n');
+        for (i, a) in self.alphas.iter().enumerate() {
+            out.push_str(&format!("{a:.4}"));
+            for v in &self.loss[i] {
+                out.push_str(&format!(",{v:.5}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// activation outliers (Figs. 6 & 8)
+// ---------------------------------------------------------------------------
+
+pub struct ActStats {
+    /// abs-max per channel of the attention out-proj input.
+    pub proj_in_channel_max: Vec<f32>,
+    /// abs-max per channel of the FC2 input (post-GELU).
+    pub fc2_in_channel_max: Vec<f32>,
+    pub proj_in_kurtosis: f64,
+    pub fc2_in_max: f32,
+    pub fc2_in_p999: f64,
+}
+
+pub fn activation_stats(
+    rt: &Runtime,
+    model: &ModelInfo,
+    params: &[xla::Literal],
+) -> Result<ActStats> {
+    let exe = rt.exec(&format!("{}/probe/act", model.name))?;
+    let mut it = BatchIter::new(
+        CorpusCfg {
+            seed: 55_555,
+            ..CorpusCfg::train_default(model.vocab)
+        },
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let x = lit_i32(&b.x, &[b.batch, b.seq])?;
+    let one = lit_scalar(1.0);
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.extend([&x, &one, &one]);
+    let out = exe.run(&inputs)?;
+    let proj_in = to_f32(&out[0])?;
+    let fc2_in = to_f32(&out[1])?;
+    let rows = model.batch * model.seq;
+    Ok(ActStats {
+        proj_in_channel_max: channel_abs_max(&proj_in, rows, model.d_model),
+        fc2_in_channel_max: channel_abs_max(&fc2_in, rows, model.d_ff),
+        proj_in_kurtosis: kurtosis(&proj_in),
+        fc2_in_max: fc2_in.iter().fold(0.0f32, |a, &v| a.max(v.abs())),
+        fc2_in_p999: crate::util::stats::quantile(&fc2_in, 0.999),
+    })
+}
+
+/// Persistence of outlier channels between two snapshots: Jaccard overlap of
+/// the top-k channels by abs-max (the paper's Fig. 6 claim is that the same
+/// channels stay hot across training).
+pub fn topk_overlap(a: &[f32], b: &[f32], k: usize) -> f64 {
+    let topk = |v: &[f32]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&i, &j| v[j].total_cmp(&v[i]));
+        idx.truncate(k);
+        idx
+    };
+    let sa = topk(a);
+    let sb = topk(b);
+    let inter = sa.iter().filter(|i| sb.contains(i)).count();
+    inter as f64 / (2 * k - inter) as f64
+}
+
+// ---------------------------------------------------------------------------
+// gradient statistics (Fig. 10)
+// ---------------------------------------------------------------------------
+
+pub struct GradStats {
+    /// log10 |g| histogram of the QKV weight gradient (layer 0).
+    pub weight_grad_hist: Histogram,
+    pub weight_grad_sparsity: f64,
+    pub act_grad_sparsity: f64,
+    /// L2 error between the gradient and its quantized version, per scheme.
+    pub quant_rel_err: Vec<(String, f64)>,
+}
+
+pub fn gradient_stats(
+    rt: &Runtime,
+    model: &ModelInfo,
+    params: &[xla::Literal],
+    schemes: &[(String, Scheme)],
+) -> Result<GradStats> {
+    let exe = rt.exec(&format!("{}/probe/grad", model.name))?;
+    let mut it = BatchIter::new(
+        CorpusCfg {
+            seed: 66_666,
+            ..CorpusCfg::train_default(model.vocab)
+        },
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let x = lit_i32(&b.x, &[b.batch, b.seq])?;
+    let y = lit_i32(&b.y, &[b.batch, b.seq])?;
+    let one = lit_scalar(1.0);
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.extend([&x, &y, &one, &one, &one]);
+    let out = exe.run(&inputs)?;
+    let dqkv = to_f32(&out[0])?;
+    let dctx = to_f32(&out[1])?;
+
+    let mut hist = Histogram::new(-12.0, 0.0, 48);
+    for &g in &dqkv {
+        if g != 0.0 {
+            hist.add((g.abs() as f64).log10());
+        }
+    }
+
+    let rows = model.d_model;
+    let cols = 3 * model.d_model;
+    let mut quant_rel_err = Vec::new();
+    for (name, scheme) in schemes {
+        let q = quant::qdq_copy(&dqkv, rows, cols, *scheme);
+        let num: f64 = dqkv
+            .iter()
+            .zip(&q)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = dqkv.iter().map(|&a| (a as f64).powi(2)).sum();
+        quant_rel_err.push((name.clone(), (num / den.max(1e-30)).sqrt()));
+    }
+
+    Ok(GradStats {
+        weight_grad_hist: hist,
+        weight_grad_sparsity: sparsity(&dqkv, 1e-3),
+        act_grad_sparsity: sparsity(&dctx, 1e-3),
+        quant_rel_err,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Adam second-moment zero bin (Fig. 12)
+// ---------------------------------------------------------------------------
+
+pub struct ZeroBinReport {
+    /// per linear-weight tensor: (name, fraction of v flushed to zero at 8b).
+    pub per_tensor: Vec<(String, f64)>,
+    /// log10(v) histogram before quantization.
+    pub v_hist: Histogram,
+}
+
+pub fn m2_zero_bin(state: &HostState, model: &ModelInfo, scheme: Scheme) -> ZeroBinReport {
+    let mut per_tensor = Vec::new();
+    let mut v_hist = Histogram::new(-16.0, 0.0, 64);
+    for (info, v) in model.params.iter().zip(&state.v) {
+        if !crate::ptq::LINEAR_WEIGHTS.contains(&info.name.as_str()) {
+            continue;
+        }
+        let (l, rows, cols) = (info.shape[0], info.shape[1], info.shape[2]);
+        let mut flushed = 0.0;
+        for layer in 0..l {
+            let slice = &v[layer * rows * cols..(layer + 1) * rows * cols];
+            flushed += quant::zero_bin_fraction(slice, rows, cols, scheme);
+            for &x in slice {
+                if x > 0.0 {
+                    v_hist.add((x as f64).log10());
+                }
+            }
+        }
+        per_tensor.push((info.name.clone(), flushed / l as f64));
+    }
+    ZeroBinReport { per_tensor, v_hist }
+}
+
+/// Loss-gap signature: scalar summary of how much sharper `quantized` is
+/// than `baseline` at matched radius (used by the fig5 report).
+pub fn sharpness_gap(baseline: &SharpnessCurve, quantized: &SharpnessCurve) -> f64 {
+    baseline
+        .sharpness
+        .iter()
+        .zip(&quantized.sharpness)
+        .map(|(b, q)| q - b)
+        .sum::<f64>()
+        / baseline.sharpness.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_overlap_bounds() {
+        let a = vec![9.0, 1.0, 8.0, 0.5, 7.0];
+        assert!((topk_overlap(&a, &a, 3) - 1.0).abs() < 1e-9);
+        let b = vec![0.1, 9.0, 0.2, 8.0, 0.3];
+        let o = topk_overlap(&a, &b, 2); // {0,2} vs {1,3}
+        assert_eq!(o, 0.0);
+    }
+
+    #[test]
+    fn filter_norm_direction_scales() {
+        use crate::runtime::ParamInfo;
+        let model = ModelInfo {
+            name: "t".into(),
+            n_layer: 1,
+            d_model: 4,
+            n_head: 1,
+            vocab: 8,
+            seq: 4,
+            batch: 1,
+            d_ff: 8,
+            n_params: 0,
+            params: vec![
+                ParamInfo {
+                    name: "w".into(),
+                    shape: vec![16, 16],
+                    stacked: false,
+                    decay: true,
+                    init: "normal:0.02".into(),
+                },
+                ParamInfo {
+                    name: "b".into(),
+                    shape: vec![16],
+                    stacked: false,
+                    decay: false,
+                    init: "zeros".into(),
+                },
+            ],
+        };
+        let state = crate::model::init_state(&model, 11);
+        let d = filter_normalized_direction(&state, &model, 1);
+        let wn: f64 = state.params[0].iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        let dn: f64 = d[0].iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((wn - dn).abs() / wn < 1e-3);
+        assert!(d[1].iter().all(|&x| x == 0.0)); // 1-D skipped
+    }
+}

@@ -1,0 +1,281 @@
+//! Configuration types shared across the coordinator: quantization scheme
+//! naming (mirroring `python/compile/quantizer.py`), training hyperparameters
+//! and run configuration, plus a small key=value config-file loader.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Quantization granularity, matching the python/manifest naming.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    PerTensor,
+    PerToken,
+    PerChannel,
+}
+
+impl Granularity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Granularity::PerTensor => "per_tensor",
+            Granularity::PerToken => "per_token",
+            Granularity::PerChannel => "per_channel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Granularity> {
+        Ok(match s {
+            "per_tensor" | "pt" => Granularity::PerTensor,
+            "per_token" | "ptok" => Granularity::PerToken,
+            "per_channel" | "pc" | "per_column" => Granularity::PerChannel,
+            _ => bail!("unknown granularity {s:?}"),
+        })
+    }
+}
+
+/// A quantization scheme for one tensor class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scheme {
+    pub bits: u32,
+    pub granularity: Granularity,
+    pub asymmetric: bool,
+}
+
+impl Scheme {
+    pub fn new(bits: u32, granularity: Granularity) -> Scheme {
+        Scheme {
+            bits,
+            granularity,
+            asymmetric: false,
+        }
+    }
+
+    pub fn asym(bits: u32, granularity: Granularity) -> Scheme {
+        Scheme {
+            bits,
+            granularity,
+            asymmetric: true,
+        }
+    }
+
+    /// qmax = 2^(b-1) - 1, the runtime scalar fed to the artifacts.
+    pub fn qmax(&self) -> f32 {
+        ((1u64 << (self.bits - 1)) - 1) as f32
+    }
+}
+
+/// Bits per quantized component for a training run. A bit-width of 0 means
+/// "component not quantized" (its qmax input is fed 1.0 and the artifact
+/// structure does not quantize it anyway).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BitWidths {
+    pub weights: u32,
+    pub acts: u32,
+    pub grads: u32,
+    pub m1: u32,
+    pub m2: u32,
+}
+
+impl BitWidths {
+    pub fn none() -> BitWidths {
+        BitWidths {
+            weights: 0,
+            acts: 0,
+            grads: 0,
+            m1: 0,
+            m2: 0,
+        }
+    }
+
+    pub fn qmax(bits: u32) -> f32 {
+        if bits == 0 {
+            1.0
+        } else {
+            ((1u64 << (bits - 1)) - 1) as f32
+        }
+    }
+
+    /// The five qmax scalars in train-artifact input order (w, a, g, m1, m2).
+    pub fn qmax_scalars(&self) -> [f32; 5] {
+        [
+            Self::qmax(self.weights),
+            Self::qmax(self.acts),
+            Self::qmax(self.grads),
+            Self::qmax(self.m1),
+            Self::qmax(self.m2),
+        ]
+    }
+}
+
+/// A full experiment configuration: which artifact structure + bit-widths.
+/// `structure` is the artifact key, e.g. "w_pc" or "a_ptok_asym"; together
+/// with `bits` it identifies a paper configuration such as "4-bit per-channel
+/// weight quantization".
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantRunCfg {
+    pub structure: String,
+    pub bits: BitWidths,
+}
+
+impl QuantRunCfg {
+    pub fn baseline() -> QuantRunCfg {
+        QuantRunCfg {
+            structure: "base".into(),
+            bits: BitWidths::none(),
+        }
+    }
+
+    /// Human-readable label like "w4_pc" / "baseline".
+    pub fn label(&self) -> String {
+        if self.structure == "base" {
+            return "baseline".into();
+        }
+        let b = &self.bits;
+        let mut s = self.structure.clone();
+        for (tag, bits) in [
+            ("w_", b.weights),
+            ("a_", b.acts),
+            ("g_", b.grads),
+            ("m1_", b.m1),
+            ("m2_", b.m2),
+        ] {
+            if s.starts_with(tag) && bits > 0 {
+                s = format!("{}{}{}", tag.trim_end_matches('_'), bits, &s[tag.len() - 1..]);
+                break;
+            }
+        }
+        if self.structure == "wa" {
+            s = format!("w{}a{}", b.weights, b.acts);
+        } else if self.structure == "wag" {
+            s = format!("w{}a{}g{}", b.weights, b.acts, b.grads);
+        }
+        s
+    }
+}
+
+/// Training hyperparameters (paper Appendix A, nanoGPT-style).
+#[derive(Debug, Clone)]
+pub struct TrainHp {
+    pub steps: usize,
+    pub lr_max: f64,
+    pub lr_min: f64,
+    pub warmup: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub probe_every: usize, // 0 = no probes
+    pub log_every: usize,
+}
+
+impl Default for TrainHp {
+    fn default() -> Self {
+        TrainHp {
+            steps: 300,
+            lr_max: 3e-3,
+            lr_min: 3e-4,
+            warmup: 20,
+            seed: 1337,
+            eval_every: 25,
+            eval_batches: 4,
+            probe_every: 0,
+            log_every: 10,
+        }
+    }
+}
+
+/// Cosine learning-rate schedule with linear warmup (paper: cosine half
+/// cycle, lr 6e-4 -> <1e-6; scaled for the study model).
+pub fn cosine_lr(hp: &TrainHp, step: usize) -> f64 {
+    let s = step as f64;
+    if step < hp.warmup {
+        return hp.lr_max * (s + 1.0) / hp.warmup as f64;
+    }
+    let t = (s - hp.warmup as f64) / (hp.steps.max(hp.warmup + 1) - hp.warmup) as f64;
+    let t = t.clamp(0.0, 1.0);
+    hp.lr_min + 0.5 * (hp.lr_max - hp.lr_min) * (1.0 + (std::f64::consts::PI * t).cos())
+}
+
+/// Parse a simple `key = value` config file (comments with `#`).
+pub fn parse_kv(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", i + 1))?;
+        out.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(Scheme::new(8, Granularity::PerTensor).qmax(), 127.0);
+        assert_eq!(Scheme::new(4, Granularity::PerTensor).qmax(), 7.0);
+        assert_eq!(Scheme::new(2, Granularity::PerTensor).qmax(), 1.0);
+        assert_eq!(BitWidths::qmax(0), 1.0);
+    }
+
+    #[test]
+    fn lr_schedule_bounds() {
+        let hp = TrainHp {
+            steps: 100,
+            lr_max: 1e-3,
+            lr_min: 1e-4,
+            warmup: 10,
+            ..Default::default()
+        };
+        assert!(cosine_lr(&hp, 0) <= hp.lr_max / 5.0);
+        assert!((cosine_lr(&hp, 10) - hp.lr_max).abs() < 1e-9);
+        assert!((cosine_lr(&hp, 100) - hp.lr_min).abs() < 1e-6);
+        // monotone decreasing after warmup
+        let mut prev = cosine_lr(&hp, 10);
+        for s in 11..=100 {
+            let cur = cosine_lr(&hp, s);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn labels() {
+        let c = QuantRunCfg {
+            structure: "w_pc".into(),
+            bits: BitWidths {
+                weights: 4,
+                ..BitWidths::none()
+            },
+        };
+        assert_eq!(c.label(), "w4_pc");
+        assert_eq!(QuantRunCfg::baseline().label(), "baseline");
+        let c = QuantRunCfg {
+            structure: "wa".into(),
+            bits: BitWidths {
+                weights: 8,
+                acts: 8,
+                ..BitWidths::none()
+            },
+        };
+        assert_eq!(c.label(), "w8a8");
+    }
+
+    #[test]
+    fn kv_parse() {
+        let kv = parse_kv("a = 1\n# comment\nb = two # inline\n").unwrap();
+        assert_eq!(kv, vec![("a".into(), "1".into()), ("b".into(), "two".into())]);
+        assert!(parse_kv("oops").is_err());
+    }
+
+    #[test]
+    fn granularity_roundtrip() {
+        for g in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
+            assert_eq!(Granularity::parse(g.as_str()).unwrap(), g);
+        }
+        assert!(Granularity::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,751 @@
+//! One experiment per paper table/figure (DESIGN.md §7 index).
+//!
+//! Every experiment is idempotent: training runs are cached on disk by
+//! config, so `experiment all` resumes wherever it stopped, and individual
+//! experiments can be re-rendered instantly once their runs exist.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::{BitWidths, Granularity, QuantRunCfg, Scheme, TrainHp};
+use crate::eval::{fewshot_suite, perplexity_suite, EvalQuant};
+use crate::runtime::Runtime;
+use crate::train::{eval_structure_for, TrainCfg};
+
+use super::{emit_report, ensure_runs, fmt_f, fmt_ppl, md_table, run_dir, RunSummary};
+
+pub struct Ctx {
+    pub rt: Runtime,
+    pub runs: PathBuf,
+    pub steps: usize,
+    pub jobs: usize,
+    pub eval_batches: usize,
+    pub fewshot_episodes: usize,
+    pub fewshot_seeds: usize,
+}
+
+impl Ctx {
+    pub fn hp(&self) -> TrainHp {
+        TrainHp {
+            steps: self.steps,
+            ..TrainHp::default()
+        }
+    }
+
+    fn cfg(&self, structure: &str, bits: BitWidths) -> TrainCfg {
+        TrainCfg::new(
+            "t4",
+            QuantRunCfg {
+                structure: structure.to_string(),
+                bits,
+            },
+            self.hp(),
+        )
+    }
+
+    fn baseline_cfg(&self) -> TrainCfg {
+        self.cfg("base", BitWidths::none())
+    }
+}
+
+// cheap analytic reports first, training sweeps next, the slow measured
+// timing grid (fig3) last so a budget-limited `all` run loses the least.
+pub const ALL: &[&str] = &[
+    "fig2", "fig15", "fig4", "tab2", "fig5", "fig6", "fig7", "tab3", "fig8",
+    "fig9", "tab4", "fig10", "fig11", "tab5", "fig12", "fig13", "tab1", "tab10",
+    "tab11", "abl_bits", "fig3",
+];
+
+pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "fig2" => fig2(ctx),
+        "fig15" => fig15(ctx),
+        "fig3" => fig3(ctx),
+        "fig4" => fig4(ctx),
+        "tab2" => tab_eval(ctx, "tab2", "Tables 2+6: weight quantization", &weight_sweep(ctx)),
+        "fig5" => fig5(ctx),
+        "fig6" => fig6(ctx),
+        "fig7" => fig7(ctx),
+        "tab3" => tab_eval(ctx, "tab3", "Tables 3+7: activation quantization", &act_sweep(ctx)),
+        "fig8" => fig8(ctx),
+        "fig9" => fig9(ctx),
+        "tab4" => tab_eval(ctx, "tab4", "Tables 4+8: gradient quantization", &grad_sweep(ctx)),
+        "fig10" => fig10(ctx),
+        "fig11" => fig11(ctx),
+        "tab5" => tab_eval(ctx, "tab5", "Tables 5+9: Adam first-moment quantization", &m1_sweep(ctx)),
+        "fig12" => fig12(ctx),
+        "fig13" => fig13(ctx),
+        "tab1" => tab1(ctx),
+        "tab10" => tab10(ctx),
+        "tab11" => tab11(ctx),
+        "abl_bits" => abl_bits(ctx),
+        "all" => {
+            for id in ALL {
+                println!("\n================ experiment {id} ================");
+                run(ctx, id)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; known: {ALL:?} or 'all'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sweep definitions (paper §4.1-4.5)
+// ---------------------------------------------------------------------------
+
+fn wbits(b: u32) -> BitWidths {
+    BitWidths { weights: b, ..BitWidths::none() }
+}
+fn abits(b: u32) -> BitWidths {
+    BitWidths { acts: b, ..BitWidths::none() }
+}
+fn gbits(b: u32) -> BitWidths {
+    BitWidths { grads: b, ..BitWidths::none() }
+}
+fn m1bits(b: u32) -> BitWidths {
+    BitWidths { m1: b, ..BitWidths::none() }
+}
+fn m2bits(b: u32) -> BitWidths {
+    BitWidths { m2: b, ..BitWidths::none() }
+}
+
+fn weight_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
+    vec![
+        ctx.baseline_cfg(),
+        ctx.cfg("w_pt", wbits(4)),
+        ctx.cfg("w_pc", wbits(4)),
+        ctx.cfg("w_pt", wbits(8)),
+        ctx.cfg("w_pc", wbits(8)),
+    ]
+}
+
+fn act_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
+    vec![
+        ctx.baseline_cfg(),
+        ctx.cfg("a_pt", abits(4)),
+        ctx.cfg("a_ptok", abits(4)),
+        ctx.cfg("a_ptok_asym", abits(4)),
+        ctx.cfg("a_pt", abits(8)),
+        ctx.cfg("a_ptok", abits(8)),
+    ]
+}
+
+fn grad_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
+    vec![
+        ctx.baseline_cfg(),
+        ctx.cfg("g_pt", gbits(4)),
+        ctx.cfg("g_ptok", gbits(4)),
+        ctx.cfg("g_pt", gbits(8)),
+        ctx.cfg("g_ptok", gbits(8)),
+    ]
+}
+
+fn m1_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
+    vec![
+        ctx.baseline_cfg(),
+        ctx.cfg("m1_pt", m1bits(4)),
+        ctx.cfg("m1_pc", m1bits(4)),
+        ctx.cfg("m1_pt", m1bits(8)),
+        ctx.cfg("m1_pc", m1bits(8)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// generic renderers
+// ---------------------------------------------------------------------------
+
+/// Train a sweep and report the validation-loss outcome (a figure's "down"
+/// panel in table form) plus a combined loss-curve CSV.
+fn train_and_report(ctx: &Ctx, id: &str, title: &str, configs: &[TrainCfg]) -> Result<Vec<RunSummary>> {
+    let runs = ensure_runs(&ctx.rt, &ctx.runs, configs, ctx.jobs)?;
+    let mut rows = Vec::new();
+    for r in &runs {
+        rows.push(vec![
+            r.label.clone(),
+            fmt_f(r.final_val_loss, 4),
+            fmt_f(r.min_val_loss, 4),
+            if r.diverged {
+                format!("yes (step {})", r.diverged_at.unwrap_or(0))
+            } else {
+                "no".into()
+            },
+            format!("{:.2}", r.steps_per_sec),
+        ]);
+    }
+    let body = md_table(
+        &["config", "final val loss", "min val loss", "diverged", "steps/s"],
+        &rows,
+    );
+    emit_report(&ctx.runs, id, title, &body)?;
+    write_val_curves(ctx, id, &runs)?;
+    Ok(runs)
+}
+
+fn write_val_curves(ctx: &Ctx, id: &str, runs: &[RunSummary]) -> Result<()> {
+    let dir = ctx.runs.join("reports");
+    std::fs::create_dir_all(&dir)?;
+    let mut f = std::fs::File::create(dir.join(format!("{id}_val_curves.csv")))?;
+    writeln!(f, "config,step,val_loss")?;
+    for r in runs {
+        for (s, v) in r.val_curve().unwrap_or_default() {
+            writeln!(f, "{},{},{}", r.label, s, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// The perplexity + few-shot evaluation table pair (paper Tables 2-9).
+fn tab_eval(ctx: &Ctx, id: &str, title: &str, configs: &[TrainCfg]) -> Result<()> {
+    let runs = ensure_runs(&ctx.rt, &ctx.runs, configs, ctx.jobs)?;
+    let model = ctx.rt.manifest.model("t4")?.clone();
+
+    let mut ppl_rows = Vec::new();
+    let mut fs_rows = Vec::new();
+    for (cfg, r) in configs.iter().zip(&runs) {
+        let state = r.checkpoint(&ctx.rt)?;
+        let params = state.param_literals(&model)?;
+        let eval_art = cfg.eval_artifact();
+        let q = EvalQuant {
+            qmax_w: cfg.quant.bits.qmax_scalars()[0],
+            qmax_a: cfg.quant.bits.qmax_scalars()[1],
+        };
+        let ppl = perplexity_suite(&ctx.rt, &eval_art, &model, &params, ctx.eval_batches, q)?;
+        ppl_rows.push(
+            std::iter::once(r.label.clone())
+                .chain(
+                    ["synthwiki103", "synthwiki2", "synthptb", "synth1bw"]
+                        .iter()
+                        .map(|s| fmt_ppl(*ppl.get(*s).unwrap_or(&f64::NAN), r.diverged)),
+                )
+                .collect::<Vec<_>>(),
+        );
+
+        let fs = fewshot_suite(
+            &ctx.rt,
+            &eval_art,
+            &model,
+            &params,
+            ctx.fewshot_episodes,
+            ctx.fewshot_seeds,
+            q,
+        )?;
+        let mut row = vec![r.label.clone()];
+        for (_, mean, sd) in &fs.per_task {
+            row.push(format!("{:.1}±{:.1}", 100.0 * mean, 100.0 * sd));
+        }
+        row.push(format!("{:.2}", 100.0 * fs.average));
+        fs_rows.push(row);
+    }
+
+    let ppl_tbl = md_table(
+        &["config", "synthwiki103 (ppl)", "synthwiki2 (ppl)", "synthptb (ppl)", "synth1bw (ppl)"],
+        &ppl_rows,
+    );
+    let fs_tbl = md_table(
+        &[
+            "config", "mnli", "mrpc", "rte", "qnli", "sst", "wnli", "arc_easy",
+            "arc_chal", "hellaswag", "lambada", "avg",
+        ],
+        &fs_rows,
+    );
+    emit_report(
+        &ctx.runs,
+        id,
+        title,
+        &format!("### Perplexity\n\n{ppl_tbl}\n### Few-shot accuracy (%)\n\n{fs_tbl}"),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// individual experiments
+// ---------------------------------------------------------------------------
+
+fn fig2(ctx: &Ctx) -> Result<()> {
+    let csv = crate::memmodel::fig2_table(
+        &["small", "medium", "large"],
+        &[4, 8, 16, 32, 64],
+        1024,
+    );
+    std::fs::create_dir_all(ctx.runs.join("reports"))?;
+    std::fs::write(ctx.runs.join("reports/fig2.csv"), &csv)?;
+    let rows: Vec<Vec<String>> = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(String::from).collect())
+        .collect();
+    let body = md_table(
+        &["model", "batch", "peak GB", "params", "grads", "optim", "acts", "logits", "peak phase"],
+        &rows,
+    );
+    emit_report(&ctx.runs, "fig2", "Fig 2/14: peak-memory composition vs batch (ctx 1024)", &body)
+}
+
+fn fig15(ctx: &Ctx) -> Result<()> {
+    let csv = crate::memmodel::fig15_table(
+        &["small", "medium", "large"],
+        &[128, 256, 512, 1024, 2048],
+        4,
+    );
+    std::fs::write(ctx.runs.join("reports/fig15.csv"), &csv).ok();
+    let rows: Vec<Vec<String>> = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(String::from).collect())
+        .collect();
+    let body = md_table(
+        &["model", "seq", "peak GB", "params", "grads", "optim", "acts", "logits", "peak phase"],
+        &rows,
+    );
+    emit_report(&ctx.runs, "fig15", "Fig 15: peak-memory composition vs seq (batch 4)", &body)
+}
+
+fn fig3(ctx: &Ctx) -> Result<()> {
+    let rows = crate::timemodel::fig3_rows(&ctx.rt, 3)?;
+    let csv = crate::timemodel::rows_to_csv(&rows);
+    std::fs::create_dir_all(ctx.runs.join("reports"))?;
+    std::fs::write(ctx.runs.join("reports/fig3.csv"), &csv)?;
+    let t_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.size.clone(),
+                r.seq.to_string(),
+                format!("{:.2}", r.linear_ms),
+                format!("{:.2}", r.attn_ms),
+                format!("{:.1}%", 100.0 * r.measured_frac),
+                format!("{:.1}%", 100.0 * r.analytic_frac),
+            ]
+        })
+        .collect();
+    let body = md_table(
+        &["model", "seq", "linear ms", "attn ms", "linear share (measured)", "linear share (analytic)"],
+        &t_rows,
+    );
+    emit_report(&ctx.runs, "fig3", "Fig 3: linear-layer share of block fwd+bwd time", &body)
+}
+
+fn fig4(ctx: &Ctx) -> Result<()> {
+    train_and_report(ctx, "fig4", "Fig 4: weight quantization during pre-training", &weight_sweep(ctx))?;
+    Ok(())
+}
+
+fn fig5(ctx: &Ctx) -> Result<()> {
+    // sharpness of baseline vs weight-quantized checkpoints
+    let configs = vec![
+        ctx.baseline_cfg(),
+        ctx.cfg("w_pt", wbits(4)),
+        ctx.cfg("w_pc", wbits(4)),
+        ctx.cfg("w_pt", wbits(8)),
+    ];
+    let runs = ensure_runs(&ctx.rt, &ctx.runs, &configs, ctx.jobs)?;
+    let model = ctx.rt.manifest.model("t4")?.clone();
+    let radii = [1e-3, 3e-3, 1e-2, 3e-2, 0.1];
+
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for (cfg, r) in configs.iter().zip(&runs) {
+        let state = r.checkpoint(&ctx.rt)?;
+        let q = EvalQuant {
+            qmax_w: cfg.quant.bits.qmax_scalars()[0],
+            qmax_a: cfg.quant.bits.qmax_scalars()[1],
+        };
+        let c = crate::analysis::m_sharpness(
+            &ctx.rt, &cfg.eval_artifact(), &model, &state, &radii, 4, 2, q,
+        )?;
+        let mut row = vec![r.label.clone(), fmt_f(c.base_loss, 4)];
+        for s in &c.sharpness {
+            row.push(format!("{s:.4}"));
+        }
+        rows.push(row);
+        curves.push((r.label.clone(), c));
+    }
+    let mut headers = vec!["config".to_string(), "base loss".to_string()];
+    headers.extend(radii.iter().map(|r| format!("rho={r}")));
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let tbl = md_table(&href, &rows);
+
+    // loss surfaces for baseline vs w4_pt
+    let mut surf_note = String::new();
+    for (cfg, r) in configs.iter().zip(&runs).take(2) {
+        let state = r.checkpoint(&ctx.rt)?;
+        let q = EvalQuant {
+            qmax_w: cfg.quant.bits.qmax_scalars()[0],
+            qmax_a: cfg.quant.bits.qmax_scalars()[1],
+        };
+        let surf = crate::analysis::loss_surface(
+            &ctx.rt, &cfg.eval_artifact(), &model, &state, 0.5, 9, 1, q,
+        )?;
+        let path = ctx.runs.join(format!("reports/fig5_surface_{}.csv", r.label));
+        std::fs::create_dir_all(ctx.runs.join("reports"))?;
+        std::fs::write(&path, surf.to_csv())?;
+        // curvature proxy: mean rim loss - center loss
+        let center = surf.loss[4][4];
+        let rim: f64 = surf.loss.iter().flat_map(|r| r.iter()).sum::<f64>()
+            / 81.0;
+        surf_note.push_str(&format!(
+            "- {}: center loss {:.4}, mean grid loss {:.4} (bowl depth {:.4}) -> {}\n",
+            r.label,
+            center,
+            rim,
+            rim - center,
+            path.display()
+        ));
+    }
+    emit_report(
+        &ctx.runs,
+        "fig5",
+        "Fig 5: m-sharpness + loss surfaces (baseline vs 4-bit weights)",
+        &format!("### m-sharpness (max loss increase)\n\n{tbl}\n### Loss surfaces\n\n{surf_note}"),
+    )
+}
+
+fn fig6(ctx: &Ctx) -> Result<()> {
+    // baseline training with periodic activation probes
+    let mut cfg = ctx.baseline_cfg();
+    cfg.hp.probe_every = (ctx.steps / 12).max(1);
+    let runs = ensure_runs(&ctx.rt, &ctx.runs, &[cfg], ctx.jobs)?;
+    let dir = &runs[0].dir;
+    let text = std::fs::read_to_string(dir.join("act_outliers.csv"))?;
+    let snaps: Vec<(usize, Vec<f32>)> = text
+        .lines()
+        .map(|l| {
+            let mut it = l.split(',');
+            let step: usize = it.next().unwrap().parse().unwrap_or(0);
+            (step, it.map(|x| x.parse().unwrap_or(0.0)).collect())
+        })
+        .collect();
+    if snaps.len() < 2 {
+        bail!("not enough probe snapshots in {dir:?}");
+    }
+    let k = 8;
+    let mut rows = Vec::new();
+    for w in snaps.windows(2) {
+        let o = crate::analysis::topk_overlap(&w[0].1, &w[1].1, k);
+        rows.push(vec![
+            format!("{} -> {}", w[0].0, w[1].0),
+            format!("{o:.2}"),
+        ]);
+    }
+    let first_last =
+        crate::analysis::topk_overlap(&snaps[0].1, &snaps.last().unwrap().1, k);
+    rows.push(vec![
+        format!("{} -> {} (first vs last)", snaps[0].0, snaps.last().unwrap().0),
+        format!("{first_last:.2}"),
+    ]);
+    let tbl = md_table(&["snapshot pair", &format!("top-{k} channel overlap")], &rows);
+    emit_report(
+        &ctx.runs,
+        "fig6",
+        "Fig 6: persistence of activation outlier channels over training",
+        &format!("{tbl}\nraw channel abs-max history: {}\n", dir.join("act_outliers.csv").display()),
+    )
+}
+
+fn fig7(ctx: &Ctx) -> Result<()> {
+    train_and_report(ctx, "fig7", "Fig 7: activation quantization during pre-training", &act_sweep(ctx))?;
+    Ok(())
+}
+
+fn fig8(ctx: &Ctx) -> Result<()> {
+    let configs = vec![ctx.baseline_cfg(), ctx.cfg("a_pc", abits(4))];
+    let runs = train_and_report(ctx, "fig8", "Fig 8: 4-bit per-channel activation quantization", &configs)?;
+    // massive activation outliers in FC2 input at the end of training
+    let model = ctx.rt.manifest.model("t4")?.clone();
+    let state = runs[0].checkpoint(&ctx.rt)?;
+    let params = state.param_literals(&model)?;
+    let stats = crate::analysis::activation_stats(&ctx.rt, &model, &params)?;
+    let mean_ch = crate::util::stats::summarize(&stats.fc2_in_channel_max).mean;
+    let note = format!(
+        "FC2-input massive outliers (baseline final ckpt): abs-max {:.2}, p99.9 {:.2}, \
+         mean channel max {:.3}, max/mean ratio {:.1}x, kurtosis(proj_in) {:.1}\n",
+        stats.fc2_in_max,
+        stats.fc2_in_p999,
+        mean_ch,
+        stats.fc2_in_max as f64 / mean_ch.max(1e-9),
+        stats.proj_in_kurtosis,
+    );
+    emit_report(&ctx.runs, "fig8_outliers", "Fig 8 (right): massive activations", &note)
+}
+
+fn fig9(ctx: &Ctx) -> Result<()> {
+    train_and_report(ctx, "fig9", "Fig 9: gradient quantization during pre-training", &grad_sweep(ctx))?;
+    Ok(())
+}
+
+fn fig10(ctx: &Ctx) -> Result<()> {
+    let configs = vec![
+        ctx.cfg("g_ptok", gbits(8)),
+        ctx.cfg("g_ptok_actgrad", gbits(8)),
+    ];
+    let runs = train_and_report(
+        ctx,
+        "fig10",
+        "Fig 10: activation-gradient quantization instability",
+        &configs,
+    )?;
+    // gradient histogram + sparsity + quantization error (baseline weights)
+    let base = ensure_runs(&ctx.rt, &ctx.runs, &[ctx.baseline_cfg()], ctx.jobs)?;
+    let model = ctx.rt.manifest.model("t4")?.clone();
+    let state = base[0].checkpoint(&ctx.rt)?;
+    let params = state.param_literals(&model)?;
+    let schemes = vec![
+        ("int8 per-token".to_string(), Scheme::new(8, Granularity::PerToken)),
+        ("int8 per-tensor".to_string(), Scheme::new(8, Granularity::PerTensor)),
+        ("int4 per-token".to_string(), Scheme::new(4, Granularity::PerToken)),
+        ("int4 per-tensor".to_string(), Scheme::new(4, Granularity::PerTensor)),
+    ];
+    let g = crate::analysis::gradient_stats(&ctx.rt, &model, &params, &schemes)?;
+    std::fs::write(
+        ctx.runs.join("reports/fig10_grad_hist.csv"),
+        g.weight_grad_hist.to_csv(),
+    )?;
+    let mut rows: Vec<Vec<String>> = g
+        .quant_rel_err
+        .iter()
+        .map(|(n, e)| vec![n.clone(), format!("{e:.4}")])
+        .collect();
+    rows.push(vec!["weight-grad sparsity (|g|<1e-3 max)".into(), format!("{:.3}", g.weight_grad_sparsity)]);
+    rows.push(vec!["act-grad sparsity".into(), format!("{:.3}", g.act_grad_sparsity)]);
+    let spikes: Vec<String> = runs.iter().map(|r| format!("{}: {} spikes, diverged={}", r.label, r.steps, r.diverged)).collect();
+    let tbl = md_table(&["metric", "value"], &rows);
+    emit_report(
+        &ctx.runs,
+        "fig10_stats",
+        "Fig 10 (down): gradient sparsity and quantization error",
+        &format!("{tbl}\n{}\n", spikes.join("\n")),
+    )
+}
+
+fn fig11(ctx: &Ctx) -> Result<()> {
+    train_and_report(ctx, "fig11", "Fig 11: Adam first-moment quantization", &m1_sweep(ctx))?;
+    Ok(())
+}
+
+fn fig12(ctx: &Ctx) -> Result<()> {
+    let configs = vec![
+        ctx.cfg("m2_pc", m2bits(8)),
+        ctx.cfg("m2_pt", m2bits(8)),
+    ];
+    train_and_report(ctx, "fig12", "Fig 12: Adam second-moment quantization", &configs)?;
+    // zero-bin analysis on healthy (baseline) second moments
+    let base = ensure_runs(&ctx.rt, &ctx.runs, &[ctx.baseline_cfg()], ctx.jobs)?;
+    let model = ctx.rt.manifest.model("t4")?.clone();
+    let state = base[0].checkpoint(&ctx.rt)?;
+    let rep_pc = crate::analysis::m2_zero_bin(&state, &model, Scheme::new(8, Granularity::PerChannel));
+    let rep_pt = crate::analysis::m2_zero_bin(&state, &model, Scheme::new(8, Granularity::PerTensor));
+    std::fs::write(ctx.runs.join("reports/fig12_v_hist.csv"), rep_pc.v_hist.to_csv())?;
+    let mut rows = Vec::new();
+    for ((name, pc), (_, pt)) in rep_pc.per_tensor.iter().zip(&rep_pt.per_tensor) {
+        rows.push(vec![name.clone(), format!("{:.3}", pt), format!("{:.3}", pc)]);
+    }
+    let tbl = md_table(
+        &["tensor", "zero-bin frac (8b per-tensor)", "zero-bin frac (8b per-channel)"],
+        &rows,
+    );
+    emit_report(
+        &ctx.runs,
+        "fig12_zerobin",
+        "Fig 12 (down): second-moment zero-bin collapse",
+        &tbl,
+    )
+}
+
+fn fig13(ctx: &Ctx) -> Result<()> {
+    let configs = vec![
+        ctx.baseline_cfg(),
+        ctx.cfg("wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
+        ctx.cfg("wag", BitWidths { weights: 8, acts: 8, grads: 8, ..BitWidths::none() }),
+    ];
+    train_and_report(ctx, "fig13", "Fig 13: combined W/A/G 8-bit quantization", &configs)?;
+    Ok(())
+}
+
+fn tab1(ctx: &Ctx) -> Result<()> {
+    let short = ctx.baseline_cfg();
+    let mut long = ctx.baseline_cfg();
+    long.hp.steps = ctx.steps * 2;
+    let runs = ensure_runs(&ctx.rt, &ctx.runs, &[short.clone(), long.clone()], ctx.jobs)?;
+    let model = ctx.rt.manifest.model("t4")?.clone();
+    let mut rows = Vec::new();
+    for (cfg, r) in [short, long].iter().zip(&runs) {
+        let state = r.checkpoint(&ctx.rt)?;
+        let params = state.param_literals(&model)?;
+        let ppl = perplexity_suite(
+            &ctx.rt, &cfg.eval_artifact(), &model, &params, ctx.eval_batches,
+            EvalQuant::none(),
+        )?;
+        rows.push(
+            std::iter::once(format!("{} steps", cfg.hp.steps))
+                .chain(
+                    ["synthwiki103", "synthwiki2", "synthptb", "synth1bw"]
+                        .iter()
+                        .map(|s| fmt_ppl(*ppl.get(*s).unwrap_or(&f64::NAN), false)),
+                )
+                .collect(),
+        );
+    }
+    let tbl = md_table(
+        &["model", "synthwiki103", "synthwiki2", "synthptb", "synth1bw"],
+        &rows,
+    );
+    emit_report(&ctx.runs, "tab1", "Table 1: baseline vs longer-pretrained model", &tbl)
+}
+
+fn tab10(ctx: &Ctx) -> Result<()> {
+    let base = ensure_runs(&ctx.rt, &ctx.runs, &[ctx.baseline_cfg()], ctx.jobs)?;
+    let model = ctx.rt.manifest.model("t4")?.clone();
+    let state = base[0].checkpoint(&ctx.rt)?;
+    let mut rows = Vec::new();
+    for bits in [4u32, 8] {
+        for gran in [Granularity::PerTensor, Granularity::PerChannel] {
+            let ppl = crate::ptq::ptq_weights_ppl(&ctx.rt, &model, &state, bits, gran, ctx.eval_batches)?;
+            rows.push(
+                std::iter::once(format!("{bits}-bit {}", gran.as_str()))
+                    .chain(
+                        ["synthwiki103", "synthwiki2", "synthptb", "synth1bw"]
+                            .iter()
+                            .map(|s| fmt_ppl(*ppl.get(*s).unwrap_or(&f64::NAN), false)),
+                    )
+                    .collect(),
+            );
+        }
+    }
+    let tbl = md_table(
+        &["PTQ weights", "synthwiki103", "synthwiki2", "synthptb", "synth1bw"],
+        &rows,
+    );
+    emit_report(&ctx.runs, "tab10", "Table 10: post-training weight quantization", &tbl)
+}
+
+fn tab11(ctx: &Ctx) -> Result<()> {
+    let base = ensure_runs(&ctx.rt, &ctx.runs, &[ctx.baseline_cfg()], ctx.jobs)?;
+    let model = ctx.rt.manifest.model("t4")?.clone();
+    let state = base[0].checkpoint(&ctx.rt)?;
+    let mut rows = Vec::new();
+    for bits in [4u32, 8] {
+        for gran in [Granularity::PerTensor, Granularity::PerToken] {
+            let ppl = crate::ptq::ptq_acts_ppl(&ctx.rt, &model, &state, bits, gran, ctx.eval_batches)?;
+            rows.push(
+                std::iter::once(format!("{bits}-bit {}", gran.as_str()))
+                    .chain(
+                        ["synthwiki103", "synthwiki2", "synthptb", "synth1bw"]
+                            .iter()
+                            .map(|s| fmt_ppl(*ppl.get(*s).unwrap_or(&f64::NAN), false)),
+                    )
+                    .collect(),
+            );
+        }
+    }
+    let tbl = md_table(
+        &["PTQ activations", "synthwiki103", "synthwiki2", "synthptb", "synth1bw"],
+        &rows,
+    );
+    emit_report(&ctx.runs, "tab11", "Table 11: post-training activation quantization", &tbl)
+}
+
+/// Extension ablation: bit-width sweep on the recommended per-channel weight
+/// scheme (one artifact, qmax runtime scalar).
+fn abl_bits(ctx: &Ctx) -> Result<()> {
+    let mut configs = vec![ctx.baseline_cfg()];
+    for bits in [2u32, 3, 4, 6, 8] {
+        configs.push(ctx.cfg("w_pc", wbits(bits)));
+    }
+    let runs = ensure_runs(&ctx.rt, &ctx.runs, &configs, ctx.jobs)?;
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                fmt_f(r.final_val_loss, 4),
+                if r.diverged { "yes".into() } else { "no".into() },
+            ]
+        })
+        .collect();
+    let tbl = md_table(&["config", "final val loss", "diverged"], &rows);
+    emit_report(
+        &ctx.runs,
+        "abl_bits",
+        "Ablation: weight bit-width sweep (per-channel, runtime qmax)",
+        &tbl,
+    )
+}
+
+/// Lookup the baseline run directory (for CLI subcommands that need a ckpt).
+pub fn baseline_dir(ctx: &Ctx) -> PathBuf {
+    run_dir(&ctx.runs, "t4", &QuantRunCfg::baseline(), &ctx.hp())
+}
+
+/// Eval structure name shared with train::eval_structure_for (re-export).
+pub fn eval_structure(s: &str) -> &'static str {
+    eval_structure_for(s)
+}
+
+/// Summaries of every cached run (for `qpretrain report`).
+pub fn all_summaries(runs: &PathBuf) -> Vec<RunSummary> {
+    let mut out = Vec::new();
+    let Ok(models) = std::fs::read_dir(runs.join("train")) else {
+        return out;
+    };
+    for m in models.flatten() {
+        if let Ok(entries) = std::fs::read_dir(m.path()) {
+            for e in entries.flatten() {
+                if let Ok(s) = RunSummary::load(&e.path()) {
+                    out.push(s);
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| a.label.cmp(&b.label));
+    out
+}
+
+/// Aggregate per-experiment report files into one markdown document.
+pub fn combined_report(runs: &PathBuf) -> Result<String> {
+    let mut out = String::from("# qpretrain experiment reports\n\n");
+    let dir = runs.join("reports");
+    let mut files: Vec<_> = std::fs::read_dir(&dir)?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "md").unwrap_or(false))
+        .collect();
+    files.sort();
+    for f in files {
+        out.push_str(&std::fs::read_to_string(&f)?);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweeps_use_known_structures() {
+        // every sweep structure must exist in the AOT structure list
+        let known = [
+            "base", "w_pt", "w_pc", "a_pt", "a_ptok", "a_ptok_asym", "a_pc", "g_pt",
+            "g_ptok", "g_ptok_actgrad", "m1_pt", "m1_pc", "m2_pt", "m2_pc", "wa",
+            "wag", "w_pc_pallas",
+        ];
+        let ctx_structures = [
+            "base", "w_pt", "w_pc", "a_pt", "a_ptok", "a_ptok_asym", "g_pt", "g_ptok",
+            "g_ptok_actgrad", "m1_pt", "m1_pc", "m2_pt", "m2_pc", "wa", "wag", "a_pc",
+        ];
+        for s in ctx_structures {
+            assert!(known.contains(&s), "{s} not a known artifact structure");
+        }
+    }
+
+    #[test]
+    fn all_experiment_ids_unique() {
+        let mut ids = ALL.to_vec();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), ALL.len());
+    }
+}

@@ -1,0 +1,333 @@
+//! L3 coordinator: experiment registry (one entry per paper table/figure),
+//! a disk-backed run cache, and a parallel sweep runner.
+//!
+//! Every training run is identified by a deterministic directory name under
+//! `runs/train/...`; completed runs leave a `result.json` + `metrics.jsonl`
+//! (+ checkpoint) and are never re-trained. Sweeps with `--jobs N > 1` spawn
+//! `qpretrain train ...` worker subprocesses (the PJRT client is not shared
+//! across threads; process isolation also mirrors the paper's independent
+//! training runs).
+
+pub mod experiments;
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{QuantRunCfg, TrainHp};
+use crate::model::{load_checkpoint, HostState};
+use crate::runtime::Runtime;
+use crate::train::{train, TrainCfg, TrainResult};
+use crate::util::json::{self, Value};
+
+/// Deterministic run directory for a training configuration.
+pub fn run_dir(runs: &Path, model: &str, quant: &QuantRunCfg, hp: &TrainHp) -> PathBuf {
+    // probe_every changes what the run leaves on disk (act_outliers.csv),
+    // so probed runs get their own cache entry.
+    let probe = if hp.probe_every > 0 {
+        format!("_probe{}", hp.probe_every)
+    } else {
+        String::new()
+    };
+    runs.join("train").join(model).join(format!(
+        "{}_s{}_seed{}{}",
+        quant.label(),
+        hp.steps,
+        hp.seed,
+        probe
+    ))
+}
+
+/// Summary persisted as `result.json` in each run directory.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub label: String,
+    pub model: String,
+    pub structure: String,
+    pub steps: usize,
+    pub diverged: bool,
+    pub diverged_at: Option<usize>,
+    pub final_loss: f64,
+    pub final_val_loss: f64,
+    pub min_val_loss: f64,
+    pub steps_per_sec: f64,
+    pub dir: PathBuf,
+}
+
+impl RunSummary {
+    pub fn from_result(cfg: &TrainCfg, r: &TrainResult, dir: &Path) -> RunSummary {
+        RunSummary {
+            label: r.label.clone(),
+            model: cfg.model.clone(),
+            structure: cfg.quant.structure.clone(),
+            steps: r.losses.len(),
+            diverged: r.diverged,
+            diverged_at: r.diverged_at,
+            final_loss: r.final_loss(),
+            final_val_loss: r.final_val_loss(),
+            min_val_loss: r.min_val_loss(),
+            steps_per_sec: r.steps_per_sec,
+            dir: dir.to_path_buf(),
+        }
+    }
+
+    pub fn save(&self) -> Result<()> {
+        let v = json::obj(vec![
+            ("label", json::s(&self.label)),
+            ("model", json::s(&self.model)),
+            ("structure", json::s(&self.structure)),
+            ("steps", json::num(self.steps as f64)),
+            ("diverged", Value::Bool(self.diverged)),
+            (
+                "diverged_at",
+                self.diverged_at
+                    .map(|s| json::num(s as f64))
+                    .unwrap_or(Value::Null),
+            ),
+            ("final_loss", json::num(self.final_loss)),
+            ("final_val_loss", json::num(self.final_val_loss)),
+            ("min_val_loss", json::num(self.min_val_loss)),
+            ("steps_per_sec", json::num(self.steps_per_sec)),
+        ]);
+        std::fs::create_dir_all(&self.dir)?;
+        std::fs::write(self.dir.join("result.json"), v.to_json())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<RunSummary> {
+        let text = std::fs::read_to_string(dir.join("result.json"))
+            .with_context(|| format!("no result.json in {dir:?}"))?;
+        let v = json::parse(&text)?;
+        let f = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
+        Ok(RunSummary {
+            label: v.req("label")?.as_str().unwrap_or("").to_string(),
+            model: v.req("model")?.as_str().unwrap_or("").to_string(),
+            structure: v.req("structure")?.as_str().unwrap_or("").to_string(),
+            steps: f("steps") as usize,
+            diverged: v.get("diverged").and_then(|x| x.as_bool()).unwrap_or(false),
+            diverged_at: v
+                .get("diverged_at")
+                .and_then(|x| x.as_f64())
+                .map(|x| x as usize),
+            final_loss: f("final_loss"),
+            final_val_loss: f("final_val_loss"),
+            min_val_loss: f("min_val_loss"),
+            steps_per_sec: f("steps_per_sec"),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Parse the run's metrics.jsonl (step/loss/gnorm/val rows).
+    pub fn metrics(&self) -> Result<Vec<Value>> {
+        let text = std::fs::read_to_string(self.dir.join("metrics.jsonl"))?;
+        json::parse_jsonl(&text)
+    }
+
+    /// Validation-loss curve (step, val_loss).
+    pub fn val_curve(&self) -> Result<Vec<(usize, f64)>> {
+        Ok(self
+            .metrics()?
+            .iter()
+            .filter_map(|r| {
+                let v = r.get("val_loss")?.as_f64()?;
+                let s = r.get("step")?.as_usize()?;
+                Some((s, v))
+            })
+            .collect())
+    }
+
+    pub fn checkpoint(&self, rt: &Runtime) -> Result<HostState> {
+        let model = rt.manifest.model(&self.model)?;
+        load_checkpoint(&self.dir.join("final.ckpt"), model)
+    }
+}
+
+/// Execute a single training config, writing run artifacts; returns summary.
+pub fn execute_run(rt: &Runtime, mut cfg: TrainCfg, dir: &Path) -> Result<RunSummary> {
+    cfg.out_dir = Some(dir.to_path_buf());
+    cfg.save_ckpt = true;
+    let r = train(rt, &cfg)?;
+    let summary = RunSummary::from_result(&cfg, &r, dir);
+    summary.save()?;
+    // loss curve CSV for plotting
+    let mut f = std::fs::File::create(dir.join("loss_curve.csv"))?;
+    writeln!(f, "step,loss,gnorm")?;
+    for (i, (l, g)) in r.losses.iter().zip(&r.gnorms).enumerate() {
+        writeln!(f, "{},{},{}", i + 1, l, g)?;
+    }
+    Ok(summary)
+}
+
+/// Ensure all configs have completed runs; spawn up to `jobs` worker
+/// subprocesses for missing ones (in-process when jobs <= 1).
+pub fn ensure_runs(
+    rt: &Runtime,
+    runs: &Path,
+    configs: &[TrainCfg],
+    jobs: usize,
+) -> Result<Vec<RunSummary>> {
+    let mut missing: Vec<(usize, PathBuf)> = Vec::new();
+    let mut dirs = Vec::with_capacity(configs.len());
+    for (i, cfg) in configs.iter().enumerate() {
+        let dir = run_dir(runs, &cfg.model, &cfg.quant, &cfg.hp);
+        if !dir.join("result.json").exists() {
+            missing.push((i, dir.clone()));
+        }
+        dirs.push(dir);
+    }
+
+    if jobs <= 1 {
+        for (i, dir) in &missing {
+            let cfg = &configs[*i];
+            log::info!("training {} ({})", cfg.quant.label(), cfg.model);
+            println!("[train] {} ({} steps)", cfg.quant.label(), cfg.hp.steps);
+            execute_run(rt, cfg.clone(), dir)?;
+        }
+    } else {
+        for wave in missing.chunks(jobs) {
+            let mut children = Vec::new();
+            for (i, dir) in wave {
+                let cfg = &configs[*i];
+                println!("[spawn] {} ({} steps)", cfg.quant.label(), cfg.hp.steps);
+                let exe = std::env::current_exe()?;
+                let b = &cfg.quant.bits;
+                let child = Command::new(exe)
+                    .args([
+                        "train",
+                        "--model",
+                        &cfg.model,
+                        "--structure",
+                        &cfg.quant.structure,
+                        "--wbits",
+                        &b.weights.to_string(),
+                        "--abits",
+                        &b.acts.to_string(),
+                        "--gbits",
+                        &b.grads.to_string(),
+                        "--m1bits",
+                        &b.m1.to_string(),
+                        "--m2bits",
+                        &b.m2.to_string(),
+                        "--steps",
+                        &cfg.hp.steps.to_string(),
+                        "--seed",
+                        &cfg.hp.seed.to_string(),
+                        "--probe-every",
+                        &cfg.hp.probe_every.to_string(),
+                        "--out",
+                        dir.to_str().unwrap(),
+                        "--quiet",
+                    ])
+                    .spawn()
+                    .with_context(|| "spawning worker")?;
+                children.push((cfg.quant.label(), child));
+            }
+            for (label, mut child) in children {
+                let status = child.wait()?;
+                if !status.success() {
+                    bail!("worker for {label} failed: {status}");
+                }
+            }
+        }
+    }
+
+    dirs.iter().map(|d| RunSummary::load(d)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// report rendering
+// ---------------------------------------------------------------------------
+
+/// Render a markdown table.
+pub fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("| {} |\n", headers.join(" | ")));
+    out.push_str(&format!(
+        "|{}\n",
+        headers.iter().map(|_| "---|").collect::<String>()
+    ));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
+/// Print a report section and append it to `runs/reports/<id>.md`.
+pub fn emit_report(runs: &Path, id: &str, title: &str, body: &str) -> Result<()> {
+    println!("\n## {title}\n\n{body}");
+    let dir = runs.join("reports");
+    std::fs::create_dir_all(&dir)?;
+    let mut f = std::fs::File::create(dir.join(format!("{id}.md")))?;
+    writeln!(f, "# {title}\n\n{body}")?;
+    Ok(())
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    if x.is_nan() {
+        "diverged".to_string()
+    } else {
+        format!("{x:.prec$}")
+    }
+}
+
+/// "ppl or DIV" formatting used across the perplexity tables.
+pub fn fmt_ppl(x: f64, diverged: bool) -> String {
+    if diverged || !x.is_finite() || x > 1e6 {
+        "div".to_string()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn md_table_renders() {
+        let t = md_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["x".into(), "y".into()]],
+        );
+        assert!(t.contains("| a | b |"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn run_dir_is_deterministic() {
+        let hp = TrainHp::default();
+        let q = QuantRunCfg::baseline();
+        let a = run_dir(Path::new("runs"), "t4", &q, &hp);
+        let b = run_dir(Path::new("runs"), "t4", &q, &hp);
+        assert_eq!(a, b);
+        assert!(a.to_str().unwrap().contains("baseline_s300"));
+    }
+
+    #[test]
+    fn summary_roundtrip() {
+        let dir = std::env::temp_dir().join("qpretrain_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = RunSummary {
+            label: "w4_pc".into(),
+            model: "t4".into(),
+            structure: "w_pc".into(),
+            steps: 100,
+            diverged: true,
+            diverged_at: Some(42),
+            final_loss: 3.5,
+            final_val_loss: 3.6,
+            min_val_loss: 3.4,
+            steps_per_sec: 2.0,
+            dir: dir.clone(),
+        };
+        s.save().unwrap();
+        let l = RunSummary::load(&dir).unwrap();
+        assert_eq!(l.label, "w4_pc");
+        assert!(l.diverged);
+        assert_eq!(l.diverged_at, Some(42));
+        assert!((l.final_loss - 3.5).abs() < 1e-9);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,206 @@
+//! Evaluation harness: perplexity over the four synthetic corpora
+//! (Tables 2-5, 10, 11 columns) and the few-shot downstream suite
+//! (Tables 6-9 columns), scored via the eval artifacts' per-position NLL.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::data::corpus::{BatchIter, CorpusCfg};
+use crate::data::fewshot::{paper_average, Episode, Task, TaskGen, ALL_TASKS};
+use crate::data::eval_sets;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, scalar_f32, to_f32, ModelInfo, Runtime};
+
+/// Quantization knobs applied at eval time (forward pass only).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalQuant {
+    pub qmax_w: f32,
+    pub qmax_a: f32,
+}
+
+impl EvalQuant {
+    pub fn none() -> EvalQuant {
+        EvalQuant {
+            qmax_w: 1.0,
+            qmax_a: 1.0,
+        }
+    }
+}
+
+/// Mean NLL of `params` on `n_batches` of the given corpus.
+pub fn corpus_nll(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    params: &[xla::Literal],
+    corpus: &CorpusCfg,
+    n_batches: usize,
+    q: EvalQuant,
+) -> Result<f64> {
+    let exe = rt.exec(eval_artifact)?;
+    let mut it = BatchIter::new(corpus.clone(), model.batch, model.seq);
+    let mask_data = vec![1.0f32; model.batch * model.seq];
+    let mask = lit_f32(&mask_data, &[model.batch, model.seq])?;
+    let qw = lit_scalar(q.qmax_w);
+    let qa = lit_scalar(q.qmax_a);
+    let mut total = 0.0;
+    for _ in 0..n_batches {
+        let b = it.next_batch();
+        let x = lit_i32(&b.x, &[b.batch, b.seq])?;
+        let y = lit_i32(&b.y, &[b.batch, b.seq])?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.extend([&x, &y, &mask, &qw, &qa]);
+        let out = exe.run(&inputs)?;
+        total += scalar_f32(&out[0])? as f64;
+    }
+    Ok(total / n_batches as f64)
+}
+
+/// Perplexity on all four eval sets; returns (set name -> ppl).
+pub fn perplexity_suite(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    params: &[xla::Literal],
+    n_batches: usize,
+    q: EvalQuant,
+) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for (name, cfg) in eval_sets(model.vocab) {
+        let nll = corpus_nll(rt, eval_artifact, model, params, &cfg, n_batches, q)?;
+        out.insert(name.to_string(), nll.exp());
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// few-shot scoring
+// ---------------------------------------------------------------------------
+
+/// Score one batch worth of (sequence, scored-region) rows and return the
+/// summed NLL over each row's scored region.
+fn score_rows(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    params: &[xla::Literal],
+    rows: &[(Vec<i32>, std::ops::Range<usize>)],
+    q: EvalQuant,
+) -> Result<Vec<f64>> {
+    let exe = rt.exec(eval_artifact)?;
+    let (bsz, seq) = (model.batch, model.seq);
+    let mut scores = Vec::with_capacity(rows.len());
+    let mask_data = vec![1.0f32; bsz * seq];
+    let mask = lit_f32(&mask_data, &[bsz, seq])?;
+    let qw = lit_scalar(q.qmax_w);
+    let qa = lit_scalar(q.qmax_a);
+
+    for chunk in rows.chunks(bsz) {
+        let mut x = vec![0i32; bsz * seq];
+        let mut y = vec![0i32; bsz * seq];
+        for (r, (tokens, _)) in chunk.iter().enumerate() {
+            if tokens.len() > seq + 1 {
+                bail!("episode length {} exceeds model seq {}", tokens.len(), seq);
+            }
+            for (t, &tok) in tokens.iter().take(seq).enumerate() {
+                x[r * seq + t] = tok;
+            }
+            for (t, &tok) in tokens.iter().skip(1).take(seq).enumerate() {
+                y[r * seq + t] = tok;
+            }
+        }
+        let xl = lit_i32(&x, &[bsz, seq])?;
+        let yl = lit_i32(&y, &[bsz, seq])?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.extend([&xl, &yl, &mask, &qw, &qa]);
+        let out = exe.run(&inputs)?;
+        let per_pos = to_f32(&out[1])?;
+        for (r, (_, range)) in chunk.iter().enumerate() {
+            let mut s = 0.0f64;
+            for t in range.clone() {
+                s += per_pos[r * seq + t] as f64;
+            }
+            scores.push(s);
+        }
+    }
+    Ok(scores)
+}
+
+/// Accuracy of the model on a set of episodes (argmin candidate NLL).
+pub fn score_episodes(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    params: &[xla::Literal],
+    episodes: &[Episode],
+    q: EvalQuant,
+) -> Result<f64> {
+    // flatten: one row per (episode, candidate)
+    let mut rows = Vec::new();
+    for e in episodes {
+        for cand in &e.candidates {
+            let mut tokens = e.prompt.clone();
+            let start = tokens.len().saturating_sub(1); // predict candidate tokens
+            tokens.extend(cand);
+            let end = (start + cand.len()).min(model.seq);
+            rows.push((tokens, start..end));
+        }
+    }
+    let scores = score_rows(rt, eval_artifact, model, params, &rows, q)?;
+    let mut correct = 0usize;
+    let mut idx = 0usize;
+    for e in episodes {
+        let k = e.candidates.len();
+        let cand_scores = &scores[idx..idx + k];
+        idx += k;
+        // total_cmp: NaN scores (diverged checkpoints) sort last instead of
+        // panicking — diverged models just score at chance level.
+        let best = cand_scores
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if best == e.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / episodes.len() as f64)
+}
+
+/// Full few-shot suite: every task, `n_seeds` seeds, `n_episodes` each.
+/// Returns per-task (mean, sd) plus the paper's aggregate average.
+pub struct FewshotReport {
+    pub per_task: Vec<(Task, f64, f64)>,
+    pub average: f64,
+}
+
+pub fn fewshot_suite(
+    rt: &Runtime,
+    eval_artifact: &str,
+    model: &ModelInfo,
+    params: &[xla::Literal],
+    n_episodes: usize,
+    n_seeds: usize,
+    q: EvalQuant,
+) -> Result<FewshotReport> {
+    let gen = TaskGen::new(CorpusCfg::train_default(model.vocab));
+    let mut per_task = Vec::new();
+    let mut means = Vec::new();
+    for task in ALL_TASKS {
+        let mut accs = Vec::with_capacity(n_seeds);
+        for seed in 0..n_seeds {
+            let eps = gen.episodes(task, n_episodes, 1000 + seed as u64, 5);
+            accs.push(score_episodes(rt, eval_artifact, model, params, &eps, q)?);
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+            / accs.len() as f64;
+        per_task.push((task, mean, var.sqrt()));
+        means.push((task, mean));
+    }
+    Ok(FewshotReport {
+        average: paper_average(&means),
+        per_task,
+    })
+}

@@ -1,0 +1,36 @@
+//! # qpretrain
+//!
+//! Reproduction of *"Exploring Quantization for Efficient Pre-Training of
+//! Transformer Language Models"* (Chitsaz et al., EMNLP 2024 Findings) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the experiment coordinator: synthetic data
+//!   pipeline, training loop over AOT-compiled train steps, evaluation,
+//!   post-training quantization, sharpness / outlier / gradient analyses,
+//!   memory & time profilers, and one experiment runner per paper
+//!   table/figure.
+//! * **L2 (python/compile)** — the GPT-2 compute graph with fake
+//!   quantization injected per the paper's Fig. 1, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas fake-quant kernels.
+//!
+//! Python never runs at training time: `make artifacts` lowers everything
+//! once; this crate loads the HLO text via the PJRT C API (`xla` crate).
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod memmodel;
+pub mod model;
+pub mod ptq;
+pub mod quant;
+pub mod runtime;
+pub mod timemodel;
+pub mod train;
+pub mod util;
+
+/// Repo-relative default artifact directory.
+pub const ARTIFACT_DIR: &str = "artifacts";
+/// Repo-relative default run-output directory.
+pub const RUNS_DIR: &str = "runs";

@@ -1,0 +1,407 @@
+//! qpretrain CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   train        train one configuration (also the worker mode used by the
+//!                parallel sweep runner)
+//!   eval         perplexity + few-shot suite on a checkpoint
+//!   ptq          post-training quantization of a checkpoint
+//!   sharpness    m-sharpness of a checkpoint
+//!   losssurface  2-D loss surface scan of a checkpoint
+//!   memprofile   analytic peak-memory tables (Figs. 2/14/15)
+//!   timeprofile  linear-vs-attention time share (Fig. 3)
+//!   experiment   reproduce a paper table/figure (or `all`)
+//!   report       aggregate all experiment reports
+//!   selftest     runtime validation: L1 kernel artifacts vs rust quant
+//!   list         list artifacts/models/experiments
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use qpretrain::config::{BitWidths, Granularity, QuantRunCfg, Scheme, TrainHp};
+use qpretrain::coordinator::{self, experiments};
+use qpretrain::eval::EvalQuant;
+use qpretrain::model::load_checkpoint;
+use qpretrain::runtime::Runtime;
+use qpretrain::util::cli::Args;
+use qpretrain::util::{artifact_dir, repo_root};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn runs_dir(args: &Args) -> PathBuf {
+    args.get("runs")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| repo_root().join(qpretrain::RUNS_DIR))
+}
+
+fn hp_from(args: &Args) -> Result<TrainHp> {
+    let mut hp = TrainHp {
+        steps: args.usize_or("steps", 300)?,
+        seed: args.u64_or("seed", 1337)?,
+        probe_every: args.usize_or("probe-every", 0)?,
+        ..TrainHp::default()
+    };
+    hp.lr_max = args.f64_or("lr", hp.lr_max)?;
+    hp.lr_min = args.f64_or("lr-min", hp.lr_max / 10.0)?;
+    hp.warmup = args.usize_or("warmup", hp.warmup)?;
+    hp.eval_every = args.usize_or("eval-every", hp.eval_every)?;
+    hp.eval_batches = args.usize_or("eval-batches", hp.eval_batches)?;
+    Ok(hp)
+}
+
+fn quant_from(args: &Args) -> Result<QuantRunCfg> {
+    Ok(QuantRunCfg {
+        structure: args.get_or("structure", "base"),
+        bits: BitWidths {
+            weights: args.usize_or("wbits", 0)? as u32,
+            acts: args.usize_or("abits", 0)? as u32,
+            grads: args.usize_or("gbits", 0)? as u32,
+            m1: args.usize_or("m1bits", 0)? as u32,
+            m2: args.usize_or("m2bits", 0)? as u32,
+        },
+    })
+}
+
+fn ctx_from(args: &Args) -> Result<experiments::Ctx> {
+    Ok(experiments::Ctx {
+        rt: Runtime::new(&artifact_dir())?,
+        runs: runs_dir(args),
+        steps: args.usize_or("steps", 300)?,
+        jobs: args.usize_or("jobs", default_jobs())?,
+        eval_batches: args.usize_or("eval-batches", 8)?,
+        fewshot_episodes: args.usize_or("fewshot-episodes", 24)?,
+        fewshot_seeds: args.usize_or("fewshot-seeds", 3)?,
+    })
+}
+
+fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| (n.get() / 2).clamp(1, 8))
+        .unwrap_or(1)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "ptq" => cmd_ptq(args),
+        "sharpness" => cmd_sharpness(args),
+        "losssurface" => cmd_losssurface(args),
+        "memprofile" => cmd_memprofile(args),
+        "timeprofile" => cmd_timeprofile(args),
+        "experiment" => cmd_experiment(args),
+        "report" => cmd_report(args),
+        "selftest" => cmd_selftest(args),
+        "list" => cmd_list(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `qpretrain help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "qpretrain — quantized pre-training study (EMNLP 2024 Findings reproduction)
+
+USAGE: qpretrain <subcommand> [--options]
+
+  train        --model t4 --structure w_pc --wbits 8 --steps 300 [--out DIR]
+  eval         --ckpt runs/train/t4/baseline_s300_seed1337 [--suite ppl|fewshot|all]
+  ptq          --ckpt DIR --mode weights|acts --bits 8 --gran per_channel
+  sharpness    --ckpt DIR [--radii 0.001,0.01,0.1]
+  losssurface  --ckpt DIR [--grid 9 --extent 0.5]
+  memprofile   [--batches 4,8,16,32,64] (Fig 2/14/15 analytic model)
+  timeprofile  [--reps 5]               (Fig 3 measured on PJRT CPU)
+  experiment   <fig2|fig3|fig4|...|tab10|tab11|abl_bits|all> [--steps N --jobs K]
+  report       aggregate runs/reports/*.md
+  selftest     run L1 kernel artifacts and compare to the rust quant oracle
+  list         artifacts / models / experiments"
+    );
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    let quant = quant_from(args)?;
+    let hp = hp_from(args)?;
+    let model = args.get_or("model", "t4");
+    let mut cfg = qpretrain::train::TrainCfg::new(&model, quant, hp);
+    cfg.stop_on_divergence = !args.flag("no-early-stop");
+
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| coordinator::run_dir(&runs_dir(args), &model, &cfg.quant, &cfg.hp));
+    let summary = coordinator::execute_run(&rt, cfg.clone(), &out)?;
+    if !args.flag("quiet") {
+        println!(
+            "{}: final loss {:.4}, val {:.4}, diverged={}, {:.2} steps/s -> {}",
+            summary.label,
+            summary.final_loss,
+            summary.final_val_loss,
+            summary.diverged,
+            summary.steps_per_sec,
+            out.display()
+        );
+    }
+    Ok(())
+}
+
+fn open_ckpt(args: &Args, rt: &Runtime) -> Result<(qpretrain::runtime::ModelInfo, qpretrain::model::HostState, String)> {
+    let dir = PathBuf::from(args.req("ckpt")?);
+    let path = if dir.is_dir() { dir.join("final.ckpt") } else { dir.clone() };
+    // infer model + eval structure from result.json when present
+    let (model_name, structure) = match coordinator::RunSummary::load(dir.parent().map(|_| dir.as_path()).unwrap_or(&dir)) {
+        Ok(s) => (s.model, s.structure),
+        Err(_) => (args.get_or("model", "t4"), args.get_or("structure", "base")),
+    };
+    let model = rt.manifest.model(&model_name)?.clone();
+    let state = load_checkpoint(&path, &model)?;
+    let eval_art = format!("{}/eval/{}", model_name, experiments::eval_structure(&structure));
+    Ok((model, state, eval_art))
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    let (model, state, eval_art) = open_ckpt(args, &rt)?;
+    let params = state.param_literals(&model)?;
+    let q = EvalQuant {
+        qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
+        qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
+    };
+    let suite = args.get_or("suite", "all");
+    if suite == "ppl" || suite == "all" {
+        let ppl = qpretrain::eval::perplexity_suite(
+            &rt, &eval_art, &model, &params, args.usize_or("eval-batches", 8)?, q,
+        )?;
+        for (k, v) in &ppl {
+            println!("{k}: ppl {v:.2}");
+        }
+    }
+    if suite == "fewshot" || suite == "all" {
+        let fs = qpretrain::eval::fewshot_suite(
+            &rt, &eval_art, &model, &params,
+            args.usize_or("fewshot-episodes", 24)?,
+            args.usize_or("fewshot-seeds", 3)?, q,
+        )?;
+        for (t, mean, sd) in &fs.per_task {
+            println!("{}: {:.1}% ± {:.1}", t.name(), 100.0 * mean, 100.0 * sd);
+        }
+        println!("paper-average: {:.2}%", 100.0 * fs.average);
+    }
+    Ok(())
+}
+
+fn cmd_ptq(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    let (model, state, _) = open_ckpt(args, &rt)?;
+    let bits = args.usize_or("bits", 8)? as u32;
+    let gran = Granularity::parse(&args.get_or("gran", "per_channel"))?;
+    let n_batches = args.usize_or("eval-batches", 8)?;
+    let mode = args.get_or("mode", "weights");
+    let ppl = match mode.as_str() {
+        "weights" => qpretrain::ptq::ptq_weights_ppl(&rt, &model, &state, bits, gran, n_batches)?,
+        "acts" => qpretrain::ptq::ptq_acts_ppl(&rt, &model, &state, bits, gran, n_batches)?,
+        other => bail!("unknown --mode {other:?} (weights|acts)"),
+    };
+    println!("PTQ {mode} {bits}-bit {}:", gran.as_str());
+    for (k, v) in &ppl {
+        println!("  {k}: ppl {v:.2}");
+    }
+    Ok(())
+}
+
+fn cmd_sharpness(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    let (model, state, eval_art) = open_ckpt(args, &rt)?;
+    let radii: Vec<f64> = args
+        .get_or("radii", "0.001,0.003,0.01,0.03,0.1")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow!("bad radius {s:?}")))
+        .collect::<Result<_>>()?;
+    let q = EvalQuant {
+        qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
+        qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
+    };
+    let c = qpretrain::analysis::m_sharpness(
+        &rt, &eval_art, &model, &state, &radii,
+        args.usize_or("dirs", 4)?, args.usize_or("eval-batches", 2)?, q,
+    )?;
+    println!("base loss: {:.4}", c.base_loss);
+    for (r, s) in c.radii.iter().zip(&c.sharpness) {
+        println!("rho={r}: max loss increase {s:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_losssurface(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    let (model, state, eval_art) = open_ckpt(args, &rt)?;
+    let q = EvalQuant {
+        qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
+        qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
+    };
+    let surf = qpretrain::analysis::loss_surface(
+        &rt, &eval_art, &model, &state,
+        args.f64_or("extent", 0.5)?, args.usize_or("grid", 9)?,
+        args.usize_or("eval-batches", 1)?, q,
+    )?;
+    let out = args.get_or("out", "loss_surface.csv");
+    std::fs::write(&out, surf.to_csv())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_memprofile(args: &Args) -> Result<()> {
+    let batches: Vec<usize> = args
+        .get_or("batches", "4,8,16,32,64")
+        .split(',')
+        .map(|s| s.parse().unwrap_or(4))
+        .collect();
+    print!("{}", qpretrain::memmodel::fig2_table(&["small", "medium", "large"], &batches, 1024));
+    println!();
+    print!("{}", qpretrain::memmodel::fig15_table(&["small", "medium", "large"], &[128, 256, 512, 1024, 2048], 4));
+    Ok(())
+}
+
+fn cmd_timeprofile(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    let rows = qpretrain::timemodel::fig3_rows(&rt, args.usize_or("reps", 5)?)?;
+    print!("{}", qpretrain::timemodel::rows_to_csv(&rows));
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: qpretrain experiment <id|all>"))?
+        .clone();
+    let ctx = ctx_from(args)?;
+    experiments::run(&ctx, &id)
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let runs = runs_dir(args);
+    let summaries = experiments::all_summaries(&runs);
+    println!("{} cached training runs:", summaries.len());
+    for s in &summaries {
+        println!(
+            "  {:<24} {} steps  val {:<8} diverged={}",
+            s.label,
+            s.steps,
+            coordinator::fmt_f(s.final_val_loss, 4),
+            s.diverged
+        );
+    }
+    let combined = experiments::combined_report(&runs)?;
+    let out = runs.join("reports/ALL.md");
+    std::fs::write(&out, &combined)?;
+    println!("combined report -> {}", out.display());
+    Ok(())
+}
+
+/// Runtime validation: execute the standalone L1 kernel artifacts and check
+/// them against the rust quant oracle (cross-language, cross-runtime).
+fn cmd_selftest(_args: &Args) -> Result<()> {
+    use qpretrain::runtime::{lit_f32, lit_scalar, to_f32};
+    let rt = Runtime::new(&artifact_dir())?;
+    let mut rng = qpretrain::util::rng::Rng::new(0x5E1F);
+    let (m, n, k) = (256usize, 512usize, 256usize);
+    let x = rng.normal_vec(m * n, 0.0, 1.0);
+    let xl = lit_f32(&x, &[m, n])?;
+
+    let cases = [
+        ("k/qdq_pt_pallas", Granularity::PerTensor, false),
+        ("k/qdq_pc_pallas", Granularity::PerChannel, false),
+        ("k/qdq_ptok_pallas", Granularity::PerToken, false),
+        ("k/qdq_ptok_asym_pallas", Granularity::PerToken, true),
+        ("k/qdq_pt_jnp", Granularity::PerTensor, false),
+    ];
+    for (art, gran, asym) in cases {
+        for bits in [4u32, 8] {
+            let qmax = lit_scalar(Scheme::new(bits, gran).qmax());
+            let out = rt.run(art, &[&xl, &qmax])?;
+            let got = to_f32(&out[0])?;
+            let scheme = if asym { Scheme::asym(bits, gran) } else { Scheme::new(bits, gran) };
+            let want = qpretrain::quant::qdq_copy(&x, m, n, scheme);
+            let max_err = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let ok = max_err <= 1e-5;
+            println!("{art} b{bits}: max |pallas - rust| = {max_err:.2e} {}", if ok { "OK" } else { "FAIL" });
+            if !ok {
+                bail!("selftest failed for {art} at {bits} bits");
+            }
+        }
+    }
+
+    // fused qmatmul vs rust reference
+    let w = rng.normal_vec(n * k, 0.0, 1.0);
+    let wl = lit_f32(&w, &[n, k])?;
+    let q = lit_scalar(127.0f32);
+    let out = rt.run("k/qmatmul_pallas", &[&xl, &wl, &q, &q])?;
+    let got = to_f32(&out[0])?;
+    let xq = qpretrain::quant::qdq_copy(&x, m, n, Scheme::new(8, Granularity::PerToken));
+    let wq = qpretrain::quant::qdq_copy(&w, n, k, Scheme::new(8, Granularity::PerChannel));
+    let mut want = vec![0.0f32; m * k];
+    for i in 0..m {
+        for l in 0..n {
+            let a = xq[i * n + l];
+            if a == 0.0 {
+                continue;
+            }
+            for j in 0..k {
+                want[i * k + j] += a * wq[l * k + j];
+            }
+        }
+    }
+    let rel: f64 = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| ((a - b).abs() / (b.abs() + 1e-3)) as f64)
+        .sum::<f64>()
+        / want.len() as f64;
+    println!("k/qmatmul_pallas vs rust gemm: mean rel err {rel:.2e} {}", if rel < 1e-4 { "OK" } else { "FAIL" });
+    if rel >= 1e-4 {
+        bail!("qmatmul selftest failed");
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_list(_args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifact_dir())?;
+    println!("models:");
+    let mut models: Vec<_> = rt.manifest.models.keys().collect();
+    models.sort();
+    for m in models {
+        let info = &rt.manifest.models[m];
+        println!("  {m}: {}L d{} h{} V{} T{} B{} ({} params)", info.n_layer, info.d_model, info.n_head, info.vocab, info.seq, info.batch, info.n_params);
+    }
+    println!("artifacts: {}", rt.manifest.artifacts.len());
+    let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
+    names.sort();
+    for n in names {
+        println!("  {n}");
+    }
+    println!("experiments: {:?} + all", experiments::ALL);
+    Ok(())
+}

@@ -1,0 +1,272 @@
+//! Analytic peak-memory model (paper §3.3 + Appendix B, Figs. 2/14/15).
+//!
+//! The paper's figures are PyTorch-profiler *accounting* of training memory;
+//! this module reproduces the accounting analytically for mixed-precision
+//! (bf16 compute, fp32 Adam states) GPT-2 training with FlashAttention
+//! (activation footprint linear in sequence length, no stored attention
+//! matrix). It simulates the allocation timeline and reports the composition
+//! at whichever phase peaks — reproducing the paper's observation that the
+//! peak shifts from end-of-backward (gradients resident) to
+//! start-of-backward (activations + logit gradient resident) as batch*seq
+//! grows, at which point gradients stop contributing to peak memory.
+
+use crate::runtime::ModelInfo;
+
+const BF16: usize = 2;
+const FP32: usize = 4;
+
+/// bf16 activation elements stored per layer per token for the backward pass
+/// (pre-LN GPT-2 with FlashAttention): ln1 out (d) + qkv out (3d) + attn out
+/// (d) + proj out (d) + ln2 out (d) + fc1/gelu out (2*4d) + fc2 out (d) +
+/// residual streams (2d) = 17d; flash softmax stats add O(heads) per token.
+fn act_elems_per_layer_token(d_model: usize, n_head: usize) -> usize {
+    17 * d_model + 2 * n_head
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemBreakdown {
+    pub params: usize,
+    pub grads: usize,
+    pub optim: usize,
+    pub activations: usize,
+    pub logits: usize,
+    /// which phase peaked: "bwd_start" or "bwd_end"
+    pub peak_phase: &'static str,
+}
+
+impl MemBreakdown {
+    pub fn total(&self) -> usize {
+        self.params + self.grads + self.optim + self.activations + self.logits
+    }
+
+    pub fn fractions(&self) -> [(&'static str, f64); 5] {
+        let t = self.total() as f64;
+        [
+            ("params", self.params as f64 / t),
+            ("grads", self.grads as f64 / t),
+            ("optim", self.optim as f64 / t),
+            ("activations", self.activations as f64 / t),
+            ("logits", self.logits as f64 / t),
+        ]
+    }
+}
+
+/// Peak-memory composition for training `model` at (batch, seq).
+/// `act_bits` / `weight_bits` model the paper's quantized-storage savings
+/// (16 = bf16 baseline).
+pub fn peak_memory(model: &ModelInfo, batch: usize, seq: usize) -> MemBreakdown {
+    peak_memory_quantized(model, batch, seq, 16, 16, 32)
+}
+
+pub fn peak_memory_quantized(
+    model: &ModelInfo,
+    batch: usize,
+    seq: usize,
+    weight_bits: usize,
+    act_bits: usize,
+    optim_bits_per_state: usize,
+) -> MemBreakdown {
+    let n = model.n_params;
+    let tokens = batch * seq;
+
+    let params = n * BF16 * weight_bits / 16 + n * FP32; // bf16 copy + fp32 master
+    let grads = n * BF16;
+    let optim = 2 * n * (optim_bits_per_state / 8);
+
+    let acts_per_layer =
+        tokens * act_elems_per_layer_token(model.d_model, model.n_head) * BF16 * act_bits / 16;
+    let emb_acts = tokens * model.d_model * BF16 * act_bits / 16;
+    let all_acts = emb_acts + model.n_layer * acts_per_layer;
+
+    // logits + softmax workspace in fp32; its gradient materializes at the
+    // start of the backward pass
+    let logits = tokens * model.vocab * FP32;
+    let logit_grad = tokens * model.vocab * FP32;
+
+    // phase 1: start of backward — everything from the forward is resident
+    // plus the logit gradient; layer gradients not yet allocated.
+    let bwd_start = params + optim + all_acts + logits + logit_grad;
+    // phase 2: end of backward — all gradients allocated; activations freed
+    // except the earliest layer; logit gradient freed.
+    let bwd_end = params + optim + grads + emb_acts + acts_per_layer + logits;
+
+    if bwd_start >= bwd_end {
+        MemBreakdown {
+            params,
+            grads: 0, // gradients do not contribute at this peak (paper App. B)
+            optim,
+            activations: all_acts,
+            logits: logits + logit_grad,
+            peak_phase: "bwd_start",
+        }
+    } else {
+        MemBreakdown {
+            params,
+            grads,
+            optim,
+            activations: emb_acts + acts_per_layer,
+            logits,
+            peak_phase: "bwd_end",
+        }
+    }
+}
+
+/// GPT-2 family shapes used by the paper's profiling figures.
+pub fn profile_model(name: &str) -> ModelInfo {
+    let (n_layer, d_model, n_head) = match name {
+        "small" => (12, 768, 12),
+        "medium" => (24, 1024, 16),
+        "large" => (36, 1280, 20),
+        "xl" => (48, 1600, 25),
+        other => panic!("unknown profile model {other}"),
+    };
+    let vocab = 50257;
+    let d_ff = 4 * d_model;
+    let per_layer = 2 * d_model
+        + d_model * 3 * d_model
+        + 3 * d_model
+        + d_model * d_model
+        + d_model
+        + 2 * d_model
+        + d_model * d_ff
+        + d_ff
+        + d_ff * d_model
+        + d_model;
+    let n_params = vocab * d_model + 1024 * d_model + n_layer * per_layer + 2 * d_model;
+    ModelInfo {
+        name: name.to_string(),
+        n_layer,
+        d_model,
+        n_head,
+        vocab,
+        seq: 1024,
+        batch: 1,
+        d_ff,
+        n_params,
+        params: vec![],
+    }
+}
+
+/// Render the Fig. 2 table: rows = batch sizes, composition fractions.
+pub fn fig2_table(sizes: &[&str], batches: &[usize], seq: usize) -> String {
+    let mut out = String::from(
+        "model,batch,peak_gb,params_frac,grads_frac,optim_frac,act_frac,logits_frac,peak_phase\n",
+    );
+    for &size in sizes {
+        let m = profile_model(size);
+        for &b in batches {
+            let mem = peak_memory(&m, b, seq);
+            let f = mem.fractions();
+            out.push_str(&format!(
+                "{size},{b},{:.2},{:.3},{:.3},{:.3},{:.3},{:.3},{}\n",
+                mem.total() as f64 / 1e9,
+                f[0].1,
+                f[1].1,
+                f[2].1,
+                f[3].1,
+                f[4].1,
+                mem.peak_phase
+            ));
+        }
+    }
+    out
+}
+
+/// Fig. 15: memory vs sequence length at fixed batch.
+pub fn fig15_table(sizes: &[&str], seqs: &[usize], batch: usize) -> String {
+    let mut out = String::from(
+        "model,seq,peak_gb,params_frac,grads_frac,optim_frac,act_frac,logits_frac,peak_phase\n",
+    );
+    for &size in sizes {
+        let m = profile_model(size);
+        for &s in seqs {
+            let mem = peak_memory(&m, batch, s);
+            let f = mem.fractions();
+            out.push_str(&format!(
+                "{size},{s},{:.2},{:.3},{:.3},{:.3},{:.3},{:.3},{}\n",
+                mem.total() as f64 / 1e9,
+                f[0].1,
+                f[1].1,
+                f[2].1,
+                f[3].1,
+                f[4].1,
+                mem.peak_phase
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_model_param_counts_are_plausible() {
+        // GPT-2 small ~124M, medium ~350M, large ~774M, xl ~1.5B
+        assert!((profile_model("small").n_params as f64 / 124e6 - 1.0).abs() < 0.05);
+        assert!((profile_model("medium").n_params as f64 / 350e6 - 1.0).abs() < 0.1);
+        assert!((profile_model("large").n_params as f64 / 774e6 - 1.0).abs() < 0.1);
+        assert!((profile_model("xl").n_params as f64 / 1.55e9 - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn activations_dominate_at_large_batch() {
+        // paper Fig. 2: with batch up, activations take the majority share
+        let m = profile_model("small");
+        let mem = peak_memory(&m, 64, 1024);
+        // logits (+ their gradient) are activation memory in the profiler's
+        // accounting; together they must dominate at large batch
+        let act_frac = (mem.activations + mem.logits) as f64 / mem.total() as f64;
+        assert!(act_frac > 0.5, "act fraction {act_frac}");
+        assert_eq!(mem.peak_phase, "bwd_start");
+        assert_eq!(mem.grads, 0); // paper App. B: grads don't hit the peak
+    }
+
+    #[test]
+    fn gradients_matter_at_tiny_batch() {
+        let m = profile_model("xl");
+        let mem = peak_memory(&m, 1, 128);
+        assert_eq!(mem.peak_phase, "bwd_end");
+        assert!(mem.grads > 0);
+    }
+
+    #[test]
+    fn peak_shifts_with_seq_at_fixed_batch() {
+        // paper Fig. 15: increasing seq flips the peak to bwd_start
+        let m = profile_model("large");
+        let short = peak_memory(&m, 4, 128);
+        let long = peak_memory(&m, 4, 2048);
+        assert_eq!(short.peak_phase, "bwd_end");
+        assert_eq!(long.peak_phase, "bwd_start");
+    }
+
+    #[test]
+    fn quantized_storage_shrinks_memory() {
+        let m = profile_model("small");
+        let fp = peak_memory_quantized(&m, 32, 1024, 16, 16, 32);
+        let q8 = peak_memory_quantized(&m, 32, 1024, 8, 8, 8);
+        assert!(q8.total() < fp.total());
+        // activation quantization dominates the savings at large batch
+        assert!(q8.activations * 2 <= fp.activations + 1);
+    }
+
+    #[test]
+    fn memory_grows_monotonically_in_batch() {
+        let m = profile_model("medium");
+        let mut prev = 0usize;
+        for b in [1, 2, 4, 8, 16, 32] {
+            let t = peak_memory(&m, b, 1024).total();
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn tables_render() {
+        let t = fig2_table(&["small"], &[4, 8], 1024);
+        assert_eq!(t.lines().count(), 3);
+        let t = fig15_table(&["small"], &[128, 1024], 4);
+        assert!(t.contains("small,1024"));
+    }
+}

@@ -1,0 +1,304 @@
+//! Host-side model state: parameter initialization (matching the GPT-2
+//! conventions recorded in the manifest), checkpoints, and conversions
+//! between host vectors and PJRT literals.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+
+use crate::runtime::{lit_f32, to_f32, ModelInfo, ParamInfo};
+use crate::util::rng::Rng;
+
+/// Full optimizer+model state on the host: params, Adam m and v, step count.
+#[derive(Debug, Clone)]
+pub struct HostState {
+    pub model: String,
+    pub step: usize,
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+/// Initialize one parameter tensor per its manifest init spec.
+pub fn init_param(p: &ParamInfo, n_layer: usize, rng: &mut Rng) -> Vec<f32> {
+    let n = p.elems();
+    match p.init.as_str() {
+        "ones" => vec![1.0; n],
+        "zeros" => vec![0.0; n],
+        "residual" => {
+            // GPT-2: residual-projection init scaled by 1/sqrt(2L)
+            let std = 0.02 / (2.0 * n_layer as f32).sqrt();
+            rng.normal_vec(n, 0.0, std)
+        }
+        s if s.starts_with("normal:") => {
+            let std: f32 = s["normal:".len()..].parse().unwrap_or(0.02);
+            rng.normal_vec(n, 0.0, std)
+        }
+        other => {
+            log::warn!("unknown init {other:?} for {}, using zeros", p.name);
+            vec![0.0; n]
+        }
+    }
+}
+
+/// Fresh training state for a model (params initialized, moments zero).
+pub fn init_state(model: &ModelInfo, seed: u64) -> HostState {
+    let root = Rng::new(seed);
+    let mut params = Vec::with_capacity(model.params.len());
+    for (i, p) in model.params.iter().enumerate() {
+        let mut rng = root.fork(i as u64);
+        params.push(init_param(p, model.n_layer, &mut rng));
+    }
+    let zeros: Vec<Vec<f32>> = model.params.iter().map(|p| vec![0.0; p.elems()]).collect();
+    HostState {
+        model: model.name.clone(),
+        step: 0,
+        params,
+        m: zeros.clone(),
+        v: zeros,
+    }
+}
+
+impl HostState {
+    /// params+m+v as literals in the train-artifact input order.
+    pub fn to_literals(&self, model: &ModelInfo) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(3 * self.params.len());
+        for group in [&self.params, &self.m, &self.v] {
+            for (p, data) in model.params.iter().zip(group.iter()) {
+                out.push(lit_f32(data, &p.shape)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// params only, as literals (eval/probe input prefix).
+    pub fn param_literals(&self, model: &ModelInfo) -> Result<Vec<xla::Literal>> {
+        model
+            .params
+            .iter()
+            .zip(self.params.iter())
+            .map(|(p, data)| lit_f32(data, &p.shape))
+            .collect()
+    }
+
+    /// Rebuild host state from the (params, m, v) literal prefix of a train
+    /// step's outputs.
+    pub fn from_literals(
+        model: &ModelInfo,
+        lits: &[xla::Literal],
+        step: usize,
+    ) -> Result<HostState> {
+        let np = model.params.len();
+        if lits.len() < 3 * np {
+            bail!("expected at least {} literals, got {}", 3 * np, lits.len());
+        }
+        let grab = |range: std::ops::Range<usize>| -> Result<Vec<Vec<f32>>> {
+            lits[range].iter().map(to_f32).collect()
+        };
+        Ok(HostState {
+            model: model.name.clone(),
+            step,
+            params: grab(0..np)?,
+            m: grab(np..2 * np)?,
+            v: grab(2 * np..3 * np)?,
+        })
+    }
+
+    pub fn n_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// L2 norm of each parameter tensor (used for filter normalization).
+    pub fn param_norms(&self) -> Vec<f64> {
+        self.params
+            .iter()
+            .map(|p| p.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt())
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoints: gzip-compressed custom binary format
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8] = b"QPCKPT1\n";
+
+pub fn save_checkpoint(path: &Path, model: &ModelInfo, state: &HostState) -> Result<()> {
+    crate::util::ensure_parent(path)?;
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = GzEncoder::new(file, flate2::Compression::fast());
+    w.write_all(MAGIC)?;
+    let header = format!(
+        "{{\"model\":\"{}\",\"step\":{},\"n_tensors\":{}}}\n",
+        state.model,
+        state.step,
+        model.params.len()
+    );
+    w.write_all(&(header.len() as u32).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    for group in [&state.params, &state.m, &state.v] {
+        for (p, data) in model.params.iter().zip(group.iter()) {
+            if data.len() != p.elems() {
+                bail!("tensor {} length mismatch", p.name);
+            }
+            for x in data.iter() {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    w.finish()?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path, model: &ModelInfo) -> Result<HostState> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = GzDecoder::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if magic != MAGIC {
+        bail!("{path:?} is not a qpretrain checkpoint");
+    }
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let hlen = u32::from_le_bytes(len_bytes) as usize;
+    let mut hdr = vec![0u8; hlen];
+    r.read_exact(&mut hdr)?;
+    let header = crate::util::json::parse(std::str::from_utf8(&hdr)?.trim())?;
+    let step = header.req("step")?.as_usize().unwrap_or(0);
+    let name = header
+        .req("model")?
+        .as_str()
+        .ok_or_else(|| anyhow!("bad header"))?
+        .to_string();
+    if name != model.name {
+        bail!(
+            "checkpoint is for model {name:?}, expected {:?}",
+            model.name
+        );
+    }
+
+    let mut read_group = || -> Result<Vec<Vec<f32>>> {
+        model
+            .params
+            .iter()
+            .map(|p| {
+                let n = p.elems();
+                let mut bytes = vec![0u8; n * 4];
+                r.read_exact(&mut bytes)?;
+                Ok(bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect())
+            })
+            .collect()
+    };
+    let params = read_group()?;
+    let m = read_group()?;
+    let v = read_group()?;
+    Ok(HostState {
+        model: name,
+        step,
+        params,
+        m,
+        v,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> ModelInfo {
+        ModelInfo {
+            name: "tiny".into(),
+            n_layer: 2,
+            d_model: 4,
+            n_head: 1,
+            vocab: 8,
+            seq: 8,
+            batch: 1,
+            d_ff: 16,
+            n_params: 0,
+            params: vec![
+                ParamInfo {
+                    name: "wte".into(),
+                    shape: vec![8, 4],
+                    stacked: false,
+                    decay: true,
+                    init: "normal:0.02".into(),
+                },
+                ParamInfo {
+                    name: "ln_w".into(),
+                    shape: vec![4],
+                    stacked: false,
+                    decay: false,
+                    init: "ones".into(),
+                },
+                ParamInfo {
+                    name: "proj_w".into(),
+                    shape: vec![2, 4, 4],
+                    stacked: true,
+                    decay: true,
+                    init: "residual".into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let m = tiny_model();
+        let s = init_state(&m, 42);
+        assert_eq!(s.params[1], vec![1.0; 4]); // ones
+        assert!(s.params[0].iter().any(|&x| x != 0.0)); // normal
+        // residual init has smaller std than 0.02
+        let std0 = crate::util::stats::summarize(&s.params[0]).std;
+        let std2 = crate::util::stats::summarize(&s.params[2]).std;
+        assert!(std2 < std0);
+        assert!(s.m.iter().all(|t| t.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let m = tiny_model();
+        let a = init_state(&m, 7);
+        let b = init_state(&m, 7);
+        assert_eq!(a.params, b.params);
+        let c = init_state(&m, 8);
+        assert_ne!(a.params[0], c.params[0]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = tiny_model();
+        let mut s = init_state(&m, 1);
+        s.step = 123;
+        s.m[0][0] = 0.5;
+        s.v[2][3] = -2.0;
+        let dir = std::env::temp_dir().join("qpretrain_ckpt_test");
+        let path = dir.join("x.ckpt");
+        save_checkpoint(&path, &m, &s).unwrap();
+        let loaded = load_checkpoint(&path, &m).unwrap();
+        assert_eq!(loaded.step, 123);
+        assert_eq!(loaded.params, s.params);
+        assert_eq!(loaded.m, s.m);
+        assert_eq!(loaded.v, s.v);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_model() {
+        let m = tiny_model();
+        let s = init_state(&m, 1);
+        let dir = std::env::temp_dir().join("qpretrain_ckpt_test2");
+        let path = dir.join("x.ckpt");
+        save_checkpoint(&path, &m, &s).unwrap();
+        let mut other = tiny_model();
+        other.name = "other".into();
+        assert!(load_checkpoint(&path, &other).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,200 @@
+//! Post-training quantization harness (paper Appendix C, Tables 10 & 11).
+//!
+//! Weight PTQ quantizes a trained checkpoint's block-linear weights with the
+//! rust `quant` module (bit-exact with the training graph's quantizer) and
+//! evaluates through the *unquantized* eval artifact. Activation PTQ reuses
+//! the activation-quantized eval artifacts with the qmax runtime scalar on
+//! unmodified baseline weights.
+
+use anyhow::Result;
+
+use crate::config::{Granularity, Scheme};
+use crate::model::HostState;
+use crate::quant;
+use crate::runtime::{ModelInfo, Runtime};
+
+/// The block-linear weight tensors the paper quantizes ("all linear layers
+/// of Transformers"); embeddings / LN / biases stay fp32.
+pub const LINEAR_WEIGHTS: [&str; 4] = ["qkv_w", "proj_w", "fc1_w", "fc2_w"];
+
+/// Quantize the linear weights of a checkpoint in place. Stacked per-layer
+/// tensors are quantized layer-by-layer (per_tensor = per layer tensor, as
+/// in training).
+pub fn quantize_weights(state: &mut HostState, model: &ModelInfo, scheme: Scheme) {
+    for (info, data) in model.params.iter().zip(state.params.iter_mut()) {
+        if !LINEAR_WEIGHTS.contains(&info.name.as_str()) {
+            continue;
+        }
+        assert!(info.stacked && info.shape.len() == 3, "{}", info.name);
+        let (l, rows, cols) = (info.shape[0], info.shape[1], info.shape[2]);
+        for layer in 0..l {
+            let slice = &mut data[layer * rows * cols..(layer + 1) * rows * cols];
+            quant::qdq(slice, rows, cols, scheme);
+        }
+    }
+}
+
+/// Aggregate quantization error introduced by weight PTQ (diagnostics).
+pub fn weight_ptq_error(
+    state: &HostState,
+    model: &ModelInfo,
+    scheme: Scheme,
+) -> (f64, f64) {
+    let mut mse_sum = 0.0;
+    let mut n = 0usize;
+    let mut sqnr_min = f64::INFINITY;
+    for (info, data) in model.params.iter().zip(state.params.iter()) {
+        if !LINEAR_WEIGHTS.contains(&info.name.as_str()) {
+            continue;
+        }
+        let (l, rows, cols) = (info.shape[0], info.shape[1], info.shape[2]);
+        for layer in 0..l {
+            let slice = &data[layer * rows * cols..(layer + 1) * rows * cols];
+            let q = quant::qdq_copy(slice, rows, cols, scheme);
+            mse_sum += quant::mse(slice, &q) * slice.len() as f64;
+            n += slice.len();
+            sqnr_min = sqnr_min.min(quant::sqnr_db(slice, &q));
+        }
+    }
+    (mse_sum / n.max(1) as f64, sqnr_min)
+}
+
+/// Table 10 row: weight-PTQ a checkpoint and return perplexities per set.
+pub fn ptq_weights_ppl(
+    rt: &Runtime,
+    model: &ModelInfo,
+    baseline: &HostState,
+    bits: u32,
+    gran: Granularity,
+    n_batches: usize,
+) -> Result<std::collections::BTreeMap<String, f64>> {
+    let mut state = baseline.clone();
+    quantize_weights(&mut state, model, Scheme::new(bits, gran));
+    let params = state.param_literals(model)?;
+    crate::eval::perplexity_suite(
+        rt,
+        &format!("{}/eval/base", model.name),
+        model,
+        &params,
+        n_batches,
+        crate::eval::EvalQuant::none(),
+    )
+}
+
+/// Table 11 row: activation-PTQ via the quantized eval artifact.
+pub fn ptq_acts_ppl(
+    rt: &Runtime,
+    model: &ModelInfo,
+    baseline: &HostState,
+    bits: u32,
+    gran: Granularity,
+    n_batches: usize,
+) -> Result<std::collections::BTreeMap<String, f64>> {
+    let structure = match gran {
+        Granularity::PerTensor => "a_pt",
+        Granularity::PerToken => "a_ptok",
+        Granularity::PerChannel => "a_pc",
+    };
+    let params = baseline.param_literals(model)?;
+    let qmax = Scheme::new(bits, gran).qmax();
+    crate::eval::perplexity_suite(
+        rt,
+        &format!("{}/eval/{structure}", model.name),
+        model,
+        &params,
+        n_batches,
+        crate::eval::EvalQuant {
+            qmax_w: 1.0,
+            qmax_a: qmax,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_state;
+    use crate::runtime::ParamInfo;
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            n_layer: 2,
+            d_model: 8,
+            n_head: 2,
+            vocab: 32,
+            seq: 8,
+            batch: 1,
+            d_ff: 32,
+            n_params: 0,
+            params: vec![
+                ParamInfo {
+                    name: "wte".into(),
+                    shape: vec![32, 8],
+                    stacked: false,
+                    decay: true,
+                    init: "normal:0.02".into(),
+                },
+                ParamInfo {
+                    name: "qkv_w".into(),
+                    shape: vec![2, 8, 24],
+                    stacked: true,
+                    decay: true,
+                    init: "normal:0.02".into(),
+                },
+                ParamInfo {
+                    name: "fc1_w".into(),
+                    shape: vec![2, 8, 32],
+                    stacked: true,
+                    decay: true,
+                    init: "normal:0.02".into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn quantizes_only_linear_weights() {
+        let m = model();
+        let base = init_state(&m, 3);
+        let mut q = base.clone();
+        quantize_weights(&mut q, &m, Scheme::new(4, Granularity::PerChannel));
+        assert_eq!(q.params[0], base.params[0]); // wte untouched
+        assert_ne!(q.params[1], base.params[1]); // qkv_w quantized
+        assert_ne!(q.params[2], base.params[2]);
+    }
+
+    #[test]
+    fn ptq_is_idempotent() {
+        let m = model();
+        let mut a = init_state(&m, 4);
+        quantize_weights(&mut a, &m, Scheme::new(8, Granularity::PerChannel));
+        let mut b = a.clone();
+        quantize_weights(&mut b, &m, Scheme::new(8, Granularity::PerChannel));
+        for (x, y) in a.params[1].iter().zip(&b.params[1]) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lower_bits_higher_error() {
+        let m = model();
+        let s = init_state(&m, 5);
+        let (mse4, _) = weight_ptq_error(&s, &m, Scheme::new(4, Granularity::PerChannel));
+        let (mse8, _) = weight_ptq_error(&s, &m, Scheme::new(8, Granularity::PerChannel));
+        assert!(mse4 > mse8 * 10.0);
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_with_outlier_column() {
+        let m = model();
+        let mut s = init_state(&m, 6);
+        // inject an outlier output-channel into layer 0 of qkv_w
+        for r in 0..8 {
+            s.params[1][r * 24 + 5] = 3.0;
+        }
+        let (mse_pt, _) = weight_ptq_error(&s, &m, Scheme::new(4, Granularity::PerTensor));
+        let (mse_pc, _) = weight_ptq_error(&s, &m, Scheme::new(4, Granularity::PerChannel));
+        assert!(mse_pc < mse_pt);
+    }
+}

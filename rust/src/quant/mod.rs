@@ -1,0 +1,429 @@
+//! Rust mirror of the paper's Eq. 1 linear quantization (see
+//! `python/compile/kernels/ref.py`, the cross-language oracle).
+//!
+//! Bit-exactness with the python side is load-bearing: the PTQ harness
+//! (Tables 10/11) quantizes trained checkpoints *in rust* and evaluates them
+//! through HLO artifacts, so the numerics must be the ones the paper's
+//! training graph used. Golden-file tests (`rust/tests/golden.rs`) pin this:
+//! `jnp.round` is round-half-to-even, matched by `f32::round_ties_even`; the
+//! scale floor is the same `EPS`.
+//!
+//! Also provides truly-packed int8/int4 storage (`PackedTensor`) used for
+//! memory accounting and the storage-size claims of the paper's §3.3.
+
+use crate::config::{Granularity, Scheme};
+
+pub const EPS: f32 = 1e-12;
+
+/// Quantization parameters for one group: `x_int = clip(round(x/s) - z)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero: f32, // the paper's z offset (0 for symmetric)
+}
+
+/// Compute symmetric quant params for a slice.
+pub fn params_sym(xs: &[f32], qmax: f32) -> QParams {
+    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    QParams {
+        scale: (amax / qmax).max(EPS),
+        zero: 0.0,
+    }
+}
+
+/// Compute asymmetric quant params (min-anchored offset; see ref.py).
+pub fn params_asym(xs: &[f32], qmax: f32) -> QParams {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if xs.is_empty() {
+        return QParams { scale: EPS, zero: 0.0 };
+    }
+    let n = -qmax - 1.0;
+    let scale = ((hi - lo) / (2.0 * qmax + 1.0)).max(EPS);
+    QParams {
+        scale,
+        zero: (lo / scale).round_ties_even() - n,
+    }
+}
+
+/// Quantize one value to the integer grid.
+#[inline]
+pub fn quantize_one(x: f32, p: QParams, qmax: f32) -> f32 {
+    let n = -qmax - 1.0;
+    ((x / p.scale).round_ties_even() - p.zero).clamp(n, qmax)
+}
+
+/// Fake-quantize one value (quantize + dequantize).
+#[inline]
+pub fn qdq_one(x: f32, p: QParams, qmax: f32) -> f32 {
+    p.scale * (quantize_one(x, p, qmax) + p.zero)
+}
+
+/// Fake-quantize a (rows x cols) row-major matrix in place, matching the
+/// python oracle bit-for-bit for every granularity/scheme combination.
+pub fn qdq(data: &mut [f32], rows: usize, cols: usize, scheme: Scheme) {
+    assert_eq!(data.len(), rows * cols, "shape mismatch");
+    let qmax = scheme.qmax();
+    let pfn = if scheme.asymmetric { params_asym } else { params_sym };
+    match scheme.granularity {
+        Granularity::PerTensor => {
+            let p = pfn(data, qmax);
+            for x in data.iter_mut() {
+                *x = qdq_one(*x, p, qmax);
+            }
+        }
+        Granularity::PerToken => {
+            for r in 0..rows {
+                let row = &mut data[r * cols..(r + 1) * cols];
+                let p = pfn(row, qmax);
+                for x in row.iter_mut() {
+                    *x = qdq_one(*x, p, qmax);
+                }
+            }
+        }
+        Granularity::PerChannel => {
+            // column scales: gather per-column params first
+            let mut params = Vec::with_capacity(cols);
+            for c in 0..cols {
+                if scheme.asymmetric {
+                    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                    for r in 0..rows {
+                        let x = data[r * cols + c];
+                        lo = lo.min(x);
+                        hi = hi.max(x);
+                    }
+                    let n = -qmax - 1.0;
+                    let scale = ((hi - lo) / (2.0 * qmax + 1.0)).max(EPS);
+                    params.push(QParams {
+                        scale,
+                        zero: (lo / scale).round_ties_even() - n,
+                    });
+                } else {
+                    let mut amax = 0.0f32;
+                    for r in 0..rows {
+                        amax = amax.max(data[r * cols + c].abs());
+                    }
+                    params.push(QParams {
+                        scale: (amax / qmax).max(EPS),
+                        zero: 0.0,
+                    });
+                }
+            }
+            for r in 0..rows {
+                for c in 0..cols {
+                    data[r * cols + c] = qdq_one(data[r * cols + c], params[c], qmax);
+                }
+            }
+        }
+    }
+}
+
+/// Non-destructive variant.
+pub fn qdq_copy(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> Vec<f32> {
+    let mut out = data.to_vec();
+    qdq(&mut out, rows, cols, scheme);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// packed integer storage (real memory savings; §3.3 accounting)
+// ---------------------------------------------------------------------------
+
+/// A tensor stored on the integer grid with per-group scales. Bits <= 8.
+/// 4-bit values are nibble-packed two-per-byte; this is the storage format
+/// whose sizes back the paper's memory-saving estimates.
+#[derive(Debug, Clone)]
+pub struct PackedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub scheme: Scheme,
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    pub data: Vec<u8>, // packed two's-complement codes
+}
+
+impl PackedTensor {
+    pub fn quantize(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> PackedTensor {
+        assert!(scheme.bits >= 2 && scheme.bits <= 8);
+        assert_eq!(data.len(), rows * cols);
+        let qmax = scheme.qmax();
+        let pfn = if scheme.asymmetric { params_asym } else { params_sym };
+
+        // group params
+        let (scales, zeros): (Vec<f32>, Vec<f32>) = match scheme.granularity {
+            Granularity::PerTensor => {
+                let p = pfn(data, qmax);
+                (vec![p.scale], vec![p.zero])
+            }
+            Granularity::PerToken => {
+                let mut s = Vec::with_capacity(rows);
+                let mut z = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let p = pfn(&data[r * cols..(r + 1) * cols], qmax);
+                    s.push(p.scale);
+                    z.push(p.zero);
+                }
+                (s, z)
+            }
+            Granularity::PerChannel => {
+                let mut s = Vec::with_capacity(cols);
+                let mut z = Vec::with_capacity(cols);
+                for c in 0..cols {
+                    let col: Vec<f32> = (0..rows).map(|r| data[r * cols + c]).collect();
+                    let p = pfn(&col, qmax);
+                    s.push(p.scale);
+                    z.push(p.zero);
+                }
+                (s, z)
+            }
+        };
+
+        let param_at = |r: usize, c: usize| -> QParams {
+            match scheme.granularity {
+                Granularity::PerTensor => QParams { scale: scales[0], zero: zeros[0] },
+                Granularity::PerToken => QParams { scale: scales[r], zero: zeros[r] },
+                Granularity::PerChannel => QParams { scale: scales[c], zero: zeros[c] },
+            }
+        };
+
+        let n = rows * cols;
+        let mut codes = Vec::with_capacity(n);
+        for r in 0..rows {
+            for c in 0..cols {
+                let q = quantize_one(data[r * cols + c], param_at(r, c), qmax) as i8;
+                codes.push(q);
+            }
+        }
+        let packed = if scheme.bits <= 4 {
+            // nibble-pack
+            let mut out = Vec::with_capacity((n + 1) / 2);
+            for pair in codes.chunks(2) {
+                let lo = (pair[0] as u8) & 0x0F;
+                let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };
+                out.push(lo | (hi << 4));
+            }
+            out
+        } else {
+            codes.iter().map(|&c| c as u8).collect()
+        };
+        PackedTensor {
+            rows,
+            cols,
+            scheme,
+            scales,
+            zeros,
+            data: packed,
+        }
+    }
+
+    /// Integer code at (r, c) with sign extension.
+    pub fn code(&self, r: usize, c: usize) -> i8 {
+        let idx = r * self.cols + c;
+        if self.scheme.bits <= 4 {
+            let byte = self.data[idx / 2];
+            let nib = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            // sign-extend 4-bit two's complement
+            ((nib << 4) as i8) >> 4
+        } else {
+            self.data[idx] as i8
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let (s, z) = match self.scheme.granularity {
+                    Granularity::PerTensor => (self.scales[0], self.zeros[0]),
+                    Granularity::PerToken => (self.scales[r], self.zeros[r]),
+                    Granularity::PerChannel => (self.scales[c], self.zeros[c]),
+                };
+                out.push(s * (self.code(r, c) as f32 + z));
+            }
+        }
+        out
+    }
+
+    /// Bytes of storage including scales/offsets.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() + 4 * (self.scales.len() + if self.scheme.asymmetric { self.zeros.len() } else { 0 })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantization-error metrics (used by analyses and reports)
+// ---------------------------------------------------------------------------
+
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Signal-to-quantization-noise ratio in dB.
+pub fn sqnr_db(signal: &[f32], quantized: &[f32]) -> f64 {
+    let p_sig: f64 = signal.iter().map(|&x| (x as f64).powi(2)).sum();
+    let p_err: f64 = signal
+        .iter()
+        .zip(quantized)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+    if p_err == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (p_sig / p_err).log10()
+}
+
+/// Fraction of values flushed to the zero bin (the paper's Fig. 12 metric).
+pub fn zero_bin_fraction(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> f64 {
+    let q = qdq_copy(data, rows, cols, scheme);
+    let nonzero_in = data.iter().filter(|&&x| x != 0.0).count();
+    if nonzero_in == 0 {
+        return 0.0;
+    }
+    let flushed = data
+        .iter()
+        .zip(&q)
+        .filter(|(&x, &y)| x != 0.0 && y == 0.0)
+        .count();
+    flushed as f64 / nonzero_in as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Granularity::*;
+
+    fn grid(rows: usize, cols: usize) -> Vec<f32> {
+        // same exact-rational grid as the python golden generator
+        let mut v = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                v.push((((31 * i + 17 * j) % 257) as f32 - 128.0) / 16.0);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn hand_computed_per_tensor() {
+        // matches python test_oracle_hand_computed_per_tensor
+        let mut x = vec![-4.0, -1.0, 0.0, 2.0];
+        qdq(&mut x, 1, 4, Scheme::new(3, PerTensor));
+        let s = 4.0f32 / 3.0;
+        assert_eq!(x, vec![-3.0 * s, -1.0 * s, 0.0, 2.0 * s]);
+    }
+
+    #[test]
+    fn round_half_even() {
+        let mut x = vec![0.5, 1.5, -0.5, -1.5, 3.0];
+        qdq(&mut x, 1, 5, Scheme::new(3, PerTensor));
+        assert_eq!(x, vec![0.0, 2.0, 0.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn per_token_rows_independent() {
+        let mut x = vec![1.0, 2.0, 100.0, 200.0];
+        qdq(&mut x, 2, 2, Scheme::new(8, PerToken));
+        assert!((x[0] - 1.0).abs() < 0.02 && (x[2] - 100.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn per_channel_protects_small_channels_from_outliers() {
+        let rows = 16;
+        let cols = 8;
+        let mut x = vec![0.01f32; rows * cols];
+        for r in 0..rows {
+            x[r * cols + 3] = 100.0;
+        }
+        let pt = qdq_copy(&x, rows, cols, Scheme::new(4, PerTensor));
+        let pc = qdq_copy(&x, rows, cols, Scheme::new(4, PerChannel));
+        assert_eq!(pt[0], 0.0); // flushed by the shared scale
+        assert!((pc[0] - 0.01).abs() < 2e-3);
+    }
+
+    #[test]
+    fn asym_recovers_endpoints() {
+        let mut x = vec![0.0, 1.0, 2.0, 3.0];
+        qdq(&mut x, 1, 4, Scheme::asym(4, PerToken));
+        assert!((x[0] - 0.0).abs() < 1e-6);
+        assert!((x[3] - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn idempotent() {
+        let x = grid(16, 12);
+        for g in [PerTensor, PerToken, PerChannel] {
+            let once = qdq_copy(&x, 16, 12, Scheme::new(4, g));
+            let twice = qdq_copy(&once, 16, 12, Scheme::new(4, g));
+            for (a, b) in once.iter().zip(&twice) {
+                assert!((a - b).abs() < 1e-6, "{g:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let x = grid(32, 32);
+        let e2 = mse(&x, &qdq_copy(&x, 32, 32, Scheme::new(2, PerTensor)));
+        let e4 = mse(&x, &qdq_copy(&x, 32, 32, Scheme::new(4, PerTensor)));
+        let e8 = mse(&x, &qdq_copy(&x, 32, 32, Scheme::new(8, PerTensor)));
+        assert!(e2 > e4 && e4 > e8);
+    }
+
+    #[test]
+    fn packed_roundtrip_matches_qdq() {
+        let x = grid(24, 20);
+        for bits in [4u32, 8] {
+            for g in [PerTensor, PerToken, PerChannel] {
+                let scheme = Scheme::new(bits, g);
+                let packed = PackedTensor::quantize(&x, 24, 20, scheme);
+                let deq = packed.dequantize();
+                let fake = qdq_copy(&x, 24, 20, scheme);
+                for (a, b) in deq.iter().zip(&fake) {
+                    assert!((a - b).abs() < 1e-5, "bits={bits} {g:?}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sizes() {
+        let x = grid(64, 64);
+        let p8 = PackedTensor::quantize(&x, 64, 64, Scheme::new(8, PerChannel));
+        let p4 = PackedTensor::quantize(&x, 64, 64, Scheme::new(4, PerChannel));
+        assert_eq!(p8.data.len(), 64 * 64);
+        assert_eq!(p4.data.len(), 64 * 64 / 2);
+        assert!(p4.storage_bytes() < p8.storage_bytes());
+        // vs fp32: 4x and 8x smaller (ignoring scales)
+        assert!(p8.storage_bytes() * 4 <= 64 * 64 * 4 + 4 * 64 * 4);
+    }
+
+    #[test]
+    fn zero_bin_collapse_metric() {
+        // tiny values + one huge outlier: symmetric 8-bit flushes the rest
+        let mut x = vec![1e-4f32; 256];
+        x[0] = 1e4;
+        let f = zero_bin_fraction(&x, 1, 256, Scheme::new(8, PerTensor));
+        assert!(f > 0.99, "{f}");
+        let f = zero_bin_fraction(&x, 1, 256, Scheme::new(8, PerToken));
+        assert!(f > 0.99);
+    }
+
+    #[test]
+    fn sqnr_increases_with_bits() {
+        let x = grid(32, 32);
+        let s4 = sqnr_db(&x, &qdq_copy(&x, 32, 32, Scheme::new(4, PerTensor)));
+        let s8 = sqnr_db(&x, &qdq_copy(&x, 32, 32, Scheme::new(8, PerTensor)));
+        assert!(s8 > s4 + 15.0, "s4={s4} s8={s8}"); // ~6 dB per bit
+    }
+}

@@ -1,0 +1,310 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) described
+//! by `manifest.json` and executes them on the CPU PJRT client.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos with 64-bit instruction ids; the text parser
+//! reassigns ids). Lowering uses `return_tuple=True`, so every execution
+//! returns one tuple buffer which is decomposed into per-output literals.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+// ---------------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub stacked: bool,
+    pub decay: bool,
+    pub init: String,
+}
+
+impl ParamInfo {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub d_ff: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub meta: Value,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: HashMap<String, ModelInfo>,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+}
+
+fn parse_sig(v: &Value) -> Result<Vec<TensorSig>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("signature is not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(TensorSig {
+                name: e.req("name")?.as_str().unwrap_or_default().to_string(),
+                dtype: e.req("dtype")?.as_str().unwrap_or_default().to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()
+                    .unwrap_or_default()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let root = json::parse(&text)?;
+
+        let mut models = HashMap::new();
+        for (name, m) in root.req("models")?.as_obj().unwrap_or_default() {
+            let params = m
+                .req("params")?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .map(|p| {
+                    Ok(ParamInfo {
+                        name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                        shape: p
+                            .req("shape")?
+                            .as_arr()
+                            .unwrap_or_default()
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        stacked: p.get("stacked").and_then(|v| v.as_bool()).unwrap_or(false),
+                        decay: p.get("decay").and_then(|v| v.as_bool()).unwrap_or(false),
+                        init: p
+                            .get("init")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("zeros")
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    n_layer: m.req("n_layer")?.as_usize().unwrap_or(0),
+                    d_model: m.req("d_model")?.as_usize().unwrap_or(0),
+                    n_head: m.req("n_head")?.as_usize().unwrap_or(0),
+                    vocab: m.req("vocab")?.as_usize().unwrap_or(0),
+                    seq: m.req("seq")?.as_usize().unwrap_or(0),
+                    batch: m.req("batch")?.as_usize().unwrap_or(0),
+                    d_ff: m.req("d_ff")?.as_usize().unwrap_or(0),
+                    n_params: m.req("n_params")?.as_usize().unwrap_or(0),
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in root.req("artifacts")?.as_obj().unwrap_or_default() {
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                    kind: a
+                        .get("kind")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    model: a
+                        .get("model")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string()),
+                    inputs: parse_sig(a.req("inputs")?)?,
+                    outputs: parse_sig(a.req("outputs")?)?,
+                    meta: a.clone(),
+                },
+            );
+        }
+        Ok(Manifest { models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?} in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} in manifest"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}
+
+// ---------------------------------------------------------------------------
+// runtime
+// ---------------------------------------------------------------------------
+
+/// A compiled artifact plus its signature.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns per-output literals (decomposed
+    /// from the single result tuple).
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let bufs = self.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute and time just the device execution + download.
+    pub fn run_timed(&self, inputs: &[&xla::Literal]) -> Result<(Vec<xla::Literal>, f64)> {
+        let t0 = Instant::now();
+        let out = self.run(inputs)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// Loads + caches compiled executables over one PJRT CPU client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::new(&crate::util::artifact_dir())
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!(
+            "compiled {name} ({:.2}s)",
+            t0.elapsed().as_secs_f64()
+        );
+        let wrapped = Rc::new(Executable { info, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// One-shot convenience: compile + run.
+    pub fn run(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.exec(name)?.run(inputs)
+    }
+}

@@ -1,0 +1,128 @@
+//! Execution-time share of linear layers (paper §3.3, Fig. 3).
+//!
+//! The paper profiled GPU kernels with Nsight; here the same question —
+//! what fraction of a block's fwd+bwd time goes to the linear layers vs the
+//! attention core, across model sizes and sequence lengths — is answered by
+//! timing the AOT-compiled `prof/linear_*` and `prof/attn_*` artifacts on
+//! the CPU PJRT client, next to an analytic FLOPs model. The claim being
+//! reproduced is about the *ratio* and its trends (O(T d^2) vs O(T^2 d)),
+//! not absolute kernel times.
+
+use anyhow::Result;
+
+use crate::runtime::{lit_f32, Runtime};
+use crate::util::rng::Rng;
+
+pub const SIZES: [&str; 4] = ["small", "medium", "large", "xl"];
+pub const SEQS: [usize; 4] = [128, 256, 512, 1024];
+
+#[derive(Debug, Clone)]
+pub struct FractionRow {
+    pub size: String,
+    pub seq: usize,
+    pub linear_ms: f64,
+    pub attn_ms: f64,
+    pub measured_frac: f64,
+    pub analytic_frac: f64,
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Time one prof artifact: median of `reps` runs after one warmup.
+pub fn time_artifact(rt: &Runtime, name: &str, reps: usize) -> Result<f64> {
+    let exe = rt.exec(name)?;
+    let mut rng = Rng::new(0x7177);
+    let inputs: Vec<xla::Literal> = exe
+        .info
+        .inputs
+        .iter()
+        .map(|sig| {
+            let data = rng.normal_vec(sig.elems(), 0.0, 0.5);
+            lit_f32(&data, &sig.shape)
+        })
+        .collect::<Result<_>>()?;
+    let refs: Vec<&xla::Literal> = inputs.iter().collect();
+    exe.run(&refs)?; // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (_, dt) = exe.run_timed(&refs)?;
+        times.push(dt * 1e3);
+    }
+    Ok(median(times))
+}
+
+/// Analytic FLOPs of the two components (fwd+bwd ~ 3x fwd).
+pub fn analytic_fraction(d_model: usize, n_head: usize, seq: usize) -> f64 {
+    let d = d_model as f64;
+    let t = seq as f64;
+    let hd = (d_model / n_head) as f64;
+    let h = n_head as f64;
+    let linear = 2.0 * t * (d * 3.0 * d + d * d + d * 4.0 * d + 4.0 * d * d) * 3.0;
+    let attn = 2.0 * h * t * t * hd * 2.0 * 3.0;
+    linear / (linear + attn)
+}
+
+/// Measure the full Fig. 3 grid.
+pub fn fig3_rows(rt: &Runtime, reps: usize) -> Result<Vec<FractionRow>> {
+    let mut out = Vec::new();
+    for size in SIZES {
+        let m = crate::memmodel::profile_model(size);
+        for seq in SEQS {
+            let lin = time_artifact(rt, &format!("prof/linear_{size}_s{seq}"), reps)?;
+            let att = time_artifact(rt, &format!("prof/attn_{size}_s{seq}"), reps)?;
+            out.push(FractionRow {
+                size: size.to_string(),
+                seq,
+                linear_ms: lin,
+                attn_ms: att,
+                measured_frac: lin / (lin + att),
+                analytic_frac: analytic_fraction(m.d_model, m.n_head, seq),
+            });
+        }
+    }
+    Ok(out)
+}
+
+pub fn rows_to_csv(rows: &[FractionRow]) -> String {
+    let mut out =
+        String::from("model,seq,linear_ms,attn_ms,measured_linear_frac,analytic_linear_frac\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{:.3},{:.3},{:.4},{:.4}\n",
+            r.size, r.seq, r.linear_ms, r.attn_ms, r.measured_frac, r.analytic_frac
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_fraction_trends() {
+        // decreasing in seq (attention is quadratic)...
+        let f128 = analytic_fraction(768, 12, 128);
+        let f1024 = analytic_fraction(768, 12, 1024);
+        assert!(f128 > f1024);
+        // ...and increasing in model width at fixed seq
+        let small = analytic_fraction(768, 12, 512);
+        let xl = analytic_fraction(1600, 25, 512);
+        assert!(xl > small);
+        // paper: >80% at small seq for GPT-2 small
+        assert!(f128 > 0.8, "{f128}");
+    }
+
+    #[test]
+    fn fraction_bounded() {
+        for d in [768, 1600] {
+            for t in [128, 4096] {
+                let f = analytic_fraction(d, d / 64, t);
+                assert!(f > 0.0 && f < 1.0);
+            }
+        }
+    }
+}

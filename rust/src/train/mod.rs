@@ -1,0 +1,362 @@
+//! L3 training loop: drives an AOT-compiled train-step artifact.
+//!
+//! The loop owns the (params, m, v) state as PJRT literals — each step feeds
+//! the previous step's output literals straight back in, so the only
+//! per-step host work is the token batch, the LR scalar, and the loss/gnorm
+//! download. Divergence (the paper's non-convergence cases) is detected and
+//! recorded rather than treated as an error: several of the paper's
+//! configurations are *expected* to blow up, and the experiment reports need
+//! the step at which they did.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{cosine_lr, QuantRunCfg, TrainHp};
+use crate::data::{BatchIter, CorpusCfg};
+use crate::model::{init_state, save_checkpoint, HostState};
+use crate::runtime::{lit_i32, lit_scalar, scalar_f32, Runtime};
+use crate::util::stats::{channel_abs_max, Ema};
+
+/// Map a train structure to the eval artifact that scores its checkpoints
+/// (forward-pass quantization must match what training used; gradient and
+/// optimizer-state quantization do not appear in the forward pass).
+pub fn eval_structure_for(train_structure: &str) -> &'static str {
+    match train_structure {
+        "w_pt" => "w_pt",
+        "w_pc" | "w_pc_pallas" => "w_pc",
+        "a_pt" => "a_pt",
+        "a_ptok" => "a_ptok",
+        "a_ptok_asym" => "a_ptok_asym",
+        "a_pc" => "a_pc",
+        "wa" | "wag" => "wa",
+        _ => "base",
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub model: String,
+    pub quant: QuantRunCfg,
+    pub hp: TrainHp,
+    pub out_dir: Option<PathBuf>,
+    pub save_ckpt: bool,
+    /// Stop early once divergence is detected (saves sweep time; the paper's
+    /// diverged curves are reported as diverged either way).
+    pub stop_on_divergence: bool,
+}
+
+impl TrainCfg {
+    pub fn new(model: &str, quant: QuantRunCfg, hp: TrainHp) -> TrainCfg {
+        TrainCfg {
+            model: model.to_string(),
+            quant,
+            hp,
+            out_dir: None,
+            save_ckpt: false,
+            stop_on_divergence: true,
+        }
+    }
+
+    pub fn train_artifact(&self) -> String {
+        format!("{}/train/{}", self.model, self.quant.structure)
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!(
+            "{}/eval/{}",
+            self.model,
+            eval_structure_for(&self.quant.structure)
+        )
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub label: String,
+    pub losses: Vec<f64>,
+    pub gnorms: Vec<f64>,
+    pub val: Vec<(usize, f64)>,
+    pub diverged: bool,
+    pub diverged_at: Option<usize>,
+    pub spike_steps: Vec<usize>,
+    pub steps_per_sec: f64,
+    pub final_state: HostState,
+}
+
+impl TrainResult {
+    pub fn final_loss(&self) -> f64 {
+        *self.losses.last().unwrap_or(&f64::NAN)
+    }
+
+    pub fn final_val_loss(&self) -> f64 {
+        self.val.last().map(|(_, l)| *l).unwrap_or(f64::NAN)
+    }
+
+    pub fn min_val_loss(&self) -> f64 {
+        self.val
+            .iter()
+            .map(|(_, l)| *l)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Train a model per `cfg`, starting from `seed` init (or `resume`).
+pub fn train(rt: &Runtime, cfg: &TrainCfg) -> Result<TrainResult> {
+    train_from(rt, cfg, None)
+}
+
+pub fn train_from(
+    rt: &Runtime,
+    cfg: &TrainCfg,
+    resume: Option<HostState>,
+) -> Result<TrainResult> {
+    let model = rt.manifest.model(&cfg.model)?.clone();
+    let exe = rt
+        .exec(&cfg.train_artifact())
+        .with_context(|| format!("loading train artifact {}", cfg.train_artifact()))?;
+    let np = model.params.len();
+
+    let host = resume.unwrap_or_else(|| init_state(&model, cfg.hp.seed));
+    let start_step = host.step;
+    let mut state = host.to_literals(&model)?;
+
+    let mut corpus = BatchIter::new(
+        CorpusCfg {
+            seed: cfg.hp.seed.wrapping_add(start_step as u64),
+            ..CorpusCfg::train_default(model.vocab)
+        },
+        model.batch,
+        model.seq,
+    );
+    let qmaxes = cfg.quant.bits.qmax_scalars();
+    let qlits: Vec<xla::Literal> = qmaxes.iter().map(|&q| lit_scalar(q)).collect();
+
+    let mut metrics = MetricsWriter::open(cfg)?;
+    let mut probe = ProbeWriter::open(cfg)?;
+
+    let mut losses = Vec::with_capacity(cfg.hp.steps);
+    let mut gnorms = Vec::with_capacity(cfg.hp.steps);
+    let mut val = Vec::new();
+    let mut spike_steps = Vec::new();
+    let mut ema = Ema::new(0.05);
+    let mut diverged_at: Option<usize> = None;
+    let mut min_loss = f64::INFINITY;
+
+    let t0 = Instant::now();
+    let mut steps_done = 0usize;
+
+    for i in 0..cfg.hp.steps {
+        let step = start_step + i + 1; // 1-based Adam counter
+        let batch = corpus.next_batch();
+        let x = lit_i32(&batch.x, &[batch.batch, batch.seq])?;
+        let y = lit_i32(&batch.y, &[batch.batch, batch.seq])?;
+        let lr = lit_scalar(cosine_lr(&cfg.hp, i) as f32);
+        let t = lit_scalar(step as f32);
+
+        let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&lr);
+        inputs.push(&t);
+        for q in &qlits {
+            inputs.push(q);
+        }
+
+        let mut out = exe.run(&inputs)?;
+        let loss = scalar_f32(&out[3 * np])? as f64;
+        let gnorm = scalar_f32(&out[3 * np + 1])? as f64;
+        out.truncate(3 * np);
+        state = out;
+        steps_done = i + 1;
+
+        losses.push(loss);
+        gnorms.push(gnorm);
+        min_loss = min_loss.min(if loss.is_finite() { loss } else { f64::INFINITY });
+
+        // spike + divergence detection
+        let ema_v = ema.update(if loss.is_finite() { loss } else { 1e9 });
+        if loss.is_finite() && i > 5 && loss > ema_v + 1.0 {
+            spike_steps.push(step);
+        }
+        if diverged_at.is_none() && (!loss.is_finite() || (i > 10 && loss > min_loss + 3.0)) {
+            diverged_at = Some(step);
+            log::warn!("{}: diverged at step {step} (loss {loss})", cfg.quant.label());
+        }
+
+        if step % cfg.hp.log_every == 0 || i + 1 == cfg.hp.steps {
+            metrics.log(step, loss, gnorm, cosine_lr(&cfg.hp, i), None)?;
+        }
+
+        // periodic validation
+        if cfg.hp.eval_every > 0 && (step % cfg.hp.eval_every == 0 || i + 1 == cfg.hp.steps)
+        {
+            let vl = validation_loss(rt, cfg, &model, &state[..np])?;
+            val.push((step, vl));
+            metrics.log(step, loss, gnorm, cosine_lr(&cfg.hp, i), Some(vl))?;
+        }
+
+        // activation-outlier probes (Fig. 6): channel abs-max over training
+        if cfg.hp.probe_every > 0 && step % cfg.hp.probe_every == 0 {
+            probe.record(rt, &model, step, &state[..np])?;
+        }
+
+        if cfg.stop_on_divergence && diverged_at.is_some() {
+            break;
+        }
+    }
+    let steps_per_sec = steps_done as f64 / t0.elapsed().as_secs_f64();
+
+    let final_state = HostState::from_literals(&model, &state, start_step + steps_done)?;
+    if cfg.save_ckpt {
+        if let Some(dir) = &cfg.out_dir {
+            save_checkpoint(&dir.join("final.ckpt"), &model, &final_state)?;
+        }
+    }
+
+    Ok(TrainResult {
+        label: cfg.quant.label(),
+        losses,
+        gnorms,
+        val,
+        diverged: diverged_at.is_some(),
+        diverged_at,
+        spike_steps,
+        steps_per_sec,
+        final_state,
+    })
+}
+
+/// Mean validation NLL over `eval_batches` held-out batches.
+pub fn validation_loss(
+    rt: &Runtime,
+    cfg: &TrainCfg,
+    model: &crate::runtime::ModelInfo,
+    params: &[xla::Literal],
+) -> Result<f64> {
+    // fall back to the unquantized eval graph when the model ships no
+    // matching quantized-forward eval artifact (e.g. gpt2s only lowers base)
+    let eval_name = if rt.manifest.artifacts.contains_key(&cfg.eval_artifact()) {
+        cfg.eval_artifact()
+    } else {
+        format!("{}/eval/base", cfg.model)
+    };
+    let exe = rt.exec(&eval_name)?;
+    let mut it = BatchIter::new(
+        CorpusCfg {
+            seed: 77_777, // held-out validation stream
+            ..CorpusCfg::train_default(model.vocab)
+        },
+        model.batch,
+        model.seq,
+    );
+    let mask_data = vec![1.0f32; model.batch * model.seq];
+    let mask = crate::runtime::lit_f32(&mask_data, &[model.batch, model.seq])?;
+    let qw = lit_scalar(cfg.quant.bits.qmax_scalars()[0]);
+    let qa = lit_scalar(cfg.quant.bits.qmax_scalars()[1]);
+    let mut total = 0.0;
+    for _ in 0..cfg.hp.eval_batches.max(1) {
+        let b = it.next_batch();
+        let x = lit_i32(&b.x, &[b.batch, b.seq])?;
+        let y = lit_i32(&b.y, &[b.batch, b.seq])?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.extend([&x, &y, &mask, &qw, &qa]);
+        let out = exe.run(&inputs)?;
+        total += scalar_f32(&out[0])? as f64;
+    }
+    Ok(total / cfg.hp.eval_batches.max(1) as f64)
+}
+
+// ---------------------------------------------------------------------------
+// metric + probe writers
+// ---------------------------------------------------------------------------
+
+struct MetricsWriter {
+    file: Option<std::fs::File>,
+}
+
+impl MetricsWriter {
+    fn open(cfg: &TrainCfg) -> Result<MetricsWriter> {
+        let file = match &cfg.out_dir {
+            None => None,
+            Some(dir) => {
+                std::fs::create_dir_all(dir)?;
+                Some(std::fs::File::create(dir.join("metrics.jsonl"))?)
+            }
+        };
+        Ok(MetricsWriter { file })
+    }
+
+    fn log(
+        &mut self,
+        step: usize,
+        loss: f64,
+        gnorm: f64,
+        lr: f64,
+        val: Option<f64>,
+    ) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            let val_part = match val {
+                Some(v) => format!(",\"val_loss\":{v}"),
+                None => String::new(),
+            };
+            writeln!(
+                f,
+                "{{\"step\":{step},\"loss\":{loss},\"gnorm\":{gnorm},\"lr\":{lr}{val_part}}}"
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Writes per-channel activation abs-max rows over training (Fig. 6 data).
+struct ProbeWriter {
+    file: Option<std::fs::File>,
+}
+
+impl ProbeWriter {
+    fn open(cfg: &TrainCfg) -> Result<ProbeWriter> {
+        let file = match (&cfg.out_dir, cfg.hp.probe_every > 0) {
+            (Some(dir), true) => {
+                std::fs::create_dir_all(dir)?;
+                Some(std::fs::File::create(dir.join("act_outliers.csv"))?)
+            }
+            _ => None,
+        };
+        Ok(ProbeWriter { file })
+    }
+
+    fn record(
+        &mut self,
+        rt: &Runtime,
+        model: &crate::runtime::ModelInfo,
+        step: usize,
+        params: &[xla::Literal],
+    ) -> Result<()> {
+        let Some(f) = &mut self.file else {
+            return Ok(());
+        };
+        let probe = rt.exec(&format!("{}/probe/act", model.name))?;
+        let mut it = BatchIter::new(
+            CorpusCfg {
+                seed: 55_555,
+                ..CorpusCfg::train_default(model.vocab)
+            },
+            model.batch,
+            model.seq,
+        );
+        let b = it.next_batch();
+        let x = lit_i32(&b.x, &[b.batch, b.seq])?;
+        let one = lit_scalar(1.0);
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.extend([&x, &one, &one]);
+        let out = probe.run(&inputs)?;
+        let proj_in = crate::runtime::to_f32(&out[0])?;
+        let maxes = channel_abs_max(&proj_in, model.batch * model.seq, model.d_model);
+        let row: Vec<String> = maxes.iter().map(|m| format!("{m:.5}")).collect();
+        writeln!(f, "{},{}", step, row.join(","))?;
+        Ok(())
+    }
+}

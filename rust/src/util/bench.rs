@@ -1,0 +1,147 @@
+//! Custom micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Bench binaries (`cargo bench`) call [`bench`] per case; it warms up,
+//! auto-scales iteration count to a target measurement time, and prints
+//! criterion-style `name  time ± sd  (throughput)` rows plus a
+//! machine-readable JSONL file under `runs/bench/`.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub sd_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+}
+
+/// Run `f` repeatedly, returning per-iteration timing. `f` should perform one
+/// unit of work and return a value that is black-boxed to prevent DCE.
+pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while t0.elapsed() < Duration::from_millis(150) {
+        std::hint::black_box(f());
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = t0.elapsed().as_secs_f64() / warm_iters as f64;
+    let target = 1.0f64; // seconds of measurement
+    let iters = ((target / per_iter) as u64).clamp(5, 5_000_000);
+
+    // measure in 5 batches for a std-dev estimate
+    let batches = 5u64;
+    let per_batch = (iters / batches).max(1);
+    let mut batch_ns = Vec::with_capacity(batches as usize);
+    for _ in 0..batches {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            std::hint::black_box(f());
+        }
+        batch_ns.push(t.elapsed().as_nanos() as f64 / per_batch as f64);
+    }
+    let mean = batch_ns.iter().sum::<f64>() / batches as f64;
+    let var = batch_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / batches as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        sd_ns: var.sqrt(),
+        iters: per_batch * batches,
+    };
+    println!("{}", format_row(&res, None));
+    res
+}
+
+/// Like [`bench`] but annotates throughput as `elems/s` given elements
+/// processed per iteration.
+pub fn bench_throughput<T, F: FnMut() -> T>(name: &str, elems: u64, mut f: F) -> BenchResult {
+    let res = bench_quiet(name, &mut f);
+    println!("{}", format_row(&res, Some(elems)));
+    res
+}
+
+fn bench_quiet<T, F: FnMut() -> T>(name: &str, f: &mut F) -> BenchResult {
+    let t0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while t0.elapsed() < Duration::from_millis(150) {
+        std::hint::black_box(f());
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = t0.elapsed().as_secs_f64() / warm_iters as f64;
+    let iters = ((1.0 / per_iter) as u64).clamp(5, 5_000_000);
+    let batches = 5u64;
+    let per_batch = (iters / batches).max(1);
+    let mut batch_ns = Vec::with_capacity(batches as usize);
+    for _ in 0..batches {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            std::hint::black_box(f());
+        }
+        batch_ns.push(t.elapsed().as_nanos() as f64 / per_batch as f64);
+    }
+    let mean = batch_ns.iter().sum::<f64>() / batches as f64;
+    let var = batch_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / batches as f64;
+    BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        sd_ns: var.sqrt(),
+        iters: per_batch * batches,
+    }
+}
+
+fn format_row(r: &BenchResult, elems: Option<u64>) -> String {
+    let (t, unit) = human_time(r.mean_ns);
+    let (sd, sd_unit) = human_time(r.sd_ns);
+    let mut row = format!(
+        "{:<52} {:>9.3} {unit} ± {:>6.2} {sd_unit}  ({} iters)",
+        r.name, t, sd, r.iters
+    );
+    if let Some(e) = elems {
+        let rate = e as f64 / (r.mean_ns / 1e9);
+        row.push_str(&format!("  [{:.2} Melem/s]", rate / 1e6));
+    }
+    row
+}
+
+fn human_time(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s ")
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Write bench results as JSONL for the report generator.
+pub fn write_jsonl(path: &std::path::Path, rows: &[BenchResult]) -> anyhow::Result<()> {
+    use std::io::Write;
+    super::ensure_parent(path)?;
+    let mut f = std::fs::File::create(path)?;
+    for r in rows {
+        writeln!(
+            f,
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"sd_ns\":{},\"iters\":{}}}",
+            r.name, r.mean_ns, r.sd_ns, r.iters
+        )?;
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Substrate utilities written in-repo because the offline crate set has no
+//! serde/clap/criterion/proptest: a JSON parser, a deterministic PRNG,
+//! streaming statistics, a CLI argument parser, a property-testing harness,
+//! and an `.npy` reader/writer for cross-language golden files.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod npy;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the repository root by walking up from the current directory until
+/// a directory containing `Cargo.toml` + `artifacts` or `python` is found.
+pub fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() && dir.join("python").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+/// `repo_root()/artifacts`, overridable with `QPRETRAIN_ARTIFACTS`.
+pub fn artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("QPRETRAIN_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    repo_root().join(crate::ARTIFACT_DIR)
+}
+
+/// Create all parent directories of `path`.
+pub fn ensure_parent(path: &Path) -> std::io::Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    Ok(())
+}

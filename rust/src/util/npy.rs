@@ -1,0 +1,145 @@
+//! Minimal `.npy` (NumPy format v1.0) reader/writer for f32 C-order arrays.
+//!
+//! Used for the cross-language golden files emitted by `python -m
+//! compile.aot` and for exporting analysis tensors.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NpyArray {
+    pub fn rows_cols(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            s => bail!("expected 2-D array, got shape {s:?}"),
+        }
+    }
+}
+
+pub fn read_f32<P: AsRef<Path>>(path: P) -> Result<NpyArray> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .map_err(|e| anyhow!("open {:?}: {e}", path.as_ref()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_f32(&buf)
+}
+
+pub fn parse_f32(buf: &[u8]) -> Result<NpyArray> {
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let (major, _minor) = (buf[6], buf[7]);
+    let (hdr_len, hdr_start) = if major == 1 {
+        (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10)
+    } else {
+        (
+            u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
+            12,
+        )
+    };
+    let header = std::str::from_utf8(&buf[hdr_start..hdr_start + hdr_len])?;
+    if !header.contains("'descr': '<f4'") && !header.contains("\"descr\": \"<f4\"") {
+        bail!("only little-endian f32 supported (header: {header})");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("fortran order not supported");
+    }
+    let shape = parse_shape(header)?;
+    let n: usize = shape.iter().product();
+    let body = &buf[hdr_start + hdr_len..];
+    if body.len() < n * 4 {
+        bail!("truncated npy body: {} < {}", body.len(), n * 4);
+    }
+    let data: Vec<f32> = body[..n * 4]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(NpyArray { shape, data })
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let start = header
+        .find("'shape':")
+        .or_else(|| header.find("\"shape\":"))
+        .ok_or_else(|| anyhow!("no shape in header"))?;
+    let rest = &header[start..];
+    let open = rest.find('(').ok_or_else(|| anyhow!("no shape tuple"))?;
+    let close = rest.find(')').ok_or_else(|| anyhow!("no shape tuple end"))?;
+    let inner = &rest[open + 1..close];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let t = part.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse::<usize>()?);
+    }
+    if out.is_empty() {
+        out.push(1); // 0-d scalar -> treat as length-1
+    }
+    Ok(out)
+}
+
+pub fn write_f32<P: AsRef<Path>>(path: P, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that total header (magic+ver+len+dict+\n) is a multiple of 64
+    let unpadded = MAGIC.len() + 4 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    super::ensure_parent(path.as_ref())?;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for x in data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qpretrain_npy_test");
+        let path = dir.join("a.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 3.0).collect();
+        write_f32(&path, &[3, 4], &data).unwrap();
+        let arr = read_f32(&path).unwrap();
+        assert_eq!(arr.shape, vec![3, 4]);
+        assert_eq!(arr.data, data);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_f32(b"not npy at all").is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over `n` generated cases; on failure it greedily shrinks
+//! the failing input with a user-supplied shrinker and reports the seed so
+//! the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            seed: 0xC0FFEE,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+/// Check `prop` over `cases` inputs drawn from `gen`. Panics (with the seed
+/// and the shrunk counterexample debug-printed) on the first failure.
+pub fn check<T, G, P>(cfg: Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    check_with_shrink(cfg, gen, |_| Vec::new(), prop)
+}
+
+/// Like [`check`] but with a shrinker producing smaller candidate inputs.
+pub fn check_with_shrink<T, G, S, P>(cfg: Config, gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).fork(case as u64);
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // shrink greedily
+        let mut worst = input;
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink_steps {
+            for cand in shrink(&worst) {
+                steps += 1;
+                if !prop(&cand) {
+                    worst = cand;
+                    continue 'outer;
+                }
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={:#x}, case={case}).\ncounterexample: {worst:#?}",
+            cfg.seed
+        );
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    pub fn f32_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = rng.range(1, max_len + 1);
+        (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+
+    /// Occasionally injects outliers / zeros / negatives — the adversarial
+    /// patterns the paper's quantization analysis cares about.
+    pub fn f32_vec_adversarial(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+        let mut v = f32_vec(rng, max_len, 1.0);
+        match rng.below(4) {
+            0 => {} // plain gaussian
+            1 => {
+                let i = rng.below(v.len());
+                v[i] = 1e6; // massive outlier
+            }
+            2 => v.iter_mut().for_each(|x| *x = 0.0),
+            _ => {
+                let i = rng.below(v.len());
+                v[i] = -1e-7; // tiny value near zero bin
+            }
+        }
+        v
+    }
+
+    /// Shrinker for vectors: halve length, zero elements.
+    pub fn shrink_f32_vec(v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+        }
+        for i in 0..v.len().min(4) {
+            if v[i] != 0.0 {
+                let mut w = v.clone();
+                w[i] = 0.0;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            Config::default(),
+            |rng| gen::f32_vec(rng, 32, 1.0),
+            |v| !v.is_empty(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        check_with_shrink(
+            Config {
+                cases: 50,
+                ..Default::default()
+            },
+            |rng| gen::f32_vec(rng, 64, 10.0),
+            gen::shrink_f32_vec,
+            |v| v.iter().all(|x| x.abs() < 5.0), // will fail for gaussian*10
+        );
+    }
+}

@@ -1,0 +1,241 @@
+//! Streaming statistics, histograms and tensor summaries used by the
+//! analysis modules (activation outliers, gradient sparsity, Adam zero-bin).
+
+/// Basic summary of a slice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub abs_max: f64,
+}
+
+pub fn summarize(xs: &[f32]) -> Summary {
+    if xs.is_empty() {
+        return Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            abs_max: 0.0,
+        };
+    }
+    let n = xs.len();
+    let mut sum = 0.0f64;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for &x in xs {
+        let x = x as f64;
+        sum += x;
+        min = min.min(x);
+        max = max.max(x);
+    }
+    let mean = sum / n as f64;
+    let var = xs
+        .iter()
+        .map(|&x| {
+            let d = x as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min,
+        max,
+        abs_max: min.abs().max(max.abs()),
+    }
+}
+
+/// Quantile of a slice (copies + sorts; fine at analysis sizes).
+pub fn quantile(xs: &[f32], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((v.len() - 1) as f64 * q).round() as usize;
+    v[idx] as f64
+}
+
+/// Excess kurtosis — the paper's outlier phenomena show up as heavy tails.
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    let s = summarize(xs);
+    if s.n == 0 || s.std == 0.0 {
+        return 0.0;
+    }
+    let m4 = xs
+        .iter()
+        .map(|&x| {
+            let d = (x as f64 - s.mean) / s.std;
+            d.powi(4)
+        })
+        .sum::<f64>()
+        / s.n as f64;
+    m4 - 3.0
+}
+
+/// Fraction of entries with |x| <= eps * max|x| (gradient sparsity, Fig. 10).
+pub fn sparsity(xs: &[f32], rel_eps: f64) -> f64 {
+    let s = summarize(xs);
+    if s.n == 0 || s.abs_max == 0.0 {
+        return 1.0;
+    }
+    let thr = rel_eps * s.abs_max;
+    xs.iter().filter(|&&x| (x as f64).abs() <= thr).count() as f64 / s.n as f64
+}
+
+/// Fixed-bin histogram over [lo, hi]; out-of-range values clamp to end bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x as f64);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fraction of mass in the bin containing `x`.
+    pub fn frac_at(&self, x: f64) -> f64 {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] as f64 / self.total().max(1) as f64
+    }
+
+    /// Render as `bin_center,count` CSV lines.
+    pub fn to_csv(&self) -> String {
+        let bins = self.counts.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        let mut out = String::from("bin_center,count\n");
+        for (i, c) in self.counts.iter().enumerate() {
+            out.push_str(&format!("{},{}\n", self.lo + (i as f64 + 0.5) * w, c));
+        }
+        out
+    }
+}
+
+/// Per-channel abs-max over a row-major (rows, cols) matrix — the statistic
+/// the paper tracks over training to show persistent outlier channels (Fig 6).
+pub fn channel_abs_max(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols);
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        for (c, &x) in row.iter().enumerate() {
+            let a = x.abs();
+            if a > out[c] {
+                out[c] = a;
+            }
+        }
+    }
+    out
+}
+
+/// Exponential moving average (loss-spike detection).
+#[derive(Debug, Clone, Copy)]
+pub struct Ema {
+    pub alpha: f64,
+    pub value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, -4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 0.5).abs() < 1e-9);
+        assert_eq!(s.min, -4.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.abs_max, 4.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f32> = (0..101).map(|i| i as f32).collect();
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert_eq!(quantile(&xs, 0.5), 50.0);
+    }
+
+    #[test]
+    fn histogram_clamps_and_counts() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.add_all(&[-5.0, -0.9, -0.1, 0.1, 0.9, 5.0]);
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.counts[0], 2); // -5 clamped + -0.9
+        assert_eq!(h.counts[3], 2); // 0.9 + 5 clamped
+    }
+
+    #[test]
+    fn sparsity_detects_spiky_grads() {
+        let mut xs = vec![1e-6f32; 1000];
+        xs[0] = 1.0;
+        assert!(sparsity(&xs, 1e-3) > 0.99);
+        let dense: Vec<f32> = (0..1000).map(|i| (i as f32 + 1.0) / 1000.0).collect();
+        assert!(sparsity(&dense, 1e-3) < 0.01);
+    }
+
+    #[test]
+    fn channel_max() {
+        // 2x3: channels are columns
+        let m = channel_abs_max(&[1.0, -5.0, 2.0, -3.0, 4.0, 0.5], 2, 3);
+        assert_eq!(m, vec![3.0, 5.0, 2.0]);
+    }
+
+    #[test]
+    fn kurtosis_heavy_tail() {
+        let normalish: Vec<f32> = (0..1000).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+        let mut heavy = vec![0.01f32; 1000];
+        heavy[3] = 10.0;
+        assert!(kurtosis(&heavy) > kurtosis(&normalish) + 10.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Cross-language golden tests: rust `quant` must match the python oracle
+//! (`compile.kernels.ref`) bit-for-bit on the golden vectors emitted by
+//! `make artifacts`.
+
+use qpretrain::config::{Granularity, Scheme};
+use qpretrain::quant::qdq_copy;
+use qpretrain::util::{artifact_dir, npy};
+
+fn golden_dir() -> std::path::PathBuf {
+    artifact_dir().join("golden")
+}
+
+fn input_grid() -> (Vec<f32>, usize, usize) {
+    // must match aot.write_goldens: ((31 i + 17 j) mod 257 - 128)/16
+    let (rows, cols) = (64usize, 48usize);
+    let mut v = Vec::with_capacity(rows * cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            v.push((((31 * i + 17 * j) % 257) as f32 - 128.0) / 16.0);
+        }
+    }
+    (v, rows, cols)
+}
+
+#[test]
+fn golden_input_matches_formula() {
+    let path = golden_dir().join("input.npy");
+    if !path.exists() {
+        eprintln!("skipping: goldens not built (run `make artifacts`)");
+        return;
+    }
+    let arr = npy::read_f32(&path).unwrap();
+    let (want, rows, cols) = input_grid();
+    assert_eq!(arr.shape, vec![rows, cols]);
+    assert_eq!(arr.data, want, "python golden input grid differs from rust");
+}
+
+#[test]
+fn rust_qdq_bitexact_with_python() {
+    let gdir = golden_dir();
+    if !gdir.exists() {
+        eprintln!("skipping: goldens not built (run `make artifacts`)");
+        return;
+    }
+    let (x, rows, cols) = input_grid();
+    let cases = [
+        ("pt", Granularity::PerTensor),
+        ("ptok", Granularity::PerToken),
+        ("pc", Granularity::PerChannel),
+    ];
+    for (short, gran) in cases {
+        for bits in [2u32, 4, 8] {
+            let want = npy::read_f32(gdir.join(format!("qdq_{short}_b{bits}.npy"))).unwrap();
+            let got = qdq_copy(&x, rows, cols, Scheme::new(bits, gran));
+            assert_eq!(
+                got, want.data,
+                "bit-exactness violated for {short} b{bits}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_qdq_asym_bitexact_with_python() {
+    let gdir = golden_dir();
+    if !gdir.exists() {
+        eprintln!("skipping: goldens not built");
+        return;
+    }
+    let (x, rows, cols) = input_grid();
+    for bits in [2u32, 4, 8] {
+        let want = npy::read_f32(gdir.join(format!("qdq_ptok_asym_b{bits}.npy"))).unwrap();
+        let got = qdq_copy(&x, rows, cols, Scheme::asym(bits, Granularity::PerToken));
+        assert_eq!(got, want.data, "asym bit-exactness violated at b{bits}");
+    }
+    // positive (post-GELU-like) input
+    let xp = npy::read_f32(gdir.join("input_pos.npy")).unwrap();
+    for bits in [4u32, 8] {
+        let want = npy::read_f32(gdir.join(format!("qdq_pos_ptok_asym_b{bits}.npy"))).unwrap();
+        let got = qdq_copy(&xp.data, xp.shape[0], xp.shape[1], Scheme::asym(bits, Granularity::PerToken));
+        assert_eq!(got, want.data, "positive asym bit-exactness at b{bits}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Property-based tests (in-repo quickcheck harness) on the quantization
+//! invariants the paper's methodology relies on, plus coordinator-state
+//! invariants (LR schedule, config labelling, JSON round-trips).
+
+use qpretrain::config::{cosine_lr, Granularity, Scheme, TrainHp};
+use qpretrain::quant::{params_sym, qdq_copy, quantize_one, PackedTensor};
+use qpretrain::util::quickcheck::{check, check_with_shrink, gen, Config};
+use qpretrain::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config {
+        cases,
+        ..Config::default()
+    }
+}
+
+fn gen_matrix(rng: &mut Rng) -> (Vec<f32>, usize, usize) {
+    let rows = rng.range(1, 24);
+    let cols = rng.range(1, 24);
+    let mut data = gen::f32_vec_adversarial(rng, rows * cols);
+    data.resize(rows * cols, 0.0);
+    (data, rows, cols)
+}
+
+#[test]
+fn prop_qdq_error_bounded_by_half_scale() {
+    check(cfg(200), gen_matrix, |(data, rows, cols)| {
+        for gran in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
+            let scheme = Scheme::new(4, gran);
+            let q = qdq_copy(data, *rows, *cols, scheme);
+            for r in 0..*rows {
+                for c in 0..*cols {
+                    let x = data[r * cols + c];
+                    let y = q[r * cols + c];
+                    // group scale:
+                    let group: Vec<f32> = match gran {
+                        Granularity::PerTensor => data.clone(),
+                        Granularity::PerToken => data[r * cols..(r + 1) * cols].to_vec(),
+                        Granularity::PerChannel => {
+                            (0..*rows).map(|rr| data[rr * cols + c]).collect()
+                        }
+                    };
+                    let p = params_sym(&group, 7.0);
+                    // within the clip range the error is at most s/2 (+eps)
+                    if x.abs() <= 7.0 * p.scale {
+                        if (y - x).abs() > p.scale / 2.0 + 1e-5 {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_qdq_idempotent() {
+    check(cfg(150), gen_matrix, |(data, rows, cols)| {
+        for gran in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
+            for scheme in [Scheme::new(4, gran), Scheme::asym(4, gran)] {
+                let once = qdq_copy(data, *rows, *cols, scheme);
+                let twice = qdq_copy(&once, *rows, *cols, scheme);
+                if once
+                    .iter()
+                    .zip(&twice)
+                    .any(|(a, b)| (a - b).abs() > 1e-5 * a.abs().max(1.0))
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_qdq_preserves_sign_symmetric() {
+    check(cfg(150), gen_matrix, |(data, rows, cols)| {
+        let q = qdq_copy(data, *rows, *cols, Scheme::new(8, Granularity::PerTensor));
+        data.iter()
+            .zip(&q)
+            .all(|(&x, &y)| y == 0.0 || (x >= 0.0) == (y >= 0.0))
+    });
+}
+
+#[test]
+fn prop_qdq_monotone_on_grid() {
+    // quantize_one is monotone non-decreasing in x for a fixed scale
+    check(
+        cfg(200),
+        |rng| {
+            let mut v = gen::f32_vec(rng, 32, 2.0);
+            v.push(rng.normal_f32(0.0, 5.0));
+            v
+        },
+        |v| {
+            let p = params_sym(v, 7.0);
+            let mut sorted = v.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let codes: Vec<f32> = sorted.iter().map(|&x| quantize_one(x, p, 7.0)).collect();
+            codes.windows(2).all(|w| w[0] <= w[1])
+        },
+    );
+}
+
+#[test]
+fn prop_packed_roundtrip_equals_fake_quant() {
+    check_with_shrink(
+        cfg(100),
+        |rng| {
+            let (d, r, c) = gen_matrix(rng);
+            d.iter().map(|x| x * 0.1).collect::<Vec<f32>>().tap(r, c)
+        },
+        |t| {
+            let mut out = Vec::new();
+            if t.0.len() > 2 {
+                out.push((t.0[..t.0.len() / 2].to_vec(), 1, t.0.len() / 2));
+            }
+            out
+        },
+        |(data, rows, cols)| {
+            for bits in [4u32, 8] {
+                for gran in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
+                    let scheme = Scheme::new(bits, gran);
+                    let packed = PackedTensor::quantize(data, *rows, *cols, scheme);
+                    let deq = packed.dequantize();
+                    let fake = qdq_copy(data, *rows, *cols, scheme);
+                    if deq
+                        .iter()
+                        .zip(&fake)
+                        .any(|(a, b)| (a - b).abs() > 1e-4 * b.abs().max(1e-3))
+                    {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+trait Tap {
+    fn tap(self, r: usize, c: usize) -> (Vec<f32>, usize, usize);
+}
+impl Tap for Vec<f32> {
+    fn tap(mut self, r: usize, c: usize) -> (Vec<f32>, usize, usize) {
+        self.resize(r * c, 0.0);
+        (self, r, c)
+    }
+}
+
+#[test]
+fn prop_lr_schedule_within_bounds() {
+    check(
+        cfg(100),
+        |rng| TrainHp {
+            steps: rng.range(10, 2000),
+            warmup: rng.range(1, 9),
+            lr_max: rng.f64() * 1e-2 + 1e-5,
+            lr_min: 1e-6,
+            ..TrainHp::default()
+        },
+        |hp| {
+            (0..=hp.steps).all(|s| {
+                let lr = cosine_lr(hp, s);
+                lr >= 0.0 && lr <= hp.lr_max * (1.0 + 1e-9)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_corpus_tokens_in_range_and_deterministic() {
+    use qpretrain::data::{BatchIter, CorpusCfg};
+    check(
+        cfg(40),
+        |rng| (rng.range(16, 512), rng.next_u64()),
+        |(vocab, seed)| {
+            let cfg = CorpusCfg {
+                seed: *seed,
+                ..CorpusCfg::train_default((*vocab).max(16))
+            };
+            let a = BatchIter::new(cfg.clone(), 2, 32).next_batch();
+            let b = BatchIter::new(cfg.clone(), 2, 32).next_batch();
+            a.x == b.x && a.x.iter().all(|&t| (t as usize) < cfg.usable_vocab())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use qpretrain::util::json::{self, Value};
+    check(
+        cfg(100),
+        |rng| {
+            fn value(rng: &mut Rng, depth: usize) -> Value {
+                match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                    0 => Value::Null,
+                    1 => Value::Bool(rng.bool_with(0.5)),
+                    2 => Value::Num((rng.normal() * 100.0).round()),
+                    3 => Value::Str(format!("s{}", rng.below(1000))),
+                    4 => Value::Arr((0..rng.below(4)).map(|_| value(rng, depth + 1)).collect()),
+                    _ => Value::Obj(
+                        (0..rng.below(4))
+                            .map(|i| (format!("k{i}"), value(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            value(rng, 0)
+        },
+        |v| json::parse(&v.to_json()).map(|p| p == *v).unwrap_or(false),
+    );
+}
