@@ -1,11 +1,12 @@
-//! End-to-end validation (DESIGN.md §E-E2E): pre-train the ~100M-parameter
-//! `gpt2s` model (12L/768d/12h, 8k vocab) for a few hundred steps with the
-//! paper's recommended W8A8 recipe, logging the loss curve and throughput,
-//! then evaluate perplexity on the held-out sets.
+//! End-to-end validation: pre-train a model with the paper's recommended
+//! W8A8 recipe on the native backend, logging the loss curve and
+//! throughput, then evaluate perplexity on the held-out sets.
 //!
-//! Run: `cargo run --release --example pretrain_e2e -- [steps] [base|wa]`
-//! Defaults to 150 steps of the `wa` (W8 per-channel + A8 per-token) recipe.
-//! Results are recorded in EXPERIMENTS.md §E2E.
+//! Run: `cargo run --release --example pretrain_e2e -- [steps] [base|wa] [model]`
+//! Defaults to 40 steps of the `wa` (W8 per-channel + A8 per-token) recipe
+//! on the `t4` study model. `micro` is seconds-fast; `gpt2s` (~100M params)
+//! is minutes-per-step on the single-threaded native kernels and is the
+//! target of the `pjrt` feature build.
 
 use std::time::Instant;
 
@@ -13,17 +14,20 @@ use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
 use qpretrain::eval::{perplexity_suite, EvalQuant};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
-use qpretrain::util::{artifact_dir, repo_root};
+use qpretrain::util::repo_root;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
     let structure = args.get(2).cloned().unwrap_or_else(|| "wa".to_string());
+    let model_name = args.get(3).cloned().unwrap_or_else(|| "t4".to_string());
 
-    let rt = Runtime::new(&artifact_dir())?;
-    let model = rt.manifest.model("gpt2s")?.clone();
+    let rt = Runtime::open_default()?;
+    let model = rt.model(&model_name)?.clone();
     println!(
-        "gpt2s: {} layers, d={}, {} params ({:.1}M), batch {} x seq {}",
+        "{} [{} backend]: {} layers, d={}, {} params ({:.2}M), batch {} x seq {}",
+        model.name,
+        rt.backend_name(),
         model.n_layer,
         model.d_model,
         model.n_params,
@@ -42,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         }
     };
     let mut cfg = TrainCfg::new(
-        "gpt2s",
+        &model_name,
         QuantRunCfg {
             structure: structure.clone(),
             bits,
@@ -51,14 +55,16 @@ fn main() -> anyhow::Result<()> {
             steps,
             lr_max: 6e-4, // the paper's GPT-2 learning rate
             lr_min: 6e-5,
-            warmup: steps / 10,
+            warmup: (steps / 10).max(1),
             eval_every: (steps / 4).max(1),
             eval_batches: 2,
             log_every: 1,
             ..TrainHp::default()
         },
     );
-    let out = repo_root().join("runs/e2e").join(format!("{structure}_s{steps}"));
+    let out = repo_root()
+        .join("runs/e2e")
+        .join(format!("{model_name}_{structure}_s{steps}"));
     cfg.out_dir = Some(out.clone());
     cfg.save_ckpt = true;
 
@@ -88,19 +94,11 @@ fn main() -> anyhow::Result<()> {
         r.diverged
     );
 
-    let params = r.final_state.param_literals(&model)?;
     let q = EvalQuant {
         qmax_w: bits.qmax_scalars()[0],
         qmax_a: bits.qmax_scalars()[1],
     };
-    let eval_art = if structure == "base" {
-        "gpt2s/eval/base".to_string()
-    } else {
-        // gpt2s ships a base eval artifact; W8A8 fwd-quant eval uses qmax on
-        // the t4-style wa eval only for t4 — for gpt2s we score unquantized.
-        "gpt2s/eval/base".to_string()
-    };
-    let ppl = perplexity_suite(&rt, &eval_art, &model, &params, 2, q)?;
+    let ppl = perplexity_suite(&rt, cfg.eval_structure(), &model, &r.final_state.params, 2, q)?;
     println!("\nheld-out perplexity:");
     for (k, v) in &ppl {
         println!("  {k}: {v:.2}");

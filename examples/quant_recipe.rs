@@ -1,8 +1,8 @@
-//! The paper's §4.5 recipe in action: train the study model under
+//! The paper's §4.5 recipe in action: train a small model under
 //! (a) fp32 baseline, (b) W8A8 (recommended), (c) W8A8G8 (not recommended),
 //! and compare validation loss + downstream accuracy — reproducing the
 //! Fig. 13 conclusion that W+A quantization tracks the baseline while adding
-//! gradient quantization costs real performance.
+//! gradient quantization costs real performance. Runs on the native backend.
 //!
 //! Run: `cargo run --release --example quant_recipe -- [steps]`
 
@@ -10,15 +10,14 @@ use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
 use qpretrain::eval::{fewshot_suite, EvalQuant};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
-use qpretrain::util::artifact_dir;
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(120);
-    let rt = Runtime::new(&artifact_dir())?;
-    let model = rt.manifest.model("t4")?.clone();
+        .unwrap_or(60);
+    let rt = Runtime::open_default()?;
+    let model = rt.model("micro")?.clone();
 
     let configs = [
         ("baseline", "base", BitWidths::none()),
@@ -47,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     println!("|---|---|---|");
     for (name, structure, bits) in configs {
         let cfg = TrainCfg::new(
-            "t4",
+            "micro",
             QuantRunCfg {
                 structure: structure.into(),
                 bits,
@@ -58,12 +57,19 @@ fn main() -> anyhow::Result<()> {
             },
         );
         let r = train(&rt, &cfg)?;
-        let params = r.final_state.param_literals(&model)?;
         let q = EvalQuant {
             qmax_w: bits.qmax_scalars()[0],
             qmax_a: bits.qmax_scalars()[1],
         };
-        let fs = fewshot_suite(&rt, &cfg.eval_artifact(), &model, &params, 16, 2, q)?;
+        let fs = fewshot_suite(
+            &rt,
+            cfg.eval_structure(),
+            &model,
+            &r.final_state.params,
+            16,
+            2,
+            q,
+        )?;
         println!(
             "| {name} | {:.4} | {:.1}% |",
             r.final_val_loss(),

@@ -1,25 +1,25 @@
-//! Quickstart: load the AOT artifacts, pre-train the study model for a few
-//! steps with the paper's recommended recipe (8-bit per-channel weights +
-//! 8-bit per-token activations), and print the loss curve.
+//! Quickstart: pre-train a small model for a few steps with the paper's
+//! recommended recipe (8-bit per-channel weights + 8-bit per-token
+//! activations) on the pure-rust native backend, and print the loss curve.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` once).
+//! No artifacts, Python, or PJRT needed. (With `--features pjrt` and
+//! `make artifacts`, the same code executes AOT HLO instead.)
 
 use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
-use qpretrain::util::artifact_dir;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
+    let rt = Runtime::open_default()?;
     println!(
-        "loaded manifest: {} artifacts, models: {:?}",
-        rt.manifest.artifacts.len(),
+        "backend: {}, models: {:?}",
+        rt.backend_name(),
         rt.manifest.models.keys().collect::<Vec<_>>()
     );
 
     let cfg = TrainCfg::new(
-        "t4",
+        "micro",
         QuantRunCfg {
             structure: "wa".into(), // W8 per-channel + A8 per-token (paper §4.5)
             bits: BitWidths {

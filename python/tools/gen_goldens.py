@@ -1,0 +1,83 @@
+"""Regenerate rust/tests/golden_data/qdq_golden.json from the python quant
+oracle (compile.kernels.ref), the cross-language single source of truth.
+
+f32 values are stored as u32 bit patterns so the JSON round-trip is exactly
+lossless; rust/tests/golden.rs reassembles them with f32::from_bits and
+asserts bit-for-bit equality against rust quant::qdq.
+
+Run from the repo root:  python3 python/tools/gen_goldens.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref as K
+
+ROWS, COLS = 32, 24
+
+
+def bits(arr):
+    return np.asarray(arr, np.float32).reshape(-1).view(np.uint32).tolist()
+
+
+def main():
+    i = np.arange(ROWS)[:, None]
+    j = np.arange(COLS)[None, :]
+    # exact small rationals so rust regenerates the grid bit-identically:
+    # x[i,j] = ((31*i + 17*j) mod 257 - 128) / 16
+    x = (((31 * i + 17 * j) % 257 - 128) / 16.0).astype(np.float32)
+    xp = (np.abs(x) + 0.25).astype(np.float32)  # post-GELU-like positive input
+
+    cases = []
+    for gran, short in [
+        ("per_tensor", "pt"),
+        ("per_token", "ptok"),
+        ("per_channel", "pc"),
+    ]:
+        for b in (2, 4, 8):
+            out = K.qdq(jnp.asarray(x), K.bits_to_qmax(b), gran)
+            cases.append(
+                {"name": f"qdq_{short}_b{b}", "gran": gran, "asym": False,
+                 "bits": b, "input": "input", "out_bits": bits(out)}
+            )
+    for b in (2, 4, 8):
+        out = K.qdq(jnp.asarray(x), K.bits_to_qmax(b), "per_token", asymmetric=True)
+        cases.append(
+            {"name": f"qdq_ptok_asym_b{b}", "gran": "per_token", "asym": True,
+             "bits": b, "input": "input", "out_bits": bits(out)}
+        )
+    for b in (4, 8):
+        out = K.qdq(jnp.asarray(xp), K.bits_to_qmax(b), "per_token", asymmetric=True)
+        cases.append(
+            {"name": f"qdq_pos_ptok_asym_b{b}", "gran": "per_token", "asym": True,
+             "bits": b, "input": "input_pos", "out_bits": bits(out)}
+        )
+
+    doc = {
+        "comment": "Golden fake-quant vectors from python/compile/kernels/ref.py "
+        f"(jax {jax.__version__}). f32 values stored as u32 bit patterns. "
+        "Regenerate: python3 python/tools/gen_goldens.py",
+        "rows": ROWS,
+        "cols": COLS,
+        "input_bits": bits(x),
+        "input_pos_bits": bits(xp),
+        "cases": cases,
+    }
+    out_path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden_data",
+        "qdq_golden.json",
+    )
+    with open(os.path.normpath(out_path), "w") as f:
+        json.dump(doc, f)
+    print(f"wrote {len(cases)} cases -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,22 +1,22 @@
 //! Bit-width ablation bench (extension of §4.1): because qmax is a runtime
-//! scalar, one per-channel weight artifact serves every bit-width. Trains a
+//! scalar, one per-channel weight structure serves every bit-width. Trains a
 //! short run at 2..8 bits and reports final loss — the knee of the curve is
 //! the paper's 4-vs-8-bit story.
 
 use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
-use qpretrain::util::artifact_dir;
 
 fn main() {
-    let rt = Runtime::new(&artifact_dir()).expect("run `make artifacts` first");
+    let rt = Runtime::open_default().expect("runtime");
     let steps = 25;
-    println!("w_pc weight quantization, {steps} steps, runtime qmax sweep:");
+    println!("backend: {}", rt.backend_name());
+    println!("w_pc weight quantization on micro, {steps} steps, runtime qmax sweep:");
     println!("bits  final_loss  diverged");
     for bits in [0u32, 2, 3, 4, 5, 6, 8] {
         let structure = if bits == 0 { "base" } else { "w_pc" };
         let cfg = TrainCfg::new(
-            "t4",
+            "micro",
             QuantRunCfg {
                 structure: structure.into(),
                 bits: BitWidths {

@@ -1,35 +1,52 @@
-//! L1 kernel benches through the full AOT path: pallas-lowered HLO vs
-//! pure-jnp HLO vs plain matmul, executed on the PJRT CPU client.
-//! (interpret=True pallas on CPU measures *structure*, not TPU speed — see
-//! DESIGN.md §Perf for the VMEM/MXU estimates.)
+//! Native-backend kernel benches: the matmul variants that carry the
+//! forward/backward passes, the fake-quant oracle at every granularity, and
+//! the fused qdq+matmul path vs a plain matmul (the §3.3 "linear layers
+//! dominate" substrate). This is the hot path the ROADMAP's rayon-parallel
+//! tiling work will be measured against.
 
-use qpretrain::runtime::{lit_f32, lit_scalar, Runtime};
-use qpretrain::util::bench::{bench, section};
-use qpretrain::util::{artifact_dir, rng::Rng};
+use qpretrain::backend::math::{matmul, matmul_nt, matmul_tn};
+use qpretrain::config::{Granularity, Scheme};
+use qpretrain::quant::qdq_copy;
+use qpretrain::util::bench::{bench, bench_throughput, section};
+use qpretrain::util::rng::Rng;
 
 fn main() {
-    let rt = Runtime::new(&artifact_dir()).expect("run `make artifacts` first");
     let mut rng = Rng::new(2);
     let (m, n, k) = (256usize, 512usize, 256usize);
-    let x = lit_f32(&rng.normal_vec(m * n, 0.0, 1.0), &[m, n]).unwrap();
-    let w = lit_f32(&rng.normal_vec(n * k, 0.0, 1.0), &[n, k]).unwrap();
-    let q = lit_scalar(127.0);
+    let x = rng.normal_vec(m * n, 0.0, 1.0); // (m, n)
+    let w = rng.normal_vec(n * k, 0.0, 1.0); // (n, k)
+    let wt = rng.normal_vec(k * n, 0.0, 1.0); // (k, n) for the nt variant
+    let g = rng.normal_vec(m * k, 0.0, 1.0); // (m, k) for the tn variant
 
-    section("L1 qdq kernels via PJRT (256x512 f32)");
-    for art in [
-        "k/qdq_pt_pallas",
-        "k/qdq_pc_pallas",
-        "k/qdq_ptok_pallas",
-        "k/qdq_ptok_asym_pallas",
-        "k/qdq_pt_jnp",
+    section("native qdq kernels (256x512 f32)");
+    for (name, gran, asym) in [
+        ("qdq_pt", Granularity::PerTensor, false),
+        ("qdq_pc", Granularity::PerChannel, false),
+        ("qdq_ptok", Granularity::PerToken, false),
+        ("qdq_ptok_asym", Granularity::PerToken, true),
     ] {
-        let exe = rt.exec(art).unwrap();
-        bench(art, || exe.run(&[&x, &q]).unwrap());
+        let scheme = if asym {
+            Scheme::asym(8, gran)
+        } else {
+            Scheme::new(8, gran)
+        };
+        bench_throughput(name, (m * n) as u64, || qdq_copy(&x, m, n, scheme));
     }
 
-    section("fused QDQ-matmul vs plain matmul (256x512 @ 512x256)");
-    let qmm = rt.exec("k/qmatmul_pallas").unwrap();
-    bench("k/qmatmul_pallas", || qmm.run(&[&x, &w, &q, &q]).unwrap());
-    let mm = rt.exec("k/matmul_ref").unwrap();
-    bench("k/matmul_ref", || mm.run(&[&x, &w, &q, &q]).unwrap());
+    section("matmul kernels at forward/backward shapes (2*m*n*k FLOPs each)");
+    let flops = (2 * m * n * k) as u64;
+    // forward: y = x @ w
+    bench_throughput("matmul_nn (fwd)", flops, || matmul(&x, &w, m, n, k));
+    // dx = g @ w^T
+    bench_throughput("matmul_nt (dx)", flops, || matmul_nt(&x, &wt, m, n, k));
+    // dw = x^T @ g
+    bench_throughput("matmul_tn (dw)", flops, || matmul_tn(&x, &g, m, n, k));
+
+    section("fused qdq-matmul vs plain matmul (the paper's W8A8 GEMM)");
+    bench("qmatmul (a per-token + w per-channel + gemm)", || {
+        let xq = qdq_copy(&x, m, n, Scheme::new(8, Granularity::PerToken));
+        let wq = qdq_copy(&w, n, k, Scheme::new(8, Granularity::PerChannel));
+        matmul(&xq, &wq, m, n, k)
+    });
+    bench("matmul_plain", || matmul(&x, &w, m, n, k));
 }

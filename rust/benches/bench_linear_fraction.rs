@@ -1,14 +1,11 @@
 //! Fig. 3 regeneration: measured share of block fwd+bwd time spent in linear
 //! layers vs the attention core, across GPT-2 sizes and sequence lengths,
-//! on the PJRT CPU client (plus the analytic FLOPs-model prediction).
+//! on the native matmul kernels (plus the analytic FLOPs-model prediction).
 
-use qpretrain::runtime::Runtime;
 use qpretrain::timemodel::{fig3_rows, rows_to_csv};
-use qpretrain::util::artifact_dir;
 
 fn main() {
-    let rt = Runtime::new(&artifact_dir()).expect("run `make artifacts` first");
-    let rows = fig3_rows(&rt, 2).expect("timing failed");
+    let rows = fig3_rows(2);
     print!("{}", rows_to_csv(&rows));
 
     // the paper's qualitative claims, checked on the measured numbers

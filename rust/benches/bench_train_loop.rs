@@ -1,21 +1,19 @@
-//! L3 end-to-end train-step benches (feeds §Perf): steps/s for the study
-//! model across quantization structures, plus a breakdown of where the
-//! per-step wall time goes (device execute vs host literal traffic vs data
-//! generation).
+//! L3 end-to-end train-step benches (feeds §Perf): steps/s for the native
+//! backend across quantization structures, plus a breakdown of where the
+//! per-step wall time goes (forward+backward+Adam vs data generation).
 
 use std::time::Instant;
 
 use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
 use qpretrain::data::{BatchIter, CorpusCfg};
 use qpretrain::model::init_state;
-use qpretrain::runtime::{lit_i32, lit_scalar, Runtime};
+use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
-use qpretrain::util::artifact_dir;
 use qpretrain::util::bench::section;
 
-fn steps_per_sec(rt: &Runtime, structure: &str, bits: BitWidths, steps: usize) -> f64 {
+fn steps_per_sec(rt: &Runtime, model: &str, structure: &str, bits: BitWidths, steps: usize) -> f64 {
     let cfg = TrainCfg::new(
-        "t4",
+        model,
         QuantRunCfg {
             structure: structure.into(),
             bits,
@@ -32,27 +30,33 @@ fn steps_per_sec(rt: &Runtime, structure: &str, bits: BitWidths, steps: usize) -
 }
 
 fn main() {
-    let rt = Runtime::new(&artifact_dir()).expect("run `make artifacts` first");
-    let steps = 10;
+    let rt = Runtime::open_default().expect("runtime");
+    println!("backend: {}", rt.backend_name());
 
-    section("t4 train step throughput (steps/s, batch 16 x seq 128)");
+    section("micro train step throughput (steps/s, batch 4 x seq 128)");
     for (name, structure, bits) in [
         ("baseline", "base", BitWidths::none()),
         ("w8_pc", "w_pc", BitWidths { weights: 8, ..BitWidths::none() }),
         ("w8a8", "wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
         ("w8a8g8", "wag", BitWidths { weights: 8, acts: 8, grads: 8, ..BitWidths::none() }),
-        ("w8_pc_pallas", "w_pc_pallas", BitWidths { weights: 8, ..BitWidths::none() }),
         ("m1_8_pc", "m1_pc", BitWidths { m1: 8, ..BitWidths::none() }),
     ] {
-        let sps = steps_per_sec(&rt, structure, bits, steps);
+        let sps = steps_per_sec(&rt, "micro", structure, bits, 10);
+        println!("{name:<16} {sps:>7.2} steps/s   ({:.0} tokens/s)", sps * 512.0);
+    }
+
+    section("t4 train step throughput (study model, batch 16 x seq 128)");
+    for (name, structure, bits) in [
+        ("baseline", "base", BitWidths::none()),
+        ("w8a8", "wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
+    ] {
+        let sps = steps_per_sec(&rt, "t4", structure, bits, 2);
         println!("{name:<16} {sps:>7.2} steps/s   ({:.0} tokens/s)", sps * 2048.0);
     }
 
-    section("per-step cost breakdown (baseline)");
-    let model = rt.manifest.model("t4").unwrap().clone();
-    let exe = rt.exec("t4/train/base").unwrap();
-    let state_host = init_state(&model, 1);
-    let mut state = state_host.to_literals(&model).unwrap();
+    section("per-step cost breakdown (micro baseline)");
+    let model = rt.model("micro").unwrap().clone();
+    let mut state = init_state(&model, 1);
     let mut corpus = BatchIter::new(CorpusCfg::train_default(model.vocab), model.batch, model.seq);
 
     // data generation
@@ -63,38 +67,21 @@ fn main() {
     }
     let data_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
 
-    // literal upload (state rebuild from host)
-    let t0 = Instant::now();
-    for _ in 0..5 {
-        std::hint::black_box(state_host.to_literals(&model).unwrap());
-    }
-    let upload_ms = t0.elapsed().as_secs_f64() * 1e3 / 5.0;
-
-    // full step
-    let qlits: Vec<xla::Literal> = (0..5).map(|_| lit_scalar(1.0)).collect();
+    // full step (forward + backward + AdamW)
+    let qmax = [1.0f32; 5];
     let mut step_ms = 0.0;
-    for i in 0..10 {
+    let n = 10;
+    for i in 0..n {
         let b = corpus.next_batch();
-        let x = lit_i32(&b.x, &[b.batch, b.seq]).unwrap();
-        let y = lit_i32(&b.y, &[b.batch, b.seq]).unwrap();
-        let lr = lit_scalar(1e-3);
-        let t = lit_scalar(i as f32 + 1.0);
-        let mut inputs: Vec<&xla::Literal> = state.iter().collect();
-        inputs.extend([&x, &y, &lr, &t]);
-        for q in &qlits {
-            inputs.push(q);
-        }
         let t0 = Instant::now();
-        let mut out = exe.run(&inputs).unwrap();
-        step_ms += t0.elapsed().as_secs_f64() * 1e3 / 10.0;
-        out.truncate(3 * model.params.len());
-        state = out;
+        rt.train_step(&model, "base", &qmax, &mut state, &b.x, &b.y, 1e-3, i as f32 + 1.0)
+            .unwrap();
+        step_ms += t0.elapsed().as_secs_f64() * 1e3 / n as f64;
     }
     println!("full step:            {step_ms:>8.2} ms");
     println!("  batch generation:   {data_ms:>8.2} ms");
-    println!("  host->literal state:{upload_ms:>8.2} ms (only on init/ckpt)");
     println!(
-        "  device exec+tuple:  {:>8.2} ms (remainder)",
+        "  fwd+bwd+adam:       {:>8.2} ms (remainder)",
         step_ms - data_ms
     );
 }

@@ -10,7 +10,7 @@ use crate::data::corpus::{BatchIter, CorpusCfg};
 use crate::eval::EvalQuant;
 use crate::model::HostState;
 use crate::quant;
-use crate::runtime::{lit_i32, lit_scalar, to_f32, ModelInfo, Runtime};
+use crate::runtime::{ModelInfo, Runtime};
 use crate::util::rng::Rng;
 use crate::util::stats::{channel_abs_max, kurtosis, sparsity, Histogram};
 
@@ -63,23 +63,17 @@ fn perturbed(state: &HostState, dirs: &[(&Vec<Vec<f32>>, f32)]) -> Vec<Vec<f32>>
 
 fn loss_of_params(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
     params_host: &[Vec<f32>],
     n_batches: usize,
     q: EvalQuant,
 ) -> Result<f64> {
-    let lits: Vec<xla::Literal> = model
-        .params
-        .iter()
-        .zip(params_host)
-        .map(|(p, d)| crate::runtime::lit_f32(d, &p.shape))
-        .collect::<Result<_>>()?;
     crate::eval::corpus_nll(
         rt,
-        eval_artifact,
+        eval_structure,
         model,
-        &lits,
+        params_host,
         &CorpusCfg {
             seed: 77_777,
             ..CorpusCfg::train_default(model.vocab)
@@ -102,7 +96,7 @@ pub struct SharpnessCurve {
 
 pub fn m_sharpness(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
     state: &HostState,
     radii: &[f64],
@@ -110,7 +104,7 @@ pub fn m_sharpness(
     n_batches: usize,
     q: EvalQuant,
 ) -> Result<SharpnessCurve> {
-    let base = loss_of_params(rt, eval_artifact, model, &state.params, n_batches, q)?;
+    let base = loss_of_params(rt, eval_structure, model, &state.params, n_batches, q)?;
     let dirs: Vec<Vec<Vec<f32>>> = (0..n_dirs)
         .map(|i| filter_normalized_direction(state, model, 0xD1B0 + i as u64))
         .collect();
@@ -119,7 +113,7 @@ pub fn m_sharpness(
         let mut worst = f64::NEG_INFINITY;
         for d in &dirs {
             let p = perturbed(state, &[(d, rho as f32)]);
-            let l = loss_of_params(rt, eval_artifact, model, &p, n_batches, q)?;
+            let l = loss_of_params(rt, eval_structure, model, &p, n_batches, q)?;
             worst = worst.max(l - base);
         }
         sharp.push(worst);
@@ -143,7 +137,7 @@ pub struct LossSurface {
 
 pub fn loss_surface(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
     state: &HostState,
     extent: f64,
@@ -161,7 +155,7 @@ pub fn loss_surface(
         let mut row = Vec::with_capacity(grid);
         for &b in &coords {
             let p = perturbed(state, &[(&d1, a as f32), (&d2, b as f32)]);
-            row.push(loss_of_params(rt, eval_artifact, model, &p, n_batches, q)?);
+            row.push(loss_of_params(rt, eval_structure, model, &p, n_batches, q)?);
         }
         loss.push(row);
     }
@@ -207,9 +201,8 @@ pub struct ActStats {
 pub fn activation_stats(
     rt: &Runtime,
     model: &ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
 ) -> Result<ActStats> {
-    let exe = rt.exec(&format!("{}/probe/act", model.name))?;
     let mut it = BatchIter::new(
         CorpusCfg {
             seed: 55_555,
@@ -219,13 +212,9 @@ pub fn activation_stats(
         model.seq,
     );
     let b = it.next_batch();
-    let x = lit_i32(&b.x, &[b.batch, b.seq])?;
-    let one = lit_scalar(1.0);
-    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
-    inputs.extend([&x, &one, &one]);
-    let out = exe.run(&inputs)?;
-    let proj_in = to_f32(&out[0])?;
-    let fc2_in = to_f32(&out[1])?;
+    let probe = rt.act_probe(model, params, &b.x)?;
+    let proj_in = probe.proj_in;
+    let fc2_in = probe.fc2_in;
     let rows = model.batch * model.seq;
     Ok(ActStats {
         proj_in_channel_max: channel_abs_max(&proj_in, rows, model.d_model),
@@ -268,10 +257,9 @@ pub struct GradStats {
 pub fn gradient_stats(
     rt: &Runtime,
     model: &ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
     schemes: &[(String, Scheme)],
 ) -> Result<GradStats> {
-    let exe = rt.exec(&format!("{}/probe/grad", model.name))?;
     let mut it = BatchIter::new(
         CorpusCfg {
             seed: 66_666,
@@ -281,14 +269,9 @@ pub fn gradient_stats(
         model.seq,
     );
     let b = it.next_batch();
-    let x = lit_i32(&b.x, &[b.batch, b.seq])?;
-    let y = lit_i32(&b.y, &[b.batch, b.seq])?;
-    let one = lit_scalar(1.0);
-    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
-    inputs.extend([&x, &y, &one, &one, &one]);
-    let out = exe.run(&inputs)?;
-    let dqkv = to_f32(&out[0])?;
-    let dctx = to_f32(&out[1])?;
+    let probe = rt.grad_probe(model, params, &b.x, &b.y)?;
+    let dqkv = probe.d_qkv_w0;
+    let dctx = probe.d_ctx0;
 
     let mut hist = Histogram::new(-12.0, 0.0, 48);
     for &g in &dqkv {

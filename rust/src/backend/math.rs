@@ -1,0 +1,302 @@
+//! Dense f32 kernels for the native backend: row-major matmuls (plain,
+//! transposed-A, transposed-B), layernorm forward/backward, and tanh-GELU.
+//!
+//! The matmuls use the axpy (ikj) loop order so the inner loop runs over
+//! contiguous rows of both operands and auto-vectorizes; this is the hot
+//! path the benches measure (rayon-parallel tiling is the next
+//! optimization, tracked in ROADMAP.md).
+
+/// `c = a @ b` where a is (m x k), b is (k x n), all row-major.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// `c += a @ b` (shapes as [`matmul`]).
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `aᵀ @ b` where a is (m x k), b is (m x n); result is (k x n).
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    matmul_tn_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// `c += aᵀ @ b` (shapes as [`matmul_tn`]) — the weight-gradient kernel;
+/// accumulating lets stacked per-layer gradients write into their slice.
+pub fn matmul_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let brow = &b[r * n..(r + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            let crow = &mut c[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `a @ bᵀ` where a is (m x k), b is (n x k); result is (m x n).
+/// Dot-product form: both operands stream contiguous rows.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+/// Column sums accumulated into `acc` (the bias-gradient kernel).
+pub fn col_sum_acc(acc: &mut [f32], x: &[f32], rows: usize, cols: usize) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(acc.len(), cols);
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        for (a, &v) in acc.iter_mut().zip(row.iter()) {
+            *a += v;
+        }
+    }
+}
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row-wise layernorm over (rows x d): `y = xhat * w + b` with
+/// `xhat = (x - mean) * rsqrt(var + eps)` (biased variance, matching
+/// `jnp.var`). Returns (y, xhat, rstd-per-row).
+pub fn layer_norm_fwd(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), d);
+    debug_assert_eq!(b.len(), d);
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut rstd = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mean = 0.0f32;
+        for &v in xr {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let dv = v - mean;
+            var += dv * dv;
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for c in 0..d {
+            let h = (xr[c] - mean) * rs;
+            xh[c] = h;
+            yr[c] = h * w[c] + b[c];
+        }
+    }
+    (y, xhat, rstd)
+}
+
+/// Layernorm backward. Accumulates dw/db into the provided slices and
+/// returns dx. Uses the standard biased-variance formula:
+/// `dx = rstd * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))`.
+pub fn layer_norm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    w: &[f32],
+    rows: usize,
+    d: usize,
+    dw_acc: &mut [f32],
+    db_acc: &mut [f32],
+) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), rows * d);
+    debug_assert_eq!(dw_acc.len(), d);
+    debug_assert_eq!(db_acc.len(), d);
+    let mut dx = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xhr = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0.0f32; // mean(dxhat)
+        let mut m2 = 0.0f32; // mean(dxhat * xhat)
+        for c in 0..d {
+            let dxh = dyr[c] * w[c];
+            m1 += dxh;
+            m2 += dxh * xhr[c];
+            dw_acc[c] += dyr[c] * xhr[c];
+            db_acc[c] += dyr[c];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let rs = rstd[r];
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for c in 0..d {
+            let dxh = dyr[c] * w[c];
+            dxr[c] = rs * (dxh - m1 - xhr[c] * m2);
+        }
+    }
+    dx
+}
+
+pub const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+pub const GELU_A: f32 = 0.044715;
+
+/// Tanh-approximate GELU (matches `jax.nn.gelu(approximate=True)`).
+pub fn gelu(u: &[f32]) -> Vec<f32> {
+    u.iter()
+        .map(|&x| {
+            let t = (GELU_C * (x + GELU_A * x * x * x)).tanh();
+            0.5 * x * (1.0 + t)
+        })
+        .collect()
+}
+
+/// GELU backward: `du = dg * gelu'(u)`.
+pub fn gelu_bwd(u: &[f32], dg: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(u.len(), dg.len());
+    u.iter()
+        .zip(dg.iter())
+        .map(|(&x, &d)| {
+            let inner = GELU_C * (x + GELU_A * x * x * x);
+            let t = inner.tanh();
+            let dinner = GELU_C * (1.0 + 3.0 * GELU_A * x * x);
+            d * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * dinner)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2
+        let b = [1.0, 0.0, 2.0, 1.0, 0.0, 3.0]; // 3x2
+        let at = [1.0, 3.0, 5.0, 2.0, 4.0, 6.0]; // 2x3
+        assert_eq!(matmul_tn(&a, &b, 3, 2, 2), matmul(&at, &b, 2, 3, 2));
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let a = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let b = [5.0, 6.0, 7.0, 8.0]; // 2x2
+        let bt = [5.0, 7.0, 6.0, 8.0];
+        assert_eq!(matmul_nt(&a, &b, 2, 2, 2), matmul(&a, &bt, 2, 2, 2));
+    }
+
+    #[test]
+    fn layernorm_rows_are_normalized() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let w = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let (y, xhat, rstd) = layer_norm_fwd(&x, &w, &b, 2, 4);
+        for r in 0..2 {
+            let row = &y[r * 4..(r + 1) * 4];
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "row {r} var {var}");
+        }
+        assert_eq!(y, xhat);
+        assert!(rstd[0] > rstd[1]); // wider row -> smaller rstd
+    }
+
+    #[test]
+    fn layernorm_bwd_finite_difference() {
+        // check dx against a central finite difference of sum(ln(x) * g)
+        let x = vec![0.3f32, -1.2, 0.7, 2.1, 0.9, -0.4];
+        let w = vec![1.1f32, 0.9, 1.3];
+        let b = vec![0.1f32, -0.2, 0.0];
+        let g = vec![0.7f32, -0.3, 0.5, 0.2, 0.8, -0.6]; // upstream grad
+        let f = |xs: &[f32]| -> f32 {
+            let (y, _, _) = layer_norm_fwd(xs, &w, &b, 2, 3);
+            y.iter().zip(&g).map(|(a, b)| a * b).sum()
+        };
+        let (_, xhat, rstd) = layer_norm_fwd(&x, &w, &b, 2, 3);
+        let mut dw = vec![0.0f32; 3];
+        let mut db = vec![0.0f32; 3];
+        let dx = layer_norm_bwd(&g, &xhat, &rstd, &w, 2, 3, &mut dw, &mut db);
+        for i in 0..x.len() {
+            let eps = 1e-3f32;
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[i]).abs() < 2e-2 * fd.abs().max(1.0),
+                "dx[{i}]: fd {fd} vs analytic {}",
+                dx[i]
+            );
+        }
+        // db is just the column sum of g
+        assert!((db[0] - (g[0] + g[3])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_bwd_finite_difference() {
+        let u = vec![-2.0f32, -0.5, 0.0, 0.3, 1.7];
+        let dg = vec![1.0f32; 5];
+        let du = gelu_bwd(&u, &dg);
+        for i in 0..u.len() {
+            let eps = 1e-3f32;
+            let fp = gelu(&[u[i] + eps])[0];
+            let fm = gelu(&[u[i] - eps])[0];
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - du[i]).abs() < 1e-3, "du[{i}]: fd {fd} vs {}", du[i]);
+        }
+    }
+
+    #[test]
+    fn gelu_values() {
+        // gelu(0) = 0, gelu(large) ~ identity, gelu(-large) ~ 0
+        let y = gelu(&[0.0, 6.0, -6.0]);
+        assert_eq!(y[0], 0.0);
+        assert!((y[1] - 6.0).abs() < 1e-3);
+        assert!(y[2].abs() < 1e-3);
+    }
+}

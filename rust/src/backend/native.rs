@@ -1,0 +1,1073 @@
+//! Pure-rust native executor: quantized GPT-2 forward + backward + AdamW.
+//!
+//! This is a faithful port of the L2 compute graph (`python/compile/
+//! model.py`, `quantizer.py`, `adam.py`) to hand-written rust:
+//!
+//! * pre-LN GPT-2 blocks (causal attention, tanh-GELU MLP, learned
+//!   positional embeddings, tied input/output embeddings);
+//! * fake quantization injected at the paper's Fig. 1 points via the
+//!   bit-exact [`crate::quant`] oracle — forward `y = qdq_a(x) @ qdq_w(W)`,
+//!   backward `dW = qdq_a(x)ᵀ @ qdq_g(g)` with the straight-through
+//!   estimator (gradients flow to the latent fp32 weights), and the
+//!   unstable `quantize_act_grads` variant quantizing the dx path;
+//! * AdamW with optionally fake-quantized moments per §3.4: the quantized
+//!   moment is what is stored *and* what the update reads, which is what
+//!   makes the second moment fragile (Fig. 12's zero-bin collapse).
+//!
+//! The backward pass was validated against `jax.value_and_grad` of the L2
+//! graph for every quant structure (max relative gradient error ~6e-7), and
+//! the AdamW update against `adam.adamw_update` exactly.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::backend::math::{
+    col_sum_acc, gelu, gelu_bwd, layer_norm_bwd, layer_norm_fwd, matmul, matmul_acc, matmul_nt,
+    matmul_tn, matmul_tn_acc,
+};
+use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, QSpec, QuantStructure, StepOut};
+use crate::model::HostState;
+use crate::quant;
+use crate::runtime::{ModelInfo, ParamInfo};
+
+// AdamW hyperparameters (python/compile/configs.HyperParams; paper App. A).
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.95;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const WEIGHT_DECAY: f32 = 0.1;
+pub const GRAD_CLIP: f32 = 1.0;
+
+// Parameter indices in the canonical order of `python/compile/model.py
+// param_defs` (the manifest order; `model_info` reproduces it).
+pub const WTE: usize = 0;
+pub const WPE: usize = 1;
+pub const LN1_W: usize = 2;
+pub const LN1_B: usize = 3;
+pub const QKV_W: usize = 4;
+pub const QKV_B: usize = 5;
+pub const PROJ_W: usize = 6;
+pub const PROJ_B: usize = 7;
+pub const LN2_W: usize = 8;
+pub const LN2_B: usize = 9;
+pub const FC1_W: usize = 10;
+pub const FC1_B: usize = 11;
+pub const FC2_W: usize = 12;
+pub const FC2_B: usize = 13;
+pub const LNF_W: usize = 14;
+pub const LNF_B: usize = 15;
+
+pub const N_PARAM_TENSORS: usize = 16;
+
+// ---------------------------------------------------------------------------
+// native model registry
+// ---------------------------------------------------------------------------
+
+/// Build a [`ModelInfo`] with the canonical GPT-2 parameter layout (the same
+/// defs, order, init specs and decay flags `python/compile/model.py`
+/// records in the manifest).
+pub fn model_info(
+    name: &str,
+    n_layer: usize,
+    d_model: usize,
+    n_head: usize,
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+) -> ModelInfo {
+    assert!(d_model % n_head == 0, "n_head must divide d_model");
+    let (l, d, v, t) = (n_layer, d_model, vocab, seq);
+    let f = 4 * d;
+    let p = |name: &str, shape: Vec<usize>, stacked: bool, decay: bool, init: &str| ParamInfo {
+        name: name.to_string(),
+        shape,
+        stacked,
+        decay,
+        init: init.to_string(),
+    };
+    let params = vec![
+        p("wte", vec![v, d], false, true, "normal:0.02"),
+        p("wpe", vec![t, d], false, true, "normal:0.01"),
+        p("ln1_w", vec![l, d], true, false, "ones"),
+        p("ln1_b", vec![l, d], true, false, "zeros"),
+        p("qkv_w", vec![l, d, 3 * d], true, true, "normal:0.02"),
+        p("qkv_b", vec![l, 3 * d], true, false, "zeros"),
+        p("proj_w", vec![l, d, d], true, true, "residual"),
+        p("proj_b", vec![l, d], true, false, "zeros"),
+        p("ln2_w", vec![l, d], true, false, "ones"),
+        p("ln2_b", vec![l, d], true, false, "zeros"),
+        p("fc1_w", vec![l, d, f], true, true, "normal:0.02"),
+        p("fc1_b", vec![l, f], true, false, "zeros"),
+        p("fc2_w", vec![l, f, d], true, true, "residual"),
+        p("fc2_b", vec![l, d], true, false, "zeros"),
+        p("lnf_w", vec![d], false, false, "ones"),
+        p("lnf_b", vec![d], false, false, "zeros"),
+    ];
+    let per_layer = 2 * d + d * 3 * d + 3 * d + d * d + d + 2 * d + d * f + f + f * d + d;
+    ModelInfo {
+        name: name.to_string(),
+        n_layer,
+        d_model,
+        n_head,
+        vocab,
+        seq,
+        batch,
+        d_ff: f,
+        n_params: v * d + t * d + l * per_layer + 2 * d,
+        params,
+    }
+}
+
+/// The models the native backend ships: the study model `t4`, the ~100M
+/// `gpt2s` (slow natively; intended for the pjrt feature or patience), and
+/// `micro`, a seconds-scale model for tests, examples and CI.
+pub fn native_models() -> HashMap<String, ModelInfo> {
+    let mut m = HashMap::new();
+    for info in [
+        model_info("t4", 4, 128, 4, 512, 128, 16),
+        model_info("gpt2s", 12, 768, 12, 8192, 256, 2),
+        model_info("micro", 2, 32, 2, 64, 128, 4),
+    ] {
+        m.insert(info.name.clone(), info);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// fake-quant helpers (Fig. 1 injection points)
+// ---------------------------------------------------------------------------
+
+fn qdq_matrix(x: &[f32], rows: usize, cols: usize, spec: QSpec, qmax: f32) -> Vec<f32> {
+    let mut out = x.to_vec();
+    quant::qdq_qmax(&mut out, rows, cols, spec.granularity, spec.asymmetric, qmax);
+    out
+}
+
+/// Activation operand of a linear that is also cached raw: `None` when the
+/// structure leaves activations unquantized (avoids duplicating the buffer).
+fn qdq_act_opt(x: &[f32], rows: usize, cols: usize, spec: Option<QSpec>, qmax: f32) -> Option<Vec<f32>> {
+    spec.map(|s| qdq_matrix(x, rows, cols, s, qmax))
+}
+
+/// Fake-quantize an activation in place, consuming it (for activations not
+/// otherwise cached: no copy in the unquantized case).
+fn qdq_act_owned(mut x: Vec<f32>, rows: usize, cols: usize, spec: Option<QSpec>, qmax: f32) -> Vec<f32> {
+    if let Some(s) = spec {
+        quant::qdq_qmax(&mut x, rows, cols, s.granularity, s.asymmetric, qmax);
+    }
+    x
+}
+
+/// Weight operand: borrowed when unquantized (weights are large).
+fn qdq_weight<'a>(
+    w: &'a [f32],
+    rows: usize,
+    cols: usize,
+    spec: Option<QSpec>,
+    qmax: f32,
+) -> Cow<'a, [f32]> {
+    match spec {
+        Some(s) => Cow::Owned(qdq_matrix(w, rows, cols, s, qmax)),
+        None => Cow::Borrowed(w),
+    }
+}
+
+/// Output-gradient operand of the backward matmuls.
+fn qdq_grad<'a>(
+    g: &'a [f32],
+    rows: usize,
+    cols: usize,
+    spec: Option<QSpec>,
+    qmax: f32,
+) -> Cow<'a, [f32]> {
+    match spec {
+        Some(s) => Cow::Owned(qdq_matrix(g, rows, cols, s, qmax)),
+        None => Cow::Borrowed(g),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// forward
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct Dims {
+    l: usize,
+    d: usize,
+    h: usize,
+    hd: usize,
+    f: usize,
+    v: usize,
+    t: usize,
+    b: usize,
+    m: usize, // b * t rows
+}
+
+impl Dims {
+    fn of(model: &ModelInfo) -> Dims {
+        let d = model.d_model;
+        let h = model.n_head;
+        Dims {
+            l: model.n_layer,
+            d,
+            h,
+            hd: d / h,
+            f: model.d_ff,
+            v: model.vocab,
+            t: model.seq,
+            b: model.batch,
+            m: model.batch * model.seq,
+        }
+    }
+}
+
+/// Per-layer forward cache (everything backward needs; quantized operands
+/// are stored, weights are re-quantized on the way back).
+struct LayerCache {
+    xhat1: Vec<f32>,
+    rstd1: Vec<f32>,
+    xq: Vec<f32>, // (M, d)  qdq_a(ln1 out) — the QKV matmul's left operand
+    q: Vec<f32>,  // (b, h, t, hd) contiguous per (b, h)
+    k: Vec<f32>,
+    v: Vec<f32>,
+    p: Vec<f32>,   // (b, h, t, t) softmax probabilities (0 above diagonal)
+    ctx: Vec<f32>,         // (M, d) attn out-proj input (Fig. 6 probe tensor)
+    cq: Option<Vec<f32>>,  // qdq_a(ctx); None when acts are unquantized
+    xhat2: Vec<f32>,
+    rstd2: Vec<f32>,
+    mq: Vec<f32>, // (M, d)  qdq_a(ln2 out)
+    u: Vec<f32>,           // (M, f)  pre-GELU
+    g: Vec<f32>,           // (M, f)  post-GELU, FC2 input (Fig. 8 probe tensor)
+    gq: Option<Vec<f32>>,  // qdq_a(g); None when acts are unquantized
+}
+
+struct Forward {
+    logits: Vec<f32>, // (M, V)
+    hf: Vec<f32>,     // (M, d) final-LN output
+    xhatf: Vec<f32>,
+    rstdf: Vec<f32>,
+    caches: Vec<LayerCache>,
+}
+
+fn check_inputs(model: &ModelInfo, params: &[Vec<f32>], x: &[i32]) -> Result<()> {
+    if params.len() != N_PARAM_TENSORS {
+        bail!(
+            "{}: expected {} parameter tensors, got {}",
+            model.name,
+            N_PARAM_TENSORS,
+            params.len()
+        );
+    }
+    for (info, p) in model.params.iter().zip(params.iter()) {
+        if p.len() != info.elems() {
+            bail!(
+                "{}: parameter {} has {} elements, expected {}",
+                model.name,
+                info.name,
+                p.len(),
+                info.elems()
+            );
+        }
+    }
+    check_tokens(model, x)?;
+    Ok(())
+}
+
+/// Validate one (batch*seq) token slice against the model dims.
+fn check_tokens(model: &ModelInfo, toks: &[i32]) -> Result<()> {
+    let dims = Dims::of(model);
+    if toks.len() != dims.m {
+        bail!(
+            "{}: token batch has {} entries, expected batch*seq = {}",
+            model.name,
+            toks.len(),
+            dims.m
+        );
+    }
+    for &tok in toks {
+        if tok < 0 || tok as usize >= dims.v {
+            bail!("token id {tok} out of vocab range 0..{}", dims.v);
+        }
+    }
+    Ok(())
+}
+
+/// Split a stacked per-layer tensor into layer `l`'s 2D slice.
+fn layer_slice(p: &[f32], l: usize, per_layer: usize) -> &[f32] {
+    &p[l * per_layer..(l + 1) * per_layer]
+}
+
+fn forward(
+    model: &ModelInfo,
+    params: &[Vec<f32>],
+    x: &[i32],
+    qs: &QuantStructure,
+    qmax_w: f32,
+    qmax_a: f32,
+) -> Forward {
+    let dm = Dims::of(model);
+    let (d, f, m, t, h, hd) = (dm.d, dm.f, dm.m, dm.t, dm.h, dm.hd);
+
+    // embeddings: h[b*t + s] = wte[x] + wpe[s]
+    let mut hbuf = vec![0.0f32; m * d];
+    for r in 0..m {
+        let tok = x[r] as usize;
+        let s = r % t;
+        let dst = &mut hbuf[r * d..(r + 1) * d];
+        let wte_row = &params[WTE][tok * d..(tok + 1) * d];
+        let wpe_row = &params[WPE][s * d..(s + 1) * d];
+        for c in 0..d {
+            dst[c] = wte_row[c] + wpe_row[c];
+        }
+    }
+
+    let inv_sqrt_hd = 1.0f32 / (hd as f32).sqrt();
+    let mut caches = Vec::with_capacity(dm.l);
+
+    for l in 0..dm.l {
+        let ln1_w = layer_slice(&params[LN1_W], l, d);
+        let ln1_b = layer_slice(&params[LN1_B], l, d);
+        let qkv_w = layer_slice(&params[QKV_W], l, d * 3 * d);
+        let qkv_b = layer_slice(&params[QKV_B], l, 3 * d);
+        let proj_w = layer_slice(&params[PROJ_W], l, d * d);
+        let proj_b = layer_slice(&params[PROJ_B], l, d);
+        let ln2_w = layer_slice(&params[LN2_W], l, d);
+        let ln2_b = layer_slice(&params[LN2_B], l, d);
+        let fc1_w = layer_slice(&params[FC1_W], l, d * f);
+        let fc1_b = layer_slice(&params[FC1_B], l, f);
+        let fc2_w = layer_slice(&params[FC2_W], l, f * d);
+        let fc2_b = layer_slice(&params[FC2_B], l, d);
+
+        // --- attention ---
+        let (a, xhat1, rstd1) = layer_norm_fwd(&hbuf, ln1_w, ln1_b, m, d);
+        let xq = qdq_act_owned(a, m, d, qs.acts, qmax_a);
+        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights, qmax_w);
+        let mut qkv = matmul(&xq, &wq, m, d, 3 * d);
+        for r in 0..m {
+            let row = &mut qkv[r * 3 * d..(r + 1) * 3 * d];
+            for c in 0..3 * d {
+                row[c] += qkv_b[c];
+            }
+        }
+
+        // de-interleave rows [q | k | v] into per-(batch, head) (T, hd) tiles
+        let mut q = vec![0.0f32; m * d];
+        let mut k = vec![0.0f32; m * d];
+        let mut v = vec![0.0f32; m * d];
+        for b in 0..dm.b {
+            for s in 0..t {
+                let row = &qkv[(b * t + s) * 3 * d..(b * t + s + 1) * 3 * d];
+                for hh in 0..h {
+                    let tile = ((b * h + hh) * t + s) * hd;
+                    for e in 0..hd {
+                        q[tile + e] = row[hh * hd + e];
+                        k[tile + e] = row[d + hh * hd + e];
+                        v[tile + e] = row[2 * d + hh * hd + e];
+                    }
+                }
+            }
+        }
+
+        // causal softmax attention per (batch, head)
+        let mut p = vec![0.0f32; dm.b * h * t * t];
+        let mut ctx = vec![0.0f32; m * d];
+        for bh in 0..dm.b * h {
+            let qs_ = &q[bh * t * hd..(bh + 1) * t * hd];
+            let ks_ = &k[bh * t * hd..(bh + 1) * t * hd];
+            let vs_ = &v[bh * t * hd..(bh + 1) * t * hd];
+            let mut scores = matmul_nt(qs_, ks_, t, hd, t);
+            for sc in scores.iter_mut() {
+                *sc *= inv_sqrt_hd;
+            }
+            let ptile = &mut p[bh * t * t..(bh + 1) * t * t];
+            for i in 0..t {
+                let row = &mut scores[i * t..(i + 1) * t];
+                let mut mx = f32::NEG_INFINITY;
+                for &sv in row.iter().take(i + 1) {
+                    mx = mx.max(sv);
+                }
+                let mut z = 0.0f32;
+                let prow = &mut ptile[i * t..(i + 1) * t];
+                for j in 0..=i {
+                    let e = (row[j] - mx).exp();
+                    prow[j] = e;
+                    z += e;
+                }
+                for pj in prow.iter_mut().take(i + 1) {
+                    *pj /= z;
+                }
+                // j > i stays exactly 0
+            }
+            let ctx_tile = matmul(ptile, vs_, t, t, hd);
+            // scatter (T, hd) head tile back into ctx rows
+            let b = bh / h;
+            let hh = bh % h;
+            for s in 0..t {
+                let dst = &mut ctx[(b * t + s) * d + hh * hd..(b * t + s) * d + (hh + 1) * hd];
+                dst.copy_from_slice(&ctx_tile[s * hd..(s + 1) * hd]);
+            }
+        }
+
+        let cq = qdq_act_opt(&ctx, m, d, qs.acts, qmax_a);
+        let wpq = qdq_weight(proj_w, d, d, qs.weights, qmax_w);
+        let mut h2 = hbuf.clone();
+        matmul_acc(&mut h2, cq.as_deref().unwrap_or(&ctx), &wpq, m, d, d);
+        for r in 0..m {
+            let row = &mut h2[r * d..(r + 1) * d];
+            for c in 0..d {
+                row[c] += proj_b[c];
+            }
+        }
+
+        // --- MLP ---
+        let (mm, xhat2, rstd2) = layer_norm_fwd(&h2, ln2_w, ln2_b, m, d);
+        let mq = qdq_act_owned(mm, m, d, qs.acts, qmax_a);
+        let w1q = qdq_weight(fc1_w, d, f, qs.weights, qmax_w);
+        let mut u = matmul(&mq, &w1q, m, d, f);
+        for r in 0..m {
+            let row = &mut u[r * f..(r + 1) * f];
+            for c in 0..f {
+                row[c] += fc1_b[c];
+            }
+        }
+        let g = gelu(&u);
+        let gq = qdq_act_opt(&g, m, f, qs.acts, qmax_a);
+        let w2q = qdq_weight(fc2_w, f, d, qs.weights, qmax_w);
+        let mut hout = h2.clone();
+        matmul_acc(&mut hout, gq.as_deref().unwrap_or(&g), &w2q, m, f, d);
+        for r in 0..m {
+            let row = &mut hout[r * d..(r + 1) * d];
+            for c in 0..d {
+                row[c] += fc2_b[c];
+            }
+        }
+
+        caches.push(LayerCache {
+            xhat1,
+            rstd1,
+            xq,
+            q,
+            k,
+            v,
+            p,
+            ctx,
+            cq,
+            xhat2,
+            rstd2,
+            mq,
+            u,
+            g,
+            gq,
+        });
+        hbuf = hout;
+    }
+
+    let (hf, xhatf, rstdf) = layer_norm_fwd(&hbuf, &params[LNF_W], &params[LNF_B], m, d);
+    // tied LM head (not quantized): logits = hf @ wteᵀ
+    let logits = matmul_nt(&hf, &params[WTE], m, d, dm.v);
+    Forward {
+        logits,
+        hf,
+        xhatf,
+        rstdf,
+        caches,
+    }
+}
+
+/// Per-position NLL without materializing probabilities (eval path):
+/// `nll = -(l_target - max - ln(sum(exp(l - max))))`, clamped finite so a
+/// diverged checkpoint scores terribly instead of poisoning aggregates.
+fn nll_only(logits: &[f32], y: &[i32], m: usize, v: usize) -> Vec<f32> {
+    let mut per_pos = vec![0.0f32; m];
+    for r in 0..m {
+        let row = &logits[r * v..(r + 1) * v];
+        let mut mx = f32::NEG_INFINITY;
+        for &l in row {
+            mx = mx.max(l);
+        }
+        let mut z = 0.0f32;
+        for &l in row {
+            z += (l - mx).exp();
+        }
+        let nll = -(row[y[r] as usize] - mx - z.ln());
+        per_pos[r] = if nll.is_finite() { nll } else { -f32::MIN_POSITIVE.ln() };
+    }
+    per_pos
+}
+
+/// Per-position NLL and softmax probabilities from logits (row-stable;
+/// the backward path needs the probs for dlogits).
+fn nll_rows(logits: &[f32], y: &[i32], m: usize, v: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut per_pos = vec![0.0f32; m];
+    let mut probs = vec![0.0f32; m * v];
+    for r in 0..m {
+        let row = &logits[r * v..(r + 1) * v];
+        let mut mx = f32::NEG_INFINITY;
+        for &l in row {
+            mx = mx.max(l);
+        }
+        let prow = &mut probs[r * v..(r + 1) * v];
+        let mut z = 0.0f32;
+        for (pj, &l) in prow.iter_mut().zip(row.iter()) {
+            let e = (l - mx).exp();
+            *pj = e;
+            z += e;
+        }
+        for pj in prow.iter_mut() {
+            *pj /= z;
+        }
+        let target = y[r] as usize;
+        per_pos[r] = -(prow[target].max(f32::MIN_POSITIVE)).ln();
+    }
+    (per_pos, probs)
+}
+
+// ---------------------------------------------------------------------------
+// backward
+// ---------------------------------------------------------------------------
+
+struct BackOut {
+    loss: f64,
+    grads: Vec<Vec<f32>>,
+    d_ctx0: Vec<f32>,
+}
+
+fn loss_and_grads(
+    model: &ModelInfo,
+    params: &[Vec<f32>],
+    x: &[i32],
+    y: &[i32],
+    qs: &QuantStructure,
+    qmax_w: f32,
+    qmax_a: f32,
+    qmax_g: f32,
+) -> BackOut {
+    let dm = Dims::of(model);
+    let (d, f, m, t, h, hd, v) = (dm.d, dm.f, dm.m, dm.t, dm.h, dm.hd, dm.v);
+    let fwd = forward(model, params, x, qs, qmax_w, qmax_a);
+    let (per_pos, probs) = nll_rows(&fwd.logits, y, m, v);
+    let loss = per_pos.iter().map(|&l| l as f64).sum::<f64>() / m as f64;
+
+    let mut grads: Vec<Vec<f32>> = model.params.iter().map(|p| vec![0.0f32; p.elems()]).collect();
+
+    // dlogits = (softmax - onehot(y)) / M
+    let mut dlogits = probs;
+    let inv_m = 1.0f32 / m as f32;
+    for r in 0..m {
+        let row = &mut dlogits[r * v..(r + 1) * v];
+        row[y[r] as usize] -= 1.0;
+        for g in row.iter_mut() {
+            *g *= inv_m;
+        }
+    }
+
+    // tied head: dwte += dlogitsᵀ @ hf ; dhf = dlogits @ wte
+    matmul_tn_acc(&mut grads[WTE], &dlogits, &fwd.hf, m, v, d);
+    let dhf = matmul(&dlogits, &params[WTE], m, v, d);
+
+    // final LN
+    let (lnf_w_grad, lnf_b_grad) = {
+        let (gw, gb) = grads.split_at_mut(LNF_B);
+        (&mut gw[LNF_W], &mut gb[0])
+    };
+    let mut dh = layer_norm_bwd(
+        &dhf,
+        &fwd.xhatf,
+        &fwd.rstdf,
+        &params[LNF_W],
+        m,
+        d,
+        lnf_w_grad,
+        lnf_b_grad,
+    );
+
+    let inv_sqrt_hd = 1.0f32 / (hd as f32).sqrt();
+    let act_grad_path = qs.grads.is_some() && qs.quantize_act_grads;
+    let mut d_ctx0 = Vec::new();
+
+    for l in (0..dm.l).rev() {
+        let c = &fwd.caches[l];
+        let qkv_w = layer_slice(&params[QKV_W], l, d * 3 * d);
+        let proj_w = layer_slice(&params[PROJ_W], l, d * d);
+        let fc1_w = layer_slice(&params[FC1_W], l, d * f);
+        let fc2_w = layer_slice(&params[FC2_W], l, f * d);
+        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights, qmax_w);
+        let wpq = qdq_weight(proj_w, d, d, qs.weights, qmax_w);
+        let w1q = qdq_weight(fc1_w, d, f, qs.weights, qmax_w);
+        let w2q = qdq_weight(fc2_w, f, d, qs.weights, qmax_w);
+
+        // ---- MLP: h_out = h2 + (qdq(g) @ qdq(fc2_w) + fc2_b) ----
+        let dz = &dh;
+        let gq2 = qdq_grad(dz, m, d, qs.grads, qmax_g);
+        matmul_tn_acc(
+            &mut grads[FC2_W][l * f * d..(l + 1) * f * d],
+            c.gq.as_deref().unwrap_or(&c.g),
+            &gq2,
+            m,
+            f,
+            d,
+        );
+        col_sum_acc(&mut grads[FC2_B][l * d..(l + 1) * d], dz, m, d);
+        let gx2: &[f32] = if act_grad_path { &gq2 } else { dz };
+        // dG = gx2 @ W2qᵀ with W2q (f x d): transpose-B kernel
+        let dg = matmul_nt(gx2, &w2q, m, d, f);
+        let du = gelu_bwd(&c.u, &dg);
+        let gq1 = qdq_grad(&du, m, f, qs.grads, qmax_g);
+        matmul_tn_acc(
+            &mut grads[FC1_W][l * d * f..(l + 1) * d * f],
+            &c.mq,
+            &gq1,
+            m,
+            d,
+            f,
+        );
+        col_sum_acc(&mut grads[FC1_B][l * f..(l + 1) * f], &du, m, f);
+        let gx1: &[f32] = if act_grad_path { &gq1 } else { &du };
+        // dM = gx1 @ W1qᵀ with W1q (d x f)
+        let dmm = matmul_nt(gx1, &w1q, m, f, d);
+        let ln2_w = layer_slice(&params[LN2_W], l, d);
+        let dx2 = {
+            let (gw_all, gb_all) = grads.split_at_mut(LN2_B);
+            layer_norm_bwd(
+                &dmm,
+                &c.xhat2,
+                &c.rstd2,
+                ln2_w,
+                m,
+                d,
+                &mut gw_all[LN2_W][l * d..(l + 1) * d],
+                &mut gb_all[0][l * d..(l + 1) * d],
+            )
+        };
+        let mut dh2 = dh.clone();
+        for (a, b) in dh2.iter_mut().zip(dx2.iter()) {
+            *a += b;
+        }
+
+        // ---- attention: h2 = h_in + (qdq(ctx) @ qdq(proj_w) + proj_b) ----
+        let do_ = &dh2;
+        let gqp = qdq_grad(do_, m, d, qs.grads, qmax_g);
+        matmul_tn_acc(
+            &mut grads[PROJ_W][l * d * d..(l + 1) * d * d],
+            c.cq.as_deref().unwrap_or(&c.ctx),
+            &gqp,
+            m,
+            d,
+            d,
+        );
+        col_sum_acc(&mut grads[PROJ_B][l * d..(l + 1) * d], do_, m, d);
+        let gxp: &[f32] = if act_grad_path { &gqp } else { do_ };
+        // dCtx = gxp @ Wpqᵀ with Wpq (d x d)
+        let dctx = matmul_nt(gxp, &wpq, m, d, d);
+        if l == 0 {
+            d_ctx0 = dctx.clone();
+        }
+
+        // attention core backward per (batch, head)
+        let mut dqkv = vec![0.0f32; m * 3 * d];
+        for bh in 0..dm.b * h {
+            let b = bh / h;
+            let hh = bh % h;
+            // gather dctx head tile (T, hd)
+            let mut dctx_tile = vec![0.0f32; t * hd];
+            for s in 0..t {
+                let src = &dctx[(b * t + s) * d + hh * hd..(b * t + s) * d + (hh + 1) * hd];
+                dctx_tile[s * hd..(s + 1) * hd].copy_from_slice(src);
+            }
+            let qt = &c.q[bh * t * hd..(bh + 1) * t * hd];
+            let kt = &c.k[bh * t * hd..(bh + 1) * t * hd];
+            let vt = &c.v[bh * t * hd..(bh + 1) * t * hd];
+            let ptile = &c.p[bh * t * t..(bh + 1) * t * t];
+
+            // dP = dctx @ vᵀ ; dv = Pᵀ @ dctx
+            let dp = matmul_nt(&dctx_tile, vt, t, hd, t);
+            let dv = matmul_tn(ptile, &dctx_tile, t, t, hd);
+            // softmax backward: dS = P ⊙ (dP - rowsum(dP ⊙ P))
+            let mut ds = vec![0.0f32; t * t];
+            for i in 0..t {
+                let prow = &ptile[i * t..(i + 1) * t];
+                let dprow = &dp[i * t..(i + 1) * t];
+                let mut dot = 0.0f32;
+                for j in 0..=i {
+                    dot += dprow[j] * prow[j];
+                }
+                let dsrow = &mut ds[i * t..(i + 1) * t];
+                for j in 0..=i {
+                    dsrow[j] = prow[j] * (dprow[j] - dot);
+                }
+            }
+            // dq = dS @ k * inv ; dk = dSᵀ @ q * inv
+            let mut dq = matmul(&ds, kt, t, t, hd);
+            let mut dk = matmul_tn(&ds, qt, t, t, hd);
+            for x_ in dq.iter_mut() {
+                *x_ *= inv_sqrt_hd;
+            }
+            for x_ in dk.iter_mut() {
+                *x_ *= inv_sqrt_hd;
+            }
+            // scatter into dqkv rows [dq | dk | dv]
+            for s in 0..t {
+                let row = &mut dqkv[(b * t + s) * 3 * d..(b * t + s + 1) * 3 * d];
+                for e in 0..hd {
+                    row[hh * hd + e] = dq[s * hd + e];
+                    row[d + hh * hd + e] = dk[s * hd + e];
+                    row[2 * d + hh * hd + e] = dv[s * hd + e];
+                }
+            }
+        }
+
+        let gqq = qdq_grad(&dqkv, m, 3 * d, qs.grads, qmax_g);
+        matmul_tn_acc(
+            &mut grads[QKV_W][l * d * 3 * d..(l + 1) * d * 3 * d],
+            &c.xq,
+            &gqq,
+            m,
+            d,
+            3 * d,
+        );
+        col_sum_acc(&mut grads[QKV_B][l * 3 * d..(l + 1) * 3 * d], &dqkv, m, 3 * d);
+        let gxq: &[f32] = if act_grad_path { &gqq } else { &dqkv };
+        // dA = gxq @ Wqᵀ with Wq (d x 3d)
+        let da = matmul_nt(gxq, &wq, m, 3 * d, d);
+        let ln1_w = layer_slice(&params[LN1_W], l, d);
+        let dx1 = {
+            let (gw_all, gb_all) = grads.split_at_mut(LN1_B);
+            layer_norm_bwd(
+                &da,
+                &c.xhat1,
+                &c.rstd1,
+                ln1_w,
+                m,
+                d,
+                &mut gw_all[LN1_W][l * d..(l + 1) * d],
+                &mut gb_all[0][l * d..(l + 1) * d],
+            )
+        };
+        for (a, b) in dh2.iter_mut().zip(dx1.iter()) {
+            *a += b;
+        }
+        dh = dh2;
+    }
+
+    // embeddings: scatter into wte, reduce over batch into wpe
+    for r in 0..m {
+        let tok = x[r] as usize;
+        let s = r % t;
+        let src = &dh[r * d..(r + 1) * d];
+        let wte_row = &mut grads[WTE][tok * d..(tok + 1) * d];
+        for cix in 0..d {
+            wte_row[cix] += src[cix];
+        }
+        let wpe_row = &mut grads[WPE][s * d..(s + 1) * d];
+        for cix in 0..d {
+            wpe_row[cix] += src[cix];
+        }
+    }
+
+    BackOut {
+        loss,
+        grads,
+        d_ctx0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AdamW with quantized moments (python/compile/adam.py)
+// ---------------------------------------------------------------------------
+
+/// Fake-quantize an optimizer moment for storage: only >=2D base tensors
+/// (linear weights + embeddings); stacked per-layer tensors are quantized
+/// layer by layer so "per_tensor" means per layer-tensor.
+fn moment_qdq(info: &ParamInfo, data: &mut [f32], spec: Option<QSpec>, qmax: f32) {
+    let Some(s) = spec else { return };
+    let base_ndim = info.shape.len() - usize::from(info.stacked);
+    if base_ndim < 2 {
+        return;
+    }
+    if info.stacked {
+        let (rows, cols) = (info.shape[1], info.shape[2]);
+        for l in 0..info.shape[0] {
+            let slice = &mut data[l * rows * cols..(l + 1) * rows * cols];
+            quant::qdq_qmax(slice, rows, cols, s.granularity, s.asymmetric, qmax);
+        }
+    } else {
+        let (rows, cols) = (info.shape[0], info.shape[1]);
+        quant::qdq_qmax(data, rows, cols, s.granularity, s.asymmetric, qmax);
+    }
+}
+
+/// One AdamW step in place. Returns the pre-clip global gradient norm.
+fn adamw_update(
+    model: &ModelInfo,
+    state: &mut HostState,
+    grads: &[Vec<f32>],
+    lr: f32,
+    t: f32,
+    qs: &QuantStructure,
+    qmax_m1: f32,
+    qmax_m2: f32,
+) -> f64 {
+    let gnorm: f64 = grads
+        .iter()
+        .flat_map(|g| g.iter())
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt();
+    let clip = (GRAD_CLIP as f64 / (gnorm + 1e-12)).min(1.0) as f32;
+    let bc1 = 1.0 - BETA1.powf(t);
+    let bc2 = 1.0 - BETA2.powf(t);
+
+    for (i, info) in model.params.iter().enumerate() {
+        let p = &mut state.params[i];
+        let m = &mut state.m[i];
+        let v = &mut state.v[i];
+        let g = &grads[i];
+        for j in 0..p.len() {
+            let gc = g[j] * clip;
+            m[j] = BETA1 * m[j] + (1.0 - BETA1) * gc;
+            v[j] = BETA2 * v[j] + (1.0 - BETA2) * gc * gc;
+        }
+        // store fake-quantized; the update below reads the stored form
+        moment_qdq(info, m, qs.m1, qmax_m1);
+        moment_qdq(info, v, qs.m2, qmax_m2);
+        for j in 0..p.len() {
+            let m_hat = m[j] / bc1;
+            let v_hat = v[j] / bc2;
+            let mut step = m_hat / (v_hat.sqrt() + ADAM_EPS);
+            if info.decay {
+                step += WEIGHT_DECAY * p[j];
+            }
+            p[j] -= lr * step;
+        }
+    }
+    gnorm
+}
+
+// ---------------------------------------------------------------------------
+// Backend impl
+// ---------------------------------------------------------------------------
+
+/// The pure-rust executor. Stateless: every call is a function of its
+/// arguments, which keeps the trait object trivially shareable.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn train_step(
+        &self,
+        model: &ModelInfo,
+        structure: &str,
+        qmax: &[f32; 5],
+        state: &mut HostState,
+        x: &[i32],
+        y: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<StepOut> {
+        let qs = QuantStructure::parse(structure)?;
+        check_inputs(model, &state.params, x)?;
+        check_tokens(model, y)?;
+        let out = loss_and_grads(model, &state.params, x, y, &qs, qmax[0], qmax[1], qmax[2]);
+        let gnorm = adamw_update(model, state, &out.grads, lr, t, &qs, qmax[3], qmax[4]);
+        Ok(StepOut {
+            loss: out.loss,
+            gnorm,
+        })
+    }
+
+    fn eval_step(
+        &self,
+        model: &ModelInfo,
+        structure: &str,
+        qmax_w: f32,
+        qmax_a: f32,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        let qs = QuantStructure::parse(structure)?.forward_only();
+        check_inputs(model, params, x)?;
+        check_tokens(model, y)?;
+        let dm = Dims::of(model);
+        let fwd = forward(model, params, x, &qs, qmax_w, qmax_a);
+        let per_pos = nll_only(&fwd.logits, y, dm.m, dm.v);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (l, w) in per_pos.iter().zip(mask.iter()) {
+            num += (*l as f64) * (*w as f64);
+            den += *w as f64;
+        }
+        Ok(EvalOut {
+            mean_nll: num / den.max(1.0),
+            per_pos,
+        })
+    }
+
+    fn act_probe(&self, model: &ModelInfo, params: &[Vec<f32>], x: &[i32]) -> Result<ActProbe> {
+        check_inputs(model, params, x)?;
+        let qs = QuantStructure::default();
+        let fwd = forward(model, params, x, &qs, 1.0, 1.0);
+        let probe = fwd
+            .caches
+            .last()
+            .expect("model has at least one layer");
+        Ok(ActProbe {
+            proj_in: probe.ctx.clone(),
+            fc2_in: probe.g.clone(),
+        })
+    }
+
+    fn grad_probe(
+        &self,
+        model: &ModelInfo,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<GradProbe> {
+        check_inputs(model, params, x)?;
+        check_tokens(model, y)?;
+        let qs = QuantStructure::default();
+        let dm = Dims::of(model);
+        let out = loss_and_grads(model, params, x, y, &qs, 1.0, 1.0, 1.0);
+        let per_layer = dm.d * 3 * dm.d;
+        Ok(GradProbe {
+            d_qkv_w0: out.grads[QKV_W][..per_layer].to_vec(),
+            d_ctx0: out.d_ctx0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_state;
+
+    fn tiny() -> ModelInfo {
+        model_info("tt", 2, 16, 2, 32, 8, 2)
+    }
+
+    fn batch(model: &ModelInfo, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let m = model.batch * model.seq;
+        let x: Vec<i32> = (0..m).map(|_| rng.below(model.vocab) as i32).collect();
+        let y: Vec<i32> = (0..m).map(|_| rng.below(model.vocab) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn model_info_matches_manifest_layout() {
+        let m = tiny();
+        assert_eq!(m.params.len(), N_PARAM_TENSORS);
+        assert_eq!(m.params[WTE].name, "wte");
+        assert_eq!(m.params[QKV_W].shape, vec![2, 16, 48]);
+        assert_eq!(m.params[FC2_W].shape, vec![2, 64, 16]);
+        assert_eq!(m.params[LNF_B].name, "lnf_b");
+        // n_params formula must match configs.py
+        let t4 = model_info("t4", 4, 128, 4, 512, 128, 16);
+        let per_layer = 2 * 128 + 128 * 384 + 384 + 128 * 128 + 128 + 2 * 128
+            + 128 * 512 + 512 + 512 * 128 + 128;
+        assert_eq!(t4.n_params, 512 * 128 + 128 * 128 + 4 * per_layer + 2 * 128);
+    }
+
+    #[test]
+    fn native_registry_has_study_models() {
+        let models = native_models();
+        for name in ["t4", "gpt2s", "micro"] {
+            assert!(models.contains_key(name), "missing {name}");
+        }
+        assert_eq!(models["t4"].vocab, 512);
+        assert_eq!(models["micro"].seq, 128); // fits 5-shot GLUE episodes
+    }
+
+    #[test]
+    fn init_loss_is_near_uniform() {
+        let model = tiny();
+        let state = init_state(&model, 3);
+        let (x, y) = batch(&model, 1);
+        let be = NativeBackend;
+        let mask = vec![1.0f32; x.len()];
+        let out = be
+            .eval_step(&model, "base", 1.0, 1.0, &state.params, &x, &y, &mask)
+            .unwrap();
+        let uniform = (model.vocab as f64).ln();
+        assert!(
+            (out.mean_nll - uniform).abs() < 0.3,
+            "init NLL {} vs ln(V) {}",
+            out.mean_nll,
+            uniform
+        );
+    }
+
+    #[test]
+    fn zero_lr_step_preserves_params() {
+        let model = tiny();
+        let mut state = init_state(&model, 5);
+        let before = state.params.clone();
+        let (x, y) = batch(&model, 2);
+        let be = NativeBackend;
+        let out = be
+            .train_step(&model, "base", &[1.0; 5], &mut state, &x, &y, 0.0, 1.0)
+            .unwrap();
+        assert!(out.loss.is_finite() && out.gnorm > 0.0);
+        assert_eq!(state.params, before);
+        // moments did move
+        assert!(state.m.iter().flatten().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn train_step_deterministic() {
+        let model = tiny();
+        let (x, y) = batch(&model, 7);
+        let be = NativeBackend;
+        let mut s1 = init_state(&model, 11);
+        let mut s2 = init_state(&model, 11);
+        let o1 = be
+            .train_step(&model, "wa", &[127.0, 127.0, 1.0, 1.0, 1.0], &mut s1, &x, &y, 1e-3, 1.0)
+            .unwrap();
+        let o2 = be
+            .train_step(&model, "wa", &[127.0, 127.0, 1.0, 1.0, 1.0], &mut s2, &x, &y, 1e-3, 1.0)
+            .unwrap();
+        assert_eq!(o1.loss, o2.loss);
+        assert_eq!(s1.params, s2.params);
+    }
+
+    #[test]
+    fn probes_have_expected_shapes() {
+        let model = tiny();
+        let state = init_state(&model, 9);
+        let (x, y) = batch(&model, 3);
+        let be = NativeBackend;
+        let ap = be.act_probe(&model, &state.params, &x).unwrap();
+        assert_eq!(ap.proj_in.len(), model.batch * model.seq * model.d_model);
+        assert_eq!(ap.fc2_in.len(), model.batch * model.seq * model.d_ff);
+        let gp = be.grad_probe(&model, &state.params, &x, &y).unwrap();
+        assert_eq!(gp.d_qkv_w0.len(), model.d_model * 3 * model.d_model);
+        assert_eq!(gp.d_ctx0.len(), model.batch * model.seq * model.d_model);
+        assert!(gp.d_qkv_w0.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let model = tiny();
+        let state = init_state(&model, 1);
+        let be = NativeBackend;
+        let bad_x = vec![0i32; 3];
+        let mask = vec![1.0f32; 3];
+        assert!(be
+            .eval_step(&model, "base", 1.0, 1.0, &state.params, &bad_x, &bad_x, &mask)
+            .is_err());
+        let (x, y) = batch(&model, 1);
+        let mut oot = x.clone();
+        oot[0] = model.vocab as i32; // out of range
+        let mask = vec![1.0f32; x.len()];
+        assert!(be
+            .eval_step(&model, "base", 1.0, 1.0, &state.params, &oot, &y, &mask)
+            .is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! PJRT executor (cargo feature `pjrt`): runs the AOT-lowered HLO artifacts
+//! (`artifacts/*.hlo.txt` + `manifest.json`, produced by `make artifacts`)
+//! on the PJRT CPU client via the `xla` crate.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos with 64-bit instruction ids; the text parser
+//! reassigns ids). Lowering uses `return_tuple=True`, so every execution
+//! returns one tuple buffer which is decomposed into per-output literals.
+//!
+//! Relative to the seed's literal-carrying train loop, this backend round
+//! trips (params, m, v) through host vectors every step to satisfy the
+//! backend-agnostic [`Backend`] contract; the conversion cost is the price
+//! of a host-state seam shared with the native executor.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, StepOut};
+use crate::model::HostState;
+use crate::runtime::{ArtifactInfo, Manifest, ModelInfo};
+
+// ---------------------------------------------------------------------------
+// literal helpers (HostState <-> xla::Literal conversions live here now)
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}
+
+/// params+m+v as literals in the train-artifact input order.
+fn state_literals(model: &ModelInfo, state: &HostState) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(3 * state.params.len());
+    for group in [&state.params, &state.m, &state.v] {
+        for (p, data) in model.params.iter().zip(group.iter()) {
+            out.push(lit_f32(data, &p.shape)?);
+        }
+    }
+    Ok(out)
+}
+
+fn param_literals(model: &ModelInfo, params: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+    model
+        .params
+        .iter()
+        .zip(params.iter())
+        .map(|(p, data)| lit_f32(data, &p.shape))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// compiled-artifact cache
+// ---------------------------------------------------------------------------
+
+/// A compiled artifact plus its signature.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns per-output literals (decomposed
+    /// from the single result tuple).
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let bufs = self.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// PJRT-backed [`Backend`]: loads + caches compiled executables over one
+/// PJRT CPU client.
+pub struct PjrtBackend {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!("compiled {name} ({:.2}s)", t0.elapsed().as_secs_f64());
+        let wrapped = Rc::new(Executable { info, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), wrapped.clone());
+        Ok(wrapped)
+    }
+
+    fn eval_artifact_name(&self, model: &str, structure: &str) -> String {
+        // fall back to the unquantized eval graph when the model ships no
+        // matching quantized-forward eval artifact (e.g. gpt2s only lowers
+        // base)
+        let name = format!("{model}/eval/{structure}");
+        if self.manifest.artifacts.contains_key(&name) {
+            name
+        } else {
+            format!("{model}/eval/base")
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train_step(
+        &self,
+        model: &ModelInfo,
+        structure: &str,
+        qmax: &[f32; 5],
+        state: &mut HostState,
+        x: &[i32],
+        y: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<StepOut> {
+        let np = model.params.len();
+        let exe = self.exec(&format!("{}/train/{}", model.name, structure))?;
+        let lits = state_literals(model, state)?;
+        let xl = lit_i32(x, &[model.batch, model.seq])?;
+        let yl = lit_i32(y, &[model.batch, model.seq])?;
+        let lrl = lit_scalar(lr);
+        let tl = lit_scalar(t);
+        let qlits: Vec<xla::Literal> = qmax.iter().map(|&q| lit_scalar(q)).collect();
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.extend([&xl, &yl, &lrl, &tl]);
+        for q in &qlits {
+            inputs.push(q);
+        }
+        let out = exe.run(&inputs)?;
+        if out.len() < 3 * np + 2 {
+            bail!(
+                "train artifact returned {} outputs, expected {}",
+                out.len(),
+                3 * np + 2
+            );
+        }
+        let loss = scalar_f32(&out[3 * np])? as f64;
+        let gnorm = scalar_f32(&out[3 * np + 1])? as f64;
+        for (i, lit) in out[..np].iter().enumerate() {
+            state.params[i] = to_f32(lit)?;
+        }
+        for (i, lit) in out[np..2 * np].iter().enumerate() {
+            state.m[i] = to_f32(lit)?;
+        }
+        for (i, lit) in out[2 * np..3 * np].iter().enumerate() {
+            state.v[i] = to_f32(lit)?;
+        }
+        Ok(StepOut { loss, gnorm })
+    }
+
+    fn eval_step(
+        &self,
+        model: &ModelInfo,
+        structure: &str,
+        qmax_w: f32,
+        qmax_a: f32,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        let exe = self.exec(&self.eval_artifact_name(&model.name, structure))?;
+        let lits = param_literals(model, params)?;
+        let xl = lit_i32(x, &[model.batch, model.seq])?;
+        let yl = lit_i32(y, &[model.batch, model.seq])?;
+        let ml = lit_f32(mask, &[model.batch, model.seq])?;
+        let qw = lit_scalar(qmax_w);
+        let qa = lit_scalar(qmax_a);
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.extend([&xl, &yl, &ml, &qw, &qa]);
+        let out = exe.run(&inputs)?;
+        Ok(EvalOut {
+            mean_nll: scalar_f32(&out[0])? as f64,
+            per_pos: to_f32(&out[1])?,
+        })
+    }
+
+    fn act_probe(&self, model: &ModelInfo, params: &[Vec<f32>], x: &[i32]) -> Result<ActProbe> {
+        let exe = self.exec(&format!("{}/probe/act", model.name))?;
+        let lits = param_literals(model, params)?;
+        let xl = lit_i32(x, &[model.batch, model.seq])?;
+        let one = lit_scalar(1.0);
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.extend([&xl, &one, &one]);
+        let out = exe.run(&inputs)?;
+        Ok(ActProbe {
+            proj_in: to_f32(&out[0])?,
+            fc2_in: to_f32(&out[1])?,
+        })
+    }
+
+    fn grad_probe(
+        &self,
+        model: &ModelInfo,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<GradProbe> {
+        let exe = self.exec(&format!("{}/probe/grad", model.name))?;
+        let lits = param_literals(model, params)?;
+        let xl = lit_i32(x, &[model.batch, model.seq])?;
+        let yl = lit_i32(y, &[model.batch, model.seq])?;
+        let one = lit_scalar(1.0);
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.extend([&xl, &yl, &one, &one, &one]);
+        let out = exe.run(&inputs)?;
+        Ok(GradProbe {
+            d_qkv_w0: to_f32(&out[0])?,
+            d_ctx0: to_f32(&out[1])?,
+        })
+    }
+}

@@ -207,13 +207,12 @@ fn tab_eval(ctx: &Ctx, id: &str, title: &str, configs: &[TrainCfg]) -> Result<()
     let mut fs_rows = Vec::new();
     for (cfg, r) in configs.iter().zip(&runs) {
         let state = r.checkpoint(&ctx.rt)?;
-        let params = state.param_literals(&model)?;
-        let eval_art = cfg.eval_artifact();
+        let eval_structure = cfg.eval_structure();
         let q = EvalQuant {
             qmax_w: cfg.quant.bits.qmax_scalars()[0],
             qmax_a: cfg.quant.bits.qmax_scalars()[1],
         };
-        let ppl = perplexity_suite(&ctx.rt, &eval_art, &model, &params, ctx.eval_batches, q)?;
+        let ppl = perplexity_suite(&ctx.rt, eval_structure, &model, &state.params, ctx.eval_batches, q)?;
         ppl_rows.push(
             std::iter::once(r.label.clone())
                 .chain(
@@ -226,9 +225,9 @@ fn tab_eval(ctx: &Ctx, id: &str, title: &str, configs: &[TrainCfg]) -> Result<()
 
         let fs = fewshot_suite(
             &ctx.rt,
-            &eval_art,
+            eval_structure,
             &model,
-            &params,
+            &state.params,
             ctx.fewshot_episodes,
             ctx.fewshot_seeds,
             q,
@@ -304,7 +303,7 @@ fn fig15(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig3(ctx: &Ctx) -> Result<()> {
-    let rows = crate::timemodel::fig3_rows(&ctx.rt, 3)?;
+    let rows = crate::timemodel::fig3_rows(3);
     let csv = crate::timemodel::rows_to_csv(&rows);
     std::fs::create_dir_all(ctx.runs.join("reports"))?;
     std::fs::write(ctx.runs.join("reports/fig3.csv"), &csv)?;
@@ -354,7 +353,7 @@ fn fig5(ctx: &Ctx) -> Result<()> {
             qmax_a: cfg.quant.bits.qmax_scalars()[1],
         };
         let c = crate::analysis::m_sharpness(
-            &ctx.rt, &cfg.eval_artifact(), &model, &state, &radii, 4, 2, q,
+            &ctx.rt, cfg.eval_structure(), &model, &state, &radii, 4, 2, q,
         )?;
         let mut row = vec![r.label.clone(), fmt_f(c.base_loss, 4)];
         for s in &c.sharpness {
@@ -377,7 +376,7 @@ fn fig5(ctx: &Ctx) -> Result<()> {
             qmax_a: cfg.quant.bits.qmax_scalars()[1],
         };
         let surf = crate::analysis::loss_surface(
-            &ctx.rt, &cfg.eval_artifact(), &model, &state, 0.5, 9, 1, q,
+            &ctx.rt, cfg.eval_structure(), &model, &state, 0.5, 9, 1, q,
         )?;
         let path = ctx.runs.join(format!("reports/fig5_surface_{}.csv", r.label));
         std::fs::create_dir_all(ctx.runs.join("reports"))?;
@@ -456,8 +455,7 @@ fn fig8(ctx: &Ctx) -> Result<()> {
     // massive activation outliers in FC2 input at the end of training
     let model = ctx.rt.manifest.model("t4")?.clone();
     let state = runs[0].checkpoint(&ctx.rt)?;
-    let params = state.param_literals(&model)?;
-    let stats = crate::analysis::activation_stats(&ctx.rt, &model, &params)?;
+    let stats = crate::analysis::activation_stats(&ctx.rt, &model, &state.params)?;
     let mean_ch = crate::util::stats::summarize(&stats.fc2_in_channel_max).mean;
     let note = format!(
         "FC2-input massive outliers (baseline final ckpt): abs-max {:.2}, p99.9 {:.2}, \
@@ -491,14 +489,13 @@ fn fig10(ctx: &Ctx) -> Result<()> {
     let base = ensure_runs(&ctx.rt, &ctx.runs, &[ctx.baseline_cfg()], ctx.jobs)?;
     let model = ctx.rt.manifest.model("t4")?.clone();
     let state = base[0].checkpoint(&ctx.rt)?;
-    let params = state.param_literals(&model)?;
     let schemes = vec![
         ("int8 per-token".to_string(), Scheme::new(8, Granularity::PerToken)),
         ("int8 per-tensor".to_string(), Scheme::new(8, Granularity::PerTensor)),
         ("int4 per-token".to_string(), Scheme::new(4, Granularity::PerToken)),
         ("int4 per-tensor".to_string(), Scheme::new(4, Granularity::PerTensor)),
     ];
-    let g = crate::analysis::gradient_stats(&ctx.rt, &model, &params, &schemes)?;
+    let g = crate::analysis::gradient_stats(&ctx.rt, &model, &state.params, &schemes)?;
     std::fs::write(
         ctx.runs.join("reports/fig10_grad_hist.csv"),
         g.weight_grad_hist.to_csv(),
@@ -573,9 +570,8 @@ fn tab1(ctx: &Ctx) -> Result<()> {
     let mut rows = Vec::new();
     for (cfg, r) in [short, long].iter().zip(&runs) {
         let state = r.checkpoint(&ctx.rt)?;
-        let params = state.param_literals(&model)?;
         let ppl = perplexity_suite(
-            &ctx.rt, &cfg.eval_artifact(), &model, &params, ctx.eval_batches,
+            &ctx.rt, cfg.eval_structure(), &model, &state.params, ctx.eval_batches,
             EvalQuant::none(),
         )?;
         rows.push(

@@ -1,15 +1,19 @@
 //! Evaluation harness: perplexity over the four synthetic corpora
 //! (Tables 2-5, 10, 11 columns) and the few-shot downstream suite
-//! (Tables 6-9 columns), scored via the eval artifacts' per-position NLL.
+//! (Tables 6-9 columns), scored via the backend's per-position NLL.
+//!
+//! Parameters arrive as host vectors (one `Vec<f32>` per tensor in manifest
+//! order); `eval_structure` names the forward quantization (e.g. "base",
+//! "w_pc", "a_ptok_asym").
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use crate::data::corpus::{BatchIter, CorpusCfg};
-use crate::data::fewshot::{paper_average, Episode, Task, TaskGen, ALL_TASKS};
 use crate::data::eval_sets;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar, scalar_f32, to_f32, ModelInfo, Runtime};
+use crate::data::fewshot::{paper_average, Episode, Task, TaskGen, ALL_TASKS};
+use crate::runtime::{ModelInfo, Runtime};
 
 /// Quantization knobs applied at eval time (forward pass only).
 #[derive(Debug, Clone, Copy)]
@@ -30,28 +34,29 @@ impl EvalQuant {
 /// Mean NLL of `params` on `n_batches` of the given corpus.
 pub fn corpus_nll(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
     corpus: &CorpusCfg,
     n_batches: usize,
     q: EvalQuant,
 ) -> Result<f64> {
-    let exe = rt.exec(eval_artifact)?;
     let mut it = BatchIter::new(corpus.clone(), model.batch, model.seq);
-    let mask_data = vec![1.0f32; model.batch * model.seq];
-    let mask = lit_f32(&mask_data, &[model.batch, model.seq])?;
-    let qw = lit_scalar(q.qmax_w);
-    let qa = lit_scalar(q.qmax_a);
+    let mask = vec![1.0f32; model.batch * model.seq];
     let mut total = 0.0;
     for _ in 0..n_batches {
         let b = it.next_batch();
-        let x = lit_i32(&b.x, &[b.batch, b.seq])?;
-        let y = lit_i32(&b.y, &[b.batch, b.seq])?;
-        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
-        inputs.extend([&x, &y, &mask, &qw, &qa]);
-        let out = exe.run(&inputs)?;
-        total += scalar_f32(&out[0])? as f64;
+        let out = rt.eval_step(
+            model,
+            eval_structure,
+            q.qmax_w,
+            q.qmax_a,
+            params,
+            &b.x,
+            &b.y,
+            &mask,
+        )?;
+        total += out.mean_nll;
     }
     Ok(total / n_batches as f64)
 }
@@ -59,15 +64,15 @@ pub fn corpus_nll(
 /// Perplexity on all four eval sets; returns (set name -> ppl).
 pub fn perplexity_suite(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
     n_batches: usize,
     q: EvalQuant,
 ) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     for (name, cfg) in eval_sets(model.vocab) {
-        let nll = corpus_nll(rt, eval_artifact, model, params, &cfg, n_batches, q)?;
+        let nll = corpus_nll(rt, eval_structure, model, params, &cfg, n_batches, q)?;
         out.insert(name.to_string(), nll.exp());
     }
     Ok(out)
@@ -81,19 +86,15 @@ pub fn perplexity_suite(
 /// summed NLL over each row's scored region.
 fn score_rows(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
     rows: &[(Vec<i32>, std::ops::Range<usize>)],
     q: EvalQuant,
 ) -> Result<Vec<f64>> {
-    let exe = rt.exec(eval_artifact)?;
     let (bsz, seq) = (model.batch, model.seq);
     let mut scores = Vec::with_capacity(rows.len());
-    let mask_data = vec![1.0f32; bsz * seq];
-    let mask = lit_f32(&mask_data, &[bsz, seq])?;
-    let qw = lit_scalar(q.qmax_w);
-    let qa = lit_scalar(q.qmax_a);
+    let mask = vec![1.0f32; bsz * seq];
 
     for chunk in rows.chunks(bsz) {
         let mut x = vec![0i32; bsz * seq];
@@ -109,12 +110,8 @@ fn score_rows(
                 y[r * seq + t] = tok;
             }
         }
-        let xl = lit_i32(&x, &[bsz, seq])?;
-        let yl = lit_i32(&y, &[bsz, seq])?;
-        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
-        inputs.extend([&xl, &yl, &mask, &qw, &qa]);
-        let out = exe.run(&inputs)?;
-        let per_pos = to_f32(&out[1])?;
+        let out = rt.eval_step(model, eval_structure, q.qmax_w, q.qmax_a, params, &x, &y, &mask)?;
+        let per_pos = out.per_pos;
         for (r, (_, range)) in chunk.iter().enumerate() {
             let mut s = 0.0f64;
             for t in range.clone() {
@@ -129,9 +126,9 @@ fn score_rows(
 /// Accuracy of the model on a set of episodes (argmin candidate NLL).
 pub fn score_episodes(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
     episodes: &[Episode],
     q: EvalQuant,
 ) -> Result<f64> {
@@ -146,7 +143,7 @@ pub fn score_episodes(
             rows.push((tokens, start..end));
         }
     }
-    let scores = score_rows(rt, eval_artifact, model, params, &rows, q)?;
+    let scores = score_rows(rt, eval_structure, model, params, &rows, q)?;
     let mut correct = 0usize;
     let mut idx = 0usize;
     for e in episodes {
@@ -177,9 +174,9 @@ pub struct FewshotReport {
 
 pub fn fewshot_suite(
     rt: &Runtime,
-    eval_artifact: &str,
+    eval_structure: &str,
     model: &ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
     n_episodes: usize,
     n_seeds: usize,
     q: EvalQuant,
@@ -191,7 +188,7 @@ pub fn fewshot_suite(
         let mut accs = Vec::with_capacity(n_seeds);
         for seed in 0..n_seeds {
             let eps = gen.episodes(task, n_episodes, 1000 + seed as u64, 5);
-            accs.push(score_episodes(rt, eval_artifact, model, params, &eps, q)?);
+            accs.push(score_episodes(rt, eval_structure, model, params, &eps, q)?);
         }
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;
         let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()

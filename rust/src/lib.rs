@@ -1,22 +1,44 @@
 //! # qpretrain
 //!
 //! Reproduction of *"Exploring Quantization for Efficient Pre-Training of
-//! Transformer Language Models"* (Chitsaz et al., EMNLP 2024 Findings) as a
-//! three-layer rust + JAX + Pallas system:
+//! Transformer Language Models"* (Chitsaz et al., EMNLP 2024 Findings).
 //!
-//! * **L3 (this crate)** — the experiment coordinator: synthetic data
-//!   pipeline, training loop over AOT-compiled train steps, evaluation,
-//!   post-training quantization, sharpness / outlier / gradient analyses,
-//!   memory & time profilers, and one experiment runner per paper
-//!   table/figure.
-//! * **L2 (python/compile)** — the GPT-2 compute graph with fake
-//!   quantization injected per the paper's Fig. 1, AOT-lowered to HLO text.
-//! * **L1 (python/compile/kernels)** — Pallas fake-quant kernels.
+//! The crate is organized around a **backend seam** ([`backend`]): the
+//! experiment layers speak the [`backend::Backend`] trait — "run one train
+//! / eval / probe step over host (params, m, v) state" — and never see how
+//! steps execute:
 //!
-//! Python never runs at training time: `make artifacts` lowers everything
-//! once; this crate loads the HLO text via the PJRT C API (`xla` crate).
+//! * **native backend** (default build) — pure rust implementation of the
+//!   quantized GPT-2 forward + backward + AdamW update (embedding, causal
+//!   attention, GELU MLP, layernorm, cross-entropy), with fake quantization
+//!   injected at the paper's Fig. 1 points via the bit-exact [`quant`]
+//!   oracle and quantized Adam moments per §3.4. `cargo test` trains a
+//!   small model end-to-end with no PJRT, no Python, no artifacts.
+//! * **pjrt backend** (cargo feature `pjrt`) — executes AOT-lowered HLO
+//!   artifacts (`python/compile`, lowered once by `make artifacts`) through
+//!   the PJRT C API (`xla` crate), as the original three-layer system did.
+//!
+//! Above the seam sit the experiment layers: synthetic data pipeline
+//! ([`data`]), training loop ([`train`]), evaluation ([`eval`]),
+//! post-training quantization ([`ptq`]), sharpness / outlier / gradient
+//! analyses ([`analysis`]), memory & time models ([`memmodel`],
+//! [`timemodel`]), and one experiment runner per paper table/figure
+//! ([`coordinator`]).
+
+// Numeric-kernel code style: explicit index loops mirror the math and the
+// python reference; many hot signatures carry model + quant + state.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::type_complexity,
+    clippy::useless_vec,
+    clippy::excessive_precision,
+    clippy::new_without_default
+)]
 
 pub mod analysis;
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -30,7 +52,7 @@ pub mod timemodel;
 pub mod train;
 pub mod util;
 
-/// Repo-relative default artifact directory.
+/// Repo-relative default artifact directory (pjrt feature).
 pub const ARTIFACT_DIR: &str = "artifacts";
 /// Repo-relative default run-output directory.
 pub const RUNS_DIR: &str = "runs";

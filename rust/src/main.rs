@@ -8,23 +8,27 @@
 //!   sharpness    m-sharpness of a checkpoint
 //!   losssurface  2-D loss surface scan of a checkpoint
 //!   memprofile   analytic peak-memory tables (Figs. 2/14/15)
-//!   timeprofile  linear-vs-attention time share (Fig. 3)
+//!   timeprofile  linear-vs-attention time share (Fig. 3, native kernels)
 //!   experiment   reproduce a paper table/figure (or `all`)
 //!   report       aggregate all experiment reports
-//!   selftest     runtime validation: L1 kernel artifacts vs rust quant
-//!   list         list artifacts/models/experiments
+//!   selftest     runtime validation: native backend vs the quant oracle
+//!   list         list models/structures/experiments
+//!
+//! The default build runs everything on the pure-rust native backend; with
+//! `--features pjrt` and `make artifacts`, the same commands execute the
+//! AOT-lowered HLO artifacts instead.
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use qpretrain::config::{BitWidths, Granularity, QuantRunCfg, Scheme, TrainHp};
+use qpretrain::config::{BitWidths, Granularity, QuantRunCfg, TrainHp};
 use qpretrain::coordinator::{self, experiments};
 use qpretrain::eval::EvalQuant;
 use qpretrain::model::load_checkpoint;
 use qpretrain::runtime::Runtime;
 use qpretrain::util::cli::Args;
-use qpretrain::util::{artifact_dir, repo_root};
+use qpretrain::util::repo_root;
 
 fn main() {
     let args = match Args::from_env() {
@@ -76,7 +80,7 @@ fn quant_from(args: &Args) -> Result<QuantRunCfg> {
 
 fn ctx_from(args: &Args) -> Result<experiments::Ctx> {
     Ok(experiments::Ctx {
-        rt: Runtime::new(&artifact_dir())?,
+        rt: Runtime::open_default()?,
         runs: runs_dir(args),
         steps: args.usize_or("steps", 300)?,
         jobs: args.usize_or("jobs", default_jobs())?,
@@ -119,24 +123,27 @@ fn print_help() {
 
 USAGE: qpretrain <subcommand> [--options]
 
-  train        --model t4 --structure w_pc --wbits 8 --steps 300 [--out DIR]
+  train        --model t4|micro|gpt2s --structure w_pc --wbits 8 --steps 300 [--out DIR]
   eval         --ckpt runs/train/t4/baseline_s300_seed1337 [--suite ppl|fewshot|all]
   ptq          --ckpt DIR --mode weights|acts --bits 8 --gran per_channel
   sharpness    --ckpt DIR [--radii 0.001,0.01,0.1]
   losssurface  --ckpt DIR [--grid 9 --extent 0.5]
   memprofile   [--batches 4,8,16,32,64] (Fig 2/14/15 analytic model)
-  timeprofile  [--reps 5]               (Fig 3 measured on PJRT CPU)
+  timeprofile  [--reps 3]               (Fig 3 measured on native kernels)
   experiment   <fig2|fig3|fig4|...|tab10|tab11|abl_bits|all> [--steps N --jobs K]
   report       aggregate runs/reports/*.md
-  selftest     run L1 kernel artifacts and compare to the rust quant oracle
-  list         artifacts / models / experiments"
+  selftest     native-backend validation against the rust quant oracle
+  list         models / structures / experiments
+
+The default build uses the pure-rust native backend. Build with
+`--features pjrt` (plus `make artifacts`) to execute AOT HLO artifacts."
     );
 }
 
 // ---------------------------------------------------------------------------
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
+    let rt = Runtime::open_default()?;
     let quant = quant_from(args)?;
     let hp = hp_from(args)?;
     let model = args.get_or("model", "t4");
@@ -162,24 +169,28 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn open_ckpt(args: &Args, rt: &Runtime) -> Result<(qpretrain::runtime::ModelInfo, qpretrain::model::HostState, String)> {
+fn open_ckpt(
+    args: &Args,
+    rt: &Runtime,
+) -> Result<(qpretrain::runtime::ModelInfo, qpretrain::model::HostState, String)> {
     let dir = PathBuf::from(args.req("ckpt")?);
     let path = if dir.is_dir() { dir.join("final.ckpt") } else { dir.clone() };
     // infer model + eval structure from result.json when present
-    let (model_name, structure) = match coordinator::RunSummary::load(dir.parent().map(|_| dir.as_path()).unwrap_or(&dir)) {
+    let (model_name, structure) = match coordinator::RunSummary::load(
+        dir.parent().map(|_| dir.as_path()).unwrap_or(&dir),
+    ) {
         Ok(s) => (s.model, s.structure),
         Err(_) => (args.get_or("model", "t4"), args.get_or("structure", "base")),
     };
-    let model = rt.manifest.model(&model_name)?.clone();
+    let model = rt.model(&model_name)?.clone();
     let state = load_checkpoint(&path, &model)?;
-    let eval_art = format!("{}/eval/{}", model_name, experiments::eval_structure(&structure));
-    Ok((model, state, eval_art))
+    let eval_structure = experiments::eval_structure(&structure).to_string();
+    Ok((model, state, eval_structure))
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
-    let (model, state, eval_art) = open_ckpt(args, &rt)?;
-    let params = state.param_literals(&model)?;
+    let rt = Runtime::open_default()?;
+    let (model, state, eval_structure) = open_ckpt(args, &rt)?;
     let q = EvalQuant {
         qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
         qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
@@ -187,7 +198,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let suite = args.get_or("suite", "all");
     if suite == "ppl" || suite == "all" {
         let ppl = qpretrain::eval::perplexity_suite(
-            &rt, &eval_art, &model, &params, args.usize_or("eval-batches", 8)?, q,
+            &rt,
+            &eval_structure,
+            &model,
+            &state.params,
+            args.usize_or("eval-batches", 8)?,
+            q,
         )?;
         for (k, v) in &ppl {
             println!("{k}: ppl {v:.2}");
@@ -195,9 +211,13 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     if suite == "fewshot" || suite == "all" {
         let fs = qpretrain::eval::fewshot_suite(
-            &rt, &eval_art, &model, &params,
+            &rt,
+            &eval_structure,
+            &model,
+            &state.params,
             args.usize_or("fewshot-episodes", 24)?,
-            args.usize_or("fewshot-seeds", 3)?, q,
+            args.usize_or("fewshot-seeds", 3)?,
+            q,
         )?;
         for (t, mean, sd) in &fs.per_task {
             println!("{}: {:.1}% ± {:.1}", t.name(), 100.0 * mean, 100.0 * sd);
@@ -208,7 +228,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_ptq(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
+    let rt = Runtime::open_default()?;
     let (model, state, _) = open_ckpt(args, &rt)?;
     let bits = args.usize_or("bits", 8)? as u32;
     let gran = Granularity::parse(&args.get_or("gran", "per_channel"))?;
@@ -227,8 +247,8 @@ fn cmd_ptq(args: &Args) -> Result<()> {
 }
 
 fn cmd_sharpness(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
-    let (model, state, eval_art) = open_ckpt(args, &rt)?;
+    let rt = Runtime::open_default()?;
+    let (model, state, eval_structure) = open_ckpt(args, &rt)?;
     let radii: Vec<f64> = args
         .get_or("radii", "0.001,0.003,0.01,0.03,0.1")
         .split(',')
@@ -239,8 +259,14 @@ fn cmd_sharpness(args: &Args) -> Result<()> {
         qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
     };
     let c = qpretrain::analysis::m_sharpness(
-        &rt, &eval_art, &model, &state, &radii,
-        args.usize_or("dirs", 4)?, args.usize_or("eval-batches", 2)?, q,
+        &rt,
+        &eval_structure,
+        &model,
+        &state,
+        &radii,
+        args.usize_or("dirs", 4)?,
+        args.usize_or("eval-batches", 2)?,
+        q,
     )?;
     println!("base loss: {:.4}", c.base_loss);
     for (r, s) in c.radii.iter().zip(&c.sharpness) {
@@ -250,16 +276,21 @@ fn cmd_sharpness(args: &Args) -> Result<()> {
 }
 
 fn cmd_losssurface(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
-    let (model, state, eval_art) = open_ckpt(args, &rt)?;
+    let rt = Runtime::open_default()?;
+    let (model, state, eval_structure) = open_ckpt(args, &rt)?;
     let q = EvalQuant {
         qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
         qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
     };
     let surf = qpretrain::analysis::loss_surface(
-        &rt, &eval_art, &model, &state,
-        args.f64_or("extent", 0.5)?, args.usize_or("grid", 9)?,
-        args.usize_or("eval-batches", 1)?, q,
+        &rt,
+        &eval_structure,
+        &model,
+        &state,
+        args.f64_or("extent", 0.5)?,
+        args.usize_or("grid", 9)?,
+        args.usize_or("eval-batches", 1)?,
+        q,
     )?;
     let out = args.get_or("out", "loss_surface.csv");
     std::fs::write(&out, surf.to_csv())?;
@@ -273,15 +304,24 @@ fn cmd_memprofile(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.parse().unwrap_or(4))
         .collect();
-    print!("{}", qpretrain::memmodel::fig2_table(&["small", "medium", "large"], &batches, 1024));
+    print!(
+        "{}",
+        qpretrain::memmodel::fig2_table(&["small", "medium", "large"], &batches, 1024)
+    );
     println!();
-    print!("{}", qpretrain::memmodel::fig15_table(&["small", "medium", "large"], &[128, 256, 512, 1024, 2048], 4));
+    print!(
+        "{}",
+        qpretrain::memmodel::fig15_table(
+            &["small", "medium", "large"],
+            &[128, 256, 512, 1024, 2048],
+            4
+        )
+    );
     Ok(())
 }
 
 fn cmd_timeprofile(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
-    let rows = qpretrain::timemodel::fig3_rows(&rt, args.usize_or("reps", 5)?)?;
+    let rows = qpretrain::timemodel::fig3_rows(args.usize_or("reps", 3)?);
     print!("{}", qpretrain::timemodel::rows_to_csv(&rows));
     Ok(())
 }
@@ -316,91 +356,101 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Runtime validation: execute the standalone L1 kernel artifacts and check
-/// them against the rust quant oracle (cross-language, cross-runtime).
+/// Runtime validation: the native executor against the rust quant oracle,
+/// plus an end-to-end learning check. (Cross-language bit-exactness is
+/// covered by `rust/tests/golden.rs` over the committed fixtures.)
 fn cmd_selftest(_args: &Args) -> Result<()> {
-    use qpretrain::runtime::{lit_f32, lit_scalar, to_f32};
-    let rt = Runtime::new(&artifact_dir())?;
-    let mut rng = qpretrain::util::rng::Rng::new(0x5E1F);
-    let (m, n, k) = (256usize, 512usize, 256usize);
-    let x = rng.normal_vec(m * n, 0.0, 1.0);
-    let xl = lit_f32(&x, &[m, n])?;
+    use qpretrain::config::Scheme;
+    use qpretrain::model::init_state;
+    use qpretrain::quant;
 
-    let cases = [
-        ("k/qdq_pt_pallas", Granularity::PerTensor, false),
-        ("k/qdq_pc_pallas", Granularity::PerChannel, false),
-        ("k/qdq_ptok_pallas", Granularity::PerToken, false),
-        ("k/qdq_ptok_asym_pallas", Granularity::PerToken, true),
-        ("k/qdq_pt_jnp", Granularity::PerTensor, false),
-    ];
-    for (art, gran, asym) in cases {
-        for bits in [4u32, 8] {
-            let qmax = lit_scalar(Scheme::new(bits, gran).qmax());
-            let out = rt.run(art, &[&xl, &qmax])?;
-            let got = to_f32(&out[0])?;
-            let scheme = if asym { Scheme::asym(bits, gran) } else { Scheme::new(bits, gran) };
-            let want = qpretrain::quant::qdq_copy(&x, m, n, scheme);
-            let max_err = got
-                .iter()
-                .zip(&want)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f32, f32::max);
-            let ok = max_err <= 1e-5;
-            println!("{art} b{bits}: max |pallas - rust| = {max_err:.2e} {}", if ok { "OK" } else { "FAIL" });
-            if !ok {
-                bail!("selftest failed for {art} at {bits} bits");
-            }
-        }
+    let rt = Runtime::native();
+    let model = rt.model("micro")?.clone();
+
+    // 1) forward fake-quant injection: eval("w_pc") on latent weights must
+    //    equal eval("base") on host-side per-layer qdq'd weights, bit for bit
+    let state = init_state(&model, 99);
+    let mut qstate = state.clone();
+    qpretrain::ptq::quantize_weights(
+        &mut qstate,
+        &model,
+        Scheme::new(8, Granularity::PerChannel),
+    );
+    let mut it = qpretrain::data::BatchIter::new(
+        qpretrain::data::CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let mask = vec![1.0f32; model.batch * model.seq];
+    let latent = rt.eval_step(&model, "w_pc", 127.0, 1.0, &state.params, &b.x, &b.y, &mask)?;
+    let host = rt.eval_step(&model, "base", 1.0, 1.0, &qstate.params, &b.x, &b.y, &mask)?;
+    let ok = latent.per_pos == host.per_pos;
+    println!(
+        "native w_pc forward == host-qdq weights + base forward: {}",
+        if ok { "OK (bit-exact)" } else { "FAIL" }
+    );
+    if !ok {
+        bail!("selftest failed: forward fake-quant does not match quant::qdq");
     }
 
-    // fused qmatmul vs rust reference
-    let w = rng.normal_vec(n * k, 0.0, 1.0);
-    let wl = lit_f32(&w, &[n, k])?;
-    let q = lit_scalar(127.0f32);
-    let out = rt.run("k/qmatmul_pallas", &[&xl, &wl, &q, &q])?;
-    let got = to_f32(&out[0])?;
-    let xq = qpretrain::quant::qdq_copy(&x, m, n, Scheme::new(8, Granularity::PerToken));
-    let wq = qpretrain::quant::qdq_copy(&w, n, k, Scheme::new(8, Granularity::PerChannel));
-    let mut want = vec![0.0f32; m * k];
-    for i in 0..m {
-        for l in 0..n {
-            let a = xq[i * n + l];
-            if a == 0.0 {
-                continue;
-            }
-            for j in 0..k {
-                want[i * k + j] += a * wq[l * k + j];
-            }
-        }
+    // 2) oracle spot checks (round-half-to-even, Eq. 1 grid)
+    let mut x = vec![-4.0f32, -1.0, 0.0, 2.0];
+    quant::qdq(&mut x, 1, 4, Scheme::new(3, Granularity::PerTensor));
+    let s = 4.0f32 / 3.0;
+    if x != vec![-3.0 * s, -1.0 * s, 0.0, 2.0 * s] {
+        bail!("selftest failed: hand-computed per-tensor case");
     }
-    let rel: f64 = got
-        .iter()
-        .zip(&want)
-        .map(|(a, b)| ((a - b).abs() / (b.abs() + 1e-3)) as f64)
-        .sum::<f64>()
-        / want.len() as f64;
-    println!("k/qmatmul_pallas vs rust gemm: mean rel err {rel:.2e} {}", if rel < 1e-4 { "OK" } else { "FAIL" });
-    if rel >= 1e-4 {
-        bail!("qmatmul selftest failed");
+    println!("quant oracle hand-computed case: OK");
+
+    // 3) end-to-end learning on the native backend
+    let cfg = qpretrain::train::TrainCfg::new(
+        "micro",
+        QuantRunCfg::baseline(),
+        TrainHp {
+            steps: 20,
+            eval_every: 0,
+            log_every: usize::MAX,
+            ..TrainHp::default()
+        },
+    );
+    let r = qpretrain::train::train(&rt, &cfg)?;
+    println!(
+        "native 20-step train: {:.4} -> {:.4} ({})",
+        r.losses[0],
+        r.final_loss(),
+        if r.final_loss() < r.losses[0] - 0.1 {
+            "OK"
+        } else {
+            "FAIL"
+        }
+    );
+    if r.final_loss() >= r.losses[0] - 0.1 {
+        bail!("selftest failed: native training did not learn");
     }
     println!("selftest OK");
     Ok(())
 }
 
 fn cmd_list(_args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifact_dir())?;
+    let rt = Runtime::open_default()?;
+    println!("backend: {}", rt.backend_name());
     println!("models:");
     let mut models: Vec<_> = rt.manifest.models.keys().collect();
     models.sort();
     for m in models {
         let info = &rt.manifest.models[m];
-        println!("  {m}: {}L d{} h{} V{} T{} B{} ({} params)", info.n_layer, info.d_model, info.n_head, info.vocab, info.seq, info.batch, info.n_params);
+        println!(
+            "  {m}: {}L d{} h{} V{} T{} B{} ({} params)",
+            info.n_layer, info.d_model, info.n_head, info.vocab, info.seq, info.batch, info.n_params
+        );
     }
-    println!("artifacts: {}", rt.manifest.artifacts.len());
-    let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
-    names.sort();
-    for n in names {
-        println!("  {n}");
+    println!(
+        "quant structures: {}",
+        qpretrain::backend::QuantStructure::ALL.join(", ")
+    );
+    if !rt.manifest.artifacts.is_empty() {
+        println!("AOT artifacts: {}", rt.manifest.artifacts.len());
     }
     println!("experiments: {:?} + all", experiments::ALL);
     Ok(())

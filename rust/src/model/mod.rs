@@ -1,6 +1,9 @@
 //! Host-side model state: parameter initialization (matching the GPT-2
-//! conventions recorded in the manifest), checkpoints, and conversions
-//! between host vectors and PJRT literals.
+//! conventions recorded in the manifest / native registry) and checkpoints.
+//!
+//! `HostState` is the currency of the [`crate::backend`] seam: backends
+//! consume and update it in place; nothing here depends on how steps
+//! execute.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -9,7 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use flate2::read::GzDecoder;
 use flate2::write::GzEncoder;
 
-use crate::runtime::{lit_f32, to_f32, ModelInfo, ParamInfo};
+use crate::runtime::{ModelInfo, ParamInfo};
 use crate::util::rng::Rng;
 
 /// Full optimizer+model state on the host: params, Adam m and v, step count.
@@ -63,50 +66,6 @@ pub fn init_state(model: &ModelInfo, seed: u64) -> HostState {
 }
 
 impl HostState {
-    /// params+m+v as literals in the train-artifact input order.
-    pub fn to_literals(&self, model: &ModelInfo) -> Result<Vec<xla::Literal>> {
-        let mut out = Vec::with_capacity(3 * self.params.len());
-        for group in [&self.params, &self.m, &self.v] {
-            for (p, data) in model.params.iter().zip(group.iter()) {
-                out.push(lit_f32(data, &p.shape)?);
-            }
-        }
-        Ok(out)
-    }
-
-    /// params only, as literals (eval/probe input prefix).
-    pub fn param_literals(&self, model: &ModelInfo) -> Result<Vec<xla::Literal>> {
-        model
-            .params
-            .iter()
-            .zip(self.params.iter())
-            .map(|(p, data)| lit_f32(data, &p.shape))
-            .collect()
-    }
-
-    /// Rebuild host state from the (params, m, v) literal prefix of a train
-    /// step's outputs.
-    pub fn from_literals(
-        model: &ModelInfo,
-        lits: &[xla::Literal],
-        step: usize,
-    ) -> Result<HostState> {
-        let np = model.params.len();
-        if lits.len() < 3 * np {
-            bail!("expected at least {} literals, got {}", 3 * np, lits.len());
-        }
-        let grab = |range: std::ops::Range<usize>| -> Result<Vec<Vec<f32>>> {
-            lits[range].iter().map(to_f32).collect()
-        };
-        Ok(HostState {
-            model: model.name.clone(),
-            step,
-            params: grab(0..np)?,
-            m: grab(np..2 * np)?,
-            v: grab(2 * np..3 * np)?,
-        })
-    }
-
     pub fn n_scalars(&self) -> usize {
         self.params.iter().map(|p| p.len()).sum()
     }

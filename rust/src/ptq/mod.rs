@@ -70,12 +70,11 @@ pub fn ptq_weights_ppl(
 ) -> Result<std::collections::BTreeMap<String, f64>> {
     let mut state = baseline.clone();
     quantize_weights(&mut state, model, Scheme::new(bits, gran));
-    let params = state.param_literals(model)?;
     crate::eval::perplexity_suite(
         rt,
-        &format!("{}/eval/base", model.name),
+        "base",
         model,
-        &params,
+        &state.params,
         n_batches,
         crate::eval::EvalQuant::none(),
     )
@@ -95,13 +94,12 @@ pub fn ptq_acts_ppl(
         Granularity::PerToken => "a_ptok",
         Granularity::PerChannel => "a_pc",
     };
-    let params = baseline.param_literals(model)?;
     let qmax = Scheme::new(bits, gran).qmax();
     crate::eval::perplexity_suite(
         rt,
-        &format!("{}/eval/{structure}", model.name),
+        structure,
         model,
-        &params,
+        &baseline.params,
         n_batches,
         crate::eval::EvalQuant {
             qmax_w: 1.0,

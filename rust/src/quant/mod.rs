@@ -1,12 +1,13 @@
 //! Rust mirror of the paper's Eq. 1 linear quantization (see
 //! `python/compile/kernels/ref.py`, the cross-language oracle).
 //!
-//! Bit-exactness with the python side is load-bearing: the PTQ harness
-//! (Tables 10/11) quantizes trained checkpoints *in rust* and evaluates them
-//! through HLO artifacts, so the numerics must be the ones the paper's
-//! training graph used. Golden-file tests (`rust/tests/golden.rs`) pin this:
-//! `jnp.round` is round-half-to-even, matched by `f32::round_ties_even`; the
-//! scale floor is the same `EPS`.
+//! Bit-exactness with the python side is load-bearing: the native backend
+//! injects *this* module's `qdq` at the paper's Fig. 1 points, and the PTQ
+//! harness (Tables 10/11) quantizes trained checkpoints with it, so the
+//! numerics must be the ones the paper's training graph used. Golden-file
+//! tests (`rust/tests/golden.rs`, committed fixtures) pin this: `jnp.round`
+//! is round-half-to-even, matched by `f32::round_ties_even`; the scale
+//! floor is the same `EPS`.
 //!
 //! Also provides truly-packed int8/int4 storage (`PackedTensor`) used for
 //! memory accounting and the storage-size claims of the paper's §3.3.
@@ -56,69 +57,104 @@ pub fn quantize_one(x: f32, p: QParams, qmax: f32) -> f32 {
     ((x / p.scale).round_ties_even() - p.zero).clamp(n, qmax)
 }
 
-/// Fake-quantize one value (quantize + dequantize).
+/// Fake-quantize one value (quantize + dequantize). `asymmetric` selects
+/// the dequant formula: the symmetric path computes `s * x_int` exactly as
+/// the python oracle does — adding a `+ 0.0` offset there would flip IEEE
+/// `-0.0` codes to `+0.0` and break u32-level bit-exactness with the
+/// committed golden fixtures.
 #[inline]
-pub fn qdq_one(x: f32, p: QParams, qmax: f32) -> f32 {
-    p.scale * (quantize_one(x, p, qmax) + p.zero)
+pub fn qdq_one(x: f32, p: QParams, qmax: f32, asymmetric: bool) -> f32 {
+    let q = quantize_one(x, p, qmax);
+    if asymmetric {
+        p.scale * (q + p.zero)
+    } else {
+        p.scale * q
+    }
+}
+
+/// Group quantization parameters for a (rows x cols) row-major matrix at a
+/// runtime qmax: one entry per tensor / row / column depending on
+/// granularity. Columns are gathered and fed through the same
+/// `params_sym`/`params_asym` used everywhere else (single source of truth
+/// for the min/max + scale numerics).
+pub fn group_params_qmax(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    granularity: Granularity,
+    asymmetric: bool,
+    qmax: f32,
+) -> Vec<QParams> {
+    let pfn: fn(&[f32], f32) -> QParams = if asymmetric { params_asym } else { params_sym };
+    match granularity {
+        Granularity::PerTensor => vec![pfn(data, qmax)],
+        Granularity::PerToken => (0..rows)
+            .map(|r| pfn(&data[r * cols..(r + 1) * cols], qmax))
+            .collect(),
+        Granularity::PerChannel => {
+            let mut col = vec![0.0f32; rows];
+            (0..cols)
+                .map(|c| {
+                    for (r, slot) in col.iter_mut().enumerate() {
+                        *slot = data[r * cols + c];
+                    }
+                    pfn(&col, qmax)
+                })
+                .collect()
+        }
+    }
+}
+
+/// Fake-quantize with an explicit runtime qmax (the native backend's entry
+/// point: artifact structures receive qmax as a runtime scalar, so bit-width
+/// never needs to be known here).
+pub fn qdq_qmax(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    granularity: Granularity,
+    asymmetric: bool,
+    qmax: f32,
+) {
+    assert_eq!(data.len(), rows * cols, "shape mismatch");
+    let params = group_params_qmax(data, rows, cols, granularity, asymmetric, qmax);
+    match granularity {
+        Granularity::PerTensor => {
+            let p = params[0];
+            for x in data.iter_mut() {
+                *x = qdq_one(*x, p, qmax, asymmetric);
+            }
+        }
+        Granularity::PerToken => {
+            for r in 0..rows {
+                let p = params[r];
+                for x in data[r * cols..(r + 1) * cols].iter_mut() {
+                    *x = qdq_one(*x, p, qmax, asymmetric);
+                }
+            }
+        }
+        Granularity::PerChannel => {
+            for r in 0..rows {
+                for c in 0..cols {
+                    data[r * cols + c] =
+                        qdq_one(data[r * cols + c], params[c], qmax, asymmetric);
+                }
+            }
+        }
+    }
 }
 
 /// Fake-quantize a (rows x cols) row-major matrix in place, matching the
 /// python oracle bit-for-bit for every granularity/scheme combination.
 pub fn qdq(data: &mut [f32], rows: usize, cols: usize, scheme: Scheme) {
-    assert_eq!(data.len(), rows * cols, "shape mismatch");
-    let qmax = scheme.qmax();
-    let pfn = if scheme.asymmetric { params_asym } else { params_sym };
-    match scheme.granularity {
-        Granularity::PerTensor => {
-            let p = pfn(data, qmax);
-            for x in data.iter_mut() {
-                *x = qdq_one(*x, p, qmax);
-            }
-        }
-        Granularity::PerToken => {
-            for r in 0..rows {
-                let row = &mut data[r * cols..(r + 1) * cols];
-                let p = pfn(row, qmax);
-                for x in row.iter_mut() {
-                    *x = qdq_one(*x, p, qmax);
-                }
-            }
-        }
-        Granularity::PerChannel => {
-            // column scales: gather per-column params first
-            let mut params = Vec::with_capacity(cols);
-            for c in 0..cols {
-                if scheme.asymmetric {
-                    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
-                    for r in 0..rows {
-                        let x = data[r * cols + c];
-                        lo = lo.min(x);
-                        hi = hi.max(x);
-                    }
-                    let n = -qmax - 1.0;
-                    let scale = ((hi - lo) / (2.0 * qmax + 1.0)).max(EPS);
-                    params.push(QParams {
-                        scale,
-                        zero: (lo / scale).round_ties_even() - n,
-                    });
-                } else {
-                    let mut amax = 0.0f32;
-                    for r in 0..rows {
-                        amax = amax.max(data[r * cols + c].abs());
-                    }
-                    params.push(QParams {
-                        scale: (amax / qmax).max(EPS),
-                        zero: 0.0,
-                    });
-                }
-            }
-            for r in 0..rows {
-                for c in 0..cols {
-                    data[r * cols + c] = qdq_one(data[r * cols + c], params[c], qmax);
-                }
-            }
-        }
-    }
+    qdq_qmax(
+        data,
+        rows,
+        cols,
+        scheme.granularity,
+        scheme.asymmetric,
+        scheme.qmax(),
+    );
 }
 
 /// Non-destructive variant.
@@ -150,36 +186,18 @@ impl PackedTensor {
         assert!(scheme.bits >= 2 && scheme.bits <= 8);
         assert_eq!(data.len(), rows * cols);
         let qmax = scheme.qmax();
-        let pfn = if scheme.asymmetric { params_asym } else { params_sym };
 
-        // group params
-        let (scales, zeros): (Vec<f32>, Vec<f32>) = match scheme.granularity {
-            Granularity::PerTensor => {
-                let p = pfn(data, qmax);
-                (vec![p.scale], vec![p.zero])
-            }
-            Granularity::PerToken => {
-                let mut s = Vec::with_capacity(rows);
-                let mut z = Vec::with_capacity(rows);
-                for r in 0..rows {
-                    let p = pfn(&data[r * cols..(r + 1) * cols], qmax);
-                    s.push(p.scale);
-                    z.push(p.zero);
-                }
-                (s, z)
-            }
-            Granularity::PerChannel => {
-                let mut s = Vec::with_capacity(cols);
-                let mut z = Vec::with_capacity(cols);
-                for c in 0..cols {
-                    let col: Vec<f32> = (0..rows).map(|r| data[r * cols + c]).collect();
-                    let p = pfn(&col, qmax);
-                    s.push(p.scale);
-                    z.push(p.zero);
-                }
-                (s, z)
-            }
-        };
+        // group params (shared with qdq: one source of truth for the scales)
+        let params = group_params_qmax(
+            data,
+            rows,
+            cols,
+            scheme.granularity,
+            scheme.asymmetric,
+            qmax,
+        );
+        let scales: Vec<f32> = params.iter().map(|p| p.scale).collect();
+        let zeros: Vec<f32> = params.iter().map(|p| p.zero).collect();
 
         let param_at = |r: usize, c: usize| -> QParams {
             match scheme.granularity {
@@ -199,7 +217,7 @@ impl PackedTensor {
         }
         let packed = if scheme.bits <= 4 {
             // nibble-pack
-            let mut out = Vec::with_capacity((n + 1) / 2);
+            let mut out = Vec::with_capacity(n.div_ceil(2));
             for pair in codes.chunks(2) {
                 let lo = (pair[0] as u8) & 0x0F;
                 let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };

@@ -1,23 +1,27 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) described
-//! by `manifest.json` and executes them on the CPU PJRT client.
+//! Runtime façade over the [`crate::backend`] seam.
 //!
-//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
-//! jax>=0.5 serialized protos with 64-bit instruction ids; the text parser
-//! reassigns ids). Lowering uses `return_tuple=True`, so every execution
-//! returns one tuple buffer which is decomposed into per-output literals.
+//! A [`Runtime`] owns a model registry (the manifest) and a boxed
+//! [`Backend`] executor; the train loop, eval harness, PTQ, analyses and
+//! coordinator all go through it and never see how steps execute.
+//!
+//! * Default build: [`Runtime::native`] — models come from the built-in
+//!   registry (`backend::native::native_models`), steps run in pure rust.
+//! * `--features pjrt`: [`Runtime::pjrt`] loads `manifest.json` +
+//!   `*.hlo.txt` AOT artifacts and executes them on the PJRT CPU client.
+//!   [`Runtime::open_default`] picks pjrt when the artifact directory
+//!   exists and falls back to native otherwise.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
+use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, StepOut};
+use crate::model::HostState;
 use crate::util::json::{self, Value};
 
 // ---------------------------------------------------------------------------
-// manifest
+// manifest (model + artifact metadata; pure data, backend-independent)
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, PartialEq)]
@@ -100,6 +104,15 @@ fn parse_sig(v: &Value) -> Result<Vec<TensorSig>> {
 }
 
 impl Manifest {
+    /// The built-in native model registry (no files needed).
+    pub fn native() -> Manifest {
+        Manifest {
+            models: crate::backend::native::native_models(),
+            artifacts: HashMap::new(),
+        }
+    }
+
+    /// Load `manifest.json` from an AOT artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -178,7 +191,7 @@ impl Manifest {
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models
             .get(name)
-            .ok_or_else(|| anyhow!("unknown model {name:?} in manifest"))
+            .ok_or_else(|| anyhow!("unknown model {name:?}"))
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
@@ -189,122 +202,128 @@ impl Manifest {
 }
 
 // ---------------------------------------------------------------------------
-// literal helpers
+// runtime façade
 // ---------------------------------------------------------------------------
 
-pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-    if shape.is_empty() {
-        return Ok(xla::Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
-}
-
-pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
-}
-
-pub fn lit_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    Ok(lit.to_vec::<f32>()?[0])
-}
-
-// ---------------------------------------------------------------------------
-// runtime
-// ---------------------------------------------------------------------------
-
-/// A compiled artifact plus its signature.
-pub struct Executable {
-    pub info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute with literal inputs; returns per-output literals (decomposed
-    /// from the single result tuple).
-    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.info.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.info.name,
-                self.info.inputs.len(),
-                inputs.len()
-            );
-        }
-        let bufs = self.exe.execute::<&xla::Literal>(inputs)?;
-        let tuple = bufs[0][0].to_literal_sync()?;
-        Ok(tuple.to_tuple()?)
-    }
-
-    /// Execute and time just the device execution + download.
-    pub fn run_timed(&self, inputs: &[&xla::Literal]) -> Result<(Vec<xla::Literal>, f64)> {
-        let t0 = Instant::now();
-        let out = self.run(inputs)?;
-        Ok((out, t0.elapsed().as_secs_f64()))
-    }
-}
-
-/// Loads + caches compiled executables over one PJRT CPU client.
+/// Model registry + executor. All experiment code goes through this.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
-    pub fn new(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
+    /// Pure-rust native runtime (the default-build path; never fails).
+    pub fn native() -> Runtime {
+        Runtime {
+            manifest: Manifest::native(),
+            backend: Box::new(crate::backend::native::NativeBackend),
+        }
+    }
+
+    /// PJRT runtime over an AOT artifact directory.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(dir: &Path) -> Result<Runtime> {
+        let backend = crate::backend::pjrt::PjrtBackend::new(dir)?;
         Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            cache: RefCell::new(HashMap::new()),
+            manifest: backend.manifest().clone(),
+            backend: Box::new(backend),
         })
     }
 
-    /// Open the default artifact directory.
+    /// Default runtime: the PJRT artifacts when the feature is on and the
+    /// artifact directory exists, the native backend otherwise.
     pub fn open_default() -> Result<Runtime> {
-        Runtime::new(&crate::util::artifact_dir())
-    }
-
-    /// Compile (or fetch from cache) an artifact by manifest name.
-    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
+        #[cfg(feature = "pjrt")]
+        {
+            let dir = crate::util::artifact_dir();
+            if dir.join("manifest.json").exists() {
+                return Runtime::pjrt(&dir);
+            }
+            log::info!("no AOT artifacts at {dir:?}; using the native backend");
         }
-        let info = self.manifest.artifact(name)?.clone();
-        let path = self.dir.join(&info.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        log::info!(
-            "compiled {name} ({:.2}s)",
-            t0.elapsed().as_secs_f64()
-        );
-        let wrapped = Rc::new(Executable { info, exe });
-        self.cache
-            .borrow_mut()
-            .insert(name.to_string(), wrapped.clone());
-        Ok(wrapped)
+        Ok(Runtime::native())
     }
 
-    /// One-shot convenience: compile + run.
-    pub fn run(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.exec(name)?.run(inputs)
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.manifest.model(name)
+    }
+
+    /// One optimizer step over `state` (updated in place); see
+    /// [`Backend::train_step`].
+    pub fn train_step(
+        &self,
+        model: &ModelInfo,
+        structure: &str,
+        qmax: &[f32; 5],
+        state: &mut HostState,
+        x: &[i32],
+        y: &[i32],
+        lr: f32,
+        t: f32,
+    ) -> Result<StepOut> {
+        self.backend
+            .train_step(model, structure, qmax, state, x, y, lr, t)
+    }
+
+    /// Forward-only scoring; see [`Backend::eval_step`].
+    pub fn eval_step(
+        &self,
+        model: &ModelInfo,
+        structure: &str,
+        qmax_w: f32,
+        qmax_a: f32,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        self.backend
+            .eval_step(model, structure, qmax_w, qmax_a, params, x, y, mask)
+    }
+
+    /// Outlier probe of the last block; see [`Backend::act_probe`].
+    pub fn act_probe(
+        &self,
+        model: &ModelInfo,
+        params: &[Vec<f32>],
+        x: &[i32],
+    ) -> Result<ActProbe> {
+        self.backend.act_probe(model, params, x)
+    }
+
+    /// Gradient snapshot probe; see [`Backend::grad_probe`].
+    pub fn grad_probe(
+        &self,
+        model: &ModelInfo,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+    ) -> Result<GradProbe> {
+        self.backend.grad_probe(model, params, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_has_models() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend_name(), "native");
+        let t4 = rt.model("t4").unwrap();
+        assert_eq!(t4.params.len(), 16);
+        assert_eq!(t4.vocab, 512);
+        assert!(rt.model("nope").is_err());
+    }
+
+    #[test]
+    fn open_default_never_fails_without_artifacts() {
+        let rt = Runtime::open_default().unwrap();
+        assert!(rt.model("micro").is_ok());
     }
 }

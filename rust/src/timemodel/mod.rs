@@ -3,18 +3,27 @@
 //! The paper profiled GPU kernels with Nsight; here the same question —
 //! what fraction of a block's fwd+bwd time goes to the linear layers vs the
 //! attention core, across model sizes and sequence lengths — is answered by
-//! timing the AOT-compiled `prof/linear_*` and `prof/attn_*` artifacts on
-//! the CPU PJRT client, next to an analytic FLOPs model. The claim being
-//! reproduced is about the *ratio* and its trends (O(T d^2) vs O(T^2 d)),
-//! not absolute kernel times.
+//! timing the native backend's matmul kernels next to an analytic FLOPs
+//! model. The claim being reproduced is about the *ratio* and its trends
+//! (O(T d^2) vs O(T^2 d)), not absolute kernel times.
+//!
+//! Measurement strategy: matmul time is linear in the row count, so the
+//! linear-layer component is timed over a row sample sized to a fixed FLOP
+//! budget and extrapolated to the full sequence; the attention component
+//! (quadratic in T, so rows cannot be subsampled) is timed over a head
+//! sample. fwd+bwd is 3x the forward matmul work (one forward GEMM, two
+//! backward GEMMs of the same shape).
 
-use anyhow::Result;
+use std::time::Instant;
 
-use crate::runtime::{lit_f32, Runtime};
+use crate::backend::math::{matmul, matmul_nt};
 use crate::util::rng::Rng;
 
 pub const SIZES: [&str; 4] = ["small", "medium", "large", "xl"];
 pub const SEQS: [usize; 4] = [128, 256, 512, 1024];
+
+/// FLOP budget per timed sample (keeps the full grid interactive).
+const SAMPLE_MACS: usize = 24_000_000;
 
 #[derive(Debug, Clone)]
 pub struct FractionRow {
@@ -31,27 +40,59 @@ fn median(mut xs: Vec<f64>) -> f64 {
     xs[xs.len() / 2]
 }
 
-/// Time one prof artifact: median of `reps` runs after one warmup.
-pub fn time_artifact(rt: &Runtime, name: &str, reps: usize) -> Result<f64> {
-    let exe = rt.exec(name)?;
-    let mut rng = Rng::new(0x7177);
-    let inputs: Vec<xla::Literal> = exe
-        .info
-        .inputs
-        .iter()
-        .map(|sig| {
-            let data = rng.normal_vec(sig.elems(), 0.0, 0.5);
-            lit_f32(&data, &sig.shape)
-        })
-        .collect::<Result<_>>()?;
-    let refs: Vec<&xla::Literal> = inputs.iter().collect();
-    exe.run(&refs)?; // warmup
+/// Time the four block linears (QKV, out-proj, FC1, FC2) forward over a row
+/// sample, extrapolated to `seq` rows and fwd+bwd; returns milliseconds.
+pub fn time_linear(d_model: usize, d_ff: usize, seq: usize, reps: usize) -> f64 {
+    let d = d_model;
+    let macs_per_row = d * (3 * d) + d * d + d * d_ff + d_ff * d;
+    let cap = seq.max(1); // clamp bounds must satisfy min <= max for seq < 8
+    let rows = (SAMPLE_MACS / macs_per_row).clamp(8.min(cap), cap);
+    let mut rng = Rng::new(0x11A);
+    let x = rng.normal_vec(rows * d, 0.0, 0.5);
+    let xf = rng.normal_vec(rows * d_ff, 0.0, 0.5);
+    let w_qkv = rng.normal_vec(d * 3 * d, 0.0, 0.02);
+    let w_proj = rng.normal_vec(d * d, 0.0, 0.02);
+    let w_fc1 = rng.normal_vec(d * d_ff, 0.0, 0.02);
+    let w_fc2 = rng.normal_vec(d_ff * d, 0.0, 0.02);
+
     let mut times = Vec::with_capacity(reps);
-    for _ in 0..reps {
-        let (_, dt) = exe.run_timed(&refs)?;
-        times.push(dt * 1e3);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(matmul(&x, &w_qkv, rows, d, 3 * d));
+        std::hint::black_box(matmul(&x, &w_proj, rows, d, d));
+        std::hint::black_box(matmul(&x, &w_fc1, rows, d, d_ff));
+        std::hint::black_box(matmul(&xf, &w_fc2, rows, d_ff, d));
+        times.push(t0.elapsed().as_secs_f64());
     }
-    Ok(median(times))
+    median(times) * (seq as f64 / rows as f64) * 3.0 * 1e3
+}
+
+/// Time the attention core (QKᵀ and P@V) forward over a head sample,
+/// extrapolated to `n_head` heads and fwd+bwd; returns milliseconds.
+pub fn time_attn(d_model: usize, n_head: usize, seq: usize, reps: usize) -> f64 {
+    let hd = d_model / n_head;
+    let macs_per_head = 2 * seq * seq * hd;
+    let heads = (SAMPLE_MACS / macs_per_head.max(1)).clamp(1, n_head.max(1));
+    let mut rng = Rng::new(0xA77);
+    let q = rng.normal_vec(heads * seq * hd, 0.0, 0.5);
+    let k = rng.normal_vec(heads * seq * hd, 0.0, 0.5);
+    let p = rng.normal_vec(heads * seq * seq, 0.0, 0.1);
+    let v = rng.normal_vec(heads * seq * hd, 0.0, 0.5);
+
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        for h in 0..heads {
+            let qs = &q[h * seq * hd..(h + 1) * seq * hd];
+            let ks = &k[h * seq * hd..(h + 1) * seq * hd];
+            let ps = &p[h * seq * seq..(h + 1) * seq * seq];
+            let vs = &v[h * seq * hd..(h + 1) * seq * hd];
+            std::hint::black_box(matmul_nt(qs, ks, seq, hd, seq));
+            std::hint::black_box(matmul(ps, vs, seq, seq, hd));
+        }
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    median(times) * (n_head as f64 / heads as f64) * 3.0 * 1e3
 }
 
 /// Analytic FLOPs of the two components (fwd+bwd ~ 3x fwd).
@@ -65,14 +106,14 @@ pub fn analytic_fraction(d_model: usize, n_head: usize, seq: usize) -> f64 {
     linear / (linear + attn)
 }
 
-/// Measure the full Fig. 3 grid.
-pub fn fig3_rows(rt: &Runtime, reps: usize) -> Result<Vec<FractionRow>> {
+/// Measure the full Fig. 3 grid on the native kernels.
+pub fn fig3_rows(reps: usize) -> Vec<FractionRow> {
     let mut out = Vec::new();
     for size in SIZES {
         let m = crate::memmodel::profile_model(size);
         for seq in SEQS {
-            let lin = time_artifact(rt, &format!("prof/linear_{size}_s{seq}"), reps)?;
-            let att = time_artifact(rt, &format!("prof/attn_{size}_s{seq}"), reps)?;
+            let lin = time_linear(m.d_model, m.d_ff, seq, reps);
+            let att = time_attn(m.d_model, m.n_head, seq, reps);
             out.push(FractionRow {
                 size: size.to_string(),
                 seq,
@@ -83,7 +124,7 @@ pub fn fig3_rows(rt: &Runtime, reps: usize) -> Result<Vec<FractionRow>> {
             });
         }
     }
-    Ok(out)
+    out
 }
 
 pub fn rows_to_csv(rows: &[FractionRow]) -> String {
@@ -124,5 +165,17 @@ mod tests {
                 assert!(f > 0.0 && f < 1.0);
             }
         }
+    }
+
+    #[test]
+    fn measured_times_positive_and_scale_with_seq() {
+        // tiny shapes so the test stays fast
+        let l128 = time_linear(64, 256, 128, 1);
+        let l512 = time_linear(64, 256, 512, 1);
+        assert!(l128 > 0.0);
+        // extrapolation is linear in rows: 4x seq ~ 4x time (loose factor)
+        assert!(l512 > l128 * 1.5, "l128={l128} l512={l512}");
+        let a = time_attn(64, 4, 128, 1);
+        assert!(a > 0.0);
     }
 }

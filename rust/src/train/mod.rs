@@ -1,26 +1,26 @@
-//! L3 training loop: drives an AOT-compiled train-step artifact.
+//! L3 training loop, backend-agnostic: drives [`crate::runtime::Runtime`]
+//! train steps over host state.
 //!
-//! The loop owns the (params, m, v) state as PJRT literals — each step feeds
-//! the previous step's output literals straight back in, so the only
-//! per-step host work is the token batch, the LR scalar, and the loss/gnorm
-//! download. Divergence (the paper's non-convergence cases) is detected and
-//! recorded rather than treated as an error: several of the paper's
-//! configurations are *expected* to blow up, and the experiment reports need
-//! the step at which they did.
+//! The loop owns the (params, m, v) state as a [`HostState`] which the
+//! backend updates in place each step; the only other per-step host work is
+//! the token batch, the LR scalar, and bookkeeping. Divergence (the paper's
+//! non-convergence cases) is detected and recorded rather than treated as
+//! an error: several of the paper's configurations are *expected* to blow
+//! up, and the experiment reports need the step at which they did.
 
 use std::io::Write;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::{cosine_lr, QuantRunCfg, TrainHp};
 use crate::data::{BatchIter, CorpusCfg};
 use crate::model::{init_state, save_checkpoint, HostState};
-use crate::runtime::{lit_i32, lit_scalar, scalar_f32, Runtime};
+use crate::runtime::Runtime;
 use crate::util::stats::{channel_abs_max, Ema};
 
-/// Map a train structure to the eval artifact that scores its checkpoints
+/// Map a train structure to the eval structure that scores its checkpoints
 /// (forward-pass quantization must match what training used; gradient and
 /// optimizer-state quantization do not appear in the forward pass).
 pub fn eval_structure_for(train_structure: &str) -> &'static str {
@@ -60,16 +60,9 @@ impl TrainCfg {
         }
     }
 
-    pub fn train_artifact(&self) -> String {
-        format!("{}/train/{}", self.model, self.quant.structure)
-    }
-
-    pub fn eval_artifact(&self) -> String {
-        format!(
-            "{}/eval/{}",
-            self.model,
-            eval_structure_for(&self.quant.structure)
-        )
+    /// Eval structure matching this config's forward quantization.
+    pub fn eval_structure(&self) -> &'static str {
+        eval_structure_for(&self.quant.structure)
     }
 }
 
@@ -101,6 +94,14 @@ impl TrainResult {
             .map(|(_, l)| *l)
             .fold(f64::INFINITY, f64::min)
     }
+
+    /// Mean loss over consecutive windows of `w` steps (smoothed curve).
+    pub fn window_means(&self, w: usize) -> Vec<f64> {
+        self.losses
+            .chunks(w.max(1))
+            .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+            .collect()
+    }
 }
 
 /// Train a model per `cfg`, starting from `seed` init (or `resume`).
@@ -113,15 +114,9 @@ pub fn train_from(
     cfg: &TrainCfg,
     resume: Option<HostState>,
 ) -> Result<TrainResult> {
-    let model = rt.manifest.model(&cfg.model)?.clone();
-    let exe = rt
-        .exec(&cfg.train_artifact())
-        .with_context(|| format!("loading train artifact {}", cfg.train_artifact()))?;
-    let np = model.params.len();
-
-    let host = resume.unwrap_or_else(|| init_state(&model, cfg.hp.seed));
-    let start_step = host.step;
-    let mut state = host.to_literals(&model)?;
+    let model = rt.model(&cfg.model)?.clone();
+    let mut state = resume.unwrap_or_else(|| init_state(&model, cfg.hp.seed));
+    let start_step = state.step;
 
     let mut corpus = BatchIter::new(
         CorpusCfg {
@@ -132,7 +127,6 @@ pub fn train_from(
         model.seq,
     );
     let qmaxes = cfg.quant.bits.qmax_scalars();
-    let qlits: Vec<xla::Literal> = qmaxes.iter().map(|&q| lit_scalar(q)).collect();
 
     let mut metrics = MetricsWriter::open(cfg)?;
     let mut probe = ProbeWriter::open(cfg)?;
@@ -151,25 +145,21 @@ pub fn train_from(
     for i in 0..cfg.hp.steps {
         let step = start_step + i + 1; // 1-based Adam counter
         let batch = corpus.next_batch();
-        let x = lit_i32(&batch.x, &[batch.batch, batch.seq])?;
-        let y = lit_i32(&batch.y, &[batch.batch, batch.seq])?;
-        let lr = lit_scalar(cosine_lr(&cfg.hp, i) as f32);
-        let t = lit_scalar(step as f32);
+        let lr = cosine_lr(&cfg.hp, i) as f32;
 
-        let mut inputs: Vec<&xla::Literal> = state.iter().collect();
-        inputs.push(&x);
-        inputs.push(&y);
-        inputs.push(&lr);
-        inputs.push(&t);
-        for q in &qlits {
-            inputs.push(q);
-        }
-
-        let mut out = exe.run(&inputs)?;
-        let loss = scalar_f32(&out[3 * np])? as f64;
-        let gnorm = scalar_f32(&out[3 * np + 1])? as f64;
-        out.truncate(3 * np);
-        state = out;
+        let out = rt.train_step(
+            &model,
+            &cfg.quant.structure,
+            &qmaxes,
+            &mut state,
+            &batch.x,
+            &batch.y,
+            lr,
+            step as f32,
+        )?;
+        state.step = step;
+        let loss = out.loss;
+        let gnorm = out.gnorm;
         steps_done = i + 1;
 
         losses.push(loss);
@@ -193,14 +183,14 @@ pub fn train_from(
         // periodic validation
         if cfg.hp.eval_every > 0 && (step % cfg.hp.eval_every == 0 || i + 1 == cfg.hp.steps)
         {
-            let vl = validation_loss(rt, cfg, &model, &state[..np])?;
+            let vl = validation_loss(rt, cfg, &model, &state.params)?;
             val.push((step, vl));
             metrics.log(step, loss, gnorm, cosine_lr(&cfg.hp, i), Some(vl))?;
         }
 
         // activation-outlier probes (Fig. 6): channel abs-max over training
         if cfg.hp.probe_every > 0 && step % cfg.hp.probe_every == 0 {
-            probe.record(rt, &model, step, &state[..np])?;
+            probe.record(rt, &model, step, &state.params)?;
         }
 
         if cfg.stop_on_divergence && diverged_at.is_some() {
@@ -209,10 +199,9 @@ pub fn train_from(
     }
     let steps_per_sec = steps_done as f64 / t0.elapsed().as_secs_f64();
 
-    let final_state = HostState::from_literals(&model, &state, start_step + steps_done)?;
     if cfg.save_ckpt {
         if let Some(dir) = &cfg.out_dir {
-            save_checkpoint(&dir.join("final.ckpt"), &model, &final_state)?;
+            save_checkpoint(&dir.join("final.ckpt"), &model, &state)?;
         }
     }
 
@@ -225,48 +214,35 @@ pub fn train_from(
         diverged_at,
         spike_steps,
         steps_per_sec,
-        final_state,
+        final_state: state,
     })
 }
 
-/// Mean validation NLL over `eval_batches` held-out batches.
+/// Mean validation NLL over `eval_batches` batches of the held-out
+/// (seed-77_777) stream — one scoring implementation shared with the eval
+/// harness so validation and eval losses can never drift apart.
 pub fn validation_loss(
     rt: &Runtime,
     cfg: &TrainCfg,
     model: &crate::runtime::ModelInfo,
-    params: &[xla::Literal],
+    params: &[Vec<f32>],
 ) -> Result<f64> {
-    // fall back to the unquantized eval graph when the model ships no
-    // matching quantized-forward eval artifact (e.g. gpt2s only lowers base)
-    let eval_name = if rt.manifest.artifacts.contains_key(&cfg.eval_artifact()) {
-        cfg.eval_artifact()
-    } else {
-        format!("{}/eval/base", cfg.model)
-    };
-    let exe = rt.exec(&eval_name)?;
-    let mut it = BatchIter::new(
-        CorpusCfg {
+    let qmaxes = cfg.quant.bits.qmax_scalars();
+    crate::eval::corpus_nll(
+        rt,
+        cfg.eval_structure(),
+        model,
+        params,
+        &CorpusCfg {
             seed: 77_777, // held-out validation stream
             ..CorpusCfg::train_default(model.vocab)
         },
-        model.batch,
-        model.seq,
-    );
-    let mask_data = vec![1.0f32; model.batch * model.seq];
-    let mask = crate::runtime::lit_f32(&mask_data, &[model.batch, model.seq])?;
-    let qw = lit_scalar(cfg.quant.bits.qmax_scalars()[0]);
-    let qa = lit_scalar(cfg.quant.bits.qmax_scalars()[1]);
-    let mut total = 0.0;
-    for _ in 0..cfg.hp.eval_batches.max(1) {
-        let b = it.next_batch();
-        let x = lit_i32(&b.x, &[b.batch, b.seq])?;
-        let y = lit_i32(&b.y, &[b.batch, b.seq])?;
-        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
-        inputs.extend([&x, &y, &mask, &qw, &qa]);
-        let out = exe.run(&inputs)?;
-        total += scalar_f32(&out[0])? as f64;
-    }
-    Ok(total / cfg.hp.eval_batches.max(1) as f64)
+        cfg.hp.eval_batches.max(1),
+        crate::eval::EvalQuant {
+            qmax_w: qmaxes[0],
+            qmax_a: qmaxes[1],
+        },
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -333,12 +309,11 @@ impl ProbeWriter {
         rt: &Runtime,
         model: &crate::runtime::ModelInfo,
         step: usize,
-        params: &[xla::Literal],
+        params: &[Vec<f32>],
     ) -> Result<()> {
         let Some(f) = &mut self.file else {
             return Ok(());
         };
-        let probe = rt.exec(&format!("{}/probe/act", model.name))?;
         let mut it = BatchIter::new(
             CorpusCfg {
                 seed: 55_555,
@@ -348,15 +323,24 @@ impl ProbeWriter {
             model.seq,
         );
         let b = it.next_batch();
-        let x = lit_i32(&b.x, &[b.batch, b.seq])?;
-        let one = lit_scalar(1.0);
-        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
-        inputs.extend([&x, &one, &one]);
-        let out = probe.run(&inputs)?;
-        let proj_in = crate::runtime::to_f32(&out[0])?;
-        let maxes = channel_abs_max(&proj_in, model.batch * model.seq, model.d_model);
+        let probe = rt.act_probe(model, params, &b.x)?;
+        let maxes = channel_abs_max(&probe.proj_in, model.batch * model.seq, model.d_model);
         let row: Vec<String> = maxes.iter().map(|m| format!("{m:.5}")).collect();
         writeln!(f, "{},{}", step, row.join(","))?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_structure_mapping() {
+        assert_eq!(eval_structure_for("base"), "base");
+        assert_eq!(eval_structure_for("w_pc_pallas"), "w_pc");
+        assert_eq!(eval_structure_for("wag"), "wa");
+        assert_eq!(eval_structure_for("g_ptok"), "base"); // grads: fwd unquantized
+        assert_eq!(eval_structure_for("m2_pt"), "base");
     }
 }

@@ -99,7 +99,7 @@ pub mod gen {
     }
 
     /// Shrinker for vectors: halve length, zero elements.
-    pub fn shrink_f32_vec(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    pub fn shrink_f32_vec(v: &[f32]) -> Vec<Vec<f32>> {
         let mut out = Vec::new();
         if v.len() > 1 {
             out.push(v[..v.len() / 2].to_vec());
@@ -107,7 +107,7 @@ pub mod gen {
         }
         for i in 0..v.len().min(4) {
             if v[i] != 0.0 {
-                let mut w = v.clone();
+                let mut w = v.to_vec();
                 w[i] = 0.0;
                 out.push(w);
             }
@@ -138,7 +138,7 @@ mod tests {
                 ..Default::default()
             },
             |rng| gen::f32_vec(rng, 64, 10.0),
-            gen::shrink_f32_vec,
+            |v| gen::shrink_f32_vec(v),
             |v| v.iter().all(|x| x.abs() < 5.0), // will fail for gaussian*10
         );
     }

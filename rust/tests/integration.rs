@@ -1,26 +1,13 @@
-//! Integration tests over the real AOT artifacts: runtime loading, the
-//! training loop, evaluation, probes, and the quantization effects the paper
-//! reports — exercised end-to-end through PJRT. These are the tests that
-//! prove the three layers compose.
-//!
-//! All tests skip gracefully when `make artifacts` hasn't run.
+//! Integration tests over the default (native) runtime: the training loop,
+//! evaluation, few-shot scoring, probes, PTQ and checkpointing — exercised
+//! end-to-end with no AOT artifacts, no Python, no PJRT. These are the
+//! tests that prove the layers compose on a clean machine.
 
 use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
-use qpretrain::data::{BatchIter, CorpusCfg};
 use qpretrain::eval::EvalQuant;
 use qpretrain::model::init_state;
-use qpretrain::runtime::{lit_i32, lit_scalar, Runtime};
+use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
-use qpretrain::util::artifact_dir;
-
-fn runtime() -> Option<Runtime> {
-    let dir = artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return None;
-    }
-    Some(Runtime::new(&dir).expect("runtime"))
-}
 
 fn hp(steps: usize) -> TrainHp {
     TrainHp {
@@ -32,196 +19,74 @@ fn hp(steps: usize) -> TrainHp {
     }
 }
 
-fn qcfg(structure: &str, w: u32, a: u32, g: u32, m1: u32, m2: u32) -> QuantRunCfg {
-    QuantRunCfg {
-        structure: structure.to_string(),
-        bits: BitWidths {
-            weights: w,
-            acts: a,
-            grads: g,
-            m1,
-            m2,
-        },
-    }
-}
-
 #[test]
-fn manifest_has_all_t4_structures() {
-    let Some(rt) = runtime() else { return };
-    for s in [
-        "base", "w_pt", "w_pc", "a_pt", "a_ptok", "a_ptok_asym", "a_pc", "g_pt",
-        "g_ptok", "g_ptok_actgrad", "m1_pt", "m1_pc", "m2_pt", "m2_pc", "wa", "wag",
-        "w_pc_pallas",
-    ] {
-        assert!(
-            rt.manifest.artifacts.contains_key(&format!("t4/train/{s}")),
-            "missing t4/train/{s}"
-        );
-    }
-    let m = rt.manifest.model("t4").unwrap();
+fn native_models_cover_all_structures() {
+    let rt = Runtime::open_default().unwrap();
+    let m = rt.model("micro").unwrap();
     assert_eq!(m.params.len(), 16);
-    assert_eq!(m.vocab, 512);
-}
-
-#[test]
-fn train_step_signature_roundtrip() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("t4").unwrap().clone();
-    let exe = rt.exec("t4/train/base").unwrap();
-    assert_eq!(exe.info.inputs.len(), 3 * model.params.len() + 9);
-    assert_eq!(exe.info.outputs.len(), 3 * model.params.len() + 2);
-
-    // one manual step: outputs must parse and loss ~ ln(V)
-    let state = init_state(&model, 7).to_literals(&model).unwrap();
-    let mut it = BatchIter::new(CorpusCfg::train_default(model.vocab), model.batch, model.seq);
-    let b = it.next_batch();
-    let x = lit_i32(&b.x, &[b.batch, b.seq]).unwrap();
-    let y = lit_i32(&b.y, &[b.batch, b.seq]).unwrap();
-    let lr = lit_scalar(0.0);
-    let t = lit_scalar(1.0);
-    let q: Vec<xla::Literal> = (0..5).map(|_| lit_scalar(1.0)).collect();
-    let mut inputs: Vec<&xla::Literal> = state.iter().collect();
-    inputs.extend([&x, &y, &lr, &t]);
-    for qq in &q {
-        inputs.push(qq);
-    }
-    let out = exe.run(&inputs).unwrap();
-    let loss = qpretrain::runtime::scalar_f32(&out[3 * model.params.len()]).unwrap();
-    assert!((loss - (model.vocab as f32).ln()).abs() < 0.3, "init loss {loss}");
-}
-
-#[test]
-fn zero_lr_step_preserves_params_through_pjrt() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("t4").unwrap().clone();
-    let host = init_state(&model, 9);
-    let state = host.to_literals(&model).unwrap();
-    let exe = rt.exec("t4/train/base").unwrap();
-    let mut it = BatchIter::new(CorpusCfg::train_default(model.vocab), model.batch, model.seq);
-    let b = it.next_batch();
-    let x = lit_i32(&b.x, &[b.batch, b.seq]).unwrap();
-    let y = lit_i32(&b.y, &[b.batch, b.seq]).unwrap();
-    let lr = lit_scalar(0.0);
-    let t = lit_scalar(1.0);
-    let q: Vec<xla::Literal> = (0..5).map(|_| lit_scalar(1.0)).collect();
-    let mut inputs: Vec<&xla::Literal> = state.iter().collect();
-    inputs.extend([&x, &y, &lr, &t]);
-    for qq in &q {
-        inputs.push(qq);
-    }
-    let out = exe.run(&inputs).unwrap();
-    let roundtrip = qpretrain::model::HostState::from_literals(&model, &out, 1).unwrap();
-    assert_eq!(roundtrip.params, host.params, "params changed at lr=0");
-}
-
-#[test]
-fn short_training_reduces_loss_baseline_and_wa() {
-    let Some(rt) = runtime() else { return };
-    for (structure, bits) in [
-        ("base", BitWidths::none()),
-        ("wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
-        ("w_pc_pallas", BitWidths { weights: 8, ..BitWidths::none() }),
-    ] {
-        let cfg = TrainCfg::new("t4", QuantRunCfg { structure: structure.into(), bits }, hp(25));
-        let r = train(&rt, &cfg).unwrap();
-        assert!(!r.diverged, "{structure} diverged");
-        assert!(
-            r.final_loss() < r.losses[0] - 0.5,
-            "{structure}: no learning ({:.3} -> {:.3})",
-            r.losses[0],
-            r.final_loss()
-        );
+    assert_eq!(m.vocab, 64);
+    // every artifact-era structure parses into a native quant config
+    for s in qpretrain::backend::QuantStructure::ALL {
+        qpretrain::backend::QuantStructure::parse(s).unwrap();
     }
 }
 
 #[test]
-fn w2_per_tensor_worse_than_w8() {
-    let Some(rt) = runtime() else { return };
-    let w8 = train(&rt, &TrainCfg::new("t4", qcfg("w_pt", 8, 0, 0, 0, 0), hp(25))).unwrap();
-    let w2 = train(&rt, &TrainCfg::new("t4", qcfg("w_pt", 2, 0, 0, 0, 0), hp(25))).unwrap();
-    assert!(
-        w2.final_loss() > w8.final_loss() + 0.02,
-        "2-bit ({:.3}) should trail 8-bit ({:.3})",
-        w2.final_loss(),
-        w8.final_loss()
-    );
-}
-
-#[test]
-fn m2_per_tensor_8bit_unstable() {
-    let Some(rt) = runtime() else { return };
-    let base = train(&rt, &TrainCfg::new("t4", QuantRunCfg::baseline(), hp(25))).unwrap();
-    let m2 = train(&rt, &TrainCfg::new("t4", qcfg("m2_pt", 0, 0, 0, 0, 8), hp(25))).unwrap();
-    // paper Fig. 12: diverges or is far worse from the onset
-    assert!(
-        m2.diverged || m2.final_loss() > base.final_loss() + 0.5,
-        "m2 quant unexpectedly healthy: {:.3} vs {:.3}",
-        m2.final_loss(),
-        base.final_loss()
-    );
-}
-
-#[test]
-fn eval_and_fewshot_run() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("t4").unwrap().clone();
-    let cfg = TrainCfg::new("t4", QuantRunCfg::baseline(), hp(20));
+fn train_eval_fewshot_end_to_end() {
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(50));
     let r = train(&rt, &cfg).unwrap();
-    let params = r.final_state.param_literals(&model).unwrap();
+    assert!(!r.diverged);
+    assert!(r.final_loss() < r.losses[0] - 1.0, "no learning");
 
     let ppl = qpretrain::eval::perplexity_suite(
-        &rt, "t4/eval/base", &model, &params, 2, EvalQuant::none(),
+        &rt,
+        "base",
+        &model,
+        &r.final_state.params,
+        2,
+        EvalQuant::none(),
     )
     .unwrap();
     assert_eq!(ppl.len(), 4);
     for (k, v) in &ppl {
         assert!(v.is_finite() && *v > 1.0, "{k}: {v}");
     }
-    // in-domain should beat the shifted domain
+    // in-domain should beat the shifted transition structure
     assert!(ppl["synthwiki103"] < ppl["synthptb"] * 1.5);
 
     let fs = qpretrain::eval::fewshot_suite(
-        &rt, "t4/eval/base", &model, &params, 8, 2, EvalQuant::none(),
+        &rt,
+        "base",
+        &model,
+        &r.final_state.params,
+        8,
+        2,
+        EvalQuant::none(),
     )
     .unwrap();
     assert_eq!(fs.per_task.len(), 10);
     for (t, acc, _) in &fs.per_task {
         assert!((0.0..=1.0).contains(acc), "{}: {acc}", t.name());
     }
-}
-
-#[test]
-fn probes_and_analysis_run() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("t4").unwrap().clone();
-    let state = init_state(&model, 3);
-    let params = state.param_literals(&model).unwrap();
-
-    let stats = qpretrain::analysis::activation_stats(&rt, &model, &params).unwrap();
-    assert_eq!(stats.proj_in_channel_max.len(), model.d_model);
-    assert_eq!(stats.fc2_in_channel_max.len(), model.d_ff);
-    assert!(stats.fc2_in_max.is_finite());
-
-    let schemes = vec![(
-        "int8 ptok".to_string(),
-        qpretrain::config::Scheme::new(8, qpretrain::config::Granularity::PerToken),
-    )];
-    let g = qpretrain::analysis::gradient_stats(&rt, &model, &params, &schemes).unwrap();
-    assert!(g.weight_grad_hist.total() > 0);
-    assert!((0.0..=1.0).contains(&g.weight_grad_sparsity));
-    assert!(g.quant_rel_err[0].1.is_finite());
+    assert!((0.0..=1.0).contains(&fs.average));
 }
 
 #[test]
 fn ptq_weights_degrade_monotonically() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("t4").unwrap().clone();
-    let cfg = TrainCfg::new("t4", QuantRunCfg::baseline(), hp(25));
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(50));
     let r = train(&rt, &cfg).unwrap();
     use qpretrain::config::Granularity::PerChannel;
     let fp = qpretrain::eval::perplexity_suite(
-        &rt, "t4/eval/base", &model,
-        &r.final_state.param_literals(&model).unwrap(), 2, EvalQuant::none(),
+        &rt,
+        "base",
+        &model,
+        &r.final_state.params,
+        2,
+        EvalQuant::none(),
     )
     .unwrap()["synthwiki103"];
     let p8 = qpretrain::ptq::ptq_weights_ppl(&rt, &model, &r.final_state, 8, PerChannel, 2)
@@ -233,29 +98,112 @@ fn ptq_weights_degrade_monotonically() {
 }
 
 #[test]
+fn probes_and_analysis_run() {
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 3);
+
+    let stats = qpretrain::analysis::activation_stats(&rt, &model, &state.params).unwrap();
+    assert_eq!(stats.proj_in_channel_max.len(), model.d_model);
+    assert_eq!(stats.fc2_in_channel_max.len(), model.d_ff);
+    assert!(stats.fc2_in_max.is_finite());
+
+    let schemes = vec![(
+        "int8 ptok".to_string(),
+        qpretrain::config::Scheme::new(8, qpretrain::config::Granularity::PerToken),
+    )];
+    let g = qpretrain::analysis::gradient_stats(&rt, &model, &state.params, &schemes).unwrap();
+    assert!(g.weight_grad_hist.total() > 0);
+    assert!((0.0..=1.0).contains(&g.weight_grad_sparsity));
+    assert!(g.quant_rel_err[0].1.is_finite());
+}
+
+#[test]
+fn sharpness_analysis_runs_on_trained_model() {
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(20));
+    let r = train(&rt, &cfg).unwrap();
+    let c = qpretrain::analysis::m_sharpness(
+        &rt,
+        "base",
+        &model,
+        &r.final_state,
+        &[0.01, 0.1],
+        2,
+        1,
+        EvalQuant::none(),
+    )
+    .unwrap();
+    assert!(c.base_loss.is_finite());
+    assert_eq!(c.sharpness.len(), 2);
+    // larger perturbations hurt at least as much
+    assert!(c.sharpness[1] >= c.sharpness[0] - 1e-6);
+}
+
+#[test]
 fn checkpoint_roundtrip_through_training() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("t4").unwrap().clone();
-    let dir = std::env::temp_dir().join("qpretrain_int_ckpt");
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let dir = std::env::temp_dir().join("qpretrain_native_ckpt");
     std::fs::create_dir_all(&dir).unwrap();
-    let mut cfg = TrainCfg::new("t4", QuantRunCfg::baseline(), hp(10));
+    let mut cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(10));
     cfg.out_dir = Some(dir.clone());
     cfg.save_ckpt = true;
     let r = train(&rt, &cfg).unwrap();
     let loaded = qpretrain::model::load_checkpoint(&dir.join("final.ckpt"), &model).unwrap();
     assert_eq!(loaded.step, 10);
     assert_eq!(loaded.params, r.final_state.params);
+    assert_eq!(loaded.m, r.final_state.m);
     std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]
+fn resume_continues_from_checkpoint_step() {
+    let rt = Runtime::native();
+    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(6));
+    let first = train(&rt, &cfg).unwrap();
+    assert_eq!(first.final_state.step, 6);
+    let resumed =
+        qpretrain::train::train_from(&rt, &cfg, Some(first.final_state.clone())).unwrap();
+    assert_eq!(resumed.final_state.step, 12);
+    // resumed run continues improving (same config, fresh data offset)
+    assert!(resumed.final_loss() < first.losses[0]);
+}
+
+#[test]
 fn deterministic_training_same_seed() {
-    let Some(rt) = runtime() else { return };
-    let a = train(&rt, &TrainCfg::new("t4", QuantRunCfg::baseline(), hp(8))).unwrap();
-    let b = train(&rt, &TrainCfg::new("t4", QuantRunCfg::baseline(), hp(8))).unwrap();
+    let rt = Runtime::native();
+    let a = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(8))).unwrap();
+    let b = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(8))).unwrap();
     assert_eq!(a.losses, b.losses, "same seed must give identical losses");
     let mut hp2 = hp(8);
     hp2.seed += 1;
-    let c = train(&rt, &TrainCfg::new("t4", QuantRunCfg::baseline(), hp2)).unwrap();
+    let c = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp2)).unwrap();
     assert_ne!(a.losses, c.losses);
+}
+
+#[test]
+fn quantized_training_structures_learn() {
+    // w8 per-channel and the wa recipe both reduce loss within 25 steps
+    let rt = Runtime::native();
+    for (structure, bits) in [
+        ("w_pc", BitWidths { weights: 8, ..BitWidths::none() }),
+        ("w_pc_pallas", BitWidths { weights: 8, ..BitWidths::none() }),
+        ("wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
+    ] {
+        let cfg = TrainCfg::new(
+            "micro",
+            QuantRunCfg { structure: structure.into(), bits },
+            hp(25),
+        );
+        let r = train(&rt, &cfg).unwrap();
+        assert!(!r.diverged, "{structure} diverged");
+        assert!(
+            r.final_loss() < r.losses[0] - 0.5,
+            "{structure}: no learning ({:.3} -> {:.3})",
+            r.losses[0],
+            r.final_loss()
+        );
+    }
 }

@@ -1,0 +1,268 @@
+//! Native-backend correctness tests (run on every default build; no
+//! artifacts, no Python, no PJRT):
+//!
+//! * end-to-end learning: loss decreases over 50 steps on the `micro` model
+//!   with a strictly decreasing smoothed (windowed) curve;
+//! * fake-quant injection is bit-for-bit `quant::qdq`: evaluating a latent
+//!   checkpoint under "w_pc"/"w_pt" equals evaluating host-side qdq'd
+//!   weights under "base";
+//! * divergence detection fires on an exploding configuration;
+//! * the paper's qualitative orderings (w2 < w8; m2 per-tensor 8-bit
+//!   unstable) reproduce natively.
+
+use qpretrain::config::{BitWidths, Granularity, QuantRunCfg, Scheme, TrainHp};
+use qpretrain::data::{BatchIter, CorpusCfg};
+use qpretrain::model::init_state;
+use qpretrain::runtime::Runtime;
+use qpretrain::train::{train, TrainCfg};
+
+fn hp(steps: usize) -> TrainHp {
+    TrainHp {
+        steps,
+        eval_every: steps,
+        eval_batches: 2,
+        log_every: usize::MAX,
+        ..TrainHp::default()
+    }
+}
+
+fn qcfg(structure: &str, w: u32, a: u32, g: u32, m1: u32, m2: u32) -> QuantRunCfg {
+    QuantRunCfg {
+        structure: structure.to_string(),
+        bits: BitWidths {
+            weights: w,
+            acts: a,
+            grads: g,
+            m1,
+            m2,
+        },
+    }
+}
+
+#[test]
+fn native_train_loss_decreases_with_smooth_curve() {
+    let rt = Runtime::native();
+    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(50));
+    let r = train(&rt, &cfg).unwrap();
+    assert!(!r.diverged, "baseline diverged");
+    assert_eq!(r.losses.len(), 50);
+    // init loss ~ ln(V): the model starts at the uniform predictor
+    let uniform = (64f64).ln();
+    assert!(
+        (r.losses[0] - uniform).abs() < 0.3,
+        "init loss {} vs ln(64) {}",
+        r.losses[0],
+        uniform
+    );
+    // smoothed curve strictly decreasing (10-step window means)
+    let means = r.window_means(10);
+    assert_eq!(means.len(), 5);
+    for w in means.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "smoothed loss not strictly decreasing: {means:?}"
+        );
+    }
+    // and meaningfully so
+    assert!(
+        r.final_loss() < r.losses[0] - 1.0,
+        "only learned {:.3} -> {:.3}",
+        r.losses[0],
+        r.final_loss()
+    );
+    // validation ran and is finite
+    assert!(r.final_val_loss().is_finite());
+}
+
+#[test]
+fn forward_fake_quant_matches_qdq_bit_for_bit() {
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 42);
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let mask = vec![1.0f32; model.batch * model.seq];
+
+    for (structure, gran, bits) in [
+        ("w_pc", Granularity::PerChannel, 8u32),
+        ("w_pc", Granularity::PerChannel, 4),
+        ("w_pt", Granularity::PerTensor, 8),
+    ] {
+        // latent weights through the quantized forward...
+        let qmax = Scheme::new(bits, gran).qmax();
+        let latent = rt
+            .eval_step(&model, structure, qmax, 1.0, &state.params, &b.x, &b.y, &mask)
+            .unwrap();
+        // ...must equal host-side qdq'd weights through the base forward
+        let mut qstate = state.clone();
+        qpretrain::ptq::quantize_weights(&mut qstate, &model, Scheme::new(bits, gran));
+        let host = rt
+            .eval_step(&model, "base", 1.0, 1.0, &qstate.params, &b.x, &b.y, &mask)
+            .unwrap();
+        assert_eq!(
+            latent.per_pos, host.per_pos,
+            "{structure}@{bits}b: native injection differs from quant::qdq"
+        );
+        assert_eq!(latent.mean_nll, host.mean_nll);
+    }
+}
+
+#[test]
+fn activation_quant_converges_to_base_at_high_qmax() {
+    // huge qmax -> vanishing quantization error; small qmax -> visible error
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 17);
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let mask = vec![1.0f32; model.batch * model.seq];
+    let base = rt
+        .eval_step(&model, "base", 1.0, 1.0, &state.params, &b.x, &b.y, &mask)
+        .unwrap();
+    let hi = rt
+        .eval_step(&model, "a_ptok", 1.0, 1e7, &state.params, &b.x, &b.y, &mask)
+        .unwrap();
+    assert!(
+        (hi.mean_nll - base.mean_nll).abs() < 1e-3,
+        "high-qmax a_ptok {} vs base {}",
+        hi.mean_nll,
+        base.mean_nll
+    );
+    let lo = rt
+        .eval_step(&model, "a_ptok", 1.0, 1.0, &state.params, &b.x, &b.y, &mask)
+        .unwrap();
+    assert!(
+        (lo.mean_nll - base.mean_nll).abs() > 1e-4,
+        "1-bit-range activations should visibly perturb the forward"
+    );
+}
+
+#[test]
+fn divergence_detection_fires_on_exploding_config() {
+    let rt = Runtime::native();
+    let mut hp = hp(30);
+    hp.lr_max = 30.0; // absurd learning rate
+    hp.lr_min = 3.0;
+    hp.eval_every = 0;
+    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp);
+    let r = train(&rt, &cfg).unwrap();
+    assert!(r.diverged, "lr=30 run did not register as diverged");
+    let at = r.diverged_at.unwrap();
+    assert!(at <= 30, "diverged_at {at}");
+    // early stop: no more steps after detection
+    assert_eq!(r.losses.len(), at);
+}
+
+#[test]
+fn w2_per_tensor_worse_than_w8() {
+    let rt = Runtime::native();
+    let w8 = train(&rt, &TrainCfg::new("micro", qcfg("w_pt", 8, 0, 0, 0, 0), hp(30))).unwrap();
+    let w2 = train(&rt, &TrainCfg::new("micro", qcfg("w_pt", 2, 0, 0, 0, 0), hp(30))).unwrap();
+    assert!(
+        w2.final_loss() > w8.final_loss() + 0.02,
+        "2-bit ({:.3}) should trail 8-bit ({:.3})",
+        w2.final_loss(),
+        w8.final_loss()
+    );
+}
+
+#[test]
+fn m2_per_tensor_8bit_unstable() {
+    // paper Fig. 12: second-moment per-tensor quantization collapses tiny v
+    // values into the zero bin and blows up the update
+    let rt = Runtime::native();
+    let base = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(25))).unwrap();
+    let m2 = train(&rt, &TrainCfg::new("micro", qcfg("m2_pt", 0, 0, 0, 0, 8), hp(25))).unwrap();
+    assert!(
+        m2.diverged || m2.final_loss() > base.final_loss() + 0.5,
+        "m2 quant unexpectedly healthy: {:.3} vs {:.3}",
+        m2.final_loss(),
+        base.final_loss()
+    );
+}
+
+#[test]
+fn wa_recipe_tracks_baseline() {
+    // paper §4.5: W8 per-channel + A8 per-token stays close to fp32
+    let rt = Runtime::native();
+    let base = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(25))).unwrap();
+    let wa = train(&rt, &TrainCfg::new("micro", qcfg("wa", 8, 8, 0, 0, 0), hp(25))).unwrap();
+    assert!(!wa.diverged);
+    assert!(
+        (wa.final_loss() - base.final_loss()).abs() < 0.1,
+        "w8a8 {:.3} vs baseline {:.3}",
+        wa.final_loss(),
+        base.final_loss()
+    );
+}
+
+#[test]
+fn masked_eval_matches_manual_mean() {
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 5);
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let m = model.batch * model.seq;
+    // mask out the second half of every row
+    let mut mask = vec![1.0f32; m];
+    for (i, v) in mask.iter_mut().enumerate() {
+        if i % model.seq >= model.seq / 2 {
+            *v = 0.0;
+        }
+    }
+    let out = rt
+        .eval_step(&model, "base", 1.0, 1.0, &state.params, &b.x, &b.y, &mask)
+        .unwrap();
+    let manual: f64 = out
+        .per_pos
+        .iter()
+        .zip(&mask)
+        .map(|(&l, &w)| l as f64 * w as f64)
+        .sum::<f64>()
+        / mask.iter().map(|&w| w as f64).sum::<f64>();
+    assert!((out.mean_nll - manual).abs() < 1e-9);
+    assert_eq!(out.per_pos.len(), m);
+}
+
+#[test]
+fn every_train_structure_runs_one_step() {
+    // all 17 structures execute without error and produce finite loss
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    for structure in qpretrain::backend::QuantStructure::ALL {
+        let mut state = init_state(&model, 3);
+        let out = rt
+            .train_step(
+                &model,
+                structure,
+                &[127.0, 127.0, 127.0, 127.0, 127.0],
+                &mut state,
+                &b.x,
+                &b.y,
+                1e-3,
+                1.0,
+            )
+            .unwrap();
+        assert!(out.loss.is_finite(), "{structure}: loss {}", out.loss);
+        assert!(out.gnorm > 0.0, "{structure}: gnorm {}", out.gnorm);
+    }
+}
