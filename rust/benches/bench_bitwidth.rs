@@ -3,6 +3,7 @@
 //! short run at 2..8 bits and reports final loss — the knee of the curve is
 //! the paper's 4-vs-8-bit story.
 
+use qpretrain::backend::kernels;
 use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
@@ -10,9 +11,14 @@ use qpretrain::train::{train, TrainCfg};
 fn main() {
     let rt = Runtime::open_default().expect("runtime");
     let steps = 25;
-    println!("backend: {}", rt.backend_name());
+    println!(
+        "backend: {} ({} kernel threads; sweep results are thread-count-invariant)",
+        rt.backend_name(),
+        kernels::max_threads()
+    );
     println!("w_pc weight quantization on micro, {steps} steps, runtime qmax sweep:");
     println!("bits  final_loss  diverged");
+    let mut sweep_secs = 0.0f64;
     for bits in [0u32, 2, 3, 4, 5, 6, 8] {
         let structure = if bits == 0 { "base" } else { "w_pc" };
         let cfg = TrainCfg::new(
@@ -31,7 +37,9 @@ fn main() {
                 ..TrainHp::default()
             },
         );
+        let t0 = std::time::Instant::now();
         let r = train(&rt, &cfg).unwrap();
+        sweep_secs += t0.elapsed().as_secs_f64();
         println!(
             "{:>4}  {:>10.4}  {}",
             if bits == 0 { "fp".into() } else { bits.to_string() },
@@ -39,4 +47,32 @@ fn main() {
             r.diverged
         );
     }
+    println!("sweep wall time: {sweep_secs:.2} s on the parallel kernels");
+
+    // serial-vs-parallel reference point for the whole sweep substrate
+    // (threads pinned per run through TrainHp, which resets the process
+    // knob to its own value each time)
+    let timed_run = |threads: usize| {
+        let cfg = TrainCfg::new(
+            "micro",
+            QuantRunCfg::baseline(),
+            TrainHp {
+                steps,
+                eval_every: 0,
+                log_every: usize::MAX,
+                threads,
+                ..TrainHp::default()
+            },
+        );
+        let t0 = std::time::Instant::now();
+        train(&rt, &cfg).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    let serial = timed_run(1);
+    let parallel = timed_run(0);
+    println!(
+        "baseline {steps}-step run: 1 thread {serial:.2} s, {} threads {parallel:.2} s ({:.2}x)",
+        kernels::max_threads(),
+        serial / parallel
+    );
 }

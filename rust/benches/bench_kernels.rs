@@ -1,22 +1,152 @@
-//! Native-backend kernel benches: the matmul variants that carry the
-//! forward/backward passes, the fake-quant oracle at every granularity, and
-//! the fused qdq+matmul path vs a plain matmul (the §3.3 "linear layers
-//! dominate" substrate). This is the hot path the ROADMAP's rayon-parallel
-//! tiling work will be measured against.
+//! Native-backend kernel benches: the serial reference (`backend::math`)
+//! against the parallel production kernels (`backend::kernels`) at the
+//! forward/backward matmul shapes, plus the fake-quant oracle and the
+//! fused qdq+matmul path (the §3.3 "linear layers dominate" substrate).
+//!
+//! Emits `BENCH_kernels.json` at the repo root — GFLOP/s, thread count and
+//! serial-vs-parallel speedup per kernel — so future perf PRs have a
+//! machine-readable trajectory to beat. Before timing anything, every
+//! parallel kernel is asserted bit-identical to its serial reference.
 
-use qpretrain::backend::math::{matmul, matmul_nt, matmul_tn};
+use qpretrain::backend::{kernels, math};
 use qpretrain::config::{Granularity, Scheme};
 use qpretrain::quant::qdq_copy;
 use qpretrain::util::bench::{bench, bench_throughput, section};
+use qpretrain::util::json::{self, Value};
 use qpretrain::util::rng::Rng;
 
+/// Bench a serial/parallel pair, print GFLOP/s + speedup, record a JSON row.
+fn pair(
+    name: &str,
+    flops: u64,
+    mut serial: impl FnMut() -> Vec<f32>,
+    mut parallel: impl FnMut() -> Vec<f32>,
+    out: &mut Vec<Value>,
+) {
+    let s = bench(&format!("{name}/serial"), &mut serial);
+    let p = bench(&format!("{name}/parallel"), &mut parallel);
+    let speedup = s.mean_ns / p.mean_ns;
+    println!(
+        "    {name}: {:.2} -> {:.2} GFLOP/s  ({speedup:.2}x)",
+        s.gflops(flops),
+        p.gflops(flops)
+    );
+    out.push(json::obj(vec![
+        ("name", json::s(name)),
+        ("flops", json::num(flops as f64)),
+        ("serial_gflops", json::num(s.gflops(flops))),
+        ("parallel_gflops", json::num(p.gflops(flops))),
+        ("speedup", json::num(speedup)),
+    ]));
+}
+
 fn main() {
+    let threads = kernels::max_threads();
+    println!("kernel threads: {threads} (pin with --threads / RAYON_NUM_THREADS)");
+
     let mut rng = Rng::new(2);
     let (m, n, k) = (256usize, 512usize, 256usize);
     let x = rng.normal_vec(m * n, 0.0, 1.0); // (m, n)
     let w = rng.normal_vec(n * k, 0.0, 1.0); // (n, k)
     let wt = rng.normal_vec(k * n, 0.0, 1.0); // (k, n) for the nt variant
     let g = rng.normal_vec(m * k, 0.0, 1.0); // (m, k) for the tn variant
+
+    // the contract the speedup rests on: parallel == serial, bit for bit
+    // (compare bit patterns, not floats: f32 PartialEq treats 0.0 == -0.0)
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(
+        bits(&math::matmul(&x, &w, m, n, k)),
+        bits(&kernels::matmul(&x, &w, m, n, k))
+    );
+    assert_eq!(
+        bits(&math::matmul_nt(&x, &wt, m, n, k)),
+        bits(&kernels::matmul_nt(&x, &wt, m, n, k))
+    );
+    assert_eq!(
+        bits(&math::matmul_tn(&x, &g, m, n, k)),
+        bits(&kernels::matmul_tn(&x, &g, m, n, k))
+    );
+    println!("bit-exactness preflight: parallel kernels == serial reference");
+
+    let mut results = Vec::new();
+    let flops = (2 * m * n * k) as u64;
+
+    section(&format!("matmul serial vs parallel ({m}x{n}x{k}, {threads} threads)"));
+    // forward: y = x @ w
+    pair(
+        "matmul_nn_fwd",
+        flops,
+        || math::matmul(&x, &w, m, n, k),
+        || kernels::matmul(&x, &w, m, n, k),
+        &mut results,
+    );
+    // dx = g @ w^T
+    pair(
+        "matmul_nt_dx",
+        flops,
+        || math::matmul_nt(&x, &wt, m, n, k),
+        || kernels::matmul_nt(&x, &wt, m, n, k),
+        &mut results,
+    );
+    // dw = x^T @ g
+    pair(
+        "matmul_tn_dw",
+        flops,
+        || math::matmul_tn(&x, &g, m, n, k),
+        || kernels::matmul_tn(&x, &g, m, n, k),
+        &mut results,
+    );
+
+    section(&format!("gpt2s-shape matmul (512x768x768, {threads} threads)"));
+    let (gm, gk, gn) = (512usize, 768usize, 768usize);
+    let gx = rng.normal_vec(gm * gk, 0.0, 1.0);
+    let gw = rng.normal_vec(gk * gn, 0.0, 1.0);
+    pair(
+        "matmul_nn_gpt2s",
+        (2 * gm * gk * gn) as u64,
+        || math::matmul(&gx, &gw, gm, gk, gn),
+        || kernels::matmul(&gx, &gw, gm, gk, gn),
+        &mut results,
+    );
+
+    section("row/elementwise kernels serial vs parallel");
+    let rows = 4096usize;
+    let d = 768usize;
+    let lx = rng.normal_vec(rows * d, 0.0, 1.0);
+    let lw = rng.normal_vec(d, 1.0, 0.1);
+    let lb = rng.normal_vec(d, 0.0, 0.1);
+    pair(
+        "layer_norm_fwd_4096x768",
+        (8 * rows * d) as u64, // approximate op count
+        || math::layer_norm_fwd(&lx, &lw, &lb, rows, d).0,
+        || kernels::layer_norm_fwd(&lx, &lw, &lb, rows, d).0,
+        &mut results,
+    );
+    let u = rng.normal_vec(rows * d, 0.0, 2.0);
+    pair(
+        "gelu_4096x768",
+        (16 * rows * d) as u64, // tanh-heavy; approximate
+        || math::gelu(&u),
+        || kernels::gelu(&u),
+        &mut results,
+    );
+    let (cm, cv) = (512usize, 8192usize);
+    let logits = rng.normal_vec(cm * cv, 0.0, 2.0);
+    let y: Vec<i32> = (0..cm).map(|_| rng.below(cv) as i32).collect();
+    pair(
+        "cross_entropy_512x8192",
+        (6 * cm * cv) as u64, // approximate
+        || {
+            // serial leg: same kernel pinned to one thread
+            let prev = kernels::threads_override();
+            kernels::set_threads(1);
+            let r = kernels::nll_only(&logits, &y, cm, cv);
+            kernels::set_threads(prev);
+            r
+        },
+        || kernels::nll_only(&logits, &y, cm, cv),
+        &mut results,
+    );
 
     section("native qdq kernels (256x512 f32)");
     for (name, gran, asym) in [
@@ -33,20 +163,20 @@ fn main() {
         bench_throughput(name, (m * n) as u64, || qdq_copy(&x, m, n, scheme));
     }
 
-    section("matmul kernels at forward/backward shapes (2*m*n*k FLOPs each)");
-    let flops = (2 * m * n * k) as u64;
-    // forward: y = x @ w
-    bench_throughput("matmul_nn (fwd)", flops, || matmul(&x, &w, m, n, k));
-    // dx = g @ w^T
-    bench_throughput("matmul_nt (dx)", flops, || matmul_nt(&x, &wt, m, n, k));
-    // dw = x^T @ g
-    bench_throughput("matmul_tn (dw)", flops, || matmul_tn(&x, &g, m, n, k));
-
     section("fused qdq-matmul vs plain matmul (the paper's W8A8 GEMM)");
     bench("qmatmul (a per-token + w per-channel + gemm)", || {
         let xq = qdq_copy(&x, m, n, Scheme::new(8, Granularity::PerToken));
         let wq = qdq_copy(&w, n, k, Scheme::new(8, Granularity::PerChannel));
-        matmul(&xq, &wq, m, n, k)
+        kernels::matmul(&xq, &wq, m, n, k)
     });
-    bench("matmul_plain", || matmul(&x, &w, m, n, k));
+    bench("matmul_plain", || kernels::matmul(&x, &w, m, n, k));
+
+    let report = json::obj(vec![
+        ("bench", json::s("kernels")),
+        ("threads", json::num(threads as f64)),
+        ("results", Value::Arr(results)),
+    ]);
+    let path = qpretrain::util::repo_root().join("BENCH_kernels.json");
+    std::fs::write(&path, report.to_json()).expect("write BENCH_kernels.json");
+    println!("\nwrote {}", path.display());
 }

@@ -2,11 +2,39 @@
 //! layers vs the attention core, across GPT-2 sizes and sequence lengths,
 //! on the native matmul kernels (plus the analytic FLOPs-model prediction).
 
+use std::time::Instant;
+
+use qpretrain::backend::{kernels, math};
 use qpretrain::timemodel::{fig3_rows, rows_to_csv};
+use qpretrain::util::rng::Rng;
 
 fn main() {
     let rows = fig3_rows(2);
     print!("{}", rows_to_csv(&rows));
+
+    // serial vs parallel on the dominating component: a full-size
+    // gpt2-small FC1 forward GEMM (the fig3 grid itself is timed
+    // single-threaded so its sample extrapolation stays linear)
+    let threads = kernels::max_threads();
+    let (m, k, n) = (512usize, 768usize, 3072usize);
+    let mut rng = Rng::new(9);
+    let a = rng.normal_vec(m * k, 0.0, 1.0);
+    let w = rng.normal_vec(k * n, 0.0, 1.0);
+    let mut serial_ms = f64::MAX;
+    let mut parallel_ms = f64::MAX;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        std::hint::black_box(math::matmul(&a, &w, m, k, n));
+        serial_ms = serial_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        let t0 = Instant::now();
+        std::hint::black_box(kernels::matmul(&a, &w, m, k, n));
+        parallel_ms = parallel_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "\nfc1 fwd GEMM {m}x{k}x{n}: serial {serial_ms:.1} ms, \
+         {threads} threads {parallel_ms:.1} ms ({:.2}x)",
+        serial_ms / parallel_ms
+    );
 
     // the paper's qualitative claims, checked on the measured numbers
     let f = |size: &str, seq: usize| {

@@ -1,17 +1,30 @@
-//! L3 end-to-end train-step benches (feeds §Perf): steps/s for the native
-//! backend across quantization structures, plus a breakdown of where the
-//! per-step wall time goes (forward+backward+Adam vs data generation).
+//! L3 end-to-end train-step benches (feeds §Perf): steps/s and tokens/s
+//! for the native backend across quantization structures, serial vs
+//! parallel kernels, plus a breakdown of where the per-step wall time goes
+//! (forward+backward+Adam vs data generation).
+//!
+//! Emits `BENCH_train_loop.json` at the repo root (steps/s, tokens/s,
+//! thread count, serial-vs-parallel speedup) for the perf trajectory.
 
 use std::time::Instant;
 
+use qpretrain::backend::kernels;
 use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
 use qpretrain::data::{BatchIter, CorpusCfg};
 use qpretrain::model::init_state;
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
 use qpretrain::util::bench::section;
+use qpretrain::util::json::{self, Value};
 
-fn steps_per_sec(rt: &Runtime, model: &str, structure: &str, bits: BitWidths, steps: usize) -> f64 {
+fn steps_per_sec(
+    rt: &Runtime,
+    model: &str,
+    structure: &str,
+    bits: BitWidths,
+    steps: usize,
+    threads: usize, // 0 = auto; train_from applies it per run
+) -> f64 {
     let cfg = TrainCfg::new(
         model,
         QuantRunCfg {
@@ -22,6 +35,7 @@ fn steps_per_sec(rt: &Runtime, model: &str, structure: &str, bits: BitWidths, st
             steps,
             eval_every: 0,
             log_every: usize::MAX,
+            threads,
             ..TrainHp::default()
         },
     );
@@ -31,27 +45,41 @@ fn steps_per_sec(rt: &Runtime, model: &str, structure: &str, bits: BitWidths, st
 
 fn main() {
     let rt = Runtime::open_default().expect("runtime");
-    println!("backend: {}", rt.backend_name());
+    let threads = kernels::max_threads();
+    println!("backend: {} ({threads} kernel threads)", rt.backend_name());
+    let mut results = Vec::new();
+    let mut record = |model: &str, structure: &str, nthreads: usize, sps: f64, toks: f64| {
+        results.push(json::obj(vec![
+            ("model", json::s(model)),
+            ("structure", json::s(structure)),
+            ("threads", json::num(nthreads as f64)),
+            ("steps_per_sec", json::num(sps)),
+            ("tokens_per_sec", json::num(sps * toks)),
+        ]));
+    };
 
-    section("micro train step throughput (steps/s, batch 4 x seq 128)");
+    section("serial vs parallel kernels (baseline structure)");
+    for (model, steps, toks) in [("micro", 10usize, 512.0f64), ("t4", 2, 2048.0)] {
+        let serial = steps_per_sec(&rt, model, "base", BitWidths::none(), steps, 1);
+        let parallel = steps_per_sec(&rt, model, "base", BitWidths::none(), steps, 0);
+        record(model, "base", 1, serial, toks);
+        record(model, "base", threads, parallel, toks);
+        println!(
+            "{model:<8} 1 thread: {serial:>7.2} steps/s   {threads} threads: {parallel:>7.2} steps/s   speedup {:.2}x",
+            parallel / serial
+        );
+    }
+
+    section("micro train step throughput by structure (batch 4 x seq 128)");
     for (name, structure, bits) in [
-        ("baseline", "base", BitWidths::none()),
         ("w8_pc", "w_pc", BitWidths { weights: 8, ..BitWidths::none() }),
         ("w8a8", "wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
         ("w8a8g8", "wag", BitWidths { weights: 8, acts: 8, grads: 8, ..BitWidths::none() }),
         ("m1_8_pc", "m1_pc", BitWidths { m1: 8, ..BitWidths::none() }),
     ] {
-        let sps = steps_per_sec(&rt, "micro", structure, bits, 10);
+        let sps = steps_per_sec(&rt, "micro", structure, bits, 10, 0);
+        record("micro", structure, threads, sps, 512.0);
         println!("{name:<16} {sps:>7.2} steps/s   ({:.0} tokens/s)", sps * 512.0);
-    }
-
-    section("t4 train step throughput (study model, batch 16 x seq 128)");
-    for (name, structure, bits) in [
-        ("baseline", "base", BitWidths::none()),
-        ("w8a8", "wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
-    ] {
-        let sps = steps_per_sec(&rt, "t4", structure, bits, 2);
-        println!("{name:<16} {sps:>7.2} steps/s   ({:.0} tokens/s)", sps * 2048.0);
     }
 
     section("per-step cost breakdown (micro baseline)");
@@ -84,4 +112,13 @@ fn main() {
         "  fwd+bwd+adam:       {:>8.2} ms (remainder)",
         step_ms - data_ms
     );
+
+    let report = json::obj(vec![
+        ("bench", json::s("train_loop")),
+        ("threads", json::num(threads as f64)),
+        ("results", Value::Arr(results)),
+    ]);
+    let path = qpretrain::util::repo_root().join("BENCH_train_loop.json");
+    std::fs::write(&path, report.to_json()).expect("write BENCH_train_loop.json");
+    println!("\nwrote {}", path.display());
 }

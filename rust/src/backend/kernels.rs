@@ -1,0 +1,686 @@
+//! Parallel, cache-blocked kernels for the native backend.
+//!
+//! Every kernel here computes **bit-identical** results to the retained
+//! serial reference in [`super::math`], at any thread count, by
+//! construction: work is split only across *independent output rows or
+//! tiles*, and each output element is accumulated in the exact serial
+//! order (k ascending in the matmuls, r ascending in the reductions).
+//! Cross-output reductions that cannot be split without reordering float
+//! adds (layernorm dw/db, the global grad norm) stay serial — they are
+//! O(rows·d) next to the O(rows·d²) matmuls. `rust/tests/kernels.rs`
+//! asserts the equivalence property over randomized and degenerate shapes;
+//! `rust/tests/native.rs` asserts full train runs are invariant across
+//! `RAYON_NUM_THREADS` values.
+//!
+//! Threading substrate: the offline crate set has no rayon, so the
+//! fork-join is built on `std::thread::scope` with static contiguous
+//! chunking (which is also what keeps the split deterministic — no work
+//! stealing, no atomics in the hot loop). The thread count resolves from,
+//! in priority order: [`set_threads`] (the CLI `--threads` knob /
+//! `TrainHp::threads`), the `RAYON_NUM_THREADS` or `QPRETRAIN_THREADS`
+//! environment variables, then `available_parallelism`. Kernels fall back
+//! to the serial path below a work threshold so tiny shapes don't pay
+//! spawn overhead.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+pub use super::math::{GELU_A, GELU_C, LN_EPS};
+
+// ---------------------------------------------------------------------------
+// thread-count resolution + fork-join substrate
+// ---------------------------------------------------------------------------
+
+/// Process-wide override set by `--threads` / `TrainHp::threads`; 0 = unset.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Test hook: when set, [`plan`] ignores the work thresholds so property
+/// tests exercise the parallel path even on tiny shapes.
+static FORCE_PARALLEL: AtomicBool = AtomicBool::new(false);
+
+/// Override the kernel thread count for this process (0 restores the
+/// environment/auto resolution). Safe to call at any time; kernels read it
+/// per invocation, and results are identical at every thread count.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Force the parallel path regardless of problem size (test hook for the
+/// bit-exactness suite; leaves the thread count untouched).
+pub fn force_parallel(on: bool) {
+    FORCE_PARALLEL.store(on, Ordering::Relaxed);
+}
+
+fn env_threads() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        for key in ["RAYON_NUM_THREADS", "QPRETRAIN_THREADS"] {
+            if let Ok(v) = std::env::var(key) {
+                if let Ok(n) = v.trim().parse::<usize>() {
+                    if n > 0 {
+                        return n;
+                    }
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// The raw process-wide override (0 = unset); lets callers save/restore
+/// the knob around a scoped pin.
+pub fn threads_override() -> usize {
+    THREAD_OVERRIDE.load(Ordering::Relaxed)
+}
+
+/// The resolved kernel thread budget (override > env > all cores).
+pub fn max_threads() -> usize {
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => env_threads(),
+        n => n,
+    }
+}
+
+/// Don't fork at all below this many scalar ops of total work…
+const MIN_PAR_WORK: usize = 1 << 20;
+/// …and give every thread at least this much once we do.
+const MIN_WORK_PER_THREAD: usize = 1 << 19;
+
+/// Threads to use for `chunks` independent chunks of `work_per_chunk`
+/// scalar ops each.
+fn plan(chunks: usize, work_per_chunk: usize) -> usize {
+    if chunks <= 1 {
+        return 1;
+    }
+    if FORCE_PARALLEL.load(Ordering::Relaxed) {
+        return max_threads().min(chunks).max(1);
+    }
+    let total = chunks.saturating_mul(work_per_chunk.max(1));
+    if total < MIN_PAR_WORK {
+        return 1;
+    }
+    max_threads()
+        .min(total / MIN_WORK_PER_THREAD)
+        .min(chunks)
+        .max(1)
+}
+
+/// Run `f` over contiguous spans of `data`, viewed as `data.len() / chunk`
+/// chunks of `chunk` elements. `f(range, sub)` receives the global chunk
+/// index range and the matching sub-slice; spans are disjoint, so the split
+/// is race-free by construction. Runs serially (one call covering all
+/// chunks) when the work is too small to be worth forking.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, work_per_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    assert_eq!(data.len() % chunk, 0, "buffer is not whole chunks");
+    let chunks = data.len() / chunk;
+    if chunks == 0 {
+        return;
+    }
+    let nt = plan(chunks, work_per_chunk);
+    if nt <= 1 {
+        f(0..chunks, data);
+        return;
+    }
+    let per = chunks.div_ceil(nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut work: Vec<(usize, &mut [T])> = data.chunks_mut(per * chunk).enumerate().collect();
+        let (_, first) = work.remove(0);
+        for (i, sub) in work {
+            let start = i * per;
+            let end = start + sub.len() / chunk;
+            s.spawn(move || f(start..end, sub));
+        }
+        f(0..per.min(chunks), first);
+    });
+}
+
+/// Two-buffer variant of [`par_chunks_mut`]: both buffers are split at the
+/// same chunk boundaries (they must contain the same number of chunks).
+pub fn par_chunks2_mut<A, B, F>(
+    a: &mut [A],
+    ca: usize,
+    b: &mut [B],
+    cb: usize,
+    work_per_chunk: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(Range<usize>, &mut [A], &mut [B]) + Sync,
+{
+    assert!(ca > 0 && cb > 0, "chunk sizes must be positive");
+    assert!(a.len() % ca == 0 && b.len() % cb == 0, "buffers not whole chunks");
+    let chunks = a.len() / ca;
+    assert_eq!(chunks, b.len() / cb, "chunk counts differ");
+    if chunks == 0 {
+        return;
+    }
+    let nt = plan(chunks, work_per_chunk);
+    if nt <= 1 {
+        f(0..chunks, a, b);
+        return;
+    }
+    let per = chunks.div_ceil(nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut work: Vec<(usize, (&mut [A], &mut [B]))> = a
+            .chunks_mut(per * ca)
+            .zip(b.chunks_mut(per * cb))
+            .enumerate()
+            .collect();
+        let (_, (a0, b0)) = work.remove(0);
+        for (i, (sa, sb)) in work {
+            let start = i * per;
+            let end = start + sa.len() / ca;
+            s.spawn(move || f(start..end, sa, sb));
+        }
+        f(0..per.min(chunks), a0, b0);
+    });
+}
+
+/// Three-buffer variant of [`par_chunks_mut`] (same chunk counts required).
+pub fn par_chunks3_mut<A, B, C, F>(
+    a: &mut [A],
+    ca: usize,
+    b: &mut [B],
+    cb: usize,
+    c: &mut [C],
+    cc: usize,
+    work_per_chunk: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    C: Send,
+    F: Fn(Range<usize>, &mut [A], &mut [B], &mut [C]) + Sync,
+{
+    assert!(ca > 0 && cb > 0 && cc > 0, "chunk sizes must be positive");
+    assert!(
+        a.len() % ca == 0 && b.len() % cb == 0 && c.len() % cc == 0,
+        "buffers not whole chunks"
+    );
+    let chunks = a.len() / ca;
+    assert_eq!(chunks, b.len() / cb, "chunk counts differ");
+    assert_eq!(chunks, c.len() / cc, "chunk counts differ");
+    if chunks == 0 {
+        return;
+    }
+    let nt = plan(chunks, work_per_chunk);
+    if nt <= 1 {
+        f(0..chunks, a, b, c);
+        return;
+    }
+    let per = chunks.div_ceil(nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut work: Vec<(usize, ((&mut [A], &mut [B]), &mut [C]))> = a
+            .chunks_mut(per * ca)
+            .zip(b.chunks_mut(per * cb))
+            .zip(c.chunks_mut(per * cc))
+            .enumerate()
+            .collect();
+        let (_, ((a0, b0), c0)) = work.remove(0);
+        for (i, ((sa, sb), sc)) in work {
+            let start = i * per;
+            let end = start + sa.len() / ca;
+            s.spawn(move || f(start..end, sa, sb, sc));
+        }
+        f(0..per.min(chunks), a0, b0, c0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// matmul kernels (row-parallel, k-panel cache blocking)
+// ---------------------------------------------------------------------------
+
+/// k-dimension panel size: a panel of `b` rows (K_PANEL x n) stays cache
+/// resident while it is re-used across every output row of a thread's
+/// chunk. Panels are walked in ascending k order, so each output element
+/// still accumulates in the exact serial order.
+pub const K_PANEL: usize = 64;
+
+/// `c = a @ b` where a is (m x k), b is (k x n), all row-major.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// `c += a @ b` (shapes as [`matmul`]).
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_acc: a has wrong shape");
+    assert_eq!(b.len(), k * n, "matmul_acc: b has wrong shape");
+    assert_eq!(c.len(), m * n, "matmul_acc: c has wrong shape");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    par_chunks_mut(c, n, 2 * k * n, |rows, cc| {
+        for l0 in (0..k).step_by(K_PANEL) {
+            let l1 = (l0 + K_PANEL).min(k);
+            for (ri, i) in rows.clone().enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut cc[ri * n..(ri + 1) * n];
+                for l in l0..l1 {
+                    let av = arow[l];
+                    let brow = &b[l * n..(l + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `aᵀ @ b` where a is (m x k), b is (m x n); result is (k x n).
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    matmul_tn_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// `c += aᵀ @ b` (shapes as [`matmul_tn`]) — the weight-gradient kernel.
+/// Parallel over output rows (the k dimension); the reduction dimension m
+/// is walked in ascending order per output element, matching the serial
+/// reference bit for bit. Each thread's output chunk is small enough to
+/// stay cache resident across the whole reduction.
+pub fn matmul_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_tn_acc: a has wrong shape");
+    assert_eq!(b.len(), m * n, "matmul_tn_acc: b has wrong shape");
+    assert_eq!(c.len(), k * n, "matmul_tn_acc: c has wrong shape");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    par_chunks_mut(c, n, 2 * m * n, |lrange, cc| {
+        for r in 0..m {
+            let arow = &a[r * k..(r + 1) * k];
+            let brow = &b[r * n..(r + 1) * n];
+            for (li, l) in lrange.clone().enumerate() {
+                let av = arow[l];
+                let crow = &mut cc[li * n..(li + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `a @ bᵀ` where a is (m x k), b is (n x k); result is (m x n).
+/// Dot-product form, parallel over output rows.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_nt: a has wrong shape");
+    assert_eq!(b.len(), n * k, "matmul_nt: b has wrong shape");
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    par_chunks_mut(&mut c, n, 2 * k * n, |rows, cc| {
+        for (ri, i) in rows.clone().enumerate() {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut cc[ri * n..(ri + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                    acc += av * bv;
+                }
+                *cv = acc;
+            }
+        }
+    });
+    c
+}
+
+/// Column sums accumulated into `acc` (the bias-gradient kernel), parallel
+/// over column blocks; rows are reduced in ascending order per column.
+pub fn col_sum_acc(acc: &mut [f32], x: &[f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols, "col_sum_acc: x has wrong shape");
+    assert_eq!(acc.len(), cols, "col_sum_acc: acc has wrong shape");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    par_chunks_mut(acc, 1, 2 * rows, |crange, ac| {
+        for r in 0..rows {
+            let row = &x[r * cols..(r + 1) * cols];
+            for (ci, c) in crange.clone().enumerate() {
+                ac[ci] += row[c];
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// elementwise / row-wise kernels
+// ---------------------------------------------------------------------------
+
+/// `a += b` elementwise (residual-gradient accumulation).
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "add_assign: length mismatch");
+    par_chunks_mut(a, 1, 2, |range, ac| {
+        for (ai, i) in range.clone().enumerate() {
+            ac[ai] += b[i];
+        }
+    });
+}
+
+/// Add a length-`cols` bias row to every row of the (rows x cols) matrix.
+pub fn bias_add(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols, "bias_add: x has wrong shape");
+    assert_eq!(bias.len(), cols, "bias_add: bias has wrong shape");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    par_chunks_mut(x, cols, cols, |rows_r, xc| {
+        for ri in 0..(rows_r.end - rows_r.start) {
+            let row = &mut xc[ri * cols..(ri + 1) * cols];
+            for (rv, &bv) in row.iter_mut().zip(bias.iter()) {
+                *rv += bv;
+            }
+        }
+    });
+}
+
+/// Row-wise layernorm over (rows x d), parallel over rows; identical
+/// per-row arithmetic to [`super::math::layer_norm_fwd`].
+pub fn layer_norm_fwd(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), rows * d, "layer_norm_fwd: x has wrong shape");
+    assert_eq!(w.len(), d, "layer_norm_fwd: w has wrong shape");
+    assert_eq!(b.len(), d, "layer_norm_fwd: b has wrong shape");
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut rstd = vec![0.0f32; rows];
+    if rows == 0 || d == 0 {
+        return (y, xhat, rstd);
+    }
+    par_chunks3_mut(&mut y, d, &mut xhat, d, &mut rstd, 1, 8 * d, |rr, yc, xc, rc| {
+        for (ri, r) in rr.clone().enumerate() {
+            let xr = &x[r * d..(r + 1) * d];
+            let mut mean = 0.0f32;
+            for &v in xr {
+                mean += v;
+            }
+            mean /= d as f32;
+            let mut var = 0.0f32;
+            for &v in xr {
+                let dv = v - mean;
+                var += dv * dv;
+            }
+            var /= d as f32;
+            let rs = 1.0 / (var + LN_EPS).sqrt();
+            rc[ri] = rs;
+            let xh = &mut xc[ri * d..(ri + 1) * d];
+            let yr = &mut yc[ri * d..(ri + 1) * d];
+            for c in 0..d {
+                let h = (xr[c] - mean) * rs;
+                xh[c] = h;
+                yr[c] = h * w[c] + b[c];
+            }
+        }
+    });
+    (y, xhat, rstd)
+}
+
+/// Layernorm backward: dx is computed row-parallel; the dw/db column
+/// accumulators are cross-row reductions, so they keep the serial row
+/// order (bit-identical to [`super::math::layer_norm_bwd`]) in a second,
+/// O(rows·d) pass.
+pub fn layer_norm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    w: &[f32],
+    rows: usize,
+    d: usize,
+    dw_acc: &mut [f32],
+    db_acc: &mut [f32],
+) -> Vec<f32> {
+    assert_eq!(dy.len(), rows * d, "layer_norm_bwd: dy has wrong shape");
+    assert_eq!(xhat.len(), rows * d, "layer_norm_bwd: xhat has wrong shape");
+    assert_eq!(rstd.len(), rows, "layer_norm_bwd: rstd has wrong shape");
+    assert_eq!(w.len(), d, "layer_norm_bwd: w has wrong shape");
+    assert_eq!(dw_acc.len(), d, "layer_norm_bwd: dw has wrong shape");
+    assert_eq!(db_acc.len(), d, "layer_norm_bwd: db has wrong shape");
+    let mut dx = vec![0.0f32; rows * d];
+    if rows == 0 || d == 0 {
+        return dx;
+    }
+    par_chunks_mut(&mut dx, d, 12 * d, |rr, dxc| {
+        for (ri, r) in rr.clone().enumerate() {
+            let dyr = &dy[r * d..(r + 1) * d];
+            let xhr = &xhat[r * d..(r + 1) * d];
+            let mut m1 = 0.0f32; // mean(dxhat)
+            let mut m2 = 0.0f32; // mean(dxhat * xhat)
+            for c in 0..d {
+                let dxh = dyr[c] * w[c];
+                m1 += dxh;
+                m2 += dxh * xhr[c];
+            }
+            m1 /= d as f32;
+            m2 /= d as f32;
+            let rs = rstd[r];
+            let dxr = &mut dxc[ri * d..(ri + 1) * d];
+            for c in 0..d {
+                let dxh = dyr[c] * w[c];
+                dxr[c] = rs * (dxh - m1 - xhr[c] * m2);
+            }
+        }
+    });
+    // serial row-order pass: a parallel split here would reorder the float
+    // accumulation and break bit-exactness with the serial reference
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xhr = &xhat[r * d..(r + 1) * d];
+        for c in 0..d {
+            dw_acc[c] += dyr[c] * xhr[c];
+            db_acc[c] += dyr[c];
+        }
+    }
+    dx
+}
+
+/// Tanh-approximate GELU (elementwise-parallel; same arithmetic per
+/// element as [`super::math::gelu`]).
+pub fn gelu(u: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; u.len()];
+    par_chunks_mut(&mut out, 1, 16, |range, oc| {
+        for (oi, i) in range.clone().enumerate() {
+            let x = u[i];
+            let t = (GELU_C * (x + GELU_A * x * x * x)).tanh();
+            oc[oi] = 0.5 * x * (1.0 + t);
+        }
+    });
+    out
+}
+
+/// GELU backward: `du = dg * gelu'(u)`.
+pub fn gelu_bwd(u: &[f32], dg: &[f32]) -> Vec<f32> {
+    assert_eq!(u.len(), dg.len(), "gelu_bwd: length mismatch");
+    let mut out = vec![0.0f32; u.len()];
+    par_chunks_mut(&mut out, 1, 24, |range, oc| {
+        for (oi, i) in range.clone().enumerate() {
+            let x = u[i];
+            let d = dg[i];
+            let inner = GELU_C * (x + GELU_A * x * x * x);
+            let t = inner.tanh();
+            let dinner = GELU_C * (1.0 + 3.0 * GELU_A * x * x);
+            oc[oi] = d * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * dinner);
+        }
+    });
+    out
+}
+
+/// Causal row softmax of one (t x t) score tile into `p` (entries above
+/// the diagonal stay exactly 0; `p` must arrive zeroed). Serial per tile —
+/// the native backend fans tiles out across (batch, head) pairs.
+pub fn causal_softmax(scores: &[f32], p: &mut [f32], t: usize) {
+    assert_eq!(scores.len(), t * t, "causal_softmax: scores shape");
+    assert_eq!(p.len(), t * t, "causal_softmax: p shape");
+    for i in 0..t {
+        let row = &scores[i * t..(i + 1) * t];
+        let mut mx = f32::NEG_INFINITY;
+        for &sv in row.iter().take(i + 1) {
+            mx = mx.max(sv);
+        }
+        let mut z = 0.0f32;
+        let prow = &mut p[i * t..(i + 1) * t];
+        for j in 0..=i {
+            let e = (row[j] - mx).exp();
+            prow[j] = e;
+            z += e;
+        }
+        for pj in prow.iter_mut().take(i + 1) {
+            *pj /= z;
+        }
+    }
+}
+
+/// Per-position NLL without materializing probabilities (eval path),
+/// row-parallel: `nll = -(l_target - max - ln(sum(exp(l - max))))`,
+/// clamped finite so a diverged checkpoint scores terribly instead of
+/// poisoning aggregates.
+pub fn nll_only(logits: &[f32], y: &[i32], m: usize, v: usize) -> Vec<f32> {
+    assert_eq!(logits.len(), m * v, "nll_only: logits shape");
+    assert_eq!(y.len(), m, "nll_only: targets shape");
+    let mut per_pos = vec![0.0f32; m];
+    par_chunks_mut(&mut per_pos, 1, 6 * v, |rows, pp| {
+        for (ri, r) in rows.clone().enumerate() {
+            let row = &logits[r * v..(r + 1) * v];
+            let mut mx = f32::NEG_INFINITY;
+            for &l in row {
+                mx = mx.max(l);
+            }
+            let mut z = 0.0f32;
+            for &l in row {
+                z += (l - mx).exp();
+            }
+            let nll = -(row[y[r] as usize] - mx - z.ln());
+            pp[ri] = if nll.is_finite() { nll } else { -f32::MIN_POSITIVE.ln() };
+        }
+    });
+    per_pos
+}
+
+/// Per-position NLL and softmax probabilities from logits (row-stable,
+/// row-parallel; the backward path needs the probs for dlogits).
+pub fn nll_rows(logits: &[f32], y: &[i32], m: usize, v: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(logits.len(), m * v, "nll_rows: logits shape");
+    assert_eq!(y.len(), m, "nll_rows: targets shape");
+    let mut per_pos = vec![0.0f32; m];
+    let mut probs = vec![0.0f32; m * v];
+    par_chunks2_mut(&mut per_pos, 1, &mut probs, v, 8 * v, |rows, pp, pc| {
+        for (ri, r) in rows.clone().enumerate() {
+            let row = &logits[r * v..(r + 1) * v];
+            let mut mx = f32::NEG_INFINITY;
+            for &l in row {
+                mx = mx.max(l);
+            }
+            let prow = &mut pc[ri * v..(ri + 1) * v];
+            let mut z = 0.0f32;
+            for (pj, &l) in prow.iter_mut().zip(row.iter()) {
+                let e = (l - mx).exp();
+                *pj = e;
+                z += e;
+            }
+            for pj in prow.iter_mut() {
+                *pj /= z;
+            }
+            let target = y[r] as usize;
+            pp[ri] = -(prow[target].max(f32::MIN_POSITIVE)).ln();
+        }
+    });
+    (per_pos, probs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tests that mutate the process-wide thread knobs serialize on this
+    static KNOBS: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn thread_override_wins() {
+        let _g = KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+        set_threads(3);
+        assert_eq!(max_threads(), 3);
+        set_threads(0);
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn par_chunks_covers_every_chunk_once() {
+        use std::sync::atomic::AtomicU32;
+        let _g = KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+        set_threads(4);
+        force_parallel(true);
+        let mut data = vec![0u8; 37 * 3];
+        let count = AtomicU32::new(0);
+        par_chunks_mut(&mut data, 3, 1, |range, sub| {
+            assert_eq!(sub.len(), (range.end - range.start) * 3);
+            count.fetch_add((range.end - range.start) as u32, Ordering::Relaxed);
+            for b in sub.iter_mut() {
+                *b += 1;
+            }
+        });
+        force_parallel(false);
+        set_threads(0);
+        assert_eq!(count.load(Ordering::Relaxed), 37);
+        assert!(data.iter().all(|&b| b == 1), "every element touched exactly once");
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matches_serial_reference_on_fixed_case() {
+        let m = 5;
+        let k = K_PANEL + 3; // straddle a panel boundary
+        let n = 7;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+        assert_eq!(matmul(&a, &b, m, k, n), super::super::math::matmul(&a, &b, m, k, n));
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_acc: a has wrong shape")]
+    fn shape_checks_fire_in_release() {
+        // promoted from debug_assert: must fail loudly in --release too
+        let mut c = vec![0.0f32; 4];
+        matmul_acc(&mut c, &[0.0; 3], &[0.0; 4], 2, 2, 2);
+    }
+
+    #[test]
+    fn causal_softmax_rows_normalized_and_masked() {
+        let t = 4;
+        let scores: Vec<f32> = (0..t * t).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut p = vec![0.0f32; t * t];
+        causal_softmax(&scores, &mut p, t);
+        for i in 0..t {
+            let row = &p[i * t..(i + 1) * t];
+            let sum: f32 = row.iter().take(i + 1).sum();
+            assert!((sum - 1.0).abs() < 1e-6, "row {i} sums to {sum}");
+            assert!(row.iter().skip(i + 1).all(|&x| x == 0.0), "row {i} not masked");
+        }
+    }
+}

@@ -1,10 +1,18 @@
-//! Dense f32 kernels for the native backend: row-major matmuls (plain,
-//! transposed-A, transposed-B), layernorm forward/backward, and tanh-GELU.
+//! Serial reference kernels: row-major matmuls (plain, transposed-A,
+//! transposed-B), layernorm forward/backward, and tanh-GELU.
 //!
 //! The matmuls use the axpy (ikj) loop order so the inner loop runs over
-//! contiguous rows of both operands and auto-vectorizes; this is the hot
-//! path the benches measure (rayon-parallel tiling is the next
-//! optimization, tracked in ROADMAP.md).
+//! contiguous rows of both operands and auto-vectorizes. Since the
+//! parallel [`super::kernels`] subsystem took over the native backend's
+//! hot path, this module is the **retained serial reference**: every
+//! parallel kernel must produce bit-identical results to its counterpart
+//! here (`rust/tests/kernels.rs` asserts it over randomized shapes), and
+//! the benches report serial-vs-parallel speedup against these loops.
+//!
+//! Shape checks are real `assert!`s, not `debug_assert!`s: they are O(1)
+//! next to the O(m·n·k) kernel body, and a shape bug in a `--release`
+//! training run must fail loudly instead of silently reading adjacent
+//! memory.
 
 /// `c = a @ b` where a is (m x k), b is (k x n), all row-major.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -15,9 +23,9 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 
 /// `c += a @ b` (shapes as [`matmul`]).
 pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -40,9 +48,9 @@ pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 /// `c += aᵀ @ b` (shapes as [`matmul_tn`]) — the weight-gradient kernel;
 /// accumulating lets stacked per-layer gradients write into their slice.
 pub fn matmul_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(c.len(), k * n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
     for r in 0..m {
         let arow = &a[r * k..(r + 1) * k];
         let brow = &b[r * n..(r + 1) * n];
@@ -58,8 +66,8 @@ pub fn matmul_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
 /// `a @ bᵀ` where a is (m x k), b is (n x k); result is (m x n).
 /// Dot-product form: both operands stream contiguous rows.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
     let mut c = vec![0.0f32; m * n];
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
@@ -78,8 +86,8 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 
 /// Column sums accumulated into `acc` (the bias-gradient kernel).
 pub fn col_sum_acc(acc: &mut [f32], x: &[f32], rows: usize, cols: usize) {
-    debug_assert_eq!(x.len(), rows * cols);
-    debug_assert_eq!(acc.len(), cols);
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(acc.len(), cols);
     for r in 0..rows {
         let row = &x[r * cols..(r + 1) * cols];
         for (a, &v) in acc.iter_mut().zip(row.iter()) {
@@ -100,9 +108,9 @@ pub fn layer_norm_fwd(
     rows: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(x.len(), rows * d);
-    debug_assert_eq!(w.len(), d);
-    debug_assert_eq!(b.len(), d);
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(w.len(), d);
+    assert_eq!(b.len(), d);
     let mut y = vec![0.0f32; rows * d];
     let mut xhat = vec![0.0f32; rows * d];
     let mut rstd = vec![0.0f32; rows];
@@ -145,9 +153,9 @@ pub fn layer_norm_bwd(
     dw_acc: &mut [f32],
     db_acc: &mut [f32],
 ) -> Vec<f32> {
-    debug_assert_eq!(dy.len(), rows * d);
-    debug_assert_eq!(dw_acc.len(), d);
-    debug_assert_eq!(db_acc.len(), d);
+    assert_eq!(dy.len(), rows * d);
+    assert_eq!(dw_acc.len(), d);
+    assert_eq!(db_acc.len(), d);
     let mut dx = vec![0.0f32; rows * d];
     for r in 0..rows {
         let dyr = &dy[r * d..(r + 1) * d];
@@ -188,7 +196,7 @@ pub fn gelu(u: &[f32]) -> Vec<f32> {
 
 /// GELU backward: `du = dg * gelu'(u)`.
 pub fn gelu_bwd(u: &[f32], dg: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(u.len(), dg.len());
+    assert_eq!(u.len(), dg.len());
     u.iter()
         .zip(dg.iter())
         .map(|(&x, &d)| {

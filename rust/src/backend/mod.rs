@@ -14,11 +14,17 @@
 //! * [`pjrt`] (cargo feature `pjrt`) — executes the AOT-lowered HLO
 //!   artifacts through the PJRT C API, as the seed system did.
 //!
+//! The native backend's compute runs on [`kernels`] — thread-parallel,
+//! cache-blocked f32 kernels that are bit-identical to the retained serial
+//! reference in [`math`] at every thread count (`--threads` /
+//! `RAYON_NUM_THREADS`).
+//!
 //! A *structure* names which components are fake-quantized and at which
 //! granularity (e.g. `"w_pc"`, `"a_ptok_asym"`, `"wag"`); bit-widths arrive
 //! separately as runtime qmax scalars, mirroring the artifact convention
 //! that one structure serves every bit-width.
 
+pub mod kernels;
 pub mod math;
 pub mod native;
 #[cfg(feature = "pjrt")]

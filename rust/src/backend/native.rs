@@ -23,10 +23,16 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::backend::math::{
-    col_sum_acc, gelu, gelu_bwd, layer_norm_bwd, layer_norm_fwd, matmul, matmul_acc, matmul_nt,
-    matmul_tn, matmul_tn_acc,
+// Row/tile-parallel kernels for the (M x …) hot path; the serial `math`
+// reference handles the small per-(batch, head) attention tiles *inside*
+// the parallel regions (tiles are the unit of parallelism there, and the
+// serial tile kernels are what the parallel ones are bit-equal to anyway).
+use crate::backend::kernels::{
+    add_assign, bias_add, causal_softmax, col_sum_acc, gelu, gelu_bwd, layer_norm_bwd,
+    layer_norm_fwd, matmul, matmul_acc, matmul_nt, matmul_tn_acc, nll_only, nll_rows,
+    par_chunks2_mut, par_chunks3_mut, par_chunks_mut,
 };
+use crate::backend::math;
 use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, QSpec, QuantStructure, StepOut};
 use crate::model::HostState;
 use crate::quant;
@@ -309,18 +315,20 @@ fn forward(
     let dm = Dims::of(model);
     let (d, f, m, t, h, hd) = (dm.d, dm.f, dm.m, dm.t, dm.h, dm.hd);
 
-    // embeddings: h[b*t + s] = wte[x] + wpe[s]
+    // embeddings: h[b*t + s] = wte[x] + wpe[s] (row-parallel gather)
     let mut hbuf = vec![0.0f32; m * d];
-    for r in 0..m {
-        let tok = x[r] as usize;
-        let s = r % t;
-        let dst = &mut hbuf[r * d..(r + 1) * d];
-        let wte_row = &params[WTE][tok * d..(tok + 1) * d];
-        let wpe_row = &params[WPE][s * d..(s + 1) * d];
-        for c in 0..d {
-            dst[c] = wte_row[c] + wpe_row[c];
+    par_chunks_mut(&mut hbuf, d, 2 * d, |rows, hb| {
+        for (ri, r) in rows.clone().enumerate() {
+            let tok = x[r] as usize;
+            let s = r % t;
+            let dst = &mut hb[ri * d..(ri + 1) * d];
+            let wte_row = &params[WTE][tok * d..(tok + 1) * d];
+            let wpe_row = &params[WPE][s * d..(s + 1) * d];
+            for c in 0..d {
+                dst[c] = wte_row[c] + wpe_row[c];
+            }
         }
-    }
+    });
 
     let inv_sqrt_hd = 1.0f32 / (hd as f32).sqrt();
     let mut caches = Vec::with_capacity(dm.l);
@@ -344,104 +352,80 @@ fn forward(
         let xq = qdq_act_owned(a, m, d, qs.acts, qmax_a);
         let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights, qmax_w);
         let mut qkv = matmul(&xq, &wq, m, d, 3 * d);
-        for r in 0..m {
-            let row = &mut qkv[r * 3 * d..(r + 1) * 3 * d];
-            for c in 0..3 * d {
-                row[c] += qkv_b[c];
-            }
-        }
+        bias_add(&mut qkv, qkv_b, m, 3 * d);
 
-        // de-interleave rows [q | k | v] into per-(batch, head) (T, hd) tiles
+        // de-interleave rows [q | k | v] into per-(batch, head) (T, hd)
+        // tiles, parallel over (batch, head)
+        let th = t * hd;
         let mut q = vec![0.0f32; m * d];
         let mut k = vec![0.0f32; m * d];
         let mut v = vec![0.0f32; m * d];
-        for b in 0..dm.b {
-            for s in 0..t {
-                let row = &qkv[(b * t + s) * 3 * d..(b * t + s + 1) * 3 * d];
-                for hh in 0..h {
-                    let tile = ((b * h + hh) * t + s) * hd;
-                    for e in 0..hd {
-                        q[tile + e] = row[hh * hd + e];
-                        k[tile + e] = row[d + hh * hd + e];
-                        v[tile + e] = row[2 * d + hh * hd + e];
-                    }
+        par_chunks3_mut(&mut q, th, &mut k, th, &mut v, th, 3 * th, |bhr, qc, kc, vc| {
+            for (i, bh) in bhr.clone().enumerate() {
+                let b = bh / h;
+                let hh = bh % h;
+                for s in 0..t {
+                    let row = &qkv[(b * t + s) * 3 * d..(b * t + s + 1) * 3 * d];
+                    let o = i * th + s * hd;
+                    qc[o..o + hd].copy_from_slice(&row[hh * hd..(hh + 1) * hd]);
+                    kc[o..o + hd].copy_from_slice(&row[d + hh * hd..d + (hh + 1) * hd]);
+                    vc[o..o + hd].copy_from_slice(&row[2 * d + hh * hd..2 * d + (hh + 1) * hd]);
                 }
             }
-        }
+        });
 
-        // causal softmax attention per (batch, head)
+        // causal softmax attention, parallel over (batch, head) tiles; the
+        // tile-local matmuls are the serial reference kernels, so every
+        // tile is computed exactly as in the serial path
         let mut p = vec![0.0f32; dm.b * h * t * t];
+        let mut ctx_heads = vec![0.0f32; m * d]; // (b*h, t, hd) tiles
+        par_chunks2_mut(&mut p, t * t, &mut ctx_heads, th, 4 * t * t * hd, |bhr, pc, cc| {
+            for (i, bh) in bhr.clone().enumerate() {
+                let qs_ = &q[bh * th..(bh + 1) * th];
+                let ks_ = &k[bh * th..(bh + 1) * th];
+                let vs_ = &v[bh * th..(bh + 1) * th];
+                let mut scores = math::matmul_nt(qs_, ks_, t, hd, t);
+                for sc in scores.iter_mut() {
+                    *sc *= inv_sqrt_hd;
+                }
+                let ptile = &mut pc[i * t * t..(i + 1) * t * t];
+                causal_softmax(&scores, ptile, t); // j > i stays exactly 0
+                let ctx_tile = math::matmul(ptile, vs_, t, t, hd);
+                cc[i * th..(i + 1) * th].copy_from_slice(&ctx_tile);
+            }
+        });
+        // regather head tiles into (M, d) rows, parallel over rows
         let mut ctx = vec![0.0f32; m * d];
-        for bh in 0..dm.b * h {
-            let qs_ = &q[bh * t * hd..(bh + 1) * t * hd];
-            let ks_ = &k[bh * t * hd..(bh + 1) * t * hd];
-            let vs_ = &v[bh * t * hd..(bh + 1) * t * hd];
-            let mut scores = matmul_nt(qs_, ks_, t, hd, t);
-            for sc in scores.iter_mut() {
-                *sc *= inv_sqrt_hd;
-            }
-            let ptile = &mut p[bh * t * t..(bh + 1) * t * t];
-            for i in 0..t {
-                let row = &mut scores[i * t..(i + 1) * t];
-                let mut mx = f32::NEG_INFINITY;
-                for &sv in row.iter().take(i + 1) {
-                    mx = mx.max(sv);
+        par_chunks_mut(&mut ctx, d, d, |rows, cx| {
+            for (ri, r) in rows.clone().enumerate() {
+                let b = r / t;
+                let s = r % t;
+                for hh in 0..h {
+                    let o = ((b * h + hh) * t + s) * hd;
+                    cx[ri * d + hh * hd..ri * d + (hh + 1) * hd]
+                        .copy_from_slice(&ctx_heads[o..o + hd]);
                 }
-                let mut z = 0.0f32;
-                let prow = &mut ptile[i * t..(i + 1) * t];
-                for j in 0..=i {
-                    let e = (row[j] - mx).exp();
-                    prow[j] = e;
-                    z += e;
-                }
-                for pj in prow.iter_mut().take(i + 1) {
-                    *pj /= z;
-                }
-                // j > i stays exactly 0
             }
-            let ctx_tile = matmul(ptile, vs_, t, t, hd);
-            // scatter (T, hd) head tile back into ctx rows
-            let b = bh / h;
-            let hh = bh % h;
-            for s in 0..t {
-                let dst = &mut ctx[(b * t + s) * d + hh * hd..(b * t + s) * d + (hh + 1) * hd];
-                dst.copy_from_slice(&ctx_tile[s * hd..(s + 1) * hd]);
-            }
-        }
+        });
 
         let cq = qdq_act_opt(&ctx, m, d, qs.acts, qmax_a);
         let wpq = qdq_weight(proj_w, d, d, qs.weights, qmax_w);
         let mut h2 = hbuf.clone();
         matmul_acc(&mut h2, cq.as_deref().unwrap_or(&ctx), &wpq, m, d, d);
-        for r in 0..m {
-            let row = &mut h2[r * d..(r + 1) * d];
-            for c in 0..d {
-                row[c] += proj_b[c];
-            }
-        }
+        bias_add(&mut h2, proj_b, m, d);
 
         // --- MLP ---
         let (mm, xhat2, rstd2) = layer_norm_fwd(&h2, ln2_w, ln2_b, m, d);
         let mq = qdq_act_owned(mm, m, d, qs.acts, qmax_a);
         let w1q = qdq_weight(fc1_w, d, f, qs.weights, qmax_w);
         let mut u = matmul(&mq, &w1q, m, d, f);
-        for r in 0..m {
-            let row = &mut u[r * f..(r + 1) * f];
-            for c in 0..f {
-                row[c] += fc1_b[c];
-            }
-        }
+        bias_add(&mut u, fc1_b, m, f);
         let g = gelu(&u);
         let gq = qdq_act_opt(&g, m, f, qs.acts, qmax_a);
         let w2q = qdq_weight(fc2_w, f, d, qs.weights, qmax_w);
         let mut hout = h2.clone();
         matmul_acc(&mut hout, gq.as_deref().unwrap_or(&g), &w2q, m, f, d);
-        for r in 0..m {
-            let row = &mut hout[r * d..(r + 1) * d];
-            for c in 0..d {
-                row[c] += fc2_b[c];
-            }
-        }
+        bias_add(&mut hout, fc2_b, m, d);
 
         caches.push(LayerCache {
             xhat1,
@@ -475,53 +459,7 @@ fn forward(
     }
 }
 
-/// Per-position NLL without materializing probabilities (eval path):
-/// `nll = -(l_target - max - ln(sum(exp(l - max))))`, clamped finite so a
-/// diverged checkpoint scores terribly instead of poisoning aggregates.
-fn nll_only(logits: &[f32], y: &[i32], m: usize, v: usize) -> Vec<f32> {
-    let mut per_pos = vec![0.0f32; m];
-    for r in 0..m {
-        let row = &logits[r * v..(r + 1) * v];
-        let mut mx = f32::NEG_INFINITY;
-        for &l in row {
-            mx = mx.max(l);
-        }
-        let mut z = 0.0f32;
-        for &l in row {
-            z += (l - mx).exp();
-        }
-        let nll = -(row[y[r] as usize] - mx - z.ln());
-        per_pos[r] = if nll.is_finite() { nll } else { -f32::MIN_POSITIVE.ln() };
-    }
-    per_pos
-}
-
-/// Per-position NLL and softmax probabilities from logits (row-stable;
-/// the backward path needs the probs for dlogits).
-fn nll_rows(logits: &[f32], y: &[i32], m: usize, v: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut per_pos = vec![0.0f32; m];
-    let mut probs = vec![0.0f32; m * v];
-    for r in 0..m {
-        let row = &logits[r * v..(r + 1) * v];
-        let mut mx = f32::NEG_INFINITY;
-        for &l in row {
-            mx = mx.max(l);
-        }
-        let prow = &mut probs[r * v..(r + 1) * v];
-        let mut z = 0.0f32;
-        for (pj, &l) in prow.iter_mut().zip(row.iter()) {
-            let e = (l - mx).exp();
-            *pj = e;
-            z += e;
-        }
-        for pj in prow.iter_mut() {
-            *pj /= z;
-        }
-        let target = y[r] as usize;
-        per_pos[r] = -(prow[target].max(f32::MIN_POSITIVE)).ln();
-    }
-    (per_pos, probs)
-}
+// (cross-entropy: `kernels::nll_only` / `kernels::nll_rows`, row-parallel)
 
 // ---------------------------------------------------------------------------
 // backward
@@ -551,16 +489,18 @@ fn loss_and_grads(
 
     let mut grads: Vec<Vec<f32>> = model.params.iter().map(|p| vec![0.0f32; p.elems()]).collect();
 
-    // dlogits = (softmax - onehot(y)) / M
+    // dlogits = (softmax - onehot(y)) / M (row-parallel)
     let mut dlogits = probs;
     let inv_m = 1.0f32 / m as f32;
-    for r in 0..m {
-        let row = &mut dlogits[r * v..(r + 1) * v];
-        row[y[r] as usize] -= 1.0;
-        for g in row.iter_mut() {
-            *g *= inv_m;
+    par_chunks_mut(&mut dlogits, v, 2 * v, |rows, dc| {
+        for (ri, r) in rows.clone().enumerate() {
+            let row = &mut dc[ri * v..(ri + 1) * v];
+            row[y[r] as usize] -= 1.0;
+            for g in row.iter_mut() {
+                *g *= inv_m;
+            }
         }
-    }
+    });
 
     // tied head: dwte += dlogitsᵀ @ hf ; dhf = dlogits @ wte
     matmul_tn_acc(&mut grads[WTE], &dlogits, &fwd.hf, m, v, d);
@@ -641,9 +581,7 @@ fn loss_and_grads(
             )
         };
         let mut dh2 = dh.clone();
-        for (a, b) in dh2.iter_mut().zip(dx2.iter()) {
-            *a += b;
-        }
+        add_assign(&mut dh2, &dx2);
 
         // ---- attention: h2 = h_in + (qdq(ctx) @ qdq(proj_w) + proj_b) ----
         let do_ = &dh2;
@@ -664,58 +602,86 @@ fn loss_and_grads(
             d_ctx0 = dctx.clone();
         }
 
-        // attention core backward per (batch, head)
-        let mut dqkv = vec![0.0f32; m * 3 * d];
-        for bh in 0..dm.b * h {
-            let b = bh / h;
-            let hh = bh % h;
-            // gather dctx head tile (T, hd)
-            let mut dctx_tile = vec![0.0f32; t * hd];
-            for s in 0..t {
-                let src = &dctx[(b * t + s) * d + hh * hd..(b * t + s) * d + (hh + 1) * hd];
-                dctx_tile[s * hd..(s + 1) * hd].copy_from_slice(src);
-            }
-            let qt = &c.q[bh * t * hd..(bh + 1) * t * hd];
-            let kt = &c.k[bh * t * hd..(bh + 1) * t * hd];
-            let vt = &c.v[bh * t * hd..(bh + 1) * t * hd];
-            let ptile = &c.p[bh * t * t..(bh + 1) * t * t];
+        // attention core backward, parallel over (batch, head) tiles: each
+        // tile writes its own (T, hd) dq/dk/dv head buffers (tile-local
+        // math via the serial reference kernels), then the interleaved
+        // dqkv rows are regathered row-parallel
+        let th = t * hd;
+        let mut dq_h = vec![0.0f32; m * d];
+        let mut dk_h = vec![0.0f32; m * d];
+        let mut dv_h = vec![0.0f32; m * d];
+        par_chunks3_mut(
+            &mut dq_h,
+            th,
+            &mut dk_h,
+            th,
+            &mut dv_h,
+            th,
+            8 * t * t * hd,
+            |bhr, dqc, dkc, dvc| {
+                for (i, bh) in bhr.clone().enumerate() {
+                    let b = bh / h;
+                    let hh = bh % h;
+                    // gather dctx head tile (T, hd)
+                    let mut dctx_tile = vec![0.0f32; th];
+                    for s in 0..t {
+                        let src =
+                            &dctx[(b * t + s) * d + hh * hd..(b * t + s) * d + (hh + 1) * hd];
+                        dctx_tile[s * hd..(s + 1) * hd].copy_from_slice(src);
+                    }
+                    let qt = &c.q[bh * th..(bh + 1) * th];
+                    let kt = &c.k[bh * th..(bh + 1) * th];
+                    let vt = &c.v[bh * th..(bh + 1) * th];
+                    let ptile = &c.p[bh * t * t..(bh + 1) * t * t];
 
-            // dP = dctx @ vᵀ ; dv = Pᵀ @ dctx
-            let dp = matmul_nt(&dctx_tile, vt, t, hd, t);
-            let dv = matmul_tn(ptile, &dctx_tile, t, t, hd);
-            // softmax backward: dS = P ⊙ (dP - rowsum(dP ⊙ P))
-            let mut ds = vec![0.0f32; t * t];
-            for i in 0..t {
-                let prow = &ptile[i * t..(i + 1) * t];
-                let dprow = &dp[i * t..(i + 1) * t];
-                let mut dot = 0.0f32;
-                for j in 0..=i {
-                    dot += dprow[j] * prow[j];
+                    // dP = dctx @ vᵀ ; dv = Pᵀ @ dctx
+                    let dp = math::matmul_nt(&dctx_tile, vt, t, hd, t);
+                    let dv = math::matmul_tn(ptile, &dctx_tile, t, t, hd);
+                    // softmax backward: dS = P ⊙ (dP - rowsum(dP ⊙ P))
+                    let mut ds = vec![0.0f32; t * t];
+                    for r in 0..t {
+                        let prow = &ptile[r * t..(r + 1) * t];
+                        let dprow = &dp[r * t..(r + 1) * t];
+                        let mut dot = 0.0f32;
+                        for j in 0..=r {
+                            dot += dprow[j] * prow[j];
+                        }
+                        let dsrow = &mut ds[r * t..(r + 1) * t];
+                        for j in 0..=r {
+                            dsrow[j] = prow[j] * (dprow[j] - dot);
+                        }
+                    }
+                    // dq = dS @ k * inv ; dk = dSᵀ @ q * inv
+                    let mut dq = math::matmul(&ds, kt, t, t, hd);
+                    let mut dk = math::matmul_tn(&ds, qt, t, t, hd);
+                    for x_ in dq.iter_mut() {
+                        *x_ *= inv_sqrt_hd;
+                    }
+                    for x_ in dk.iter_mut() {
+                        *x_ *= inv_sqrt_hd;
+                    }
+                    dqc[i * th..(i + 1) * th].copy_from_slice(&dq);
+                    dkc[i * th..(i + 1) * th].copy_from_slice(&dk);
+                    dvc[i * th..(i + 1) * th].copy_from_slice(&dv);
                 }
-                let dsrow = &mut ds[i * t..(i + 1) * t];
-                for j in 0..=i {
-                    dsrow[j] = prow[j] * (dprow[j] - dot);
+            },
+        );
+        // regather head tiles into dqkv rows [dq | dk | dv]
+        let mut dqkv = vec![0.0f32; m * 3 * d];
+        par_chunks_mut(&mut dqkv, 3 * d, 3 * d, |rows, out| {
+            for (ri, r) in rows.clone().enumerate() {
+                let b = r / t;
+                let s = r % t;
+                let row = &mut out[ri * 3 * d..(ri + 1) * 3 * d];
+                for hh in 0..h {
+                    let o = ((b * h + hh) * t + s) * hd;
+                    row[hh * hd..(hh + 1) * hd].copy_from_slice(&dq_h[o..o + hd]);
+                    row[d + hh * hd..d + (hh + 1) * hd].copy_from_slice(&dk_h[o..o + hd]);
+                    row[2 * d + hh * hd..2 * d + (hh + 1) * hd]
+                        .copy_from_slice(&dv_h[o..o + hd]);
                 }
             }
-            // dq = dS @ k * inv ; dk = dSᵀ @ q * inv
-            let mut dq = matmul(&ds, kt, t, t, hd);
-            let mut dk = matmul_tn(&ds, qt, t, t, hd);
-            for x_ in dq.iter_mut() {
-                *x_ *= inv_sqrt_hd;
-            }
-            for x_ in dk.iter_mut() {
-                *x_ *= inv_sqrt_hd;
-            }
-            // scatter into dqkv rows [dq | dk | dv]
-            for s in 0..t {
-                let row = &mut dqkv[(b * t + s) * 3 * d..(b * t + s + 1) * 3 * d];
-                for e in 0..hd {
-                    row[hh * hd + e] = dq[s * hd + e];
-                    row[d + hh * hd + e] = dk[s * hd + e];
-                    row[2 * d + hh * hd + e] = dv[s * hd + e];
-                }
-            }
-        }
+        });
 
         let gqq = qdq_grad(&dqkv, m, 3 * d, qs.grads, qmax_g);
         matmul_tn_acc(
@@ -744,13 +710,13 @@ fn loss_and_grads(
                 &mut gb_all[0][l * d..(l + 1) * d],
             )
         };
-        for (a, b) in dh2.iter_mut().zip(dx1.iter()) {
-            *a += b;
-        }
+        add_assign(&mut dh2, &dx1);
         dh = dh2;
     }
 
-    // embeddings: scatter into wte, reduce over batch into wpe
+    // embeddings: scatter into wte, reduce over batch into wpe. Serial on
+    // purpose: rows sharing a token (or a position) collide, and splitting
+    // the scatter would reorder their float accumulation.
     for r in 0..m {
         let tok = x[r] as usize;
         let s = r % t;
@@ -798,6 +764,9 @@ fn moment_qdq(info: &ParamInfo, data: &mut [f32], spec: Option<QSpec>, qmax: f32
 }
 
 /// One AdamW step in place. Returns the pre-clip global gradient norm.
+/// The elementwise moment/param updates are chunk-parallel (each element
+/// is independent); the global grad norm is a cross-tensor float reduction
+/// and stays serial to keep its accumulation order.
 fn adamw_update(
     model: &ModelInfo,
     state: &mut HostState,
@@ -822,24 +791,31 @@ fn adamw_update(
         let p = &mut state.params[i];
         let m = &mut state.m[i];
         let v = &mut state.v[i];
-        let g = &grads[i];
-        for j in 0..p.len() {
-            let gc = g[j] * clip;
-            m[j] = BETA1 * m[j] + (1.0 - BETA1) * gc;
-            v[j] = BETA2 * v[j] + (1.0 - BETA2) * gc * gc;
-        }
+        let g: &[f32] = &grads[i];
+        par_chunks2_mut(&mut m[..], 1, &mut v[..], 1, 8, |jr, mc, vc| {
+            for (ji, j) in jr.clone().enumerate() {
+                let gc = g[j] * clip;
+                mc[ji] = BETA1 * mc[ji] + (1.0 - BETA1) * gc;
+                vc[ji] = BETA2 * vc[ji] + (1.0 - BETA2) * gc * gc;
+            }
+        });
         // store fake-quantized; the update below reads the stored form
         moment_qdq(info, m, qs.m1, qmax_m1);
         moment_qdq(info, v, qs.m2, qmax_m2);
-        for j in 0..p.len() {
-            let m_hat = m[j] / bc1;
-            let v_hat = v[j] / bc2;
-            let mut step = m_hat / (v_hat.sqrt() + ADAM_EPS);
-            if info.decay {
-                step += WEIGHT_DECAY * p[j];
+        let mr: &[f32] = m;
+        let vr: &[f32] = v;
+        let decay = info.decay;
+        par_chunks_mut(&mut p[..], 1, 10, |jr, pc| {
+            for (ji, j) in jr.clone().enumerate() {
+                let m_hat = mr[j] / bc1;
+                let v_hat = vr[j] / bc2;
+                let mut step = m_hat / (v_hat.sqrt() + ADAM_EPS);
+                if decay {
+                    step += WEIGHT_DECAY * pc[ji];
+                }
+                pc[ji] -= lr * step;
             }
-            p[j] -= lr * step;
-        }
+        });
     }
     gnorm
 }

@@ -163,6 +163,11 @@ pub struct TrainHp {
     pub eval_batches: usize,
     pub probe_every: usize, // 0 = no probes
     pub log_every: usize,
+    /// Kernel worker threads, pinned for the duration of the run and then
+    /// restored; 0 = inherit the process setting (`--threads`,
+    /// `RAYON_NUM_THREADS`, or all cores). Results are bit-identical at
+    /// every value — the knob only trades wall-clock (`backend::kernels`).
+    pub threads: usize,
 }
 
 impl Default for TrainHp {
@@ -177,6 +182,7 @@ impl Default for TrainHp {
             eval_batches: 4,
             probe_every: 0,
             log_every: 10,
+            threads: 0,
         }
     }
 }

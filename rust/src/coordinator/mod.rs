@@ -186,6 +186,20 @@ pub fn ensure_runs(
             execute_run(rt, cfg.clone(), dir)?;
         }
     } else {
+        // Per-worker kernel thread budget: an explicit pin (TrainHp::threads
+        // or the process-wide --threads) is forwarded as-is; otherwise the
+        // machine's thread budget is split across this wave's workers so the
+        // sweep neither oversubscribes (jobs * all cores) nor idles cores on
+        // a short final wave.
+        let worker_threads = |cfg: &TrainCfg, wave_jobs: usize| -> usize {
+            if cfg.hp.threads > 0 {
+                return cfg.hp.threads;
+            }
+            match crate::backend::kernels::threads_override() {
+                0 => (crate::backend::kernels::max_threads() / wave_jobs.max(1)).max(1),
+                pinned => pinned,
+            }
+        };
         for wave in missing.chunks(jobs) {
             let mut children = Vec::new();
             for (i, dir) in wave {
@@ -196,6 +210,8 @@ pub fn ensure_runs(
                 let child = Command::new(exe)
                     .args([
                         "train",
+                        "--threads",
+                        &worker_threads(cfg, wave.len()).to_string(),
                         "--model",
                         &cfg.model,
                         "--structure",

@@ -55,6 +55,7 @@ fn hp_from(args: &Args) -> Result<TrainHp> {
         steps: args.usize_or("steps", 300)?,
         seed: args.u64_or("seed", 1337)?,
         probe_every: args.usize_or("probe-every", 0)?,
+        threads: args.usize_or("threads", 0)?,
         ..TrainHp::default()
     };
     hp.lr_max = args.f64_or("lr", hp.lr_max)?;
@@ -97,6 +98,10 @@ fn default_jobs() -> usize {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // kernel worker threads for every subcommand (train, timeprofile,
+    // experiment sweeps, …); 0/absent = RAYON_NUM_THREADS or all cores.
+    // Results are bit-identical at every thread count.
+    qpretrain::backend::kernels::set_threads(args.usize_or("threads", 0)?);
     match args.subcommand.as_str() {
         "train" => cmd_train(args),
         "eval" => cmd_eval(args),
@@ -134,6 +139,10 @@ USAGE: qpretrain <subcommand> [--options]
   report       aggregate runs/reports/*.md
   selftest     native-backend validation against the rust quant oracle
   list         models / structures / experiments
+
+Global options:
+  --threads N  kernel worker threads (default: RAYON_NUM_THREADS, else all
+               cores). Results are bit-identical at every thread count.
 
 The default build uses the pure-rust native backend. Build with
 `--features pjrt` (plus `make artifacts`) to execute AOT HLO artifacts."

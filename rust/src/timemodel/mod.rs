@@ -16,8 +16,23 @@
 
 use std::time::Instant;
 
-use crate::backend::math::{matmul, matmul_nt};
+use crate::backend::kernels::{self, matmul, matmul_nt};
 use crate::util::rng::Rng;
+
+/// Pin the kernels to one thread for the duration of a timing closure.
+/// The row/head-sample extrapolation below assumes time is linear in the
+/// sample size, which only holds at a fixed thread schedule — the work
+/// planner would otherwise give the small sample fewer threads than the
+/// full problem. The Fig. 3 claim is about the linear-vs-attention
+/// *ratio*, which is schedule-independent; `bench_linear_fraction`
+/// reports the parallel speedup separately on full-size kernels.
+fn timed_single_threaded<T>(f: impl FnOnce() -> T) -> T {
+    let prev = kernels::threads_override();
+    kernels::set_threads(1);
+    let out = f();
+    kernels::set_threads(prev);
+    out
+}
 
 pub const SIZES: [&str; 4] = ["small", "medium", "large", "xl"];
 pub const SEQS: [usize; 4] = [128, 256, 512, 1024];
@@ -55,15 +70,18 @@ pub fn time_linear(d_model: usize, d_ff: usize, seq: usize, reps: usize) -> f64 
     let w_fc1 = rng.normal_vec(d * d_ff, 0.0, 0.02);
     let w_fc2 = rng.normal_vec(d_ff * d, 0.0, 0.02);
 
-    let mut times = Vec::with_capacity(reps);
-    for _ in 0..reps.max(1) {
-        let t0 = Instant::now();
-        std::hint::black_box(matmul(&x, &w_qkv, rows, d, 3 * d));
-        std::hint::black_box(matmul(&x, &w_proj, rows, d, d));
-        std::hint::black_box(matmul(&x, &w_fc1, rows, d, d_ff));
-        std::hint::black_box(matmul(&xf, &w_fc2, rows, d_ff, d));
-        times.push(t0.elapsed().as_secs_f64());
-    }
+    let times = timed_single_threaded(|| {
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(matmul(&x, &w_qkv, rows, d, 3 * d));
+            std::hint::black_box(matmul(&x, &w_proj, rows, d, d));
+            std::hint::black_box(matmul(&x, &w_fc1, rows, d, d_ff));
+            std::hint::black_box(matmul(&xf, &w_fc2, rows, d_ff, d));
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times
+    });
     median(times) * (seq as f64 / rows as f64) * 3.0 * 1e3
 }
 
@@ -79,19 +97,22 @@ pub fn time_attn(d_model: usize, n_head: usize, seq: usize, reps: usize) -> f64 
     let p = rng.normal_vec(heads * seq * seq, 0.0, 0.1);
     let v = rng.normal_vec(heads * seq * hd, 0.0, 0.5);
 
-    let mut times = Vec::with_capacity(reps);
-    for _ in 0..reps.max(1) {
-        let t0 = Instant::now();
-        for h in 0..heads {
-            let qs = &q[h * seq * hd..(h + 1) * seq * hd];
-            let ks = &k[h * seq * hd..(h + 1) * seq * hd];
-            let ps = &p[h * seq * seq..(h + 1) * seq * seq];
-            let vs = &v[h * seq * hd..(h + 1) * seq * hd];
-            std::hint::black_box(matmul_nt(qs, ks, seq, hd, seq));
-            std::hint::black_box(matmul(ps, vs, seq, seq, hd));
+    let times = timed_single_threaded(|| {
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            for h in 0..heads {
+                let qs = &q[h * seq * hd..(h + 1) * seq * hd];
+                let ks = &k[h * seq * hd..(h + 1) * seq * hd];
+                let ps = &p[h * seq * seq..(h + 1) * seq * seq];
+                let vs = &v[h * seq * hd..(h + 1) * seq * hd];
+                std::hint::black_box(matmul_nt(qs, ks, seq, hd, seq));
+                std::hint::black_box(matmul(ps, vs, seq, seq, hd));
+            }
+            times.push(t0.elapsed().as_secs_f64());
         }
-        times.push(t0.elapsed().as_secs_f64());
-    }
+        times
+    });
     median(times) * (n_head as f64 / heads as f64) * 3.0 * 1e3
 }
 

@@ -114,6 +114,21 @@ pub fn train_from(
     cfg: &TrainCfg,
     resume: Option<HostState>,
 ) -> Result<TrainResult> {
+    // Pin the kernel thread count for the duration of this run (results
+    // are thread-count-invariant; the knob only affects wall-clock), then
+    // restore whatever was set before — a run must neither leak its pin
+    // into later runs nor erase a CLI/process-level `--threads` setting.
+    struct ThreadsRestore(usize);
+    impl Drop for ThreadsRestore {
+        fn drop(&mut self) {
+            crate::backend::kernels::set_threads(self.0);
+        }
+    }
+    let _threads_guard = (cfg.hp.threads > 0).then(|| {
+        let prev = crate::backend::kernels::threads_override();
+        crate::backend::kernels::set_threads(cfg.hp.threads);
+        ThreadsRestore(prev)
+    });
     let model = rt.model(&cfg.model)?.clone();
     let mut state = resume.unwrap_or_else(|| init_state(&model, cfg.hp.seed));
     let start_step = state.step;

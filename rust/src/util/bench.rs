@@ -18,6 +18,25 @@ impl BenchResult {
     pub fn mean_secs(&self) -> f64 {
         self.mean_ns / 1e9
     }
+
+    /// Achieved GFLOP/s given the FLOPs one iteration performs.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.mean_secs() / 1e9
+    }
+}
+
+/// Seconds of measurement per case. `QPRETRAIN_BENCH_FAST=1` shrinks it so
+/// CI can smoke-run the bench binaries without paying full measurement time.
+fn target_secs() -> f64 {
+    static CACHE: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| match std::env::var("QPRETRAIN_BENCH_FAST") {
+        Ok(v) if !v.is_empty() && v != "0" => 0.05,
+        _ => 1.0,
+    })
+}
+
+fn warmup_window() -> Duration {
+    Duration::from_secs_f64((target_secs() * 0.15).clamp(0.01, 0.15))
 }
 
 /// Run `f` repeatedly, returning per-iteration timing. `f` should perform one
@@ -26,7 +45,7 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
     // warmup + calibration
     let t0 = Instant::now();
     let mut warm_iters = 0u64;
-    while t0.elapsed() < Duration::from_millis(150) {
+    while t0.elapsed() < warmup_window() {
         std::hint::black_box(f());
         warm_iters += 1;
         if warm_iters > 1_000_000 {
@@ -34,8 +53,7 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
         }
     }
     let per_iter = t0.elapsed().as_secs_f64() / warm_iters as f64;
-    let target = 1.0f64; // seconds of measurement
-    let iters = ((target / per_iter) as u64).clamp(5, 5_000_000);
+    let iters = ((target_secs() / per_iter) as u64).clamp(5, 5_000_000);
 
     // measure in 5 batches for a std-dev estimate
     let batches = 5u64;
@@ -71,7 +89,7 @@ pub fn bench_throughput<T, F: FnMut() -> T>(name: &str, elems: u64, mut f: F) ->
 fn bench_quiet<T, F: FnMut() -> T>(name: &str, f: &mut F) -> BenchResult {
     let t0 = Instant::now();
     let mut warm_iters = 0u64;
-    while t0.elapsed() < Duration::from_millis(150) {
+    while t0.elapsed() < warmup_window() {
         std::hint::black_box(f());
         warm_iters += 1;
         if warm_iters > 1_000_000 {
@@ -79,7 +97,7 @@ fn bench_quiet<T, F: FnMut() -> T>(name: &str, f: &mut F) -> BenchResult {
         }
     }
     let per_iter = t0.elapsed().as_secs_f64() / warm_iters as f64;
-    let iters = ((1.0 / per_iter) as u64).clamp(5, 5_000_000);
+    let iters = ((target_secs() / per_iter) as u64).clamp(5, 5_000_000);
     let batches = 5u64;
     let per_batch = (iters / batches).max(1);
     let mut batch_ns = Vec::with_capacity(batches as usize);

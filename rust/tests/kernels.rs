@@ -1,0 +1,264 @@
+//! Bit-exactness property suite for the parallel kernel subsystem
+//! (`backend::kernels`) against the retained serial reference
+//! (`backend::math`), extending the in-repo quickcheck harness.
+//!
+//! The whole quantization reproduction rests on bit-exact accumulation
+//! (the golden fixtures chain back to the jnp oracle), so the parallel
+//! kernels are required to be *identical* — not approximately equal — to
+//! the serial path, at every thread count, across randomized shapes
+//! including degenerate ones (m=1, k=1, dimensions that are not multiples
+//! of the K panel or of the per-thread span).
+//!
+//! Tests here mutate the process-wide thread knobs, so they serialize on a
+//! mutex and restore the knobs via an RAII guard (panic-safe).
+
+use std::sync::{Mutex, MutexGuard};
+
+use qpretrain::backend::{kernels, math};
+use qpretrain::util::quickcheck::{check, gen, Config};
+use qpretrain::util::rng::Rng;
+
+static KNOBS: Mutex<()> = Mutex::new(());
+
+/// Serializes the test, pins the thread count, and forces the parallel
+/// path (so tiny property-test shapes exercise real forking); both knobs
+/// are restored on drop even if the property panics.
+struct Forced(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+fn forced(threads: usize) -> Forced {
+    let g = KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+    kernels::set_threads(threads);
+    kernels::force_parallel(true);
+    Forced(g)
+}
+
+impl Drop for Forced {
+    fn drop(&mut self) {
+        kernels::force_parallel(false);
+        kernels::set_threads(0);
+    }
+}
+
+fn cfg(cases: usize) -> Config {
+    Config {
+        cases,
+        ..Config::default()
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random matmul problem: dims straddle the K panel and thread-span
+/// boundaries, values include the adversarial quant patterns.
+fn gen_mm(rng: &mut Rng) -> (Vec<f32>, Vec<f32>, usize, usize, usize, usize) {
+    let m = rng.range(1, 41);
+    let k = if rng.bool_with(0.25) {
+        rng.range(kernels::K_PANEL - 2, kernels::K_PANEL * 2 + 3)
+    } else {
+        rng.range(1, 41)
+    };
+    let n = rng.range(1, 41);
+    let mut a = gen::f32_vec_adversarial(rng, m * k);
+    a.resize(m * k, 0.0);
+    let mut b = gen::f32_vec_adversarial(rng, k * n);
+    b.resize(k * n, 0.0);
+    let threads = rng.range(2, 9);
+    (a, b, m, k, n, threads)
+}
+
+fn mm_case_identical(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> bool {
+    // plain + transposed variants
+    if bits(&kernels::matmul(a, b, m, k, n)) != bits(&math::matmul(a, b, m, k, n)) {
+        return false;
+    }
+    // nt: b reinterpreted as (n x k) against an (m x k) a — reuse a as the
+    // left operand and carve a right operand of n*k elements from b/a
+    let bt: Vec<f32> = b.iter().chain(a.iter()).cycle().take(n * k).copied().collect();
+    if bits(&kernels::matmul_nt(a, &bt, m, k, n)) != bits(&math::matmul_nt(a, &bt, m, k, n)) {
+        return false;
+    }
+    // tn: a is (m x k), b must be (m x n)
+    let bn: Vec<f32> = b.iter().chain(a.iter()).cycle().take(m * n).copied().collect();
+    if bits(&kernels::matmul_tn(a, &bn, m, k, n)) != bits(&math::matmul_tn(a, &bn, m, k, n)) {
+        return false;
+    }
+    // accumulating forms on a non-zero initial c
+    let mut c1: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.13).sin()).collect();
+    let mut c2 = c1.clone();
+    kernels::matmul_acc(&mut c1, a, b, m, k, n);
+    math::matmul_acc(&mut c2, a, b, m, k, n);
+    if bits(&c1) != bits(&c2) {
+        return false;
+    }
+    let mut c1: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.29).cos()).collect();
+    let mut c2 = c1.clone();
+    kernels::matmul_tn_acc(&mut c1, a, &bn, m, k, n);
+    math::matmul_tn_acc(&mut c2, a, &bn, m, k, n);
+    bits(&c1) == bits(&c2)
+}
+
+#[test]
+fn prop_matmul_parallel_bit_identical_to_serial() {
+    let _guard = forced(4);
+    check(cfg(120), gen_mm, |(a, b, m, k, n, threads)| {
+        kernels::set_threads(*threads);
+        mm_case_identical(a, b, *m, *k, *n)
+    });
+}
+
+#[test]
+fn degenerate_shapes_bit_identical() {
+    let _guard = forced(4);
+    let kp = kernels::K_PANEL;
+    // m=1, k=1, n=1, and dims that are not multiples of the panel/span
+    let shapes = [
+        (1, 1, 1),
+        (1, 7, 3),
+        (3, 1, 7),
+        (7, 3, 1),
+        (2, kp, 5),
+        (2, kp + 1, 5),
+        (2, kp - 1, 5),
+        (5, 2 * kp + 3, 9),
+        (17, 5, 23), // rows indivisible by any thread count we pin
+    ];
+    let mut rng = Rng::new(0xDE6E);
+    for &(m, k, n) in &shapes {
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        for threads in [1, 2, 3, 5, 16] {
+            kernels::set_threads(threads);
+            assert!(
+                mm_case_identical(&a, &b, m, k, n),
+                "shape ({m},{k},{n}) at {threads} threads differs from serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_rowwise_kernels_bit_identical() {
+    let _guard = forced(3);
+    check(
+        cfg(100),
+        |rng| {
+            let rows = rng.range(1, 24);
+            let d = rng.range(1, 24);
+            let mut x = gen::f32_vec_adversarial(rng, rows * d);
+            x.resize(rows * d, 0.0);
+            let w = (0..d).map(|_| rng.normal_f32(1.0, 0.3)).collect::<Vec<_>>();
+            let b = (0..d).map(|_| rng.normal_f32(0.0, 0.3)).collect::<Vec<_>>();
+            let dy = (0..rows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect::<Vec<_>>();
+            let threads = rng.range(2, 9);
+            (x, w, b, dy, rows, d, threads)
+        },
+        |(x, w, b, dy, rows, d, threads)| {
+            kernels::set_threads(*threads);
+            let (rows, d) = (*rows, *d);
+            let (y1, xh1, rs1) = kernels::layer_norm_fwd(x, w, b, rows, d);
+            let (y2, xh2, rs2) = math::layer_norm_fwd(x, w, b, rows, d);
+            if bits(&y1) != bits(&y2) || bits(&xh1) != bits(&xh2) || bits(&rs1) != bits(&rs2) {
+                return false;
+            }
+            let mut dw1 = vec![0.1f32; d];
+            let mut db1 = vec![-0.2f32; d];
+            let mut dw2 = dw1.clone();
+            let mut db2 = db1.clone();
+            let dx1 = kernels::layer_norm_bwd(dy, &xh1, &rs1, w, rows, d, &mut dw1, &mut db1);
+            let dx2 = math::layer_norm_bwd(dy, &xh2, &rs2, w, rows, d, &mut dw2, &mut db2);
+            if bits(&dx1) != bits(&dx2) || bits(&dw1) != bits(&dw2) || bits(&db1) != bits(&db2) {
+                return false;
+            }
+            if bits(&kernels::gelu(x)) != bits(&math::gelu(x)) {
+                return false;
+            }
+            if bits(&kernels::gelu_bwd(x, dy)) != bits(&math::gelu_bwd(x, dy)) {
+                return false;
+            }
+            let mut a1 = vec![0.3f32; d];
+            let mut a2 = a1.clone();
+            kernels::col_sum_acc(&mut a1, x, rows, d);
+            math::col_sum_acc(&mut a2, x, rows, d);
+            bits(&a1) == bits(&a2)
+        },
+    );
+}
+
+#[test]
+fn prop_cross_entropy_thread_count_invariant() {
+    // no serial twin in `math`: the reference is the same kernel pinned to
+    // one thread
+    let _guard = forced(1);
+    check(
+        cfg(80),
+        |rng| {
+            let m = rng.range(1, 16);
+            let v = rng.range(2, 48);
+            let mut logits = gen::f32_vec_adversarial(rng, m * v);
+            logits.resize(m * v, 0.0);
+            let y: Vec<i32> = (0..m).map(|_| rng.below(v) as i32).collect();
+            let threads = rng.range(2, 9);
+            (logits, y, m, v, threads)
+        },
+        |(logits, y, m, v, threads)| {
+            kernels::set_threads(1);
+            let (pp1, pr1) = kernels::nll_rows(logits, y, *m, *v);
+            let only1 = kernels::nll_only(logits, y, *m, *v);
+            kernels::set_threads(*threads);
+            let (pp2, pr2) = kernels::nll_rows(logits, y, *m, *v);
+            let only2 = kernels::nll_only(logits, y, *m, *v);
+            bits(&pp1) == bits(&pp2) && bits(&pr1) == bits(&pr2) && bits(&only1) == bits(&only2)
+        },
+    );
+}
+
+#[test]
+fn add_assign_and_bias_add_match_serial_loops() {
+    let _guard = forced(5);
+    let mut rng = Rng::new(7);
+    let (rows, cols) = (19, 13);
+    let x = rng.normal_vec(rows * cols, 0.0, 1.0);
+    let bias = rng.normal_vec(cols, 0.0, 1.0);
+
+    let mut a1 = x.clone();
+    kernels::bias_add(&mut a1, &bias, rows, cols);
+    let mut a2 = x.clone();
+    for r in 0..rows {
+        for c in 0..cols {
+            a2[r * cols + c] += bias[c];
+        }
+    }
+    assert_eq!(bits(&a1), bits(&a2));
+
+    let other = rng.normal_vec(rows * cols, 0.0, 1.0);
+    let mut b1 = x.clone();
+    kernels::add_assign(&mut b1, &other);
+    let mut b2 = x;
+    for (p, q) in b2.iter_mut().zip(other.iter()) {
+        *p += q;
+    }
+    assert_eq!(bits(&b1), bits(&b2));
+}
+
+#[test]
+fn thread_count_sweep_identical_results() {
+    // one moderately sized problem, every thread count 1..=8 plus an
+    // oversubscribed count: all results bit-identical
+    let _guard = forced(1);
+    let mut rng = Rng::new(0xABCD);
+    let (m, k, n) = (23, 70, 31);
+    let a = rng.normal_vec(m * k, 0.0, 1.0);
+    let b = rng.normal_vec(k * n, 0.0, 1.0);
+    kernels::set_threads(1);
+    let reference = bits(&kernels::matmul(&a, &b, m, k, n));
+    for threads in [2, 3, 4, 5, 6, 7, 8, 64] {
+        kernels::set_threads(threads);
+        assert_eq!(
+            bits(&kernels::matmul(&a, &b, m, k, n)),
+            reference,
+            "{threads} threads changed the result"
+        );
+    }
+}

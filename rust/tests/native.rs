@@ -238,6 +238,60 @@ fn masked_eval_matches_manual_mean() {
 }
 
 #[test]
+fn train_run_bit_identical_across_thread_counts() {
+    // Two full micro train runs — one pinned to a single kernel thread,
+    // one forced onto the parallel path with many threads — must produce
+    // bit-identical loss curves, grad norms, validation losses, final
+    // params and Adam moments. This is the determinism contract the
+    // parallel kernel subsystem is built on (and what lets the golden
+    // fixtures stay unchanged). Quantization active (w8a8) so the qdq
+    // injection points run inside the parallel region too.
+    use qpretrain::backend::kernels;
+
+    // panic-safe reset of the process-wide knobs (a mid-train panic must
+    // not leave force_parallel on for the rest of the test binary)
+    struct KnobReset;
+    impl Drop for KnobReset {
+        fn drop(&mut self) {
+            kernels::force_parallel(false);
+            kernels::set_threads(0);
+        }
+    }
+    let _reset = KnobReset;
+
+    let rt = Runtime::native();
+    let run = |threads: usize, force: bool| {
+        kernels::force_parallel(force);
+        let mut h = hp(12);
+        h.eval_every = 6;
+        h.threads = threads; // applied per run by train_from
+        let r = train(&rt, &TrainCfg::new("micro", qcfg("wa", 8, 8, 0, 0, 0), h)).unwrap();
+        kernels::force_parallel(false);
+        r
+    };
+    let serial = run(1, false);
+    let many = run(7, true); // force: even sub-threshold kernels fork
+
+    // compare at the bit level: PartialEq on floats would let sign-of-zero
+    // differences (the first symptom of a reordered reduction) slip through
+    let f64_bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    let val_bits =
+        |v: &[(usize, f64)]| v.iter().map(|(s, l)| (*s, l.to_bits())).collect::<Vec<_>>();
+    let state_bits = |vv: &[Vec<f32>]| {
+        vv.iter()
+            .map(|t| t.iter().map(|x| x.to_bits()).collect::<Vec<u32>>())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(f64_bits(&serial.losses), f64_bits(&many.losses), "loss curves diverged");
+    assert_eq!(f64_bits(&serial.gnorms), f64_bits(&many.gnorms), "grad norms diverged");
+    assert_eq!(val_bits(&serial.val), val_bits(&many.val), "validation losses diverged");
+    let (a, b) = (&serial.final_state, &many.final_state);
+    assert_eq!(state_bits(&a.params), state_bits(&b.params), "final params diverged");
+    assert_eq!(state_bits(&a.m), state_bits(&b.m), "first moments diverged");
+    assert_eq!(state_bits(&a.v), state_bits(&b.v), "second moments diverged");
+}
+
+#[test]
 fn every_train_structure_runs_one_step() {
     // all 17 structures execute without error and produce finite loss
     let rt = Runtime::native();
