@@ -2,16 +2,17 @@
 //! W8A8 recipe on the native backend, logging the loss curve and
 //! throughput, then evaluate perplexity on the held-out sets.
 //!
-//! Run: `cargo run --release --example pretrain_e2e -- [steps] [base|wa] [model]`
-//! Defaults to 40 steps of the `wa` (W8 per-channel + A8 per-token) recipe
-//! on the `t4` study model. `micro` is seconds-fast; `gpt2s` (~100M params)
-//! is minutes-per-step on the single-threaded native kernels and is the
-//! target of the `pjrt` feature build.
+//! Run: `cargo run --release --example pretrain_e2e -- [steps] [recipe] [model]`
+//! Defaults to 40 steps of the `w8a8` (W8 per-channel + A8 per-token)
+//! recipe on the `t4` study model; any recipe string works, e.g.
+//! `w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc`. `micro` is seconds-fast;
+//! `gpt2s` (~100M params) is minutes-per-step on the single-threaded
+//! native kernels and is the target of the `pjrt` feature build.
 
 use std::time::Instant;
 
-use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
-use qpretrain::eval::{perplexity_suite, EvalQuant};
+use qpretrain::config::{QuantRecipe, TrainHp};
+use qpretrain::eval::perplexity_suite;
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
 use qpretrain::util::repo_root;
@@ -19,7 +20,8 @@ use qpretrain::util::repo_root;
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
-    let structure = args.get(2).cloned().unwrap_or_else(|| "wa".to_string());
+    let recipe_str = args.get(2).cloned().unwrap_or_else(|| "w8a8".to_string());
+    let recipe = QuantRecipe::parse(&recipe_str)?;
     let model_name = args.get(3).cloned().unwrap_or_else(|| "t4".to_string());
 
     let rt = Runtime::open_default()?;
@@ -36,21 +38,9 @@ fn main() -> anyhow::Result<()> {
         model.seq
     );
 
-    let bits = if structure == "base" {
-        BitWidths::none()
-    } else {
-        BitWidths {
-            weights: 8,
-            acts: 8,
-            ..BitWidths::none()
-        }
-    };
     let mut cfg = TrainCfg::new(
         &model_name,
-        QuantRunCfg {
-            structure: structure.clone(),
-            bits,
-        },
+        recipe,
         TrainHp {
             steps,
             lr_max: 6e-4, // the paper's GPT-2 learning rate
@@ -64,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     );
     let out = repo_root()
         .join("runs/e2e")
-        .join(format!("{model_name}_{structure}_s{steps}"));
+        .join(format!("{model_name}_{}_s{steps}", cfg.quant.label()));
     cfg.out_dir = Some(out.clone());
     cfg.save_ckpt = true;
 
@@ -94,11 +84,7 @@ fn main() -> anyhow::Result<()> {
         r.diverged
     );
 
-    let q = EvalQuant {
-        qmax_w: bits.qmax_scalars()[0],
-        qmax_a: bits.qmax_scalars()[1],
-    };
-    let ppl = perplexity_suite(&rt, cfg.eval_structure(), &model, &r.final_state.params, 2, q)?;
+    let ppl = perplexity_suite(&rt, &cfg.eval_recipe(), &model, &r.final_state.params, 2)?;
     println!("\nheld-out perplexity:");
     for (k, v) in &ppl {
         println!("  {k}: {v:.2}");

@@ -7,8 +7,8 @@
 //!
 //! Run: `cargo run --release --example ptq_vs_qat -- [steps]`
 
-use qpretrain::config::{BitWidths, Granularity, QuantRunCfg, TrainHp};
-use qpretrain::eval::{perplexity_suite, EvalQuant};
+use qpretrain::config::{Granularity, QuantRecipe, TrainHp};
+use qpretrain::eval::perplexity_suite;
 use qpretrain::ptq::ptq_weights_ppl;
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
@@ -26,43 +26,22 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("== training fp32 baseline ({steps} steps) ==");
-    let base_cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp.clone());
+    let base_cfg = TrainCfg::new("micro", QuantRecipe::none(), hp.clone());
     let base = train(&rt, &base_cfg)?;
 
     println!("== training W4 per-channel QAT ==");
-    let qat_cfg = TrainCfg::new(
-        "micro",
-        QuantRunCfg {
-            structure: "w_pc".into(),
-            bits: BitWidths {
-                weights: 4,
-                ..BitWidths::none()
-            },
-        },
-        hp.clone(),
-    );
+    let qat_cfg = TrainCfg::new("micro", QuantRecipe::parse("w4_pc")?, hp.clone());
     let qat = train(&rt, &qat_cfg)?;
 
     let key = "synthwiki103";
-    let fp = perplexity_suite(
-        &rt,
-        "base",
-        &model,
-        &base.final_state.params,
-        6,
-        EvalQuant::none(),
-    )?;
+    let fp = perplexity_suite(&rt, &QuantRecipe::none(), &model, &base.final_state.params, 6)?;
 
     let qat_ppl = perplexity_suite(
         &rt,
-        "w_pc",
+        &qat_cfg.eval_recipe(),
         &model,
         &qat.final_state.params,
         6,
-        EvalQuant {
-            qmax_w: 7.0,
-            qmax_a: 1.0,
-        },
     )?;
 
     let ptq4 = ptq_weights_ppl(&rt, &model, &base.final_state, 4, Granularity::PerChannel, 6)?;

@@ -1,13 +1,15 @@
-//! The paper's §4.5 recipe in action: train a small model under
-//! (a) fp32 baseline, (b) W8A8 (recommended), (c) W8A8G8 (not recommended),
-//! and compare validation loss + downstream accuracy — reproducing the
-//! Fig. 13 conclusion that W+A quantization tracks the baseline while adding
-//! gradient quantization costs real performance. Runs on the native backend.
+//! The composable recipe API in action: every configuration below is one
+//! recipe string. The first three reproduce the Fig. 13 conclusion (W+A
+//! quantization tracks the baseline, adding gradient quantization costs
+//! real performance); the last is the paper's *full combined* recipe —
+//! weights, activations, gradients and both Adam moments quantized at once
+//! — which the old closed structure vocabulary could not even express.
+//! Runs on the native backend.
 //!
 //! Run: `cargo run --release --example quant_recipe -- [steps]`
 
-use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
-use qpretrain::eval::{fewshot_suite, EvalQuant};
+use qpretrain::config::{QuantRecipe, TrainHp};
+use qpretrain::eval::fewshot_suite;
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
 
@@ -20,58 +22,28 @@ fn main() -> anyhow::Result<()> {
     let model = rt.model("micro")?.clone();
 
     let configs = [
-        ("baseline", "base", BitWidths::none()),
-        (
-            "W8A8 (recipe)",
-            "wa",
-            BitWidths {
-                weights: 8,
-                acts: 8,
-                ..BitWidths::none()
-            },
-        ),
-        (
-            "W8A8G8",
-            "wag",
-            BitWidths {
-                weights: 8,
-                acts: 8,
-                grads: 8,
-                ..BitWidths::none()
-            },
-        ),
+        ("baseline", "base"),
+        ("W8A8 (recipe)", "w8a8"),
+        ("W8A8G8", "w8a8g8"),
+        ("full combined", "w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc"),
     ];
 
-    println!("| config | final val loss | few-shot avg |");
-    println!("|---|---|---|");
-    for (name, structure, bits) in configs {
+    println!("| config | recipe | final val loss | few-shot avg |");
+    println!("|---|---|---|---|");
+    for (name, recipe) in configs {
         let cfg = TrainCfg::new(
             "micro",
-            QuantRunCfg {
-                structure: structure.into(),
-                bits,
-            },
+            QuantRecipe::parse(recipe)?,
             TrainHp {
                 steps,
                 ..TrainHp::default()
             },
         );
         let r = train(&rt, &cfg)?;
-        let q = EvalQuant {
-            qmax_w: bits.qmax_scalars()[0],
-            qmax_a: bits.qmax_scalars()[1],
-        };
-        let fs = fewshot_suite(
-            &rt,
-            cfg.eval_structure(),
-            &model,
-            &r.final_state.params,
-            16,
-            2,
-            q,
-        )?;
+        let fs = fewshot_suite(&rt, &cfg.eval_recipe(), &model, &r.final_state.params, 16, 2)?;
         println!(
-            "| {name} | {:.4} | {:.1}% |",
+            "| {name} | {} | {:.4} | {:.1}% |",
+            cfg.quant,
             r.final_val_loss(),
             100.0 * fs.average
         );

@@ -6,7 +6,7 @@
 //! No artifacts, Python, or PJRT needed. (With `--features pjrt` and
 //! `make artifacts`, the same code executes AOT HLO instead.)
 
-use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
+use qpretrain::config::{QuantRecipe, TrainHp};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
 
@@ -20,14 +20,9 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = TrainCfg::new(
         "micro",
-        QuantRunCfg {
-            structure: "wa".into(), // W8 per-channel + A8 per-token (paper §4.5)
-            bits: BitWidths {
-                weights: 8,
-                acts: 8,
-                ..BitWidths::none()
-            },
-        },
+        // W8 per-channel + A8 per-token (paper §4.5); "w8a8" is the short
+        // label for "w8_pc+a8_ptok"
+        QuantRecipe::parse("w8a8")?,
         TrainHp {
             steps: 60,
             eval_every: 20,

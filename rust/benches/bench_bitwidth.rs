@@ -4,7 +4,7 @@
 //! the paper's 4-vs-8-bit story.
 
 use qpretrain::backend::kernels;
-use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
+use qpretrain::config::{QuantRecipe, TrainHp};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
 
@@ -20,16 +20,14 @@ fn main() {
     println!("bits  final_loss  diverged");
     let mut sweep_secs = 0.0f64;
     for bits in [0u32, 2, 3, 4, 5, 6, 8] {
-        let structure = if bits == 0 { "base" } else { "w_pc" };
+        let recipe = if bits == 0 {
+            "base".to_string()
+        } else {
+            format!("w{bits}_pc")
+        };
         let cfg = TrainCfg::new(
             "micro",
-            QuantRunCfg {
-                structure: structure.into(),
-                bits: BitWidths {
-                    weights: bits,
-                    ..BitWidths::none()
-                },
-            },
+            QuantRecipe::parse(&recipe).unwrap(),
             TrainHp {
                 steps,
                 eval_every: 0,
@@ -55,7 +53,7 @@ fn main() {
     let timed_run = |threads: usize| {
         let cfg = TrainCfg::new(
             "micro",
-            QuantRunCfg::baseline(),
+            QuantRecipe::none(),
             TrainHp {
                 steps,
                 eval_every: 0,

@@ -9,7 +9,7 @@
 //! parallel kernel is asserted bit-identical to its serial reference.
 
 use qpretrain::backend::{kernels, math};
-use qpretrain::config::{Granularity, Scheme};
+use qpretrain::config::{Granularity, TensorPolicy};
 use qpretrain::quant::qdq_copy;
 use qpretrain::util::bench::{bench, bench_throughput, section};
 use qpretrain::util::json::{self, Value};
@@ -156,17 +156,17 @@ fn main() {
         ("qdq_ptok_asym", Granularity::PerToken, true),
     ] {
         let scheme = if asym {
-            Scheme::asym(8, gran)
+            TensorPolicy::asym(8, gran)
         } else {
-            Scheme::new(8, gran)
+            TensorPolicy::new(8, gran)
         };
         bench_throughput(name, (m * n) as u64, || qdq_copy(&x, m, n, scheme));
     }
 
     section("fused qdq-matmul vs plain matmul (the paper's W8A8 GEMM)");
     bench("qmatmul (a per-token + w per-channel + gemm)", || {
-        let xq = qdq_copy(&x, m, n, Scheme::new(8, Granularity::PerToken));
-        let wq = qdq_copy(&w, n, k, Scheme::new(8, Granularity::PerChannel));
+        let xq = qdq_copy(&x, m, n, TensorPolicy::new(8, Granularity::PerToken));
+        let wq = qdq_copy(&w, n, k, TensorPolicy::new(8, Granularity::PerChannel));
         kernels::matmul(&xq, &wq, m, n, k)
     });
     bench("matmul_plain", || kernels::matmul(&x, &w, m, n, k));

@@ -2,7 +2,7 @@
 //! (all block linear weights) at GPT-2-small scale — the Table 10 substrate
 //! must be interactive.
 
-use qpretrain::config::{Granularity, Scheme};
+use qpretrain::config::{Granularity, TensorPolicy};
 use qpretrain::quant::{qdq, PackedTensor};
 use qpretrain::util::bench::{bench_throughput, section};
 use qpretrain::util::rng::Rng;
@@ -24,7 +24,7 @@ fn main() {
     section("full-checkpoint fake-quant PTQ (85M linear params)");
     for gran in [Granularity::PerTensor, Granularity::PerChannel] {
         for bits in [4, 8] {
-            let scheme = Scheme::new(bits, gran);
+            let scheme = TensorPolicy::new(bits, gran);
             bench_throughput(
                 &format!("ptq/{}/b{bits}", gran.as_str()),
                 total,
@@ -47,7 +47,7 @@ fn main() {
             .iter()
             .zip(&tensors)
             .map(|((r, c), t)| {
-                PackedTensor::quantize(t, *r, *c, Scheme::new(4, Granularity::PerChannel))
+                PackedTensor::quantize(t, *r, *c, TensorPolicy::new(4, Granularity::PerChannel))
                     .storage_bytes()
             })
             .sum::<usize>()

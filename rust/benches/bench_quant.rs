@@ -3,7 +3,7 @@
 //! (Feeds the §3.3 efficiency discussion: PTQ of a full checkpoint must be
 //! fast enough to be interactive.)
 
-use qpretrain::config::{Granularity, Scheme};
+use qpretrain::config::{Granularity, TensorPolicy};
 use qpretrain::quant::{qdq_copy, PackedTensor};
 use qpretrain::util::bench::{bench_throughput, section};
 use qpretrain::util::rng::Rng;
@@ -21,7 +21,7 @@ fn main() {
         Granularity::PerChannel,
     ] {
         for bits in [4, 8] {
-            let scheme = Scheme::new(bits, gran);
+            let scheme = TensorPolicy::new(bits, gran);
             bench_throughput(
                 &format!("qdq/{}/b{}", gran.as_str(), bits),
                 n,
@@ -30,12 +30,12 @@ fn main() {
         }
     }
     bench_throughput("qdq/per_token_asym/b4", n, || {
-        qdq_copy(&data, rows, cols, Scheme::asym(4, Granularity::PerToken))
+        qdq_copy(&data, rows, cols, TensorPolicy::asym(4, Granularity::PerToken))
     });
 
     section("packed int storage (quantize + dequantize)");
     for bits in [4, 8] {
-        let scheme = Scheme::new(bits, Granularity::PerChannel);
+        let scheme = TensorPolicy::new(bits, Granularity::PerChannel);
         bench_throughput(&format!("pack/b{bits}"), n, || {
             PackedTensor::quantize(&data, rows, cols, scheme)
         });

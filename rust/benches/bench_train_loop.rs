@@ -1,5 +1,5 @@
 //! L3 end-to-end train-step benches (feeds §Perf): steps/s and tokens/s
-//! for the native backend across quantization structures, serial vs
+//! for the native backend across quantization recipes, serial vs
 //! parallel kernels, plus a breakdown of where the per-step wall time goes
 //! (forward+backward+Adam vs data generation).
 //!
@@ -9,7 +9,7 @@
 use std::time::Instant;
 
 use qpretrain::backend::kernels;
-use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
+use qpretrain::config::{QuantRecipe, TrainHp};
 use qpretrain::data::{BatchIter, CorpusCfg};
 use qpretrain::model::init_state;
 use qpretrain::runtime::Runtime;
@@ -20,17 +20,13 @@ use qpretrain::util::json::{self, Value};
 fn steps_per_sec(
     rt: &Runtime,
     model: &str,
-    structure: &str,
-    bits: BitWidths,
+    recipe: &str,
     steps: usize,
     threads: usize, // 0 = auto; train_from applies it per run
 ) -> f64 {
     let cfg = TrainCfg::new(
         model,
-        QuantRunCfg {
-            structure: structure.into(),
-            bits,
-        },
+        QuantRecipe::parse(recipe).unwrap(),
         TrainHp {
             steps,
             eval_every: 0,
@@ -48,20 +44,20 @@ fn main() {
     let threads = kernels::max_threads();
     println!("backend: {} ({threads} kernel threads)", rt.backend_name());
     let mut results = Vec::new();
-    let mut record = |model: &str, structure: &str, nthreads: usize, sps: f64, toks: f64| {
+    let mut record = |model: &str, recipe: &str, nthreads: usize, sps: f64, toks: f64| {
         results.push(json::obj(vec![
             ("model", json::s(model)),
-            ("structure", json::s(structure)),
+            ("recipe", json::s(recipe)),
             ("threads", json::num(nthreads as f64)),
             ("steps_per_sec", json::num(sps)),
             ("tokens_per_sec", json::num(sps * toks)),
         ]));
     };
 
-    section("serial vs parallel kernels (baseline structure)");
+    section("serial vs parallel kernels (baseline recipe)");
     for (model, steps, toks) in [("micro", 10usize, 512.0f64), ("t4", 2, 2048.0)] {
-        let serial = steps_per_sec(&rt, model, "base", BitWidths::none(), steps, 1);
-        let parallel = steps_per_sec(&rt, model, "base", BitWidths::none(), steps, 0);
+        let serial = steps_per_sec(&rt, model, "base", steps, 1);
+        let parallel = steps_per_sec(&rt, model, "base", steps, 0);
         record(model, "base", 1, serial, toks);
         record(model, "base", threads, parallel, toks);
         println!(
@@ -70,16 +66,18 @@ fn main() {
         );
     }
 
-    section("micro train step throughput by structure (batch 4 x seq 128)");
-    for (name, structure, bits) in [
-        ("w8_pc", "w_pc", BitWidths { weights: 8, ..BitWidths::none() }),
-        ("w8a8", "wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
-        ("w8a8g8", "wag", BitWidths { weights: 8, acts: 8, grads: 8, ..BitWidths::none() }),
-        ("m1_8_pc", "m1_pc", BitWidths { m1: 8, ..BitWidths::none() }),
+    section("micro train step throughput by recipe (batch 4 x seq 128)");
+    for recipe in [
+        "w8_pc",
+        "w8a8",
+        "w8a8g8",
+        "m1_8_pc",
+        // the paper's full combined recipe, inexpressible pre-redesign
+        "w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc",
     ] {
-        let sps = steps_per_sec(&rt, "micro", structure, bits, 10, 0);
-        record("micro", structure, threads, sps, 512.0);
-        println!("{name:<16} {sps:>7.2} steps/s   ({:.0} tokens/s)", sps * 512.0);
+        let sps = steps_per_sec(&rt, "micro", recipe, 10, 0);
+        record("micro", recipe, threads, sps, 512.0);
+        println!("{recipe:<40} {sps:>7.2} steps/s   ({:.0} tokens/s)", sps * 512.0);
     }
 
     section("per-step cost breakdown (micro baseline)");
@@ -96,13 +94,13 @@ fn main() {
     let data_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
 
     // full step (forward + backward + AdamW)
-    let qmax = [1.0f32; 5];
+    let base = QuantRecipe::none();
     let mut step_ms = 0.0;
     let n = 10;
     for i in 0..n {
         let b = corpus.next_batch();
         let t0 = Instant::now();
-        rt.train_step(&model, "base", &qmax, &mut state, &b.x, &b.y, 1e-3, i as f32 + 1.0)
+        rt.train_step(&model, &base, &mut state, &b.x, &b.y, 1e-3, i as f32 + 1.0)
             .unwrap();
         step_ms += t0.elapsed().as_secs_f64() * 1e3 / n as f64;
     }

@@ -5,9 +5,8 @@
 
 use anyhow::Result;
 
-use crate::config::Scheme;
+use crate::config::{QuantRecipe, TensorPolicy};
 use crate::data::corpus::{BatchIter, CorpusCfg};
-use crate::eval::EvalQuant;
 use crate::model::HostState;
 use crate::quant;
 use crate::runtime::{ModelInfo, Runtime};
@@ -63,15 +62,14 @@ fn perturbed(state: &HostState, dirs: &[(&Vec<Vec<f32>>, f32)]) -> Vec<Vec<f32>>
 
 fn loss_of_params(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     params_host: &[Vec<f32>],
     n_batches: usize,
-    q: EvalQuant,
 ) -> Result<f64> {
     crate::eval::corpus_nll(
         rt,
-        eval_structure,
+        recipe,
         model,
         params_host,
         &CorpusCfg {
@@ -79,7 +77,6 @@ fn loss_of_params(
             ..CorpusCfg::train_default(model.vocab)
         },
         n_batches,
-        q,
     )
 }
 
@@ -96,15 +93,14 @@ pub struct SharpnessCurve {
 
 pub fn m_sharpness(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     state: &HostState,
     radii: &[f64],
     n_dirs: usize,
     n_batches: usize,
-    q: EvalQuant,
 ) -> Result<SharpnessCurve> {
-    let base = loss_of_params(rt, eval_structure, model, &state.params, n_batches, q)?;
+    let base = loss_of_params(rt, recipe, model, &state.params, n_batches)?;
     let dirs: Vec<Vec<Vec<f32>>> = (0..n_dirs)
         .map(|i| filter_normalized_direction(state, model, 0xD1B0 + i as u64))
         .collect();
@@ -113,7 +109,7 @@ pub fn m_sharpness(
         let mut worst = f64::NEG_INFINITY;
         for d in &dirs {
             let p = perturbed(state, &[(d, rho as f32)]);
-            let l = loss_of_params(rt, eval_structure, model, &p, n_batches, q)?;
+            let l = loss_of_params(rt, recipe, model, &p, n_batches)?;
             worst = worst.max(l - base);
         }
         sharp.push(worst);
@@ -137,13 +133,12 @@ pub struct LossSurface {
 
 pub fn loss_surface(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     state: &HostState,
     extent: f64,
     grid: usize,
     n_batches: usize,
-    q: EvalQuant,
 ) -> Result<LossSurface> {
     let d1 = filter_normalized_direction(state, model, 0xFACE);
     let d2 = filter_normalized_direction(state, model, 0xBEEF);
@@ -155,7 +150,7 @@ pub fn loss_surface(
         let mut row = Vec::with_capacity(grid);
         for &b in &coords {
             let p = perturbed(state, &[(&d1, a as f32), (&d2, b as f32)]);
-            row.push(loss_of_params(rt, eval_structure, model, &p, n_batches, q)?);
+            row.push(loss_of_params(rt, recipe, model, &p, n_batches)?);
         }
         loss.push(row);
     }
@@ -258,7 +253,7 @@ pub fn gradient_stats(
     rt: &Runtime,
     model: &ModelInfo,
     params: &[Vec<f32>],
-    schemes: &[(String, Scheme)],
+    schemes: &[(String, TensorPolicy)],
 ) -> Result<GradStats> {
     let mut it = BatchIter::new(
         CorpusCfg {
@@ -283,8 +278,8 @@ pub fn gradient_stats(
     let rows = model.d_model;
     let cols = 3 * model.d_model;
     let mut quant_rel_err = Vec::new();
-    for (name, scheme) in schemes {
-        let q = quant::qdq_copy(&dqkv, rows, cols, *scheme);
+    for (name, policy) in schemes {
+        let q = quant::qdq_copy(&dqkv, rows, cols, *policy);
         let num: f64 = dqkv
             .iter()
             .zip(&q)
@@ -313,7 +308,7 @@ pub struct ZeroBinReport {
     pub v_hist: Histogram,
 }
 
-pub fn m2_zero_bin(state: &HostState, model: &ModelInfo, scheme: Scheme) -> ZeroBinReport {
+pub fn m2_zero_bin(state: &HostState, model: &ModelInfo, policy: TensorPolicy) -> ZeroBinReport {
     let mut per_tensor = Vec::new();
     let mut v_hist = Histogram::new(-16.0, 0.0, 64);
     for (info, v) in model.params.iter().zip(&state.v) {
@@ -324,7 +319,7 @@ pub fn m2_zero_bin(state: &HostState, model: &ModelInfo, scheme: Scheme) -> Zero
         let mut flushed = 0.0;
         for layer in 0..l {
             let slice = &v[layer * rows * cols..(layer + 1) * rows * cols];
-            flushed += quant::zero_bin_fraction(slice, rows, cols, scheme);
+            flushed += quant::zero_bin_fraction(slice, rows, cols, policy);
             for &x in slice {
                 if x > 0.0 {
                     v_hist.add((x as f64).log10());

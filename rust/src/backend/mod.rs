@@ -19,10 +19,12 @@
 //! reference in [`math`] at every thread count (`--threads` /
 //! `RAYON_NUM_THREADS`).
 //!
-//! A *structure* names which components are fake-quantized and at which
-//! granularity (e.g. `"w_pc"`, `"a_ptok_asym"`, `"wag"`); bit-widths arrive
-//! separately as runtime qmax scalars, mirroring the artifact convention
-//! that one structure serves every bit-width.
+//! Both backends take a [`QuantRecipe`](crate::config::QuantRecipe): which
+//! components are fake-quantized, at which granularity/symmetry, and at
+//! which bit-width. The native backend honors any recipe; the PJRT backend
+//! maps the recipe's placement back to a legacy artifact structure name
+//! (bit-widths travel as runtime qmax scalars there) and rejects recipes
+//! the artifact vocabulary cannot express.
 
 pub mod kernels;
 pub mod math;
@@ -30,104 +32,11 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::config::Granularity;
+use crate::config::QuantRecipe;
 use crate::model::HostState;
 use crate::runtime::ModelInfo;
-
-/// How one tensor class is quantized (granularity is static per structure;
-/// the bit-width is a runtime qmax scalar).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct QSpec {
-    pub granularity: Granularity,
-    pub asymmetric: bool,
-}
-
-impl QSpec {
-    pub fn sym(granularity: Granularity) -> QSpec {
-        QSpec {
-            granularity,
-            asymmetric: false,
-        }
-    }
-
-    pub fn asym(granularity: Granularity) -> QSpec {
-        QSpec {
-            granularity,
-            asymmetric: true,
-        }
-    }
-}
-
-/// Which model components a structure fake-quantizes — the rust mirror of
-/// `python/compile/quantizer.QuantConfig` and of `aot.TRAIN_STRUCTURES`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct QuantStructure {
-    pub weights: Option<QSpec>,
-    pub acts: Option<QSpec>,
-    pub grads: Option<QSpec>,
-    /// Fig. 10 variant: quantize the activation-gradient (dx) path too.
-    pub quantize_act_grads: bool,
-    pub m1: Option<QSpec>,
-    pub m2: Option<QSpec>,
-}
-
-impl QuantStructure {
-    /// Parse a structure name (the artifact-key vocabulary).
-    pub fn parse(name: &str) -> Result<QuantStructure> {
-        use Granularity::*;
-        let mut s = QuantStructure::default();
-        match name {
-            "base" => {}
-            "w_pt" => s.weights = Some(QSpec::sym(PerTensor)),
-            // the pallas-lowered artifact computes the same numbers; natively
-            // they are one and the same code path
-            "w_pc" | "w_pc_pallas" => s.weights = Some(QSpec::sym(PerChannel)),
-            "a_pt" => s.acts = Some(QSpec::sym(PerTensor)),
-            "a_ptok" => s.acts = Some(QSpec::sym(PerToken)),
-            "a_ptok_asym" => s.acts = Some(QSpec::asym(PerToken)),
-            "a_pc" => s.acts = Some(QSpec::sym(PerChannel)),
-            "g_pt" => s.grads = Some(QSpec::sym(PerTensor)),
-            "g_ptok" => s.grads = Some(QSpec::sym(PerToken)),
-            "g_ptok_actgrad" => {
-                s.grads = Some(QSpec::sym(PerToken));
-                s.quantize_act_grads = true;
-            }
-            "m1_pt" => s.m1 = Some(QSpec::sym(PerTensor)),
-            "m1_pc" => s.m1 = Some(QSpec::sym(PerChannel)),
-            "m2_pt" => s.m2 = Some(QSpec::sym(PerTensor)),
-            "m2_pc" => s.m2 = Some(QSpec::sym(PerChannel)),
-            "wa" => {
-                s.weights = Some(QSpec::sym(PerChannel));
-                s.acts = Some(QSpec::sym(PerToken));
-            }
-            "wag" => {
-                s.weights = Some(QSpec::sym(PerChannel));
-                s.acts = Some(QSpec::sym(PerToken));
-                s.grads = Some(QSpec::sym(PerToken));
-            }
-            other => bail!("unknown quant structure {other:?}"),
-        }
-        Ok(s)
-    }
-
-    /// Forward-pass components only (what an eval structure keeps).
-    pub fn forward_only(&self) -> QuantStructure {
-        QuantStructure {
-            weights: self.weights,
-            acts: self.acts,
-            ..QuantStructure::default()
-        }
-    }
-
-    /// Every structure name `parse` accepts.
-    pub const ALL: [&'static str; 17] = [
-        "base", "w_pt", "w_pc", "w_pc_pallas", "a_pt", "a_ptok", "a_ptok_asym",
-        "a_pc", "g_pt", "g_ptok", "g_ptok_actgrad", "m1_pt", "m1_pc", "m2_pt",
-        "m2_pc", "wa", "wag",
-    ];
-}
 
 /// Result of one training step.
 #[derive(Debug, Clone, Copy)]
@@ -171,10 +80,6 @@ pub struct GradProbe {
 }
 
 /// Executor abstraction: run one train / eval / probe step over host state.
-///
-/// `qmax` carries the five runtime quantization ranges in artifact input
-/// order (w, a, g, m1, m2); components a structure does not quantize ignore
-/// theirs (fed 1.0 by convention).
 pub trait Backend {
     fn name(&self) -> &'static str;
 
@@ -184,8 +89,7 @@ pub trait Backend {
     fn train_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax: &[f32; 5],
+        recipe: &QuantRecipe,
         state: &mut HostState,
         x: &[i32],
         y: &[i32],
@@ -193,13 +97,13 @@ pub trait Backend {
         t: f32,
     ) -> Result<StepOut>;
 
-    /// Forward-only scoring under the structure's forward quantization.
+    /// Forward-only scoring under the recipe's forward-pass components
+    /// (implementations apply [`QuantRecipe::forward_only`] themselves, so
+    /// passing a full training recipe is fine).
     fn eval_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax_w: f32,
-        qmax_a: f32,
+        recipe: &QuantRecipe,
         params: &[Vec<f32>],
         x: &[i32],
         y: &[i32],
@@ -217,41 +121,4 @@ pub trait Backend {
         x: &[i32],
         y: &[i32],
     ) -> Result<GradProbe>;
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn parses_every_structure() {
-        for s in QuantStructure::ALL {
-            QuantStructure::parse(s).unwrap();
-        }
-        assert!(QuantStructure::parse("bogus").is_err());
-    }
-
-    #[test]
-    fn pallas_alias_matches_w_pc() {
-        assert_eq!(
-            QuantStructure::parse("w_pc_pallas").unwrap(),
-            QuantStructure::parse("w_pc").unwrap()
-        );
-    }
-
-    #[test]
-    fn forward_only_drops_backward_components() {
-        let s = QuantStructure::parse("wag").unwrap();
-        let f = s.forward_only();
-        assert!(f.weights.is_some() && f.acts.is_some());
-        assert!(f.grads.is_none() && !f.quantize_act_grads);
-        assert_eq!(f, QuantStructure::parse("wa").unwrap());
-    }
-
-    #[test]
-    fn actgrad_variant_sets_flag() {
-        let s = QuantStructure::parse("g_ptok_actgrad").unwrap();
-        assert!(s.quantize_act_grads);
-        assert_eq!(s.grads, Some(QSpec::sym(Granularity::PerToken)));
-    }
 }

@@ -33,7 +33,8 @@ use crate::backend::kernels::{
     par_chunks2_mut, par_chunks3_mut, par_chunks_mut,
 };
 use crate::backend::math;
-use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, QSpec, QuantStructure, StepOut};
+use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, StepOut};
+use crate::config::{QuantRecipe, TensorPolicy};
 use crate::model::HostState;
 use crate::quant;
 use crate::runtime::{ModelInfo, ParamInfo};
@@ -144,23 +145,23 @@ pub fn native_models() -> HashMap<String, ModelInfo> {
 // fake-quant helpers (Fig. 1 injection points)
 // ---------------------------------------------------------------------------
 
-fn qdq_matrix(x: &[f32], rows: usize, cols: usize, spec: QSpec, qmax: f32) -> Vec<f32> {
+fn qdq_matrix(x: &[f32], rows: usize, cols: usize, policy: TensorPolicy) -> Vec<f32> {
     let mut out = x.to_vec();
-    quant::qdq_qmax(&mut out, rows, cols, spec.granularity, spec.asymmetric, qmax);
+    quant::qdq(&mut out, rows, cols, policy);
     out
 }
 
 /// Activation operand of a linear that is also cached raw: `None` when the
-/// structure leaves activations unquantized (avoids duplicating the buffer).
-fn qdq_act_opt(x: &[f32], rows: usize, cols: usize, spec: Option<QSpec>, qmax: f32) -> Option<Vec<f32>> {
-    spec.map(|s| qdq_matrix(x, rows, cols, s, qmax))
+/// recipe leaves activations unquantized (avoids duplicating the buffer).
+fn qdq_act_opt(x: &[f32], rows: usize, cols: usize, policy: Option<TensorPolicy>) -> Option<Vec<f32>> {
+    policy.map(|p| qdq_matrix(x, rows, cols, p))
 }
 
 /// Fake-quantize an activation in place, consuming it (for activations not
 /// otherwise cached: no copy in the unquantized case).
-fn qdq_act_owned(mut x: Vec<f32>, rows: usize, cols: usize, spec: Option<QSpec>, qmax: f32) -> Vec<f32> {
-    if let Some(s) = spec {
-        quant::qdq_qmax(&mut x, rows, cols, s.granularity, s.asymmetric, qmax);
+fn qdq_act_owned(mut x: Vec<f32>, rows: usize, cols: usize, policy: Option<TensorPolicy>) -> Vec<f32> {
+    if let Some(p) = policy {
+        quant::qdq(&mut x, rows, cols, p);
     }
     x
 }
@@ -170,11 +171,10 @@ fn qdq_weight<'a>(
     w: &'a [f32],
     rows: usize,
     cols: usize,
-    spec: Option<QSpec>,
-    qmax: f32,
+    policy: Option<TensorPolicy>,
 ) -> Cow<'a, [f32]> {
-    match spec {
-        Some(s) => Cow::Owned(qdq_matrix(w, rows, cols, s, qmax)),
+    match policy {
+        Some(p) => Cow::Owned(qdq_matrix(w, rows, cols, p)),
         None => Cow::Borrowed(w),
     }
 }
@@ -184,11 +184,10 @@ fn qdq_grad<'a>(
     g: &'a [f32],
     rows: usize,
     cols: usize,
-    spec: Option<QSpec>,
-    qmax: f32,
+    policy: Option<TensorPolicy>,
 ) -> Cow<'a, [f32]> {
-    match spec {
-        Some(s) => Cow::Owned(qdq_matrix(g, rows, cols, s, qmax)),
+    match policy {
+        Some(p) => Cow::Owned(qdq_matrix(g, rows, cols, p)),
         None => Cow::Borrowed(g),
     }
 }
@@ -304,14 +303,7 @@ fn layer_slice(p: &[f32], l: usize, per_layer: usize) -> &[f32] {
     &p[l * per_layer..(l + 1) * per_layer]
 }
 
-fn forward(
-    model: &ModelInfo,
-    params: &[Vec<f32>],
-    x: &[i32],
-    qs: &QuantStructure,
-    qmax_w: f32,
-    qmax_a: f32,
-) -> Forward {
+fn forward(model: &ModelInfo, params: &[Vec<f32>], x: &[i32], qs: &QuantRecipe) -> Forward {
     let dm = Dims::of(model);
     let (d, f, m, t, h, hd) = (dm.d, dm.f, dm.m, dm.t, dm.h, dm.hd);
 
@@ -349,8 +341,8 @@ fn forward(
 
         // --- attention ---
         let (a, xhat1, rstd1) = layer_norm_fwd(&hbuf, ln1_w, ln1_b, m, d);
-        let xq = qdq_act_owned(a, m, d, qs.acts, qmax_a);
-        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights, qmax_w);
+        let xq = qdq_act_owned(a, m, d, qs.acts);
+        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights);
         let mut qkv = matmul(&xq, &wq, m, d, 3 * d);
         bias_add(&mut qkv, qkv_b, m, 3 * d);
 
@@ -408,21 +400,21 @@ fn forward(
             }
         });
 
-        let cq = qdq_act_opt(&ctx, m, d, qs.acts, qmax_a);
-        let wpq = qdq_weight(proj_w, d, d, qs.weights, qmax_w);
+        let cq = qdq_act_opt(&ctx, m, d, qs.acts);
+        let wpq = qdq_weight(proj_w, d, d, qs.weights);
         let mut h2 = hbuf.clone();
         matmul_acc(&mut h2, cq.as_deref().unwrap_or(&ctx), &wpq, m, d, d);
         bias_add(&mut h2, proj_b, m, d);
 
         // --- MLP ---
         let (mm, xhat2, rstd2) = layer_norm_fwd(&h2, ln2_w, ln2_b, m, d);
-        let mq = qdq_act_owned(mm, m, d, qs.acts, qmax_a);
-        let w1q = qdq_weight(fc1_w, d, f, qs.weights, qmax_w);
+        let mq = qdq_act_owned(mm, m, d, qs.acts);
+        let w1q = qdq_weight(fc1_w, d, f, qs.weights);
         let mut u = matmul(&mq, &w1q, m, d, f);
         bias_add(&mut u, fc1_b, m, f);
         let g = gelu(&u);
-        let gq = qdq_act_opt(&g, m, f, qs.acts, qmax_a);
-        let w2q = qdq_weight(fc2_w, f, d, qs.weights, qmax_w);
+        let gq = qdq_act_opt(&g, m, f, qs.acts);
+        let w2q = qdq_weight(fc2_w, f, d, qs.weights);
         let mut hout = h2.clone();
         matmul_acc(&mut hout, gq.as_deref().unwrap_or(&g), &w2q, m, f, d);
         bias_add(&mut hout, fc2_b, m, d);
@@ -476,14 +468,11 @@ fn loss_and_grads(
     params: &[Vec<f32>],
     x: &[i32],
     y: &[i32],
-    qs: &QuantStructure,
-    qmax_w: f32,
-    qmax_a: f32,
-    qmax_g: f32,
+    qs: &QuantRecipe,
 ) -> BackOut {
     let dm = Dims::of(model);
     let (d, f, m, t, h, hd, v) = (dm.d, dm.f, dm.m, dm.t, dm.h, dm.hd, dm.v);
-    let fwd = forward(model, params, x, qs, qmax_w, qmax_a);
+    let fwd = forward(model, params, x, qs);
     let (per_pos, probs) = nll_rows(&fwd.logits, y, m, v);
     let loss = per_pos.iter().map(|&l| l as f64).sum::<f64>() / m as f64;
 
@@ -532,14 +521,14 @@ fn loss_and_grads(
         let proj_w = layer_slice(&params[PROJ_W], l, d * d);
         let fc1_w = layer_slice(&params[FC1_W], l, d * f);
         let fc2_w = layer_slice(&params[FC2_W], l, f * d);
-        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights, qmax_w);
-        let wpq = qdq_weight(proj_w, d, d, qs.weights, qmax_w);
-        let w1q = qdq_weight(fc1_w, d, f, qs.weights, qmax_w);
-        let w2q = qdq_weight(fc2_w, f, d, qs.weights, qmax_w);
+        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights);
+        let wpq = qdq_weight(proj_w, d, d, qs.weights);
+        let w1q = qdq_weight(fc1_w, d, f, qs.weights);
+        let w2q = qdq_weight(fc2_w, f, d, qs.weights);
 
         // ---- MLP: h_out = h2 + (qdq(g) @ qdq(fc2_w) + fc2_b) ----
         let dz = &dh;
-        let gq2 = qdq_grad(dz, m, d, qs.grads, qmax_g);
+        let gq2 = qdq_grad(dz, m, d, qs.grads);
         matmul_tn_acc(
             &mut grads[FC2_W][l * f * d..(l + 1) * f * d],
             c.gq.as_deref().unwrap_or(&c.g),
@@ -553,7 +542,7 @@ fn loss_and_grads(
         // dG = gx2 @ W2qᵀ with W2q (f x d): transpose-B kernel
         let dg = matmul_nt(gx2, &w2q, m, d, f);
         let du = gelu_bwd(&c.u, &dg);
-        let gq1 = qdq_grad(&du, m, f, qs.grads, qmax_g);
+        let gq1 = qdq_grad(&du, m, f, qs.grads);
         matmul_tn_acc(
             &mut grads[FC1_W][l * d * f..(l + 1) * d * f],
             &c.mq,
@@ -585,7 +574,7 @@ fn loss_and_grads(
 
         // ---- attention: h2 = h_in + (qdq(ctx) @ qdq(proj_w) + proj_b) ----
         let do_ = &dh2;
-        let gqp = qdq_grad(do_, m, d, qs.grads, qmax_g);
+        let gqp = qdq_grad(do_, m, d, qs.grads);
         matmul_tn_acc(
             &mut grads[PROJ_W][l * d * d..(l + 1) * d * d],
             c.cq.as_deref().unwrap_or(&c.ctx),
@@ -683,7 +672,7 @@ fn loss_and_grads(
             }
         });
 
-        let gqq = qdq_grad(&dqkv, m, 3 * d, qs.grads, qmax_g);
+        let gqq = qdq_grad(&dqkv, m, 3 * d, qs.grads);
         matmul_tn_acc(
             &mut grads[QKV_W][l * d * 3 * d..(l + 1) * d * 3 * d],
             &c.xq,
@@ -745,8 +734,8 @@ fn loss_and_grads(
 /// Fake-quantize an optimizer moment for storage: only >=2D base tensors
 /// (linear weights + embeddings); stacked per-layer tensors are quantized
 /// layer by layer so "per_tensor" means per layer-tensor.
-fn moment_qdq(info: &ParamInfo, data: &mut [f32], spec: Option<QSpec>, qmax: f32) {
-    let Some(s) = spec else { return };
+fn moment_qdq(info: &ParamInfo, data: &mut [f32], policy: Option<TensorPolicy>) {
+    let Some(p) = policy else { return };
     let base_ndim = info.shape.len() - usize::from(info.stacked);
     if base_ndim < 2 {
         return;
@@ -755,11 +744,11 @@ fn moment_qdq(info: &ParamInfo, data: &mut [f32], spec: Option<QSpec>, qmax: f32
         let (rows, cols) = (info.shape[1], info.shape[2]);
         for l in 0..info.shape[0] {
             let slice = &mut data[l * rows * cols..(l + 1) * rows * cols];
-            quant::qdq_qmax(slice, rows, cols, s.granularity, s.asymmetric, qmax);
+            quant::qdq(slice, rows, cols, p);
         }
     } else {
         let (rows, cols) = (info.shape[0], info.shape[1]);
-        quant::qdq_qmax(data, rows, cols, s.granularity, s.asymmetric, qmax);
+        quant::qdq(data, rows, cols, p);
     }
 }
 
@@ -773,9 +762,7 @@ fn adamw_update(
     grads: &[Vec<f32>],
     lr: f32,
     t: f32,
-    qs: &QuantStructure,
-    qmax_m1: f32,
-    qmax_m2: f32,
+    qs: &QuantRecipe,
 ) -> f64 {
     let gnorm: f64 = grads
         .iter()
@@ -800,8 +787,8 @@ fn adamw_update(
             }
         });
         // store fake-quantized; the update below reads the stored form
-        moment_qdq(info, m, qs.m1, qmax_m1);
-        moment_qdq(info, v, qs.m2, qmax_m2);
+        moment_qdq(info, m, qs.m1);
+        moment_qdq(info, v, qs.m2);
         let mr: &[f32] = m;
         let vr: &[f32] = v;
         let decay = info.decay;
@@ -837,19 +824,17 @@ impl Backend for NativeBackend {
     fn train_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax: &[f32; 5],
+        recipe: &QuantRecipe,
         state: &mut HostState,
         x: &[i32],
         y: &[i32],
         lr: f32,
         t: f32,
     ) -> Result<StepOut> {
-        let qs = QuantStructure::parse(structure)?;
         check_inputs(model, &state.params, x)?;
         check_tokens(model, y)?;
-        let out = loss_and_grads(model, &state.params, x, y, &qs, qmax[0], qmax[1], qmax[2]);
-        let gnorm = adamw_update(model, state, &out.grads, lr, t, &qs, qmax[3], qmax[4]);
+        let out = loss_and_grads(model, &state.params, x, y, recipe);
+        let gnorm = adamw_update(model, state, &out.grads, lr, t, recipe);
         Ok(StepOut {
             loss: out.loss,
             gnorm,
@@ -859,19 +844,17 @@ impl Backend for NativeBackend {
     fn eval_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax_w: f32,
-        qmax_a: f32,
+        recipe: &QuantRecipe,
         params: &[Vec<f32>],
         x: &[i32],
         y: &[i32],
         mask: &[f32],
     ) -> Result<EvalOut> {
-        let qs = QuantStructure::parse(structure)?.forward_only();
+        let qs = recipe.forward_only();
         check_inputs(model, params, x)?;
         check_tokens(model, y)?;
         let dm = Dims::of(model);
-        let fwd = forward(model, params, x, &qs, qmax_w, qmax_a);
+        let fwd = forward(model, params, x, &qs);
         let per_pos = nll_only(&fwd.logits, y, dm.m, dm.v);
         let mut num = 0.0f64;
         let mut den = 0.0f64;
@@ -887,8 +870,7 @@ impl Backend for NativeBackend {
 
     fn act_probe(&self, model: &ModelInfo, params: &[Vec<f32>], x: &[i32]) -> Result<ActProbe> {
         check_inputs(model, params, x)?;
-        let qs = QuantStructure::default();
-        let fwd = forward(model, params, x, &qs, 1.0, 1.0);
+        let fwd = forward(model, params, x, &QuantRecipe::none());
         let probe = fwd
             .caches
             .last()
@@ -908,9 +890,8 @@ impl Backend for NativeBackend {
     ) -> Result<GradProbe> {
         check_inputs(model, params, x)?;
         check_tokens(model, y)?;
-        let qs = QuantStructure::default();
         let dm = Dims::of(model);
-        let out = loss_and_grads(model, params, x, y, &qs, 1.0, 1.0, 1.0);
+        let out = loss_and_grads(model, params, x, y, &QuantRecipe::none());
         let per_layer = dm.d * 3 * dm.d;
         Ok(GradProbe {
             d_qkv_w0: out.grads[QKV_W][..per_layer].to_vec(),
@@ -969,7 +950,7 @@ mod tests {
         let be = NativeBackend;
         let mask = vec![1.0f32; x.len()];
         let out = be
-            .eval_step(&model, "base", 1.0, 1.0, &state.params, &x, &y, &mask)
+            .eval_step(&model, &QuantRecipe::none(), &state.params, &x, &y, &mask)
             .unwrap();
         let uniform = (model.vocab as f64).ln();
         assert!(
@@ -988,7 +969,7 @@ mod tests {
         let (x, y) = batch(&model, 2);
         let be = NativeBackend;
         let out = be
-            .train_step(&model, "base", &[1.0; 5], &mut state, &x, &y, 0.0, 1.0)
+            .train_step(&model, &QuantRecipe::none(), &mut state, &x, &y, 0.0, 1.0)
             .unwrap();
         assert!(out.loss.is_finite() && out.gnorm > 0.0);
         assert_eq!(state.params, before);
@@ -1001,13 +982,14 @@ mod tests {
         let model = tiny();
         let (x, y) = batch(&model, 7);
         let be = NativeBackend;
+        let recipe = QuantRecipe::parse("w8a8").unwrap();
         let mut s1 = init_state(&model, 11);
         let mut s2 = init_state(&model, 11);
         let o1 = be
-            .train_step(&model, "wa", &[127.0, 127.0, 1.0, 1.0, 1.0], &mut s1, &x, &y, 1e-3, 1.0)
+            .train_step(&model, &recipe, &mut s1, &x, &y, 1e-3, 1.0)
             .unwrap();
         let o2 = be
-            .train_step(&model, "wa", &[127.0, 127.0, 1.0, 1.0, 1.0], &mut s2, &x, &y, 1e-3, 1.0)
+            .train_step(&model, &recipe, &mut s2, &x, &y, 1e-3, 1.0)
             .unwrap();
         assert_eq!(o1.loss, o2.loss);
         assert_eq!(s1.params, s2.params);
@@ -1036,14 +1018,14 @@ mod tests {
         let bad_x = vec![0i32; 3];
         let mask = vec![1.0f32; 3];
         assert!(be
-            .eval_step(&model, "base", 1.0, 1.0, &state.params, &bad_x, &bad_x, &mask)
+            .eval_step(&model, &QuantRecipe::none(), &state.params, &bad_x, &bad_x, &mask)
             .is_err());
         let (x, y) = batch(&model, 1);
         let mut oot = x.clone();
         oot[0] = model.vocab as i32; // out of range
         let mask = vec![1.0f32; x.len()];
         assert!(be
-            .eval_step(&model, "base", 1.0, 1.0, &state.params, &oot, &y, &mask)
+            .eval_step(&model, &QuantRecipe::none(), &state.params, &oot, &y, &mask)
             .is_err());
     }
 }

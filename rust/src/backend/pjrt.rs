@@ -21,6 +21,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, StepOut};
+use crate::config::QuantRecipe;
 use crate::model::HostState;
 use crate::runtime::{ArtifactInfo, Manifest, ModelInfo};
 
@@ -170,14 +171,22 @@ impl Backend for PjrtBackend {
     fn train_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax: &[f32; 5],
+        recipe: &QuantRecipe,
         state: &mut HostState,
         x: &[i32],
         y: &[i32],
         lr: f32,
         t: f32,
     ) -> Result<StepOut> {
+        // artifact convention: the lowered structure encodes the placement,
+        // bit-widths travel as runtime qmax scalars
+        let structure = recipe.legacy_structure().ok_or_else(|| {
+            anyhow!(
+                "pjrt backend has no AOT artifact for recipe {recipe}; \
+                 the artifact vocabulary covers only the legacy structures"
+            )
+        })?;
+        let qmax = recipe.qmax_scalars();
         let np = model.params.len();
         let exe = self.exec(&format!("{}/train/{}", model.name, structure))?;
         let lits = state_literals(model, state)?;
@@ -216,14 +225,20 @@ impl Backend for PjrtBackend {
     fn eval_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax_w: f32,
-        qmax_a: f32,
+        recipe: &QuantRecipe,
         params: &[Vec<f32>],
         x: &[i32],
         y: &[i32],
         mask: &[f32],
     ) -> Result<EvalOut> {
+        let fwd = recipe.forward_only();
+        let structure = fwd.legacy_structure().ok_or_else(|| {
+            anyhow!(
+                "pjrt backend has no AOT eval artifact for recipe {fwd}; \
+                 the artifact vocabulary covers only the legacy structures"
+            )
+        })?;
+        let [qmax_w, qmax_a, ..] = fwd.qmax_scalars();
         let exe = self.exec(&self.eval_artifact_name(&model.name, structure))?;
         let lits = param_literals(model, params)?;
         let xl = lit_i32(x, &[model.batch, model.seq])?;

@@ -1,6 +1,10 @@
-//! Configuration types shared across the coordinator: quantization scheme
-//! naming (mirroring `python/compile/quantizer.py`), training hyperparameters
-//! and run configuration, plus a small key=value config-file loader.
+//! Configuration types shared across the coordinator: the typed, composable
+//! quantization recipe ([`QuantRecipe`] / [`TensorPolicy`], with a canonical
+//! string codec that still accepts every artifact-era structure name as an
+//! alias), training hyperparameters, and a small key=value config-file
+//! loader.
+
+use std::fmt;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -21,6 +25,15 @@ impl Granularity {
         }
     }
 
+    /// Short token used inside recipe components (`w4_pc`, `a8_ptok`).
+    pub fn short(&self) -> &'static str {
+        match self {
+            Granularity::PerTensor => "pt",
+            Granularity::PerToken => "ptok",
+            Granularity::PerChannel => "pc",
+        }
+    }
+
     pub fn parse(s: &str) -> Result<Granularity> {
         Ok(match s {
             "per_tensor" | "pt" => Granularity::PerTensor,
@@ -31,123 +44,478 @@ impl Granularity {
     }
 }
 
-/// A quantization scheme for one tensor class.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Scheme {
+// ---------------------------------------------------------------------------
+// per-tensor-class policy
+// ---------------------------------------------------------------------------
+
+/// How one tensor class is quantized: bit-width, grouping granularity and
+/// symmetry. This is the single quantization parameter type — the PTQ
+/// harness, the analyses, `quant::qdq` and the recipe all speak it.
+///
+/// `bits == 0` means "placement only": the component is on the quantization
+/// path but its range input is the fed-1.0 convention (`qmax() == 1.0`),
+/// mirroring the artifact inputs for components a run does not quantize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorPolicy {
     pub bits: u32,
     pub granularity: Granularity,
     pub asymmetric: bool,
 }
 
-impl Scheme {
-    pub fn new(bits: u32, granularity: Granularity) -> Scheme {
-        Scheme {
+impl TensorPolicy {
+    pub fn new(bits: u32, granularity: Granularity) -> TensorPolicy {
+        TensorPolicy {
             bits,
             granularity,
             asymmetric: false,
         }
     }
 
-    pub fn asym(bits: u32, granularity: Granularity) -> Scheme {
-        Scheme {
+    pub fn asym(bits: u32, granularity: Granularity) -> TensorPolicy {
+        TensorPolicy {
             bits,
             granularity,
             asymmetric: true,
         }
     }
 
-    /// qmax = 2^(b-1) - 1, the runtime scalar fed to the artifacts.
+    /// The runtime quantization range: `qmax = 2^(b-1) - 1`, or 1.0 for the
+    /// fed-1.0 convention when `bits == 0`. This is the one qmax
+    /// implementation in the crate.
     pub fn qmax(&self) -> f32 {
-        ((1u64 << (self.bits - 1)) - 1) as f32
-    }
-}
-
-/// Bits per quantized component for a training run. A bit-width of 0 means
-/// "component not quantized" (its qmax input is fed 1.0 and the artifact
-/// structure does not quantize it anyway).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct BitWidths {
-    pub weights: u32,
-    pub acts: u32,
-    pub grads: u32,
-    pub m1: u32,
-    pub m2: u32,
-}
-
-impl BitWidths {
-    pub fn none() -> BitWidths {
-        BitWidths {
-            weights: 0,
-            acts: 0,
-            grads: 0,
-            m1: 0,
-            m2: 0,
-        }
-    }
-
-    pub fn qmax(bits: u32) -> f32 {
-        if bits == 0 {
+        if self.bits == 0 {
             1.0
         } else {
-            ((1u64 << (bits - 1)) - 1) as f32
+            ((1u64 << (self.bits - 1)) - 1) as f32
         }
-    }
-
-    /// The five qmax scalars in train-artifact input order (w, a, g, m1, m2).
-    pub fn qmax_scalars(&self) -> [f32; 5] {
-        [
-            Self::qmax(self.weights),
-            Self::qmax(self.acts),
-            Self::qmax(self.grads),
-            Self::qmax(self.m1),
-            Self::qmax(self.m2),
-        ]
     }
 }
 
-/// A full experiment configuration: which artifact structure + bit-widths.
-/// `structure` is the artifact key, e.g. "w_pc" or "a_ptok_asym"; together
-/// with `bits` it identifies a paper configuration such as "4-bit per-channel
-/// weight quantization".
-#[derive(Debug, Clone, PartialEq)]
-pub struct QuantRunCfg {
-    pub structure: String,
-    pub bits: BitWidths,
+/// qmax of an optional policy (1.0 for components not on the quant path).
+fn opt_qmax(p: Option<TensorPolicy>) -> f32 {
+    p.map(|p| p.qmax()).unwrap_or(1.0)
 }
 
-impl QuantRunCfg {
-    pub fn baseline() -> QuantRunCfg {
-        QuantRunCfg {
-            structure: "base".into(),
-            bits: BitWidths::none(),
+// ---------------------------------------------------------------------------
+// recipe: the full experiment quantization configuration
+// ---------------------------------------------------------------------------
+
+/// A composable quantization recipe: one optional [`TensorPolicy`] per
+/// tensor class (weights / activations / gradients / Adam m1 / Adam m2),
+/// plus the Fig. 10 flag that extends gradient quantization to the
+/// activation-gradient (dx) path.
+///
+/// The canonical string form joins per-class components with `+`:
+///
+/// ```text
+/// w4_pc+a8_ptok_asym+g8_ptok+m1_8_pt+m2_8_pc
+/// ```
+///
+/// Component grammar: class prefix (`w`/`a`/`g`/`m1`/`m2`), optional
+/// bit-width, granularity (`pt`/`ptok`/`pc`), optional `_asym`, and for
+/// gradients an optional `_actgrad`. Omitting the bit-width (`w_pc`) keeps
+/// `bits == 0` (placement only, fed-1.0 range) — which is exactly how the
+/// 17 legacy artifact structure names parse, so every old name remains a
+/// valid alias. `parse(display(r)) == r` for any recipe (the act-grad flag
+/// is only meaningful with a gradient component present).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QuantRecipe {
+    pub weights: Option<TensorPolicy>,
+    pub acts: Option<TensorPolicy>,
+    pub grads: Option<TensorPolicy>,
+    /// Fig. 10 variant: quantize the activation-gradient (dx) path too.
+    pub quantize_act_grads: bool,
+    pub m1: Option<TensorPolicy>,
+    pub m2: Option<TensorPolicy>,
+}
+
+impl QuantRecipe {
+    /// The unquantized baseline (every component absent).
+    pub fn none() -> QuantRecipe {
+        QuantRecipe::default()
+    }
+
+    pub fn is_base(&self) -> bool {
+        self.weights.is_none()
+            && self.acts.is_none()
+            && self.grads.is_none()
+            && self.m1.is_none()
+            && self.m2.is_none()
+    }
+
+    /// Every artifact-era structure name, each of which `parse` accepts as
+    /// an alias of the equivalent recipe.
+    pub const LEGACY_ALIASES: [&'static str; 17] = [
+        "base",
+        "w_pt",
+        "w_pc",
+        "w_pc_pallas",
+        "a_pt",
+        "a_ptok",
+        "a_ptok_asym",
+        "a_pc",
+        "g_pt",
+        "g_ptok",
+        "g_ptok_actgrad",
+        "m1_pt",
+        "m1_pc",
+        "m2_pt",
+        "m2_pc",
+        "wa",
+        "wag",
+    ];
+
+    /// Parse a recipe string: the canonical `+`-joined grammar, a legacy
+    /// structure name, or a `w8a8` / `w8a8g8` short label.
+    pub fn parse(s: &str) -> Result<QuantRecipe> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty quantization recipe");
+        }
+        if s == "base" || s == "baseline" {
+            return Ok(QuantRecipe::none());
+        }
+        let recipe = if let Some(r) = Self::parse_multi_alias(s) {
+            r
+        } else if let Some(r) = Self::parse_short_label(s) {
+            r
+        } else {
+            let mut out = QuantRecipe::none();
+            for comp in s.split('+') {
+                Self::parse_component(&mut out, comp.trim(), s)?;
+            }
+            out
+        };
+        recipe.validate()?;
+        Ok(recipe)
+    }
+
+    /// Multi-component / irregular legacy aliases. Single-class legacy names
+    /// (`w_pc`, `a_ptok_asym`, `m1_pt`, …) already parse through the
+    /// component grammar with `bits == 0`.
+    fn parse_multi_alias(s: &str) -> Option<QuantRecipe> {
+        use Granularity::*;
+        match s {
+            // the pallas-lowered artifact computes the same numbers; natively
+            // they are one and the same code path
+            "w_pc_pallas" => Some(QuantRecipe {
+                weights: Some(TensorPolicy::new(0, PerChannel)),
+                ..QuantRecipe::none()
+            }),
+            "wa" => Some(QuantRecipe {
+                weights: Some(TensorPolicy::new(0, PerChannel)),
+                acts: Some(TensorPolicy::new(0, PerToken)),
+                ..QuantRecipe::none()
+            }),
+            "wag" => Some(QuantRecipe {
+                weights: Some(TensorPolicy::new(0, PerChannel)),
+                acts: Some(TensorPolicy::new(0, PerToken)),
+                grads: Some(TensorPolicy::new(0, PerToken)),
+                ..QuantRecipe::none()
+            }),
+            _ => None,
         }
     }
 
-    /// Human-readable label like "w4_pc" / "baseline".
-    pub fn label(&self) -> String {
-        if self.structure == "base" {
-            return "baseline".into();
+    /// `w8a8` / `w4a8g8` short labels (the run-dir names of combined runs).
+    fn parse_short_label(s: &str) -> Option<QuantRecipe> {
+        use Granularity::*;
+        fn digits(s: &str) -> Option<(u32, &str)> {
+            let end = s
+                .find(|c: char| !c.is_ascii_digit())
+                .unwrap_or(s.len());
+            if end == 0 {
+                return None;
+            }
+            Some((s[..end].parse().ok()?, &s[end..]))
         }
-        let b = &self.bits;
-        let mut s = self.structure.clone();
-        for (tag, bits) in [
-            ("w_", b.weights),
-            ("a_", b.acts),
-            ("g_", b.grads),
-            ("m1_", b.m1),
-            ("m2_", b.m2),
-        ] {
-            if s.starts_with(tag) && bits > 0 {
-                s = format!("{}{}{}", tag.trim_end_matches('_'), bits, &s[tag.len() - 1..]);
-                break;
+        let r = s.strip_prefix('w')?;
+        let (wb, r) = digits(r)?;
+        let r = r.strip_prefix('a')?;
+        let (ab, r) = digits(r)?;
+        let (gb, r) = match r.strip_prefix('g') {
+            Some(r2) => {
+                let (g, r2) = digits(r2)?;
+                (Some(g), r2)
+            }
+            None => (None, r),
+        };
+        if !r.is_empty() {
+            return None;
+        }
+        Some(QuantRecipe {
+            weights: Some(TensorPolicy::new(wb, PerChannel)),
+            acts: Some(TensorPolicy::new(ab, PerToken)),
+            grads: gb.map(|b| TensorPolicy::new(b, PerToken)),
+            ..QuantRecipe::none()
+        })
+    }
+
+    fn parse_component(out: &mut QuantRecipe, comp: &str, full: &str) -> Result<()> {
+        if comp.is_empty() {
+            bail!("empty component in recipe {full:?}");
+        }
+        // longest class prefix first: m1/m2 before the single letters
+        let (class, rest) = if let Some(r) = comp.strip_prefix("m1") {
+            ("m1", r)
+        } else if let Some(r) = comp.strip_prefix("m2") {
+            ("m2", r)
+        } else if let Some(r) = comp.strip_prefix('w') {
+            ("w", r)
+        } else if let Some(r) = comp.strip_prefix('a') {
+            ("a", r)
+        } else if let Some(r) = comp.strip_prefix('g') {
+            ("g", r)
+        } else {
+            bail!(
+                "unknown component {comp:?} in recipe {full:?} \
+                 (expected w/a/g/m1/m2 prefix)"
+            );
+        };
+
+        // optional separator, optional bit-width, then `_<granularity>`
+        let mut rest = rest.strip_prefix('_').unwrap_or(rest);
+        let digits_end = rest
+            .find(|c: char| !c.is_ascii_digit())
+            .unwrap_or(rest.len());
+        let bits: u32 = if digits_end == 0 {
+            0
+        } else {
+            rest[..digits_end]
+                .parse()
+                .map_err(|_| anyhow!("bad bit-width in component {comp:?}"))?
+        };
+        rest = &rest[digits_end..];
+        if digits_end > 0 {
+            rest = rest.strip_prefix('_').ok_or_else(|| {
+                anyhow!("expected `_<granularity>` after bit-width in {comp:?}")
+            })?;
+        }
+
+        let mut tokens = rest.split('_');
+        let gran_tok = tokens.next().unwrap_or("");
+        let granularity = Granularity::parse(gran_tok)
+            .map_err(|_| anyhow!("unknown granularity {gran_tok:?} in component {comp:?}"))?;
+        let mut asymmetric = false;
+        let mut actgrad = false;
+        for tok in tokens {
+            match tok {
+                "asym" => asymmetric = true,
+                "actgrad" if class == "g" => actgrad = true,
+                other => bail!("unknown modifier {other:?} in component {comp:?}"),
             }
         }
-        if self.structure == "wa" {
-            s = format!("w{}a{}", b.weights, b.acts);
-        } else if self.structure == "wag" {
-            s = format!("w{}a{}g{}", b.weights, b.acts, b.grads);
+
+        let policy = TensorPolicy {
+            bits,
+            granularity,
+            asymmetric,
+        };
+        let slot = match class {
+            "w" => &mut out.weights,
+            "a" => &mut out.acts,
+            "g" => &mut out.grads,
+            "m1" => &mut out.m1,
+            _ => &mut out.m2,
+        };
+        if slot.is_some() {
+            bail!("duplicate {class:?} component in recipe {full:?}");
         }
-        s
+        *slot = Some(policy);
+        if actgrad {
+            out.quantize_act_grads = true;
+        }
+        Ok(())
+    }
+
+    /// Sanity limits on every present policy. 1-bit symmetric would give
+    /// `qmax == 0` (a divide-by-zero scale), and anything past 24 bits no
+    /// longer round-trips exactly through an f32 grid.
+    fn validate(&self) -> Result<()> {
+        for (class, p) in [
+            ("w", self.weights),
+            ("a", self.acts),
+            ("g", self.grads),
+            ("m1", self.m1),
+            ("m2", self.m2),
+        ] {
+            if let Some(p) = p {
+                if p.bits == 1 || p.bits > 24 {
+                    bail!(
+                        "component {class}: bit-width {} unsupported (use 0 or 2..=24)",
+                        p.bits
+                    );
+                }
+            }
+        }
+        if self.quantize_act_grads && self.grads.is_none() {
+            bail!("quantize_act_grads requires a gradient component");
+        }
+        Ok(())
+    }
+
+    /// Override bit-widths per class (CLI `--wbits`-style flags); a zero
+    /// leaves the component's bits unchanged, absent components ignore
+    /// their override (matching the old structure-decides-placement rule).
+    pub fn with_bits(mut self, w: u32, a: u32, g: u32, m1: u32, m2: u32) -> Result<QuantRecipe> {
+        fn set(slot: &mut Option<TensorPolicy>, bits: u32) {
+            if bits > 0 {
+                if let Some(p) = slot {
+                    p.bits = bits;
+                }
+            }
+        }
+        set(&mut self.weights, w);
+        set(&mut self.acts, a);
+        set(&mut self.grads, g);
+        set(&mut self.m1, m1);
+        set(&mut self.m2, m2);
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Forward-pass components only — the recipe an eval/scoring pass uses
+    /// (gradient and optimizer-state quantization do not appear in the
+    /// forward pass). This derivation replaces the old hardcoded
+    /// train-structure -> eval-structure table.
+    pub fn forward_only(&self) -> QuantRecipe {
+        QuantRecipe {
+            weights: self.weights,
+            acts: self.acts,
+            ..QuantRecipe::none()
+        }
+    }
+
+    /// The five runtime quantization ranges in artifact input order
+    /// (w, a, g, m1, m2); absent components get the fed-1.0 convention.
+    pub fn qmax_scalars(&self) -> [f32; 5] {
+        [
+            opt_qmax(self.weights),
+            opt_qmax(self.acts),
+            opt_qmax(self.grads),
+            opt_qmax(self.m1),
+            opt_qmax(self.m2),
+        ]
+    }
+
+    /// The recipe with every bit-width zeroed: which components are on the
+    /// quantization path and how, independent of bit-width (the artifact
+    /// convention: one lowered structure serves every bit-width).
+    pub fn placement(&self) -> QuantRecipe {
+        fn strip(p: Option<TensorPolicy>) -> Option<TensorPolicy> {
+            p.map(|p| TensorPolicy { bits: 0, ..p })
+        }
+        QuantRecipe {
+            weights: strip(self.weights),
+            acts: strip(self.acts),
+            grads: strip(self.grads),
+            quantize_act_grads: self.quantize_act_grads,
+            m1: strip(self.m1),
+            m2: strip(self.m2),
+        }
+    }
+
+    /// The legacy artifact structure name whose placement equals this
+    /// recipe's, if one exists — the PJRT backend's artifact key. `None`
+    /// for combinations the artifact vocabulary could never express.
+    pub fn legacy_structure(&self) -> Option<&'static str> {
+        let p = self.placement();
+        Self::LEGACY_ALIASES
+            .iter()
+            .copied()
+            .find(|name| {
+                QuantRecipe::parse(name)
+                    .map(|r| r.placement() == p)
+                    .unwrap_or(false)
+            })
+    }
+
+    /// Human-readable run label: `baseline` for the empty recipe, the
+    /// legacy `w8a8` / `w8a8g8` short forms for the combined W/A(/G)
+    /// placements (so existing run-dir names don't churn), the canonical
+    /// `Display` otherwise. Every label parses back via [`Self::parse`].
+    pub fn label(&self) -> String {
+        if self.is_base() {
+            return "baseline".into();
+        }
+        if let Some(short) = self.short_label() {
+            return short;
+        }
+        self.to_string()
+    }
+
+    fn short_label(&self) -> Option<String> {
+        use Granularity::*;
+        if self.m1.is_some() || self.m2.is_some() || self.quantize_act_grads {
+            return None;
+        }
+        let w = self.weights?;
+        let a = self.acts?;
+        if w.bits == 0 || a.bits == 0 {
+            return None;
+        }
+        if (w.granularity, w.asymmetric) != (PerChannel, false) {
+            return None;
+        }
+        if (a.granularity, a.asymmetric) != (PerToken, false) {
+            return None;
+        }
+        match self.grads {
+            None => Some(format!("w{}a{}", w.bits, a.bits)),
+            Some(g) if g.bits > 0 && (g.granularity, g.asymmetric) == (PerToken, false) => {
+                Some(format!("w{}a{}g{}", w.bits, a.bits, g.bits))
+            }
+            Some(_) => None,
+        }
+    }
+}
+
+fn write_component(
+    parts: &mut Vec<String>,
+    prefix: &str,
+    p: TensorPolicy,
+    actgrad: bool,
+) {
+    let mut s = String::from(prefix);
+    if p.bits > 0 {
+        if prefix.len() > 1 {
+            s.push('_'); // m1_8_pt, not the ambiguous m18_pt
+        }
+        s.push_str(&p.bits.to_string());
+    }
+    s.push('_');
+    s.push_str(p.granularity.short());
+    if p.asymmetric {
+        s.push_str("_asym");
+    }
+    if actgrad {
+        s.push_str("_actgrad");
+    }
+    parts.push(s);
+}
+
+impl fmt::Display for QuantRecipe {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_base() {
+            return write!(f, "base");
+        }
+        let mut parts = Vec::new();
+        if let Some(p) = self.weights {
+            write_component(&mut parts, "w", p, false);
+        }
+        if let Some(p) = self.acts {
+            write_component(&mut parts, "a", p, false);
+        }
+        if let Some(p) = self.grads {
+            write_component(&mut parts, "g", p, self.quantize_act_grads);
+        }
+        if let Some(p) = self.m1 {
+            write_component(&mut parts, "m1", p, false);
+        }
+        if let Some(p) = self.m2 {
+            write_component(&mut parts, "m2", p, false);
+        }
+        write!(f, "{}", parts.join("+"))
     }
 }
 
@@ -218,13 +586,15 @@ pub fn parse_kv(text: &str) -> Result<Vec<(String, String)>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use Granularity::*;
 
     #[test]
     fn qmax_values() {
-        assert_eq!(Scheme::new(8, Granularity::PerTensor).qmax(), 127.0);
-        assert_eq!(Scheme::new(4, Granularity::PerTensor).qmax(), 7.0);
-        assert_eq!(Scheme::new(2, Granularity::PerTensor).qmax(), 1.0);
-        assert_eq!(BitWidths::qmax(0), 1.0);
+        assert_eq!(TensorPolicy::new(8, PerTensor).qmax(), 127.0);
+        assert_eq!(TensorPolicy::new(4, PerTensor).qmax(), 7.0);
+        assert_eq!(TensorPolicy::new(2, PerTensor).qmax(), 1.0);
+        // fed-1.0 convention for placement-only policies
+        assert_eq!(TensorPolicy::new(0, PerChannel).qmax(), 1.0);
     }
 
     #[test]
@@ -250,24 +620,59 @@ mod tests {
 
     #[test]
     fn labels() {
-        let c = QuantRunCfg {
-            structure: "w_pc".into(),
-            bits: BitWidths {
-                weights: 4,
-                ..BitWidths::none()
-            },
+        let c = QuantRecipe {
+            weights: Some(TensorPolicy::new(4, PerChannel)),
+            ..QuantRecipe::none()
         };
         assert_eq!(c.label(), "w4_pc");
-        assert_eq!(QuantRunCfg::baseline().label(), "baseline");
-        let c = QuantRunCfg {
-            structure: "wa".into(),
-            bits: BitWidths {
-                weights: 8,
-                acts: 8,
-                ..BitWidths::none()
-            },
-        };
+        assert_eq!(QuantRecipe::none().label(), "baseline");
+        let c = QuantRecipe::parse("w8a8").unwrap();
         assert_eq!(c.label(), "w8a8");
+        let c = QuantRecipe::parse("w8a8g8").unwrap();
+        assert_eq!(c.label(), "w8a8g8");
+        // the old string-surgery bug: m1 labels were mangled to m18_pt
+        let c = QuantRecipe {
+            m1: Some(TensorPolicy::new(8, PerTensor)),
+            ..QuantRecipe::none()
+        };
+        assert_eq!(c.label(), "m1_8_pt");
+        // every label parses back
+        for label in ["w4_pc", "w8a8", "w8a8g8", "m1_8_pt", "baseline"] {
+            QuantRecipe::parse(label).unwrap();
+        }
+    }
+
+    #[test]
+    fn combined_recipe_roundtrip() {
+        let s = "w4_pc+a8_ptok_asym+g8_ptok+m1_8_pt+m2_8_pc";
+        let r = QuantRecipe::parse(s).unwrap();
+        assert_eq!(r.weights, Some(TensorPolicy::new(4, PerChannel)));
+        assert_eq!(r.acts, Some(TensorPolicy::asym(8, PerToken)));
+        assert_eq!(r.grads, Some(TensorPolicy::new(8, PerToken)));
+        assert_eq!(r.m1, Some(TensorPolicy::new(8, PerTensor)));
+        assert_eq!(r.m2, Some(TensorPolicy::new(8, PerChannel)));
+        assert!(!r.quantize_act_grads);
+        assert_eq!(r.to_string(), s);
+        assert_eq!(QuantRecipe::parse(&r.to_string()).unwrap(), r);
+        // the old closed vocabulary could never express this
+        assert_eq!(r.legacy_structure(), None);
+    }
+
+    #[test]
+    fn qmax_scalars_order() {
+        let r = QuantRecipe::parse("w4_pc+a8_ptok").unwrap();
+        assert_eq!(r.qmax_scalars(), [7.0, 127.0, 1.0, 1.0, 1.0]);
+        assert_eq!(QuantRecipe::none().qmax_scalars(), [1.0; 5]);
+    }
+
+    #[test]
+    fn with_bits_overrides_present_components() {
+        let r = QuantRecipe::parse("wa").unwrap().with_bits(8, 8, 8, 8, 8).unwrap();
+        assert_eq!(r, QuantRecipe::parse("w8a8").unwrap());
+        // absent components ignore their override
+        assert!(r.grads.is_none() && r.m1.is_none() && r.m2.is_none());
+        // bad bit-widths rejected
+        assert!(QuantRecipe::parse("wa").unwrap().with_bits(1, 0, 0, 0, 0).is_err());
     }
 
     #[test]
@@ -279,8 +684,9 @@ mod tests {
 
     #[test]
     fn granularity_roundtrip() {
-        for g in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
+        for g in [PerTensor, PerToken, PerChannel] {
             assert_eq!(Granularity::parse(g.as_str()).unwrap(), g);
+            assert_eq!(Granularity::parse(g.short()).unwrap(), g);
         }
         assert!(Granularity::parse("bogus").is_err());
     }

@@ -10,10 +10,10 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::config::{BitWidths, Granularity, QuantRunCfg, Scheme, TrainHp};
-use crate::eval::{fewshot_suite, perplexity_suite, EvalQuant};
+use crate::config::{Granularity, QuantRecipe, TensorPolicy, TrainHp};
+use crate::eval::{fewshot_suite, perplexity_suite};
 use crate::runtime::Runtime;
-use crate::train::{eval_structure_for, TrainCfg};
+use crate::train::TrainCfg;
 
 use super::{emit_report, ensure_runs, fmt_f, fmt_ppl, md_table, run_dir, RunSummary};
 
@@ -35,19 +35,18 @@ impl Ctx {
         }
     }
 
-    fn cfg(&self, structure: &str, bits: BitWidths) -> TrainCfg {
+    /// Build a t4 training config from a recipe string — the sweep tables
+    /// below are plain lists of paper-style recipes.
+    fn cfg(&self, recipe: &str) -> TrainCfg {
         TrainCfg::new(
             "t4",
-            QuantRunCfg {
-                structure: structure.to_string(),
-                bits,
-            },
+            QuantRecipe::parse(recipe).expect("static sweep recipe"),
             self.hp(),
         )
     }
 
     fn baseline_cfg(&self) -> TrainCfg {
-        self.cfg("base", BitWidths::none())
+        self.cfg("base")
     }
 }
 
@@ -97,61 +96,32 @@ pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
 // sweep definitions (paper §4.1-4.5)
 // ---------------------------------------------------------------------------
 
-fn wbits(b: u32) -> BitWidths {
-    BitWidths { weights: b, ..BitWidths::none() }
-}
-fn abits(b: u32) -> BitWidths {
-    BitWidths { acts: b, ..BitWidths::none() }
-}
-fn gbits(b: u32) -> BitWidths {
-    BitWidths { grads: b, ..BitWidths::none() }
-}
-fn m1bits(b: u32) -> BitWidths {
-    BitWidths { m1: b, ..BitWidths::none() }
-}
-fn m2bits(b: u32) -> BitWidths {
-    BitWidths { m2: b, ..BitWidths::none() }
-}
-
 fn weight_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
-    vec![
-        ctx.baseline_cfg(),
-        ctx.cfg("w_pt", wbits(4)),
-        ctx.cfg("w_pc", wbits(4)),
-        ctx.cfg("w_pt", wbits(8)),
-        ctx.cfg("w_pc", wbits(8)),
-    ]
+    ["base", "w4_pt", "w4_pc", "w8_pt", "w8_pc"]
+        .iter()
+        .map(|r| ctx.cfg(r))
+        .collect()
 }
 
 fn act_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
-    vec![
-        ctx.baseline_cfg(),
-        ctx.cfg("a_pt", abits(4)),
-        ctx.cfg("a_ptok", abits(4)),
-        ctx.cfg("a_ptok_asym", abits(4)),
-        ctx.cfg("a_pt", abits(8)),
-        ctx.cfg("a_ptok", abits(8)),
-    ]
+    ["base", "a4_pt", "a4_ptok", "a4_ptok_asym", "a8_pt", "a8_ptok"]
+        .iter()
+        .map(|r| ctx.cfg(r))
+        .collect()
 }
 
 fn grad_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
-    vec![
-        ctx.baseline_cfg(),
-        ctx.cfg("g_pt", gbits(4)),
-        ctx.cfg("g_ptok", gbits(4)),
-        ctx.cfg("g_pt", gbits(8)),
-        ctx.cfg("g_ptok", gbits(8)),
-    ]
+    ["base", "g4_pt", "g4_ptok", "g8_pt", "g8_ptok"]
+        .iter()
+        .map(|r| ctx.cfg(r))
+        .collect()
 }
 
 fn m1_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
-    vec![
-        ctx.baseline_cfg(),
-        ctx.cfg("m1_pt", m1bits(4)),
-        ctx.cfg("m1_pc", m1bits(4)),
-        ctx.cfg("m1_pt", m1bits(8)),
-        ctx.cfg("m1_pc", m1bits(8)),
-    ]
+    ["base", "m1_4_pt", "m1_4_pc", "m1_8_pt", "m1_8_pc"]
+        .iter()
+        .map(|r| ctx.cfg(r))
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -207,12 +177,8 @@ fn tab_eval(ctx: &Ctx, id: &str, title: &str, configs: &[TrainCfg]) -> Result<()
     let mut fs_rows = Vec::new();
     for (cfg, r) in configs.iter().zip(&runs) {
         let state = r.checkpoint(&ctx.rt)?;
-        let eval_structure = cfg.eval_structure();
-        let q = EvalQuant {
-            qmax_w: cfg.quant.bits.qmax_scalars()[0],
-            qmax_a: cfg.quant.bits.qmax_scalars()[1],
-        };
-        let ppl = perplexity_suite(&ctx.rt, eval_structure, &model, &state.params, ctx.eval_batches, q)?;
+        let eval_recipe = cfg.eval_recipe();
+        let ppl = perplexity_suite(&ctx.rt, &eval_recipe, &model, &state.params, ctx.eval_batches)?;
         ppl_rows.push(
             std::iter::once(r.label.clone())
                 .chain(
@@ -225,12 +191,11 @@ fn tab_eval(ctx: &Ctx, id: &str, title: &str, configs: &[TrainCfg]) -> Result<()
 
         let fs = fewshot_suite(
             &ctx.rt,
-            eval_structure,
+            &eval_recipe,
             &model,
             &state.params,
             ctx.fewshot_episodes,
             ctx.fewshot_seeds,
-            q,
         )?;
         let mut row = vec![r.label.clone()];
         for (_, mean, sd) in &fs.per_task {
@@ -336,9 +301,9 @@ fn fig5(ctx: &Ctx) -> Result<()> {
     // sharpness of baseline vs weight-quantized checkpoints
     let configs = vec![
         ctx.baseline_cfg(),
-        ctx.cfg("w_pt", wbits(4)),
-        ctx.cfg("w_pc", wbits(4)),
-        ctx.cfg("w_pt", wbits(8)),
+        ctx.cfg("w4_pt"),
+        ctx.cfg("w4_pc"),
+        ctx.cfg("w8_pt"),
     ];
     let runs = ensure_runs(&ctx.rt, &ctx.runs, &configs, ctx.jobs)?;
     let model = ctx.rt.manifest.model("t4")?.clone();
@@ -348,12 +313,8 @@ fn fig5(ctx: &Ctx) -> Result<()> {
     let mut curves = Vec::new();
     for (cfg, r) in configs.iter().zip(&runs) {
         let state = r.checkpoint(&ctx.rt)?;
-        let q = EvalQuant {
-            qmax_w: cfg.quant.bits.qmax_scalars()[0],
-            qmax_a: cfg.quant.bits.qmax_scalars()[1],
-        };
         let c = crate::analysis::m_sharpness(
-            &ctx.rt, cfg.eval_structure(), &model, &state, &radii, 4, 2, q,
+            &ctx.rt, &cfg.eval_recipe(), &model, &state, &radii, 4, 2,
         )?;
         let mut row = vec![r.label.clone(), fmt_f(c.base_loss, 4)];
         for s in &c.sharpness {
@@ -371,12 +332,8 @@ fn fig5(ctx: &Ctx) -> Result<()> {
     let mut surf_note = String::new();
     for (cfg, r) in configs.iter().zip(&runs).take(2) {
         let state = r.checkpoint(&ctx.rt)?;
-        let q = EvalQuant {
-            qmax_w: cfg.quant.bits.qmax_scalars()[0],
-            qmax_a: cfg.quant.bits.qmax_scalars()[1],
-        };
         let surf = crate::analysis::loss_surface(
-            &ctx.rt, cfg.eval_structure(), &model, &state, 0.5, 9, 1, q,
+            &ctx.rt, &cfg.eval_recipe(), &model, &state, 0.5, 9, 1,
         )?;
         let path = ctx.runs.join(format!("reports/fig5_surface_{}.csv", r.label));
         std::fs::create_dir_all(ctx.runs.join("reports"))?;
@@ -450,7 +407,7 @@ fn fig7(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig8(ctx: &Ctx) -> Result<()> {
-    let configs = vec![ctx.baseline_cfg(), ctx.cfg("a_pc", abits(4))];
+    let configs = vec![ctx.baseline_cfg(), ctx.cfg("a4_pc")];
     let runs = train_and_report(ctx, "fig8", "Fig 8: 4-bit per-channel activation quantization", &configs)?;
     // massive activation outliers in FC2 input at the end of training
     let model = ctx.rt.manifest.model("t4")?.clone();
@@ -475,10 +432,7 @@ fn fig9(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig10(ctx: &Ctx) -> Result<()> {
-    let configs = vec![
-        ctx.cfg("g_ptok", gbits(8)),
-        ctx.cfg("g_ptok_actgrad", gbits(8)),
-    ];
+    let configs = vec![ctx.cfg("g8_ptok"), ctx.cfg("g8_ptok_actgrad")];
     let runs = train_and_report(
         ctx,
         "fig10",
@@ -490,10 +444,10 @@ fn fig10(ctx: &Ctx) -> Result<()> {
     let model = ctx.rt.manifest.model("t4")?.clone();
     let state = base[0].checkpoint(&ctx.rt)?;
     let schemes = vec![
-        ("int8 per-token".to_string(), Scheme::new(8, Granularity::PerToken)),
-        ("int8 per-tensor".to_string(), Scheme::new(8, Granularity::PerTensor)),
-        ("int4 per-token".to_string(), Scheme::new(4, Granularity::PerToken)),
-        ("int4 per-tensor".to_string(), Scheme::new(4, Granularity::PerTensor)),
+        ("int8 per-token".to_string(), TensorPolicy::new(8, Granularity::PerToken)),
+        ("int8 per-tensor".to_string(), TensorPolicy::new(8, Granularity::PerTensor)),
+        ("int4 per-token".to_string(), TensorPolicy::new(4, Granularity::PerToken)),
+        ("int4 per-tensor".to_string(), TensorPolicy::new(4, Granularity::PerTensor)),
     ];
     let g = crate::analysis::gradient_stats(&ctx.rt, &model, &state.params, &schemes)?;
     std::fs::write(
@@ -523,17 +477,16 @@ fn fig11(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig12(ctx: &Ctx) -> Result<()> {
-    let configs = vec![
-        ctx.cfg("m2_pc", m2bits(8)),
-        ctx.cfg("m2_pt", m2bits(8)),
-    ];
+    let configs = vec![ctx.cfg("m2_8_pc"), ctx.cfg("m2_8_pt")];
     train_and_report(ctx, "fig12", "Fig 12: Adam second-moment quantization", &configs)?;
     // zero-bin analysis on healthy (baseline) second moments
     let base = ensure_runs(&ctx.rt, &ctx.runs, &[ctx.baseline_cfg()], ctx.jobs)?;
     let model = ctx.rt.manifest.model("t4")?.clone();
     let state = base[0].checkpoint(&ctx.rt)?;
-    let rep_pc = crate::analysis::m2_zero_bin(&state, &model, Scheme::new(8, Granularity::PerChannel));
-    let rep_pt = crate::analysis::m2_zero_bin(&state, &model, Scheme::new(8, Granularity::PerTensor));
+    let rep_pc =
+        crate::analysis::m2_zero_bin(&state, &model, TensorPolicy::new(8, Granularity::PerChannel));
+    let rep_pt =
+        crate::analysis::m2_zero_bin(&state, &model, TensorPolicy::new(8, Granularity::PerTensor));
     std::fs::write(ctx.runs.join("reports/fig12_v_hist.csv"), rep_pc.v_hist.to_csv())?;
     let mut rows = Vec::new();
     for ((name, pc), (_, pt)) in rep_pc.per_tensor.iter().zip(&rep_pt.per_tensor) {
@@ -552,11 +505,7 @@ fn fig12(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig13(ctx: &Ctx) -> Result<()> {
-    let configs = vec![
-        ctx.baseline_cfg(),
-        ctx.cfg("wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
-        ctx.cfg("wag", BitWidths { weights: 8, acts: 8, grads: 8, ..BitWidths::none() }),
-    ];
+    let configs = vec![ctx.baseline_cfg(), ctx.cfg("w8a8"), ctx.cfg("w8a8g8")];
     train_and_report(ctx, "fig13", "Fig 13: combined W/A/G 8-bit quantization", &configs)?;
     Ok(())
 }
@@ -571,8 +520,7 @@ fn tab1(ctx: &Ctx) -> Result<()> {
     for (cfg, r) in [short, long].iter().zip(&runs) {
         let state = r.checkpoint(&ctx.rt)?;
         let ppl = perplexity_suite(
-            &ctx.rt, cfg.eval_structure(), &model, &state.params, ctx.eval_batches,
-            EvalQuant::none(),
+            &ctx.rt, &cfg.eval_recipe(), &model, &state.params, ctx.eval_batches,
         )?;
         rows.push(
             std::iter::once(format!("{} steps", cfg.hp.steps))
@@ -648,7 +596,7 @@ fn tab11(ctx: &Ctx) -> Result<()> {
 fn abl_bits(ctx: &Ctx) -> Result<()> {
     let mut configs = vec![ctx.baseline_cfg()];
     for bits in [2u32, 3, 4, 6, 8] {
-        configs.push(ctx.cfg("w_pc", wbits(bits)));
+        configs.push(ctx.cfg(&format!("w{bits}_pc")));
     }
     let runs = ensure_runs(&ctx.rt, &ctx.runs, &configs, ctx.jobs)?;
     let rows: Vec<Vec<String>> = runs
@@ -672,12 +620,7 @@ fn abl_bits(ctx: &Ctx) -> Result<()> {
 
 /// Lookup the baseline run directory (for CLI subcommands that need a ckpt).
 pub fn baseline_dir(ctx: &Ctx) -> PathBuf {
-    run_dir(&ctx.runs, "t4", &QuantRunCfg::baseline(), &ctx.hp())
-}
-
-/// Eval structure name shared with train::eval_structure_for (re-export).
-pub fn eval_structure(s: &str) -> &'static str {
-    eval_structure_for(s)
+    run_dir(&ctx.runs, "t4", &QuantRecipe::none(), &ctx.hp())
 }
 
 /// Summaries of every cached run (for `qpretrain report`).
@@ -721,19 +664,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn sweeps_use_known_structures() {
-        // every sweep structure must exist in the AOT structure list
-        let known = [
-            "base", "w_pt", "w_pc", "a_pt", "a_ptok", "a_ptok_asym", "a_pc", "g_pt",
-            "g_ptok", "g_ptok_actgrad", "m1_pt", "m1_pc", "m2_pt", "m2_pc", "wa",
-            "wag", "w_pc_pallas",
+    fn sweep_recipes_parse_and_stay_artifact_compatible() {
+        // every sweep recipe must parse, and each one must still map to a
+        // legacy artifact structure so the pjrt backend can run the sweeps
+        let sweep_recipes = [
+            "base", "w4_pt", "w4_pc", "w8_pt", "w8_pc", "a4_pt", "a4_ptok",
+            "a4_ptok_asym", "a8_pt", "a8_ptok", "a4_pc", "g4_pt", "g4_ptok",
+            "g8_pt", "g8_ptok", "g8_ptok_actgrad", "m1_4_pt", "m1_4_pc",
+            "m1_8_pt", "m1_8_pc", "m2_8_pc", "m2_8_pt", "w8a8", "w8a8g8",
         ];
-        let ctx_structures = [
-            "base", "w_pt", "w_pc", "a_pt", "a_ptok", "a_ptok_asym", "g_pt", "g_ptok",
-            "g_ptok_actgrad", "m1_pt", "m1_pc", "m2_pt", "m2_pc", "wa", "wag", "a_pc",
-        ];
-        for s in ctx_structures {
-            assert!(known.contains(&s), "{s} not a known artifact structure");
+        for r in sweep_recipes {
+            let recipe = QuantRecipe::parse(r).unwrap();
+            assert!(
+                recipe.legacy_structure().is_some(),
+                "{r} has no artifact structure"
+            );
         }
     }
 

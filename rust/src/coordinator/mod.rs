@@ -16,14 +16,16 @@ use std::process::Command;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{QuantRunCfg, TrainHp};
+use crate::config::{QuantRecipe, TrainHp};
 use crate::model::{load_checkpoint, HostState};
 use crate::runtime::Runtime;
 use crate::train::{train, TrainCfg, TrainResult};
 use crate::util::json::{self, Value};
 
-/// Deterministic run directory for a training configuration.
-pub fn run_dir(runs: &Path, model: &str, quant: &QuantRunCfg, hp: &TrainHp) -> PathBuf {
+/// Deterministic run directory for a training configuration. The label is
+/// the recipe's canonical short form, so pre-redesign run dirs (baseline,
+/// w4_pc, w8a8, ...) keep their names.
+pub fn run_dir(runs: &Path, model: &str, quant: &QuantRecipe, hp: &TrainHp) -> PathBuf {
     // probe_every changes what the run leaves on disk (act_outliers.csv),
     // so probed runs get their own cache entry.
     let probe = if hp.probe_every > 0 {
@@ -45,6 +47,8 @@ pub fn run_dir(runs: &Path, model: &str, quant: &QuantRunCfg, hp: &TrainHp) -> P
 pub struct RunSummary {
     pub label: String,
     pub model: String,
+    /// Canonical recipe string (`QuantRecipe::to_string()`); old run dirs
+    /// hold legacy structure names, which parse as recipe aliases.
     pub structure: String,
     pub steps: usize,
     pub diverged: bool,
@@ -61,7 +65,7 @@ impl RunSummary {
         RunSummary {
             label: r.label.clone(),
             model: cfg.model.clone(),
-            structure: cfg.quant.structure.clone(),
+            structure: cfg.quant.to_string(),
             steps: r.losses.len(),
             diverged: r.diverged,
             diverged_at: r.diverged_at,
@@ -206,7 +210,6 @@ pub fn ensure_runs(
                 let cfg = &configs[*i];
                 println!("[spawn] {} ({} steps)", cfg.quant.label(), cfg.hp.steps);
                 let exe = std::env::current_exe()?;
-                let b = &cfg.quant.bits;
                 let child = Command::new(exe)
                     .args([
                         "train",
@@ -214,18 +217,8 @@ pub fn ensure_runs(
                         &worker_threads(cfg, wave.len()).to_string(),
                         "--model",
                         &cfg.model,
-                        "--structure",
-                        &cfg.quant.structure,
-                        "--wbits",
-                        &b.weights.to_string(),
-                        "--abits",
-                        &b.acts.to_string(),
-                        "--gbits",
-                        &b.grads.to_string(),
-                        "--m1bits",
-                        &b.m1.to_string(),
-                        "--m2bits",
-                        &b.m2.to_string(),
+                        "--quant",
+                        &cfg.quant.to_string(),
                         "--steps",
                         &cfg.hp.steps.to_string(),
                         "--seed",
@@ -312,13 +305,20 @@ mod tests {
     }
 
     #[test]
-    fn run_dir_is_deterministic() {
+    fn run_dir_is_deterministic_and_label_stable() {
         let hp = TrainHp::default();
-        let q = QuantRunCfg::baseline();
+        let q = QuantRecipe::none();
         let a = run_dir(Path::new("runs"), "t4", &q, &hp);
         let b = run_dir(Path::new("runs"), "t4", &q, &hp);
         assert_eq!(a, b);
         assert!(a.to_str().unwrap().contains("baseline_s300"));
+        // pre-redesign run dirs keep their names through the alias path
+        let q = QuantRecipe::parse("w4_pc").unwrap();
+        let d = run_dir(Path::new("runs"), "t4", &q, &hp);
+        assert!(d.to_str().unwrap().contains("w4_pc_s300"));
+        let q = QuantRecipe::parse("w8a8").unwrap();
+        let d = run_dir(Path::new("runs"), "t4", &q, &hp);
+        assert!(d.to_str().unwrap().contains("w8a8_s300"));
     }
 
     #[test]

@@ -3,59 +3,35 @@
 //! (Tables 6-9 columns), scored via the backend's per-position NLL.
 //!
 //! Parameters arrive as host vectors (one `Vec<f32>` per tensor in manifest
-//! order); `eval_structure` names the forward quantization (e.g. "base",
-//! "w_pc", "a_ptok_asym").
+//! order); a [`QuantRecipe`] names the forward quantization (typically a
+//! training recipe's [`QuantRecipe::forward_only`] view, e.g. `base`,
+//! `w4_pc`, `a8_ptok_asym`).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::config::QuantRecipe;
 use crate::data::corpus::{BatchIter, CorpusCfg};
 use crate::data::eval_sets;
 use crate::data::fewshot::{paper_average, Episode, Task, TaskGen, ALL_TASKS};
 use crate::runtime::{ModelInfo, Runtime};
 
-/// Quantization knobs applied at eval time (forward pass only).
-#[derive(Debug, Clone, Copy)]
-pub struct EvalQuant {
-    pub qmax_w: f32,
-    pub qmax_a: f32,
-}
-
-impl EvalQuant {
-    pub fn none() -> EvalQuant {
-        EvalQuant {
-            qmax_w: 1.0,
-            qmax_a: 1.0,
-        }
-    }
-}
-
 /// Mean NLL of `params` on `n_batches` of the given corpus.
 pub fn corpus_nll(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     params: &[Vec<f32>],
     corpus: &CorpusCfg,
     n_batches: usize,
-    q: EvalQuant,
 ) -> Result<f64> {
     let mut it = BatchIter::new(corpus.clone(), model.batch, model.seq);
     let mask = vec![1.0f32; model.batch * model.seq];
     let mut total = 0.0;
     for _ in 0..n_batches {
         let b = it.next_batch();
-        let out = rt.eval_step(
-            model,
-            eval_structure,
-            q.qmax_w,
-            q.qmax_a,
-            params,
-            &b.x,
-            &b.y,
-            &mask,
-        )?;
+        let out = rt.eval_step(model, recipe, params, &b.x, &b.y, &mask)?;
         total += out.mean_nll;
     }
     Ok(total / n_batches as f64)
@@ -64,15 +40,14 @@ pub fn corpus_nll(
 /// Perplexity on all four eval sets; returns (set name -> ppl).
 pub fn perplexity_suite(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     params: &[Vec<f32>],
     n_batches: usize,
-    q: EvalQuant,
 ) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     for (name, cfg) in eval_sets(model.vocab) {
-        let nll = corpus_nll(rt, eval_structure, model, params, &cfg, n_batches, q)?;
+        let nll = corpus_nll(rt, recipe, model, params, &cfg, n_batches)?;
         out.insert(name.to_string(), nll.exp());
     }
     Ok(out)
@@ -86,11 +61,10 @@ pub fn perplexity_suite(
 /// summed NLL over each row's scored region.
 fn score_rows(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     params: &[Vec<f32>],
     rows: &[(Vec<i32>, std::ops::Range<usize>)],
-    q: EvalQuant,
 ) -> Result<Vec<f64>> {
     let (bsz, seq) = (model.batch, model.seq);
     let mut scores = Vec::with_capacity(rows.len());
@@ -110,7 +84,7 @@ fn score_rows(
                 y[r * seq + t] = tok;
             }
         }
-        let out = rt.eval_step(model, eval_structure, q.qmax_w, q.qmax_a, params, &x, &y, &mask)?;
+        let out = rt.eval_step(model, recipe, params, &x, &y, &mask)?;
         let per_pos = out.per_pos;
         for (r, (_, range)) in chunk.iter().enumerate() {
             let mut s = 0.0f64;
@@ -126,11 +100,10 @@ fn score_rows(
 /// Accuracy of the model on a set of episodes (argmin candidate NLL).
 pub fn score_episodes(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     params: &[Vec<f32>],
     episodes: &[Episode],
-    q: EvalQuant,
 ) -> Result<f64> {
     // flatten: one row per (episode, candidate)
     let mut rows = Vec::new();
@@ -143,7 +116,7 @@ pub fn score_episodes(
             rows.push((tokens, start..end));
         }
     }
-    let scores = score_rows(rt, eval_structure, model, params, &rows, q)?;
+    let scores = score_rows(rt, recipe, model, params, &rows)?;
     let mut correct = 0usize;
     let mut idx = 0usize;
     for e in episodes {
@@ -174,12 +147,11 @@ pub struct FewshotReport {
 
 pub fn fewshot_suite(
     rt: &Runtime,
-    eval_structure: &str,
+    recipe: &QuantRecipe,
     model: &ModelInfo,
     params: &[Vec<f32>],
     n_episodes: usize,
     n_seeds: usize,
-    q: EvalQuant,
 ) -> Result<FewshotReport> {
     let gen = TaskGen::new(CorpusCfg::train_default(model.vocab));
     let mut per_task = Vec::new();
@@ -188,7 +160,7 @@ pub fn fewshot_suite(
         let mut accs = Vec::with_capacity(n_seeds);
         for seed in 0..n_seeds {
             let eps = gen.episodes(task, n_episodes, 1000 + seed as u64, 5);
-            accs.push(score_episodes(rt, eval_structure, model, params, &eps, q)?);
+            accs.push(score_episodes(rt, recipe, model, params, &eps)?);
         }
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;
         let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()

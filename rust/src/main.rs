@@ -12,7 +12,7 @@
 //!   experiment   reproduce a paper table/figure (or `all`)
 //!   report       aggregate all experiment reports
 //!   selftest     runtime validation: native backend vs the quant oracle
-//!   list         list models/structures/experiments
+//!   list         list models / recipe grammar / experiments
 //!
 //! The default build runs everything on the pure-rust native backend; with
 //! `--features pjrt` and `make artifacts`, the same commands execute the
@@ -22,9 +22,8 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use qpretrain::config::{BitWidths, Granularity, QuantRunCfg, TrainHp};
+use qpretrain::config::{Granularity, QuantRecipe, TrainHp};
 use qpretrain::coordinator::{self, experiments};
-use qpretrain::eval::EvalQuant;
 use qpretrain::model::load_checkpoint;
 use qpretrain::runtime::Runtime;
 use qpretrain::util::cli::Args;
@@ -66,17 +65,21 @@ fn hp_from(args: &Args) -> Result<TrainHp> {
     Ok(hp)
 }
 
-fn quant_from(args: &Args) -> Result<QuantRunCfg> {
-    Ok(QuantRunCfg {
-        structure: args.get_or("structure", "base"),
-        bits: BitWidths {
-            weights: args.usize_or("wbits", 0)? as u32,
-            acts: args.usize_or("abits", 0)? as u32,
-            grads: args.usize_or("gbits", 0)? as u32,
-            m1: args.usize_or("m1bits", 0)? as u32,
-            m2: args.usize_or("m2bits", 0)? as u32,
-        },
-    })
+/// Recipe from the CLI: `--quant <recipe>` is the primary interface; the
+/// legacy `--structure` + `--wbits/--abits/...` flags still work (the
+/// structure name parses as a recipe alias, bit flags override per class).
+fn quant_from(args: &Args) -> Result<QuantRecipe> {
+    let spec = args
+        .get("quant")
+        .map(str::to_string)
+        .unwrap_or_else(|| args.get_or("structure", "base"));
+    QuantRecipe::parse(&spec)?.with_bits(
+        args.usize_or("wbits", 0)? as u32,
+        args.usize_or("abits", 0)? as u32,
+        args.usize_or("gbits", 0)? as u32,
+        args.usize_or("m1bits", 0)? as u32,
+        args.usize_or("m2bits", 0)? as u32,
+    )
 }
 
 fn ctx_from(args: &Args) -> Result<experiments::Ctx> {
@@ -128,7 +131,9 @@ fn print_help() {
 
 USAGE: qpretrain <subcommand> [--options]
 
-  train        --model t4|micro|gpt2s --structure w_pc --wbits 8 --steps 300 [--out DIR]
+  train        --model t4|micro|gpt2s --quant w8_pc --steps 300 [--out DIR]
+               (--quant takes any recipe, e.g. w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc;
+                legacy --structure w_pc --wbits 8 flags still work)
   eval         --ckpt runs/train/t4/baseline_s300_seed1337 [--suite ppl|fewshot|all]
   ptq          --ckpt DIR --mode weights|acts --bits 8 --gran per_channel
   sharpness    --ckpt DIR [--radii 0.001,0.01,0.1]
@@ -138,7 +143,7 @@ USAGE: qpretrain <subcommand> [--options]
   experiment   <fig2|fig3|fig4|...|tab10|tab11|abl_bits|all> [--steps N --jobs K]
   report       aggregate runs/reports/*.md
   selftest     native-backend validation against the rust quant oracle
-  list         models / structures / experiments
+  list         models / recipe grammar / experiments
 
 Global options:
   --threads N  kernel worker threads (default: RAYON_NUM_THREADS, else all
@@ -181,38 +186,43 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn open_ckpt(
     args: &Args,
     rt: &Runtime,
-) -> Result<(qpretrain::runtime::ModelInfo, qpretrain::model::HostState, String)> {
+) -> Result<(qpretrain::runtime::ModelInfo, qpretrain::model::HostState, QuantRecipe)> {
     let dir = PathBuf::from(args.req("ckpt")?);
     let path = if dir.is_dir() { dir.join("final.ckpt") } else { dir.clone() };
-    // infer model + eval structure from result.json when present
-    let (model_name, structure) = match coordinator::RunSummary::load(
+    // infer model + training recipe from result.json when present
+    let (model_name, spec) = match coordinator::RunSummary::load(
         dir.parent().map(|_| dir.as_path()).unwrap_or(&dir),
     ) {
         Ok(s) => (s.model, s.structure),
-        Err(_) => (args.get_or("model", "t4"), args.get_or("structure", "base")),
+        Err(_) => (
+            args.get_or("model", "t4"),
+            args.get_or("quant", &args.get_or("structure", "base")),
+        ),
     };
     let model = rt.model(&model_name)?.clone();
     let state = load_checkpoint(&path, &model)?;
-    let eval_structure = experiments::eval_structure(&structure).to_string();
-    Ok((model, state, eval_structure))
+    let eval_recipe = QuantRecipe::parse(&spec)?.forward_only();
+    Ok((model, state, eval_recipe))
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
-    let (model, state, eval_structure) = open_ckpt(args, &rt)?;
-    let q = EvalQuant {
-        qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
-        qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
-    };
+    let (model, state, eval_recipe) = open_ckpt(args, &rt)?;
+    let recipe = eval_recipe.with_bits(
+        args.usize_or("wbits", 0)? as u32,
+        args.usize_or("abits", 0)? as u32,
+        0,
+        0,
+        0,
+    )?;
     let suite = args.get_or("suite", "all");
     if suite == "ppl" || suite == "all" {
         let ppl = qpretrain::eval::perplexity_suite(
             &rt,
-            &eval_structure,
+            &recipe,
             &model,
             &state.params,
             args.usize_or("eval-batches", 8)?,
-            q,
         )?;
         for (k, v) in &ppl {
             println!("{k}: ppl {v:.2}");
@@ -221,12 +231,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     if suite == "fewshot" || suite == "all" {
         let fs = qpretrain::eval::fewshot_suite(
             &rt,
-            &eval_structure,
+            &recipe,
             &model,
             &state.params,
             args.usize_or("fewshot-episodes", 24)?,
             args.usize_or("fewshot-seeds", 3)?,
-            q,
         )?;
         for (t, mean, sd) in &fs.per_task {
             println!("{}: {:.1}% ± {:.1}", t.name(), 100.0 * mean, 100.0 * sd);
@@ -257,25 +266,27 @@ fn cmd_ptq(args: &Args) -> Result<()> {
 
 fn cmd_sharpness(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
-    let (model, state, eval_structure) = open_ckpt(args, &rt)?;
+    let (model, state, eval_recipe) = open_ckpt(args, &rt)?;
     let radii: Vec<f64> = args
         .get_or("radii", "0.001,0.003,0.01,0.03,0.1")
         .split(',')
         .map(|s| s.parse().map_err(|_| anyhow!("bad radius {s:?}")))
         .collect::<Result<_>>()?;
-    let q = EvalQuant {
-        qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
-        qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
-    };
+    let recipe = eval_recipe.with_bits(
+        args.usize_or("wbits", 0)? as u32,
+        args.usize_or("abits", 0)? as u32,
+        0,
+        0,
+        0,
+    )?;
     let c = qpretrain::analysis::m_sharpness(
         &rt,
-        &eval_structure,
+        &recipe,
         &model,
         &state,
         &radii,
         args.usize_or("dirs", 4)?,
         args.usize_or("eval-batches", 2)?,
-        q,
     )?;
     println!("base loss: {:.4}", c.base_loss);
     for (r, s) in c.radii.iter().zip(&c.sharpness) {
@@ -286,20 +297,22 @@ fn cmd_sharpness(args: &Args) -> Result<()> {
 
 fn cmd_losssurface(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
-    let (model, state, eval_structure) = open_ckpt(args, &rt)?;
-    let q = EvalQuant {
-        qmax_w: BitWidths::qmax(args.usize_or("wbits", 0)? as u32),
-        qmax_a: BitWidths::qmax(args.usize_or("abits", 0)? as u32),
-    };
+    let (model, state, eval_recipe) = open_ckpt(args, &rt)?;
+    let recipe = eval_recipe.with_bits(
+        args.usize_or("wbits", 0)? as u32,
+        args.usize_or("abits", 0)? as u32,
+        0,
+        0,
+        0,
+    )?;
     let surf = qpretrain::analysis::loss_surface(
         &rt,
-        &eval_structure,
+        &recipe,
         &model,
         &state,
         args.f64_or("extent", 0.5)?,
         args.usize_or("grid", 9)?,
         args.usize_or("eval-batches", 1)?,
-        q,
     )?;
     let out = args.get_or("out", "loss_surface.csv");
     std::fs::write(&out, surf.to_csv())?;
@@ -369,21 +382,21 @@ fn cmd_report(args: &Args) -> Result<()> {
 /// plus an end-to-end learning check. (Cross-language bit-exactness is
 /// covered by `rust/tests/golden.rs` over the committed fixtures.)
 fn cmd_selftest(_args: &Args) -> Result<()> {
-    use qpretrain::config::Scheme;
+    use qpretrain::config::TensorPolicy;
     use qpretrain::model::init_state;
     use qpretrain::quant;
 
     let rt = Runtime::native();
     let model = rt.model("micro")?.clone();
 
-    // 1) forward fake-quant injection: eval("w_pc") on latent weights must
+    // 1) forward fake-quant injection: eval("w8_pc") on latent weights must
     //    equal eval("base") on host-side per-layer qdq'd weights, bit for bit
     let state = init_state(&model, 99);
     let mut qstate = state.clone();
     qpretrain::ptq::quantize_weights(
         &mut qstate,
         &model,
-        Scheme::new(8, Granularity::PerChannel),
+        TensorPolicy::new(8, Granularity::PerChannel),
     );
     let mut it = qpretrain::data::BatchIter::new(
         qpretrain::data::CorpusCfg::train_default(model.vocab),
@@ -392,11 +405,12 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
     );
     let b = it.next_batch();
     let mask = vec![1.0f32; model.batch * model.seq];
-    let latent = rt.eval_step(&model, "w_pc", 127.0, 1.0, &state.params, &b.x, &b.y, &mask)?;
-    let host = rt.eval_step(&model, "base", 1.0, 1.0, &qstate.params, &b.x, &b.y, &mask)?;
+    let w8_pc = QuantRecipe::parse("w8_pc")?;
+    let latent = rt.eval_step(&model, &w8_pc, &state.params, &b.x, &b.y, &mask)?;
+    let host = rt.eval_step(&model, &QuantRecipe::none(), &qstate.params, &b.x, &b.y, &mask)?;
     let ok = latent.per_pos == host.per_pos;
     println!(
-        "native w_pc forward == host-qdq weights + base forward: {}",
+        "native w8_pc forward == host-qdq weights + base forward: {}",
         if ok { "OK (bit-exact)" } else { "FAIL" }
     );
     if !ok {
@@ -405,7 +419,7 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
 
     // 2) oracle spot checks (round-half-to-even, Eq. 1 grid)
     let mut x = vec![-4.0f32, -1.0, 0.0, 2.0];
-    quant::qdq(&mut x, 1, 4, Scheme::new(3, Granularity::PerTensor));
+    quant::qdq(&mut x, 1, 4, TensorPolicy::new(3, Granularity::PerTensor));
     let s = 4.0f32 / 3.0;
     if x != vec![-3.0 * s, -1.0 * s, 0.0, 2.0 * s] {
         bail!("selftest failed: hand-computed per-tensor case");
@@ -415,7 +429,7 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
     // 3) end-to-end learning on the native backend
     let cfg = qpretrain::train::TrainCfg::new(
         "micro",
-        QuantRunCfg::baseline(),
+        QuantRecipe::none(),
         TrainHp {
             steps: 20,
             eval_every: 0,
@@ -455,8 +469,21 @@ fn cmd_list(_args: &Args) -> Result<()> {
         );
     }
     println!(
-        "quant structures: {}",
-        qpretrain::backend::QuantStructure::ALL.join(", ")
+        "\nquantization recipes (--quant): `+`-joined per-class components
+  component = <class><bits>_<granularity>[_asym][_actgrad]
+  classes       w (weights), a (activations), g (gradients), m1 / m2 (Adam moments)
+  granularity   pt (per-tensor), ptok (per-token), pc (per-channel)
+  bits          2..=24, or omitted for the fed-1.0 placement-only form
+  examples      w4_pc                 4-bit per-channel weights
+                a8_ptok_asym          8-bit asymmetric per-token activations
+                g8_ptok_actgrad       8-bit grads incl. the dx path (Fig. 10)
+                m2_8_pc               8-bit per-channel Adam second moment
+                w8a8 / w8a8g8         combined short labels (paper Fig. 13)
+                w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc   full combined recipe"
+    );
+    println!(
+        "legacy structure aliases: {}",
+        qpretrain::config::QuantRecipe::LEGACY_ALIASES.join(", ")
     );
     if !rt.manifest.artifacts.is_empty() {
         println!("AOT artifacts: {}", rt.manifest.artifacts.len());

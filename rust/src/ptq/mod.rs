@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Granularity, Scheme};
+use crate::config::{Granularity, QuantRecipe, TensorPolicy};
 use crate::model::HostState;
 use crate::quant;
 use crate::runtime::{ModelInfo, Runtime};
@@ -20,7 +20,7 @@ pub const LINEAR_WEIGHTS: [&str; 4] = ["qkv_w", "proj_w", "fc1_w", "fc2_w"];
 /// Quantize the linear weights of a checkpoint in place. Stacked per-layer
 /// tensors are quantized layer-by-layer (per_tensor = per layer tensor, as
 /// in training).
-pub fn quantize_weights(state: &mut HostState, model: &ModelInfo, scheme: Scheme) {
+pub fn quantize_weights(state: &mut HostState, model: &ModelInfo, policy: TensorPolicy) {
     for (info, data) in model.params.iter().zip(state.params.iter_mut()) {
         if !LINEAR_WEIGHTS.contains(&info.name.as_str()) {
             continue;
@@ -29,17 +29,13 @@ pub fn quantize_weights(state: &mut HostState, model: &ModelInfo, scheme: Scheme
         let (l, rows, cols) = (info.shape[0], info.shape[1], info.shape[2]);
         for layer in 0..l {
             let slice = &mut data[layer * rows * cols..(layer + 1) * rows * cols];
-            quant::qdq(slice, rows, cols, scheme);
+            quant::qdq(slice, rows, cols, policy);
         }
     }
 }
 
 /// Aggregate quantization error introduced by weight PTQ (diagnostics).
-pub fn weight_ptq_error(
-    state: &HostState,
-    model: &ModelInfo,
-    scheme: Scheme,
-) -> (f64, f64) {
+pub fn weight_ptq_error(state: &HostState, model: &ModelInfo, policy: TensorPolicy) -> (f64, f64) {
     let mut mse_sum = 0.0;
     let mut n = 0usize;
     let mut sqnr_min = f64::INFINITY;
@@ -50,7 +46,7 @@ pub fn weight_ptq_error(
         let (l, rows, cols) = (info.shape[0], info.shape[1], info.shape[2]);
         for layer in 0..l {
             let slice = &data[layer * rows * cols..(layer + 1) * rows * cols];
-            let q = quant::qdq_copy(slice, rows, cols, scheme);
+            let q = quant::qdq_copy(slice, rows, cols, policy);
             mse_sum += quant::mse(slice, &q) * slice.len() as f64;
             n += slice.len();
             sqnr_min = sqnr_min.min(quant::sqnr_db(slice, &q));
@@ -69,15 +65,8 @@ pub fn ptq_weights_ppl(
     n_batches: usize,
 ) -> Result<std::collections::BTreeMap<String, f64>> {
     let mut state = baseline.clone();
-    quantize_weights(&mut state, model, Scheme::new(bits, gran));
-    crate::eval::perplexity_suite(
-        rt,
-        "base",
-        model,
-        &state.params,
-        n_batches,
-        crate::eval::EvalQuant::none(),
-    )
+    quantize_weights(&mut state, model, TensorPolicy::new(bits, gran));
+    crate::eval::perplexity_suite(rt, &QuantRecipe::none(), model, &state.params, n_batches)
 }
 
 /// Table 11 row: activation-PTQ via the quantized eval artifact.
@@ -89,23 +78,11 @@ pub fn ptq_acts_ppl(
     gran: Granularity,
     n_batches: usize,
 ) -> Result<std::collections::BTreeMap<String, f64>> {
-    let structure = match gran {
-        Granularity::PerTensor => "a_pt",
-        Granularity::PerToken => "a_ptok",
-        Granularity::PerChannel => "a_pc",
+    let recipe = QuantRecipe {
+        acts: Some(TensorPolicy::new(bits, gran)),
+        ..QuantRecipe::none()
     };
-    let qmax = Scheme::new(bits, gran).qmax();
-    crate::eval::perplexity_suite(
-        rt,
-        structure,
-        model,
-        &baseline.params,
-        n_batches,
-        crate::eval::EvalQuant {
-            qmax_w: 1.0,
-            qmax_a: qmax,
-        },
-    )
+    crate::eval::perplexity_suite(rt, &recipe, model, &baseline.params, n_batches)
 }
 
 #[cfg(test)]
@@ -156,7 +133,7 @@ mod tests {
         let m = model();
         let base = init_state(&m, 3);
         let mut q = base.clone();
-        quantize_weights(&mut q, &m, Scheme::new(4, Granularity::PerChannel));
+        quantize_weights(&mut q, &m, TensorPolicy::new(4, Granularity::PerChannel));
         assert_eq!(q.params[0], base.params[0]); // wte untouched
         assert_ne!(q.params[1], base.params[1]); // qkv_w quantized
         assert_ne!(q.params[2], base.params[2]);
@@ -166,9 +143,9 @@ mod tests {
     fn ptq_is_idempotent() {
         let m = model();
         let mut a = init_state(&m, 4);
-        quantize_weights(&mut a, &m, Scheme::new(8, Granularity::PerChannel));
+        quantize_weights(&mut a, &m, TensorPolicy::new(8, Granularity::PerChannel));
         let mut b = a.clone();
-        quantize_weights(&mut b, &m, Scheme::new(8, Granularity::PerChannel));
+        quantize_weights(&mut b, &m, TensorPolicy::new(8, Granularity::PerChannel));
         for (x, y) in a.params[1].iter().zip(&b.params[1]) {
             assert!((x - y).abs() < 1e-6);
         }
@@ -178,8 +155,8 @@ mod tests {
     fn lower_bits_higher_error() {
         let m = model();
         let s = init_state(&m, 5);
-        let (mse4, _) = weight_ptq_error(&s, &m, Scheme::new(4, Granularity::PerChannel));
-        let (mse8, _) = weight_ptq_error(&s, &m, Scheme::new(8, Granularity::PerChannel));
+        let (mse4, _) = weight_ptq_error(&s, &m, TensorPolicy::new(4, Granularity::PerChannel));
+        let (mse8, _) = weight_ptq_error(&s, &m, TensorPolicy::new(8, Granularity::PerChannel));
         assert!(mse4 > mse8 * 10.0);
     }
 
@@ -191,8 +168,8 @@ mod tests {
         for r in 0..8 {
             s.params[1][r * 24 + 5] = 3.0;
         }
-        let (mse_pt, _) = weight_ptq_error(&s, &m, Scheme::new(4, Granularity::PerTensor));
-        let (mse_pc, _) = weight_ptq_error(&s, &m, Scheme::new(4, Granularity::PerChannel));
+        let (mse_pt, _) = weight_ptq_error(&s, &m, TensorPolicy::new(4, Granularity::PerTensor));
+        let (mse_pc, _) = weight_ptq_error(&s, &m, TensorPolicy::new(4, Granularity::PerChannel));
         assert!(mse_pc < mse_pt);
     }
 }

@@ -12,7 +12,7 @@
 //! Also provides truly-packed int8/int4 storage (`PackedTensor`) used for
 //! memory accounting and the storage-size claims of the paper's §3.3.
 
-use crate::config::{Granularity, Scheme};
+use crate::config::{Granularity, TensorPolicy};
 
 pub const EPS: f32 = 1e-12;
 
@@ -146,21 +146,21 @@ pub fn qdq_qmax(
 
 /// Fake-quantize a (rows x cols) row-major matrix in place, matching the
 /// python oracle bit-for-bit for every granularity/scheme combination.
-pub fn qdq(data: &mut [f32], rows: usize, cols: usize, scheme: Scheme) {
+pub fn qdq(data: &mut [f32], rows: usize, cols: usize, policy: TensorPolicy) {
     qdq_qmax(
         data,
         rows,
         cols,
-        scheme.granularity,
-        scheme.asymmetric,
-        scheme.qmax(),
+        policy.granularity,
+        policy.asymmetric,
+        policy.qmax(),
     );
 }
 
 /// Non-destructive variant.
-pub fn qdq_copy(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> Vec<f32> {
+pub fn qdq_copy(data: &[f32], rows: usize, cols: usize, policy: TensorPolicy) -> Vec<f32> {
     let mut out = data.to_vec();
-    qdq(&mut out, rows, cols, scheme);
+    qdq(&mut out, rows, cols, policy);
     out
 }
 
@@ -175,32 +175,32 @@ pub fn qdq_copy(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> Vec<f
 pub struct PackedTensor {
     pub rows: usize,
     pub cols: usize,
-    pub scheme: Scheme,
+    pub policy: TensorPolicy,
     pub scales: Vec<f32>,
     pub zeros: Vec<f32>,
     pub data: Vec<u8>, // packed two's-complement codes
 }
 
 impl PackedTensor {
-    pub fn quantize(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> PackedTensor {
-        assert!(scheme.bits >= 2 && scheme.bits <= 8);
+    pub fn quantize(data: &[f32], rows: usize, cols: usize, policy: TensorPolicy) -> PackedTensor {
+        assert!(policy.bits >= 2 && policy.bits <= 8);
         assert_eq!(data.len(), rows * cols);
-        let qmax = scheme.qmax();
+        let qmax = policy.qmax();
 
         // group params (shared with qdq: one source of truth for the scales)
         let params = group_params_qmax(
             data,
             rows,
             cols,
-            scheme.granularity,
-            scheme.asymmetric,
+            policy.granularity,
+            policy.asymmetric,
             qmax,
         );
         let scales: Vec<f32> = params.iter().map(|p| p.scale).collect();
         let zeros: Vec<f32> = params.iter().map(|p| p.zero).collect();
 
         let param_at = |r: usize, c: usize| -> QParams {
-            match scheme.granularity {
+            match policy.granularity {
                 Granularity::PerTensor => QParams { scale: scales[0], zero: zeros[0] },
                 Granularity::PerToken => QParams { scale: scales[r], zero: zeros[r] },
                 Granularity::PerChannel => QParams { scale: scales[c], zero: zeros[c] },
@@ -215,7 +215,7 @@ impl PackedTensor {
                 codes.push(q);
             }
         }
-        let packed = if scheme.bits <= 4 {
+        let packed = if policy.bits <= 4 {
             // nibble-pack
             let mut out = Vec::with_capacity(n.div_ceil(2));
             for pair in codes.chunks(2) {
@@ -230,7 +230,7 @@ impl PackedTensor {
         PackedTensor {
             rows,
             cols,
-            scheme,
+            policy,
             scales,
             zeros,
             data: packed,
@@ -240,7 +240,7 @@ impl PackedTensor {
     /// Integer code at (r, c) with sign extension.
     pub fn code(&self, r: usize, c: usize) -> i8 {
         let idx = r * self.cols + c;
-        if self.scheme.bits <= 4 {
+        if self.policy.bits <= 4 {
             let byte = self.data[idx / 2];
             let nib = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
             // sign-extend 4-bit two's complement
@@ -254,7 +254,7 @@ impl PackedTensor {
         let mut out = Vec::with_capacity(self.rows * self.cols);
         for r in 0..self.rows {
             for c in 0..self.cols {
-                let (s, z) = match self.scheme.granularity {
+                let (s, z) = match self.policy.granularity {
                     Granularity::PerTensor => (self.scales[0], self.zeros[0]),
                     Granularity::PerToken => (self.scales[r], self.zeros[r]),
                     Granularity::PerChannel => (self.scales[c], self.zeros[c]),
@@ -267,7 +267,7 @@ impl PackedTensor {
 
     /// Bytes of storage including scales/offsets.
     pub fn storage_bytes(&self) -> usize {
-        self.data.len() + 4 * (self.scales.len() + if self.scheme.asymmetric { self.zeros.len() } else { 0 })
+        self.data.len() + 4 * (self.scales.len() + if self.policy.asymmetric { self.zeros.len() } else { 0 })
     }
 }
 
@@ -302,8 +302,8 @@ pub fn sqnr_db(signal: &[f32], quantized: &[f32]) -> f64 {
 }
 
 /// Fraction of values flushed to the zero bin (the paper's Fig. 12 metric).
-pub fn zero_bin_fraction(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> f64 {
-    let q = qdq_copy(data, rows, cols, scheme);
+pub fn zero_bin_fraction(data: &[f32], rows: usize, cols: usize, policy: TensorPolicy) -> f64 {
+    let q = qdq_copy(data, rows, cols, policy);
     let nonzero_in = data.iter().filter(|&&x| x != 0.0).count();
     if nonzero_in == 0 {
         return 0.0;
@@ -336,7 +336,7 @@ mod tests {
     fn hand_computed_per_tensor() {
         // matches python test_oracle_hand_computed_per_tensor
         let mut x = vec![-4.0, -1.0, 0.0, 2.0];
-        qdq(&mut x, 1, 4, Scheme::new(3, PerTensor));
+        qdq(&mut x, 1, 4, TensorPolicy::new(3, PerTensor));
         let s = 4.0f32 / 3.0;
         assert_eq!(x, vec![-3.0 * s, -1.0 * s, 0.0, 2.0 * s]);
     }
@@ -344,14 +344,14 @@ mod tests {
     #[test]
     fn round_half_even() {
         let mut x = vec![0.5, 1.5, -0.5, -1.5, 3.0];
-        qdq(&mut x, 1, 5, Scheme::new(3, PerTensor));
+        qdq(&mut x, 1, 5, TensorPolicy::new(3, PerTensor));
         assert_eq!(x, vec![0.0, 2.0, 0.0, -2.0, 3.0]);
     }
 
     #[test]
     fn per_token_rows_independent() {
         let mut x = vec![1.0, 2.0, 100.0, 200.0];
-        qdq(&mut x, 2, 2, Scheme::new(8, PerToken));
+        qdq(&mut x, 2, 2, TensorPolicy::new(8, PerToken));
         assert!((x[0] - 1.0).abs() < 0.02 && (x[2] - 100.0).abs() < 2.0);
     }
 
@@ -363,8 +363,8 @@ mod tests {
         for r in 0..rows {
             x[r * cols + 3] = 100.0;
         }
-        let pt = qdq_copy(&x, rows, cols, Scheme::new(4, PerTensor));
-        let pc = qdq_copy(&x, rows, cols, Scheme::new(4, PerChannel));
+        let pt = qdq_copy(&x, rows, cols, TensorPolicy::new(4, PerTensor));
+        let pc = qdq_copy(&x, rows, cols, TensorPolicy::new(4, PerChannel));
         assert_eq!(pt[0], 0.0); // flushed by the shared scale
         assert!((pc[0] - 0.01).abs() < 2e-3);
     }
@@ -372,7 +372,7 @@ mod tests {
     #[test]
     fn asym_recovers_endpoints() {
         let mut x = vec![0.0, 1.0, 2.0, 3.0];
-        qdq(&mut x, 1, 4, Scheme::asym(4, PerToken));
+        qdq(&mut x, 1, 4, TensorPolicy::asym(4, PerToken));
         assert!((x[0] - 0.0).abs() < 1e-6);
         assert!((x[3] - 3.0).abs() < 1e-4);
     }
@@ -381,8 +381,8 @@ mod tests {
     fn idempotent() {
         let x = grid(16, 12);
         for g in [PerTensor, PerToken, PerChannel] {
-            let once = qdq_copy(&x, 16, 12, Scheme::new(4, g));
-            let twice = qdq_copy(&once, 16, 12, Scheme::new(4, g));
+            let once = qdq_copy(&x, 16, 12, TensorPolicy::new(4, g));
+            let twice = qdq_copy(&once, 16, 12, TensorPolicy::new(4, g));
             for (a, b) in once.iter().zip(&twice) {
                 assert!((a - b).abs() < 1e-6, "{g:?}: {a} vs {b}");
             }
@@ -392,9 +392,9 @@ mod tests {
     #[test]
     fn more_bits_less_error() {
         let x = grid(32, 32);
-        let e2 = mse(&x, &qdq_copy(&x, 32, 32, Scheme::new(2, PerTensor)));
-        let e4 = mse(&x, &qdq_copy(&x, 32, 32, Scheme::new(4, PerTensor)));
-        let e8 = mse(&x, &qdq_copy(&x, 32, 32, Scheme::new(8, PerTensor)));
+        let e2 = mse(&x, &qdq_copy(&x, 32, 32, TensorPolicy::new(2, PerTensor)));
+        let e4 = mse(&x, &qdq_copy(&x, 32, 32, TensorPolicy::new(4, PerTensor)));
+        let e8 = mse(&x, &qdq_copy(&x, 32, 32, TensorPolicy::new(8, PerTensor)));
         assert!(e2 > e4 && e4 > e8);
     }
 
@@ -403,7 +403,7 @@ mod tests {
         let x = grid(24, 20);
         for bits in [4u32, 8] {
             for g in [PerTensor, PerToken, PerChannel] {
-                let scheme = Scheme::new(bits, g);
+                let scheme = TensorPolicy::new(bits, g);
                 let packed = PackedTensor::quantize(&x, 24, 20, scheme);
                 let deq = packed.dequantize();
                 let fake = qdq_copy(&x, 24, 20, scheme);
@@ -417,8 +417,8 @@ mod tests {
     #[test]
     fn packed_sizes() {
         let x = grid(64, 64);
-        let p8 = PackedTensor::quantize(&x, 64, 64, Scheme::new(8, PerChannel));
-        let p4 = PackedTensor::quantize(&x, 64, 64, Scheme::new(4, PerChannel));
+        let p8 = PackedTensor::quantize(&x, 64, 64, TensorPolicy::new(8, PerChannel));
+        let p4 = PackedTensor::quantize(&x, 64, 64, TensorPolicy::new(4, PerChannel));
         assert_eq!(p8.data.len(), 64 * 64);
         assert_eq!(p4.data.len(), 64 * 64 / 2);
         assert!(p4.storage_bytes() < p8.storage_bytes());
@@ -431,17 +431,17 @@ mod tests {
         // tiny values + one huge outlier: symmetric 8-bit flushes the rest
         let mut x = vec![1e-4f32; 256];
         x[0] = 1e4;
-        let f = zero_bin_fraction(&x, 1, 256, Scheme::new(8, PerTensor));
+        let f = zero_bin_fraction(&x, 1, 256, TensorPolicy::new(8, PerTensor));
         assert!(f > 0.99, "{f}");
-        let f = zero_bin_fraction(&x, 1, 256, Scheme::new(8, PerToken));
+        let f = zero_bin_fraction(&x, 1, 256, TensorPolicy::new(8, PerToken));
         assert!(f > 0.99);
     }
 
     #[test]
     fn sqnr_increases_with_bits() {
         let x = grid(32, 32);
-        let s4 = sqnr_db(&x, &qdq_copy(&x, 32, 32, Scheme::new(4, PerTensor)));
-        let s8 = sqnr_db(&x, &qdq_copy(&x, 32, 32, Scheme::new(8, PerTensor)));
+        let s4 = sqnr_db(&x, &qdq_copy(&x, 32, 32, TensorPolicy::new(4, PerTensor)));
+        let s8 = sqnr_db(&x, &qdq_copy(&x, 32, 32, TensorPolicy::new(8, PerTensor)));
         assert!(s8 > s4 + 15.0, "s4={s4} s8={s8}"); // ~6 dB per bit
     }
 }

@@ -17,6 +17,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, StepOut};
+use crate::config::QuantRecipe;
 use crate::model::HostState;
 use crate::util::json::{self, Value};
 
@@ -257,32 +258,27 @@ impl Runtime {
     pub fn train_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax: &[f32; 5],
+        recipe: &QuantRecipe,
         state: &mut HostState,
         x: &[i32],
         y: &[i32],
         lr: f32,
         t: f32,
     ) -> Result<StepOut> {
-        self.backend
-            .train_step(model, structure, qmax, state, x, y, lr, t)
+        self.backend.train_step(model, recipe, state, x, y, lr, t)
     }
 
     /// Forward-only scoring; see [`Backend::eval_step`].
     pub fn eval_step(
         &self,
         model: &ModelInfo,
-        structure: &str,
-        qmax_w: f32,
-        qmax_a: f32,
+        recipe: &QuantRecipe,
         params: &[Vec<f32>],
         x: &[i32],
         y: &[i32],
         mask: &[f32],
     ) -> Result<EvalOut> {
-        self.backend
-            .eval_step(model, structure, qmax_w, qmax_a, params, x, y, mask)
+        self.backend.eval_step(model, recipe, params, x, y, mask)
     }
 
     /// Outlier probe of the last block; see [`Backend::act_probe`].

@@ -14,32 +14,16 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{cosine_lr, QuantRunCfg, TrainHp};
+use crate::config::{cosine_lr, QuantRecipe, TrainHp};
 use crate::data::{BatchIter, CorpusCfg};
 use crate::model::{init_state, save_checkpoint, HostState};
 use crate::runtime::Runtime;
 use crate::util::stats::{channel_abs_max, Ema};
 
-/// Map a train structure to the eval structure that scores its checkpoints
-/// (forward-pass quantization must match what training used; gradient and
-/// optimizer-state quantization do not appear in the forward pass).
-pub fn eval_structure_for(train_structure: &str) -> &'static str {
-    match train_structure {
-        "w_pt" => "w_pt",
-        "w_pc" | "w_pc_pallas" => "w_pc",
-        "a_pt" => "a_pt",
-        "a_ptok" => "a_ptok",
-        "a_ptok_asym" => "a_ptok_asym",
-        "a_pc" => "a_pc",
-        "wa" | "wag" => "wa",
-        _ => "base",
-    }
-}
-
 #[derive(Debug, Clone)]
 pub struct TrainCfg {
     pub model: String,
-    pub quant: QuantRunCfg,
+    pub quant: QuantRecipe,
     pub hp: TrainHp,
     pub out_dir: Option<PathBuf>,
     pub save_ckpt: bool,
@@ -49,7 +33,7 @@ pub struct TrainCfg {
 }
 
 impl TrainCfg {
-    pub fn new(model: &str, quant: QuantRunCfg, hp: TrainHp) -> TrainCfg {
+    pub fn new(model: &str, quant: QuantRecipe, hp: TrainHp) -> TrainCfg {
         TrainCfg {
             model: model.to_string(),
             quant,
@@ -60,9 +44,12 @@ impl TrainCfg {
         }
     }
 
-    /// Eval structure matching this config's forward quantization.
-    pub fn eval_structure(&self) -> &'static str {
-        eval_structure_for(&self.quant.structure)
+    /// The recipe that scores this config's checkpoints: forward-pass
+    /// quantization must match what training used, while gradient and
+    /// optimizer-state quantization do not appear in the forward pass.
+    /// Derived from the training recipe — there is no lookup table.
+    pub fn eval_recipe(&self) -> QuantRecipe {
+        self.quant.forward_only()
     }
 }
 
@@ -141,8 +128,6 @@ pub fn train_from(
         model.batch,
         model.seq,
     );
-    let qmaxes = cfg.quant.bits.qmax_scalars();
-
     let mut metrics = MetricsWriter::open(cfg)?;
     let mut probe = ProbeWriter::open(cfg)?;
 
@@ -164,8 +149,7 @@ pub fn train_from(
 
         let out = rt.train_step(
             &model,
-            &cfg.quant.structure,
-            &qmaxes,
+            &cfg.quant,
             &mut state,
             &batch.x,
             &batch.y,
@@ -242,10 +226,9 @@ pub fn validation_loss(
     model: &crate::runtime::ModelInfo,
     params: &[Vec<f32>],
 ) -> Result<f64> {
-    let qmaxes = cfg.quant.bits.qmax_scalars();
     crate::eval::corpus_nll(
         rt,
-        cfg.eval_structure(),
+        &cfg.eval_recipe(),
         model,
         params,
         &CorpusCfg {
@@ -253,10 +236,6 @@ pub fn validation_loss(
             ..CorpusCfg::train_default(model.vocab)
         },
         cfg.hp.eval_batches.max(1),
-        crate::eval::EvalQuant {
-            qmax_w: qmaxes[0],
-            qmax_a: qmaxes[1],
-        },
     )
 }
 
@@ -351,11 +330,28 @@ mod tests {
     use super::*;
 
     #[test]
-    fn eval_structure_mapping() {
-        assert_eq!(eval_structure_for("base"), "base");
-        assert_eq!(eval_structure_for("w_pc_pallas"), "w_pc");
-        assert_eq!(eval_structure_for("wag"), "wa");
-        assert_eq!(eval_structure_for("g_ptok"), "base"); // grads: fwd unquantized
-        assert_eq!(eval_structure_for("m2_pt"), "base");
+    fn eval_recipe_is_forward_only() {
+        let cfg = |r: &str| {
+            TrainCfg::new("t4", QuantRecipe::parse(r).unwrap(), TrainHp::default())
+        };
+        let base = QuantRecipe::none();
+        assert_eq!(cfg("base").eval_recipe(), base);
+        assert_eq!(
+            cfg("w_pc_pallas").eval_recipe(),
+            QuantRecipe::parse("w_pc").unwrap()
+        );
+        assert_eq!(cfg("wag").eval_recipe(), QuantRecipe::parse("wa").unwrap());
+        assert_eq!(
+            cfg("w8a8g8").eval_recipe(),
+            QuantRecipe::parse("w8a8").unwrap()
+        );
+        // grads / optimizer state: forward pass unquantized
+        assert_eq!(cfg("g_ptok").eval_recipe(), base);
+        assert_eq!(cfg("m2_pt").eval_recipe(), base);
+        // the full combined recipe evals under its W/A components only
+        assert_eq!(
+            cfg("w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc").eval_recipe(),
+            QuantRecipe::parse("w4_pc+a8_ptok").unwrap()
+        );
     }
 }

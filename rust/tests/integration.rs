@@ -3,8 +3,7 @@
 //! end-to-end with no AOT artifacts, no Python, no PJRT. These are the
 //! tests that prove the layers compose on a clean machine.
 
-use qpretrain::config::{BitWidths, QuantRunCfg, TrainHp};
-use qpretrain::eval::EvalQuant;
+use qpretrain::config::{QuantRecipe, TrainHp};
 use qpretrain::model::init_state;
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
@@ -25,9 +24,9 @@ fn native_models_cover_all_structures() {
     let m = rt.model("micro").unwrap();
     assert_eq!(m.params.len(), 16);
     assert_eq!(m.vocab, 64);
-    // every artifact-era structure parses into a native quant config
-    for s in qpretrain::backend::QuantStructure::ALL {
-        qpretrain::backend::QuantStructure::parse(s).unwrap();
+    // every artifact-era structure name parses into a recipe alias
+    for s in QuantRecipe::LEGACY_ALIASES {
+        QuantRecipe::parse(s).unwrap();
     }
 }
 
@@ -35,18 +34,17 @@ fn native_models_cover_all_structures() {
 fn train_eval_fewshot_end_to_end() {
     let rt = Runtime::native();
     let model = rt.model("micro").unwrap().clone();
-    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(50));
+    let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(50));
     let r = train(&rt, &cfg).unwrap();
     assert!(!r.diverged);
     assert!(r.final_loss() < r.losses[0] - 1.0, "no learning");
 
     let ppl = qpretrain::eval::perplexity_suite(
         &rt,
-        "base",
+        &QuantRecipe::none(),
         &model,
         &r.final_state.params,
         2,
-        EvalQuant::none(),
     )
     .unwrap();
     assert_eq!(ppl.len(), 4);
@@ -58,12 +56,11 @@ fn train_eval_fewshot_end_to_end() {
 
     let fs = qpretrain::eval::fewshot_suite(
         &rt,
-        "base",
+        &QuantRecipe::none(),
         &model,
         &r.final_state.params,
         8,
         2,
-        EvalQuant::none(),
     )
     .unwrap();
     assert_eq!(fs.per_task.len(), 10);
@@ -77,16 +74,15 @@ fn train_eval_fewshot_end_to_end() {
 fn ptq_weights_degrade_monotonically() {
     let rt = Runtime::native();
     let model = rt.model("micro").unwrap().clone();
-    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(50));
+    let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(50));
     let r = train(&rt, &cfg).unwrap();
     use qpretrain::config::Granularity::PerChannel;
     let fp = qpretrain::eval::perplexity_suite(
         &rt,
-        "base",
+        &QuantRecipe::none(),
         &model,
         &r.final_state.params,
         2,
-        EvalQuant::none(),
     )
     .unwrap()["synthwiki103"];
     let p8 = qpretrain::ptq::ptq_weights_ppl(&rt, &model, &r.final_state, 8, PerChannel, 2)
@@ -110,7 +106,7 @@ fn probes_and_analysis_run() {
 
     let schemes = vec![(
         "int8 ptok".to_string(),
-        qpretrain::config::Scheme::new(8, qpretrain::config::Granularity::PerToken),
+        qpretrain::config::TensorPolicy::new(8, qpretrain::config::Granularity::PerToken),
     )];
     let g = qpretrain::analysis::gradient_stats(&rt, &model, &state.params, &schemes).unwrap();
     assert!(g.weight_grad_hist.total() > 0);
@@ -122,17 +118,16 @@ fn probes_and_analysis_run() {
 fn sharpness_analysis_runs_on_trained_model() {
     let rt = Runtime::native();
     let model = rt.model("micro").unwrap().clone();
-    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(20));
+    let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(20));
     let r = train(&rt, &cfg).unwrap();
     let c = qpretrain::analysis::m_sharpness(
         &rt,
-        "base",
+        &QuantRecipe::none(),
         &model,
         &r.final_state,
         &[0.01, 0.1],
         2,
         1,
-        EvalQuant::none(),
     )
     .unwrap();
     assert!(c.base_loss.is_finite());
@@ -147,7 +142,7 @@ fn checkpoint_roundtrip_through_training() {
     let model = rt.model("micro").unwrap().clone();
     let dir = std::env::temp_dir().join("qpretrain_native_ckpt");
     std::fs::create_dir_all(&dir).unwrap();
-    let mut cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(10));
+    let mut cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(10));
     cfg.out_dir = Some(dir.clone());
     cfg.save_ckpt = true;
     let r = train(&rt, &cfg).unwrap();
@@ -161,7 +156,7 @@ fn checkpoint_roundtrip_through_training() {
 #[test]
 fn resume_continues_from_checkpoint_step() {
     let rt = Runtime::native();
-    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(6));
+    let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(6));
     let first = train(&rt, &cfg).unwrap();
     assert_eq!(first.final_state.step, 6);
     let resumed =
@@ -174,34 +169,37 @@ fn resume_continues_from_checkpoint_step() {
 #[test]
 fn deterministic_training_same_seed() {
     let rt = Runtime::native();
-    let a = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(8))).unwrap();
-    let b = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(8))).unwrap();
+    let a = train(&rt, &TrainCfg::new("micro", QuantRecipe::none(), hp(8))).unwrap();
+    let b = train(&rt, &TrainCfg::new("micro", QuantRecipe::none(), hp(8))).unwrap();
     assert_eq!(a.losses, b.losses, "same seed must give identical losses");
     let mut hp2 = hp(8);
     hp2.seed += 1;
-    let c = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp2)).unwrap();
+    let c = train(&rt, &TrainCfg::new("micro", QuantRecipe::none(), hp2)).unwrap();
     assert_ne!(a.losses, c.losses);
 }
 
 #[test]
-fn quantized_training_structures_learn() {
-    // w8 per-channel and the wa recipe both reduce loss within 25 steps
+fn quantized_training_recipes_learn() {
+    // w8 per-channel (including through the legacy alias + bit-override
+    // path) and the w8a8 recipe all reduce loss within 25 steps
     let rt = Runtime::native();
-    for (structure, bits) in [
-        ("w_pc", BitWidths { weights: 8, ..BitWidths::none() }),
-        ("w_pc_pallas", BitWidths { weights: 8, ..BitWidths::none() }),
-        ("wa", BitWidths { weights: 8, acts: 8, ..BitWidths::none() }),
-    ] {
-        let cfg = TrainCfg::new(
-            "micro",
-            QuantRunCfg { structure: structure.into(), bits },
-            hp(25),
-        );
+    let alias = QuantRecipe::parse("w_pc_pallas")
+        .unwrap()
+        .with_bits(8, 0, 0, 0, 0)
+        .unwrap();
+    assert_eq!(alias, QuantRecipe::parse("w8_pc").unwrap());
+    let recipes = [
+        ("w8_pc", QuantRecipe::parse("w8_pc").unwrap()),
+        ("w_pc_pallas+8b", alias),
+        ("w8a8", QuantRecipe::parse("w8a8").unwrap()),
+    ];
+    for (name, recipe) in recipes {
+        let cfg = TrainCfg::new("micro", recipe, hp(25));
         let r = train(&rt, &cfg).unwrap();
-        assert!(!r.diverged, "{structure} diverged");
+        assert!(!r.diverged, "{name} diverged");
         assert!(
             r.final_loss() < r.losses[0] - 0.5,
-            "{structure}: no learning ({:.3} -> {:.3})",
+            "{name}: no learning ({:.3} -> {:.3})",
             r.losses[0],
             r.final_loss()
         );

@@ -10,7 +10,7 @@
 //! * the paper's qualitative orderings (w2 < w8; m2 per-tensor 8-bit
 //!   unstable) reproduce natively.
 
-use qpretrain::config::{BitWidths, Granularity, QuantRunCfg, Scheme, TrainHp};
+use qpretrain::config::{Granularity, QuantRecipe, TensorPolicy, TrainHp};
 use qpretrain::data::{BatchIter, CorpusCfg};
 use qpretrain::model::init_state;
 use qpretrain::runtime::Runtime;
@@ -26,23 +26,14 @@ fn hp(steps: usize) -> TrainHp {
     }
 }
 
-fn qcfg(structure: &str, w: u32, a: u32, g: u32, m1: u32, m2: u32) -> QuantRunCfg {
-    QuantRunCfg {
-        structure: structure.to_string(),
-        bits: BitWidths {
-            weights: w,
-            acts: a,
-            grads: g,
-            m1,
-            m2,
-        },
-    }
+fn recipe(s: &str) -> QuantRecipe {
+    QuantRecipe::parse(s).unwrap()
 }
 
 #[test]
 fn native_train_loss_decreases_with_smooth_curve() {
     let rt = Runtime::native();
-    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp(50));
+    let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(50));
     let r = train(&rt, &cfg).unwrap();
     assert!(!r.diverged, "baseline diverged");
     assert_eq!(r.losses.len(), 50);
@@ -87,33 +78,33 @@ fn forward_fake_quant_matches_qdq_bit_for_bit() {
     let b = it.next_batch();
     let mask = vec![1.0f32; model.batch * model.seq];
 
-    for (structure, gran, bits) in [
-        ("w_pc", Granularity::PerChannel, 8u32),
-        ("w_pc", Granularity::PerChannel, 4),
-        ("w_pt", Granularity::PerTensor, 8),
+    for (spec, gran, bits) in [
+        ("w8_pc", Granularity::PerChannel, 8u32),
+        ("w4_pc", Granularity::PerChannel, 4),
+        ("w8_pt", Granularity::PerTensor, 8),
     ] {
         // latent weights through the quantized forward...
-        let qmax = Scheme::new(bits, gran).qmax();
         let latent = rt
-            .eval_step(&model, structure, qmax, 1.0, &state.params, &b.x, &b.y, &mask)
+            .eval_step(&model, &recipe(spec), &state.params, &b.x, &b.y, &mask)
             .unwrap();
         // ...must equal host-side qdq'd weights through the base forward
         let mut qstate = state.clone();
-        qpretrain::ptq::quantize_weights(&mut qstate, &model, Scheme::new(bits, gran));
+        qpretrain::ptq::quantize_weights(&mut qstate, &model, TensorPolicy::new(bits, gran));
         let host = rt
-            .eval_step(&model, "base", 1.0, 1.0, &qstate.params, &b.x, &b.y, &mask)
+            .eval_step(&model, &QuantRecipe::none(), &qstate.params, &b.x, &b.y, &mask)
             .unwrap();
         assert_eq!(
             latent.per_pos, host.per_pos,
-            "{structure}@{bits}b: native injection differs from quant::qdq"
+            "{spec}: native injection differs from quant::qdq"
         );
         assert_eq!(latent.mean_nll, host.mean_nll);
     }
 }
 
 #[test]
-fn activation_quant_converges_to_base_at_high_qmax() {
-    // huge qmax -> vanishing quantization error; small qmax -> visible error
+fn activation_quant_converges_to_base_at_high_bits() {
+    // many bits -> vanishing quantization error; the placement-only
+    // fed-1.0 form (legacy "a_ptok", qmax 1.0) -> visible error
     let rt = Runtime::native();
     let model = rt.model("micro").unwrap().clone();
     let state = init_state(&model, 17);
@@ -125,19 +116,19 @@ fn activation_quant_converges_to_base_at_high_qmax() {
     let b = it.next_batch();
     let mask = vec![1.0f32; model.batch * model.seq];
     let base = rt
-        .eval_step(&model, "base", 1.0, 1.0, &state.params, &b.x, &b.y, &mask)
+        .eval_step(&model, &QuantRecipe::none(), &state.params, &b.x, &b.y, &mask)
         .unwrap();
     let hi = rt
-        .eval_step(&model, "a_ptok", 1.0, 1e7, &state.params, &b.x, &b.y, &mask)
+        .eval_step(&model, &recipe("a24_ptok"), &state.params, &b.x, &b.y, &mask)
         .unwrap();
     assert!(
         (hi.mean_nll - base.mean_nll).abs() < 1e-3,
-        "high-qmax a_ptok {} vs base {}",
+        "24-bit a_ptok {} vs base {}",
         hi.mean_nll,
         base.mean_nll
     );
     let lo = rt
-        .eval_step(&model, "a_ptok", 1.0, 1.0, &state.params, &b.x, &b.y, &mask)
+        .eval_step(&model, &recipe("a_ptok"), &state.params, &b.x, &b.y, &mask)
         .unwrap();
     assert!(
         (lo.mean_nll - base.mean_nll).abs() > 1e-4,
@@ -152,7 +143,7 @@ fn divergence_detection_fires_on_exploding_config() {
     hp.lr_max = 30.0; // absurd learning rate
     hp.lr_min = 3.0;
     hp.eval_every = 0;
-    let cfg = TrainCfg::new("micro", QuantRunCfg::baseline(), hp);
+    let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp);
     let r = train(&rt, &cfg).unwrap();
     assert!(r.diverged, "lr=30 run did not register as diverged");
     let at = r.diverged_at.unwrap();
@@ -164,8 +155,8 @@ fn divergence_detection_fires_on_exploding_config() {
 #[test]
 fn w2_per_tensor_worse_than_w8() {
     let rt = Runtime::native();
-    let w8 = train(&rt, &TrainCfg::new("micro", qcfg("w_pt", 8, 0, 0, 0, 0), hp(30))).unwrap();
-    let w2 = train(&rt, &TrainCfg::new("micro", qcfg("w_pt", 2, 0, 0, 0, 0), hp(30))).unwrap();
+    let w8 = train(&rt, &TrainCfg::new("micro", recipe("w8_pt"), hp(30))).unwrap();
+    let w2 = train(&rt, &TrainCfg::new("micro", recipe("w2_pt"), hp(30))).unwrap();
     assert!(
         w2.final_loss() > w8.final_loss() + 0.02,
         "2-bit ({:.3}) should trail 8-bit ({:.3})",
@@ -179,8 +170,8 @@ fn m2_per_tensor_8bit_unstable() {
     // paper Fig. 12: second-moment per-tensor quantization collapses tiny v
     // values into the zero bin and blows up the update
     let rt = Runtime::native();
-    let base = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(25))).unwrap();
-    let m2 = train(&rt, &TrainCfg::new("micro", qcfg("m2_pt", 0, 0, 0, 0, 8), hp(25))).unwrap();
+    let base = train(&rt, &TrainCfg::new("micro", QuantRecipe::none(), hp(25))).unwrap();
+    let m2 = train(&rt, &TrainCfg::new("micro", recipe("m2_8_pt"), hp(25))).unwrap();
     assert!(
         m2.diverged || m2.final_loss() > base.final_loss() + 0.5,
         "m2 quant unexpectedly healthy: {:.3} vs {:.3}",
@@ -193,8 +184,8 @@ fn m2_per_tensor_8bit_unstable() {
 fn wa_recipe_tracks_baseline() {
     // paper §4.5: W8 per-channel + A8 per-token stays close to fp32
     let rt = Runtime::native();
-    let base = train(&rt, &TrainCfg::new("micro", QuantRunCfg::baseline(), hp(25))).unwrap();
-    let wa = train(&rt, &TrainCfg::new("micro", qcfg("wa", 8, 8, 0, 0, 0), hp(25))).unwrap();
+    let base = train(&rt, &TrainCfg::new("micro", QuantRecipe::none(), hp(25))).unwrap();
+    let wa = train(&rt, &TrainCfg::new("micro", recipe("w8a8"), hp(25))).unwrap();
     assert!(!wa.diverged);
     assert!(
         (wa.final_loss() - base.final_loss()).abs() < 0.1,
@@ -224,7 +215,7 @@ fn masked_eval_matches_manual_mean() {
         }
     }
     let out = rt
-        .eval_step(&model, "base", 1.0, 1.0, &state.params, &b.x, &b.y, &mask)
+        .eval_step(&model, &QuantRecipe::none(), &state.params, &b.x, &b.y, &mask)
         .unwrap();
     let manual: f64 = out
         .per_pos
@@ -265,7 +256,7 @@ fn train_run_bit_identical_across_thread_counts() {
         let mut h = hp(12);
         h.eval_every = 6;
         h.threads = threads; // applied per run by train_from
-        let r = train(&rt, &TrainCfg::new("micro", qcfg("wa", 8, 8, 0, 0, 0), h)).unwrap();
+        let r = train(&rt, &TrainCfg::new("micro", recipe("w8a8"), h)).unwrap();
         kernels::force_parallel(false);
         r
     };
@@ -292,8 +283,9 @@ fn train_run_bit_identical_across_thread_counts() {
 }
 
 #[test]
-fn every_train_structure_runs_one_step() {
-    // all 17 structures execute without error and produce finite loss
+fn every_legacy_structure_runs_one_step() {
+    // all 17 legacy structure names still parse (as recipe aliases) and
+    // execute at 8 bits without error, producing finite loss
     let rt = Runtime::native();
     let model = rt.model("micro").unwrap().clone();
     let mut it = BatchIter::new(
@@ -302,21 +294,40 @@ fn every_train_structure_runs_one_step() {
         model.seq,
     );
     let b = it.next_batch();
-    for structure in qpretrain::backend::QuantStructure::ALL {
+    for structure in QuantRecipe::LEGACY_ALIASES {
+        let r = QuantRecipe::parse(structure)
+            .unwrap()
+            .with_bits(8, 8, 8, 8, 8)
+            .unwrap();
         let mut state = init_state(&model, 3);
         let out = rt
-            .train_step(
-                &model,
-                structure,
-                &[127.0, 127.0, 127.0, 127.0, 127.0],
-                &mut state,
-                &b.x,
-                &b.y,
-                1e-3,
-                1.0,
-            )
+            .train_step(&model, &r, &mut state, &b.x, &b.y, 1e-3, 1.0)
             .unwrap();
         assert!(out.loss.is_finite(), "{structure}: loss {}", out.loss);
         assert!(out.gnorm > 0.0, "{structure}: gnorm {}", out.gnorm);
     }
+}
+
+#[test]
+fn full_combined_recipe_trains_with_decreasing_loss() {
+    // the paper's full recipe — weights + activations + gradients + both
+    // Adam moments quantized simultaneously — was inexpressible in the old
+    // closed structure vocabulary; it must train end-to-end natively
+    let rt = Runtime::native();
+    let full = recipe("w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc");
+    assert_eq!(full.legacy_structure(), None, "old API could express this?");
+    let r = train(&rt, &TrainCfg::new("micro", full, hp(40))).unwrap();
+    assert!(!r.diverged, "combined recipe diverged at {:?}", r.diverged_at);
+    assert!(
+        r.final_loss() < r.losses[0] - 0.3,
+        "combined recipe did not learn: {:.3} -> {:.3}",
+        r.losses[0],
+        r.final_loss()
+    );
+    // smoothed curve decreases end-to-end
+    let means = r.window_means(20);
+    assert!(
+        means.last().unwrap() < means.first().unwrap(),
+        "smoothed loss not decreasing: {means:?}"
+    );
 }

@@ -2,7 +2,7 @@
 //! invariants the paper's methodology relies on, plus coordinator-state
 //! invariants (LR schedule, config labelling, JSON round-trips).
 
-use qpretrain::config::{cosine_lr, Granularity, Scheme, TrainHp};
+use qpretrain::config::{cosine_lr, Granularity, TensorPolicy, TrainHp};
 use qpretrain::quant::{params_sym, qdq_copy, quantize_one, PackedTensor};
 use qpretrain::util::quickcheck::{check, check_with_shrink, gen, Config};
 use qpretrain::util::rng::Rng;
@@ -26,7 +26,7 @@ fn gen_matrix(rng: &mut Rng) -> (Vec<f32>, usize, usize) {
 fn prop_qdq_error_bounded_by_half_scale() {
     check(cfg(200), gen_matrix, |(data, rows, cols)| {
         for gran in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
-            let scheme = Scheme::new(4, gran);
+            let scheme = TensorPolicy::new(4, gran);
             let q = qdq_copy(data, *rows, *cols, scheme);
             for r in 0..*rows {
                 for c in 0..*cols {
@@ -58,7 +58,7 @@ fn prop_qdq_error_bounded_by_half_scale() {
 fn prop_qdq_idempotent() {
     check(cfg(150), gen_matrix, |(data, rows, cols)| {
         for gran in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
-            for scheme in [Scheme::new(4, gran), Scheme::asym(4, gran)] {
+            for scheme in [TensorPolicy::new(4, gran), TensorPolicy::asym(4, gran)] {
                 let once = qdq_copy(data, *rows, *cols, scheme);
                 let twice = qdq_copy(&once, *rows, *cols, scheme);
                 if once
@@ -77,7 +77,7 @@ fn prop_qdq_idempotent() {
 #[test]
 fn prop_qdq_preserves_sign_symmetric() {
     check(cfg(150), gen_matrix, |(data, rows, cols)| {
-        let q = qdq_copy(data, *rows, *cols, Scheme::new(8, Granularity::PerTensor));
+        let q = qdq_copy(data, *rows, *cols, TensorPolicy::new(8, Granularity::PerTensor));
         data.iter()
             .zip(&q)
             .all(|(&x, &y)| y == 0.0 || (x >= 0.0) == (y >= 0.0))
@@ -122,7 +122,7 @@ fn prop_packed_roundtrip_equals_fake_quant() {
         |(data, rows, cols)| {
             for bits in [4u32, 8] {
                 for gran in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
-                    let scheme = Scheme::new(bits, gran);
+                    let scheme = TensorPolicy::new(bits, gran);
                     let packed = PackedTensor::quantize(data, *rows, *cols, scheme);
                     let deq = packed.dequantize();
                     let fake = qdq_copy(data, *rows, *cols, scheme);

@@ -1,0 +1,220 @@
+//! Codec tests for the typed quantization recipe: `parse(display(r)) == r`
+//! over randomized recipes, every legacy artifact structure name parses as
+//! an alias of the expected recipe, malformed strings error, and the
+//! derived `forward_only()` view replaces the old eval-structure table.
+
+use qpretrain::config::{Granularity, QuantRecipe, TensorPolicy};
+use qpretrain::util::quickcheck::{check, Config};
+use qpretrain::util::rng::Rng;
+
+use Granularity::{PerChannel, PerTensor, PerToken};
+
+fn gen_policy(rng: &mut Rng) -> TensorPolicy {
+    let bits = [0u32, 2, 3, 4, 5, 6, 8, 12, 16, 24];
+    TensorPolicy {
+        bits: bits[rng.below(bits.len())],
+        granularity: *rng.choose(&[PerTensor, PerToken, PerChannel]),
+        asymmetric: rng.bool_with(0.5),
+    }
+}
+
+fn gen_recipe(rng: &mut Rng) -> QuantRecipe {
+    let mut r = QuantRecipe::none();
+    if rng.bool_with(0.6) {
+        r.weights = Some(gen_policy(rng));
+    }
+    if rng.bool_with(0.6) {
+        r.acts = Some(gen_policy(rng));
+    }
+    if rng.bool_with(0.6) {
+        r.grads = Some(gen_policy(rng));
+    }
+    if rng.bool_with(0.5) {
+        r.m1 = Some(gen_policy(rng));
+    }
+    if rng.bool_with(0.5) {
+        r.m2 = Some(gen_policy(rng));
+    }
+    // the act-grad flag is only meaningful with a gradient component
+    r.quantize_act_grads = r.grads.is_some() && rng.bool_with(0.3);
+    r
+}
+
+#[test]
+fn prop_parse_display_roundtrip() {
+    check(
+        Config {
+            cases: 500,
+            ..Config::default()
+        },
+        gen_recipe,
+        |r| QuantRecipe::parse(&r.to_string()).map(|p| p == *r).unwrap_or(false),
+    );
+}
+
+#[test]
+fn prop_label_parses_back_to_same_placement_and_bits() {
+    check(
+        Config {
+            cases: 300,
+            ..Config::default()
+        },
+        gen_recipe,
+        |r| QuantRecipe::parse(&r.label()).map(|p| p == *r).unwrap_or(false),
+    );
+}
+
+#[test]
+fn all_legacy_aliases_parse_to_expected_recipes() {
+    let w = |g| QuantRecipe {
+        weights: Some(TensorPolicy::new(0, g)),
+        ..QuantRecipe::none()
+    };
+    let a = |g| QuantRecipe {
+        acts: Some(TensorPolicy::new(0, g)),
+        ..QuantRecipe::none()
+    };
+    let g_ = |g| QuantRecipe {
+        grads: Some(TensorPolicy::new(0, g)),
+        ..QuantRecipe::none()
+    };
+    let m1 = |g| QuantRecipe {
+        m1: Some(TensorPolicy::new(0, g)),
+        ..QuantRecipe::none()
+    };
+    let m2 = |g| QuantRecipe {
+        m2: Some(TensorPolicy::new(0, g)),
+        ..QuantRecipe::none()
+    };
+    let wa = QuantRecipe {
+        weights: Some(TensorPolicy::new(0, PerChannel)),
+        acts: Some(TensorPolicy::new(0, PerToken)),
+        ..QuantRecipe::none()
+    };
+    let expected: Vec<(&str, QuantRecipe)> = vec![
+        ("base", QuantRecipe::none()),
+        ("w_pt", w(PerTensor)),
+        ("w_pc", w(PerChannel)),
+        ("w_pc_pallas", w(PerChannel)),
+        ("a_pt", a(PerTensor)),
+        ("a_ptok", a(PerToken)),
+        (
+            "a_ptok_asym",
+            QuantRecipe {
+                acts: Some(TensorPolicy::asym(0, PerToken)),
+                ..QuantRecipe::none()
+            },
+        ),
+        ("a_pc", a(PerChannel)),
+        ("g_pt", g_(PerTensor)),
+        ("g_ptok", g_(PerToken)),
+        (
+            "g_ptok_actgrad",
+            QuantRecipe {
+                grads: Some(TensorPolicy::new(0, PerToken)),
+                quantize_act_grads: true,
+                ..QuantRecipe::none()
+            },
+        ),
+        ("m1_pt", m1(PerTensor)),
+        ("m1_pc", m1(PerChannel)),
+        ("m2_pt", m2(PerTensor)),
+        ("m2_pc", m2(PerChannel)),
+        ("wa", wa),
+        (
+            "wag",
+            QuantRecipe {
+                grads: Some(TensorPolicy::new(0, PerToken)),
+                ..wa
+            },
+        ),
+    ];
+    assert_eq!(expected.len(), QuantRecipe::LEGACY_ALIASES.len());
+    for (name, want) in expected {
+        assert!(
+            QuantRecipe::LEGACY_ALIASES.contains(&name),
+            "{name} missing from LEGACY_ALIASES"
+        );
+        let got = QuantRecipe::parse(name).unwrap();
+        assert_eq!(got, want, "alias {name} parsed wrong");
+        // every alias still maps back to an artifact structure
+        let back = got.legacy_structure().expect("legacy alias has a structure");
+        assert_eq!(
+            QuantRecipe::parse(back).unwrap().placement(),
+            got.placement(),
+            "{name} -> {back} placement mismatch"
+        );
+    }
+}
+
+#[test]
+fn malformed_recipes_error() {
+    for bad in [
+        "",
+        "bogus",
+        "w4",              // missing granularity
+        "w4pc",            // missing separator
+        "w4_pq",           // unknown granularity
+        "w4_pc_actgrad",   // actgrad only valid on gradients
+        "w4_pc+w8_pt",     // duplicate class
+        "a8_ptok+a8_pt",   // duplicate class
+        "w4_pc++a8_ptok",  // empty component
+        "w1_pc",           // 1-bit symmetric would mean qmax == 0
+        "w25_pc",          // past the f32-exact range
+        "m1_8",            // missing granularity
+        "w4_pc_asym_x",    // unknown modifier
+    ] {
+        assert!(QuantRecipe::parse(bad).is_err(), "{bad:?} should not parse");
+    }
+}
+
+#[test]
+fn forward_only_drops_backward_components() {
+    let wag = QuantRecipe::parse("wag").unwrap();
+    let f = wag.forward_only();
+    assert!(f.weights.is_some() && f.acts.is_some());
+    assert!(f.grads.is_none() && !f.quantize_act_grads);
+    assert_eq!(f, QuantRecipe::parse("wa").unwrap());
+
+    // with bit-widths attached
+    assert_eq!(
+        QuantRecipe::parse("w8a8g8").unwrap().forward_only(),
+        QuantRecipe::parse("w8a8").unwrap()
+    );
+
+    // the full combined recipe evals under its W/A components
+    let full = QuantRecipe::parse("w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc").unwrap();
+    assert_eq!(
+        full.forward_only(),
+        QuantRecipe::parse("w4_pc+a8_ptok").unwrap()
+    );
+    // and no legacy structure can express it
+    assert_eq!(full.legacy_structure(), None);
+}
+
+#[test]
+fn qmax_matches_bit_widths() {
+    let r = QuantRecipe::parse("w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc").unwrap();
+    assert_eq!(r.qmax_scalars(), [7.0, 127.0, 127.0, 127.0, 127.0]);
+    // placement-only components keep the fed-1.0 convention
+    assert_eq!(QuantRecipe::parse("wa").unwrap().qmax_scalars(), [1.0; 5]);
+    assert_eq!(TensorPolicy::new(24, PerTensor).qmax(), ((1u64 << 23) - 1) as f32);
+}
+
+#[test]
+fn pallas_alias_matches_w_pc() {
+    assert_eq!(
+        QuantRecipe::parse("w_pc_pallas").unwrap(),
+        QuantRecipe::parse("w_pc").unwrap()
+    );
+}
+
+#[test]
+fn actgrad_variant_sets_flag() {
+    let s = QuantRecipe::parse("g_ptok_actgrad").unwrap();
+    assert!(s.quantize_act_grads);
+    assert_eq!(s.grads, Some(TensorPolicy::new(0, PerToken)));
+    let s = QuantRecipe::parse("g8_ptok_actgrad").unwrap();
+    assert!(s.quantize_act_grads);
+    assert_eq!(s.grads, Some(TensorPolicy::new(8, PerToken)));
+}
