@@ -138,11 +138,7 @@ fn main() {
         (6 * cm * cv) as u64, // approximate
         || {
             // serial leg: same kernel pinned to one thread
-            let prev = kernels::threads_override();
-            kernels::set_threads(1);
-            let r = kernels::nll_only(&logits, &y, cm, cv);
-            kernels::set_threads(prev);
-            r
+            kernels::with_threads(1, || kernels::nll_only(&logits, &y, cm, cv))
         },
         || kernels::nll_only(&logits, &y, cm, cv),
         &mut results,
@@ -171,9 +167,79 @@ fn main() {
     });
     bench("matmul_plain", || kernels::matmul(&x, &w, m, n, k));
 
+    section("packed-int8 GEMM vs the f32 qdq reference path (w8a8 operands)");
+    let ap = TensorPolicy::new(8, Granularity::PerToken);
+    let wp = TensorPolicy::new(8, Granularity::PerChannel);
+    // exactness preflight: the packed path must sit within rounding of the
+    // qdq oracle before its speedup means anything
+    {
+        let xq = qdq_copy(&x, m, n, ap);
+        let wq = qdq_copy(&w, n, k, wp);
+        let reference = kernels::matmul(&xq, &wq, m, n, k);
+        let xa = qpretrain::quant::pack_acts_i8(&x, m, n, ap);
+        let wa = qpretrain::quant::pack_weights_i8(&w, n, k, wp);
+        let ci = kernels::matmul_i8(&xa.codes, &wa.codes, m, n, k);
+        let fast = kernels::rescale_i32(&ci, &xa.scales, &wa.scales, m, k);
+        // bound against the output magnitude: the gap is the f32 summation
+        // rounding the reference commits, which scales with the reduction,
+        // not with any single (possibly cancelled-to-zero) element
+        let mag = reference.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (i, (a, b)) in fast.iter().zip(&reference).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (mag + 1.0),
+                "int8 preflight: element {i}: {a} vs {b} (magnitude {mag})"
+            );
+        }
+        println!("int8 exactness preflight: packed path within rounding of qdq oracle");
+    }
+    // both legs include everything the native forward pays per linear:
+    // group params + quantize (+ the f32 activation cache on the int8 leg)
+    let s = bench("qdq_f32_path (qdq a + qdq w + f32 gemm)", || {
+        let xq = qdq_copy(&x, m, n, ap);
+        let wq = qdq_copy(&w, n, k, wp);
+        kernels::matmul(&xq, &wq, m, n, k)
+    });
+    let p = bench("int8_packed_path (pack a + cache + pack w + i32 gemm + rescale)", || {
+        let xa = qpretrain::quant::pack_acts_i8(&x, m, n, ap);
+        let _cache = qpretrain::quant::dequant_acts_i8(&xa, m, n);
+        let wa = qpretrain::quant::pack_weights_i8(&w, n, k, wp);
+        let ci = kernels::matmul_i8(&xa.codes, &wa.codes, m, n, k);
+        kernels::rescale_i32(&ci, &xa.scales, &wa.scales, m, k)
+    });
+    let int8_speedup = s.mean_ns / p.mean_ns;
+    println!("    int8 vs qdq path: {int8_speedup:.2}x");
+    results.push(json::obj(vec![
+        ("name", json::s("int8_gemm_vs_qdq_path")),
+        ("flops", json::num((2 * m * n * k) as f64)),
+        ("qdq_path_gflops", json::num(s.gflops((2 * m * n * k) as u64))),
+        ("int8_path_gflops", json::num(p.gflops((2 * m * n * k) as u64))),
+        ("speedup", json::num(int8_speedup)),
+    ]));
+
+    section("pool handoff overhead (small kernel, forced parallel)");
+    // a shape far below the fork threshold: forcing the parallel path
+    // times the persistent pool's dispatch+barrier, the latency that used
+    // to be a fresh thread spawn per call
+    let (sm, sk, sn) = (16usize, 32usize, 16usize);
+    let sa = rng.normal_vec(sm * sk, 0.0, 1.0);
+    let sb = rng.normal_vec(sk * sn, 0.0, 1.0);
+    let serial_small = bench("small_matmul/serial", || kernels::matmul(&sa, &sb, sm, sk, sn));
+    kernels::force_parallel(true);
+    let pool_small = bench("small_matmul/forced_pool", || kernels::matmul(&sa, &sb, sm, sk, sn));
+    kernels::force_parallel(false);
+    let overhead_ns = pool_small.mean_ns - serial_small.mean_ns;
+    println!("    pool dispatch+barrier cost ~ {:.1} µs over serial", overhead_ns / 1e3);
+    results.push(json::obj(vec![
+        ("name", json::s("pool_dispatch_overhead_ns")),
+        ("overhead_ns", json::num(overhead_ns)),
+        ("serial_ns", json::num(serial_small.mean_ns)),
+        ("forced_pool_ns", json::num(pool_small.mean_ns)),
+    ]));
+
     let report = json::obj(vec![
         ("bench", json::s("kernels")),
         ("threads", json::num(threads as f64)),
+        ("pool_workers", json::num(kernels::pool_workers() as f64)),
         ("results", Value::Arr(results)),
     ]);
     let path = qpretrain::util::repo_root().join("BENCH_kernels.json");

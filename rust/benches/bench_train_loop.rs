@@ -1,14 +1,17 @@
 //! L3 end-to-end train-step benches (feeds §Perf): steps/s and tokens/s
-//! for the native backend across quantization recipes, serial vs
-//! parallel kernels, plus a breakdown of where the per-step wall time goes
+//! for the native backend across quantization recipes, serial vs pool
+//! kernels, the packed-int8 fast path vs the f32 qdq reference on w8a8,
+//! plus a breakdown of where the per-step wall time goes
 //! (forward+backward+Adam vs data generation).
 //!
 //! Emits `BENCH_train_loop.json` at the repo root (steps/s, tokens/s,
-//! thread count, serial-vs-parallel speedup) for the perf trajectory.
+//! thread count, serial-vs-pool and int8-vs-qdq speedups) for the perf
+//! trajectory; CI uploads it as an artifact per run. Set
+//! `QPRETRAIN_BENCH_FAST=1` for a smoke run with shrunk step counts.
 
 use std::time::Instant;
 
-use qpretrain::backend::kernels;
+use qpretrain::backend::{kernels, native};
 use qpretrain::config::{QuantRecipe, TrainHp};
 use qpretrain::data::{BatchIter, CorpusCfg};
 use qpretrain::model::init_state;
@@ -42,6 +45,7 @@ fn steps_per_sec(
 fn main() {
     let rt = Runtime::open_default().expect("runtime");
     let threads = kernels::max_threads();
+    let fast = qpretrain::util::bench::fast_mode();
     println!("backend: {} ({threads} kernel threads)", rt.backend_name());
     let mut results = Vec::new();
     let mut record = |model: &str, recipe: &str, nthreads: usize, sps: f64, toks: f64| {
@@ -53,9 +57,11 @@ fn main() {
             ("tokens_per_sec", json::num(sps * toks)),
         ]));
     };
+    let micro_steps = if fast { 4 } else { 10 };
+    let t4_steps = if fast { 1 } else { 2 };
 
-    section("serial vs parallel kernels (baseline recipe)");
-    for (model, steps, toks) in [("micro", 10usize, 512.0f64), ("t4", 2, 2048.0)] {
+    section("serial vs pool kernels (baseline recipe)");
+    for (model, steps, toks) in [("micro", micro_steps, 512.0f64), ("t4", t4_steps, 2048.0)] {
         let serial = steps_per_sec(&rt, model, "base", steps, 1);
         let parallel = steps_per_sec(&rt, model, "base", steps, 0);
         record(model, "base", 1, serial, toks);
@@ -63,6 +69,22 @@ fn main() {
         println!(
             "{model:<8} 1 thread: {serial:>7.2} steps/s   {threads} threads: {parallel:>7.2} steps/s   speedup {:.2}x",
             parallel / serial
+        );
+    }
+
+    section("int8 fast path vs f32 qdq reference (w8a8, default threads)");
+    // the acceptance row for the quantized-compute claim: the same w8a8
+    // run, dispatched through the f32 qdq oracle vs the packed-int8 GEMM
+    for (model, steps, toks) in [("micro", micro_steps, 512.0f64), ("t4", t4_steps, 2048.0)] {
+        native::set_int8_gemm(false);
+        let qdq = steps_per_sec(&rt, model, "w8a8", steps, 0);
+        native::set_int8_gemm(true);
+        let int8 = steps_per_sec(&rt, model, "w8a8", steps, 0);
+        record(model, "w8a8[qdq]", threads, qdq, toks);
+        record(model, "w8a8[int8]", threads, int8, toks);
+        println!(
+            "{model:<8} qdq path: {qdq:>7.2} steps/s   int8 path: {int8:>7.2} steps/s   speedup {:.2}x",
+            int8 / qdq
         );
     }
 
@@ -75,7 +97,7 @@ fn main() {
         // the paper's full combined recipe, inexpressible pre-redesign
         "w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc",
     ] {
-        let sps = steps_per_sec(&rt, "micro", recipe, 10, 0);
+        let sps = steps_per_sec(&rt, "micro", recipe, micro_steps, 0);
         record("micro", recipe, threads, sps, 512.0);
         println!("{recipe:<40} {sps:>7.2} steps/s   ({:.0} tokens/s)", sps * 512.0);
     }
@@ -87,7 +109,7 @@ fn main() {
 
     // data generation
     let t0 = Instant::now();
-    let reps = 50;
+    let reps = if fast { 10 } else { 50 };
     for _ in 0..reps {
         std::hint::black_box(corpus.next_batch());
     }
@@ -96,7 +118,7 @@ fn main() {
     // full step (forward + backward + AdamW)
     let base = QuantRecipe::none();
     let mut step_ms = 0.0;
-    let n = 10;
+    let n = if fast { 3 } else { 10 };
     for i in 0..n {
         let b = corpus.next_batch();
         let t0 = Instant::now();

@@ -5,28 +5,43 @@
 //! construction: work is split only across *independent output rows or
 //! tiles*, and each output element is accumulated in the exact serial
 //! order (k ascending in the matmuls, r ascending in the reductions).
-//! Cross-output reductions that cannot be split without reordering float
-//! adds (layernorm dw/db, the global grad norm) stay serial — they are
-//! O(rows·d) next to the O(rows·d²) matmuls. `rust/tests/kernels.rs`
-//! asserts the equivalence property over randomized and degenerate shapes;
-//! `rust/tests/native.rs` asserts full train runs are invariant across
-//! `RAYON_NUM_THREADS` values.
+//! Cross-output float reductions (layernorm dw/db, embedding wpe, the
+//! global grad norm) run as **fixed-shape tree reductions**: the block
+//! shape is a function of the problem size only — never of the thread
+//! count — so the combine order is frozen and the results are identical at
+//! every thread count (and to the serial reference, which walks the same
+//! tree). The embedding wte scatter is parallelized owner-computes (each
+//! worker owns a destination row range and accumulates its hits in
+//! ascending batch order — exactly the serial scatter order per row).
+//! `rust/tests/kernels.rs` asserts the equivalence property over
+//! randomized and degenerate shapes; `rust/tests/native.rs` asserts full
+//! train runs are invariant across `RAYON_NUM_THREADS` values.
 //!
-//! Threading substrate: the offline crate set has no rayon, so the
-//! fork-join is built on `std::thread::scope` with static contiguous
-//! chunking (which is also what keeps the split deterministic — no work
-//! stealing, no atomics in the hot loop). The thread count resolves from,
-//! in priority order: [`set_threads`] (the CLI `--threads` knob /
-//! `TrainHp::threads`), the `RAYON_NUM_THREADS` or `QPRETRAIN_THREADS`
-//! environment variables, then `available_parallelism`. Kernels fall back
-//! to the serial path below a work threshold so tiny shapes don't pay
-//! spawn overhead.
+//! Threading substrate: a **persistent worker pool** (the offline crate
+//! set has no rayon). Workers are spawned once — lazily on first parallel
+//! dispatch, or eagerly via [`warm_pool`] when a `Runtime` is constructed —
+//! and each fork-join hands a job per part to the shared queue, runs part
+//! 0 inline, helps drain, and blocks on a per-dispatch barrier. This
+//! replaces the per-call `std::thread::scope` spawn (~tens of µs per
+//! kernel), which is what capped small-kernel scaling. Static contiguous
+//! chunking is kept (no work stealing, no atomics in the hot loop), so the
+//! split stays deterministic. The thread count resolves from, in priority
+//! order: [`set_threads`] (the CLI `--threads` knob / `TrainHp::threads`),
+//! the `RAYON_NUM_THREADS` or `QPRETRAIN_THREADS` environment variables,
+//! then `available_parallelism`. Kernels fall back to the serial path
+//! below a work threshold so tiny shapes don't pay handoff overhead.
+//!
+//! The module also hosts the packed-int8 GEMM ([`matmul_i8`] +
+//! [`rescale_i32`]): i32 accumulation is exact, hence associative, hence
+//! trivially deterministic under any parallel split; the rescale is
+//! elementwise. The native backend dispatches to it for symmetric 8-bit
+//! recipes (see `backend::native::int8_dispatch`).
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-pub use super::math::{GELU_A, GELU_C, LN_EPS};
+pub use super::math::{GELU_A, GELU_C, LN_EPS, NORM_BLOCK, REDUCE_ROWS};
 
 // ---------------------------------------------------------------------------
 // thread-count resolution + fork-join substrate
@@ -84,10 +99,12 @@ pub fn max_threads() -> usize {
     }
 }
 
-/// Don't fork at all below this many scalar ops of total work…
-const MIN_PAR_WORK: usize = 1 << 20;
+/// Don't fork at all below this many scalar ops of total work… (the pool
+/// handoff is ~µs, far below the old per-call spawn cost, so the floor sits
+/// an order of magnitude lower than it did under `std::thread::scope`)
+const MIN_PAR_WORK: usize = 1 << 17;
 /// …and give every thread at least this much once we do.
-const MIN_WORK_PER_THREAD: usize = 1 << 19;
+const MIN_WORK_PER_THREAD: usize = 1 << 16;
 
 /// Threads to use for `chunks` independent chunks of `work_per_chunk`
 /// scalar ops each.
@@ -108,11 +125,251 @@ fn plan(chunks: usize, work_per_chunk: usize) -> usize {
         .max(1)
 }
 
+// ---------------------------------------------------------------------------
+// persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// The persistent worker pool behind every parallel kernel: workers are
+/// spawned once per process (up to the requested part count) and reused by
+/// every dispatch, replacing the per-call `std::thread::scope` spawn.
+mod pool {
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    /// Hard cap on persistent workers. Tests pin absurd counts (64+); idle
+    /// workers cost only a parked thread, but a bound keeps a bad knob
+    /// value from exhausting the process thread limit.
+    const MAX_WORKERS: usize = 192;
+
+    /// One part of one dispatch. `ctx` is a type-erased pointer to the
+    /// dispatcher's `Sync` closure; `call` is the monomorphized trampoline
+    /// that knows its real type.
+    struct Job {
+        call: unsafe fn(*const (), usize),
+        ctx: *const (),
+        part: usize,
+        state: Arc<DispatchState>,
+    }
+
+    // SAFETY: `ctx` points at a `Sync` closure on the dispatcher's stack,
+    // and the dispatcher cannot return (or unwind) past its barrier until
+    // every job has run, so the pointer never outlives its referent.
+    unsafe impl Send for Job {}
+
+    /// Per-dispatch barrier state (Arc'd so a worker signalling completion
+    /// can never touch freed dispatcher stack).
+    struct DispatchState {
+        remaining: AtomicUsize,
+        panicked: AtomicBool,
+        lock: Mutex<()>,
+        done: Condvar,
+    }
+
+    struct Shared {
+        queue: Mutex<VecDeque<Job>>,
+        ready: Condvar,
+    }
+
+    pub struct Pool {
+        shared: Arc<Shared>,
+        spawned: Mutex<usize>,
+    }
+
+    fn run_job(job: Job) {
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.ctx, job.part)
+        }))
+        .is_ok();
+        if !ok {
+            job.state.panicked.store(true, Ordering::SeqCst);
+        }
+        // decrement under the barrier lock so the dispatcher cannot miss
+        // the wakeup between its counter check and its wait
+        let _g = job.state.lock.lock().unwrap_or_else(|e| e.into_inner());
+        if job.state.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            job.state.done.notify_all();
+        }
+    }
+
+    fn worker(shared: Arc<Shared>) {
+        loop {
+            let job = {
+                let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                    q = shared.ready.wait(q).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            run_job(job);
+        }
+    }
+
+    impl Pool {
+        /// Grow the pool to at least `want` workers (capped; workers are
+        /// never torn down — they park on the queue condvar between jobs).
+        pub fn ensure_workers(&self, want: usize) {
+            let want = want.min(MAX_WORKERS);
+            let mut n = self.spawned.lock().unwrap_or_else(|e| e.into_inner());
+            while *n < want {
+                let shared = Arc::clone(&self.shared);
+                std::thread::Builder::new()
+                    .name(format!("qpretrain-worker-{}", *n))
+                    .spawn(move || worker(shared))
+                    .expect("spawn kernel pool worker");
+                *n += 1;
+            }
+        }
+
+        /// Live persistent workers (0 before the first parallel dispatch).
+        pub fn workers(&self) -> usize {
+            *self.spawned.lock().unwrap_or_else(|e| e.into_inner())
+        }
+    }
+
+    pub fn get() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                ready: Condvar::new(),
+            }),
+            spawned: Mutex::new(0),
+        })
+    }
+
+    /// Barrier guard: waits for every queued part of this dispatch even if
+    /// the inline part panics — the queued jobs borrow the dispatcher's
+    /// closure, so returning (or unwinding) before they finish would free
+    /// it under them.
+    struct Barrier<'a> {
+        state: &'a DispatchState,
+    }
+
+    impl Drop for Barrier<'_> {
+        fn drop(&mut self) {
+            let mut g = self.state.lock.lock().unwrap_or_else(|e| e.into_inner());
+            while self.state.remaining.load(Ordering::SeqCst) > 0 {
+                g = self.state.done.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            drop(g);
+            if self.state.panicked.load(Ordering::SeqCst) && !std::thread::panicking() {
+                panic!("kernel pool worker panicked");
+            }
+        }
+    }
+
+    /// Fork-join over the pool: run `f(part)` for every part in `0..parts`.
+    /// Parts 1.. are enqueued for the workers, part 0 runs inline, and the
+    /// caller helps drain the queue before blocking on the barrier — so a
+    /// dispatch completes even when parts exceed live workers (or when a
+    /// job itself dispatches). Which thread runs a part never affects the
+    /// result: parts own disjoint output spans with fixed contents.
+    pub fn dispatch<F: Fn(usize) + Sync>(parts: usize, f: &F) {
+        if parts <= 1 {
+            if parts == 1 {
+                f(0);
+            }
+            return;
+        }
+        unsafe fn call<F: Fn(usize) + Sync>(ctx: *const (), part: usize) {
+            (*(ctx as *const F))(part)
+        }
+        let pool = get();
+        pool.ensure_workers(parts - 1);
+        let state = Arc::new(DispatchState {
+            remaining: AtomicUsize::new(parts - 1),
+            panicked: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            done: Condvar::new(),
+        });
+        let barrier = Barrier { state: &*state };
+        {
+            let mut q = pool.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            for part in 1..parts {
+                q.push_back(Job {
+                    call: call::<F>,
+                    ctx: f as *const F as *const (),
+                    part,
+                    state: Arc::clone(&state),
+                });
+            }
+        }
+        pool.shared.ready.notify_all();
+        f(0);
+        // help drain: our own parts may still be queued while the workers
+        // are busy, and running any queued job is forward progress. The
+        // guard must drop before the job runs (a job may itself dispatch),
+        // hence the scoped pop instead of a while-let over the lock.
+        loop {
+            let job = {
+                let mut q = pool.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+                q.pop_front()
+            };
+            let Some(job) = job else { break };
+            run_job(job);
+        }
+        drop(barrier);
+    }
+}
+
+/// Pre-spawn the worker pool for the resolved thread budget (called by
+/// `Runtime` constructors so the first kernel dispatch of a run doesn't pay
+/// thread-spawn latency; dispatches grow the pool on demand either way).
+pub fn warm_pool() {
+    let n = max_threads();
+    if n > 1 {
+        pool::get().ensure_workers(n - 1);
+    }
+}
+
+/// Live persistent pool workers (0 until the pool is first used/warmed).
+pub fn pool_workers() -> usize {
+    pool::get().workers()
+}
+
+/// Run `f` with the thread override pinned to `n` (0 = restore the
+/// environment/auto resolution), restoring the previous override afterwards
+/// even on panic. Results are identical at every value; only wall-clock
+/// changes.
+pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _guard = Restore(THREAD_OVERRIDE.swap(n, Ordering::Relaxed));
+    f()
+}
+
+/// Raw mutable base pointer that may be captured by a `Sync` dispatch
+/// closure. Soundness is the caller's: parts must write disjoint spans.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+/// Part boundaries for `chunks` chunks split `nt` ways: part `p` covers
+/// chunk indices `p*per..min((p+1)*per, chunks)` (empty for trailing parts
+/// when the split is uneven).
+fn part_range(part: usize, per: usize, chunks: usize) -> Range<usize> {
+    let start = (part * per).min(chunks);
+    let end = ((part + 1) * per).min(chunks);
+    start..end
+}
+
 /// Run `f` over contiguous spans of `data`, viewed as `data.len() / chunk`
 /// chunks of `chunk` elements. `f(range, sub)` receives the global chunk
 /// index range and the matching sub-slice; spans are disjoint, so the split
 /// is race-free by construction. Runs serially (one call covering all
-/// chunks) when the work is too small to be worth forking.
+/// chunks) when the work is too small to be worth a pool handoff.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, work_per_chunk: usize, f: F)
 where
     T: Send,
@@ -130,16 +387,18 @@ where
         return;
     }
     let per = chunks.div_ceil(nt);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut work: Vec<(usize, &mut [T])> = data.chunks_mut(per * chunk).enumerate().collect();
-        let (_, first) = work.remove(0);
-        for (i, sub) in work {
-            let start = i * per;
-            let end = start + sub.len() / chunk;
-            s.spawn(move || f(start..end, sub));
+    let base = SendPtr(data.as_mut_ptr());
+    pool::dispatch(nt, &|part| {
+        let r = part_range(part, per, chunks);
+        if r.is_empty() {
+            return;
         }
-        f(0..per.min(chunks), first);
+        // SAFETY: parts cover disjoint chunk ranges within bounds, and the
+        // dispatch barrier ends every view before `data`'s borrow does.
+        let sub = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(r.start * chunk), r.len() * chunk)
+        };
+        f(r, sub);
     });
 }
 
@@ -170,20 +429,21 @@ pub fn par_chunks2_mut<A, B, F>(
         return;
     }
     let per = chunks.div_ceil(nt);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut work: Vec<(usize, (&mut [A], &mut [B]))> = a
-            .chunks_mut(per * ca)
-            .zip(b.chunks_mut(per * cb))
-            .enumerate()
-            .collect();
-        let (_, (a0, b0)) = work.remove(0);
-        for (i, (sa, sb)) in work {
-            let start = i * per;
-            let end = start + sa.len() / ca;
-            s.spawn(move || f(start..end, sa, sb));
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    pool::dispatch(nt, &|part| {
+        let r = part_range(part, per, chunks);
+        if r.is_empty() {
+            return;
         }
-        f(0..per.min(chunks), a0, b0);
+        // SAFETY: as in `par_chunks_mut`, per buffer.
+        let (sa, sb) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(pa.0.add(r.start * ca), r.len() * ca),
+                std::slice::from_raw_parts_mut(pb.0.add(r.start * cb), r.len() * cb),
+            )
+        };
+        f(r, sa, sb);
     });
 }
 
@@ -220,21 +480,23 @@ pub fn par_chunks3_mut<A, B, C, F>(
         return;
     }
     let per = chunks.div_ceil(nt);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut work: Vec<(usize, ((&mut [A], &mut [B]), &mut [C]))> = a
-            .chunks_mut(per * ca)
-            .zip(b.chunks_mut(per * cb))
-            .zip(c.chunks_mut(per * cc))
-            .enumerate()
-            .collect();
-        let (_, ((a0, b0), c0)) = work.remove(0);
-        for (i, ((sa, sb), sc)) in work {
-            let start = i * per;
-            let end = start + sa.len() / ca;
-            s.spawn(move || f(start..end, sa, sb, sc));
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    let pc = SendPtr(c.as_mut_ptr());
+    pool::dispatch(nt, &|part| {
+        let r = part_range(part, per, chunks);
+        if r.is_empty() {
+            return;
         }
-        f(0..per.min(chunks), a0, b0, c0);
+        // SAFETY: as in `par_chunks_mut`, per buffer.
+        let (sa, sb, sc) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(pa.0.add(r.start * ca), r.len() * ca),
+                std::slice::from_raw_parts_mut(pb.0.add(r.start * cb), r.len() * cb),
+                std::slice::from_raw_parts_mut(pc.0.add(r.start * cc), r.len() * cc),
+            )
+        };
+        f(r, sa, sb, sc);
     });
 }
 
@@ -360,6 +622,111 @@ pub fn col_sum_acc(acc: &mut [f32], x: &[f32], rows: usize, cols: usize) {
 }
 
 // ---------------------------------------------------------------------------
+// packed-int8 GEMM (the quantized fast path)
+// ---------------------------------------------------------------------------
+
+/// `c = a @ b` over int8 codes with i32 accumulation, a is (m x k), b is
+/// (k x n), row-major, k-panel blocked and row-parallel like [`matmul`].
+/// For |codes| <= 127 the i32 accumulator is exact up to k ~ 2^17 rows of
+/// reduction — far beyond any model dimension here — so integer adds are
+/// associative and the parallel split is deterministic by arithmetic, not
+/// just by ordering discipline.
+pub fn matmul_i8(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k, "matmul_i8: a has wrong shape");
+    assert_eq!(b.len(), k * n, "matmul_i8: b has wrong shape");
+    let mut c = vec![0i32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    par_chunks_mut(&mut c, n, 2 * k * n, |rows, cc| {
+        for l0 in (0..k).step_by(K_PANEL) {
+            let l1 = (l0 + K_PANEL).min(k);
+            for (ri, i) in rows.clone().enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut cc[ri * n..(ri + 1) * n];
+                for l in l0..l1 {
+                    let av = arow[l] as i32;
+                    let brow = &b[l * n..(l + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += av * bv as i32;
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// Single rescale of an i32 GEMM accumulator back to f32:
+/// `y[i,j] = (sa_i * sb_j) * c[i,j]`, with length-1 scale vectors
+/// broadcasting (per-tensor operands). Elementwise and row-parallel, so
+/// deterministic at every thread count.
+pub fn rescale_i32(
+    c: &[i32],
+    row_scales: &[f32],
+    col_scales: &[f32],
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * n];
+    rescale_i32_into(&mut y, c, row_scales, col_scales, m, n, false);
+    y
+}
+
+/// Accumulating variant of [`rescale_i32`]: `acc[i,j] += (sa_i*sb_j)*c[i,j]`
+/// (the residual-add form the out-proj / FC2 linears need).
+pub fn rescale_i32_acc(
+    acc: &mut [f32],
+    c: &[i32],
+    row_scales: &[f32],
+    col_scales: &[f32],
+    m: usize,
+    n: usize,
+) {
+    rescale_i32_into(acc, c, row_scales, col_scales, m, n, true);
+}
+
+fn rescale_i32_into(
+    out: &mut [f32],
+    c: &[i32],
+    row_scales: &[f32],
+    col_scales: &[f32],
+    m: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    assert_eq!(c.len(), m * n, "rescale_i32: c has wrong shape");
+    assert_eq!(out.len(), m * n, "rescale_i32: out has wrong shape");
+    assert!(
+        row_scales.len() == 1 || row_scales.len() == m,
+        "rescale_i32: row scales must be 1 or m"
+    );
+    assert!(
+        col_scales.len() == 1 || col_scales.len() == n,
+        "rescale_i32: col scales must be 1 or n"
+    );
+    if m == 0 || n == 0 {
+        return;
+    }
+    par_chunks_mut(out, n, 4 * n, |rows, oc| {
+        for (ri, i) in rows.clone().enumerate() {
+            let sr = if row_scales.len() == 1 { row_scales[0] } else { row_scales[i] };
+            let crow = &c[i * n..(i + 1) * n];
+            let orow = &mut oc[ri * n..(ri + 1) * n];
+            for j in 0..n {
+                let sc = if col_scales.len() == 1 { col_scales[0] } else { col_scales[j] };
+                let v = (sr * sc) * crow[j] as f32;
+                if accumulate {
+                    orow[j] += v;
+                } else {
+                    orow[j] = v;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // elementwise / row-wise kernels
 // ---------------------------------------------------------------------------
 
@@ -437,9 +804,11 @@ pub fn layer_norm_fwd(
 }
 
 /// Layernorm backward: dx is computed row-parallel; the dw/db column
-/// accumulators are cross-row reductions, so they keep the serial row
-/// order (bit-identical to [`super::math::layer_norm_bwd`]) in a second,
-/// O(rows·d) pass.
+/// accumulators run on the fixed [`REDUCE_ROWS`] reduction tree — block
+/// partials computed in parallel (each block's rows ascending, via the
+/// shared `math::layer_norm_dwdb_block`), combined serially in ascending
+/// block order — bit-identical to [`super::math::layer_norm_bwd`] at every
+/// thread count.
 pub fn layer_norm_bwd(
     dy: &[f32],
     xhat: &[f32],
@@ -481,17 +850,116 @@ pub fn layer_norm_bwd(
             }
         }
     });
-    // serial row-order pass: a parallel split here would reorder the float
-    // accumulation and break bit-exactness with the serial reference
-    for r in 0..rows {
-        let dyr = &dy[r * d..(r + 1) * d];
-        let xhr = &xhat[r * d..(r + 1) * d];
+    // fixed-shape dw/db tree: one partial pair per REDUCE_ROWS block,
+    // blocks in parallel, partials combined serially in ascending order —
+    // the identical float-add tree `math::layer_norm_dwdb` walks serially
+    let blocks = rows.div_ceil(REDUCE_ROWS);
+    let mut partials = vec![0.0f32; blocks * 2 * d];
+    par_chunks_mut(&mut partials, 2 * d, 3 * REDUCE_ROWS * d, |brange, pc| {
+        for (bi, b) in brange.clone().enumerate() {
+            let b0 = b * REDUCE_ROWS;
+            let b1 = (b0 + REDUCE_ROWS).min(rows);
+            let (pw, pb) = pc[bi * 2 * d..(bi + 1) * 2 * d].split_at_mut(d);
+            super::math::layer_norm_dwdb_block(dy, xhat, b0, b1, d, pw, pb);
+        }
+    });
+    for b in 0..blocks {
+        let pw = &partials[b * 2 * d..b * 2 * d + d];
+        let pb = &partials[b * 2 * d + d..(b + 1) * 2 * d];
         for c in 0..d {
-            dw_acc[c] += dyr[c] * xhr[c];
-            db_acc[c] += dyr[c];
+            dw_acc[c] += pw[c];
+            db_acc[c] += pb[c];
         }
     }
     dx
+}
+
+/// Embedding backward (the last serial section of the backward pass),
+/// owner-computes: workers own destination token/position row ranges and
+/// accumulate their hits walking the batch in ascending row order — the
+/// exact per-destination accumulation order of the serial scatter
+/// [`super::math::embed_scatter`], so results are bit-identical to it at
+/// every thread count.
+pub fn embed_scatter(
+    dwte: &mut [f32],
+    dwpe: &mut [f32],
+    dh: &[f32],
+    x: &[i32],
+    m: usize,
+    t: usize,
+    d: usize,
+) {
+    assert_eq!(dh.len(), m * d, "embed_scatter: dh has wrong shape");
+    assert_eq!(x.len(), m, "embed_scatter: tokens have wrong shape");
+    assert!(d > 0 && t > 0, "embed_scatter: empty dims");
+    assert_eq!(dwte.len() % d, 0, "embed_scatter: dwte not whole rows");
+    assert_eq!(dwpe.len(), t * d, "embed_scatter: dwpe has wrong shape");
+    let v = dwte.len() / d;
+    // fail loudly on an out-of-range token id: the owner-computes split
+    // would otherwise silently drop its gradient (no part owns it), where
+    // the serial reference panics on the out-of-bounds row slice — and a
+    // corrupted batch in a --release run must not train on wrong gradients
+    for &tok in x {
+        assert!(
+            (tok as usize) < v,
+            "embed_scatter: token id {tok} out of vocab range 0..{v}"
+        );
+    }
+    // wte: each part scans the batch once and accumulates only the rows
+    // whose token falls in its destination range (ascending r per token)
+    par_chunks_mut(dwte, d, (4 * m * d) / v.max(1) + 4, |tokens, wc| {
+        for r in 0..m {
+            let tok = x[r] as usize;
+            if tok >= tokens.start && tok < tokens.end {
+                let dst = &mut wc[(tok - tokens.start) * d..(tok - tokens.start + 1) * d];
+                let src = &dh[r * d..(r + 1) * d];
+                for c in 0..d {
+                    dst[c] += src[c];
+                }
+            }
+        }
+    });
+    // wpe: position s receives exactly rows s, s+t, s+2t, … — a direct
+    // gather, parallel over positions
+    par_chunks_mut(dwpe, d, (2 * m * d) / t + 4, |srange, pc| {
+        for (si, s) in srange.clone().enumerate() {
+            let dst = &mut pc[si * d..(si + 1) * d];
+            let mut r = s;
+            while r < m {
+                let src = &dh[r * d..(r + 1) * d];
+                for c in 0..d {
+                    dst[c] += src[c];
+                }
+                r += t;
+            }
+        }
+    });
+}
+
+/// Sum of squares over a tensor list on the fixed [`NORM_BLOCK`] tree
+/// (the pre-clip grad norm before the square root): f64 block partials in
+/// parallel, combined serially in ascending (tensor, block) order —
+/// bit-identical to [`super::math::sq_norm`] at every thread count.
+pub fn sq_norm(tensors: &[Vec<f32>]) -> f64 {
+    let mut blocks: Vec<(usize, usize)> = Vec::new();
+    for (ti, t) in tensors.iter().enumerate() {
+        for start in (0..t.len()).step_by(NORM_BLOCK) {
+            blocks.push((ti, start));
+        }
+    }
+    if blocks.is_empty() {
+        return 0.0;
+    }
+    let mut partials = vec![0.0f64; blocks.len()];
+    par_chunks_mut(&mut partials, 1, 2 * NORM_BLOCK, |brange, pc| {
+        for (pi, bi) in brange.clone().enumerate() {
+            let (ti, start) = blocks[bi];
+            let t = &tensors[ti];
+            let end = (start + NORM_BLOCK).min(t.len());
+            pc[pi] = super::math::sq_norm_block(&t[start..end]);
+        }
+    });
+    partials.iter().sum()
 }
 
 /// Tanh-approximate GELU (elementwise-parallel; same arithmetic per

@@ -1,5 +1,6 @@
 //! Serial reference kernels: row-major matmuls (plain, transposed-A,
-//! transposed-B), layernorm forward/backward, and tanh-GELU.
+//! transposed-B), layernorm forward/backward, tanh-GELU, the embedding
+//! scatter, and the fixed-shape reduction tree behind the grad norm.
 //!
 //! The matmuls use the axpy (ikj) loop order so the inner loop runs over
 //! contiguous rows of both operands and auto-vectorizes. Since the
@@ -9,10 +10,26 @@
 //! here (`rust/tests/kernels.rs` asserts it over randomized shapes), and
 //! the benches report serial-vs-parallel speedup against these loops.
 //!
+//! Cross-row float reductions (layernorm dw/db, the grad norm) are defined
+//! here as **fixed-shape tree reductions**: inputs are cut into blocks of
+//! [`REDUCE_ROWS`] rows (or [`NORM_BLOCK`] elements), each block partial is
+//! accumulated in ascending serial order, and the partials are combined in
+//! ascending block order. The block shape depends only on the problem
+//! size, so the parallel kernels reproduce the exact same float-add tree
+//! at every thread count — that fixed tree, not serial execution, is the
+//! determinism contract.
+//!
 //! Shape checks are real `assert!`s, not `debug_assert!`s: they are O(1)
 //! next to the O(m·n·k) kernel body, and a shape bug in a `--release`
 //! training run must fail loudly instead of silently reading adjacent
 //! memory.
+
+/// Row-block size of the fixed-shape cross-row reduction tree (layernorm
+/// dw/db). A function of nothing: the tree never depends on thread count.
+pub const REDUCE_ROWS: usize = 64;
+
+/// Element-block size of the fixed-shape grad-norm reduction tree.
+pub const NORM_BLOCK: usize = 1 << 16;
 
 /// `c = a @ b` where a is (m x k), b is (k x n), all row-major.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -143,6 +160,11 @@ pub fn layer_norm_fwd(
 /// Layernorm backward. Accumulates dw/db into the provided slices and
 /// returns dx. Uses the standard biased-variance formula:
 /// `dx = rstd * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))`.
+///
+/// dw/db are cross-row reductions and follow the fixed [`REDUCE_ROWS`]
+/// tree: per-block partials accumulated in ascending row order, combined
+/// into the accumulators in ascending block order — the exact float-add
+/// tree the parallel kernel reproduces at every thread count.
 pub fn layer_norm_bwd(
     dy: &[f32],
     xhat: &[f32],
@@ -166,8 +188,6 @@ pub fn layer_norm_bwd(
             let dxh = dyr[c] * w[c];
             m1 += dxh;
             m2 += dxh * xhr[c];
-            dw_acc[c] += dyr[c] * xhr[c];
-            db_acc[c] += dyr[c];
         }
         m1 /= d as f32;
         m2 /= d as f32;
@@ -178,7 +198,115 @@ pub fn layer_norm_bwd(
             dxr[c] = rs * (dxh - m1 - xhr[c] * m2);
         }
     }
+    layer_norm_dwdb(dy, xhat, rows, d, dw_acc, db_acc);
     dx
+}
+
+/// The dw/db tree of [`layer_norm_bwd`], exposed so the parallel kernel
+/// can reuse one block-partial implementation (determinism by shared code,
+/// not by parallel re-derivation).
+pub fn layer_norm_dwdb(
+    dy: &[f32],
+    xhat: &[f32],
+    rows: usize,
+    d: usize,
+    dw_acc: &mut [f32],
+    db_acc: &mut [f32],
+) {
+    assert_eq!(dy.len(), rows * d);
+    assert_eq!(xhat.len(), rows * d);
+    assert_eq!(dw_acc.len(), d);
+    assert_eq!(db_acc.len(), d);
+    let mut pw = vec![0.0f32; d];
+    let mut pb = vec![0.0f32; d];
+    for b0 in (0..rows).step_by(REDUCE_ROWS) {
+        let b1 = (b0 + REDUCE_ROWS).min(rows);
+        pw.iter_mut().for_each(|x| *x = 0.0);
+        pb.iter_mut().for_each(|x| *x = 0.0);
+        layer_norm_dwdb_block(dy, xhat, b0, b1, d, &mut pw, &mut pb);
+        for c in 0..d {
+            dw_acc[c] += pw[c];
+            db_acc[c] += pb[c];
+        }
+    }
+}
+
+/// One block partial of the dw/db tree: rows `b0..b1` accumulated in
+/// ascending order into `pw`/`pb`.
+pub fn layer_norm_dwdb_block(
+    dy: &[f32],
+    xhat: &[f32],
+    b0: usize,
+    b1: usize,
+    d: usize,
+    pw: &mut [f32],
+    pb: &mut [f32],
+) {
+    for r in b0..b1 {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xhr = &xhat[r * d..(r + 1) * d];
+        for c in 0..d {
+            pw[c] += dyr[c] * xhr[c];
+            pb[c] += dyr[c];
+        }
+    }
+}
+
+/// Embedding backward: scatter `dh` rows into `dwte` (by token id) and
+/// `dwpe` (by position `r % t`), accumulating in ascending batch-row order
+/// per destination row. The parallel kernel computes the identical sums
+/// owner-computes (each worker owns destination rows and walks the batch
+/// ascending), so the two are bit-equal at every thread count.
+pub fn embed_scatter(
+    dwte: &mut [f32],
+    dwpe: &mut [f32],
+    dh: &[f32],
+    x: &[i32],
+    m: usize,
+    t: usize,
+    d: usize,
+) {
+    assert_eq!(dh.len(), m * d);
+    assert_eq!(x.len(), m);
+    assert!(d > 0 && t > 0, "embed_scatter: empty dims");
+    assert_eq!(dwte.len() % d, 0);
+    assert_eq!(dwpe.len(), t * d);
+    for r in 0..m {
+        let tok = x[r] as usize;
+        let s = r % t;
+        let src = &dh[r * d..(r + 1) * d];
+        let wte_row = &mut dwte[tok * d..(tok + 1) * d];
+        for c in 0..d {
+            wte_row[c] += src[c];
+        }
+        let wpe_row = &mut dwpe[s * d..(s + 1) * d];
+        for c in 0..d {
+            wpe_row[c] += src[c];
+        }
+    }
+}
+
+/// Sum of squares over a tensor list (the pre-clip grad norm, before the
+/// square root), on the fixed [`NORM_BLOCK`] tree: per-block f64 partials
+/// in ascending element order, combined in ascending (tensor, block)
+/// order.
+pub fn sq_norm(tensors: &[Vec<f32>]) -> f64 {
+    let mut total = 0.0f64;
+    for t in tensors {
+        for block in t.chunks(NORM_BLOCK) {
+            total += sq_norm_block(block);
+        }
+    }
+    total
+}
+
+/// One f64 block partial of the grad-norm tree.
+pub fn sq_norm_block(block: &[f32]) -> f64 {
+    let mut p = 0.0f64;
+    for &x in block {
+        p += (x as f64) * (x as f64);
+    }
+    p
 }
 
 pub const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)

@@ -14,10 +14,16 @@
 //! * [`pjrt`] (cargo feature `pjrt`) — executes the AOT-lowered HLO
 //!   artifacts through the PJRT C API, as the seed system did.
 //!
-//! The native backend's compute runs on [`kernels`] — thread-parallel,
-//! cache-blocked f32 kernels that are bit-identical to the retained serial
-//! reference in [`math`] at every thread count (`--threads` /
-//! `RAYON_NUM_THREADS`).
+//! The native backend's compute runs on [`kernels`] — cache-blocked
+//! kernels fanned out over a **persistent worker pool** (spawned once per
+//! process, warmed by `Runtime` construction) that are bit-identical to
+//! the retained serial reference in [`math`] at every thread count
+//! (`--threads` / `RAYON_NUM_THREADS`); cross-row reductions run on
+//! fixed-shape trees whose block layout never depends on the thread
+//! count. Symmetric 8-bit recipes additionally dispatch the forward
+//! linears to a packed-int8 GEMM (i32 accumulation, single rescale) with
+//! the f32 qdq path retained as the reference oracle
+//! ([`native::set_int8_gemm`]).
 //!
 //! Both backends take a [`QuantRecipe`](crate::config::QuantRecipe): which
 //! components are fake-quantized, at which granularity/symmetry, and at

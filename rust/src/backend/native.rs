@@ -17,9 +17,19 @@
 //! The backward pass was validated against `jax.value_and_grad` of the L2
 //! graph for every quant structure (max relative gradient error ~6e-7), and
 //! the AdamW update against `adam.adamw_update` exactly.
+//!
+//! Forward linears dispatch to a **packed-int8 GEMM** ([`int8_dispatch`])
+//! when both operands are symmetric 8-bit with scales constant along the
+//! reduction axis (acts per-tensor/per-token, weights per-tensor/
+//! per-channel): quantize once to i8 codes, accumulate in exact i32,
+//! rescale once. The f32 qdq path is retained as the reference oracle
+//! (toggle with [`set_int8_gemm`]); `rust/tests/int8.rs` pins bitwise
+//! equality where f32 accumulation is exact and bounds the rounding gap
+//! elsewhere.
 
 use std::borrow::Cow;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use anyhow::{bail, Result};
 
@@ -28,9 +38,10 @@ use anyhow::{bail, Result};
 // the parallel regions (tiles are the unit of parallelism there, and the
 // serial tile kernels are what the parallel ones are bit-equal to anyway).
 use crate::backend::kernels::{
-    add_assign, bias_add, causal_softmax, col_sum_acc, gelu, gelu_bwd, layer_norm_bwd,
-    layer_norm_fwd, matmul, matmul_acc, matmul_nt, matmul_tn_acc, nll_only, nll_rows,
-    par_chunks2_mut, par_chunks3_mut, par_chunks_mut,
+    add_assign, bias_add, causal_softmax, col_sum_acc, embed_scatter, gelu, gelu_bwd,
+    layer_norm_bwd, layer_norm_fwd, matmul, matmul_acc, matmul_i8, matmul_nt, matmul_tn_acc,
+    nll_only, nll_rows, par_chunks2_mut, par_chunks3_mut, par_chunks_mut, rescale_i32,
+    rescale_i32_acc, sq_norm,
 };
 use crate::backend::math;
 use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, StepOut};
@@ -193,6 +204,99 @@ fn qdq_grad<'a>(
 }
 
 // ---------------------------------------------------------------------------
+// packed-int8 GEMM dispatch (the quantized fast path)
+// ---------------------------------------------------------------------------
+
+/// Process-wide switch for the packed-int8 GEMM fast path. On by default;
+/// the benches and the exactness suite pin it off to time/compare against
+/// the retained f32 qdq reference oracle.
+static INT8_GEMM: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable the packed-int8 GEMM fast path (results differ from the
+/// qdq reference only by f32 summation rounding; `rust/tests/int8.rs`
+/// bounds the gap and pins bitwise equality where the f32 path is exact).
+pub fn set_int8_gemm(on: bool) {
+    INT8_GEMM.store(on, Ordering::Relaxed);
+}
+
+/// Whether the int8 fast path is currently enabled.
+pub fn int8_gemm_enabled() -> bool {
+    INT8_GEMM.load(Ordering::Relaxed)
+}
+
+/// The dispatch rule for one forward linear `qdq_a(x) @ qdq_w(w)`: both
+/// operands must be quantized, symmetric 8-bit, with scales constant along
+/// the reduction axis (activations per-tensor/per-token, weights
+/// per-tensor/per-channel). Anything else — asymmetric, other bit-widths,
+/// per-channel activations, per-token weights, an unquantized operand —
+/// falls back to the f32 qdq reference path.
+pub fn int8_dispatch(acts: Option<TensorPolicy>, weights: Option<TensorPolicy>) -> bool {
+    int8_gemm_enabled()
+        && acts.is_some_and(quant::int8_act_eligible)
+        && weights.is_some_and(quant::int8_weight_eligible)
+}
+
+/// One forward linear `y = qdq_a(x) @ qdq_w(w)` (x owned, (m x k); w
+/// (k x n)). On the int8 path both operands are quantized **once** to i8
+/// codes, multiplied with exact i32 accumulation, and rescaled in a single
+/// elementwise pass. Returns `(y, xq)` where `xq` is the fake-quantized
+/// activation cache backward's weight gradient consumes — value-identical
+/// on both paths (the dequantized codes reproduce `quant::qdq` up to the
+/// sign of zero-bin zeros; see `quant::PackedGemmOperand`).
+fn quant_linear(
+    x: Vec<f32>,
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qs: &QuantRecipe,
+) -> (Vec<f32>, Vec<f32>) {
+    if int8_dispatch(qs.acts, qs.weights) {
+        let (ap, wp) = (qs.acts.unwrap(), qs.weights.unwrap());
+        let xa = quant::pack_acts_i8(&x, m, k, ap);
+        let xq = quant::dequant_acts_i8(&xa, m, k);
+        let wq = quant::pack_weights_i8(w, k, n, wp);
+        let ci = matmul_i8(&xa.codes, &wq.codes, m, k, n);
+        let y = rescale_i32(&ci, &xa.scales, &wq.scales, m, n);
+        (y, xq)
+    } else {
+        let xq = qdq_act_owned(x, m, k, qs.acts);
+        let wq = qdq_weight(w, k, n, qs.weights);
+        let y = matmul(&xq, &wq, m, k, n);
+        (y, xq)
+    }
+}
+
+/// Accumulating variant (`acc += qdq_a(x) @ qdq_w(w)`) for the residual
+/// linears. Returns the quantized-activation cache, `None` when
+/// activations are unquantized (matching the [`qdq_act_opt`] contract —
+/// an unquantized activation operand is never int8-eligible).
+fn quant_linear_acc(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qs: &QuantRecipe,
+    acc: &mut [f32],
+) -> Option<Vec<f32>> {
+    if int8_dispatch(qs.acts, qs.weights) {
+        let (ap, wp) = (qs.acts.unwrap(), qs.weights.unwrap());
+        let xa = quant::pack_acts_i8(x, m, k, ap);
+        let xq = quant::dequant_acts_i8(&xa, m, k);
+        let wq = quant::pack_weights_i8(w, k, n, wp);
+        let ci = matmul_i8(&xa.codes, &wq.codes, m, k, n);
+        rescale_i32_acc(acc, &ci, &xa.scales, &wq.scales, m, n);
+        Some(xq)
+    } else {
+        let xq = qdq_act_opt(x, m, k, qs.acts);
+        let wq = qdq_weight(w, k, n, qs.weights);
+        matmul_acc(acc, xq.as_deref().unwrap_or(x), &wq, m, k, n);
+        xq
+    }
+}
+
+// ---------------------------------------------------------------------------
 // forward
 // ---------------------------------------------------------------------------
 
@@ -341,9 +445,7 @@ fn forward(model: &ModelInfo, params: &[Vec<f32>], x: &[i32], qs: &QuantRecipe) 
 
         // --- attention ---
         let (a, xhat1, rstd1) = layer_norm_fwd(&hbuf, ln1_w, ln1_b, m, d);
-        let xq = qdq_act_owned(a, m, d, qs.acts);
-        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights);
-        let mut qkv = matmul(&xq, &wq, m, d, 3 * d);
+        let (mut qkv, xq) = quant_linear(a, qkv_w, m, d, 3 * d, qs);
         bias_add(&mut qkv, qkv_b, m, 3 * d);
 
         // de-interleave rows [q | k | v] into per-(batch, head) (T, hd)
@@ -400,23 +502,17 @@ fn forward(model: &ModelInfo, params: &[Vec<f32>], x: &[i32], qs: &QuantRecipe) 
             }
         });
 
-        let cq = qdq_act_opt(&ctx, m, d, qs.acts);
-        let wpq = qdq_weight(proj_w, d, d, qs.weights);
         let mut h2 = hbuf.clone();
-        matmul_acc(&mut h2, cq.as_deref().unwrap_or(&ctx), &wpq, m, d, d);
+        let cq = quant_linear_acc(&ctx, proj_w, m, d, d, qs, &mut h2);
         bias_add(&mut h2, proj_b, m, d);
 
         // --- MLP ---
         let (mm, xhat2, rstd2) = layer_norm_fwd(&h2, ln2_w, ln2_b, m, d);
-        let mq = qdq_act_owned(mm, m, d, qs.acts);
-        let w1q = qdq_weight(fc1_w, d, f, qs.weights);
-        let mut u = matmul(&mq, &w1q, m, d, f);
+        let (mut u, mq) = quant_linear(mm, fc1_w, m, d, f, qs);
         bias_add(&mut u, fc1_b, m, f);
         let g = gelu(&u);
-        let gq = qdq_act_opt(&g, m, f, qs.acts);
-        let w2q = qdq_weight(fc2_w, f, d, qs.weights);
         let mut hout = h2.clone();
-        matmul_acc(&mut hout, gq.as_deref().unwrap_or(&g), &w2q, m, f, d);
+        let gq = quant_linear_acc(&g, fc2_w, m, f, d, qs, &mut hout);
         bias_add(&mut hout, fc2_b, m, d);
 
         caches.push(LayerCache {
@@ -703,21 +799,12 @@ fn loss_and_grads(
         dh = dh2;
     }
 
-    // embeddings: scatter into wte, reduce over batch into wpe. Serial on
-    // purpose: rows sharing a token (or a position) collide, and splitting
-    // the scatter would reorder their float accumulation.
-    for r in 0..m {
-        let tok = x[r] as usize;
-        let s = r % t;
-        let src = &dh[r * d..(r + 1) * d];
-        let wte_row = &mut grads[WTE][tok * d..(tok + 1) * d];
-        for cix in 0..d {
-            wte_row[cix] += src[cix];
-        }
-        let wpe_row = &mut grads[WPE][s * d..(s + 1) * d];
-        for cix in 0..d {
-            wpe_row[cix] += src[cix];
-        }
+    // embeddings: scatter into wte, reduce over batch into wpe —
+    // owner-computes parallel (each worker owns destination rows and walks
+    // the batch ascending), bit-identical to the serial scatter
+    {
+        let (gw, gp) = grads.split_at_mut(WPE);
+        embed_scatter(&mut gw[WTE], &mut gp[0], &dh, x, m, t, d);
     }
 
     BackOut {
@@ -754,8 +841,9 @@ fn moment_qdq(info: &ParamInfo, data: &mut [f32], policy: Option<TensorPolicy>) 
 
 /// One AdamW step in place. Returns the pre-clip global gradient norm.
 /// The elementwise moment/param updates are chunk-parallel (each element
-/// is independent); the global grad norm is a cross-tensor float reduction
-/// and stays serial to keep its accumulation order.
+/// is independent); the global grad norm runs on the fixed `NORM_BLOCK`
+/// reduction tree (`kernels::sq_norm`), so it parallelizes while staying
+/// bit-identical at every thread count.
 fn adamw_update(
     model: &ModelInfo,
     state: &mut HostState,
@@ -764,12 +852,7 @@ fn adamw_update(
     t: f32,
     qs: &QuantRecipe,
 ) -> f64 {
-    let gnorm: f64 = grads
-        .iter()
-        .flat_map(|g| g.iter())
-        .map(|&x| (x as f64) * (x as f64))
-        .sum::<f64>()
-        .sqrt();
+    let gnorm: f64 = sq_norm(grads).sqrt();
     let clip = (GRAD_CLIP as f64 / (gnorm + 1e-12)).min(1.0) as f32;
     let bc1 = 1.0 - BETA1.powf(t);
     let bc2 = 1.0 - BETA2.powf(t);

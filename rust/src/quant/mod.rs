@@ -272,6 +272,142 @@ impl PackedTensor {
 }
 
 // ---------------------------------------------------------------------------
+// packed-int8 GEMM operands (the native backend's integer fast path)
+// ---------------------------------------------------------------------------
+
+/// Whether a policy can drive the int8 GEMM's *activation* (left) operand:
+/// symmetric 8-bit with the scale constant along the reduction axis — one
+/// scale per tensor or one per row/token. Asymmetric policies would leak
+/// zero-point cross terms into the i32 accumulator; per-channel activation
+/// scales vary along k and cannot be factored out of the dot product.
+pub fn int8_act_eligible(p: TensorPolicy) -> bool {
+    p.bits == 8
+        && !p.asymmetric
+        && matches!(p.granularity, Granularity::PerTensor | Granularity::PerToken)
+}
+
+/// Whether a policy can drive the int8 GEMM's *weight* (right) operand:
+/// symmetric 8-bit, scale constant along the reduction axis — per tensor
+/// or per output channel (column). Per-token weight scales vary along k.
+pub fn int8_weight_eligible(p: TensorPolicy) -> bool {
+    p.bits == 8
+        && !p.asymmetric
+        && matches!(p.granularity, Granularity::PerTensor | Granularity::PerChannel)
+}
+
+/// A GEMM operand quantized **once** onto the int8 grid: row-major codes
+/// plus one scale per group (length 1 for per-tensor operands, `rows` for
+/// per-token activations, `cols` for per-channel weights). The scales come
+/// from the same [`group_params_qmax`] the qdq oracle uses, so
+/// `scale * code` reproduces the fake-quant values bit for bit — with one
+/// caveat: an integer code cannot carry the sign of a negative zero, so a
+/// value that rounds into the zero bin *from below* dequantizes to `+0.0`
+/// where the f32 oracle yields `-0.0` (equal values, different bits).
+#[derive(Debug, Clone)]
+pub struct PackedGemmOperand {
+    pub codes: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+/// Quantize an activation matrix for the int8 GEMM. The policy must be
+/// [`int8_act_eligible`].
+pub fn pack_acts_i8(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    policy: TensorPolicy,
+) -> PackedGemmOperand {
+    assert!(int8_act_eligible(policy), "policy not int8-act eligible");
+    assert_eq!(x.len(), rows * cols);
+    let qmax = policy.qmax();
+    let params = group_params_qmax(x, rows, cols, policy.granularity, false, qmax);
+    let mut codes = Vec::with_capacity(rows * cols);
+    match policy.granularity {
+        Granularity::PerTensor => {
+            let p = params[0];
+            for &v in x {
+                codes.push(quantize_one(v, p, qmax) as i8);
+            }
+        }
+        Granularity::PerToken => {
+            for r in 0..rows {
+                let p = params[r];
+                for &v in &x[r * cols..(r + 1) * cols] {
+                    codes.push(quantize_one(v, p, qmax) as i8);
+                }
+            }
+        }
+        Granularity::PerChannel => unreachable!("rejected by eligibility"),
+    }
+    PackedGemmOperand {
+        codes,
+        scales: params.iter().map(|p| p.scale).collect(),
+    }
+}
+
+/// Quantize a (rows x cols) weight matrix for the int8 GEMM. The policy
+/// must be [`int8_weight_eligible`].
+pub fn pack_weights_i8(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    policy: TensorPolicy,
+) -> PackedGemmOperand {
+    assert!(int8_weight_eligible(policy), "policy not int8-weight eligible");
+    assert_eq!(w.len(), rows * cols);
+    let qmax = policy.qmax();
+    let params = group_params_qmax(w, rows, cols, policy.granularity, false, qmax);
+    let mut codes = Vec::with_capacity(rows * cols);
+    match policy.granularity {
+        Granularity::PerTensor => {
+            let p = params[0];
+            for &v in w {
+                codes.push(quantize_one(v, p, qmax) as i8);
+            }
+        }
+        Granularity::PerChannel => {
+            for r in 0..rows {
+                for c in 0..cols {
+                    codes.push(quantize_one(w[r * cols + c], params[c], qmax) as i8);
+                }
+            }
+        }
+        Granularity::PerToken => unreachable!("rejected by eligibility"),
+    }
+    PackedGemmOperand {
+        codes,
+        scales: params.iter().map(|p| p.scale).collect(),
+    }
+}
+
+/// Dequantize packed *activation* codes back to f32 — bitwise identical to
+/// running [`qdq`] on the original matrix (same group params, same codes,
+/// same `scale * code` expression as the symmetric [`qdq_one`]), except
+/// that zero-bin values quantized from below come back `+0.0` instead of
+/// the oracle's `-0.0` (see [`PackedGemmOperand`]). This is what lets the
+/// fast path hand backward the cache the reference path would have
+/// produced.
+pub fn dequant_acts_i8(p: &PackedGemmOperand, rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(p.codes.len(), rows * cols);
+    let mut out = Vec::with_capacity(rows * cols);
+    if p.scales.len() == 1 {
+        let s = p.scales[0];
+        for &c in &p.codes {
+            out.push(s * c as f32);
+        }
+    } else {
+        assert_eq!(p.scales.len(), rows);
+        for r in 0..rows {
+            let s = p.scales[r];
+            for &c in &p.codes[r * cols..(r + 1) * cols] {
+                out.push(s * c as f32);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // quantization-error metrics (used by analyses and reports)
 // ---------------------------------------------------------------------------
 
@@ -424,6 +560,64 @@ mod tests {
         assert!(p4.storage_bytes() < p8.storage_bytes());
         // vs fp32: 4x and 8x smaller (ignoring scales)
         assert!(p8.storage_bytes() * 4 <= 64 * 64 * 4 + 4 * 64 * 4);
+    }
+
+    #[test]
+    fn int8_eligibility_rules() {
+        // activations: symmetric 8-bit per-tensor/per-token only
+        assert!(int8_act_eligible(TensorPolicy::new(8, PerTensor)));
+        assert!(int8_act_eligible(TensorPolicy::new(8, PerToken)));
+        assert!(!int8_act_eligible(TensorPolicy::new(8, PerChannel)));
+        assert!(!int8_act_eligible(TensorPolicy::asym(8, PerToken)));
+        assert!(!int8_act_eligible(TensorPolicy::new(4, PerToken)));
+        assert!(!int8_act_eligible(TensorPolicy::new(0, PerToken)));
+        // weights: symmetric 8-bit per-tensor/per-channel only
+        assert!(int8_weight_eligible(TensorPolicy::new(8, PerTensor)));
+        assert!(int8_weight_eligible(TensorPolicy::new(8, PerChannel)));
+        assert!(!int8_weight_eligible(TensorPolicy::new(8, PerToken)));
+        assert!(!int8_weight_eligible(TensorPolicy::asym(8, PerChannel)));
+        assert!(!int8_weight_eligible(TensorPolicy::new(16, PerChannel)));
+    }
+
+    #[test]
+    fn packed_gemm_acts_dequant_bitexact_with_qdq() {
+        // the rational grid has no value in the tiny window that rounds to
+        // the zero bin from below, so the -0.0-sign caveat never triggers
+        // and full bitwise equality is the correct expectation here
+        let x = grid(16, 12);
+        for g in [PerTensor, PerToken] {
+            let pol = TensorPolicy::new(8, g);
+            let packed = pack_acts_i8(&x, 16, 12, pol);
+            let deq = dequant_acts_i8(&packed, 16, 12);
+            let fake = qdq_copy(&x, 16, 12, pol);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&deq), bits(&fake), "{g:?}: dequant != qdq");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_weights_match_qdq_values() {
+        let w = grid(24, 10);
+        for g in [PerTensor, PerChannel] {
+            let pol = TensorPolicy::new(8, g);
+            let packed = pack_weights_i8(&w, 24, 10, pol);
+            let fake = qdq_copy(&w, 24, 10, pol);
+            for r in 0..24 {
+                for c in 0..10 {
+                    let s = if packed.scales.len() == 1 {
+                        packed.scales[0]
+                    } else {
+                        packed.scales[c]
+                    };
+                    let deq = s * packed.codes[r * 10 + c] as f32;
+                    assert_eq!(
+                        deq.to_bits(),
+                        fake[r * 10 + c].to_bits(),
+                        "{g:?} at ({r},{c})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

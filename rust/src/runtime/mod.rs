@@ -214,7 +214,10 @@ pub struct Runtime {
 
 impl Runtime {
     /// Pure-rust native runtime (the default-build path; never fails).
+    /// Warms the persistent kernel worker pool so the first train/eval
+    /// step of a run doesn't pay thread-spawn latency.
     pub fn native() -> Runtime {
+        crate::backend::kernels::warm_pool();
         Runtime {
             manifest: Manifest::native(),
             backend: Box::new(crate::backend::native::NativeBackend),

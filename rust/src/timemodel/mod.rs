@@ -19,19 +19,17 @@ use std::time::Instant;
 use crate::backend::kernels::{self, matmul, matmul_nt};
 use crate::util::rng::Rng;
 
-/// Pin the kernels to one thread for the duration of a timing closure.
-/// The row/head-sample extrapolation below assumes time is linear in the
-/// sample size, which only holds at a fixed thread schedule — the work
-/// planner would otherwise give the small sample fewer threads than the
-/// full problem. The Fig. 3 claim is about the linear-vs-attention
-/// *ratio*, which is schedule-independent; `bench_linear_fraction`
-/// reports the parallel speedup separately on full-size kernels.
+/// Pin the kernels to one thread for the duration of a timing closure
+/// (via the pool's scoped [`kernels::with_threads`], which restores the
+/// previous knob even on panic). The row/head-sample extrapolation below
+/// assumes time is linear in the sample size, which only holds at a fixed
+/// thread schedule — the work planner would otherwise give the small
+/// sample fewer threads than the full problem. The Fig. 3 claim is about
+/// the linear-vs-attention *ratio*, which is schedule-independent;
+/// `bench_linear_fraction` reports the parallel speedup separately on
+/// full-size kernels.
 fn timed_single_threaded<T>(f: impl FnOnce() -> T) -> T {
-    let prev = kernels::threads_override();
-    kernels::set_threads(1);
-    let out = f();
-    kernels::set_threads(prev);
-    out
+    kernels::with_threads(1, f)
 }
 
 pub const SIZES: [&str; 4] = ["small", "medium", "large", "xl"];

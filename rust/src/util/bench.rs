@@ -25,14 +25,25 @@ impl BenchResult {
     }
 }
 
+/// Whether `QPRETRAIN_BENCH_FAST` is set (CI smoke mode): the single
+/// definition of the fast-mode predicate — bench binaries that also shrink
+/// their own workloads (step counts, reps) must consult this, not re-parse
+/// the variable.
+pub fn fast_mode() -> bool {
+    static CACHE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        matches!(std::env::var("QPRETRAIN_BENCH_FAST"), Ok(v) if !v.is_empty() && v != "0")
+    })
+}
+
 /// Seconds of measurement per case. `QPRETRAIN_BENCH_FAST=1` shrinks it so
 /// CI can smoke-run the bench binaries without paying full measurement time.
 fn target_secs() -> f64 {
-    static CACHE: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
-    *CACHE.get_or_init(|| match std::env::var("QPRETRAIN_BENCH_FAST") {
-        Ok(v) if !v.is_empty() && v != "0" => 0.05,
-        _ => 1.0,
-    })
+    if fast_mode() {
+        0.05
+    } else {
+        1.0
+    }
 }
 
 fn warmup_window() -> Duration {

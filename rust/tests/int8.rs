@@ -1,0 +1,301 @@
+//! Packed-int8 GEMM fast-path suite: exactness against the f32 qdq
+//! reference oracle, determinism, and dispatch rules.
+//!
+//! Three contracts:
+//!
+//! * **Bitwise where f32 is exact** — when scales are exact powers of two
+//!   and every intermediate f32 sum stays on the integer grid below 2^24,
+//!   the qdq reference path commits no rounding, so the packed path (exact
+//!   i32 accumulation + one rescale) must reproduce it bit for bit.
+//! * **Bounded everywhere else** — on general data the two paths differ
+//!   only by the f32 summation rounding the *reference* commits; the gap
+//!   per element is bounded by a small multiple of the row magnitude.
+//! * **Dispatch** — asymmetric activations, per-token weights, non-8-bit
+//!   policies and unquantized operands must fall back to the qdq path
+//!   (proved end-to-end: eval with the fast path enabled equals eval with
+//!   it disabled, bitwise), while w8a8 takes the fast path and stays
+//!   bit-identical across thread counts.
+//!
+//! Tests here mutate process-wide knobs (thread count, int8 switch), so
+//! they serialize on a mutex and restore via RAII guards.
+
+use std::sync::{Mutex, MutexGuard};
+
+use qpretrain::backend::{kernels, native};
+use qpretrain::config::{Granularity, QuantRecipe, TensorPolicy};
+use qpretrain::data::{BatchIter, CorpusCfg};
+use qpretrain::model::init_state;
+use qpretrain::quant;
+use qpretrain::runtime::Runtime;
+use qpretrain::util::rng::Rng;
+
+static KNOBS: Mutex<()> = Mutex::new(());
+
+/// Serializes the test and restores every process-wide knob on drop.
+struct Knobs(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+fn knobs() -> Knobs {
+    Knobs(KNOBS.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+impl Drop for Knobs {
+    fn drop(&mut self) {
+        kernels::force_parallel(false);
+        kernels::set_threads(0);
+        native::set_int8_gemm(true);
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The f32 qdq reference for one linear: fake-quantize both operands, then
+/// the plain f32 GEMM.
+fn qdq_reference(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ap: TensorPolicy,
+    wp: TensorPolicy,
+) -> Vec<f32> {
+    let xq = quant::qdq_copy(x, m, k, ap);
+    let wq = quant::qdq_copy(w, k, n, wp);
+    kernels::matmul(&xq, &wq, m, k, n)
+}
+
+/// The packed path for one linear: quantize once to i8, i32 GEMM, rescale.
+fn int8_path(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ap: TensorPolicy,
+    wp: TensorPolicy,
+) -> Vec<f32> {
+    let xa = quant::pack_acts_i8(x, m, k, ap);
+    let wq = quant::pack_weights_i8(w, k, n, wp);
+    let ci = kernels::matmul_i8(&xa.codes, &wq.codes, m, k, n);
+    kernels::rescale_i32(&ci, &xa.scales, &wq.scales, m, n)
+}
+
+/// Integer-grid operands whose quant scales come out exactly 1.0: values
+/// are integers in [-127, 127], with the per-row (acts) / per-column
+/// (weights) abs-max pinned to exactly 127.
+fn exact_operands(m: usize, k: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut x: Vec<f32> = (0..m * k).map(|_| (rng.below(201) as f32) - 100.0).collect();
+    for r in 0..m {
+        x[r * k] = 127.0; // row amax -> scale 127/127 = 1.0 exactly
+    }
+    let mut w: Vec<f32> = (0..k * n).map(|_| (rng.below(201) as f32) - 100.0).collect();
+    for c in 0..n {
+        w[c] = -127.0; // column amax -> scale 1.0 exactly
+    }
+    (x, w)
+}
+
+#[test]
+fn int8_bitwise_equals_qdq_where_f32_is_exact() {
+    let _g = knobs();
+    // k small enough that every intermediate sum stays below 2^24:
+    // |sum| <= k * 127 * 127 = 32 * 16129 ~ 5.2e5 << 1.6e7
+    let (m, k, n) = (9, 32, 11);
+    let (x, w) = exact_operands(m, k, n, 0x1A7);
+    for (ap, wp) in [
+        (
+            TensorPolicy::new(8, Granularity::PerToken),
+            TensorPolicy::new(8, Granularity::PerChannel),
+        ),
+        (
+            TensorPolicy::new(8, Granularity::PerTensor),
+            TensorPolicy::new(8, Granularity::PerTensor),
+        ),
+        (
+            TensorPolicy::new(8, Granularity::PerToken),
+            TensorPolicy::new(8, Granularity::PerTensor),
+        ),
+    ] {
+        let reference = qdq_reference(&x, &w, m, k, n, ap, wp);
+        for threads in [1usize, 2, 3, 7, 16] {
+            kernels::set_threads(threads);
+            kernels::force_parallel(threads > 1);
+            let fast = int8_path(&x, &w, m, k, n, ap, wp);
+            assert_eq!(
+                bits(&fast),
+                bits(&reference),
+                "{ap:?}/{wp:?} at {threads} threads: packed path not bitwise exact"
+            );
+        }
+        kernels::force_parallel(false);
+    }
+}
+
+#[test]
+fn int8_error_bounded_on_general_data() {
+    let _g = knobs();
+    let mut rng = Rng::new(0xE44);
+    let (m, k, n) = (16, 48, 20);
+    let x = rng.normal_vec(m * k, 0.0, 1.5);
+    let w = rng.normal_vec(k * n, 0.0, 0.8);
+    let ap = TensorPolicy::new(8, Granularity::PerToken);
+    let wp = TensorPolicy::new(8, Granularity::PerChannel);
+    let reference = qdq_reference(&x, &w, m, k, n, ap, wp);
+    let fast = int8_path(&x, &w, m, k, n, ap, wp);
+    for i in 0..m {
+        let row_mag = reference[i * n..(i + 1) * n]
+            .iter()
+            .fold(0.0f32, |a, &v| a.max(v.abs()));
+        for j in 0..n {
+            let diff = (fast[i * n + j] - reference[i * n + j]).abs();
+            // the only divergence is the f32 rounding the reference commits
+            // over its k-term sums: a few ulps of the row magnitude
+            assert!(
+                diff <= 1e-4 * (row_mag + 1.0),
+                "({i},{j}): int8 {} vs qdq {} (row magnitude {row_mag})",
+                fast[i * n + j],
+                reference[i * n + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn matmul_i8_exact_vs_widened_reference() {
+    let _g = knobs();
+    let mut rng = Rng::new(0x18);
+    let (m, k, n) = (7, 130, 9); // k straddles the K panel
+    let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let b: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    // widened i64 reference: i32 accumulation must be exact at these sizes
+    let mut want = vec![0i64; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            for j in 0..n {
+                want[i * n + j] += a[i * k + l] as i64 * b[l * n + j] as i64;
+            }
+        }
+    }
+    for threads in [1usize, 2, 3, 7, 16] {
+        kernels::set_threads(threads);
+        kernels::force_parallel(threads > 1);
+        let got = kernels::matmul_i8(&a, &b, m, k, n);
+        let got64: Vec<i64> = got.iter().map(|&v| v as i64).collect();
+        assert_eq!(got64, want, "{threads} threads");
+    }
+}
+
+#[test]
+fn dispatch_rules() {
+    use Granularity::*;
+    let _g = knobs();
+    let ok_a = Some(TensorPolicy::new(8, PerToken));
+    let ok_w = Some(TensorPolicy::new(8, PerChannel));
+    assert!(native::int8_dispatch(ok_a, ok_w));
+    assert!(native::int8_dispatch(
+        Some(TensorPolicy::new(8, PerTensor)),
+        Some(TensorPolicy::new(8, PerTensor))
+    ));
+    // asymmetric activations: zero-point cross terms -> qdq path
+    assert!(!native::int8_dispatch(Some(TensorPolicy::asym(8, PerToken)), ok_w));
+    // scale varies along the reduction axis -> qdq path
+    assert!(!native::int8_dispatch(Some(TensorPolicy::new(8, PerChannel)), ok_w));
+    assert!(!native::int8_dispatch(ok_a, Some(TensorPolicy::new(8, PerToken))));
+    // other bit-widths / placement-only / unquantized operands -> qdq path
+    assert!(!native::int8_dispatch(Some(TensorPolicy::new(4, PerToken)), ok_w));
+    assert!(!native::int8_dispatch(ok_a, Some(TensorPolicy::new(0, PerChannel))));
+    assert!(!native::int8_dispatch(None, ok_w));
+    assert!(!native::int8_dispatch(ok_a, None));
+    // the process-wide switch gates everything
+    native::set_int8_gemm(false);
+    assert!(!native::int8_dispatch(ok_a, ok_w));
+    native::set_int8_gemm(true);
+}
+
+/// End-to-end fallback proof: for recipes outside the dispatch rule, a
+/// forward pass with the fast path enabled is bitwise identical to one
+/// with it disabled — i.e. the fast path never engaged.
+#[test]
+fn ineligible_recipes_fall_back_to_qdq_bitwise() {
+    let _g = knobs();
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 21);
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let mask = vec![1.0f32; model.batch * model.seq];
+    for spec in ["w8_pc+a8_ptok_asym", "w8_ptok+a8_ptok", "w4_pc+a8_ptok", "w8_pc"] {
+        let recipe = QuantRecipe::parse(spec).unwrap();
+        native::set_int8_gemm(true);
+        let on = rt
+            .eval_step(&model, &recipe, &state.params, &b.x, &b.y, &mask)
+            .unwrap();
+        native::set_int8_gemm(false);
+        let off = rt
+            .eval_step(&model, &recipe, &state.params, &b.x, &b.y, &mask)
+            .unwrap();
+        native::set_int8_gemm(true);
+        assert_eq!(
+            bits(&on.per_pos),
+            bits(&off.per_pos),
+            "{spec}: fast path engaged for an ineligible recipe"
+        );
+        assert_eq!(on.mean_nll.to_bits(), off.mean_nll.to_bits(), "{spec}");
+    }
+}
+
+/// The eligible w8a8 recipe takes the fast path: its forward is close to
+/// the qdq reference (rounding-level gap only) and bit-identical across
+/// thread counts.
+#[test]
+fn w8a8_fast_path_close_to_reference_and_thread_invariant() {
+    let _g = knobs();
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 33);
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let mask = vec![1.0f32; model.batch * model.seq];
+    let recipe = QuantRecipe::parse("w8a8").unwrap();
+
+    native::set_int8_gemm(false);
+    let reference = rt
+        .eval_step(&model, &recipe, &state.params, &b.x, &b.y, &mask)
+        .unwrap();
+    native::set_int8_gemm(true);
+
+    kernels::set_threads(1);
+    let fast1 = rt
+        .eval_step(&model, &recipe, &state.params, &b.x, &b.y, &mask)
+        .unwrap();
+    assert!(
+        (fast1.mean_nll - reference.mean_nll).abs() < 0.02,
+        "int8 {} vs qdq {}: more than rounding apart",
+        fast1.mean_nll,
+        reference.mean_nll
+    );
+
+    kernels::set_threads(7);
+    kernels::force_parallel(true);
+    let fast7 = rt
+        .eval_step(&model, &recipe, &state.params, &b.x, &b.y, &mask)
+        .unwrap();
+    kernels::force_parallel(false);
+    assert_eq!(
+        bits(&fast1.per_pos),
+        bits(&fast7.per_pos),
+        "int8 fast path not thread-invariant"
+    );
+    assert_eq!(fast1.mean_nll.to_bits(), fast7.mean_nll.to_bits());
+}

@@ -5,9 +5,14 @@
 //! The whole quantization reproduction rests on bit-exact accumulation
 //! (the golden fixtures chain back to the jnp oracle), so the parallel
 //! kernels are required to be *identical* — not approximately equal — to
-//! the serial path, at every thread count, across randomized shapes
-//! including degenerate ones (m=1, k=1, dimensions that are not multiples
-//! of the K panel or of the per-thread span).
+//! the serial path, at every thread count (the sweep pins {1,2,3,7,16}),
+//! across randomized shapes including degenerate ones (m=1, k=1,
+//! dimensions that are not multiples of the K panel or of the per-thread
+//! span). The fixed-shape tree reductions (layernorm dw/db, embedding
+//! scatter, grad norm) are additionally checked for repeated-run
+//! stability, and the persistent worker pool gets a reuse/stress case
+//! (thousands of small forced-parallel dispatches at churning thread
+//! counts) to catch handoff races that a single dispatch would never hit.
 //!
 //! Tests here mutate the process-wide thread knobs, so they serialize on a
 //! mutex and restore the knobs via an RAII guard (panic-safe).
@@ -128,12 +133,138 @@ fn degenerate_shapes_bit_identical() {
     for &(m, k, n) in &shapes {
         let a = rng.normal_vec(m * k, 0.0, 1.0);
         let b = rng.normal_vec(k * n, 0.0, 1.0);
-        for threads in [1, 2, 3, 5, 16] {
+        for threads in [1, 2, 3, 7, 16] {
             kernels::set_threads(threads);
             assert!(
                 mm_case_identical(&a, &b, m, k, n),
                 "shape ({m},{k},{n}) at {threads} threads differs from serial"
             );
+        }
+    }
+}
+
+#[test]
+fn pool_reuse_stress_many_small_dispatches() {
+    // thousands of forced-parallel dispatches of tiny kernels, with the
+    // thread count churning every call: exercises the persistent pool's
+    // job handoff and barrier over and over (a handoff race — a lost
+    // wakeup, a leaked job, a part run twice — shows up as a wrong result
+    // or a hang here long before it would in a training run)
+    let _guard = forced(4);
+    let mut rng = Rng::new(0x9001);
+    let (m, k, n) = (5, 9, 7);
+    let a = rng.normal_vec(m * k, 0.0, 1.0);
+    let b = rng.normal_vec(k * n, 0.0, 1.0);
+    let want_mm = bits(&math::matmul(&a, &b, m, k, n));
+    let (rows, d) = (6, 5);
+    let x = rng.normal_vec(rows * d, 0.0, 1.0);
+    let w = rng.normal_vec(d, 1.0, 0.1);
+    let bias = rng.normal_vec(d, 0.0, 0.1);
+    let want_ln = math::layer_norm_fwd(&x, &w, &bias, rows, d);
+    for i in 0..2000 {
+        kernels::set_threads(2 + (i % 7));
+        assert_eq!(
+            bits(&kernels::matmul(&a, &b, m, k, n)),
+            want_mm,
+            "dispatch {i}: matmul diverged"
+        );
+        let got = kernels::layer_norm_fwd(&x, &w, &bias, rows, d);
+        assert_eq!(bits(&got.0), bits(&want_ln.0), "dispatch {i}: layernorm diverged");
+    }
+}
+
+#[test]
+fn prop_embed_scatter_bit_identical() {
+    let _guard = forced(4);
+    check(
+        cfg(60),
+        |rng| {
+            let t = rng.range(1, 9);
+            let b = rng.range(1, 5);
+            let d = rng.range(1, 17);
+            let v = rng.range(1, 33);
+            let m = b * t;
+            let x: Vec<i32> = (0..m).map(|_| rng.below(v) as i32).collect();
+            let dh = rng.normal_vec(m * d, 0.0, 1.0);
+            let threads = rng.range(2, 17);
+            (x, dh, t, d, v, threads)
+        },
+        |(x, dh, t, d, v, threads)| {
+            let (t, d, v) = (*t, *d, *v);
+            let m = x.len();
+            // nonzero starting accumulators: the wte grad already holds the
+            // tied-head contribution when the scatter runs
+            let mut wte1 = vec![0.05f32; v * d];
+            let mut wpe1 = vec![-0.1f32; t * d];
+            let mut wte2 = wte1.clone();
+            let mut wpe2 = wpe1.clone();
+            math::embed_scatter(&mut wte1, &mut wpe1, dh, x, m, t, d);
+            kernels::set_threads(*threads);
+            kernels::embed_scatter(&mut wte2, &mut wpe2, dh, x, m, t, d);
+            bits(&wte1) == bits(&wte2) && bits(&wpe1) == bits(&wpe2)
+        },
+    );
+}
+
+#[test]
+fn tree_reductions_thread_invariant_and_repeat_stable() {
+    // rows/elements straddle the fixed block boundaries; every thread count
+    // in {1,2,3,7,16} and every repeat must produce the serial bits
+    let _guard = forced(1);
+    let mut rng = Rng::new(0x7EE);
+
+    // layernorm dw/db across multiple REDUCE_ROWS blocks
+    let rows = math::REDUCE_ROWS * 2 + 17;
+    let d = 33;
+    let x = rng.normal_vec(rows * d, 0.0, 1.0);
+    let w = rng.normal_vec(d, 1.0, 0.2);
+    let b = rng.normal_vec(d, 0.0, 0.2);
+    let dy = rng.normal_vec(rows * d, 0.0, 1.0);
+    let (_, xhat, rstd) = math::layer_norm_fwd(&x, &w, &b, rows, d);
+    let mut dw_ref = vec![0.0f32; d];
+    let mut db_ref = vec![0.0f32; d];
+    let dx_ref = math::layer_norm_bwd(&dy, &xhat, &rstd, &w, rows, d, &mut dw_ref, &mut db_ref);
+
+    // grad-norm blocks straddle NORM_BLOCK
+    let tensors = vec![
+        rng.normal_vec(math::NORM_BLOCK + 123, 0.0, 1.0),
+        rng.normal_vec(7, 0.0, 1.0),
+        Vec::new(),
+        rng.normal_vec(2 * math::NORM_BLOCK, 0.0, 0.5),
+    ];
+    let norm_ref = math::sq_norm(&tensors);
+
+    // embedding scatter on a fixed case
+    let (t, d2, v) = (8, 16, 24);
+    let m = 4 * t;
+    let toks: Vec<i32> = (0..m).map(|_| rng.below(v) as i32).collect();
+    let dh = rng.normal_vec(m * d2, 0.0, 1.0);
+    let mut wte_ref = vec![0.0f32; v * d2];
+    let mut wpe_ref = vec![0.0f32; t * d2];
+    math::embed_scatter(&mut wte_ref, &mut wpe_ref, &dh, &toks, m, t, d2);
+
+    for threads in [1usize, 2, 3, 7, 16] {
+        for rep in 0..3 {
+            kernels::set_threads(threads);
+            let mut dw = vec![0.0f32; d];
+            let mut db = vec![0.0f32; d];
+            let dx = kernels::layer_norm_bwd(&dy, &xhat, &rstd, &w, rows, d, &mut dw, &mut db);
+            assert_eq!(bits(&dx), bits(&dx_ref), "dx at {threads} threads rep {rep}");
+            assert_eq!(bits(&dw), bits(&dw_ref), "dw at {threads} threads rep {rep}");
+            assert_eq!(bits(&db), bits(&db_ref), "db at {threads} threads rep {rep}");
+
+            let norm = kernels::sq_norm(&tensors);
+            assert_eq!(
+                norm.to_bits(),
+                norm_ref.to_bits(),
+                "sq_norm at {threads} threads rep {rep}"
+            );
+
+            let mut wte = vec![0.0f32; v * d2];
+            let mut wpe = vec![0.0f32; t * d2];
+            kernels::embed_scatter(&mut wte, &mut wpe, &dh, &toks, m, t, d2);
+            assert_eq!(bits(&wte), bits(&wte_ref), "wte at {threads} threads rep {rep}");
+            assert_eq!(bits(&wpe), bits(&wpe_ref), "wpe at {threads} threads rep {rep}");
         }
     }
 }

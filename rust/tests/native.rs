@@ -10,11 +10,20 @@
 //! * the paper's qualitative orderings (w2 < w8; m2 per-tensor 8-bit
 //!   unstable) reproduce natively.
 
+use std::sync::Mutex;
+
 use qpretrain::config::{Granularity, QuantRecipe, TensorPolicy, TrainHp};
 use qpretrain::data::{BatchIter, CorpusCfg};
 use qpretrain::model::init_state;
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{train, TrainCfg};
+
+/// Serializes every test that either flips the process-wide int8-GEMM
+/// switch or trains a recipe whose dispatch that switch decides (w8a8):
+/// unlike the thread knobs, the int8 switch changes *results*, so a
+/// concurrent flip mid-run would make a loss curve a nondeterministic
+/// hybrid of the two paths.
+static INT8_KNOB: Mutex<()> = Mutex::new(());
 
 fn hp(steps: usize) -> TrainHp {
     TrainHp {
@@ -183,6 +192,7 @@ fn m2_per_tensor_8bit_unstable() {
 #[test]
 fn wa_recipe_tracks_baseline() {
     // paper §4.5: W8 per-channel + A8 per-token stays close to fp32
+    let _int8 = INT8_KNOB.lock().unwrap_or_else(|e| e.into_inner());
     let rt = Runtime::native();
     let base = train(&rt, &TrainCfg::new("micro", QuantRecipe::none(), hp(25))).unwrap();
     let wa = train(&rt, &TrainCfg::new("micro", recipe("w8a8"), hp(25))).unwrap();
@@ -230,22 +240,29 @@ fn masked_eval_matches_manual_mean() {
 
 #[test]
 fn train_run_bit_identical_across_thread_counts() {
-    // Two full micro train runs — one pinned to a single kernel thread,
-    // one forced onto the parallel path with many threads — must produce
-    // bit-identical loss curves, grad norms, validation losses, final
-    // params and Adam moments. This is the determinism contract the
-    // parallel kernel subsystem is built on (and what lets the golden
-    // fixtures stay unchanged). Quantization active (w8a8) so the qdq
-    // injection points run inside the parallel region too.
-    use qpretrain::backend::kernels;
+    // Full micro train runs — pinned to a single kernel thread vs forced
+    // onto the parallel path with many threads — must produce bit-identical
+    // loss curves, grad norms, validation losses, final params and Adam
+    // moments. This is the determinism contract the parallel kernel
+    // subsystem (persistent pool + fixed-shape tree reductions) is built on
+    // (and what lets the golden fixtures stay unchanged). Quantization
+    // active (w8a8) so the injection points run inside the parallel region
+    // too — once through the packed-int8 fast path (the default dispatch
+    // for w8a8) and once through the f32 qdq reference path, so *both*
+    // execution paths carry the thread-invariance contract.
+    use qpretrain::backend::{kernels, native};
+
+    let _int8 = INT8_KNOB.lock().unwrap_or_else(|e| e.into_inner());
 
     // panic-safe reset of the process-wide knobs (a mid-train panic must
-    // not leave force_parallel on for the rest of the test binary)
+    // not leave force_parallel / the int8 switch flipped for the rest of
+    // the test binary)
     struct KnobReset;
     impl Drop for KnobReset {
         fn drop(&mut self) {
             kernels::force_parallel(false);
             kernels::set_threads(0);
+            native::set_int8_gemm(true);
         }
     }
     let _reset = KnobReset;
@@ -260,8 +277,6 @@ fn train_run_bit_identical_across_thread_counts() {
         kernels::force_parallel(false);
         r
     };
-    let serial = run(1, false);
-    let many = run(7, true); // force: even sub-threshold kernels fork
 
     // compare at the bit level: PartialEq on floats would let sign-of-zero
     // differences (the first symptom of a reordered reduction) slip through
@@ -273,13 +288,36 @@ fn train_run_bit_identical_across_thread_counts() {
             .map(|t| t.iter().map(|x| x.to_bits()).collect::<Vec<u32>>())
             .collect::<Vec<_>>()
     };
-    assert_eq!(f64_bits(&serial.losses), f64_bits(&many.losses), "loss curves diverged");
-    assert_eq!(f64_bits(&serial.gnorms), f64_bits(&many.gnorms), "grad norms diverged");
-    assert_eq!(val_bits(&serial.val), val_bits(&many.val), "validation losses diverged");
-    let (a, b) = (&serial.final_state, &many.final_state);
-    assert_eq!(state_bits(&a.params), state_bits(&b.params), "final params diverged");
-    assert_eq!(state_bits(&a.m), state_bits(&b.m), "first moments diverged");
-    assert_eq!(state_bits(&a.v), state_bits(&b.v), "second moments diverged");
+
+    for int8 in [true, false] {
+        native::set_int8_gemm(int8);
+        let serial = run(1, false);
+        let many = run(7, true); // force: even sub-threshold kernels fork
+        let path = if int8 { "int8" } else { "qdq" };
+        assert_eq!(
+            f64_bits(&serial.losses),
+            f64_bits(&many.losses),
+            "{path}: loss curves diverged"
+        );
+        assert_eq!(
+            f64_bits(&serial.gnorms),
+            f64_bits(&many.gnorms),
+            "{path}: grad norms diverged"
+        );
+        assert_eq!(
+            val_bits(&serial.val),
+            val_bits(&many.val),
+            "{path}: validation losses diverged"
+        );
+        let (a, b) = (&serial.final_state, &many.final_state);
+        assert_eq!(
+            state_bits(&a.params),
+            state_bits(&b.params),
+            "{path}: final params diverged"
+        );
+        assert_eq!(state_bits(&a.m), state_bits(&b.m), "{path}: first moments diverged");
+        assert_eq!(state_bits(&a.v), state_bits(&b.v), "{path}: second moments diverged");
+    }
 }
 
 #[test]
