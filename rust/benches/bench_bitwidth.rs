@@ -40,7 +40,11 @@ fn main() {
         sweep_secs += t0.elapsed().as_secs_f64();
         println!(
             "{:>4}  {:>10.4}  {}",
-            if bits == 0 { "fp".into() } else { bits.to_string() },
+            if bits == 0 {
+                "fp".into()
+            } else {
+                bits.to_string()
+            },
             r.final_loss(),
             r.diverged
         );

@@ -1,12 +1,15 @@
 //! Native-backend kernel benches: the serial reference (`backend::math`)
 //! against the parallel production kernels (`backend::kernels`) at the
-//! forward/backward matmul shapes, plus the fake-quant oracle and the
+//! forward/backward matmul shapes, the SIMD vector path against its
+//! bit-identical scalar lane emulation, plus the fake-quant oracle and the
 //! fused qdq+matmul path (the §3.3 "linear layers dominate" substrate).
 //!
-//! Emits `BENCH_kernels.json` at the repo root — GFLOP/s, thread count and
-//! serial-vs-parallel speedup per kernel — so future perf PRs have a
-//! machine-readable trajectory to beat. Before timing anything, every
-//! parallel kernel is asserted bit-identical to its serial reference.
+//! Emits `BENCH_kernels.json` at the repo root — GFLOP/s, thread count,
+//! serial-vs-parallel and scalar-vs-SIMD speedup per kernel — so future
+//! perf PRs have a machine-readable trajectory to beat, then fails against
+//! the committed floors in `rust/tests/bench_baseline.json`. Before timing
+//! anything, every parallel kernel is asserted bit-identical to its serial
+//! reference, and the SIMD path to its scalar emulation.
 
 use qpretrain::backend::{kernels, math};
 use qpretrain::config::{Granularity, TensorPolicy};
@@ -43,6 +46,15 @@ fn pair(
 fn main() {
     let threads = kernels::max_threads();
     println!("kernel threads: {threads} (pin with --threads / RAYON_NUM_THREADS)");
+    println!(
+        "simd: {} (supported: {}; pin off with QPRETRAIN_SIMD=off)",
+        if kernels::simd_active() {
+            "active"
+        } else {
+            "scalar lane emulation"
+        },
+        kernels::simd_supported()
+    );
 
     let mut rng = Rng::new(2);
     let (m, n, k) = (256usize, 512usize, 256usize);
@@ -67,6 +79,30 @@ fn main() {
         bits(&kernels::matmul_tn(&x, &g, m, n, k))
     );
     println!("bit-exactness preflight: parallel kernels == serial reference");
+
+    // ...and across the ISA axis: the vector microkernels must reproduce
+    // the scalar lane emulation bit for bit before their speedup means
+    // anything (vacuously true on machines without AVX2+FMA)
+    {
+        let scalar = kernels::with_simd(false, || {
+            (
+                kernels::matmul(&x, &w, m, n, k),
+                kernels::matmul_nt(&x, &wt, m, n, k),
+                kernels::matmul_tn(&x, &g, m, n, k),
+            )
+        });
+        let simd = kernels::with_simd(true, || {
+            (
+                kernels::matmul(&x, &w, m, n, k),
+                kernels::matmul_nt(&x, &wt, m, n, k),
+                kernels::matmul_tn(&x, &g, m, n, k),
+            )
+        });
+        assert_eq!(bits(&scalar.0), bits(&simd.0), "matmul: simd != scalar emulation");
+        assert_eq!(bits(&scalar.1), bits(&simd.1), "matmul_nt: simd != scalar emulation");
+        assert_eq!(bits(&scalar.2), bits(&simd.2), "matmul_tn: simd != scalar emulation");
+        println!("lane-determinism preflight: SIMD == scalar emulation");
+    }
 
     let mut results = Vec::new();
     let flops = (2 * m * n * k) as u64;
@@ -108,6 +144,61 @@ fn main() {
         || kernels::matmul(&gx, &gw, gm, gk, gn),
         &mut results,
     );
+
+    section("SIMD vector path vs scalar lane emulation (1 thread)");
+    // the ISA axis in isolation: same kernel, same single thread, dispatch
+    // pinned to the vector microkernels vs their bit-identical emulation
+    let gflops_f32 = (2 * gm * gk * gn) as u64;
+    let s = kernels::with_threads(1, || {
+        kernels::with_simd(false, || {
+            bench("f32_gemm/scalar_lanes", || kernels::matmul(&gx, &gw, gm, gk, gn))
+        })
+    });
+    let p = kernels::with_threads(1, || {
+        kernels::with_simd(true, || {
+            bench("f32_gemm/simd", || kernels::matmul(&gx, &gw, gm, gk, gn))
+        })
+    });
+    let f32_speedup = s.mean_ns / p.mean_ns;
+    println!(
+        "    simd_f32_gemm: {:.2} -> {:.2} GFLOP/s  ({f32_speedup:.2}x)",
+        s.gflops(gflops_f32),
+        p.gflops(gflops_f32)
+    );
+    results.push(json::obj(vec![
+        ("name", json::s("simd_f32_gemm")),
+        ("flops", json::num(gflops_f32 as f64)),
+        ("scalar_gflops", json::num(s.gflops(gflops_f32))),
+        ("simd_gflops", json::num(p.gflops(gflops_f32))),
+        ("speedup", json::num(f32_speedup)),
+    ]));
+    let (im, ik, in_) = (256usize, 512usize, 256usize);
+    let ia: Vec<i8> = (0..im * ik).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let ib: Vec<i8> = (0..ik * in_).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let iops = (2 * im * ik * in_) as u64;
+    let s = kernels::with_threads(1, || {
+        kernels::with_simd(false, || {
+            bench("i8_gemm/scalar_lanes", || kernels::matmul_i8(&ia, &ib, im, ik, in_))
+        })
+    });
+    let p = kernels::with_threads(1, || {
+        kernels::with_simd(true, || {
+            bench("i8_gemm/simd", || kernels::matmul_i8(&ia, &ib, im, ik, in_))
+        })
+    });
+    let i8_speedup = s.mean_ns / p.mean_ns;
+    println!(
+        "    simd_i8_gemm: {:.2} -> {:.2} Giop/s  ({i8_speedup:.2}x)",
+        s.gflops(iops),
+        p.gflops(iops)
+    );
+    results.push(json::obj(vec![
+        ("name", json::s("simd_i8_gemm")),
+        ("flops", json::num(iops as f64)),
+        ("scalar_gflops", json::num(s.gflops(iops))),
+        ("simd_gflops", json::num(p.gflops(iops))),
+        ("speedup", json::num(i8_speedup)),
+    ]));
 
     section("row/elementwise kernels serial vs parallel");
     let rows = 4096usize;
@@ -178,7 +269,7 @@ fn main() {
         let reference = kernels::matmul(&xq, &wq, m, n, k);
         let xa = qpretrain::quant::pack_acts_i8(&x, m, n, ap);
         let wa = qpretrain::quant::pack_weights_i8(&w, n, k, wp);
-        let ci = kernels::matmul_i8(&xa.codes, &wa.codes, m, n, k);
+        let ci = kernels::matmul_i8_packed(&xa, &wa);
         let fast = kernels::rescale_i32(&ci, &xa.scales, &wa.scales, m, k);
         // bound against the output magnitude: the gap is the f32 summation
         // rounding the reference commits, which scales with the reduction,
@@ -201,9 +292,9 @@ fn main() {
     });
     let p = bench("int8_packed_path (pack a + cache + pack w + i32 gemm + rescale)", || {
         let xa = qpretrain::quant::pack_acts_i8(&x, m, n, ap);
-        let _cache = qpretrain::quant::dequant_acts_i8(&xa, m, n);
+        let _cache = qpretrain::quant::dequant_acts_i8(&xa);
         let wa = qpretrain::quant::pack_weights_i8(&w, n, k, wp);
-        let ci = kernels::matmul_i8(&xa.codes, &wa.codes, m, n, k);
+        let ci = kernels::matmul_i8_packed(&xa, &wa);
         kernels::rescale_i32(&ci, &xa.scales, &wa.scales, m, k)
     });
     let int8_speedup = s.mean_ns / p.mean_ns;
@@ -240,9 +331,12 @@ fn main() {
         ("bench", json::s("kernels")),
         ("threads", json::num(threads as f64)),
         ("pool_workers", json::num(kernels::pool_workers() as f64)),
+        ("simd", Value::Bool(kernels::simd_active())),
         ("results", Value::Arr(results)),
     ]);
     let path = qpretrain::util::repo_root().join("BENCH_kernels.json");
     std::fs::write(&path, report.to_json()).expect("write BENCH_kernels.json");
     println!("\nwrote {}", path.display());
+    qpretrain::util::bench::check_against_baseline(&report, "kernels")
+        .expect("bench_kernels regressed below the committed perf floors");
 }

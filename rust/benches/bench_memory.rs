@@ -12,10 +12,14 @@ fn main() {
         fig15_table(&["small", "medium", "large"], &[128, 256, 512, 1024, 2048], 4)
     );
     println!("\npaper shape checks:");
-    let small64 = qpretrain::memmodel::peak_memory(&qpretrain::memmodel::profile_model("small"), 64, 1024);
+    let small64 =
+        qpretrain::memmodel::peak_memory(&qpretrain::memmodel::profile_model("small"), 64, 1024);
     println!(
         "  small@batch64: activations+logits share = {:.1}% (paper: activations dominate)",
         100.0 * (small64.activations + small64.logits) as f64 / small64.total() as f64
     );
-    println!("  small@batch64 peak phase = {} (paper App. B: grads absent at peak)", small64.peak_phase);
+    println!(
+        "  small@batch64 peak phase = {} (paper App. B: grads absent at peak)",
+        small64.peak_phase
+    );
 }

@@ -5,9 +5,11 @@
 //! (forward+backward+Adam vs data generation).
 //!
 //! Emits `BENCH_train_loop.json` at the repo root (steps/s, tokens/s,
-//! thread count, serial-vs-pool and int8-vs-qdq speedups) for the perf
-//! trajectory; CI uploads it as an artifact per run. Set
-//! `QPRETRAIN_BENCH_FAST=1` for a smoke run with shrunk step counts.
+//! thread count, serial-vs-pool, int8-vs-qdq and scalar-vs-SIMD speedups)
+//! for the perf trajectory, then fails against the committed floors in
+//! `rust/tests/bench_baseline.json`; CI uploads the JSON as an artifact
+//! per run. Set `QPRETRAIN_BENCH_FAST=1` for a smoke run with shrunk step
+//! counts.
 
 use std::time::Instant;
 
@@ -46,7 +48,11 @@ fn main() {
     let rt = Runtime::open_default().expect("runtime");
     let threads = kernels::max_threads();
     let fast = qpretrain::util::bench::fast_mode();
-    println!("backend: {} ({threads} kernel threads)", rt.backend_name());
+    println!(
+        "backend: {} ({threads} kernel threads, simd {})",
+        rt.backend_name(),
+        if kernels::simd_active() { "on" } else { "off" }
+    );
     let mut results = Vec::new();
     let mut record = |model: &str, recipe: &str, nthreads: usize, sps: f64, toks: f64| {
         results.push(json::obj(vec![
@@ -85,6 +91,23 @@ fn main() {
         println!(
             "{model:<8} qdq path: {qdq:>7.2} steps/s   int8 path: {int8:>7.2} steps/s   speedup {:.2}x",
             int8 / qdq
+        );
+    }
+
+    section("simd vector path vs scalar lane emulation (micro, default threads)");
+    // the ISA-axis rows of the trajectory: the same run with the dispatch
+    // pinned to the scalar lane emulation vs the vector microkernels
+    // (bit-identical results; only wall-clock moves)
+    for recipe in ["base", "w8a8"] {
+        let scalar =
+            kernels::with_simd(false, || steps_per_sec(&rt, "micro", recipe, micro_steps, 0));
+        let simd =
+            kernels::with_simd(true, || steps_per_sec(&rt, "micro", recipe, micro_steps, 0));
+        record("micro", &format!("{recipe}[scalar]"), threads, scalar, 512.0);
+        record("micro", &format!("{recipe}[simd]"), threads, simd, 512.0);
+        println!(
+            "micro/{recipe:<6} scalar: {scalar:>7.2} steps/s   simd: {simd:>7.2} steps/s   speedup {:.2}x",
+            simd / scalar
         );
     }
 
@@ -136,9 +159,12 @@ fn main() {
     let report = json::obj(vec![
         ("bench", json::s("train_loop")),
         ("threads", json::num(threads as f64)),
+        ("simd", Value::Bool(kernels::simd_active())),
         ("results", Value::Arr(results)),
     ]);
     let path = qpretrain::util::repo_root().join("BENCH_train_loop.json");
     std::fs::write(&path, report.to_json()).expect("write BENCH_train_loop.json");
     println!("\nwrote {}", path.display());
+    qpretrain::util::bench::check_against_baseline(&report, "train_loop")
+        .expect("bench_train_loop regressed below the committed perf floors");
 }

@@ -21,7 +21,11 @@ use crate::util::stats::{channel_abs_max, kurtosis, sparsity, Histogram};
 /// so that each tensor's perturbation norm matches its parameter norm
 /// (Li et al., 2018). Skips 1-D tensors (LN/bias), like the visualization
 /// paper does.
-pub fn filter_normalized_direction(state: &HostState, model: &ModelInfo, seed: u64) -> Vec<Vec<f32>> {
+pub fn filter_normalized_direction(
+    state: &HostState,
+    model: &ModelInfo,
+    seed: u64,
+) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     model
         .params

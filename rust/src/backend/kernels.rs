@@ -31,17 +31,31 @@
 //! then `available_parallelism`. Kernels fall back to the serial path
 //! below a work threshold so tiny shapes don't pay handoff overhead.
 //!
+//! The matmul inner loops run on the runtime-dispatched [`super::simd`]
+//! microkernels (AVX2/FMA f32x8 `axpy`/`dot`, widening i8→i32 lanes for
+//! [`matmul_i8`]): the scalar emulation walks the exact same fixed
+//! lane/tail structure, so results are bit-identical with or without SIMD
+//! — and [`super::math`] uses the same microkernels serially, so the
+//! kernels==math contract is preserved along both axes (threads × ISA).
+//! The knobs mirror the thread knobs: `QPRETRAIN_SIMD=off` env,
+//! [`set_simd`] / [`with_simd`] / [`simd_active`] (re-exported from
+//! [`super::simd`]).
+//!
 //! The module also hosts the packed-int8 GEMM ([`matmul_i8`] +
 //! [`rescale_i32`]): i32 accumulation is exact, hence associative, hence
 //! trivially deterministic under any parallel split; the rescale is
-//! elementwise. The native backend dispatches to it for symmetric 8-bit
-//! recipes (see `backend::native::int8_dispatch`).
+//! elementwise. Packed operands carry rows padded to the i8 lane width
+//! (`quant::PackedGemmOperand`), so [`matmul_i8_packed`] never issues a
+//! partial-lane load. The native backend dispatches to it for symmetric
+//! 8-bit recipes (see `backend::native::int8_dispatch`).
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 pub use super::math::{GELU_A, GELU_C, LN_EPS, NORM_BLOCK, REDUCE_ROWS};
+use super::simd;
+pub use super::simd::{set_simd, simd_active, simd_supported, with_simd, F32_LANES, I8_LANES};
 
 // ---------------------------------------------------------------------------
 // thread-count resolution + fork-join substrate
@@ -532,11 +546,7 @@ pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: us
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut cc[ri * n..(ri + 1) * n];
                 for l in l0..l1 {
-                    let av = arow[l];
-                    let brow = &b[l * n..(l + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                        *cv += av * bv;
-                    }
+                    simd::axpy(crow, arow[l], &b[l * n..(l + 1) * n]);
                 }
             }
         }
@@ -567,11 +577,7 @@ pub fn matmul_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
             let arow = &a[r * k..(r + 1) * k];
             let brow = &b[r * n..(r + 1) * n];
             for (li, l) in lrange.clone().enumerate() {
-                let av = arow[l];
-                let crow = &mut cc[li * n..(li + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += av * bv;
-                }
+                simd::axpy(&mut cc[li * n..(li + 1) * n], arow[l], brow);
             }
         }
     });
@@ -591,12 +597,7 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
             let arow = &a[i * k..(i + 1) * k];
             let crow = &mut cc[ri * n..(ri + 1) * n];
             for (j, cv) in crow.iter_mut().enumerate() {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (&av, &bv) in arow.iter().zip(brow.iter()) {
-                    acc += av * bv;
-                }
-                *cv = acc;
+                *cv = simd::dot(arow, &b[j * k..(j + 1) * k]);
             }
         }
     });
@@ -625,35 +626,82 @@ pub fn col_sum_acc(acc: &mut [f32], x: &[f32], rows: usize, cols: usize) {
 // packed-int8 GEMM (the quantized fast path)
 // ---------------------------------------------------------------------------
 
-/// `c = a @ b` over int8 codes with i32 accumulation, a is (m x k), b is
-/// (k x n), row-major, k-panel blocked and row-parallel like [`matmul`].
-/// For |codes| <= 127 the i32 accumulator is exact up to k ~ 2^17 rows of
-/// reduction — far beyond any model dimension here — so integer adds are
-/// associative and the parallel split is deterministic by arithmetic, not
-/// just by ordering discipline.
+/// `c = a @ b` over tightly packed int8 codes with i32 accumulation, a is
+/// (m x k), b is (k x n), row-major, k-panel blocked and row-parallel like
+/// [`matmul`]. For |codes| <= 127 the i32 accumulator is exact up to
+/// k ~ 2^17 rows of reduction — far beyond any model dimension here — so
+/// integer adds are associative and both the parallel split and the SIMD
+/// lane layout are deterministic by arithmetic, not just by ordering
+/// discipline. The b rows are staged into an [`I8_LANES`]-padded scratch
+/// so the widening inner loop never issues a partial-lane load; the
+/// native backend's hot path uses [`matmul_i8_packed`], whose operands
+/// ship pre-padded from `quant::pack_{acts,weights}_i8`.
 pub fn matmul_i8(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
     assert_eq!(a.len(), m * k, "matmul_i8: a has wrong shape");
     assert_eq!(b.len(), k * n, "matmul_i8: b has wrong shape");
-    let mut c = vec![0i32; m * n];
     if m == 0 || n == 0 || k == 0 {
-        return c;
+        return vec![0i32; m * n];
     }
-    par_chunks_mut(&mut c, n, 2 * k * n, |rows, cc| {
+    let sb = n.next_multiple_of(I8_LANES);
+    if sb == n {
+        return matmul_i8_core(a, k, b, sb, m, k, n);
+    }
+    let mut bp = vec![0i8; k * sb];
+    for l in 0..k {
+        bp[l * sb..l * sb + n].copy_from_slice(&b[l * n..(l + 1) * n]);
+    }
+    matmul_i8_core(a, k, &bp, sb, m, k, n)
+}
+
+/// [`matmul_i8`] over pre-padded [`crate::quant::PackedGemmOperand`]s (the
+/// layout `quant::pack_acts_i8` / `pack_weights_i8` produce): rows are
+/// padded to [`I8_LANES`] with zero codes, which contribute exactly 0 to
+/// the i32 accumulator, so the hot loop runs full lanes with no tail.
+pub fn matmul_i8_packed(
+    x: &crate::quant::PackedGemmOperand,
+    w: &crate::quant::PackedGemmOperand,
+) -> Vec<i32> {
+    let (m, k, n) = (x.rows, x.cols, w.cols);
+    assert_eq!(x.cols, w.rows, "matmul_i8_packed: inner dims differ");
+    if m == 0 || n == 0 || k == 0 {
+        return vec![0i32; m * n];
+    }
+    matmul_i8_core(&x.codes, x.stride, &w.codes, w.stride, m, k, n)
+}
+
+/// Shared strided core: a is (m x k) with row stride `sa`, b is (k x n)
+/// with row stride `sb` (a multiple of [`I8_LANES`] when the operand is
+/// lane-padded); accumulates into an sb-wide scratch and trims the padded
+/// columns at the end.
+fn matmul_i8_core(
+    a: &[i8],
+    sa: usize,
+    b: &[i8],
+    sb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut cp = vec![0i32; m * sb];
+    par_chunks_mut(&mut cp, sb, 2 * k * sb, |rows, cc| {
         for l0 in (0..k).step_by(K_PANEL) {
             let l1 = (l0 + K_PANEL).min(k);
             for (ri, i) in rows.clone().enumerate() {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut cc[ri * n..(ri + 1) * n];
+                let arow = &a[i * sa..i * sa + k];
+                let crow = &mut cc[ri * sb..(ri + 1) * sb];
                 for l in l0..l1 {
-                    let av = arow[l] as i32;
-                    let brow = &b[l * n..(l + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                        *cv += av * bv as i32;
-                    }
+                    simd::axpy_i8(crow, arow[l], &b[l * sb..(l + 1) * sb]);
                 }
             }
         }
     });
+    if sb == n {
+        return cp;
+    }
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        c[i * n..(i + 1) * n].copy_from_slice(&cp[i * sb..i * sb + n]);
+    }
     c
 }
 
@@ -710,11 +758,19 @@ fn rescale_i32_into(
     }
     par_chunks_mut(out, n, 4 * n, |rows, oc| {
         for (ri, i) in rows.clone().enumerate() {
-            let sr = if row_scales.len() == 1 { row_scales[0] } else { row_scales[i] };
+            let sr = if row_scales.len() == 1 {
+                row_scales[0]
+            } else {
+                row_scales[i]
+            };
             let crow = &c[i * n..(i + 1) * n];
             let orow = &mut oc[ri * n..(ri + 1) * n];
             for j in 0..n {
-                let sc = if col_scales.len() == 1 { col_scales[0] } else { col_scales[j] };
+                let sc = if col_scales.len() == 1 {
+                    col_scales[0]
+                } else {
+                    col_scales[j]
+                };
                 let v = (sr * sc) * crow[j] as f32;
                 if accumulate {
                     orow[j] += v;
@@ -1038,7 +1094,11 @@ pub fn nll_only(logits: &[f32], y: &[i32], m: usize, v: usize) -> Vec<f32> {
                 z += (l - mx).exp();
             }
             let nll = -(row[y[r] as usize] - mx - z.ln());
-            pp[ri] = if nll.is_finite() { nll } else { -f32::MIN_POSITIVE.ln() };
+            pp[ri] = if nll.is_finite() {
+                nll
+            } else {
+                -f32::MIN_POSITIVE.ln()
+            };
         }
     });
     per_pos

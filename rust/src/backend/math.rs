@@ -3,7 +3,13 @@
 //! scatter, and the fixed-shape reduction tree behind the grad norm.
 //!
 //! The matmuls use the axpy (ikj) loop order so the inner loop runs over
-//! contiguous rows of both operands and auto-vectorizes. Since the
+//! contiguous rows of both operands; the inner loops themselves are the
+//! [`super::simd`] microkernels ([`simd::axpy`] per K step, [`simd::dot`]
+//! for the transposed-B reduction), so this module **walks the exact same
+//! fixed lane/tail structure** as the parallel kernels — the per-element
+//! accumulation (one fused multiply-add per K step, k ascending; the
+//! fixed 8-lane stripe + combine tree for dot products) is a function of
+//! the problem size only, never of the ISA or thread count. Since the
 //! parallel [`super::kernels`] subsystem took over the native backend's
 //! hot path, this module is the **retained serial reference**: every
 //! parallel kernel must produce bit-identical results to its counterpart
@@ -23,6 +29,8 @@
 //! next to the O(m·n·k) kernel body, and a shape bug in a `--release`
 //! training run must fail loudly instead of silently reading adjacent
 //! memory.
+
+use super::simd;
 
 /// Row-block size of the fixed-shape cross-row reduction tree (layernorm
 /// dw/db). A function of nothing: the tree never depends on thread count.
@@ -47,10 +55,7 @@ pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: us
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (l, &av) in arow.iter().enumerate() {
-            let brow = &b[l * n..(l + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
+            simd::axpy(crow, av, &b[l * n..(l + 1) * n]);
         }
     }
 }
@@ -72,10 +77,7 @@ pub fn matmul_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
         let arow = &a[r * k..(r + 1) * k];
         let brow = &b[r * n..(r + 1) * n];
         for (l, &av) in arow.iter().enumerate() {
-            let crow = &mut c[l * n..(l + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
+            simd::axpy(&mut c[l * n..(l + 1) * n], av, brow);
         }
     }
 }
@@ -90,12 +92,7 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow.iter()) {
-                acc += av * bv;
-            }
-            *cv = acc;
+            *cv = simd::dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
     c

@@ -20,9 +20,14 @@
 //! the retained serial reference in [`math`] at every thread count
 //! (`--threads` / `RAYON_NUM_THREADS`); cross-row reductions run on
 //! fixed-shape trees whose block layout never depends on the thread
-//! count. Symmetric 8-bit recipes additionally dispatch the forward
-//! linears to a packed-int8 GEMM (i32 accumulation, single rescale) with
-//! the f32 qdq path retained as the reference oracle
+//! count. The matmul inner loops of both modules run on the
+//! runtime-dispatched [`simd`] microkernels (AVX2/FMA f32x8 + widening
+//! i8→i32 lanes, `QPRETRAIN_SIMD=off` to disable), whose scalar emulation
+//! walks the exact same fixed lane/tail structure — so results are
+//! bit-identical with or without SIMD, at every thread count. Symmetric
+//! 8-bit recipes additionally dispatch the forward linears to a
+//! packed-int8 GEMM (lane-padded i8 codes, i32 accumulation, single
+//! rescale) with the f32 qdq path retained as the reference oracle
 //! ([`native::set_int8_gemm`]).
 //!
 //! Both backends take a [`QuantRecipe`](crate::config::QuantRecipe): which
@@ -35,6 +40,7 @@
 pub mod kernels;
 pub mod math;
 pub mod native;
+pub mod simd;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 

@@ -25,7 +25,9 @@
 //! rescale once. The f32 qdq path is retained as the reference oracle
 //! (toggle with [`set_int8_gemm`]); `rust/tests/int8.rs` pins bitwise
 //! equality where f32 accumulation is exact and bounds the rounding gap
-//! elsewhere.
+//! elsewhere. Both paths run on the runtime-dispatched SIMD microkernels
+//! (`backend::simd`; [`simd_active`] introspects, `QPRETRAIN_SIMD=off`
+//! pins the bit-identical scalar lane emulation).
 
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -39,9 +41,9 @@ use anyhow::{bail, Result};
 // serial tile kernels are what the parallel ones are bit-equal to anyway).
 use crate::backend::kernels::{
     add_assign, bias_add, causal_softmax, col_sum_acc, embed_scatter, gelu, gelu_bwd,
-    layer_norm_bwd, layer_norm_fwd, matmul, matmul_acc, matmul_i8, matmul_nt, matmul_tn_acc,
-    nll_only, nll_rows, par_chunks2_mut, par_chunks3_mut, par_chunks_mut, rescale_i32,
-    rescale_i32_acc, sq_norm,
+    layer_norm_bwd, layer_norm_fwd, matmul, matmul_acc, matmul_i8_packed, matmul_nt,
+    matmul_tn_acc, nll_only, nll_rows, par_chunks2_mut, par_chunks3_mut, par_chunks_mut,
+    rescale_i32, rescale_i32_acc, sq_norm,
 };
 use crate::backend::math;
 use crate::backend::{ActProbe, Backend, EvalOut, GradProbe, StepOut};
@@ -164,13 +166,23 @@ fn qdq_matrix(x: &[f32], rows: usize, cols: usize, policy: TensorPolicy) -> Vec<
 
 /// Activation operand of a linear that is also cached raw: `None` when the
 /// recipe leaves activations unquantized (avoids duplicating the buffer).
-fn qdq_act_opt(x: &[f32], rows: usize, cols: usize, policy: Option<TensorPolicy>) -> Option<Vec<f32>> {
+fn qdq_act_opt(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    policy: Option<TensorPolicy>,
+) -> Option<Vec<f32>> {
     policy.map(|p| qdq_matrix(x, rows, cols, p))
 }
 
 /// Fake-quantize an activation in place, consuming it (for activations not
 /// otherwise cached: no copy in the unquantized case).
-fn qdq_act_owned(mut x: Vec<f32>, rows: usize, cols: usize, policy: Option<TensorPolicy>) -> Vec<f32> {
+fn qdq_act_owned(
+    mut x: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    policy: Option<TensorPolicy>,
+) -> Vec<f32> {
     if let Some(p) = policy {
         quant::qdq(&mut x, rows, cols, p);
     }
@@ -224,6 +236,14 @@ pub fn int8_gemm_enabled() -> bool {
     INT8_GEMM.load(Ordering::Relaxed)
 }
 
+/// Whether the SIMD microkernel vector path is active for this process
+/// (CPU support ∧ `QPRETRAIN_SIMD` ∧ `kernels::set_simd`). Introspection
+/// only: the scalar lane emulation is bit-identical, so this predicts
+/// throughput, never results.
+pub fn simd_active() -> bool {
+    crate::backend::simd::simd_active()
+}
+
 /// The dispatch rule for one forward linear `qdq_a(x) @ qdq_w(w)`: both
 /// operands must be quantized, symmetric 8-bit, with scales constant along
 /// the reduction axis (activations per-tensor/per-token, weights
@@ -254,9 +274,9 @@ fn quant_linear(
     if int8_dispatch(qs.acts, qs.weights) {
         let (ap, wp) = (qs.acts.unwrap(), qs.weights.unwrap());
         let xa = quant::pack_acts_i8(&x, m, k, ap);
-        let xq = quant::dequant_acts_i8(&xa, m, k);
+        let xq = quant::dequant_acts_i8(&xa);
         let wq = quant::pack_weights_i8(w, k, n, wp);
-        let ci = matmul_i8(&xa.codes, &wq.codes, m, k, n);
+        let ci = matmul_i8_packed(&xa, &wq);
         let y = rescale_i32(&ci, &xa.scales, &wq.scales, m, n);
         (y, xq)
     } else {
@@ -283,9 +303,9 @@ fn quant_linear_acc(
     if int8_dispatch(qs.acts, qs.weights) {
         let (ap, wp) = (qs.acts.unwrap(), qs.weights.unwrap());
         let xa = quant::pack_acts_i8(x, m, k, ap);
-        let xq = quant::dequant_acts_i8(&xa, m, k);
+        let xq = quant::dequant_acts_i8(&xa);
         let wq = quant::pack_weights_i8(w, k, n, wp);
-        let ci = matmul_i8(&xa.codes, &wq.codes, m, k, n);
+        let ci = matmul_i8_packed(&xa, &wq);
         rescale_i32_acc(acc, &ci, &xa.scales, &wq.scales, m, n);
         Some(xq)
     } else {

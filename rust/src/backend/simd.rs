@@ -1,0 +1,400 @@
+//! Runtime-dispatched SIMD microkernels with a **lane-deterministic**
+//! scalar reference.
+//!
+//! Three microkernels carry the matmul inner loops of [`super::math`] and
+//! [`super::kernels`]:
+//!
+//! * [`axpy`] — `c[j] = fma(a, b[j], c[j])` over a row (the K-panel inner
+//!   loop of `matmul`/`matmul_tn`); lanes are *independent output
+//!   elements*, so the per-element float-add chain (k ascending, one fused
+//!   rounding per step) is the same at any vector width.
+//! * [`dot`] — the `matmul_nt` reduction, on a **fixed 8-lane striped
+//!   accumulator layout**: lane `l` accumulates the products at indices
+//!   `j ≡ l (mod 8)` of the first `8·⌊k/8⌋` elements (fused per step),
+//!   the lanes combine on a fixed pairwise tree
+//!   (`(l0+l4, l1+l5, l2+l6, l3+l7) → (+2 apart) → (+1 apart)`), and the
+//!   `k mod 8` tail elements fold in as a scalar fma chain. The layout is
+//!   a function of `k` only — never of the ISA.
+//! * [`axpy_i8`] — `c[j] += a · b[j]` widening i8→i32 (the `matmul_i8`
+//!   inner loop); i32 accumulation is exact, so lane layout is irrelevant
+//!   to the result by arithmetic.
+//!
+//! Each microkernel has an AVX2/FMA implementation (8 f32 lanes, 16 i8
+//! lanes) and a scalar emulation of the **exact same lane/tail structure**
+//! built on `f32::mul_add` (one rounding, the IEEE fma the vector path
+//! performs per lane) — so results are bit-identical whether the vector
+//! path runs or not, on every machine. `rust/tests/simd.rs` pins the
+//! equivalence over randomized shapes and K tails.
+//!
+//! Dispatch is resolved at runtime: the vector path runs iff the CPU
+//! reports `avx2` and `fma` (`is_x86_feature_detected!`) and the
+//! `QPRETRAIN_SIMD` environment variable is not `off`/`0`; [`set_simd`] /
+//! [`with_simd`] override it per process (the equivalence suite and the
+//! scalar-vs-SIMD bench rows flip it). When the vector path is off but the
+//! CPU still has fma, the scalar emulation is compiled with the `fma`
+//! target feature so its `mul_add` stays a hardware instruction;  without
+//! fma it falls back to the (correctly rounded, hence still bit-identical)
+//! libm `fmaf`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// f32 lanes per vector step (AVX2 ymm width). The striped-accumulator
+/// layout of [`dot`] is defined at this width on every path.
+pub const F32_LANES: usize = 8;
+
+/// i8 elements per widening i8→i32 vector step (one 128-bit load, widened
+/// to 16×i16 then 2×8×i32). [`crate::quant`] pads packed GEMM rows to this
+/// so the hot loop never needs a partial-lane load.
+pub const I8_LANES: usize = 16;
+
+// Resolved dispatch tier, cached so hot-loop dispatch is one relaxed load.
+const TIER_UNSET: u8 = 0;
+const TIER_VECTOR: u8 = 1;
+const TIER_FMA_SCALAR: u8 = 2;
+const TIER_SCALAR: u8 = 3;
+
+static TIER: AtomicU8 = AtomicU8::new(TIER_UNSET);
+
+/// Whether this CPU can run the vector microkernels (x86-64 with AVX2+FMA).
+#[allow(unreachable_code)]
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma");
+    false
+}
+
+#[allow(unreachable_code)]
+fn fma_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return std::arch::is_x86_feature_detected!("fma");
+    false
+}
+
+/// `QPRETRAIN_SIMD=off` (or `0`) disables the vector path for the process;
+/// results are identical either way, only wall-clock changes.
+fn env_simd_off() -> bool {
+    matches!(
+        std::env::var("QPRETRAIN_SIMD").as_deref(),
+        Ok("off") | Ok("0") | Ok("OFF")
+    )
+}
+
+fn resolve(vector_wanted: bool) -> u8 {
+    if vector_wanted && simd_supported() {
+        TIER_VECTOR
+    } else if fma_supported() {
+        TIER_FMA_SCALAR
+    } else {
+        TIER_SCALAR
+    }
+}
+
+#[inline]
+fn tier() -> u8 {
+    let t = TIER.load(Ordering::Relaxed);
+    if t != TIER_UNSET {
+        return t;
+    }
+    let t = resolve(!env_simd_off());
+    TIER.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Override the vector-path selection for this process: `Some(true)` forces
+/// the vector microkernels (a no-op on CPUs without AVX2+FMA), `Some(false)`
+/// pins the scalar lane emulation, `None` restores the environment/CPU
+/// resolution. Results are bit-identical in every mode.
+pub fn set_simd(mode: Option<bool>) {
+    let t = match mode {
+        Some(on) => resolve(on),
+        None => resolve(!env_simd_off()),
+    };
+    TIER.store(t, Ordering::Relaxed);
+}
+
+/// Run `f` with the vector path pinned on/off, restoring the previous
+/// selection afterwards even on panic (bench/test hook, mirroring
+/// [`super::kernels::with_threads`]).
+pub fn with_simd<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TIER.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _guard = Restore(tier());
+    set_simd(Some(on));
+    f()
+}
+
+/// Whether the vector microkernels are currently selected (CPU support ∧
+/// knobs). The scalar emulation is bit-identical, so this only predicts
+/// throughput, never results.
+pub fn simd_active() -> bool {
+    tier() == TIER_VECTOR
+}
+
+// ---------------------------------------------------------------------------
+// scalar lane emulation (the reference structure, shared by every tier)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn axpy_body(c: &mut [f32], a: f32, b: &[f32]) {
+    // lanes are independent output elements: each c[j] sees one fused
+    // multiply-add per k step, in k-ascending order, at any vector width
+    for (cv, &bv) in c.iter_mut().zip(b.iter()) {
+        *cv = a.mul_add(bv, *cv);
+    }
+}
+
+// the combine trees below (and their AVX2 shuffle twins) are written for
+// exactly 8 lanes; retuning the lane width must rewrite them in lockstep
+const _: () = assert!(F32_LANES == 8, "dot combine tree is hardwired to 8 lanes");
+
+#[inline(always)]
+fn dot_body(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let nb = n - n % F32_LANES;
+    let mut acc = [0.0f32; F32_LANES];
+    let mut j = 0;
+    while j < nb {
+        for (l, av) in acc.iter_mut().enumerate() {
+            *av = a[j + l].mul_add(b[j + l], *av);
+        }
+        j += F32_LANES;
+    }
+    // fixed pairwise combine tree (the vector path's 256→128→64→32 fold)
+    let s4 = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+    let s2 = [s4[0] + s4[2], s4[1] + s4[3]];
+    let mut s = s2[0] + s2[1];
+    // tail: a scalar fma chain appended after the lane tree
+    while j < n {
+        s = a[j].mul_add(b[j], s);
+        j += 1;
+    }
+    s
+}
+
+#[inline(always)]
+fn axpy_i8_body(c: &mut [i32], a: i8, b: &[i8]) {
+    let av = a as i32;
+    for (cv, &bv) in c.iter_mut().zip(b.iter()) {
+        *cv += av * bv as i32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fma-scalar tier: the same bodies compiled with the fma target feature so
+// `mul_add` lowers to the hardware instruction instead of a libm call
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn axpy_fma(c: &mut [f32], a: f32, b: &[f32]) {
+    axpy_body(c, a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    dot_body(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2/FMA vector tier
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(c: &mut [f32], a: f32, b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let av = _mm256_set1_ps(a);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        let cv = _mm256_loadu_ps(c.as_ptr().add(j));
+        _mm256_storeu_ps(c.as_mut_ptr().add(j), _mm256_fmadd_ps(av, bv, cv));
+        j += F32_LANES;
+    }
+    // tail lanes are independent elements: the same fused op, scalar
+    while j < n {
+        c[j] = a.mul_add(b[j], c[j]);
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let nb = n - n % F32_LANES;
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0;
+    while j < nb {
+        let av = _mm256_loadu_ps(a.as_ptr().add(j));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        acc = _mm256_fmadd_ps(av, bv, acc);
+        j += F32_LANES;
+    }
+    // the fixed combine tree of `dot_body`, as shuffles: lanes l and l+4,
+    // then +2 apart, then +1 apart
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps::<1>(acc);
+    let s4 = _mm_add_ps(lo, hi);
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<0b01>(s2, s2));
+    let mut s = _mm_cvtss_f32(s1);
+    while j < n {
+        s = a[j].mul_add(b[j], s);
+        j += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_i8_avx2(c: &mut [i32], a: i8, b: &[i8]) {
+    use std::arch::x86_64::*;
+    let n = c.len();
+    let av = _mm256_set1_epi16(a as i16);
+    let mut j = 0;
+    while j + I8_LANES <= n {
+        // 16 i8 codes -> 16 i16 (|a·b| <= 2^14, exact in i16) -> 2x8 i32
+        let bv = _mm_loadu_si128(b.as_ptr().add(j) as *const __m128i);
+        let bw = _mm256_cvtepi8_epi16(bv);
+        let prod = _mm256_mullo_epi16(bw, av);
+        let p0 = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+        let p1 = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+        let c0 = _mm256_loadu_si256(c.as_ptr().add(j) as *const __m256i);
+        let c1 = _mm256_loadu_si256(c.as_ptr().add(j + 8) as *const __m256i);
+        _mm256_storeu_si256(c.as_mut_ptr().add(j) as *mut __m256i, _mm256_add_epi32(c0, p0));
+        _mm256_storeu_si256(
+            c.as_mut_ptr().add(j + 8) as *mut __m256i,
+            _mm256_add_epi32(c1, p1),
+        );
+        j += I8_LANES;
+    }
+    let av = a as i32;
+    while j < n {
+        c[j] += av * b[j] as i32;
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// `c[j] = fma(a, b[j], c[j])` for every j (one rounding per element per
+/// call, k-ascending across calls). Bit-identical on every tier.
+#[inline]
+pub fn axpy(c: &mut [f32], a: f32, b: &[f32]) {
+    assert_eq!(c.len(), b.len(), "axpy: length mismatch");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_VECTOR => unsafe { axpy_avx2(c, a, b) },
+        #[cfg(target_arch = "x86_64")]
+        TIER_FMA_SCALAR => unsafe { axpy_fma(c, a, b) },
+        _ => axpy_body(c, a, b),
+    }
+}
+
+/// Striped-lane dot product of two equal-length slices (see the module
+/// docs for the fixed lane/tail structure). Bit-identical on every tier.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_VECTOR => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        TIER_FMA_SCALAR => unsafe { dot_fma(a, b) },
+        _ => dot_body(a, b),
+    }
+}
+
+/// `c[j] += a · b[j]` widening i8→i32. Exact integer arithmetic: identical
+/// on every tier by value, not just by ordering discipline.
+#[inline]
+pub fn axpy_i8(c: &mut [i32], a: i8, b: &[i8]) {
+    assert_eq!(c.len(), b.len(), "axpy_i8: length mismatch");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_VECTOR => unsafe { axpy_i8_avx2(c, a, b) },
+        _ => axpy_i8_body(c, a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tests here flip the process-wide tier; serialize like the thread knobs
+    static KNOB: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn dot_structure_is_lane_striped() {
+        // 10 elements: body lanes 0..8, tail 8..10 — hand-walk the tree
+        let a: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let b = vec![1.0f32; 10];
+        let acc: Vec<f32> = a[..8].to_vec(); // fma(a, 1, 0) == a exactly
+        let s4 = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+        let s2 = [s4[0] + s4[2], s4[1] + s4[3]];
+        let want = (s2[0] + s2[1] + a[8]) + a[9];
+        assert_eq!(dot_body(&a, &b).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn vector_and_scalar_tiers_bit_identical() {
+        let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+        if !simd_supported() {
+            return; // nothing to compare on this machine
+        }
+        let mut rng = crate::util::rng::Rng::new(0x51D);
+        for n in [1usize, 5, 7, 8, 9, 15, 16, 17, 33, 100] {
+            let a = rng.normal_vec(n, 0.0, 1.0);
+            let b = rng.normal_vec(n, 0.0, 1.0);
+            let c0 = rng.normal_vec(n, 0.0, 1.0);
+            let (mut c_s, mut c_v) = (c0.clone(), c0.clone());
+            let d_s = with_simd(false, || {
+                axpy(&mut c_s, 0.37, &a);
+                dot(&a, &b)
+            });
+            let d_v = with_simd(true, || {
+                axpy(&mut c_v, 0.37, &a);
+                dot(&a, &b)
+            });
+            assert_eq!(bits(&c_s), bits(&c_v), "axpy tiers differ at n={n}");
+            assert_eq!(d_s.to_bits(), d_v.to_bits(), "dot tiers differ at n={n}");
+
+            let ia: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut ic_s = vec![3i32; n];
+            let mut ic_v = vec![3i32; n];
+            with_simd(false, || axpy_i8(&mut ic_s, -77, &ia));
+            with_simd(true, || axpy_i8(&mut ic_v, -77, &ia));
+            assert_eq!(ic_s, ic_v, "axpy_i8 tiers differ at n={n}");
+        }
+    }
+
+    #[test]
+    fn knob_overrides_and_restores() {
+        let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+        set_simd(Some(false));
+        assert!(!simd_active());
+        if simd_supported() {
+            set_simd(Some(true));
+            assert!(simd_active());
+            let outer = simd_active();
+            with_simd(false, || assert!(!simd_active()));
+            assert_eq!(simd_active(), outer, "with_simd did not restore");
+        }
+        set_simd(None);
+    }
+}

@@ -74,7 +74,9 @@ pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
         "tab4" => tab_eval(ctx, "tab4", "Tables 4+8: gradient quantization", &grad_sweep(ctx)),
         "fig10" => fig10(ctx),
         "fig11" => fig11(ctx),
-        "tab5" => tab_eval(ctx, "tab5", "Tables 5+9: Adam first-moment quantization", &m1_sweep(ctx)),
+        "tab5" => {
+            tab_eval(ctx, "tab5", "Tables 5+9: Adam first-moment quantization", &m1_sweep(ctx))
+        }
         "fig12" => fig12(ctx),
         "fig13" => fig13(ctx),
         "tab1" => tab1(ctx),
@@ -130,7 +132,12 @@ fn m1_sweep(ctx: &Ctx) -> Vec<TrainCfg> {
 
 /// Train a sweep and report the validation-loss outcome (a figure's "down"
 /// panel in table form) plus a combined loss-curve CSV.
-fn train_and_report(ctx: &Ctx, id: &str, title: &str, configs: &[TrainCfg]) -> Result<Vec<RunSummary>> {
+fn train_and_report(
+    ctx: &Ctx,
+    id: &str,
+    title: &str,
+    configs: &[TrainCfg],
+) -> Result<Vec<RunSummary>> {
     let runs = ensure_runs(&ctx.rt, &ctx.runs, configs, ctx.jobs)?;
     let mut rows = Vec::new();
     for r in &runs {
@@ -286,14 +293,22 @@ fn fig3(ctx: &Ctx) -> Result<()> {
         })
         .collect();
     let body = md_table(
-        &["model", "seq", "linear ms", "attn ms", "linear share (measured)", "linear share (analytic)"],
+        &[
+            "model",
+            "seq",
+            "linear ms",
+            "attn ms",
+            "linear share (measured)",
+            "linear share (analytic)",
+        ],
         &t_rows,
     );
     emit_report(&ctx.runs, "fig3", "Fig 3: linear-layer share of block fwd+bwd time", &body)
 }
 
 fn fig4(ctx: &Ctx) -> Result<()> {
-    train_and_report(ctx, "fig4", "Fig 4: weight quantization during pre-training", &weight_sweep(ctx))?;
+    let sweep = weight_sweep(ctx);
+    train_and_report(ctx, "fig4", "Fig 4: weight quantization during pre-training", &sweep)?;
     Ok(())
 }
 
@@ -397,18 +412,27 @@ fn fig6(ctx: &Ctx) -> Result<()> {
         &ctx.runs,
         "fig6",
         "Fig 6: persistence of activation outlier channels over training",
-        &format!("{tbl}\nraw channel abs-max history: {}\n", dir.join("act_outliers.csv").display()),
+        &format!(
+            "{tbl}\nraw channel abs-max history: {}\n",
+            dir.join("act_outliers.csv").display()
+        ),
     )
 }
 
 fn fig7(ctx: &Ctx) -> Result<()> {
-    train_and_report(ctx, "fig7", "Fig 7: activation quantization during pre-training", &act_sweep(ctx))?;
+    let sweep = act_sweep(ctx);
+    train_and_report(ctx, "fig7", "Fig 7: activation quantization during pre-training", &sweep)?;
     Ok(())
 }
 
 fn fig8(ctx: &Ctx) -> Result<()> {
     let configs = vec![ctx.baseline_cfg(), ctx.cfg("a4_pc")];
-    let runs = train_and_report(ctx, "fig8", "Fig 8: 4-bit per-channel activation quantization", &configs)?;
+    let runs = train_and_report(
+        ctx,
+        "fig8",
+        "Fig 8: 4-bit per-channel activation quantization",
+        &configs,
+    )?;
     // massive activation outliers in FC2 input at the end of training
     let model = ctx.rt.manifest.model("t4")?.clone();
     let state = runs[0].checkpoint(&ctx.rt)?;
@@ -427,7 +451,8 @@ fn fig8(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig9(ctx: &Ctx) -> Result<()> {
-    train_and_report(ctx, "fig9", "Fig 9: gradient quantization during pre-training", &grad_sweep(ctx))?;
+    let sweep = grad_sweep(ctx);
+    train_and_report(ctx, "fig9", "Fig 9: gradient quantization during pre-training", &sweep)?;
     Ok(())
 }
 
@@ -459,9 +484,15 @@ fn fig10(ctx: &Ctx) -> Result<()> {
         .iter()
         .map(|(n, e)| vec![n.clone(), format!("{e:.4}")])
         .collect();
-    rows.push(vec!["weight-grad sparsity (|g|<1e-3 max)".into(), format!("{:.3}", g.weight_grad_sparsity)]);
+    rows.push(vec![
+        "weight-grad sparsity (|g|<1e-3 max)".into(),
+        format!("{:.3}", g.weight_grad_sparsity),
+    ]);
     rows.push(vec!["act-grad sparsity".into(), format!("{:.3}", g.act_grad_sparsity)]);
-    let spikes: Vec<String> = runs.iter().map(|r| format!("{}: {} spikes, diverged={}", r.label, r.steps, r.diverged)).collect();
+    let spikes: Vec<String> = runs
+        .iter()
+        .map(|r| format!("{}: {} spikes, diverged={}", r.label, r.steps, r.diverged))
+        .collect();
     let tbl = md_table(&["metric", "value"], &rows);
     emit_report(
         &ctx.runs,
@@ -546,7 +577,8 @@ fn tab10(ctx: &Ctx) -> Result<()> {
     let mut rows = Vec::new();
     for bits in [4u32, 8] {
         for gran in [Granularity::PerTensor, Granularity::PerChannel] {
-            let ppl = crate::ptq::ptq_weights_ppl(&ctx.rt, &model, &state, bits, gran, ctx.eval_batches)?;
+            let ppl =
+                crate::ptq::ptq_weights_ppl(&ctx.rt, &model, &state, bits, gran, ctx.eval_batches)?;
             rows.push(
                 std::iter::once(format!("{bits}-bit {}", gran.as_str()))
                     .chain(
@@ -572,7 +604,8 @@ fn tab11(ctx: &Ctx) -> Result<()> {
     let mut rows = Vec::new();
     for bits in [4u32, 8] {
         for gran in [Granularity::PerTensor, Granularity::PerToken] {
-            let ppl = crate::ptq::ptq_acts_ppl(&ctx.rt, &model, &state, bits, gran, ctx.eval_batches)?;
+            let ppl =
+                crate::ptq::ptq_acts_ppl(&ctx.rt, &model, &state, bits, gran, ctx.eval_batches)?;
             rows.push(
                 std::iter::once(format!("{bits}-bit {}", gran.as_str()))
                     .chain(
@@ -605,7 +638,11 @@ fn abl_bits(ctx: &Ctx) -> Result<()> {
             vec![
                 r.label.clone(),
                 fmt_f(r.final_val_loss, 4),
-                if r.diverged { "yes".into() } else { "no".into() },
+                if r.diverged {
+                    "yes".into()
+                } else {
+                    "no".into()
+                },
             ]
         })
         .collect();

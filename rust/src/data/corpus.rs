@@ -141,7 +141,8 @@ pub fn entropy_floor(cfg: &CorpusCfg) -> f64 {
     // bernoulli(alpha) choice plus the zipf tail. We approximate the zipf
     // branch entropy from the distribution itself.
     let u = cfg.usable_vocab();
-    let mut weights: Vec<f64> = (0..u).map(|k| 1.0 / ((k + 2) as f64).powf(cfg.zipf_alpha)).collect();
+    let mut weights: Vec<f64> =
+        (0..u).map(|k| 1.0 / ((k + 2) as f64).powf(cfg.zipf_alpha)).collect();
     let total: f64 = weights.iter().sum();
     for w in weights.iter_mut() {
         *w /= total;

@@ -12,6 +12,8 @@
 //!   experiment   reproduce a paper table/figure (or `all`)
 //!   report       aggregate all experiment reports
 //!   selftest     runtime validation: native backend vs the quant oracle
+//!   digest       deterministic micro-train digest (losses/params bit
+//!                fingerprints) for cross-leg CI equivalence diffs
 //!   list         list models / recipe grammar / experiments
 //!
 //! The default build runs everything on the pure-rust native backend; with
@@ -116,6 +118,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "experiment" => cmd_experiment(args),
         "report" => cmd_report(args),
         "selftest" => cmd_selftest(args),
+        "digest" => cmd_digest(args),
         "list" => cmd_list(args),
         "" | "help" => {
             print_help();
@@ -143,6 +146,8 @@ USAGE: qpretrain <subcommand> [--options]
   experiment   <fig2|fig3|fig4|...|tab10|tab11|abl_bits|all> [--steps N --jobs K]
   report       aggregate runs/reports/*.md
   selftest     native-backend validation against the rust quant oracle
+  digest       [--steps 8 --out digest.json] deterministic micro-train
+               digest; byte-identical across threads and QPRETRAIN_SIMD legs
   list         models / recipe grammar / experiments
 
 Global options:
@@ -188,7 +193,11 @@ fn open_ckpt(
     rt: &Runtime,
 ) -> Result<(qpretrain::runtime::ModelInfo, qpretrain::model::HostState, QuantRecipe)> {
     let dir = PathBuf::from(args.req("ckpt")?);
-    let path = if dir.is_dir() { dir.join("final.ckpt") } else { dir.clone() };
+    let path = if dir.is_dir() {
+        dir.join("final.ckpt")
+    } else {
+        dir.clone()
+    };
     // infer model + training recipe from result.json when present
     let (model_name, spec) = match coordinator::RunSummary::load(
         dir.parent().map(|_| dir.as_path()).unwrap_or(&dir),
@@ -452,6 +461,67 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
         bail!("selftest failed: native training did not learn");
     }
     println!("selftest OK");
+    Ok(())
+}
+
+/// Deterministic train-run digest for CI bit-equivalence diffs: a few
+/// short micro runs (fp32 baseline, the int8-dispatched w8a8, and the
+/// paper's full combined recipe), fingerprinted at the bit level (loss /
+/// grad-norm / validation bit patterns, FNV-64 over the final params and
+/// Adam moments). The output is a function of the code and the seed ONLY —
+/// never of wall-clock, thread count, or SIMD availability — so the CI
+/// matrix byte-diffs one digest per (threads × QPRETRAIN_SIMD) leg to
+/// prove the determinism contract on real runners, not just dev machines.
+fn cmd_digest(args: &Args) -> Result<()> {
+    fn state_hash(tensors: &[Vec<f32>]) -> String {
+        let mut acc: Vec<u8> = Vec::with_capacity(tensors.len() * 8);
+        for t in tensors {
+            acc.extend_from_slice(&qpretrain::util::fnv1a64_f32(t).to_le_bytes());
+        }
+        format!("{:016x}", qpretrain::util::fnv1a64(&acc))
+    }
+    use qpretrain::util::json::{self, Value};
+
+    let rt = Runtime::native();
+    let steps = args.usize_or("steps", 8)?;
+    let out = args.get_or("out", "digest.json");
+    let mut runs = Vec::new();
+    for spec in ["base", "w8a8", "w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc"] {
+        let hp = TrainHp {
+            steps,
+            eval_every: steps,
+            eval_batches: 2,
+            log_every: usize::MAX,
+            ..TrainHp::default()
+        };
+        let cfg = qpretrain::train::TrainCfg::new("micro", QuantRecipe::parse(spec)?, hp);
+        let r = qpretrain::train::train(&rt, &cfg)?;
+        let hex64 = |v: &[f64]| {
+            Value::Arr(v.iter().map(|x| json::s(&format!("{:016x}", x.to_bits()))).collect())
+        };
+        let val = Value::Arr(
+            r.val
+                .iter()
+                .map(|(s, l)| json::s(&format!("{s}:{:016x}", l.to_bits())))
+                .collect(),
+        );
+        runs.push(json::obj(vec![
+            ("recipe", json::s(spec)),
+            ("loss_bits", hex64(&r.losses)),
+            ("gnorm_bits", hex64(&r.gnorms)),
+            ("val_bits", val),
+            ("params_fnv", json::s(&state_hash(&r.final_state.params))),
+            ("m_fnv", json::s(&state_hash(&r.final_state.m))),
+            ("v_fnv", json::s(&state_hash(&r.final_state.v))),
+        ]));
+    }
+    let digest = json::obj(vec![
+        ("model", json::s("micro")),
+        ("steps", json::num(steps as f64)),
+        ("runs", Value::Arr(runs)),
+    ]);
+    std::fs::write(&out, digest.to_json())?;
+    println!("wrote {out} (byte-diffable across threads/simd CI legs)");
     Ok(())
 }
 

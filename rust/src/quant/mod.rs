@@ -220,7 +220,11 @@ impl PackedTensor {
             let mut out = Vec::with_capacity(n.div_ceil(2));
             for pair in codes.chunks(2) {
                 let lo = (pair[0] as u8) & 0x0F;
-                let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };
+                let hi = if pair.len() > 1 {
+                    (pair[1] as u8) & 0x0F
+                } else {
+                    0
+                };
                 out.push(lo | (hi << 4));
             }
             out
@@ -267,7 +271,12 @@ impl PackedTensor {
 
     /// Bytes of storage including scales/offsets.
     pub fn storage_bytes(&self) -> usize {
-        self.data.len() + 4 * (self.scales.len() + if self.policy.asymmetric { self.zeros.len() } else { 0 })
+        let zeros = if self.policy.asymmetric {
+            self.zeros.len()
+        } else {
+            0
+        };
+        self.data.len() + 4 * (self.scales.len() + zeros)
     }
 }
 
@@ -303,14 +312,25 @@ pub fn int8_weight_eligible(p: TensorPolicy) -> bool {
 /// caveat: an integer code cannot carry the sign of a negative zero, so a
 /// value that rounds into the zero bin *from below* dequantizes to `+0.0`
 /// where the f32 oracle yields `-0.0` (equal values, different bits).
+///
+/// Rows are **lane-padded**: `codes` holds `rows * stride` entries with
+/// `stride = cols` rounded up to [`I8_LANES`], and the `stride - cols`
+/// trailing codes of every row are zero. A zero code contributes exactly
+/// 0 to an i32 accumulator, so the widening SIMD GEMM
+/// (`kernels::matmul_i8_packed`) can always load full lanes — the padding
+/// is semantically inert, not just alignment slack.
 #[derive(Debug, Clone)]
 pub struct PackedGemmOperand {
     pub codes: Vec<i8>,
     pub scales: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Row stride of `codes`: `cols.next_multiple_of(I8_LANES)`.
+    pub stride: usize,
 }
 
-/// Quantize an activation matrix for the int8 GEMM. The policy must be
-/// [`int8_act_eligible`].
+/// Quantize an activation matrix for the int8 GEMM (lane-padded layout;
+/// see [`PackedGemmOperand`]). The policy must be [`int8_act_eligible`].
 pub fn pack_acts_i8(
     x: &[f32],
     rows: usize,
@@ -321,32 +341,31 @@ pub fn pack_acts_i8(
     assert_eq!(x.len(), rows * cols);
     let qmax = policy.qmax();
     let params = group_params_qmax(x, rows, cols, policy.granularity, false, qmax);
-    let mut codes = Vec::with_capacity(rows * cols);
-    match policy.granularity {
-        Granularity::PerTensor => {
-            let p = params[0];
-            for &v in x {
-                codes.push(quantize_one(v, p, qmax) as i8);
-            }
+    let stride = cols.next_multiple_of(crate::backend::simd::I8_LANES);
+    let mut codes = vec![0i8; rows * stride];
+    for r in 0..rows {
+        let p = match policy.granularity {
+            Granularity::PerTensor => params[0],
+            Granularity::PerToken => params[r],
+            Granularity::PerChannel => unreachable!("rejected by eligibility"),
+        };
+        let row = &mut codes[r * stride..r * stride + cols];
+        for (slot, &v) in row.iter_mut().zip(&x[r * cols..(r + 1) * cols]) {
+            *slot = quantize_one(v, p, qmax) as i8;
         }
-        Granularity::PerToken => {
-            for r in 0..rows {
-                let p = params[r];
-                for &v in &x[r * cols..(r + 1) * cols] {
-                    codes.push(quantize_one(v, p, qmax) as i8);
-                }
-            }
-        }
-        Granularity::PerChannel => unreachable!("rejected by eligibility"),
     }
     PackedGemmOperand {
         codes,
         scales: params.iter().map(|p| p.scale).collect(),
+        rows,
+        cols,
+        stride,
     }
 }
 
-/// Quantize a (rows x cols) weight matrix for the int8 GEMM. The policy
-/// must be [`int8_weight_eligible`].
+/// Quantize a (rows x cols) weight matrix for the int8 GEMM (lane-padded
+/// layout; see [`PackedGemmOperand`]). The policy must be
+/// [`int8_weight_eligible`].
 pub fn pack_weights_i8(
     w: &[f32],
     rows: usize,
@@ -357,18 +376,26 @@ pub fn pack_weights_i8(
     assert_eq!(w.len(), rows * cols);
     let qmax = policy.qmax();
     let params = group_params_qmax(w, rows, cols, policy.granularity, false, qmax);
-    let mut codes = Vec::with_capacity(rows * cols);
+    let stride = cols.next_multiple_of(crate::backend::simd::I8_LANES);
+    let mut codes = vec![0i8; rows * stride];
+    // granularity dispatch hoisted out of the element loop: this runs once
+    // per forward linear per step (no packed-weight cache yet)
     match policy.granularity {
         Granularity::PerTensor => {
             let p = params[0];
-            for &v in w {
-                codes.push(quantize_one(v, p, qmax) as i8);
+            for r in 0..rows {
+                let row = &mut codes[r * stride..r * stride + cols];
+                for (slot, &v) in row.iter_mut().zip(&w[r * cols..(r + 1) * cols]) {
+                    *slot = quantize_one(v, p, qmax) as i8;
+                }
             }
         }
         Granularity::PerChannel => {
             for r in 0..rows {
-                for c in 0..cols {
-                    codes.push(quantize_one(w[r * cols + c], params[c], qmax) as i8);
+                let row = &mut codes[r * stride..r * stride + cols];
+                let wrow = &w[r * cols..(r + 1) * cols];
+                for ((slot, &v), p) in row.iter_mut().zip(wrow).zip(&params) {
+                    *slot = quantize_one(v, *p, qmax) as i8;
                 }
             }
         }
@@ -377,6 +404,9 @@ pub fn pack_weights_i8(
     PackedGemmOperand {
         codes,
         scales: params.iter().map(|p| p.scale).collect(),
+        rows,
+        cols,
+        stride,
     }
 }
 
@@ -386,22 +416,23 @@ pub fn pack_weights_i8(
 /// that zero-bin values quantized from below come back `+0.0` instead of
 /// the oracle's `-0.0` (see [`PackedGemmOperand`]). This is what lets the
 /// fast path hand backward the cache the reference path would have
-/// produced.
-pub fn dequant_acts_i8(p: &PackedGemmOperand, rows: usize, cols: usize) -> Vec<f32> {
-    assert_eq!(p.codes.len(), rows * cols);
-    let mut out = Vec::with_capacity(rows * cols);
-    if p.scales.len() == 1 {
-        let s = p.scales[0];
-        for &c in &p.codes {
+/// produced. The lane padding is dropped: the output is tight
+/// (rows x cols).
+pub fn dequant_acts_i8(p: &PackedGemmOperand) -> Vec<f32> {
+    assert_eq!(p.codes.len(), p.rows * p.stride);
+    assert!(
+        p.scales.len() == 1 || p.scales.len() == p.rows,
+        "dequant_acts_i8: scales must be 1 or rows"
+    );
+    let mut out = Vec::with_capacity(p.rows * p.cols);
+    for r in 0..p.rows {
+        let s = if p.scales.len() == 1 {
+            p.scales[0]
+        } else {
+            p.scales[r]
+        };
+        for &c in &p.codes[r * p.stride..r * p.stride + p.cols] {
             out.push(s * c as f32);
-        }
-    } else {
-        assert_eq!(p.scales.len(), rows);
-        for r in 0..rows {
-            let s = p.scales[r];
-            for &c in &p.codes[r * cols..(r + 1) * cols] {
-                out.push(s * c as f32);
-            }
         }
     }
     out
@@ -588,7 +619,7 @@ mod tests {
         for g in [PerTensor, PerToken] {
             let pol = TensorPolicy::new(8, g);
             let packed = pack_acts_i8(&x, 16, 12, pol);
-            let deq = dequant_acts_i8(&packed, 16, 12);
+            let deq = dequant_acts_i8(&packed);
             let fake = qdq_copy(&x, 16, 12, pol);
             let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
             assert_eq!(bits(&deq), bits(&fake), "{g:?}: dequant != qdq");
@@ -609,7 +640,7 @@ mod tests {
                     } else {
                         packed.scales[c]
                     };
-                    let deq = s * packed.codes[r * 10 + c] as f32;
+                    let deq = s * packed.codes[r * packed.stride + c] as f32;
                     assert_eq!(
                         deq.to_bits(),
                         fake[r * 10 + c].to_bits(),
@@ -618,6 +649,30 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn packed_gemm_rows_are_lane_padded_with_zero_codes() {
+        use crate::backend::simd::I8_LANES;
+        // cols not a multiple of the lane width: stride rounds up and every
+        // padding slot holds code 0 (inert in an i32 accumulator)
+        let (rows, cols) = (5, 13);
+        let x = grid(rows, cols);
+        let a = pack_acts_i8(&x, rows, cols, TensorPolicy::new(8, PerToken));
+        let w = pack_weights_i8(&x, rows, cols, TensorPolicy::new(8, PerChannel));
+        for p in [&a, &w] {
+            assert_eq!(p.stride, cols.next_multiple_of(I8_LANES));
+            assert_eq!(p.codes.len(), rows * p.stride);
+            for r in 0..rows {
+                for c in cols..p.stride {
+                    assert_eq!(p.codes[r * p.stride + c], 0, "padding not zero at ({r},{c})");
+                }
+            }
+        }
+        // lane-aligned cols: no padding at all
+        let tight = pack_acts_i8(&grid(3, 32), 3, 32, TensorPolicy::new(8, PerToken));
+        assert_eq!(tight.stride, 32);
+        assert_eq!(tight.codes.len(), 3 * 32);
     }
 
     #[test]

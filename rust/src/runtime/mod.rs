@@ -215,7 +215,9 @@ pub struct Runtime {
 impl Runtime {
     /// Pure-rust native runtime (the default-build path; never fails).
     /// Warms the persistent kernel worker pool so the first train/eval
-    /// step of a run doesn't pay thread-spawn latency.
+    /// step of a run doesn't pay thread-spawn latency. Kernel dispatch
+    /// honors the `QPRETRAIN_SIMD` knob (`off`/`0` pins the bit-identical
+    /// scalar lane emulation; `backend::native::simd_active` introspects).
     pub fn native() -> Runtime {
         crate::backend::kernels::warm_pool();
         Runtime {

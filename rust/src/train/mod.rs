@@ -163,7 +163,11 @@ pub fn train_from(
 
         losses.push(loss);
         gnorms.push(gnorm);
-        min_loss = min_loss.min(if loss.is_finite() { loss } else { f64::INFINITY });
+        min_loss = min_loss.min(if loss.is_finite() {
+            loss
+        } else {
+            f64::INFINITY
+        });
 
         // spike + divergence detection
         let ema_v = ema.update(if loss.is_finite() { loss } else { 1e9 });

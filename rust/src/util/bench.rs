@@ -4,8 +4,16 @@
 //! auto-scales iteration count to a target measurement time, and prints
 //! criterion-style `name  time ± sd  (throughput)` rows plus a
 //! machine-readable JSONL file under `runs/bench/`.
+//!
+//! [`check_against_baseline`] is the CI perf-regression gate: the bench
+//! binaries call it on their own `BENCH_*.json` report against the
+//! committed floors in `rust/tests/bench_baseline.json`, failing the run
+//! (instead of merely uploading an artifact nobody diffs) when a metric
+//! regresses below its floor.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
 
 pub struct BenchResult {
     pub name: String,
@@ -158,6 +166,102 @@ fn human_time(ns: f64) -> (f64, &'static str) {
 /// Print a section header in bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Check one bench report against the committed perf floors
+/// (`rust/tests/bench_baseline.json`) and fail on regression.
+///
+/// The baseline holds a `floors` array; each entry names the `bench`
+/// section it applies to, a numeric `field` with its `min` floor, and any
+/// number of extra string keys that select matching rows in the report's
+/// `results` array (a row matches when every selector key equals the
+/// row's same-named string value). Every matching row must clear the
+/// floor, and at least one row must match — a renamed row must fail the
+/// gate, not silently skip it. Entries with `"requires_simd": true` are
+/// skipped when the report's top-level `simd` flag is false (ISA-speedup
+/// floors are meaningless on machines without the vector path). Floors
+/// are intentionally generous: the gate catches collapses (a lost fast
+/// path, an accidental serial fallback), not noise.
+pub fn check_against_baseline(report: &Value, bench_name: &str) -> anyhow::Result<()> {
+    let path = crate::util::repo_root().join("rust/tests/bench_baseline.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let baseline = crate::util::json::parse(&text)?;
+    let simd_on = report.get("simd").and_then(|v| v.as_bool()).unwrap_or(false);
+    let rows = report.req("results")?.as_arr().unwrap_or_default().to_vec();
+    let mut checked = 0usize;
+    for floor in baseline.req("floors")?.as_arr().unwrap_or_default() {
+        // malformed entries must fail the gate, not silently disable it
+        let bench = floor
+            .req("bench")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("baseline: non-string bench in {}", floor.to_json()))?
+            .to_string();
+        if bench != bench_name {
+            continue;
+        }
+        let requires_simd = floor
+            .get("requires_simd")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        if requires_simd && !simd_on {
+            println!("baseline: skipping {} (no SIMD on this host)", floor.to_json());
+            continue;
+        }
+        let field = floor
+            .req("field")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("baseline: non-string field in {}", floor.to_json()))?
+            .to_string();
+        let min = floor
+            .req("min")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("baseline: non-numeric min in {}", floor.to_json()))?;
+        let selectors: Vec<(String, String)> = floor
+            .as_obj()
+            .unwrap_or_default()
+            .iter()
+            .filter(|(k, v)| {
+                !matches!(k.as_str(), "bench" | "field" | "min" | "requires_simd" | "comment")
+                    && v.as_str().is_some()
+            })
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+        let mut matched = 0usize;
+        for row in &rows {
+            let hit = selectors
+                .iter()
+                .all(|(k, want)| row.get(k).and_then(|v| v.as_str()) == Some(want.as_str()));
+            if !hit {
+                continue;
+            }
+            matched += 1;
+            let got = row.get(&field).and_then(|v| v.as_f64()).ok_or_else(|| {
+                anyhow::anyhow!("baseline: row {} lacks field {field:?}", row.to_json())
+            })?;
+            if got < min {
+                anyhow::bail!(
+                    "perf regression: {bench_name} row {} has {field} = {got:.3} \
+                     below the committed floor {min:.3}",
+                    row.to_json()
+                );
+            }
+        }
+        if matched == 0 {
+            anyhow::bail!(
+                "baseline floor {} matched no rows in {bench_name} — renamed row?",
+                floor.to_json()
+            );
+        }
+        checked += matched;
+    }
+    // a bench with no floors at all means the gate is mis-keyed (bench
+    // renamed, baseline typo) — that must fail, not silently stop gating
+    if checked == 0 {
+        anyhow::bail!("baseline has no floors for bench {bench_name:?} — gate mis-keyed?");
+    }
+    println!("baseline gate: {checked} {bench_name} rows at or above their committed floors");
+    Ok(())
 }
 
 /// Write bench results as JSONL for the report generator.

@@ -42,3 +42,27 @@ pub fn ensure_parent(path: &Path) -> std::io::Result<()> {
     }
     Ok(())
 }
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a64_step(h: u64, byte: u8) -> u64 {
+    (h ^ byte as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// FNV-1a 64-bit hash (the offline crate set has no hashing crate). Used by
+/// the `digest` subcommand to fingerprint parameter/moment tensors so CI
+/// can diff train-run digests across matrix legs without shipping the full
+/// state.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    bytes.iter().fold(FNV_OFFSET, |h, &b| fnv1a64_step(h, b))
+}
+
+/// [`fnv1a64`] over the little-endian bit patterns of an f32 tensor (the
+/// exact bits, so the digest detects sign-of-zero and last-ulp drift).
+pub fn fnv1a64_f32(values: &[f32]) -> u64 {
+    values.iter().fold(FNV_OFFSET, |h, v| {
+        v.to_bits().to_le_bytes().iter().fold(h, |h, &b| fnv1a64_step(h, b))
+    })
+}

@@ -66,7 +66,8 @@ fn qdq_reference(
     kernels::matmul(&xq, &wq, m, k, n)
 }
 
-/// The packed path for one linear: quantize once to i8, i32 GEMM, rescale.
+/// The packed path for one linear: quantize once to lane-padded i8, i32
+/// GEMM over the padded layout, rescale.
 fn int8_path(
     x: &[f32],
     w: &[f32],
@@ -78,7 +79,7 @@ fn int8_path(
 ) -> Vec<f32> {
     let xa = quant::pack_acts_i8(x, m, k, ap);
     let wq = quant::pack_weights_i8(w, k, n, wp);
-    let ci = kernels::matmul_i8(&xa.codes, &wq.codes, m, k, n);
+    let ci = kernels::matmul_i8_packed(&xa, &wq);
     kernels::rescale_i32(&ci, &xa.scales, &wq.scales, m, n)
 }
 

@@ -120,8 +120,9 @@ fn prop_packed_roundtrip_equals_fake_quant() {
             out
         },
         |(data, rows, cols)| {
+            let grans = [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel];
             for bits in [4u32, 8] {
-                for gran in [Granularity::PerTensor, Granularity::PerToken, Granularity::PerChannel] {
+                for gran in grans {
                     let scheme = TensorPolicy::new(bits, gran);
                     let packed = PackedTensor::quantize(data, *rows, *cols, scheme);
                     let deq = packed.dequantize();
@@ -195,7 +196,12 @@ fn prop_json_roundtrip() {
         cfg(100),
         |rng| {
             fn value(rng: &mut Rng, depth: usize) -> Value {
-                match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                let pick = if depth > 2 {
+                    rng.below(4)
+                } else {
+                    rng.below(6)
+                };
+                match pick {
                     0 => Value::Null,
                     1 => Value::Bool(rng.bool_with(0.5)),
                     2 => Value::Num((rng.normal() * 100.0).round()),

@@ -1,0 +1,290 @@
+//! SIMD/scalar lane-equivalence suite: the vector microkernels
+//! (`backend::simd`) must be **bit-identical** to their scalar lane
+//! emulation on every shape — K tails of every residue mod the lane
+//! width, degenerate dims, i8 saturation codes near the i32 widening
+//! bound — and end-to-end through the native forward. Together with
+//! `rust/tests/kernels.rs` (threads axis) this pins the full determinism
+//! matrix: results are a function of the problem only, never of the ISA
+//! or the thread count.
+//!
+//! Tests here flip the process-wide SIMD/thread knobs, so they serialize
+//! on a mutex and restore via an RAII guard (panic-safe).
+
+use std::sync::{Mutex, MutexGuard};
+
+use qpretrain::backend::{kernels, math, native};
+use qpretrain::config::{Granularity, QuantRecipe, TensorPolicy};
+use qpretrain::data::{BatchIter, CorpusCfg};
+use qpretrain::model::init_state;
+use qpretrain::quant;
+use qpretrain::runtime::Runtime;
+use qpretrain::util::quickcheck::{check, Config};
+use qpretrain::util::rng::Rng;
+
+static KNOBS: Mutex<()> = Mutex::new(());
+
+/// Serializes the test and restores every process-wide knob on drop.
+struct Knobs(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+fn knobs() -> Knobs {
+    Knobs(KNOBS.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+impl Drop for Knobs {
+    fn drop(&mut self) {
+        kernels::force_parallel(false);
+        kernels::set_threads(0);
+        kernels::set_simd(None);
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Both dispatch modes of one matmul suite (nn + nt + tn + acc forms),
+/// compared bit-for-bit against each other *and* against the serial
+/// reference walked in the same mode.
+fn modes_identical(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> bool {
+    let bt: Vec<f32> = b.iter().chain(a.iter()).cycle().take(n * k).copied().collect();
+    let bn: Vec<f32> = b.iter().chain(a.iter()).cycle().take(m * n).copied().collect();
+    let run = |simd: bool| {
+        kernels::with_simd(simd, || {
+            let mut acc: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.17).sin()).collect();
+            kernels::matmul_acc(&mut acc, a, b, m, k, n);
+            (
+                kernels::matmul(a, b, m, k, n),
+                kernels::matmul_nt(a, &bt, m, k, n),
+                kernels::matmul_tn(a, &bn, m, k, n),
+                acc,
+                math::matmul(a, b, m, k, n),
+                math::matmul_nt(a, &bt, m, k, n),
+            )
+        })
+    };
+    let s = run(false);
+    let v = run(true);
+    bits(&s.0) == bits(&v.0)
+        && bits(&s.1) == bits(&v.1)
+        && bits(&s.2) == bits(&v.2)
+        && bits(&s.3) == bits(&v.3)
+        // kernels == math inside each mode (the threads-axis contract
+        // holds on both sides of the ISA axis)
+        && bits(&s.0) == bits(&s.4)
+        && bits(&s.1) == bits(&s.5)
+        && bits(&v.0) == bits(&v.4)
+        && bits(&v.1) == bits(&v.5)
+}
+
+#[test]
+fn prop_simd_bitwise_equals_scalar_emulation() {
+    let _g = knobs();
+    if !kernels::simd_supported() {
+        return; // single-tier machine: nothing to compare
+    }
+    kernels::force_parallel(true);
+    check(
+        Config { cases: 60, ..Config::default() },
+        |rng: &mut Rng| {
+            // K biased into the tail-heavy 1..=17 band the lane width cares
+            // about, with occasional panel-straddling sizes
+            let k = if rng.bool_with(0.6) {
+                rng.range(1, 18)
+            } else {
+                rng.range(kernels::K_PANEL - 2, kernels::K_PANEL + 11)
+            };
+            let m = rng.range(1, 13);
+            let n = rng.range(1, 36);
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let threads = rng.range(1, 9);
+            (a, b, m, k, n, threads)
+        },
+        |(a, b, m, k, n, threads)| {
+            kernels::set_threads(*threads);
+            modes_identical(a, b, *m, *k, *n)
+        },
+    );
+}
+
+#[test]
+fn k_tail_sweep_every_residue_bit_identical() {
+    // K = 1..=17 covers every residue mod 8 (f32 lanes) and mod 16 (i8
+    // lanes) plus both sides of one full lane block; N sweeps the store
+    // tails of the axpy kernels
+    let _g = knobs();
+    let mut rng = Rng::new(0x7A11);
+    for k in 1..=17usize {
+        for n in [1usize, 7, 8, 9, 16, 17] {
+            let m = 3;
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            assert!(
+                modes_identical(&a, &b, m, k, n),
+                "simd/scalar modes differ at (m={m}, k={k}, n={n})"
+            );
+        }
+    }
+}
+
+#[test]
+fn degenerate_dims_no_panic_and_mode_invariant() {
+    let _g = knobs();
+    for (m, k, n) in [(0usize, 5usize, 3usize), (4, 0, 3), (4, 5, 0), (0, 0, 0), (1, 1, 1)] {
+        let a = vec![0.5f32; m * k];
+        let b = vec![-0.25f32; k * n];
+        let run = |simd: bool| {
+            kernels::with_simd(simd, || {
+                let bt = vec![0.125f32; n * k];
+                (kernels::matmul(&a, &b, m, k, n), kernels::matmul_nt(&a, &bt, m, k, n))
+            })
+        };
+        let s = run(false);
+        let v = run(true);
+        assert_eq!(bits(&s.0), bits(&v.0), "matmul ({m},{k},{n})");
+        assert_eq!(bits(&s.1), bits(&v.1), "matmul_nt ({m},{k},{n})");
+        assert_eq!(s.0.len(), m * n);
+        // k == 0 must yield exact (positive) zeros on every path
+        if k == 0 {
+            assert!(s.0.iter().all(|x| x.to_bits() == 0), "k=0 not +0.0");
+        }
+
+        let ia = vec![7i8; m * k];
+        let ib = vec![-3i8; k * n];
+        let is_ = kernels::with_simd(false, || kernels::matmul_i8(&ia, &ib, m, k, n));
+        let iv = kernels::with_simd(true, || kernels::matmul_i8(&ia, &ib, m, k, n));
+        assert_eq!(is_, iv, "matmul_i8 ({m},{k},{n})");
+        assert_eq!(is_.len(), m * n);
+    }
+}
+
+#[test]
+fn i8_extreme_codes_near_i32_widening_bound() {
+    // all-saturated codes (±127) at the largest K whose dot product still
+    // fits i32: k·127² = 2 145 157 000 < 2 147 483 647. One row of +127
+    // against a +127 column drives the accumulator within ~0.1% of
+    // i32::MAX; the mirrored row does the same toward i32::MIN. The i32
+    // path must agree with a widened i64 reference exactly, in both
+    // dispatch modes.
+    let _g = knobs();
+    let k = 133_000usize;
+    assert!((k as i64) * 127 * 127 <= i32::MAX as i64);
+    let m = 2usize;
+    let n = 4usize;
+    let mut a = vec![127i8; m * k];
+    for v in a[k..].iter_mut() {
+        *v = -127; // second row pushes toward i32::MIN
+    }
+    let mut b = vec![127i8; k * n];
+    for (i, v) in b.iter_mut().enumerate() {
+        if i % n >= 2 {
+            *v = if (i / n) % 2 == 0 { 127 } else { -127 }; // alternating cols
+        }
+    }
+    let mut want = vec![0i64; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            for j in 0..n {
+                want[i * n + j] += a[i * k + l] as i64 * b[l * n + j] as i64;
+            }
+        }
+    }
+    assert_eq!(want[0], (k as i64) * 127 * 127, "test setup: not at the bound");
+    for simd in [false, true] {
+        let got = kernels::with_simd(simd, || kernels::matmul_i8(&a, &b, m, k, n));
+        let got64: Vec<i64> = got.iter().map(|&v| v as i64).collect();
+        assert_eq!(got64, want, "saturated i8 GEMM wrong (simd={simd})");
+    }
+}
+
+#[test]
+fn packed_padded_layout_equals_tight_gemm() {
+    let _g = knobs();
+    let mut rng = Rng::new(0x9AD);
+    let (m, k, n) = (6usize, 45usize, 13usize); // both strides padded
+    let x = rng.normal_vec(m * k, 0.0, 1.2);
+    let w = rng.normal_vec(k * n, 0.0, 0.7);
+    let ap = TensorPolicy::new(8, Granularity::PerToken);
+    let wp = TensorPolicy::new(8, Granularity::PerChannel);
+    let xa = quant::pack_acts_i8(&x, m, k, ap);
+    let wq = quant::pack_weights_i8(&w, k, n, wp);
+    assert!(xa.stride > xa.cols && wq.stride > wq.cols, "shapes should need padding");
+    // strip the padding to recover the tight layout
+    let tight = |p: &quant::PackedGemmOperand| -> Vec<i8> {
+        let mut out = Vec::with_capacity(p.rows * p.cols);
+        for r in 0..p.rows {
+            out.extend_from_slice(&p.codes[r * p.stride..r * p.stride + p.cols]);
+        }
+        out
+    };
+    let want = kernels::matmul_i8(&tight(&xa), &tight(&wq), m, k, n);
+    for simd in [false, true] {
+        let got = kernels::with_simd(simd, || kernels::matmul_i8_packed(&xa, &wq));
+        assert_eq!(got, want, "padded GEMM != tight GEMM (simd={simd})");
+    }
+}
+
+#[test]
+fn dequant_padded_acts_bitwise_matches_qdq() {
+    // odd cols force padding; strictly positive data keeps every value out
+    // of the zero bin, so the -0.0 caveat never triggers and full bitwise
+    // equality with the qdq oracle is the right expectation
+    let _g = knobs();
+    let mut rng = Rng::new(0xDE0);
+    let (rows, cols) = (9usize, 13usize);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal_f32(0.0, 1.0).abs() + 0.25).collect();
+    for gran in [Granularity::PerTensor, Granularity::PerToken] {
+        let pol = TensorPolicy::new(8, gran);
+        let packed = quant::pack_acts_i8(&x, rows, cols, pol);
+        let deq = quant::dequant_acts_i8(&packed);
+        let fake = quant::qdq_copy(&x, rows, cols, pol);
+        assert_eq!(bits(&deq), bits(&fake), "{gran:?}: padded dequant != qdq");
+    }
+}
+
+#[test]
+fn knob_env_introspection_agree() {
+    let _g = knobs();
+    kernels::set_simd(Some(false));
+    assert!(!kernels::simd_active());
+    assert!(!native::simd_active());
+    if kernels::simd_supported() {
+        kernels::set_simd(Some(true));
+        assert!(kernels::simd_active() && native::simd_active());
+        kernels::with_simd(false, || assert!(!native::simd_active()));
+        assert!(kernels::simd_active(), "with_simd did not restore the forced-on state");
+    }
+}
+
+#[test]
+fn native_forward_bitwise_invariant_across_simd_and_threads() {
+    // the end-to-end contract: a full quantized forward (int8 fast path
+    // AND f32 qdq path) produces identical bits whether the vector
+    // microkernels or the scalar lane emulation run, at any thread count
+    let _g = knobs();
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 57);
+    let mut it = BatchIter::new(CorpusCfg::train_default(model.vocab), model.batch, model.seq);
+    let b = it.next_batch();
+    let mask = vec![1.0f32; model.batch * model.seq];
+    for spec in ["base", "w8a8", "w4_pc+a8_ptok_asym"] {
+        let recipe = QuantRecipe::parse(spec).unwrap();
+        kernels::set_threads(1);
+        let scalar = kernels::with_simd(false, || {
+            rt.eval_step(&model, &recipe, &state.params, &b.x, &b.y, &mask).unwrap()
+        });
+        kernels::set_threads(7);
+        kernels::force_parallel(true);
+        let simd = kernels::with_simd(true, || {
+            rt.eval_step(&model, &recipe, &state.params, &b.x, &b.y, &mask).unwrap()
+        });
+        kernels::force_parallel(false);
+        assert_eq!(
+            bits(&scalar.per_pos),
+            bits(&simd.per_pos),
+            "{spec}: scalar@1t != simd@7t"
+        );
+        assert_eq!(scalar.mean_nll.to_bits(), simd.mean_nll.to_bits(), "{spec}");
+    }
+}
