@@ -11,7 +11,7 @@
 //! anything, every parallel kernel is asserted bit-identical to its serial
 //! reference, and the SIMD path to its scalar emulation.
 
-use qpretrain::backend::{kernels, math};
+use qpretrain::backend::{kernels, math, simd};
 use qpretrain::config::{Granularity, TensorPolicy};
 use qpretrain::quant::qdq_copy;
 use qpretrain::util::bench::{bench, bench_throughput, section};
@@ -200,6 +200,51 @@ fn main() {
         ("speedup", json::num(i8_speedup)),
     ]));
 
+    section("4-row register blocking vs the 1-row microkernel walk (1 thread)");
+    // bench-local replica of the pre-blocking kernel: the same K-panel walk
+    // and per-element k-ascending fma order, minus the 4-row accumulator
+    // blocks — so the delta isolates what the blocking buys (each b-row
+    // load amortized over four output rows). The preflight proves the
+    // blocking is value-neutral before its speedup means anything.
+    let matmul_1row = |a: &[f32], b: &[f32], m: usize, k: usize, n: usize| -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for l0 in (0..k).step_by(kernels::K_PANEL) {
+            let l1 = (l0 + kernels::K_PANEL).min(k);
+            for i in 0..m {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for l in l0..l1 {
+                    simd::axpy(crow, a[i * k + l], &b[l * n..(l + 1) * n]);
+                }
+            }
+        }
+        c
+    };
+    assert_eq!(
+        bits(&matmul_1row(&gx, &gw, gm, gk, gn)),
+        bits(&kernels::with_threads(1, || kernels::matmul(&gx, &gw, gm, gk, gn))),
+        "4-row blocked matmul != 1-row reference walk"
+    );
+    println!("blocking preflight: 4-row blocked == 1-row walk, bit for bit");
+    let s = kernels::with_threads(1, || {
+        bench("f32_gemm/1row_walk", || matmul_1row(&gx, &gw, gm, gk, gn))
+    });
+    let p = kernels::with_threads(1, || {
+        bench("f32_gemm/4row_blocked", || kernels::matmul(&gx, &gw, gm, gk, gn))
+    });
+    let blocked_speedup = s.mean_ns / p.mean_ns;
+    println!(
+        "    blocked_vs_1row_gemm: {:.2} -> {:.2} GFLOP/s  ({blocked_speedup:.2}x)",
+        s.gflops(gflops_f32),
+        p.gflops(gflops_f32)
+    );
+    results.push(json::obj(vec![
+        ("name", json::s("blocked_vs_1row_gemm")),
+        ("flops", json::num(gflops_f32 as f64)),
+        ("onerow_gflops", json::num(s.gflops(gflops_f32))),
+        ("blocked_gflops", json::num(p.gflops(gflops_f32))),
+        ("speedup", json::num(blocked_speedup)),
+    ]));
+
     section("row/elementwise kernels serial vs parallel");
     let rows = 4096usize;
     let d = 768usize;
@@ -305,6 +350,95 @@ fn main() {
         ("qdq_path_gflops", json::num(s.gflops((2 * m * n * k) as u64))),
         ("int8_path_gflops", json::num(p.gflops((2 * m * n * k) as u64))),
         ("speedup", json::num(int8_speedup)),
+    ]));
+
+    section("backward packed-int8 GEMMs vs the f32 qdq path (w8a8g8 grads)");
+    // the PR-6 backward substrate at the bench shapes: forward here is
+    // y(m x k) = x(m x n) @ w(n x k), so the weight grad is the tn GEMM
+    // dw(n x k) = x^T @ g and the input grad is the nt GEMM
+    // dx(m x n) = g @ w^T. Activations (tn) and weights/grad codes (nt)
+    // arrive pre-packed from the per-step cache, so each leg times exactly
+    // what the train step pays per backward GEMM: the int8 tn leg packs the
+    // grads + runs the row-factored i8 core; the qdq tn leg qdq's the grads
+    // + runs the f32 tn GEMM against the cached f32 activations.
+    let gp = TensorPolicy::new(8, Granularity::PerToken);
+    let xa = qpretrain::quant::pack_acts_i8(&x, m, n, ap);
+    let xq = qdq_copy(&x, m, n, ap);
+    {
+        // exactness preflight: the row-factored tn core must sit within
+        // rounding of the qdq oracle (bitwise at pow2 scales; the general
+        // data here only bounds the f32-summation gap, as in the forward
+        // preflight above)
+        let gq = qpretrain::quant::pack_grads_i8(&g, m, k, gp);
+        let mut fast = vec![0.0f32; n * k];
+        kernels::matmul_i8_tn_scaled_acc(&mut fast, &xa, &gq);
+        let gdq = qdq_copy(&g, m, k, gp);
+        let reference = kernels::matmul_tn(&xq, &gdq, m, n, k);
+        let mag = reference.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (i, (a, b)) in fast.iter().zip(&reference).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (mag + 1.0),
+                "int8 tn preflight: element {i}: {a} vs {b} (magnitude {mag})"
+            );
+        }
+        println!("int8 tn exactness preflight: row-factored core within rounding of qdq oracle");
+    }
+    let s = bench("qdq_tn_path (qdq g + f32 tn gemm on cached f32 acts)", || {
+        let gdq = qdq_copy(&g, m, k, gp);
+        kernels::matmul_tn(&xq, &gdq, m, n, k)
+    });
+    let p = bench("int8_tn_path (pack g + row-factored i8 tn on cached codes)", || {
+        let gq = qpretrain::quant::pack_grads_i8(&g, m, k, gp);
+        let mut dw = vec![0.0f32; n * k];
+        kernels::matmul_i8_tn_scaled_acc(&mut dw, &xa, &gq);
+        dw
+    });
+    let tn_speedup = s.mean_ns / p.mean_ns;
+    println!("    int8 tn vs qdq tn path: {tn_speedup:.2}x");
+    results.push(json::obj(vec![
+        ("name", json::s("int8_tn_backward_vs_qdq_path")),
+        ("flops", json::num((2 * m * n * k) as f64)),
+        ("qdq_path_gflops", json::num(s.gflops((2 * m * n * k) as u64))),
+        ("int8_path_gflops", json::num(p.gflops((2 * m * n * k) as u64))),
+        ("speedup", json::num(tn_speedup)),
+    ]));
+    // nt: both operand sets are per-step-cache residents (grad codes are
+    // packed once for the tn GEMM, weights once at forward), so the legs
+    // compare just the GEMM+rescale: exact-i32 nt core vs the f32 nt GEMM
+    // over the equivalent dequantized operands
+    let wpt = TensorPolicy::new(8, Granularity::PerTensor);
+    let gq = qpretrain::quant::pack_grads_i8(&g, m, k, gp);
+    let wa = qpretrain::quant::pack_weights_i8(&w, n, k, wpt);
+    let gdq = qpretrain::quant::dequant_acts_i8(&gq);
+    let wdq = qpretrain::quant::dequant_weights_i8(&wa);
+    {
+        let ci = kernels::matmul_i8_nt_packed(&gq, &wa);
+        let fast = kernels::rescale_i32(&ci, &gq.scales, &wa.scales, m, n);
+        let reference = kernels::matmul_nt(&gdq, &wdq, m, k, n);
+        let mag = reference.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (i, (a, b)) in fast.iter().zip(&reference).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (mag + 1.0),
+                "int8 nt preflight: element {i}: {a} vs {b} (magnitude {mag})"
+            );
+        }
+        println!("int8 nt exactness preflight: packed nt core within rounding of qdq oracle");
+    }
+    let s = bench("qdq_nt_path (f32 nt gemm on dequantized operands)", || {
+        kernels::matmul_nt(&gdq, &wdq, m, k, n)
+    });
+    let p = bench("int8_nt_path (i32 nt gemm + rescale on cached codes)", || {
+        let ci = kernels::matmul_i8_nt_packed(&gq, &wa);
+        kernels::rescale_i32(&ci, &gq.scales, &wa.scales, m, n)
+    });
+    let nt_speedup = s.mean_ns / p.mean_ns;
+    println!("    int8 nt vs qdq nt path: {nt_speedup:.2}x");
+    results.push(json::obj(vec![
+        ("name", json::s("int8_nt_backward_vs_qdq_path")),
+        ("flops", json::num((2 * m * n * k) as f64)),
+        ("qdq_path_gflops", json::num(s.gflops((2 * m * n * k) as u64))),
+        ("int8_path_gflops", json::num(p.gflops((2 * m * n * k) as u64))),
+        ("speedup", json::num(nt_speedup)),
     ]));
 
     section("pool handoff overhead (small kernel, forced parallel)");

@@ -1,11 +1,12 @@
 //! L3 end-to-end train-step benches (feeds §Perf): steps/s and tokens/s
 //! for the native backend across quantization recipes, serial vs pool
-//! kernels, the packed-int8 fast path vs the f32 qdq reference on w8a8,
-//! plus a breakdown of where the per-step wall time goes
-//! (forward+backward+Adam vs data generation).
+//! kernels, the exact-i32 accumulator vs the f32 code fold on the packed
+//! w8a8 / w8a8g8 GEMMs, plus a breakdown of where the per-step wall time
+//! goes (forward+backward+Adam vs data generation).
 //!
 //! Emits `BENCH_train_loop.json` at the repo root (steps/s, tokens/s,
-//! thread count, serial-vs-pool, int8-vs-qdq and scalar-vs-SIMD speedups)
+//! thread count, serial-vs-pool, i32-vs-f32-fold and scalar-vs-SIMD
+//! speedups)
 //! for the perf trajectory, then fails against the committed floors in
 //! `rust/tests/bench_baseline.json`; CI uploads the JSON as an artifact
 //! per run. Set `QPRETRAIN_BENCH_FAST=1` for a smoke run with shrunk step
@@ -78,21 +79,34 @@ fn main() {
         );
     }
 
-    section("int8 fast path vs f32 qdq reference (w8a8, default threads)");
-    // the acceptance row for the quantized-compute claim: the same w8a8
-    // run, dispatched through the f32 qdq oracle vs the packed-int8 GEMM
+    section("exact-i32 accumulator vs f32 code fold (packed GEMMs, default threads)");
+    // the acceptance rows for the integer-compute claim: the same
+    // packed-code run with the accumulator knob on (exact i32 + one
+    // rescale) vs off (f32 fold of the identical integer code products).
+    // w8a8 exercises the forward packed GEMMs; w8a8g8 adds the packed
+    // backward — per-step grad packing, the row-factored i8 tn core and
+    // the cached-operand nt GEMM.
     for (model, steps, toks) in [("micro", micro_steps, 512.0f64), ("t4", t4_steps, 2048.0)] {
-        native::set_int8_gemm(false);
-        let qdq = steps_per_sec(&rt, model, "w8a8", steps, 0);
-        native::set_int8_gemm(true);
-        let int8 = steps_per_sec(&rt, model, "w8a8", steps, 0);
-        record(model, "w8a8[qdq]", threads, qdq, toks);
-        record(model, "w8a8[int8]", threads, int8, toks);
-        println!(
-            "{model:<8} qdq path: {qdq:>7.2} steps/s   int8 path: {int8:>7.2} steps/s   speedup {:.2}x",
-            int8 / qdq
-        );
+        for recipe in ["w8a8", "w8a8g8"] {
+            native::set_int8_gemm(false);
+            let fold = steps_per_sec(&rt, model, recipe, steps, 0);
+            native::set_int8_gemm(true);
+            let int8 = steps_per_sec(&rt, model, recipe, steps, 0);
+            record(model, &format!("{recipe}[f32fold]"), threads, fold, toks);
+            record(model, &format!("{recipe}[int8]"), threads, int8, toks);
+            results.push(json::obj(vec![
+                ("name", json::s("int8_vs_f32fold")),
+                ("model", json::s(model)),
+                ("recipe", json::s(recipe)),
+                ("speedup", json::num(int8 / fold)),
+            ]));
+            println!(
+                "{model:<8} {recipe:<8} f32 fold: {fold:>7.2} steps/s   i32: {int8:>7.2} steps/s   speedup {:.2}x",
+                int8 / fold
+            );
+        }
     }
+    native::set_int8_gemm(native::int8_env_default());
 
     section("simd vector path vs scalar lane emulation (micro, default threads)");
     // the ISA-axis rows of the trajectory: the same run with the dispatch

@@ -37,16 +37,25 @@
 //! lane/tail structure, so results are bit-identical with or without SIMD
 //! — and [`super::math`] uses the same microkernels serially, so the
 //! kernels==math contract is preserved along both axes (threads × ISA).
-//! The knobs mirror the thread knobs: `QPRETRAIN_SIMD=off` env,
+//! The GEMM walks are **4-row register blocked** (`axpy4`/`dot4`/
+//! `axpy4_i8`): each shared-operand load feeds four independent
+//! accumulator rows, which changes only load scheduling — every output
+//! element keeps its exact 1-row accumulation sequence, so the blocked
+//! kernels stay bit-identical to [`super::math`]'s unblocked walk. The
+//! knobs mirror the thread knobs: `QPRETRAIN_SIMD=off` env,
 //! [`set_simd`] / [`with_simd`] / [`simd_active`] (re-exported from
 //! [`super::simd`]).
 //!
-//! The module also hosts the packed-int8 GEMM ([`matmul_i8`] +
-//! [`rescale_i32`]): i32 accumulation is exact, hence associative, hence
-//! trivially deterministic under any parallel split; the rescale is
+//! The module also hosts the packed-int8 GEMMs: forward [`matmul_i8`] /
+//! [`matmul_i8_packed`] plus the backward forms [`matmul_i8_tn_packed`]
+//! (weight grad), [`matmul_i8_nt_packed`] (input grad, reusing the
+//! forward-packed weight operand) and the row-factored
+//! [`matmul_i8_tn_scaled_acc`] for per-token scale sets. i32 accumulation
+//! is exact, hence associative, hence trivially deterministic under any
+//! parallel split; the rescale ([`rescale_i32`] / [`rescale_f32`]) is
 //! elementwise. Packed operands carry rows padded to the i8 lane width
-//! (`quant::PackedGemmOperand`), so [`matmul_i8_packed`] never issues a
-//! partial-lane load. The native backend dispatches to it for symmetric
+//! (`quant::PackedGemmOperand`), so the packed GEMMs never issue a
+//! partial-lane load. The native backend dispatches to them for symmetric
 //! 8-bit recipes (see `backend::native::int8_dispatch`).
 
 use std::ops::Range;
@@ -540,14 +549,35 @@ pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: us
         return;
     }
     par_chunks_mut(c, n, 2 * k * n, |rows, cc| {
+        let nrows = rows.end - rows.start;
         for l0 in (0..k).step_by(K_PANEL) {
             let l1 = (l0 + K_PANEL).min(k);
-            for (ri, i) in rows.clone().enumerate() {
+            // 4-row register blocks: one b-row load feeds 4 output rows.
+            // Each output row still accumulates k-ascending, so the block
+            // walk is bit-identical to the 1-row walk (and to math::matmul).
+            let mut ri = 0;
+            while ri + 4 <= nrows {
+                let i = rows.start + ri;
+                let cblk = &mut cc[ri * n..(ri + 4) * n];
+                for l in l0..l1 {
+                    let coeff = [
+                        a[i * k + l],
+                        a[(i + 1) * k + l],
+                        a[(i + 2) * k + l],
+                        a[(i + 3) * k + l],
+                    ];
+                    simd::axpy4(cblk, &coeff, &b[l * n..(l + 1) * n]);
+                }
+                ri += 4;
+            }
+            while ri < nrows {
+                let i = rows.start + ri;
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut cc[ri * n..(ri + 1) * n];
                 for l in l0..l1 {
                     simd::axpy(crow, arow[l], &b[l * n..(l + 1) * n]);
                 }
+                ri += 1;
             }
         }
     });
@@ -573,11 +603,24 @@ pub fn matmul_tn_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
         return;
     }
     par_chunks_mut(c, n, 2 * m * n, |lrange, cc| {
+        let nl = lrange.end - lrange.start;
         for r in 0..m {
             let arow = &a[r * k..(r + 1) * k];
             let brow = &b[r * n..(r + 1) * n];
-            for (li, l) in lrange.clone().enumerate() {
+            // 4-row blocks over the output rows (the k dimension): the
+            // shared b row is loaded once per 4 accumulator rows, and each
+            // output row keeps its exact r-ascending accumulation order
+            let mut li = 0;
+            while li + 4 <= nl {
+                let l = lrange.start + li;
+                let coeff = [arow[l], arow[l + 1], arow[l + 2], arow[l + 3]];
+                simd::axpy4(&mut cc[li * n..(li + 4) * n], &coeff, brow);
+                li += 4;
+            }
+            while li < nl {
+                let l = lrange.start + li;
                 simd::axpy(&mut cc[li * n..(li + 1) * n], arow[l], brow);
+                li += 1;
             }
         }
     });
@@ -596,8 +639,18 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
         for (ri, i) in rows.clone().enumerate() {
             let arow = &a[i * k..(i + 1) * k];
             let crow = &mut cc[ri * n..(ri + 1) * n];
-            for (j, cv) in crow.iter_mut().enumerate() {
-                *cv = simd::dot(arow, &b[j * k..(j + 1) * k]);
+            // 4-column blocks: the a row is loaded once per 4 dot products
+            // (four independent accumulators, each folding on the exact
+            // 1-row lane tree, so every output bit is unchanged)
+            let mut j = 0;
+            while j + 4 <= n {
+                let d4 = simd::dot4(arow, &b[j * k..(j + 4) * k]);
+                crow[j..j + 4].copy_from_slice(&d4);
+                j += 4;
+            }
+            while j < n {
+                crow[j] = simd::dot(arow, &b[j * k..(j + 1) * k]);
+                j += 1;
             }
         }
     });
@@ -684,14 +737,34 @@ fn matmul_i8_core(
 ) -> Vec<i32> {
     let mut cp = vec![0i32; m * sb];
     par_chunks_mut(&mut cp, sb, 2 * k * sb, |rows, cc| {
+        let nrows = rows.end - rows.start;
         for l0 in (0..k).step_by(K_PANEL) {
             let l1 = (l0 + K_PANEL).min(k);
-            for (ri, i) in rows.clone().enumerate() {
+            // 4-row register blocks, as in matmul_acc (i32 accumulation is
+            // exact, so the blocking is trivially value-preserving here)
+            let mut ri = 0;
+            while ri + 4 <= nrows {
+                let i = rows.start + ri;
+                let cblk = &mut cc[ri * sb..(ri + 4) * sb];
+                for l in l0..l1 {
+                    let coeff = [
+                        a[i * sa + l],
+                        a[(i + 1) * sa + l],
+                        a[(i + 2) * sa + l],
+                        a[(i + 3) * sa + l],
+                    ];
+                    simd::axpy4_i8(cblk, &coeff, &b[l * sb..(l + 1) * sb]);
+                }
+                ri += 4;
+            }
+            while ri < nrows {
+                let i = rows.start + ri;
                 let arow = &a[i * sa..i * sa + k];
                 let crow = &mut cc[ri * sb..(ri + 1) * sb];
                 for l in l0..l1 {
                     simd::axpy_i8(crow, arow[l], &b[l * sb..(l + 1) * sb]);
                 }
+                ri += 1;
             }
         }
     });
@@ -702,6 +775,155 @@ fn matmul_i8_core(
     for i in 0..m {
         c[i * n..(i + 1) * n].copy_from_slice(&cp[i * sb..i * sb + n]);
     }
+    c
+}
+
+// ---------------------------------------------------------------------------
+// backward packed-int8 GEMMs (weight-grad tn and input-grad nt forms)
+// ---------------------------------------------------------------------------
+
+/// Group scale for row `r` of a packed operand whose scales broadcast
+/// row-wise (length 1 per-tensor, length `rows` per-token).
+#[inline(always)]
+fn row_scale(p: &crate::quant::PackedGemmOperand, r: usize) -> f32 {
+    if p.scales.len() == 1 {
+        p.scales[0]
+    } else {
+        p.scales[r]
+    }
+}
+
+/// Weight-grad contraction `xᵀ @ g` over packed codes with exact i32
+/// accumulation: x is packed (m x k) activations, g is packed (m x n)
+/// gradients, result is (k x n). Valid only when **both** scale sets are
+/// per-tensor — the reduction runs over the m rows, so any per-token scale
+/// would vary along it; the native dispatcher routes those recipes to
+/// [`matmul_i8_tn_scaled_acc`] instead. Row-parallel over the k output
+/// rows with the same 4-row register blocks as [`matmul_i8`]; i32
+/// accumulation is exact, hence deterministic under any split.
+pub fn matmul_i8_tn_packed(
+    x: &crate::quant::PackedGemmOperand,
+    g: &crate::quant::PackedGemmOperand,
+) -> Vec<i32> {
+    let (m, k, n) = (x.rows, x.cols, g.cols);
+    assert_eq!(g.rows, m, "matmul_i8_tn_packed: reduction dims differ");
+    if m == 0 || n == 0 || k == 0 {
+        return vec![0i32; k * n];
+    }
+    let sg = g.stride;
+    let mut cp = vec![0i32; k * sg];
+    par_chunks_mut(&mut cp, sg, 2 * m * sg, |lrange, cc| {
+        let nl = lrange.end - lrange.start;
+        for r in 0..m {
+            let xrow = &x.codes[r * x.stride..r * x.stride + k];
+            let grow = &g.codes[r * sg..(r + 1) * sg];
+            let mut li = 0;
+            while li + 4 <= nl {
+                let l = lrange.start + li;
+                let coeff = [xrow[l], xrow[l + 1], xrow[l + 2], xrow[l + 3]];
+                simd::axpy4_i8(&mut cc[li * sg..(li + 4) * sg], &coeff, grow);
+                li += 4;
+            }
+            while li < nl {
+                let l = lrange.start + li;
+                simd::axpy_i8(&mut cc[li * sg..(li + 1) * sg], xrow[l], grow);
+                li += 1;
+            }
+        }
+    });
+    if sg == n {
+        return cp;
+    }
+    let mut c = vec![0i32; k * n];
+    for l in 0..k {
+        c[l * n..(l + 1) * n].copy_from_slice(&cp[l * sg..l * sg + n]);
+    }
+    c
+}
+
+/// Row-factored weight-grad contraction `dw += xᵀ @ g` for per-token
+/// scales: both operands arrive as packed codes, and reduction row `r`
+/// contributes `(sx_r * sg_r * x[r,l]) * g[r,:]` to output row `l`. The
+/// per-row scale product is hoisted into the axpy coefficient, so the
+/// inner loops run on raw integer codes (as f32) — no per-element
+/// dequantized operand is ever materialized. The accumulation walks the
+/// exact loop structure of [`matmul_tn_acc`] (r ascending per output
+/// element, 4-row blocks), so when the scales are powers of two every
+/// float product equals the materialized-qdq oracle's and the result is
+/// bit-identical to it; the path is independent of the int8 accumulator
+/// knob because the integer code products (<= 127^2) are exact in f32.
+pub fn matmul_i8_tn_scaled_acc(
+    dw: &mut [f32],
+    x: &crate::quant::PackedGemmOperand,
+    g: &crate::quant::PackedGemmOperand,
+) {
+    let (m, k, n) = (x.rows, x.cols, g.cols);
+    assert_eq!(g.rows, m, "matmul_i8_tn_scaled_acc: reduction dims differ");
+    assert_eq!(dw.len(), k * n, "matmul_i8_tn_scaled_acc: dw has wrong shape");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // stage the gradient codes once as a tight f32 matrix (shared by every
+    // part; the per-part work is O(m*k*n/parts), this is O(m*n) once)
+    let gf = crate::quant::codes_f32(g);
+    par_chunks_mut(dw, n, 2 * m * n, |lrange, cc| {
+        let nl = lrange.end - lrange.start;
+        for r in 0..m {
+            let s = row_scale(x, r) * row_scale(g, r);
+            let xrow = &x.codes[r * x.stride..r * x.stride + k];
+            let grow = &gf[r * n..(r + 1) * n];
+            let mut li = 0;
+            while li + 4 <= nl {
+                let l = lrange.start + li;
+                let coeff = [
+                    s * xrow[l] as f32,
+                    s * xrow[l + 1] as f32,
+                    s * xrow[l + 2] as f32,
+                    s * xrow[l + 3] as f32,
+                ];
+                simd::axpy4(&mut cc[li * n..(li + 4) * n], &coeff, grow);
+                li += 4;
+            }
+            while li < nl {
+                let l = lrange.start + li;
+                simd::axpy(&mut cc[li * n..(li + 1) * n], s * xrow[l] as f32, grow);
+                li += 1;
+            }
+        }
+    });
+}
+
+/// Input-grad contraction `g @ wᵀ` over packed codes with exact i32
+/// accumulation: g is packed (m x n_out) gradients, w is the packed
+/// forward weight in its native (k_in x n_out) layout — the **same**
+/// operand [`matmul_i8_packed`] consumed forward, reused here with its
+/// rows as the nt dot operands. Result is (m x k_in). Both operands pad
+/// their rows to the same lane stride (equal `cols`), and the padding
+/// codes are zero, so the dot runs over the full padded rows with no
+/// tail. Valid only when the weight scales are per-tensor (per-channel
+/// scales vary along this reduction; the native dispatcher dequantizes
+/// the cached codes and falls back to [`matmul_nt`] there).
+pub fn matmul_i8_nt_packed(
+    g: &crate::quant::PackedGemmOperand,
+    w: &crate::quant::PackedGemmOperand,
+) -> Vec<i32> {
+    let (m, n) = (g.rows, w.rows);
+    assert_eq!(g.cols, w.cols, "matmul_i8_nt_packed: reduction dims differ");
+    assert_eq!(g.stride, w.stride, "matmul_i8_nt_packed: operand strides differ");
+    let s = g.stride;
+    let mut c = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    par_chunks_mut(&mut c, n, 2 * s.max(1) * n, |rows, cc| {
+        for (ri, i) in rows.clone().enumerate() {
+            let grow = &g.codes[i * s..(i + 1) * s];
+            let crow = &mut cc[ri * n..(ri + 1) * n];
+            for (l, cv) in crow.iter_mut().enumerate() {
+                *cv = simd::dot_i8(grow, &w.codes[l * s..(l + 1) * s]);
+            }
+        }
+    });
     c
 }
 
@@ -772,6 +994,83 @@ fn rescale_i32_into(
                     col_scales[j]
                 };
                 let v = (sr * sc) * crow[j] as f32;
+                if accumulate {
+                    orow[j] += v;
+                } else {
+                    orow[j] = v;
+                }
+            }
+        }
+    });
+}
+
+/// [`rescale_i32`] over an f32 accumulator — the `QPRETRAIN_INT8=off` leg
+/// of the packed GEMMs, where the integer code products were folded in f32
+/// (`quant::codes_f32` operands). The scale expression is the identical
+/// `(sa_i * sb_j) * c[i,j]`, so wherever the f32 fold of the code products
+/// was exact the two legs agree bit for bit.
+pub fn rescale_f32(
+    c: &[f32],
+    row_scales: &[f32],
+    col_scales: &[f32],
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * n];
+    rescale_f32_into(&mut y, c, row_scales, col_scales, m, n, false);
+    y
+}
+
+/// Accumulating variant of [`rescale_f32`].
+pub fn rescale_f32_acc(
+    acc: &mut [f32],
+    c: &[f32],
+    row_scales: &[f32],
+    col_scales: &[f32],
+    m: usize,
+    n: usize,
+) {
+    rescale_f32_into(acc, c, row_scales, col_scales, m, n, true);
+}
+
+fn rescale_f32_into(
+    out: &mut [f32],
+    c: &[f32],
+    row_scales: &[f32],
+    col_scales: &[f32],
+    m: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    assert_eq!(c.len(), m * n, "rescale_f32: c has wrong shape");
+    assert_eq!(out.len(), m * n, "rescale_f32: out has wrong shape");
+    assert!(
+        row_scales.len() == 1 || row_scales.len() == m,
+        "rescale_f32: row scales must be 1 or m"
+    );
+    assert!(
+        col_scales.len() == 1 || col_scales.len() == n,
+        "rescale_f32: col scales must be 1 or n"
+    );
+    if m == 0 || n == 0 {
+        return;
+    }
+    par_chunks_mut(out, n, 4 * n, |rows, oc| {
+        for (ri, i) in rows.clone().enumerate() {
+            let sr = if row_scales.len() == 1 {
+                row_scales[0]
+            } else {
+                row_scales[i]
+            };
+            let crow = &c[i * n..(i + 1) * n];
+            let orow = &mut oc[ri * n..(ri + 1) * n];
+            for j in 0..n {
+                let sc = if col_scales.len() == 1 {
+                    col_scales[0]
+                } else {
+                    col_scales[j]
+                };
+                let v = (sr * sc) * crow[j];
                 if accumulate {
                     orow[j] += v;
                 } else {

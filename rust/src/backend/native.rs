@@ -18,20 +18,35 @@
 //! graph for every quant structure (max relative gradient error ~6e-7), and
 //! the AdamW update against `adam.adamw_update` exactly.
 //!
-//! Forward linears dispatch to a **packed-int8 GEMM** ([`int8_dispatch`])
-//! when both operands are symmetric 8-bit with scales constant along the
-//! reduction axis (acts per-tensor/per-token, weights per-tensor/
-//! per-channel): quantize once to i8 codes, accumulate in exact i32,
-//! rescale once. The f32 qdq path is retained as the reference oracle
-//! (toggle with [`set_int8_gemm`]); `rust/tests/int8.rs` pins bitwise
-//! equality where f32 accumulation is exact and bounds the rounding gap
-//! elsewhere. Both paths run on the runtime-dispatched SIMD microkernels
-//! (`backend::simd`; [`simd_active`] introspects, `QPRETRAIN_SIMD=off`
-//! pins the bit-identical scalar lane emulation).
+//! Linears whose recipe is **int8-structured** ([`int8_structure`]: both
+//! operands symmetric 8-bit with scales constant along the forward
+//! reduction axis — acts per-tensor/per-token, weights per-tensor/
+//! per-channel) run on **packed i8 codes end to end**: forward quantizes
+//! each operand once (`pack_acts_i8` / `pack_weights_i8`), caches the
+//! codes in the per-step layer cache, and backward reuses them — the
+//! weight-grad contraction consumes the cached activation codes plus
+//! freshly packed gradient codes (`pack_grads_i8`, when the gradient
+//! policy is [`quant::int8_grad_eligible`]), and the input-grad
+//! contraction reuses the forward-packed weight codes, so weights are
+//! packed **at most once per train step** and invalidated by construction
+//! when the cache drops before the AdamW update. The [`set_int8_gemm`]
+//! knob (`QPRETRAIN_INT8` env) selects only the *accumulator* on the
+//! reduction-constant-scale contractions — exact i32 (on) or an f32 fold
+//! of the identical integer code products (off); packing and cache reuse
+//! are knob-independent, which is what lets the CI digest matrix byte-diff
+//! the two legs. Recipes that are not int8-structured (asymmetric, other
+//! bit-widths, per-channel acts, per-token weights, unquantized operands)
+//! keep the f32 qdq reference path for the whole linear, forward and
+//! backward. `rust/tests/int8.rs` pins bitwise equality where f32
+//! accumulation is exact and bounds the rounding gap elsewhere. All paths
+//! run on the runtime-dispatched SIMD microkernels (`backend::simd`;
+//! [`simd_active`] introspects, `QPRETRAIN_SIMD=off` pins the
+//! bit-identical scalar lane emulation).
 
 use std::borrow::Cow;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
@@ -41,8 +56,9 @@ use anyhow::{bail, Result};
 // serial tile kernels are what the parallel ones are bit-equal to anyway).
 use crate::backend::kernels::{
     add_assign, bias_add, causal_softmax, col_sum_acc, embed_scatter, gelu, gelu_bwd,
-    layer_norm_bwd, layer_norm_fwd, matmul, matmul_acc, matmul_i8_packed, matmul_nt,
-    matmul_tn_acc, nll_only, nll_rows, par_chunks2_mut, par_chunks3_mut, par_chunks_mut,
+    layer_norm_bwd, layer_norm_fwd, matmul, matmul_acc, matmul_i8_nt_packed, matmul_i8_packed,
+    matmul_i8_tn_packed, matmul_i8_tn_scaled_acc, matmul_nt, matmul_tn, matmul_tn_acc, nll_only,
+    nll_rows, par_chunks2_mut, par_chunks3_mut, par_chunks_mut, rescale_f32, rescale_f32_acc,
     rescale_i32, rescale_i32_acc, sq_norm,
 };
 use crate::backend::math;
@@ -219,21 +235,57 @@ fn qdq_grad<'a>(
 // packed-int8 GEMM dispatch (the quantized fast path)
 // ---------------------------------------------------------------------------
 
-/// Process-wide switch for the packed-int8 GEMM fast path. On by default;
-/// the benches and the exactness suite pin it off to time/compare against
-/// the retained f32 qdq reference oracle.
-static INT8_GEMM: AtomicBool = AtomicBool::new(true);
+const INT8_UNSET: u8 = 0;
+const INT8_ON: u8 = 1;
+const INT8_OFF: u8 = 2;
 
-/// Enable/disable the packed-int8 GEMM fast path (results differ from the
-/// qdq reference only by f32 summation rounding; `rust/tests/int8.rs`
-/// bounds the gap and pins bitwise equality where the f32 path is exact).
-pub fn set_int8_gemm(on: bool) {
-    INT8_GEMM.store(on, Ordering::Relaxed);
+/// Process-wide accumulator selection for the packed-int8 GEMMs. Unset
+/// resolves from the `QPRETRAIN_INT8` environment knob (on unless `off`).
+static INT8_GEMM: AtomicU8 = AtomicU8::new(INT8_UNSET);
+
+/// `QPRETRAIN_INT8=off|0|OFF` pins the packed GEMMs to the f32 fold of the
+/// integer code products for the whole process (mirroring
+/// `QPRETRAIN_SIMD`); the CI digest matrix runs legs of both settings to
+/// prove the two accumulators agree bit for bit on the runners.
+fn env_int8_off() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        matches!(
+            std::env::var("QPRETRAIN_INT8").as_deref(),
+            Ok("off") | Ok("0") | Ok("OFF")
+        )
+    })
 }
 
-/// Whether the int8 fast path is currently enabled.
+/// The process default for the int8-accumulator knob as resolved from the
+/// environment (`QPRETRAIN_INT8`), before any [`set_int8_gemm`] override.
+/// Test guards restore to this instead of a hard-coded `true` so the CI
+/// int8-off legs stay pinned through guarded sections.
+pub fn int8_env_default() -> bool {
+    !env_int8_off()
+}
+
+/// Pin the packed-GEMM accumulator: `true` = exact i32 + single rescale,
+/// `false` = f32 fold of the *same* integer code products (the
+/// digest-equivalence leg, and the timing baseline for the benches). This
+/// selects arithmetic, not structure: operand packing, the packed-weight
+/// cache, and backward code reuse are decided by recipe eligibility alone
+/// ([`int8_structure`]), so both settings run one identical quantization
+/// pass and differ only by summation rounding — `rust/tests/int8.rs`
+/// bounds the gap and pins bitwise equality where f32 accumulation of the
+/// integer products is exact.
+pub fn set_int8_gemm(on: bool) {
+    INT8_GEMM.store(if on { INT8_ON } else { INT8_OFF }, Ordering::Relaxed);
+}
+
+/// Whether the exact-i32 accumulator is currently selected (explicit
+/// [`set_int8_gemm`] override, else the `QPRETRAIN_INT8` env default).
 pub fn int8_gemm_enabled() -> bool {
-    INT8_GEMM.load(Ordering::Relaxed)
+    match INT8_GEMM.load(Ordering::Relaxed) {
+        INT8_ON => true,
+        INT8_OFF => false,
+        _ => int8_env_default(),
+    }
 }
 
 /// Whether the SIMD microkernel vector path is active for this process
@@ -244,25 +296,96 @@ pub fn simd_active() -> bool {
     crate::backend::simd::simd_active()
 }
 
-/// The dispatch rule for one forward linear `qdq_a(x) @ qdq_w(w)`: both
-/// operands must be quantized, symmetric 8-bit, with scales constant along
-/// the reduction axis (activations per-tensor/per-token, weights
+/// Structural eligibility of one linear for the packed-i8 path: both
+/// operands quantized, symmetric 8-bit, with scales constant along the
+/// forward reduction axis (activations per-tensor/per-token, weights
 /// per-tensor/per-channel). Anything else — asymmetric, other bit-widths,
 /// per-channel activations, per-token weights, an unquantized operand —
-/// falls back to the f32 qdq reference path.
-pub fn int8_dispatch(acts: Option<TensorPolicy>, weights: Option<TensorPolicy>) -> bool {
-    int8_gemm_enabled()
-        && acts.is_some_and(quant::int8_act_eligible)
+/// keeps the whole linear, forward *and* backward, on the f32 qdq
+/// reference path. Structure is knob-independent: when it holds, the
+/// operands are packed once and cached regardless of
+/// [`int8_gemm_enabled`], which only picks the accumulator.
+pub fn int8_structure(acts: Option<TensorPolicy>, weights: Option<TensorPolicy>) -> bool {
+    acts.is_some_and(quant::int8_act_eligible)
         && weights.is_some_and(quant::int8_weight_eligible)
 }
 
+/// Whether a forward linear with these operand policies runs the packed-i8
+/// GEMM with exact i32 accumulation: [`int8_structure`] ∧ the
+/// [`set_int8_gemm`] knob. (With the knob off the same packed operands are
+/// folded in f32 — see [`set_int8_gemm`].)
+pub fn int8_dispatch(acts: Option<TensorPolicy>, weights: Option<TensorPolicy>) -> bool {
+    int8_gemm_enabled() && int8_structure(acts, weights)
+}
+
+/// Dispatch counters for the packed-int8 paths. Process-wide, bumped only
+/// from the dispatching (main) thread; pure introspection for tests and
+/// benches — the kernels never branch on them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Int8Stats {
+    /// Forward linears that ran on packed i8 codes.
+    pub fwd_packed: usize,
+    /// Backward weight-grad (`xᵀ·dy`) contractions that ran on packed codes.
+    pub tn_packed: usize,
+    /// Backward input-grad (`dy·wᵀ`) contractions that reused the cached
+    /// packed weight codes (integer kernel or code-dequantized fallback).
+    pub nt_packed: usize,
+    /// `pack_weights_i8` invocations — the pack-once-per-step invariant is
+    /// exactly one per eligible linear per forward pass.
+    pub weight_packs: usize,
+}
+
+static FWD_PACKED: AtomicUsize = AtomicUsize::new(0);
+static TN_PACKED: AtomicUsize = AtomicUsize::new(0);
+static NT_PACKED: AtomicUsize = AtomicUsize::new(0);
+static WEIGHT_PACKS: AtomicUsize = AtomicUsize::new(0);
+
+/// Snapshot and reset the packed-path dispatch counters.
+pub fn take_int8_stats() -> Int8Stats {
+    Int8Stats {
+        fwd_packed: FWD_PACKED.swap(0, Ordering::Relaxed),
+        tn_packed: TN_PACKED.swap(0, Ordering::Relaxed),
+        nt_packed: NT_PACKED.swap(0, Ordering::Relaxed),
+        weight_packs: WEIGHT_PACKS.swap(0, Ordering::Relaxed),
+    }
+}
+
+/// Cached left operand of a linear, as forward produced it: packed i8
+/// codes on the int8-structure path, fake-quantized f32 values on the
+/// reference path.
+enum ActCache {
+    F32(Vec<f32>),
+    Packed(quant::PackedGemmOperand),
+}
+
+impl ActCache {
+    /// The packed codes, when forward took the packed path.
+    fn packed(&self) -> Option<&quant::PackedGemmOperand> {
+        match self {
+            ActCache::Packed(p) => Some(p),
+            ActCache::F32(_) => None,
+        }
+    }
+
+    /// The f32 operand for the reference matmuls: borrowed on the qdq
+    /// path, dequantized from the codes on the packed path
+    /// (value-identical to `quant::qdq` up to the sign of zero-bin zeros;
+    /// see `quant::PackedGemmOperand`).
+    fn to_f32(&self) -> Cow<'_, [f32]> {
+        match self {
+            ActCache::F32(v) => Cow::Borrowed(v.as_slice()),
+            ActCache::Packed(p) => Cow::Owned(quant::dequant_acts_i8(p)),
+        }
+    }
+}
+
 /// One forward linear `y = qdq_a(x) @ qdq_w(w)` (x owned, (m x k); w
-/// (k x n)). On the int8 path both operands are quantized **once** to i8
-/// codes, multiplied with exact i32 accumulation, and rescaled in a single
-/// elementwise pass. Returns `(y, xq)` where `xq` is the fake-quantized
-/// activation cache backward's weight gradient consumes — value-identical
-/// on both paths (the dequantized codes reproduce `quant::qdq` up to the
-/// sign of zero-bin zeros; see `quant::PackedGemmOperand`).
+/// (k x n)). On the int8-structure path both operands are quantized
+/// **once** to i8 codes, contracted over the codes (exact i32 + single
+/// rescale when [`int8_gemm_enabled`], f32 fold of the same integer
+/// products otherwise), and the packed operands — not dequantized f32 —
+/// are returned for backward to reuse: `(y, activation cache,
+/// packed weight cache)`.
 fn quant_linear(
     x: Vec<f32>,
     w: &[f32],
@@ -270,27 +393,32 @@ fn quant_linear(
     k: usize,
     n: usize,
     qs: &QuantRecipe,
-) -> (Vec<f32>, Vec<f32>) {
-    if int8_dispatch(qs.acts, qs.weights) {
-        let (ap, wp) = (qs.acts.unwrap(), qs.weights.unwrap());
+) -> (Vec<f32>, ActCache, Option<quant::PackedGemmOperand>) {
+    if int8_structure(qs.acts, qs.weights) {
+        let (ap, wpol) = (qs.acts.unwrap(), qs.weights.unwrap());
         let xa = quant::pack_acts_i8(&x, m, k, ap);
-        let xq = quant::dequant_acts_i8(&xa);
-        let wq = quant::pack_weights_i8(w, k, n, wp);
-        let ci = matmul_i8_packed(&xa, &wq);
-        let y = rescale_i32(&ci, &xa.scales, &wq.scales, m, n);
-        (y, xq)
+        let wp = quant::pack_weights_i8(w, k, n, wpol);
+        FWD_PACKED.fetch_add(1, Ordering::Relaxed);
+        WEIGHT_PACKS.fetch_add(1, Ordering::Relaxed);
+        let y = if int8_gemm_enabled() {
+            rescale_i32(&matmul_i8_packed(&xa, &wp), &xa.scales, &wp.scales, m, n)
+        } else {
+            let cf = matmul(&quant::codes_f32(&xa), &quant::codes_f32(&wp), m, k, n);
+            rescale_f32(&cf, &xa.scales, &wp.scales, m, n)
+        };
+        (y, ActCache::Packed(xa), Some(wp))
     } else {
         let xq = qdq_act_owned(x, m, k, qs.acts);
         let wq = qdq_weight(w, k, n, qs.weights);
         let y = matmul(&xq, &wq, m, k, n);
-        (y, xq)
+        (y, ActCache::F32(xq), None)
     }
 }
 
 /// Accumulating variant (`acc += qdq_a(x) @ qdq_w(w)`) for the residual
-/// linears. Returns the quantized-activation cache, `None` when
-/// activations are unquantized (matching the [`qdq_act_opt`] contract —
-/// an unquantized activation operand is never int8-eligible).
+/// linears. The activation cache is `None` when activations are
+/// unquantized (matching the [`qdq_act_opt`] contract — an unquantized
+/// activation operand is never int8-structured).
 fn quant_linear_acc(
     x: &[f32],
     w: &[f32],
@@ -299,20 +427,142 @@ fn quant_linear_acc(
     n: usize,
     qs: &QuantRecipe,
     acc: &mut [f32],
-) -> Option<Vec<f32>> {
-    if int8_dispatch(qs.acts, qs.weights) {
-        let (ap, wp) = (qs.acts.unwrap(), qs.weights.unwrap());
+) -> (Option<ActCache>, Option<quant::PackedGemmOperand>) {
+    if int8_structure(qs.acts, qs.weights) {
+        let (ap, wpol) = (qs.acts.unwrap(), qs.weights.unwrap());
         let xa = quant::pack_acts_i8(x, m, k, ap);
-        let xq = quant::dequant_acts_i8(&xa);
-        let wq = quant::pack_weights_i8(w, k, n, wp);
-        let ci = matmul_i8_packed(&xa, &wq);
-        rescale_i32_acc(acc, &ci, &xa.scales, &wq.scales, m, n);
-        Some(xq)
+        let wp = quant::pack_weights_i8(w, k, n, wpol);
+        FWD_PACKED.fetch_add(1, Ordering::Relaxed);
+        WEIGHT_PACKS.fetch_add(1, Ordering::Relaxed);
+        if int8_gemm_enabled() {
+            let ci = matmul_i8_packed(&xa, &wp);
+            rescale_i32_acc(acc, &ci, &xa.scales, &wp.scales, m, n);
+        } else {
+            let cf = matmul(&quant::codes_f32(&xa), &quant::codes_f32(&wp), m, k, n);
+            rescale_f32_acc(acc, &cf, &xa.scales, &wp.scales, m, n);
+        }
+        (Some(ActCache::Packed(xa)), Some(wp))
     } else {
         let xq = qdq_act_opt(x, m, k, qs.acts);
         let wq = qdq_weight(w, k, n, qs.weights);
         matmul_acc(acc, xq.as_deref().unwrap_or(x), &wq, m, k, n);
-        xq
+        (xq.map(ActCache::F32), None)
+    }
+}
+
+/// Left operand of a backward weight-grad contraction.
+#[derive(Clone, Copy)]
+enum XOperand<'a> {
+    /// The linear's forward activation cache (packed codes or qdq values).
+    Cache(&'a ActCache),
+    /// The raw activation — the residual linears don't duplicate the
+    /// buffer when the recipe leaves activations unquantized.
+    Raw(&'a [f32]),
+}
+
+impl<'a> XOperand<'a> {
+    fn packed(self) -> Option<&'a quant::PackedGemmOperand> {
+        match self {
+            XOperand::Cache(c) => c.packed(),
+            XOperand::Raw(_) => None,
+        }
+    }
+
+    fn to_f32(self) -> Cow<'a, [f32]> {
+        match self {
+            XOperand::Cache(c) => c.to_f32(),
+            XOperand::Raw(r) => Cow::Borrowed(r),
+        }
+    }
+}
+
+/// Backward of one linear with forward shape `(m x k) @ (k x n)`:
+/// accumulates the weight gradient `dw += xᵀ @ qdq_g(dy)` and returns the
+/// input gradient `dx = gy @ wᵀ` (`gy` is the quantized gradient on the
+/// `quantize_act_grads` variant, the raw straight-through `dy` otherwise —
+/// Sec. 2.4 of the paper).
+///
+/// Dispatch: when forward packed this linear (`wp`/`xop` carry codes) and
+/// the gradient policy is [`quant::int8_grad_eligible`], `dy` is packed
+/// once to i8 codes ([`quant::pack_grads_i8`] — per-token scales sit on
+/// the output axis, which both backward contractions reduce over, so the
+/// scale sets are reduction-axis-constant) and both contractions consume
+/// integer codes: exact i32 + single rescale where the scale sets are
+/// constant over the whole reduction (knob-off leg folds the same code
+/// products in f32), the row-factored [`matmul_i8_tn_scaled_acc`] for
+/// per-token scale sets, and code-dequantized f32 operands where
+/// per-channel weight scales vary along the input-grad reduction. Any
+/// other recipe falls back to the f32 qdq reference path bit for bit,
+/// still reusing the cached packed weights for the dequantize (no second
+/// amax scan of the weights).
+#[allow(clippy::too_many_arguments)]
+fn quant_linear_bwd(
+    dy: &[f32],
+    xop: XOperand<'_>,
+    wp: Option<&quant::PackedGemmOperand>,
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qs: &QuantRecipe,
+    dw: &mut [f32],
+) -> Vec<f32> {
+    let act_grad_path = qs.grads.is_some() && qs.quantize_act_grads;
+    let grad_pol = qs.grads.filter(|&p| quant::int8_grad_eligible(p));
+    if let (Some(xa), Some(wpp), Some(gp)) = (xop.packed(), wp, grad_pol) {
+        let gq = quant::pack_grads_i8(dy, m, n, gp);
+        // weight grad: dw += xaᵀ @ gq (reduction over the m rows)
+        TN_PACKED.fetch_add(1, Ordering::Relaxed);
+        if xa.scales.len() == 1 && gq.scales.len() == 1 {
+            // per-tensor × per-tensor: integer core, single rescale
+            if int8_gemm_enabled() {
+                let ci = matmul_i8_tn_packed(xa, &gq);
+                rescale_i32_acc(dw, &ci, &xa.scales, &gq.scales, k, n);
+            } else {
+                let cf = matmul_tn(&quant::codes_f32(xa), &quant::codes_f32(&gq), m, k, n);
+                rescale_f32_acc(dw, &cf, &xa.scales, &gq.scales, k, n);
+            }
+        } else {
+            // per-token scales vary over the reduction: row-factored core
+            // (knob-independent; fma folds the exact real products)
+            matmul_i8_tn_scaled_acc(dw, xa, &gq);
+        }
+        // input grad: dx = gy @ wᵀ (reduction over the n columns)
+        NT_PACKED.fetch_add(1, Ordering::Relaxed);
+        if act_grad_path {
+            if wpp.scales.len() == 1 {
+                // per-tensor weight scale is constant along this reduction
+                if int8_gemm_enabled() {
+                    let ci = matmul_i8_nt_packed(&gq, wpp);
+                    rescale_i32(&ci, &gq.scales, &wpp.scales, m, k)
+                } else {
+                    let cf = matmul_nt(&quant::codes_f32(&gq), &quant::codes_f32(wpp), m, n, k);
+                    rescale_f32(&cf, &gq.scales, &wpp.scales, m, k)
+                }
+            } else {
+                // per-channel weight scales vary along the reduction: no
+                // integer fold possible — dequantize both code caches
+                let wq = quant::dequant_weights_i8(wpp);
+                let gyf = quant::dequant_acts_i8(&gq);
+                matmul_nt(&gyf, &wq, m, n, k)
+            }
+        } else {
+            // straight-through dx: raw dy against the code-dequantized
+            // cached weights (no re-quantization pass)
+            let wq = quant::dequant_weights_i8(wpp);
+            matmul_nt(dy, &wq, m, n, k)
+        }
+    } else {
+        // f32 qdq reference path: gradient not 8-bit symmetric
+        // per-tensor/per-token, or the forward linear was not packed
+        let gq = qdq_grad(dy, m, n, qs.grads);
+        matmul_tn_acc(dw, &xop.to_f32(), &gq, m, k, n);
+        let wq = match wp {
+            Some(p) => Cow::Owned(quant::dequant_weights_i8(p)),
+            None => qdq_weight(w, k, n, qs.weights),
+        };
+        let gx: &[f32] = if act_grad_path { &gq } else { dy };
+        matmul_nt(gx, &wq, m, n, k)
     }
 }
 
@@ -351,24 +601,32 @@ impl Dims {
     }
 }
 
-/// Per-layer forward cache (everything backward needs; quantized operands
-/// are stored, weights are re-quantized on the way back).
+/// Per-layer forward cache (everything backward needs). On the packed
+/// path the activation caches hold i8 codes, not dequantized f32, and the
+/// `*_wp` fields carry the forward-packed weight codes — this is the
+/// per-step packed-weight cache: backward reuses the codes, and the whole
+/// cache is dropped before [`adamw_update`] mutates the latent weights,
+/// so a stale packing can never survive an optimizer step.
 struct LayerCache {
     xhat1: Vec<f32>,
     rstd1: Vec<f32>,
-    xq: Vec<f32>, // (M, d)  qdq_a(ln1 out) — the QKV matmul's left operand
+    xq: ActCache, // (M, d)  qdq_a(ln1 out) — the QKV matmul's left operand
     q: Vec<f32>,  // (b, h, t, hd) contiguous per (b, h)
     k: Vec<f32>,
     v: Vec<f32>,
     p: Vec<f32>,   // (b, h, t, t) softmax probabilities (0 above diagonal)
     ctx: Vec<f32>,         // (M, d) attn out-proj input (Fig. 6 probe tensor)
-    cq: Option<Vec<f32>>,  // qdq_a(ctx); None when acts are unquantized
+    cq: Option<ActCache>,  // qdq_a(ctx); None when acts are unquantized
     xhat2: Vec<f32>,
     rstd2: Vec<f32>,
-    mq: Vec<f32>, // (M, d)  qdq_a(ln2 out)
+    mq: ActCache, // (M, d)  qdq_a(ln2 out)
     u: Vec<f32>,           // (M, f)  pre-GELU
     g: Vec<f32>,           // (M, f)  post-GELU, FC2 input (Fig. 8 probe tensor)
-    gq: Option<Vec<f32>>,  // qdq_a(g); None when acts are unquantized
+    gq: Option<ActCache>,  // qdq_a(g); None when acts are unquantized
+    qkv_wp: Option<quant::PackedGemmOperand>,
+    proj_wp: Option<quant::PackedGemmOperand>,
+    fc1_wp: Option<quant::PackedGemmOperand>,
+    fc2_wp: Option<quant::PackedGemmOperand>,
 }
 
 struct Forward {
@@ -465,7 +723,7 @@ fn forward(model: &ModelInfo, params: &[Vec<f32>], x: &[i32], qs: &QuantRecipe) 
 
         // --- attention ---
         let (a, xhat1, rstd1) = layer_norm_fwd(&hbuf, ln1_w, ln1_b, m, d);
-        let (mut qkv, xq) = quant_linear(a, qkv_w, m, d, 3 * d, qs);
+        let (mut qkv, xq, qkv_wp) = quant_linear(a, qkv_w, m, d, 3 * d, qs);
         bias_add(&mut qkv, qkv_b, m, 3 * d);
 
         // de-interleave rows [q | k | v] into per-(batch, head) (T, hd)
@@ -523,16 +781,16 @@ fn forward(model: &ModelInfo, params: &[Vec<f32>], x: &[i32], qs: &QuantRecipe) 
         });
 
         let mut h2 = hbuf.clone();
-        let cq = quant_linear_acc(&ctx, proj_w, m, d, d, qs, &mut h2);
+        let (cq, proj_wp) = quant_linear_acc(&ctx, proj_w, m, d, d, qs, &mut h2);
         bias_add(&mut h2, proj_b, m, d);
 
         // --- MLP ---
         let (mm, xhat2, rstd2) = layer_norm_fwd(&h2, ln2_w, ln2_b, m, d);
-        let (mut u, mq) = quant_linear(mm, fc1_w, m, d, f, qs);
+        let (mut u, mq, fc1_wp) = quant_linear(mm, fc1_w, m, d, f, qs);
         bias_add(&mut u, fc1_b, m, f);
         let g = gelu(&u);
         let mut hout = h2.clone();
-        let gq = quant_linear_acc(&g, fc2_w, m, f, d, qs, &mut hout);
+        let (gq, fc2_wp) = quant_linear_acc(&g, fc2_w, m, f, d, qs, &mut hout);
         bias_add(&mut hout, fc2_b, m, d);
 
         caches.push(LayerCache {
@@ -551,6 +809,10 @@ fn forward(model: &ModelInfo, params: &[Vec<f32>], x: &[i32], qs: &QuantRecipe) 
             u,
             g,
             gq,
+            qkv_wp,
+            proj_wp,
+            fc1_wp,
+            fc2_wp,
         });
         hbuf = hout;
     }
@@ -628,7 +890,6 @@ fn loss_and_grads(
     );
 
     let inv_sqrt_hd = 1.0f32 / (hd as f32).sqrt();
-    let act_grad_path = qs.grads.is_some() && qs.quantize_act_grads;
     let mut d_ctx0 = Vec::new();
 
     for l in (0..dm.l).rev() {
@@ -637,40 +898,40 @@ fn loss_and_grads(
         let proj_w = layer_slice(&params[PROJ_W], l, d * d);
         let fc1_w = layer_slice(&params[FC1_W], l, d * f);
         let fc2_w = layer_slice(&params[FC2_W], l, f * d);
-        let wq = qdq_weight(qkv_w, d, 3 * d, qs.weights);
-        let wpq = qdq_weight(proj_w, d, d, qs.weights);
-        let w1q = qdq_weight(fc1_w, d, f, qs.weights);
-        let w2q = qdq_weight(fc2_w, f, d, qs.weights);
 
         // ---- MLP: h_out = h2 + (qdq(g) @ qdq(fc2_w) + fc2_b) ----
         let dz = &dh;
-        let gq2 = qdq_grad(dz, m, d, qs.grads);
-        matmul_tn_acc(
-            &mut grads[FC2_W][l * f * d..(l + 1) * f * d],
-            c.gq.as_deref().unwrap_or(&c.g),
-            &gq2,
+        let x2 = match &c.gq {
+            Some(cc) => XOperand::Cache(cc),
+            None => XOperand::Raw(&c.g),
+        };
+        // dG = gy2 @ W2ᵀ with W2 (f x d): transpose-B kernel
+        let dg = quant_linear_bwd(
+            dz,
+            x2,
+            c.fc2_wp.as_ref(),
+            fc2_w,
             m,
             f,
             d,
+            qs,
+            &mut grads[FC2_W][l * f * d..(l + 1) * f * d],
         );
         col_sum_acc(&mut grads[FC2_B][l * d..(l + 1) * d], dz, m, d);
-        let gx2: &[f32] = if act_grad_path { &gq2 } else { dz };
-        // dG = gx2 @ W2qᵀ with W2q (f x d): transpose-B kernel
-        let dg = matmul_nt(gx2, &w2q, m, d, f);
         let du = gelu_bwd(&c.u, &dg);
-        let gq1 = qdq_grad(&du, m, f, qs.grads);
-        matmul_tn_acc(
-            &mut grads[FC1_W][l * d * f..(l + 1) * d * f],
-            &c.mq,
-            &gq1,
+        // dM = gy1 @ W1ᵀ with W1 (d x f)
+        let dmm = quant_linear_bwd(
+            &du,
+            XOperand::Cache(&c.mq),
+            c.fc1_wp.as_ref(),
+            fc1_w,
             m,
             d,
             f,
+            qs,
+            &mut grads[FC1_W][l * d * f..(l + 1) * d * f],
         );
         col_sum_acc(&mut grads[FC1_B][l * f..(l + 1) * f], &du, m, f);
-        let gx1: &[f32] = if act_grad_path { &gq1 } else { &du };
-        // dM = gx1 @ W1qᵀ with W1q (d x f)
-        let dmm = matmul_nt(gx1, &w1q, m, f, d);
         let ln2_w = layer_slice(&params[LN2_W], l, d);
         let dx2 = {
             let (gw_all, gb_all) = grads.split_at_mut(LN2_B);
@@ -690,19 +951,23 @@ fn loss_and_grads(
 
         // ---- attention: h2 = h_in + (qdq(ctx) @ qdq(proj_w) + proj_b) ----
         let do_ = &dh2;
-        let gqp = qdq_grad(do_, m, d, qs.grads);
-        matmul_tn_acc(
-            &mut grads[PROJ_W][l * d * d..(l + 1) * d * d],
-            c.cq.as_deref().unwrap_or(&c.ctx),
-            &gqp,
+        let xp = match &c.cq {
+            Some(cc) => XOperand::Cache(cc),
+            None => XOperand::Raw(&c.ctx),
+        };
+        // dCtx = gyp @ Wpᵀ with Wp (d x d)
+        let dctx = quant_linear_bwd(
+            do_,
+            xp,
+            c.proj_wp.as_ref(),
+            proj_w,
             m,
             d,
             d,
+            qs,
+            &mut grads[PROJ_W][l * d * d..(l + 1) * d * d],
         );
         col_sum_acc(&mut grads[PROJ_B][l * d..(l + 1) * d], do_, m, d);
-        let gxp: &[f32] = if act_grad_path { &gqp } else { do_ };
-        // dCtx = gxp @ Wpqᵀ with Wpq (d x d)
-        let dctx = matmul_nt(gxp, &wpq, m, d, d);
         if l == 0 {
             d_ctx0 = dctx.clone();
         }
@@ -788,19 +1053,19 @@ fn loss_and_grads(
             }
         });
 
-        let gqq = qdq_grad(&dqkv, m, 3 * d, qs.grads);
-        matmul_tn_acc(
-            &mut grads[QKV_W][l * d * 3 * d..(l + 1) * d * 3 * d],
-            &c.xq,
-            &gqq,
+        // dA = gyq @ Wqᵀ with Wq (d x 3d)
+        let da = quant_linear_bwd(
+            &dqkv,
+            XOperand::Cache(&c.xq),
+            c.qkv_wp.as_ref(),
+            qkv_w,
             m,
             d,
             3 * d,
+            qs,
+            &mut grads[QKV_W][l * d * 3 * d..(l + 1) * d * 3 * d],
         );
         col_sum_acc(&mut grads[QKV_B][l * 3 * d..(l + 1) * 3 * d], &dqkv, m, 3 * d);
-        let gxq: &[f32] = if act_grad_path { &gqq } else { &dqkv };
-        // dA = gxq @ Wqᵀ with Wq (d x 3d)
-        let da = matmul_nt(gxq, &wq, m, 3 * d, d);
         let ln1_w = layer_slice(&params[LN1_W], l, d);
         let dx1 = {
             let (gw_all, gb_all) = grads.split_at_mut(LN1_B);

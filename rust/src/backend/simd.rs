@@ -18,6 +18,17 @@
 //! * [`axpy_i8`] — `c[j] += a · b[j]` widening i8→i32 (the `matmul_i8`
 //!   inner loop); i32 accumulation is exact, so lane layout is irrelevant
 //!   to the result by arithmetic.
+//! * [`dot_i8`] — the packed `matmul_i8_nt` reduction, widening i8→i32;
+//!   exact integer arithmetic, so the horizontal-sum order is free.
+//!
+//! Each f32 microkernel also has a **4-row register-blocked** form
+//! ([`axpy4`], [`dot4`], and [`axpy4_i8`] on the integer side): one b-row
+//! load feeds four independent accumulator rows (four fma chains in
+//! flight), which is where the GEMM speedup comes from. Blocking never
+//! changes results: each output row's per-element fma sequence is exactly
+//! the 1-row kernel's, so `axpy4(c, a, b)` is bit-identical to four
+//! `axpy` calls and `dot4` to four `dot` calls — on every tier. The
+//! scalar emulation is defined as exactly those four 1-row calls.
 //!
 //! Each microkernel has an AVX2/FMA implementation (8 f32 lanes, 16 i8
 //! lanes) and a scalar emulation of the **exact same lane/tail structure**
@@ -184,6 +195,54 @@ fn axpy_i8_body(c: &mut [i32], a: i8, b: &[i8]) {
     }
 }
 
+#[inline(always)]
+fn dot_i8_body(a: &[i8], b: &[i8]) -> i32 {
+    let mut s = 0i32;
+    for (&av, &bv) in a.iter().zip(b.iter()) {
+        s += av as i32 * bv as i32;
+    }
+    s
+}
+
+// The 4-row scalar emulations are *defined* as four 1-row calls: blocking
+// shares loads, never arithmetic, so this is the reference the vector
+// forms must (and do) reproduce bit for bit.
+
+#[inline(always)]
+fn axpy4_body(c: &mut [f32], a: &[f32; 4], b: &[f32]) {
+    let n = b.len();
+    let (c0, r) = c.split_at_mut(n);
+    let (c1, r) = r.split_at_mut(n);
+    let (c2, c3) = r.split_at_mut(n);
+    axpy_body(c0, a[0], b);
+    axpy_body(c1, a[1], b);
+    axpy_body(c2, a[2], b);
+    axpy_body(c3, a[3], b);
+}
+
+#[inline(always)]
+fn dot4_body(a: &[f32], b: &[f32]) -> [f32; 4] {
+    let k = a.len();
+    [
+        dot_body(a, &b[..k]),
+        dot_body(a, &b[k..2 * k]),
+        dot_body(a, &b[2 * k..3 * k]),
+        dot_body(a, &b[3 * k..]),
+    ]
+}
+
+#[inline(always)]
+fn axpy4_i8_body(c: &mut [i32], a: &[i8; 4], b: &[i8]) {
+    let n = b.len();
+    let (c0, r) = c.split_at_mut(n);
+    let (c1, r) = r.split_at_mut(n);
+    let (c2, c3) = r.split_at_mut(n);
+    axpy_i8_body(c0, a[0], b);
+    axpy_i8_body(c1, a[1], b);
+    axpy_i8_body(c2, a[2], b);
+    axpy_i8_body(c3, a[3], b);
+}
+
 // ---------------------------------------------------------------------------
 // fma-scalar tier: the same bodies compiled with the fma target feature so
 // `mul_add` lowers to the hardware instruction instead of a libm call
@@ -199,6 +258,18 @@ unsafe fn axpy_fma(c: &mut [f32], a: f32, b: &[f32]) {
 #[target_feature(enable = "fma")]
 unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
     dot_body(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn axpy4_fma(c: &mut [f32], a: &[f32; 4], b: &[f32]) {
+    axpy4_body(c, a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn dot4_fma(a: &[f32], b: &[f32]) -> [f32; 4] {
+    dot4_body(a, b)
 }
 
 // ---------------------------------------------------------------------------
@@ -255,6 +326,85 @@ unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
 }
 
 #[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy4_avx2(c: &mut [f32], a: &[f32; 4], b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = b.len();
+    let (c0, r) = c.split_at_mut(n);
+    let (c1, r) = r.split_at_mut(n);
+    let (c2, c3) = r.split_at_mut(n);
+    let a0 = _mm256_set1_ps(a[0]);
+    let a1 = _mm256_set1_ps(a[1]);
+    let a2 = _mm256_set1_ps(a[2]);
+    let a3 = _mm256_set1_ps(a[3]);
+    let mut j = 0;
+    while j + F32_LANES <= n {
+        // one b load feeds four independent fma chains; each output row's
+        // per-element op sequence is exactly the 1-row axpy's
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        let v0 = _mm256_loadu_ps(c0.as_ptr().add(j));
+        let v1 = _mm256_loadu_ps(c1.as_ptr().add(j));
+        let v2 = _mm256_loadu_ps(c2.as_ptr().add(j));
+        let v3 = _mm256_loadu_ps(c3.as_ptr().add(j));
+        _mm256_storeu_ps(c0.as_mut_ptr().add(j), _mm256_fmadd_ps(a0, bv, v0));
+        _mm256_storeu_ps(c1.as_mut_ptr().add(j), _mm256_fmadd_ps(a1, bv, v1));
+        _mm256_storeu_ps(c2.as_mut_ptr().add(j), _mm256_fmadd_ps(a2, bv, v2));
+        _mm256_storeu_ps(c3.as_mut_ptr().add(j), _mm256_fmadd_ps(a3, bv, v3));
+        j += F32_LANES;
+    }
+    while j < n {
+        c0[j] = a[0].mul_add(b[j], c0[j]);
+        c1[j] = a[1].mul_add(b[j], c1[j]);
+        c2[j] = a[2].mul_add(b[j], c2[j]);
+        c3[j] = a[3].mul_add(b[j], c3[j]);
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot4_avx2(a: &[f32], b: &[f32]) -> [f32; 4] {
+    use std::arch::x86_64::*;
+    let k = a.len();
+    let nb = k - k % F32_LANES;
+    let (b0, b1, b2, b3) = (&b[..k], &b[k..2 * k], &b[2 * k..3 * k], &b[3 * k..]);
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut j = 0;
+    while j < nb {
+        // one a load feeds four striped accumulators, each walking the
+        // exact lane structure of the 1-row dot
+        let av = _mm256_loadu_ps(a.as_ptr().add(j));
+        acc0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b0.as_ptr().add(j)), acc0);
+        acc1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b1.as_ptr().add(j)), acc1);
+        acc2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b2.as_ptr().add(j)), acc2);
+        acc3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b3.as_ptr().add(j)), acc3);
+        j += F32_LANES;
+    }
+    // each accumulator folds on the same fixed tree as the 1-row dot
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold(acc: std::arch::x86_64::__m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<0b01>(s2, s2));
+        _mm_cvtss_f32(s1)
+    }
+    let mut s = [fold(acc0), fold(acc1), fold(acc2), fold(acc3)];
+    while j < k {
+        s[0] = a[j].mul_add(b0[j], s[0]);
+        s[1] = a[j].mul_add(b1[j], s[1]);
+        s[2] = a[j].mul_add(b2[j], s[2]);
+        s[3] = a[j].mul_add(b3[j], s[3]);
+        j += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_i8_avx2(c: &mut [i32], a: i8, b: &[i8]) {
     use std::arch::x86_64::*;
@@ -282,6 +432,82 @@ unsafe fn axpy_i8_avx2(c: &mut [i32], a: i8, b: &[i8]) {
         c[j] += av * b[j] as i32;
         j += 1;
     }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy4_i8_avx2(c: &mut [i32], a: &[i8; 4], b: &[i8]) {
+    use std::arch::x86_64::*;
+    let n = b.len();
+    let (c0, r) = c.split_at_mut(n);
+    let (c1, r) = r.split_at_mut(n);
+    let (c2, c3) = r.split_at_mut(n);
+    let a0 = _mm256_set1_epi16(a[0] as i16);
+    let a1 = _mm256_set1_epi16(a[1] as i16);
+    let a2 = _mm256_set1_epi16(a[2] as i16);
+    let a3 = _mm256_set1_epi16(a[3] as i16);
+    let mut j = 0;
+    while j + I8_LANES <= n {
+        // widen the shared b row once, then four independent i16 multiply /
+        // i32 accumulate chains (exact: |a·b| <= 2^14 fits i16)
+        let bv = _mm_loadu_si128(b.as_ptr().add(j) as *const __m128i);
+        let bw = _mm256_cvtepi8_epi16(bv);
+        #[target_feature(enable = "avx2")]
+        unsafe fn acc_row(crow: &mut [i32], j: usize, bw: __m256i, av: __m256i) {
+            use std::arch::x86_64::*;
+            let prod = _mm256_mullo_epi16(bw, av);
+            let p0 = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+            let p1 = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+            let c0 = _mm256_loadu_si256(crow.as_ptr().add(j) as *const __m256i);
+            let c1 = _mm256_loadu_si256(crow.as_ptr().add(j + 8) as *const __m256i);
+            _mm256_storeu_si256(crow.as_mut_ptr().add(j) as *mut __m256i, _mm256_add_epi32(c0, p0));
+            _mm256_storeu_si256(
+                crow.as_mut_ptr().add(j + 8) as *mut __m256i,
+                _mm256_add_epi32(c1, p1),
+            );
+        }
+        acc_row(c0, j, bw, a0);
+        acc_row(c1, j, bw, a1);
+        acc_row(c2, j, bw, a2);
+        acc_row(c3, j, bw, a3);
+        j += I8_LANES;
+    }
+    while j < n {
+        let bv = b[j] as i32;
+        c0[j] += a[0] as i32 * bv;
+        c1[j] += a[1] as i32 * bv;
+        c2[j] += a[2] as i32 * bv;
+        c3[j] += a[3] as i32 * bv;
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut j = 0;
+    while j + I8_LANES <= n {
+        // widen both to i16, pairwise multiply-add into 8 i32 lanes; the
+        // result is an exact integer, so lane/fold order cannot matter
+        let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(j) as *const __m128i));
+        let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(j) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+        j += I8_LANES;
+    }
+    let lo = _mm256_castsi256_si128(acc);
+    let hi = _mm256_extracti128_si256::<1>(acc);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0100_1110>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b1011_0001>(s));
+    let mut sum = _mm_cvtsi128_si32(s);
+    while j < n {
+        sum += a[j] as i32 * b[j] as i32;
+        j += 1;
+    }
+    sum
 }
 
 // ---------------------------------------------------------------------------
@@ -325,6 +551,65 @@ pub fn axpy_i8(c: &mut [i32], a: i8, b: &[i8]) {
         #[cfg(target_arch = "x86_64")]
         TIER_VECTOR => unsafe { axpy_i8_avx2(c, a, b) },
         _ => axpy_i8_body(c, a, b),
+    }
+}
+
+/// 4-row register-blocked [`axpy`]: `c` is four contiguous output rows of
+/// `b.len()` elements; row `r` receives `fma(a[r], b[j], c_r[j])`. One
+/// b-row load feeds all four accumulator rows; bit-identical to four
+/// 1-row `axpy` calls on every tier.
+#[inline]
+pub fn axpy4(c: &mut [f32], a: &[f32; 4], b: &[f32]) {
+    assert_eq!(c.len(), 4 * b.len(), "axpy4: length mismatch");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_VECTOR => unsafe { axpy4_avx2(c, a, b) },
+        #[cfg(target_arch = "x86_64")]
+        TIER_FMA_SCALAR => unsafe { axpy4_fma(c, a, b) },
+        _ => axpy4_body(c, a, b),
+    }
+}
+
+/// 4-row register-blocked [`dot`]: `b` is four contiguous rows of
+/// `a.len()` elements; returns the four striped-lane dot products. One
+/// a-row load feeds four independent accumulators, each walking the exact
+/// 1-row lane/tail structure — bit-identical to four `dot` calls on every
+/// tier.
+#[inline]
+pub fn dot4(a: &[f32], b: &[f32]) -> [f32; 4] {
+    assert_eq!(b.len(), 4 * a.len(), "dot4: length mismatch");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_VECTOR => unsafe { dot4_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        TIER_FMA_SCALAR => unsafe { dot4_fma(a, b) },
+        _ => dot4_body(a, b),
+    }
+}
+
+/// 4-row register-blocked [`axpy_i8`]: `c` is four contiguous i32 output
+/// rows; the shared `b` row is widened once per vector step. Exact integer
+/// arithmetic on every tier.
+#[inline]
+pub fn axpy4_i8(c: &mut [i32], a: &[i8; 4], b: &[i8]) {
+    assert_eq!(c.len(), 4 * b.len(), "axpy4_i8: length mismatch");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_VECTOR => unsafe { axpy4_i8_avx2(c, a, b) },
+        _ => axpy4_i8_body(c, a, b),
+    }
+}
+
+/// Widening i8→i32 dot product (the packed `matmul_i8_nt` reduction).
+/// Exact integer arithmetic: identical on every tier. Exact while
+/// `k · 127²` fits in i32 — the same bound as [`axpy_i8`] accumulation.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    assert_eq!(a.len(), b.len(), "dot_i8: length mismatch");
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_VECTOR => unsafe { dot_i8_avx2(a, b) },
+        _ => dot_i8_body(a, b),
     }
 }
 
@@ -380,6 +665,95 @@ mod tests {
             with_simd(false, || axpy_i8(&mut ic_s, -77, &ia));
             with_simd(true, || axpy_i8(&mut ic_v, -77, &ia));
             assert_eq!(ic_s, ic_v, "axpy_i8 tiers differ at n={n}");
+
+            // 4-row blocked forms: tiers identical on the same shapes
+            let coeff = [0.37f32, -1.4, 0.0, 2.5e-3];
+            let b4 = rng.normal_vec(4 * n, 0.0, 1.0);
+            let c40 = rng.normal_vec(4 * n, 0.0, 1.0);
+            let (mut c4_s, mut c4_v) = (c40.clone(), c40.clone());
+            let d4_s = with_simd(false, || {
+                axpy4(&mut c4_s, &coeff, &a);
+                dot4(&a, &b4)
+            });
+            let d4_v = with_simd(true, || {
+                axpy4(&mut c4_v, &coeff, &a);
+                dot4(&a, &b4)
+            });
+            assert_eq!(bits(&c4_s), bits(&c4_v), "axpy4 tiers differ at n={n}");
+            assert_eq!(bits(&d4_s), bits(&d4_v), "dot4 tiers differ at n={n}");
+
+            let icoeff = [-77i8, 13, 0, 127];
+            let ib4: Vec<i8> = (0..4 * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut i4_s = vec![3i32; 4 * n];
+            let mut i4_v = vec![3i32; 4 * n];
+            with_simd(false, || axpy4_i8(&mut i4_s, &icoeff, &ia));
+            with_simd(true, || axpy4_i8(&mut i4_v, &icoeff, &ia));
+            assert_eq!(i4_s, i4_v, "axpy4_i8 tiers differ at n={n}");
+            let id_s = with_simd(false, || dot_i8(&ia, &ib4[..n]));
+            let id_v = with_simd(true, || dot_i8(&ia, &ib4[..n]));
+            assert_eq!(id_s, id_v, "dot_i8 tiers differ at n={n}");
+        }
+    }
+
+    #[test]
+    fn blocked_forms_bit_identical_to_four_onerow_calls() {
+        // the register-blocking contract: sharing loads across 4 rows never
+        // changes any row's arithmetic, in either dispatch tier
+        let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = crate::util::rng::Rng::new(0xB10C);
+        for simd in [false, true] {
+            if simd && !simd_supported() {
+                continue;
+            }
+            with_simd(simd, || {
+                for n in [1usize, 7, 8, 9, 16, 33] {
+                    let a = rng.normal_vec(n, 0.0, 1.0);
+                    let coeff = [1.25f32, -0.7, 3.0e-4, -2.0];
+                    let b4 = rng.normal_vec(4 * n, 0.0, 1.0);
+                    let c0 = rng.normal_vec(4 * n, 0.0, 1.0);
+
+                    let mut blocked = c0.clone();
+                    axpy4(&mut blocked, &coeff, &a);
+                    let mut onerow = c0.clone();
+                    for r in 0..4 {
+                        axpy(&mut onerow[r * n..(r + 1) * n], coeff[r], &a);
+                    }
+                    assert_eq!(bits(&blocked), bits(&onerow), "axpy4 != 4x axpy at n={n}");
+
+                    let d4 = dot4(&a, &b4);
+                    for r in 0..4 {
+                        let want = dot(&a, &b4[r * n..(r + 1) * n]);
+                        assert_eq!(d4[r].to_bits(), want.to_bits(), "dot4 row {r} at n={n}");
+                    }
+
+                    let ia: Vec<i8> =
+                        (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+                    let icoeff = [127i8, -127, 0, 5];
+                    let ic0: Vec<i32> = (0..4 * n).map(|i| i as i32 - 7).collect();
+                    let mut iblocked = ic0.clone();
+                    axpy4_i8(&mut iblocked, &icoeff, &ia);
+                    let mut ionerow = ic0.clone();
+                    for r in 0..4 {
+                        axpy_i8(&mut ionerow[r * n..(r + 1) * n], icoeff[r], &ia);
+                    }
+                    assert_eq!(iblocked, ionerow, "axpy4_i8 != 4x axpy_i8 at n={n}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn dot_i8_matches_widening_loop() {
+        let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = crate::util::rng::Rng::new(0xD07);
+        for n in [0usize, 1, 15, 16, 17, 48, 133] {
+            let a: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            for simd in [false, true] {
+                let got = with_simd(simd, || dot_i8(&a, &b));
+                assert_eq!(got, want, "dot_i8 at n={n} simd={simd}");
+            }
         }
     }
 

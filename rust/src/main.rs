@@ -147,12 +147,17 @@ USAGE: qpretrain <subcommand> [--options]
   report       aggregate runs/reports/*.md
   selftest     native-backend validation against the rust quant oracle
   digest       [--steps 8 --out digest.json] deterministic micro-train
-               digest; byte-identical across threads and QPRETRAIN_SIMD legs
+               digest; byte-identical across threads, QPRETRAIN_SIMD and
+               QPRETRAIN_INT8 legs
   list         models / recipe grammar / experiments
 
 Global options:
   --threads N  kernel worker threads (default: RAYON_NUM_THREADS, else all
                cores). Results are bit-identical at every thread count.
+
+Env knobs: QPRETRAIN_SIMD=off pins the scalar lane emulation;
+QPRETRAIN_INT8=off pins the f32 fold of the packed-GEMM integer code
+products (both are bit-transparency switches, not numerics changes).
 
 The default build uses the pure-rust native backend. Build with
 `--features pjrt` (plus `make artifacts`) to execute AOT HLO artifacts."
@@ -465,13 +470,18 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
 }
 
 /// Deterministic train-run digest for CI bit-equivalence diffs: a few
-/// short micro runs (fp32 baseline, the int8-dispatched w8a8, and the
-/// paper's full combined recipe), fingerprinted at the bit level (loss /
-/// grad-norm / validation bit patterns, FNV-64 over the final params and
-/// Adam moments). The output is a function of the code and the seed ONLY —
-/// never of wall-clock, thread count, or SIMD availability — so the CI
-/// matrix byte-diffs one digest per (threads × QPRETRAIN_SIMD) leg to
-/// prove the determinism contract on real runners, not just dev machines.
+/// short micro runs (fp32 baseline, the int8-dispatched w8a8, the w8a8g8
+/// integer-backward recipe, a per-tensor actgrad variant that drives the
+/// fully-integer tn/nt gradient kernels, and the paper's full combined
+/// recipe), fingerprinted at the bit level (loss / grad-norm / validation
+/// bit patterns, FNV-64 over the final params and Adam moments). The
+/// output is a function of the code and the seed ONLY — never of
+/// wall-clock, thread count, SIMD availability, or the int8-accumulator
+/// knob (at micro dims the f32 fold of the integer code products is
+/// exact, so the i32 and f32 legs agree bit for bit) — so the CI matrix
+/// byte-diffs one digest per (threads × QPRETRAIN_SIMD × QPRETRAIN_INT8)
+/// leg to prove the determinism contract on real runners, not just dev
+/// machines.
 fn cmd_digest(args: &Args) -> Result<()> {
     fn state_hash(tensors: &[Vec<f32>]) -> String {
         let mut acc: Vec<u8> = Vec::with_capacity(tensors.len() * 8);
@@ -486,7 +496,13 @@ fn cmd_digest(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 8)?;
     let out = args.get_or("out", "digest.json");
     let mut runs = Vec::new();
-    for spec in ["base", "w8a8", "w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc"] {
+    for spec in [
+        "base",
+        "w8a8",
+        "w8a8g8",
+        "w8_pt+a8_pt+g8_pt_actgrad",
+        "w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc",
+    ] {
         let hp = TrainHp {
             steps,
             eval_every: steps,
@@ -521,7 +537,7 @@ fn cmd_digest(args: &Args) -> Result<()> {
         ("runs", Value::Arr(runs)),
     ]);
     std::fs::write(&out, digest.to_json())?;
-    println!("wrote {out} (byte-diffable across threads/simd CI legs)");
+    println!("wrote {out} (byte-diffable across threads/simd/int8 CI legs)");
     Ok(())
 }
 

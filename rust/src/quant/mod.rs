@@ -304,6 +304,20 @@ pub fn int8_weight_eligible(p: TensorPolicy) -> bool {
         && matches!(p.granularity, Granularity::PerTensor | Granularity::PerChannel)
 }
 
+/// Whether a policy can drive a packed *gradient* operand in the backward
+/// GEMMs: symmetric 8-bit per-tensor or per-token. Per-token gradient
+/// scales sit on the token axis, which is the **output** axis of the
+/// input-grad contraction (`dy @ wᵀ`) and factors row-wise out of the
+/// weight-grad contraction (`xᵀ @ dy`), so they never vary along a
+/// reduction the integer kernels fold over. Per-channel gradient scales
+/// would vary along the weight-grad reduction and are rejected, as are
+/// asymmetric and non-8-bit grids (same reasons as [`int8_act_eligible`]).
+pub fn int8_grad_eligible(p: TensorPolicy) -> bool {
+    p.bits == 8
+        && !p.asymmetric
+        && matches!(p.granularity, Granularity::PerTensor | Granularity::PerToken)
+}
+
 /// A GEMM operand quantized **once** onto the int8 grid: row-major codes
 /// plus one scale per group (length 1 for per-tensor operands, `rows` for
 /// per-token activations, `cols` for per-channel weights). The scales come
@@ -379,7 +393,8 @@ pub fn pack_weights_i8(
     let stride = cols.next_multiple_of(crate::backend::simd::I8_LANES);
     let mut codes = vec![0i8; rows * stride];
     // granularity dispatch hoisted out of the element loop: this runs once
-    // per forward linear per step (no packed-weight cache yet)
+    // per linear per step (the native backend caches the packed operand in
+    // its per-step layer cache, so backward reuses it instead of repacking)
     match policy.granularity {
         Granularity::PerTensor => {
             let p = params[0];
@@ -433,6 +448,70 @@ pub fn dequant_acts_i8(p: &PackedGemmOperand) -> Vec<f32> {
         };
         for &c in &p.codes[r * p.stride..r * p.stride + p.cols] {
             out.push(s * c as f32);
+        }
+    }
+    out
+}
+
+/// Quantize a gradient matrix for the backward int8 GEMMs (lane-padded
+/// layout; see [`PackedGemmOperand`]). The policy must be
+/// [`int8_grad_eligible`]; the quantization numerics are exactly the
+/// activation ones (symmetric row-wise grid from [`group_params_qmax`]),
+/// so `scale * code` reproduces the gradient qdq oracle bit for bit
+/// (modulo the `-0.0` caveat documented on [`PackedGemmOperand`]).
+pub fn pack_grads_i8(
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    policy: TensorPolicy,
+) -> PackedGemmOperand {
+    assert!(int8_grad_eligible(policy), "policy not int8-grad eligible");
+    pack_acts_i8(g, rows, cols, policy)
+}
+
+/// Dequantize packed *weight* codes back to f32 — bitwise identical to the
+/// weight qdq oracle (same group params, same codes, same `scale * code`
+/// expression), except that zero-bin values quantized from below come back
+/// `+0.0` instead of the oracle's `-0.0` (see [`PackedGemmOperand`]).
+/// Scales broadcast per column (per-channel) or per tensor. This is how
+/// backward's f32 input-grad fallback reuses the cached packed weights: an
+/// int-to-float multiply per element, with no re-quantization amax scan.
+/// The lane padding is dropped: the output is tight (rows x cols).
+pub fn dequant_weights_i8(p: &PackedGemmOperand) -> Vec<f32> {
+    assert_eq!(p.codes.len(), p.rows * p.stride);
+    assert!(
+        p.scales.len() == 1 || p.scales.len() == p.cols,
+        "dequant_weights_i8: scales must be 1 or cols"
+    );
+    let mut out = Vec::with_capacity(p.rows * p.cols);
+    for r in 0..p.rows {
+        let row = &p.codes[r * p.stride..r * p.stride + p.cols];
+        if p.scales.len() == 1 {
+            let s = p.scales[0];
+            for &c in row {
+                out.push(s * c as f32);
+            }
+        } else {
+            for (&c, &s) in row.iter().zip(p.scales.iter()) {
+                out.push(s * c as f32);
+            }
+        }
+    }
+    out
+}
+
+/// The raw integer codes of a packed operand as a tight (rows x cols) f32
+/// matrix — **unscaled**. This is the operand of the f32-accumulation leg
+/// of the int8 GEMMs (`QPRETRAIN_INT8=off`): the f32 kernels fold the same
+/// integer code products the i32 kernels do, and wherever every partial
+/// sum stays below 2^24 the two accumulators agree bit for bit after the
+/// shared rescale (the CI digest matrix proves this on the real runners).
+pub fn codes_f32(p: &PackedGemmOperand) -> Vec<f32> {
+    assert_eq!(p.codes.len(), p.rows * p.stride);
+    let mut out = Vec::with_capacity(p.rows * p.cols);
+    for r in 0..p.rows {
+        for &c in &p.codes[r * p.stride..r * p.stride + p.cols] {
+            out.push(c as f32);
         }
     }
     out
@@ -608,6 +687,55 @@ mod tests {
         assert!(!int8_weight_eligible(TensorPolicy::new(8, PerToken)));
         assert!(!int8_weight_eligible(TensorPolicy::asym(8, PerChannel)));
         assert!(!int8_weight_eligible(TensorPolicy::new(16, PerChannel)));
+        // gradients: symmetric 8-bit per-tensor/per-token only
+        assert!(int8_grad_eligible(TensorPolicy::new(8, PerTensor)));
+        assert!(int8_grad_eligible(TensorPolicy::new(8, PerToken)));
+        assert!(!int8_grad_eligible(TensorPolicy::new(8, PerChannel)));
+        assert!(!int8_grad_eligible(TensorPolicy::asym(8, PerToken)));
+        assert!(!int8_grad_eligible(TensorPolicy::new(4, PerToken)));
+        assert!(!int8_grad_eligible(TensorPolicy::new(0, PerToken)));
+    }
+
+    #[test]
+    fn packed_grads_dequant_bitexact_with_qdq() {
+        // pack_grads_i8 shares the activation packer, so the same bitwise
+        // contract holds: scale * code == qdq on the rational grid
+        let g = grid(16, 12);
+        for gr in [PerTensor, PerToken] {
+            let pol = TensorPolicy::new(8, gr);
+            let packed = pack_grads_i8(&g, 16, 12, pol);
+            let deq = dequant_acts_i8(&packed);
+            let fake = qdq_copy(&g, 16, 12, pol);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&deq), bits(&fake), "{gr:?}: grad dequant != qdq");
+        }
+    }
+
+    #[test]
+    fn dequant_weights_bitexact_with_qdq() {
+        let w = grid(24, 10);
+        for gr in [PerTensor, PerChannel] {
+            let pol = TensorPolicy::new(8, gr);
+            let packed = pack_weights_i8(&w, 24, 10, pol);
+            let deq = dequant_weights_i8(&packed);
+            let fake = qdq_copy(&w, 24, 10, pol);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&deq), bits(&fake), "{gr:?}: weight dequant != qdq");
+        }
+    }
+
+    #[test]
+    fn codes_f32_drops_padding_and_matches_codes() {
+        let (rows, cols) = (5, 13); // unaligned: stride pads to the lane width
+        let x = grid(rows, cols);
+        let p = pack_acts_i8(&x, rows, cols, TensorPolicy::new(8, PerToken));
+        let cf = codes_f32(&p);
+        assert_eq!(cf.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(cf[r * cols + c], p.codes[r * p.stride + c] as f32);
+            }
+        }
     }
 
     #[test]

@@ -42,7 +42,9 @@ impl Drop for Knobs {
     fn drop(&mut self) {
         kernels::force_parallel(false);
         kernels::set_threads(0);
-        native::set_int8_gemm(true);
+        // restore the env-resolved default, not a hard-coded `true`, so the
+        // QPRETRAIN_INT8=off CI legs stay pinned between guarded sections
+        native::set_int8_gemm(native::int8_env_default());
     }
 }
 
@@ -193,6 +195,7 @@ fn matmul_i8_exact_vs_widened_reference() {
 fn dispatch_rules() {
     use Granularity::*;
     let _g = knobs();
+    native::set_int8_gemm(true); // the env default may be off on CI legs
     let ok_a = Some(TensorPolicy::new(8, PerToken));
     let ok_w = Some(TensorPolicy::new(8, PerChannel));
     assert!(native::int8_dispatch(ok_a, ok_w));
@@ -210,9 +213,12 @@ fn dispatch_rules() {
     assert!(!native::int8_dispatch(ok_a, Some(TensorPolicy::new(0, PerChannel))));
     assert!(!native::int8_dispatch(None, ok_w));
     assert!(!native::int8_dispatch(ok_a, None));
-    // the process-wide switch gates everything
+    // the process-wide switch gates the i32-accumulator dispatch, but NOT
+    // the structural eligibility (packing/caching is knob-independent)
     native::set_int8_gemm(false);
     assert!(!native::int8_dispatch(ok_a, ok_w));
+    assert!(native::int8_structure(ok_a, ok_w));
+    assert!(!native::int8_structure(Some(TensorPolicy::asym(8, PerToken)), ok_w));
     native::set_int8_gemm(true);
 }
 
@@ -253,8 +259,9 @@ fn ineligible_recipes_fall_back_to_qdq_bitwise() {
 }
 
 /// The eligible w8a8 recipe takes the fast path: its forward is close to
-/// the qdq reference (rounding-level gap only) and bit-identical across
-/// thread counts.
+/// the knob-off leg (the f32 fold of the same integer code products —
+/// rounding-level gap only, exactly zero at micro dims) and bit-identical
+/// across thread counts.
 #[test]
 fn w8a8_fast_path_close_to_reference_and_thread_invariant() {
     let _g = knobs();
@@ -299,4 +306,260 @@ fn w8a8_fast_path_close_to_reference_and_thread_invariant() {
         "int8 fast path not thread-invariant"
     );
     assert_eq!(fast1.mean_nll.to_bits(), fast7.mean_nll.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// backward packed-int8 path (PR 6)
+// ---------------------------------------------------------------------------
+
+/// Integer-grid operands scaled by an exact power of two: the quant scale
+/// comes out exactly `2^e` (row amax pinned to `127 * 2^e`), every code is
+/// nonzero, so neither packing nor the f32 qdq oracle commits rounding.
+fn pow2_operands(rows: usize, cols: usize, e: i32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let s = (e as f32).exp2();
+    let mut v: Vec<f32> = (0..rows * cols)
+        .map(|_| {
+            let mag = 1.0 + rng.below(126) as f32; // [1, 126], never 0
+            let sign = if rng.below(2) == 0 { -1.0 } else { 1.0 };
+            sign * mag * s
+        })
+        .collect();
+    for r in 0..rows {
+        v[r * cols] = 127.0 * s;
+    }
+    v
+}
+
+/// Integer-grid data with the global abs-max pinned to 127: the per-tensor
+/// quant scale is exactly 1.0, so the packed codes equal the values.
+fn int_grid(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<f32> = (0..rows * cols)
+        .map(|_| (rng.below(255) as f32) - 127.0)
+        .collect();
+    v[0] = 127.0;
+    v
+}
+
+/// Pow2-scale gradients: the packed backward contractions must reproduce
+/// the materialized-qdq f32 oracle bit for bit — the row-factored tn core
+/// against `matmul_tn_acc` over the qdq values (per-token scales), and the
+/// integer tn/nt cores + single rescale against the same oracle
+/// (per-tensor scales; the oracle is exact at these reduction sizes).
+#[test]
+fn backward_packed_grads_bitwise_exact_on_pow2_scales() {
+    use Granularity::*;
+    let _g = knobs();
+    let (m, k, n) = (12, 24, 18); // forward shape (m x k) @ (k x n)
+    let x = pow2_operands(m, k, -3, 0xB0B);
+    let dy = pow2_operands(m, n, 2, 0xB0C);
+    let w = pow2_operands(k, n, -1, 0xB0D);
+
+    // per-token acts x per-token grads -> the row-factored tn core
+    let ap = TensorPolicy::new(8, PerToken);
+    let gp = TensorPolicy::new(8, PerToken);
+    let xa = quant::pack_acts_i8(&x, m, k, ap);
+    let gq = quant::pack_grads_i8(&dy, m, n, gp);
+    let xq = quant::qdq_copy(&x, m, k, ap);
+    let dq = quant::qdq_copy(&dy, m, n, gp);
+    let mut want = vec![0.0f32; k * n];
+    kernels::matmul_tn_acc(&mut want, &xq, &dq, m, k, n);
+    for threads in [1usize, 3, 7] {
+        kernels::set_threads(threads);
+        kernels::force_parallel(threads > 1);
+        let mut got = vec![0.0f32; k * n];
+        kernels::matmul_i8_tn_scaled_acc(&mut got, &xa, &gq);
+        assert_eq!(
+            bits(&got),
+            bits(&want),
+            "row-factored tn not bitwise exact at {threads} threads"
+        );
+    }
+    kernels::force_parallel(false);
+
+    // per-tensor everywhere -> integer cores + one rescale
+    let pt = TensorPolicy::new(8, PerTensor);
+    let xa = quant::pack_acts_i8(&x, m, k, pt);
+    let gq = quant::pack_grads_i8(&dy, m, n, pt);
+    let wp = quant::pack_weights_i8(&w, k, n, pt);
+    let xq = quant::qdq_copy(&x, m, k, pt);
+    let dq = quant::qdq_copy(&dy, m, n, pt);
+    let wq = quant::qdq_copy(&w, k, n, pt);
+
+    let mut want_dw = vec![0.0f32; k * n];
+    kernels::matmul_tn_acc(&mut want_dw, &xq, &dq, m, k, n);
+    let mut got_dw = vec![0.0f32; k * n];
+    let ci = kernels::matmul_i8_tn_packed(&xa, &gq);
+    kernels::rescale_i32_acc(&mut got_dw, &ci, &xa.scales, &gq.scales, k, n);
+    assert_eq!(bits(&got_dw), bits(&want_dw), "integer tn + rescale");
+
+    let want_dx = kernels::matmul_nt(&dq, &wq, m, n, k);
+    let ci = kernels::matmul_i8_nt_packed(&gq, &wp);
+    let got_dx = kernels::rescale_i32(&ci, &gq.scales, &wp.scales, m, k);
+    assert_eq!(bits(&got_dx), bits(&want_dx), "integer nt + rescale");
+}
+
+/// The backward integer cores against a widened i64 triple loop: i32
+/// accumulation must be exact, lane padding inert, at col counts that
+/// straddle the 16-lane boundary, at every thread count.
+#[test]
+fn backward_i8_cores_match_widened_reference() {
+    let _g = knobs();
+    let pt = TensorPolicy::new(8, Granularity::PerTensor);
+    let (m, k, n) = (9, 21, 19);
+    let x = int_grid(m, k, 0x51);
+    let g = int_grid(m, n, 0x52);
+    let w = int_grid(k, n, 0x53);
+    let xa = quant::pack_acts_i8(&x, m, k, pt);
+    let gq = quant::pack_grads_i8(&g, m, n, pt);
+    let wp = quant::pack_weights_i8(&w, k, n, pt);
+    assert_eq!(xa.scales, vec![1.0f32]);
+    assert_eq!(gq.scales, vec![1.0f32]);
+    assert_eq!(wp.scales, vec![1.0f32]);
+
+    // tn: c[l, j] = sum_r x[r, l] * g[r, j]
+    let mut want_tn = vec![0i64; k * n];
+    for r in 0..m {
+        for l in 0..k {
+            for j in 0..n {
+                want_tn[l * n + j] += (x[r * k + l] as i64) * (g[r * n + j] as i64);
+            }
+        }
+    }
+    // nt: c[i, l] = sum_j g[i, j] * w[l, j]
+    let mut want_nt = vec![0i64; m * k];
+    for i in 0..m {
+        for l in 0..k {
+            for j in 0..n {
+                want_nt[i * k + l] += (g[i * n + j] as i64) * (w[l * n + j] as i64);
+            }
+        }
+    }
+    for threads in [1usize, 2, 7] {
+        kernels::set_threads(threads);
+        kernels::force_parallel(threads > 1);
+        let tn: Vec<i64> = kernels::matmul_i8_tn_packed(&xa, &gq)
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        assert_eq!(tn, want_tn, "tn core at {threads} threads");
+        let nt: Vec<i64> = kernels::matmul_i8_nt_packed(&gq, &wp)
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        assert_eq!(nt, want_nt, "nt core at {threads} threads");
+    }
+}
+
+/// One fresh-state micro train step under `spec` with the accumulator
+/// knob pinned; returns the loss bits, the final state, and the packed
+/// dispatch counters for exactly that step.
+fn step_with_knob(
+    rt: &Runtime,
+    model: &qpretrain::runtime::ModelInfo,
+    spec: &str,
+    on: bool,
+    b: &qpretrain::data::Batch,
+) -> (u64, qpretrain::model::HostState, native::Int8Stats) {
+    native::set_int8_gemm(on);
+    let recipe = QuantRecipe::parse(spec).unwrap();
+    let mut state = init_state(model, 77);
+    let _ = native::take_int8_stats(); // drain counters from earlier tests
+    let out = rt
+        .train_step(model, &recipe, &mut state, &b.x, &b.y, 1e-3, 1.0)
+        .unwrap();
+    (out.loss.to_bits(), state, native::take_int8_stats())
+}
+
+/// Tentpole acceptance: under `w8a8g8` every per-layer linear (QKV / PROJ
+/// / FC1 / FC2 x 2 micro layers) dispatches forward AND backward on
+/// packed codes, weights are packed exactly once per train step, and the
+/// step is bitwise invariant to the accumulator knob at micro dims (where
+/// the f32 fold of the integer code products is exact).
+#[test]
+fn w8a8g8_train_step_dispatches_all_linears_packed() {
+    let _g = knobs();
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let linears = 4 * 2;
+    let (loss_on, state_on, stats_on) = step_with_knob(&rt, &model, "w8a8g8", true, &b);
+    let (loss_off, state_off, stats_off) = step_with_knob(&rt, &model, "w8a8g8", false, &b);
+    for (stats, leg) in [(stats_on, "i32"), (stats_off, "f32-fold")] {
+        assert_eq!(stats.fwd_packed, linears, "forward packed ({leg})");
+        assert_eq!(stats.tn_packed, linears, "weight-grad packed ({leg})");
+        assert_eq!(stats.nt_packed, linears, "input-grad packed ({leg})");
+        assert_eq!(stats.weight_packs, linears, "pack-once-per-step ({leg})");
+    }
+    assert_eq!(loss_on, loss_off, "w8a8g8 loss diverged across the knob");
+    for (a, b2) in state_on.params.iter().zip(state_off.params.iter()) {
+        assert_eq!(bits(a), bits(b2), "w8a8g8 params diverged across the knob");
+    }
+}
+
+/// The per-tensor actgrad recipe drives the fully-integer backward (both
+/// grad contractions on the i8 cores, input-grad consuming the quantized
+/// gradient); the i32 and f32-fold accumulators must agree bit for bit at
+/// micro dims.
+#[test]
+fn actgrad_recipe_integer_backward_knob_invariant() {
+    let _g = knobs();
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    let spec = "w8_pt+a8_pt+g8_pt_actgrad";
+    let (loss_on, state_on, stats_on) = step_with_knob(&rt, &model, spec, true, &b);
+    let (loss_off, state_off, stats_off) = step_with_knob(&rt, &model, spec, false, &b);
+    for stats in [stats_on, stats_off] {
+        assert_eq!(stats.fwd_packed, 8);
+        assert_eq!(stats.tn_packed, 8);
+        assert_eq!(stats.nt_packed, 8);
+        assert_eq!(stats.weight_packs, 8);
+    }
+    assert_eq!(loss_on, loss_off, "{spec}: loss diverged across the knob");
+    for (a, b2) in state_on.params.iter().zip(state_off.params.iter()) {
+        assert_eq!(bits(a), bits(b2), "{spec}: params diverged across the knob");
+    }
+}
+
+/// Recipes whose gradient policy is not int8-eligible (per-channel or
+/// 4-bit grads) keep the packed forward but must fall back to the f32 qdq
+/// reference for the whole backward — no grad contraction dispatches
+/// packed, and the step stays bitwise invariant to the accumulator knob.
+#[test]
+fn ineligible_grad_recipes_fall_back_for_backward() {
+    let _g = knobs();
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    let mut it = BatchIter::new(
+        CorpusCfg::train_default(model.vocab),
+        model.batch,
+        model.seq,
+    );
+    let b = it.next_batch();
+    for spec in ["w8_pc+a8_ptok+g8_pc", "w8_pc+a8_ptok+g4_ptok"] {
+        let (loss_on, state_on, stats_on) = step_with_knob(&rt, &model, spec, true, &b);
+        let (loss_off, state_off, stats_off) = step_with_knob(&rt, &model, spec, false, &b);
+        for stats in [stats_on, stats_off] {
+            assert_eq!(stats.fwd_packed, 8, "{spec}: forward should stay packed");
+            assert_eq!(stats.weight_packs, 8, "{spec}");
+            assert_eq!(stats.tn_packed, 0, "{spec}: grad tn must fall back");
+            assert_eq!(stats.nt_packed, 0, "{spec}: grad nt must fall back");
+        }
+        assert_eq!(loss_on, loss_off, "{spec}: loss diverged across the knob");
+        for (a, b2) in state_on.params.iter().zip(state_off.params.iter()) {
+            assert_eq!(bits(a), bits(b2), "{spec}: params diverged across the knob");
+        }
+    }
 }

@@ -247,9 +247,10 @@ fn train_run_bit_identical_across_thread_counts() {
     // subsystem (persistent pool + fixed-shape tree reductions) is built on
     // (and what lets the golden fixtures stay unchanged). Quantization
     // active (w8a8) so the injection points run inside the parallel region
-    // too — once through the packed-int8 fast path (the default dispatch
-    // for w8a8) and once through the f32 qdq reference path, so *both*
-    // execution paths carry the thread-invariance contract.
+    // too — once with the exact-i32 accumulator (the default for w8a8's
+    // packed GEMMs) and once with the knob-off f32 fold of the same integer
+    // code products, so *both* accumulators carry the thread-invariance
+    // contract.
     use qpretrain::backend::{kernels, native};
 
     let _int8 = INT8_KNOB.lock().unwrap_or_else(|e| e.into_inner());
@@ -262,7 +263,7 @@ fn train_run_bit_identical_across_thread_counts() {
         fn drop(&mut self) {
             kernels::force_parallel(false);
             kernels::set_threads(0);
-            native::set_int8_gemm(true);
+            native::set_int8_gemm(native::int8_env_default());
         }
     }
     let _reset = KnobReset;
@@ -318,6 +319,78 @@ fn train_run_bit_identical_across_thread_counts() {
         assert_eq!(state_bits(&a.m), state_bits(&b.m), "{path}: first moments diverged");
         assert_eq!(state_bits(&a.v), state_bits(&b.v), "{path}: second moments diverged");
     }
+}
+
+#[test]
+fn w8a8g8_train_digest_invariant_across_threads_and_isa() {
+    // The integer-backward recipe end to end: a full micro `w8a8g8` train
+    // run must be bitwise invariant across (threads x ISA) — serial/scalar
+    // lane emulation vs many-thread/vector path — in losses, grad norms,
+    // validation, final params and both Adam moments. This is the
+    // in-process mirror of the CI digest-diff matrix for the backward
+    // packed path (gradient packing, the row-factored tn core, and the
+    // packed-weight-cache nt reuse all run inside the measured region).
+    use qpretrain::backend::{kernels, native};
+
+    let _int8 = INT8_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+
+    struct KnobReset;
+    impl Drop for KnobReset {
+        fn drop(&mut self) {
+            kernels::force_parallel(false);
+            kernels::set_threads(0);
+            native::set_int8_gemm(native::int8_env_default());
+        }
+    }
+    let _reset = KnobReset;
+    native::set_int8_gemm(true);
+
+    let rt = Runtime::native();
+    let run = |threads: usize, force: bool, simd: bool| {
+        kernels::with_simd(simd, || {
+            kernels::force_parallel(force);
+            let mut h = hp(10);
+            h.eval_every = 5;
+            h.threads = threads;
+            let r = train(&rt, &TrainCfg::new("micro", recipe("w8a8g8"), h)).unwrap();
+            kernels::force_parallel(false);
+            r
+        })
+    };
+    let serial_scalar = run(1, false, false);
+    let many_vector = run(7, true, true);
+
+    let f64_bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    let val_bits =
+        |v: &[(usize, f64)]| v.iter().map(|(s, l)| (*s, l.to_bits())).collect::<Vec<_>>();
+    let state_bits = |vv: &[Vec<f32>]| {
+        vv.iter()
+            .map(|t| t.iter().map(|x| x.to_bits()).collect::<Vec<u32>>())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(
+        f64_bits(&serial_scalar.losses),
+        f64_bits(&many_vector.losses),
+        "w8a8g8: loss curves diverged across threads x ISA"
+    );
+    assert_eq!(
+        f64_bits(&serial_scalar.gnorms),
+        f64_bits(&many_vector.gnorms),
+        "w8a8g8: grad norms diverged"
+    );
+    assert_eq!(
+        val_bits(&serial_scalar.val),
+        val_bits(&many_vector.val),
+        "w8a8g8: validation losses diverged"
+    );
+    let (a, b) = (&serial_scalar.final_state, &many_vector.final_state);
+    assert_eq!(
+        state_bits(&a.params),
+        state_bits(&b.params),
+        "w8a8g8: final params diverged"
+    );
+    assert_eq!(state_bits(&a.m), state_bits(&b.m), "w8a8g8: first moments diverged");
+    assert_eq!(state_bits(&a.v), state_bits(&b.v), "w8a8g8: second moments diverged");
 }
 
 #[test]

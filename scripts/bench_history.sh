@@ -1,0 +1,70 @@
+#!/usr/bin/env bash
+# Append the current bench reports to bench_history/.
+#
+# Runs the two floor-gated bench binaries (unless --no-run is given and
+# fresh BENCH_*.json files already sit at the repo root), then snapshots
+# them under bench_history/<utc-stamp>_<git-sha>/ together with a small
+# meta record — so the perf trajectory across PRs lives in-tree and not
+# only in expiring CI artifacts. The bench binaries themselves fail on
+# any row below the committed floors in rust/tests/bench_baseline.json,
+# so every snapshot that lands here already cleared the gate.
+#
+# Usage: scripts/bench_history.sh [--no-run] [--fast]
+#   --no-run  snapshot existing BENCH_*.json without re-running benches
+#   --fast    run the benches in QPRETRAIN_BENCH_FAST smoke mode
+#             (shorter measurement windows; noisier numbers — the meta
+#             record marks the snapshot so trajectories compare like
+#             with like)
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+run=1
+fast=0
+for arg in "$@"; do
+  case "$arg" in
+    --no-run) run=0 ;;
+    --fast) fast=1 ;;
+    *)
+      echo "unknown arg: $arg" >&2
+      exit 2
+      ;;
+  esac
+done
+
+if [ "$run" -eq 1 ]; then
+  if [ "$fast" -eq 1 ]; then
+    QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_kernels
+    QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_train_loop
+  else
+    cargo bench --bench bench_kernels
+    cargo bench --bench bench_train_loop
+  fi
+fi
+
+for f in BENCH_kernels.json BENCH_train_loop.json; do
+  if [ ! -f "$f" ]; then
+    echo "missing $f at the repo root (run the benches, or drop --no-run)" >&2
+    exit 1
+  fi
+done
+
+sha=$(git rev-parse --short HEAD 2>/dev/null || echo nogit)
+stamp=$(date -u +%Y-%m-%dT%H%M%SZ)
+dir="bench_history/${stamp}_${sha}"
+mkdir -p "$dir"
+cp BENCH_kernels.json BENCH_train_loop.json "$dir/"
+dirty=false
+if ! git diff --quiet 2>/dev/null; then
+  dirty=true
+fi
+cat > "$dir/meta.json" <<EOF
+{
+  "sha": "$sha",
+  "utc": "$stamp",
+  "host": "$(uname -sm)",
+  "fast_mode": $([ "$fast" -eq 1 ] && echo true || echo false),
+  "dirty_worktree": $dirty
+}
+EOF
+echo "snapshotted bench reports to $dir"
