@@ -1,0 +1,124 @@
+//! Serve-engine benches (feeds §Perf): KV-cached decode throughput and
+//! time-to-first-token under continuous batching, across batch budgets and
+//! the fp32 / packed-int8 resident-weight paths.
+//!
+//! Emits `BENCH_serve.json` at the repo root (tokens/s, TTFT, batch
+//! occupancy, peak batch) for the perf trajectory, then fails against the
+//! committed floors in `rust/tests/bench_baseline.json`; CI uploads the
+//! JSON as an artifact per run. Set `QPRETRAIN_BENCH_FAST=1` for a smoke
+//! run with shrunk generation budgets.
+//!
+//! Floor rows carry their batch budget as a JSON *string* (`"batch":
+//! "4"`): the baseline matcher selects rows by string-valued fields only.
+
+use qpretrain::backend::kernels;
+use qpretrain::config::QuantRecipe;
+use qpretrain::model::init_state;
+use qpretrain::runtime::Runtime;
+use qpretrain::serve::{Engine, Request, Sampler, ServeCfg};
+use qpretrain::util::bench::section;
+use qpretrain::util::json::{self, Value};
+use qpretrain::util::rng::Rng;
+
+/// Ragged synthetic request mix: prompts cycle 1..=8 tokens, budgets cycle
+/// so retirements stagger and the batcher keeps refilling mid-run.
+fn request_mix(n: usize, vocab: usize, max_new: usize, topk: bool) -> Vec<Request> {
+    let mut rng = Rng::new(0xBE7C);
+    (0..n)
+        .map(|i| Request {
+            prompt: (0..1 + i % 8).map(|_| rng.below(vocab) as i32).collect(),
+            max_new: max_new - (i % 3),
+            sampler: if topk {
+                Sampler::TopK {
+                    temperature: 0.9,
+                    k: 16,
+                }
+            } else {
+                Sampler::Greedy
+            },
+            seed: 0x5EED + i as u64,
+        })
+        .collect()
+}
+
+fn main() {
+    let rt = Runtime::open_default().expect("runtime");
+    let threads = kernels::max_threads();
+    let fast = qpretrain::util::bench::fast_mode();
+    println!(
+        "backend: {} ({threads} kernel threads, simd {})",
+        rt.backend_name(),
+        if kernels::simd_active() { "on" } else { "off" }
+    );
+    let model = rt.model("micro").unwrap().clone();
+    let state = init_state(&model, 7);
+    let max_new = if fast { 8 } else { 32 };
+    let mut results = Vec::new();
+
+    section("continuous-batching decode throughput (micro, w8a8 resident weights)");
+    let recipe = QuantRecipe::parse("w8a8").unwrap();
+    for max_batch in [1usize, 4, 8] {
+        let mut eng = Engine::new(
+            &model,
+            &state.params,
+            &recipe,
+            ServeCfg::new(max_batch, model.seq),
+        )
+        .expect("engine");
+        let reqs = request_mix(2 * max_batch.max(2), model.vocab, max_new, false);
+        let (done, stats) = eng.run(&reqs).expect("serve run");
+        let tps = stats.tokens_out as f64 / stats.wall_secs.max(1e-9);
+        let ttft_ms = 1e3 * done.iter().map(|c| c.ttft_secs).sum::<f64>() / done.len() as f64;
+        results.push(json::obj(vec![
+            ("name", json::s("decode")),
+            ("recipe", json::s("w8a8")),
+            ("batch", json::s(&max_batch.to_string())),
+            ("requests", json::num(reqs.len() as f64)),
+            ("tokens_per_sec", json::num(tps)),
+            ("ttft_ms", json::num(ttft_ms)),
+            ("occupancy", json::num(stats.occupancy)),
+            ("peak_batch", json::num(stats.peak_batch as f64)),
+            ("packed_linears", json::num(eng.packed_linears() as f64)),
+        ]));
+        println!(
+            "batch {max_batch:>2}: {tps:>9.0} tokens/s   ttft {ttft_ms:>7.2} ms   \
+             occupancy {:.2}   peak {}",
+            stats.occupancy, stats.peak_batch
+        );
+    }
+
+    section("resident-weight paths at batch 4 (fp32 vs packed int8, greedy vs top-k)");
+    for (label, spec, topk) in [
+        ("base_greedy", "base", false),
+        ("w8a8_greedy", "w8a8", false),
+        ("w8a8_topk", "w8a8", true),
+    ] {
+        let recipe = QuantRecipe::parse(spec).unwrap();
+        let mut eng =
+            Engine::new(&model, &state.params, &recipe, ServeCfg::new(4, model.seq))
+                .expect("engine");
+        let reqs = request_mix(8, model.vocab, max_new, topk);
+        let (_, stats) = eng.run(&reqs).expect("serve run");
+        let tps = stats.tokens_out as f64 / stats.wall_secs.max(1e-9);
+        results.push(json::obj(vec![
+            ("name", json::s("path")),
+            ("path", json::s(label)),
+            ("batch", json::s("4")),
+            ("tokens_per_sec", json::num(tps)),
+            ("occupancy", json::num(stats.occupancy)),
+        ]));
+        println!("{label:<14} {tps:>9.0} tokens/s   occupancy {:.2}", stats.occupancy);
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("serve")),
+        ("threads", json::num(threads as f64)),
+        ("simd", Value::Bool(kernels::simd_active())),
+        ("results", Value::Arr(results)),
+    ]);
+    let path = qpretrain::util::repo_root().join("BENCH_serve.json");
+    std::fs::write(&path, report.to_json()).expect("write BENCH_serve.json");
+    println!("\nwrote {}", path.display());
+    qpretrain::util::bench::check_against_baseline(&report, "serve")
+        .expect("bench_serve regressed below the committed perf floors");
+}

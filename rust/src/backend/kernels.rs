@@ -1348,6 +1348,27 @@ pub fn gelu_bwd(u: &[f32], dg: &[f32]) -> Vec<f32> {
     out
 }
 
+/// Softmax of `row[..n]` into `p[..n]`: the exact per-row arithmetic of
+/// [`causal_softmax`] (ascending-j max, exp, running f32 sum, divide),
+/// factored out so the serve decode path (which scores one new query row
+/// against the KV cache) runs bit-for-bit the same code as the full-tile
+/// training forward.
+pub fn softmax_row(row: &[f32], p: &mut [f32], n: usize) {
+    let mut mx = f32::NEG_INFINITY;
+    for &sv in row.iter().take(n) {
+        mx = mx.max(sv);
+    }
+    let mut z = 0.0f32;
+    for j in 0..n {
+        let e = (row[j] - mx).exp();
+        p[j] = e;
+        z += e;
+    }
+    for pj in p.iter_mut().take(n) {
+        *pj /= z;
+    }
+}
+
 /// Causal row softmax of one (t x t) score tile into `p` (entries above
 /// the diagonal stay exactly 0; `p` must arrive zeroed). Serial per tile —
 /// the native backend fans tiles out across (batch, head) pairs.
@@ -1356,21 +1377,40 @@ pub fn causal_softmax(scores: &[f32], p: &mut [f32], t: usize) {
     assert_eq!(p.len(), t * t, "causal_softmax: p shape");
     for i in 0..t {
         let row = &scores[i * t..(i + 1) * t];
-        let mut mx = f32::NEG_INFINITY;
-        for &sv in row.iter().take(i + 1) {
-            mx = mx.max(sv);
-        }
-        let mut z = 0.0f32;
         let prow = &mut p[i * t..(i + 1) * t];
-        for j in 0..=i {
-            let e = (row[j] - mx).exp();
-            prow[j] = e;
-            z += e;
-        }
-        for pj in prow.iter_mut().take(i + 1) {
-            *pj /= z;
-        }
+        softmax_row(row, prow, i + 1);
     }
+}
+
+/// One KV-cached attention row: score the query head-row `q` (hd) against
+/// the `len` cached keys, scale, softmax, and contract against the cached
+/// values into `ctx` (hd). Every step reuses the full-forward building
+/// blocks on a 1-row tile — `math::matmul_nt` for scores (the same
+/// per-element `simd::dot` lane tree), [`softmax_row`], and `math::matmul`
+/// for the value contraction (the same ascending-position `simd::axpy`
+/// accumulation) — so position `len-1` of a decode is bit-identical to row
+/// `len-1` of the full (t x t) causal tile, which computes that row over
+/// exactly the first `len` keys/values with the same operation order.
+pub fn decode_attn(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    len: usize,
+    hd: usize,
+    inv_sqrt_hd: f32,
+    ctx: &mut [f32],
+) {
+    assert_eq!(q.len(), hd, "decode_attn: q shape");
+    assert!(kc.len() >= len * hd, "decode_attn: key cache too short");
+    assert!(vc.len() >= len * hd, "decode_attn: value cache too short");
+    assert_eq!(ctx.len(), hd, "decode_attn: ctx shape");
+    let mut scores = super::math::matmul_nt(q, &kc[..len * hd], 1, hd, len);
+    for sv in scores.iter_mut() {
+        *sv *= inv_sqrt_hd;
+    }
+    let mut p = vec![0.0f32; len];
+    softmax_row(&scores, &mut p, len);
+    ctx.copy_from_slice(&super::math::matmul(&p, &vc[..len * hd], 1, len, hd));
 }
 
 /// Per-position NLL without materializing probabilities (eval path),

@@ -831,6 +831,131 @@ fn forward(model: &ModelInfo, params: &[Vec<f32>], x: &[i32], qs: &QuantRecipe) 
 
 // (cross-entropy: `kernels::nll_only` / `kernels::nll_rows`, row-parallel)
 
+/// Full-context forward returning only the logits `(batch*seq, vocab)`.
+/// The recipe is applied exactly as given (callers that start from a
+/// training recipe derive `forward_only()` first). This is the reference
+/// side of the serve equivalence proofs: `tests/serve.rs` pins KV-cached
+/// decode bitwise against this full re-forward.
+pub fn forward_logits(
+    model: &ModelInfo,
+    params: &[Vec<f32>],
+    x: &[i32],
+    qs: &QuantRecipe,
+) -> Result<Vec<f32>> {
+    check_inputs(model, params, x)?;
+    Ok(forward(model, params, x, qs).logits)
+}
+
+// ---------------------------------------------------------------------------
+// resident weights (the serve-path operand cache)
+// ---------------------------------------------------------------------------
+
+/// A linear's weight operand as the serve engine keeps it resident in
+/// memory, quantized **once at checkpoint load** instead of per forward:
+/// packed i8 codes when the recipe is [`int8_structure`]-eligible, the
+/// fake-quantized (or raw) f32 matrix otherwise. Because packing is a
+/// deterministic function of the weights and policy, contracting against
+/// a load-time pack is bit-identical to the training forward's
+/// pack-per-step — that is what lets the KV-decode equivalence proofs
+/// compare against [`forward_logits`] directly.
+pub enum ResidentWeight {
+    /// Packed i8 codes + scales (the int8-structured fast path).
+    Packed(quant::PackedGemmOperand),
+    /// Fake-quantized (or raw, when weights are unquantized) f32 matrix.
+    F32(Vec<f32>),
+}
+
+impl ResidentWeight {
+    /// Whether this weight is resident as packed i8 codes.
+    pub fn is_packed(&self) -> bool {
+        matches!(self, ResidentWeight::Packed(_))
+    }
+}
+
+/// Quantize one `(k x n)` weight matrix into its resident serving form
+/// under the forward recipe. The dispatch mirrors [`int8_structure`]
+/// exactly — structure is decided by the recipe alone, never by the
+/// [`set_int8_gemm`] accumulator knob, so the same resident form serves
+/// both digest legs.
+pub fn pack_resident_weight(w: &[f32], k: usize, n: usize, qs: &QuantRecipe) -> ResidentWeight {
+    if int8_structure(qs.acts, qs.weights) {
+        WEIGHT_PACKS.fetch_add(1, Ordering::Relaxed);
+        ResidentWeight::Packed(quant::pack_weights_i8(w, k, n, qs.weights.unwrap()))
+    } else {
+        ResidentWeight::F32(match qs.weights {
+            Some(p) => qdq_matrix(w, k, n, p),
+            None => w.to_vec(),
+        })
+    }
+}
+
+/// One serve-path linear `y = qdq_a(x) @ w_resident` over `m` decode rows.
+/// Operation-for-operation the forward arm of [`quant_linear`] with the
+/// per-step weight quantization replaced by the resident operand: packed
+/// acts against packed codes (exact i32 or the f32 fold, by the
+/// accumulator knob), f32 qdq acts against the resident f32 matrix
+/// otherwise. Activation packing/qdq is row-local for every serve-eligible
+/// policy (per-token or unquantized), so any subset of rows — one decode
+/// step, a continuous batch, or the full context — produces bit-identical
+/// output rows.
+pub fn resident_linear(
+    x: Vec<f32>,
+    w: &ResidentWeight,
+    m: usize,
+    k: usize,
+    n: usize,
+    acts: Option<TensorPolicy>,
+) -> Vec<f32> {
+    match w {
+        ResidentWeight::Packed(wp) => {
+            let ap = acts.expect("packed resident weight requires quantized acts");
+            let xa = quant::pack_acts_i8(&x, m, k, ap);
+            FWD_PACKED.fetch_add(1, Ordering::Relaxed);
+            if int8_gemm_enabled() {
+                rescale_i32(&matmul_i8_packed(&xa, wp), &xa.scales, &wp.scales, m, n)
+            } else {
+                let cf = matmul(&quant::codes_f32(&xa), &quant::codes_f32(wp), m, k, n);
+                rescale_f32(&cf, &xa.scales, &wp.scales, m, n)
+            }
+        }
+        ResidentWeight::F32(wq) => {
+            let xq = qdq_act_owned(x, m, k, acts);
+            matmul(&xq, wq, m, k, n)
+        }
+    }
+}
+
+/// Accumulating serve-path linear (`acc += qdq_a(x) @ w_resident`) for the
+/// residual projections — the serve twin of [`quant_linear_acc`].
+pub fn resident_linear_acc(
+    x: &[f32],
+    w: &ResidentWeight,
+    m: usize,
+    k: usize,
+    n: usize,
+    acts: Option<TensorPolicy>,
+    acc: &mut [f32],
+) {
+    match w {
+        ResidentWeight::Packed(wp) => {
+            let ap = acts.expect("packed resident weight requires quantized acts");
+            let xa = quant::pack_acts_i8(x, m, k, ap);
+            FWD_PACKED.fetch_add(1, Ordering::Relaxed);
+            if int8_gemm_enabled() {
+                let ci = matmul_i8_packed(&xa, wp);
+                rescale_i32_acc(acc, &ci, &xa.scales, &wp.scales, m, n);
+            } else {
+                let cf = matmul(&quant::codes_f32(&xa), &quant::codes_f32(wp), m, k, n);
+                rescale_f32_acc(acc, &cf, &xa.scales, &wp.scales, m, n);
+            }
+        }
+        ResidentWeight::F32(wq) => {
+            let xq = qdq_act_opt(x, m, k, acts);
+            matmul_acc(acc, xq.as_deref().unwrap_or(x), wq, m, k, n);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // backward
 // ---------------------------------------------------------------------------

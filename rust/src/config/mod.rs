@@ -386,6 +386,31 @@ impl QuantRecipe {
         }
     }
 
+    /// The forward recipe a serving engine may run incrementally, or an
+    /// error when this recipe is not serve-eligible. KV-cached decode
+    /// computes one token row at a time, so every forward statistic must be
+    /// row-local: weight quantization is batch-independent (any policy
+    /// qualifies), and activation quantization qualifies only when absent
+    /// or per-token. Per-tensor / per-channel activation scales are amax
+    /// reductions over the whole `(rows x cols)` activation matrix — an
+    /// incremental step would see different statistics than the
+    /// full-context re-forward and break the bitwise-equality invariant —
+    /// so those recipes are rejected up front instead of serving wrong.
+    pub fn serve_forward(&self) -> Result<QuantRecipe> {
+        let fwd = self.forward_only();
+        if let Some(a) = fwd.acts {
+            if a.granularity != Granularity::PerToken {
+                bail!(
+                    "recipe is not serve-eligible: activation scales are {:?}, \
+                     which depend on the whole batch; KV-cached decode requires \
+                     row-local activation quantization (per-token) or none",
+                    a.granularity
+                );
+            }
+        }
+        Ok(fwd)
+    }
+
     /// The five runtime quantization ranges in artifact input order
     /// (w, a, g, m1, m2); absent components get the fed-1.0 convention.
     pub fn qmax_scalars(&self) -> [f32; 5] {

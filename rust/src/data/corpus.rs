@@ -55,7 +55,13 @@ impl CorpusCfg {
 
     pub fn successor(&self, prev: i32) -> i32 {
         let u = self.usable_vocab() as u64;
-        ((self.mult.wrapping_mul(prev as u64).wrapping_add(self.add)) % u) as i32
+        // widen through i64 and reduce into [0, u) explicitly: `prev as u64`
+        // would sign-extend a negative (corrupt / special) id into a huge
+        // value and silently derail the chain. Ids already in range are
+        // untouched (`rem_euclid` is the identity there), so streams — and
+        // the CI digests — are unchanged for well-formed tokens.
+        let p = i64::from(prev).rem_euclid(u as i64) as u64;
+        ((self.mult.wrapping_mul(p).wrapping_add(self.add)) % u) as i32
     }
 }
 
@@ -204,6 +210,21 @@ mod tests {
         }
         let frac = hits as f64 / b.seq as f64;
         assert!(frac > 0.8, "successor fraction {frac}");
+    }
+
+    #[test]
+    fn successor_boundary_ids_stay_in_range() {
+        let c = cfg();
+        let u = c.usable_vocab() as i32;
+        // every id — valid, special, negative, or extreme — must map into
+        // the usable range instead of sign-extending through `as u64`
+        for prev in [0, 1, u - 1, u, c.vocab as i32 - 1, -1, -u, i32::MIN, i32::MAX] {
+            let s = c.successor(prev);
+            assert!((0..u).contains(&s), "successor({prev}) = {s} out of range");
+        }
+        // congruent ids share a successor: the reduction is mod usable_vocab
+        assert_eq!(c.successor(-1), c.successor(u - 1));
+        assert_eq!(c.successor(0), c.successor(u));
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub mod model;
 pub mod ptq;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod timemodel;
 pub mod train;
 pub mod util;

@@ -11,6 +11,9 @@
 //!   timeprofile  linear-vs-attention time share (Fig. 3, native kernels)
 //!   experiment   reproduce a paper table/figure (or `all`)
 //!   report       aggregate all experiment reports
+//!   generate     KV-cached autoregressive decode from a checkpoint
+//!   serve        batched quantized inference over many requests
+//!                (continuous batching + packed-int8 resident weights)
 //!   selftest     runtime validation: native backend vs the quant oracle
 //!   digest       deterministic micro-train digest (losses/params bit
 //!                fingerprints) for cross-leg CI equivalence diffs
@@ -117,6 +120,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "timeprofile" => cmd_timeprofile(args),
         "experiment" => cmd_experiment(args),
         "report" => cmd_report(args),
+        "generate" => cmd_generate(args),
+        "serve" => cmd_serve(args),
         "selftest" => cmd_selftest(args),
         "digest" => cmd_digest(args),
         "list" => cmd_list(args),
@@ -145,6 +150,14 @@ USAGE: qpretrain <subcommand> [--options]
   timeprofile  [--reps 3]               (Fig 3 measured on native kernels)
   experiment   <fig2|fig3|fig4|...|tab10|tab11|abl_bits|all> [--steps N --jobs K]
   report       aggregate runs/reports/*.md
+  generate     --ckpt DIR [--prompt 3,17,42 | --prompt-len 8] --max-new 32
+               [--temperature 0.8 --top-k 40 --seed 7] [--ptq-bits 8]
+               KV-cached greedy/sampled decode; identical token stream at
+               every thread count and with SIMD on or off
+  serve        --ckpt DIR --requests 16 --max-batch 8 [--max-seq 128]
+               continuous batching over concurrent sessions with packed
+               int8 weights resident in memory (bitwise-equal to
+               one-at-a-time decode); prints tokens/s, TTFT, occupancy
   selftest     native-backend validation against the rust quant oracle
   digest       [--steps 8 --out digest.json] deterministic micro-train
                digest; byte-identical across threads, QPRETRAIN_SIMD and
@@ -392,6 +405,159 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// serving
+// ---------------------------------------------------------------------------
+
+/// Model + params + forward recipe for `generate` / `serve`: `--ckpt DIR`
+/// loads a trained checkpoint (model + recipe inferred from the run
+/// summary), otherwise `--model NAME --init-seed N` decodes from a random
+/// init (smoke tests, digests). `--ptq-bits N [--ptq-gran G]` additionally
+/// post-training-quantizes the block-linear weights in place before the
+/// engine packs them into their resident form.
+fn serve_state(
+    args: &Args,
+    rt: &Runtime,
+) -> Result<(qpretrain::runtime::ModelInfo, qpretrain::model::HostState, QuantRecipe)> {
+    let (model, mut state, recipe) = if args.get("ckpt").is_some() {
+        open_ckpt(args, rt)?
+    } else {
+        let model = rt.model(&args.get_or("model", "micro"))?.clone();
+        let state = qpretrain::model::init_state(&model, args.u64_or("init-seed", 1337)?);
+        (model, state, quant_from(args)?.forward_only())
+    };
+    let ptq_bits = args.usize_or("ptq-bits", 0)? as u32;
+    if ptq_bits > 0 {
+        let gran = Granularity::parse(&args.get_or("ptq-gran", "per_channel"))?;
+        qpretrain::ptq::quantize_weights(
+            &mut state,
+            &model,
+            qpretrain::config::TensorPolicy::new(ptq_bits, gran),
+        );
+    }
+    Ok((model, state, recipe))
+}
+
+fn sampler_from(args: &Args) -> Result<qpretrain::serve::Sampler> {
+    let t = args.f64_or("temperature", 0.0)?;
+    Ok(if t <= 0.0 {
+        qpretrain::serve::Sampler::Greedy
+    } else {
+        qpretrain::serve::Sampler::TopK {
+            temperature: t as f32,
+            k: args.usize_or("top-k", 40)?,
+        }
+    })
+}
+
+/// Deterministic prompts: explicit `--prompt 3,17,42` token ids, or `n`
+/// prompts drawn from the synthetic training corpus with ragged lengths
+/// cycling `1..=prompt-len` so the batcher sees staggered admissions.
+fn serve_prompts(args: &Args, vocab: usize, n: usize) -> Result<Vec<Vec<i32>>> {
+    if let Some(p) = args.get("prompt") {
+        let toks: Vec<i32> = p
+            .split(',')
+            .map(|s| s.trim().parse::<i32>().map_err(|_| anyhow!("bad prompt token {s:?}")))
+            .collect::<Result<_>>()?;
+        return Ok(vec![toks; n]);
+    }
+    let plen = args.usize_or("prompt-len", 8)?.max(1);
+    let mut it = qpretrain::data::BatchIter::new(
+        qpretrain::data::CorpusCfg::train_default(vocab),
+        1,
+        plen,
+    );
+    Ok((0..n)
+        .map(|i| {
+            let b = it.next_batch();
+            b.x[..1 + i % plen].to_vec()
+        })
+        .collect())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    use qpretrain::serve::{Engine, ServeCfg};
+    let rt = Runtime::open_default()?;
+    let (model, state, recipe) = serve_state(args, &rt)?;
+    let prompt = serve_prompts(args, model.vocab, 1)?.remove(0);
+    let mut eng = Engine::new(
+        &model,
+        &state.params,
+        &recipe,
+        ServeCfg::new(1, args.usize_or("max-seq", model.seq)?),
+    )?;
+    let t0 = std::time::Instant::now();
+    let toks = eng.generate(
+        &prompt,
+        args.usize_or("max-new", 32)?,
+        sampler_from(args)?,
+        args.u64_or("gen-seed", 7)?,
+    )?;
+    let dt = t0.elapsed().as_secs_f64();
+    let fmt = |v: &[i32]| v.iter().map(i32::to_string).collect::<Vec<_>>().join(",");
+    println!("prompt  ({:>3} toks): {}", prompt.len(), fmt(&prompt));
+    println!("decoded ({:>3} toks): {}", toks.len(), fmt(&toks));
+    println!(
+        "{} packed linears resident; {:.1} tokens/s",
+        eng.packed_linears(),
+        toks.len() as f64 / dt.max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use qpretrain::serve::{Engine, Request, ServeCfg};
+    let rt = Runtime::open_default()?;
+    let (model, state, recipe) = serve_state(args, &rt)?;
+    let n = args.usize_or("requests", 8)?.max(1);
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let sampler = sampler_from(args)?;
+    let base_seed = args.u64_or("gen-seed", 7)?;
+    let reqs: Vec<Request> = serve_prompts(args, model.vocab, n)?
+        .into_iter()
+        .enumerate()
+        .map(|(i, prompt)| Request {
+            prompt,
+            max_new,
+            sampler,
+            seed: base_seed.wrapping_add(i as u64),
+        })
+        .collect();
+    let mut eng = Engine::new(
+        &model,
+        &state.params,
+        &recipe,
+        ServeCfg::new(max_batch, args.usize_or("max-seq", model.seq)?),
+    )?;
+    let (done, stats) = eng.run(&reqs)?;
+    for c in &done {
+        println!(
+            "req {:>3}: prompt {:>3} -> {:>3} new toks, {:>3} steps, ttft {:.2} ms",
+            c.id,
+            c.prompt_len,
+            c.generated.len(),
+            c.steps,
+            c.ttft_secs * 1e3
+        );
+    }
+    println!(
+        "{} reqs in {} decode steps; peak batch {}/{}, occupancy {:.2}",
+        done.len(),
+        stats.steps,
+        stats.peak_batch,
+        max_batch,
+        stats.occupancy
+    );
+    println!(
+        "{:.1} tokens/s over {:.2}s ({} packed linears resident)",
+        stats.tokens_out as f64 / stats.wall_secs.max(1e-9),
+        stats.wall_secs,
+        eng.packed_linears()
+    );
+    Ok(())
+}
+
 /// Runtime validation: the native executor against the rust quant oracle,
 /// plus an end-to-end learning check. (Cross-language bit-exactness is
 /// covered by `rust/tests/golden.rs` over the committed fixtures.)
@@ -531,10 +697,51 @@ fn cmd_digest(args: &Args) -> Result<()> {
             ("v_fnv", json::s(&state_hash(&r.final_state.v))),
         ]));
     }
+    // serve-engine generate digest: greedy + top-k token streams and the
+    // FNV of the KV-cached per-step logits from a fixed random init, under
+    // the fp32 and int8-dispatched forward recipes. Like the train runs,
+    // these are bit-stable across threads / SIMD / int8 legs (KV decode is
+    // bitwise-equal to the full forward, and at micro dims the f32 fold of
+    // the integer code products is exact).
+    let mut gens = Vec::new();
+    {
+        use qpretrain::serve::{Engine, Sampler, ServeCfg};
+        let model = rt.model("micro")?.clone();
+        let state = qpretrain::model::init_state(&model, 2024);
+        let prompt: Vec<i32> = (1..=4).collect();
+        for spec in ["base", "w8a8"] {
+            let recipe = QuantRecipe::parse(spec)?;
+            let mut eng = Engine::new(&model, &state.params, &recipe, ServeCfg::new(4, 32))?;
+            let greedy = eng.generate(&prompt, 12, Sampler::Greedy, 7)?;
+            let sampled = eng.generate(
+                &prompt,
+                12,
+                Sampler::TopK {
+                    temperature: 0.9,
+                    k: 8,
+                },
+                7,
+            )?;
+            let logits = eng.decode_logits(&prompt)?;
+            let toks =
+                |v: &[i32]| Value::Arr(v.iter().map(|&t| json::num(t as f64)).collect());
+            gens.push(json::obj(vec![
+                ("recipe", json::s(spec)),
+                ("greedy", toks(&greedy)),
+                ("sampled", toks(&sampled)),
+                (
+                    "logits_fnv",
+                    json::s(&format!("{:016x}", qpretrain::util::fnv1a64_f32(&logits))),
+                ),
+            ]));
+        }
+    }
+
     let digest = json::obj(vec![
         ("model", json::s("micro")),
         ("steps", json::num(steps as f64)),
         ("runs", Value::Arr(runs)),
+        ("generate", Value::Arr(gens)),
     ]);
     std::fs::write(&out, digest.to_json())?;
     println!("wrote {out} (byte-diffable across threads/simd/int8 CI legs)");
@@ -565,7 +772,13 @@ fn cmd_list(_args: &Args) -> Result<()> {
                 g8_ptok_actgrad       8-bit grads incl. the dx path (Fig. 10)
                 m2_8_pc               8-bit per-channel Adam second moment
                 w8a8 / w8a8g8         combined short labels (paper Fig. 13)
-                w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc   full combined recipe"
+                w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc   full combined recipe
+
+  serve eligibility (generate/serve): any weight policy serves; activations
+  must be per-token (a*_ptok[_asym]) or unquantized. Per-tensor/per-channel
+  activation scales are whole-batch amax statistics, which KV-cached
+  incremental decode cannot reproduce row-locally, so those recipes are
+  rejected by the serve engine (train-time recipes are unaffected)."
     );
     println!(
         "legacy structure aliases: {}",

@@ -1,0 +1,762 @@
+//! Batched quantized inference: KV-cached decode + continuous batching.
+//!
+//! The deployment half of the paper's story — a checkpoint pre-trained
+//! with w8a8(g8) serves from **packed-int8 weights resident in memory**
+//! with no extra calibration (the PreQuant-style PTQ-for-inference path):
+//!
+//! * **Resident weights** — every block linear is quantized exactly once
+//!   at engine construction ([`native::pack_resident_weight`]): packed i8
+//!   codes on the [`native::int8_structure`] path, fake-quantized f32
+//!   otherwise. Because packing is a deterministic function of weights and
+//!   policy, load-time packing is bit-identical to the training forward's
+//!   pack-per-step.
+//! * **KV-cached decode** — each session owns per-layer K/V buffers sized
+//!   by the `max_seq` budget (recycled through a slab pool as sessions
+//!   retire). A decode step runs every forward op on the new token rows
+//!   only and attends over the cached keys ([`kernels::decode_attn`])
+//!   instead of re-forwarding the full context.
+//! * **Continuous batching** — a scheduler admits and retires sessions
+//!   *per decode step*, so ragged-length concurrent requests share one
+//!   batched GEMM per linear instead of padding to the longest request.
+//! * **Sampling** — greedy argmax plus temperature/top-k driven by
+//!   [`util::rng`](crate::util::rng), so any generation replays
+//!   deterministically from its seed.
+//!
+//! **Why decode is bitwise-equal to the full re-forward** (pinned by
+//! `tests/serve.rs`): every op in the forward graph is row-local —
+//! LayerNorm, bias, GELU, residual adds, and the logits dot-products work
+//! row by row; per-token activation quantization scales each row from its
+//! own amax ([`QuantRecipe::serve_forward`] rejects batch-statistic
+//! activation policies up front); and the GEMM kernels compute each output
+//! row on the same ascending-`k` lane tree at any row count. Attention row
+//! `i` of the full causal tile is a max/exp/sum over exactly the first
+//! `i + 1` keys — precisely what [`kernels::decode_attn`] computes from
+//! the cache, using the same `math::matmul_nt` / `softmax_row` /
+//! `math::matmul` building blocks. The same row-locality makes a batched
+//! decode step bit-identical to the same sessions stepped one at a time,
+//! which is what lets the scheduler re-batch freely.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::backend::kernels::{self, bias_add, gelu, layer_norm_fwd, matmul_nt, par_chunks_mut};
+use crate::backend::native::{
+    self, pack_resident_weight, resident_linear, resident_linear_acc, ResidentWeight,
+};
+use crate::config::{QuantRecipe, TensorPolicy};
+use crate::runtime::ModelInfo;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// sampling
+// ---------------------------------------------------------------------------
+
+/// Token-selection policy for one generation request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampler {
+    /// Argmax over the logits; ties break to the lowest token id, so the
+    /// result is exact and thread/SIMD-invariant.
+    Greedy,
+    /// Temperature softmax over the `k` highest logits (`k == 0` keeps the
+    /// whole vocabulary). `temperature <= 0` degenerates to greedy.
+    TopK { temperature: f32, k: usize },
+}
+
+/// Sample one token id from a logits row. Deterministic given the rng
+/// state: candidates are ordered by (logit desc, id asc) — a total order,
+/// so equal logits cannot reorder across platforms — and the inverse-CDF
+/// walk accumulates in f64 in that fixed order.
+pub fn sample_token(logits: &[f32], sampler: Sampler, rng: &mut Rng) -> i32 {
+    let greedy = || {
+        let mut best = 0usize;
+        for (i, &l) in logits.iter().enumerate() {
+            if l > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    };
+    match sampler {
+        Sampler::Greedy => greedy(),
+        Sampler::TopK { temperature, k } => {
+            if temperature <= 0.0 {
+                return greedy();
+            }
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| {
+                logits[b]
+                    .partial_cmp(&logits[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let keep = if k == 0 { idx.len() } else { k.min(idx.len()) };
+            let top = &idx[..keep];
+            let mx = logits[top[0]] as f64;
+            let t = temperature as f64;
+            let weights: Vec<f64> =
+                top.iter().map(|&i| ((logits[i] as f64 - mx) / t).exp()).collect();
+            let total: f64 = weights.iter().sum();
+            let mut u = rng.f64() * total;
+            for (w, &i) in weights.iter().zip(top) {
+                u -= w;
+                if u <= 0.0 {
+                    return i as i32;
+                }
+            }
+            top[keep - 1] as i32 // float round-off fell off the end
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine
+// ---------------------------------------------------------------------------
+
+/// Scheduler budget: how many sessions share one batched decode step, and
+/// the per-session context budget (clamped to the model's learned
+/// positional-embedding length).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeCfg {
+    pub max_batch: usize,
+    pub max_seq: usize,
+}
+
+impl ServeCfg {
+    pub fn new(max_batch: usize, max_seq: usize) -> ServeCfg {
+        ServeCfg { max_batch, max_seq }
+    }
+}
+
+/// One generation request: prompt token ids, generation budget, sampling
+/// policy and the per-request rng seed (replays are deterministic).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub sampler: Sampler,
+    pub seed: u64,
+}
+
+/// A finished request, in the order requests were submitted.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    /// Wall seconds from admission to the first sampled token (prefill
+    /// latency).
+    pub ttft_secs: f64,
+    /// Decode steps this session consumed (prefill + generation).
+    pub steps: usize,
+}
+
+/// Aggregate scheduler statistics for one [`Engine::run`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    /// Batched decode steps executed.
+    pub steps: usize,
+    /// Session-rows decoded across all steps.
+    pub rows: usize,
+    /// Largest number of sessions sharing one step.
+    pub peak_batch: usize,
+    /// `rows / (steps * max_batch)` — how full the batch slots ran.
+    pub occupancy: f64,
+    /// Tokens sampled (sum of `generated` lengths).
+    pub tokens_out: usize,
+    pub wall_secs: f64,
+}
+
+/// Per-layer resident weights (quantized once at construction) plus the
+/// fp32 norm/bias parameters.
+struct LayerWeights {
+    ln1_w: Vec<f32>,
+    ln1_b: Vec<f32>,
+    qkv: ResidentWeight,
+    qkv_b: Vec<f32>,
+    proj: ResidentWeight,
+    proj_b: Vec<f32>,
+    ln2_w: Vec<f32>,
+    ln2_b: Vec<f32>,
+    fc1: ResidentWeight,
+    fc1_b: Vec<f32>,
+    fc2: ResidentWeight,
+    fc2_b: Vec<f32>,
+}
+
+/// One session's K/V storage: per (layer, head) rings of `cap` positions
+/// by `hd` lanes, laid out `[(layer * h + head) * cap + pos] * hd`.
+/// Recycled through the engine's slab pool when the session retires.
+struct KvSlab {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+struct Session {
+    id: usize,
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    max_new: usize,
+    generated: usize,
+    /// Tokens already fed through the model (== cached KV positions).
+    fed: usize,
+    sampler: Sampler,
+    rng: Rng,
+    kv: KvSlab,
+    admitted: Instant,
+    ttft: Option<f64>,
+    steps: usize,
+    done: bool,
+}
+
+/// The batched quantized inference engine: resident weights + KV slab pool
+/// + the continuous-batching scheduler.
+pub struct Engine {
+    model: ModelInfo,
+    /// Activation policy of the serve-eligible forward recipe.
+    acts: Option<TensorPolicy>,
+    wte: Vec<f32>,
+    wpe: Vec<f32>,
+    lnf_w: Vec<f32>,
+    lnf_b: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    cfg: ServeCfg,
+    /// Effective per-session context budget: `min(cfg.max_seq, model.seq)`
+    /// (the learned positional table bounds addressable positions).
+    cap: usize,
+    /// Retired sessions' K/V slabs, reused before allocating new ones.
+    pool: Vec<KvSlab>,
+}
+
+impl Engine {
+    /// Build an engine from a checkpoint's parameters: derives the
+    /// serve-eligible forward recipe ([`QuantRecipe::serve_forward`]) and
+    /// quantizes every block linear into its resident form **once**.
+    pub fn new(
+        model: &ModelInfo,
+        params: &[Vec<f32>],
+        recipe: &QuantRecipe,
+        cfg: ServeCfg,
+    ) -> Result<Engine> {
+        let fwd = recipe.serve_forward()?;
+        if params.len() != native::N_PARAM_TENSORS {
+            bail!(
+                "{}: expected {} parameter tensors, got {}",
+                model.name,
+                native::N_PARAM_TENSORS,
+                params.len()
+            );
+        }
+        for (info, p) in model.params.iter().zip(params.iter()) {
+            if p.len() != info.elems() {
+                bail!(
+                    "{}: parameter {} has {} elements, expected {}",
+                    model.name,
+                    info.name,
+                    p.len(),
+                    info.elems()
+                );
+            }
+        }
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be at least 1");
+        }
+        let cap = cfg.max_seq.clamp(1, model.seq);
+        let (d, f) = (model.d_model, model.d_ff);
+        let sl = |p: &[f32], l: usize, n: usize| p[l * n..(l + 1) * n].to_vec();
+        let layers = (0..model.n_layer)
+            .map(|l| LayerWeights {
+                ln1_w: sl(&params[native::LN1_W], l, d),
+                ln1_b: sl(&params[native::LN1_B], l, d),
+                qkv: pack_resident_weight(
+                    &params[native::QKV_W][l * d * 3 * d..(l + 1) * d * 3 * d],
+                    d,
+                    3 * d,
+                    &fwd,
+                ),
+                qkv_b: sl(&params[native::QKV_B], l, 3 * d),
+                proj: pack_resident_weight(
+                    &params[native::PROJ_W][l * d * d..(l + 1) * d * d],
+                    d,
+                    d,
+                    &fwd,
+                ),
+                proj_b: sl(&params[native::PROJ_B], l, d),
+                ln2_w: sl(&params[native::LN2_W], l, d),
+                ln2_b: sl(&params[native::LN2_B], l, d),
+                fc1: pack_resident_weight(
+                    &params[native::FC1_W][l * d * f..(l + 1) * d * f],
+                    d,
+                    f,
+                    &fwd,
+                ),
+                fc1_b: sl(&params[native::FC1_B], l, f),
+                fc2: pack_resident_weight(
+                    &params[native::FC2_W][l * f * d..(l + 1) * f * d],
+                    f,
+                    d,
+                    &fwd,
+                ),
+                fc2_b: sl(&params[native::FC2_B], l, d),
+            })
+            .collect();
+        Ok(Engine {
+            model: model.clone(),
+            acts: fwd.acts,
+            wte: params[native::WTE].clone(),
+            wpe: params[native::WPE].clone(),
+            lnf_w: params[native::LNF_W].clone(),
+            lnf_b: params[native::LNF_B].clone(),
+            layers,
+            cfg,
+            cap,
+            pool: Vec::new(),
+        })
+    }
+
+    /// Number of block linears resident as packed i8 codes (4 per layer on
+    /// the int8-structured path, 0 on the f32 path).
+    pub fn packed_linears(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|lw| [&lw.qkv, &lw.proj, &lw.fc1, &lw.fc2])
+            .filter(|w| w.is_packed())
+            .count()
+    }
+
+    /// Effective per-session context budget.
+    pub fn context_budget(&self) -> usize {
+        self.cap
+    }
+
+    fn take_slab(&mut self) -> KvSlab {
+        self.pool.pop().unwrap_or_else(|| {
+            let n = self.model.n_layer * self.model.d_model * self.cap;
+            KvSlab {
+                k: vec![0.0f32; n],
+                v: vec![0.0f32; n],
+            }
+        })
+    }
+
+    fn admit(&mut self, id: usize, req: &Request) -> Result<Session> {
+        if req.prompt.is_empty() {
+            bail!("request {id}: empty prompt");
+        }
+        if req.prompt.len() > self.cap {
+            bail!(
+                "request {id}: prompt length {} exceeds the context budget {}",
+                req.prompt.len(),
+                self.cap
+            );
+        }
+        for &tok in &req.prompt {
+            if tok < 0 || tok as usize >= self.model.vocab {
+                bail!(
+                    "request {id}: token id {tok} out of vocab range 0..{}",
+                    self.model.vocab
+                );
+            }
+        }
+        Ok(Session {
+            id,
+            tokens: req.prompt.clone(),
+            prompt_len: req.prompt.len(),
+            max_new: req.max_new,
+            generated: 0,
+            fed: 0,
+            sampler: req.sampler,
+            rng: Rng::new(req.seed),
+            kv: self.take_slab(),
+            admitted: Instant::now(),
+            ttft: None,
+            steps: 0,
+            done: false,
+        })
+    }
+
+    /// One batched decode step over the active sessions: feed each
+    /// session's next token at its own position, append K/V to its cache,
+    /// and return the logits rows `(sessions, vocab)` in session order.
+    fn decode_rows(&self, active: &mut [Session]) -> Vec<f32> {
+        let m = &self.model;
+        let (d, f, h, v) = (m.d_model, m.d_ff, m.n_head, m.vocab);
+        let hd = d / h;
+        let rows = active.len();
+        let inv_sqrt_hd = 1.0f32 / (hd as f32).sqrt();
+
+        // embeddings: x[r] = wte[token] + wpe[position] (row-local gather,
+        // value-identical to the full forward's row-parallel embed)
+        let mut x = vec![0.0f32; rows * d];
+        for (ri, sess) in active.iter().enumerate() {
+            let tok = sess.tokens[sess.fed] as usize;
+            let wte_row = &self.wte[tok * d..(tok + 1) * d];
+            let wpe_row = &self.wpe[sess.fed * d..(sess.fed + 1) * d];
+            let dst = &mut x[ri * d..(ri + 1) * d];
+            for c in 0..d {
+                dst[c] = wte_row[c] + wpe_row[c];
+            }
+        }
+
+        let ring = self.cap * hd; // one (layer, head) ring in the slab
+        for (l, lw) in self.layers.iter().enumerate() {
+            // --- attention ---
+            let (a, _, _) = layer_norm_fwd(&x, &lw.ln1_w, &lw.ln1_b, rows, d);
+            let mut qkv = resident_linear(a, &lw.qkv, rows, d, 3 * d, self.acts);
+            bias_add(&mut qkv, &lw.qkv_b, rows, 3 * d);
+
+            // append this step's K/V head rows to each session's rings
+            for (ri, sess) in active.iter_mut().enumerate() {
+                let row = &qkv[ri * 3 * d..(ri + 1) * 3 * d];
+                for hh in 0..h {
+                    let o = (l * h + hh) * ring + sess.fed * hd;
+                    sess.kv.k[o..o + hd].copy_from_slice(&row[d + hh * hd..d + (hh + 1) * hd]);
+                    sess.kv.v[o..o + hd]
+                        .copy_from_slice(&row[2 * d + hh * hd..2 * d + (hh + 1) * hd]);
+                }
+            }
+
+            // incremental attention over the cached prefix, parallel over
+            // (session, head) pairs — each pair is an independent
+            // `decode_attn` call on the serial reference kernels, so the
+            // schedule never affects values
+            let kv_refs: Vec<(&[f32], &[f32], usize)> = active
+                .iter()
+                .map(|s| (s.kv.k.as_slice(), s.kv.v.as_slice(), s.fed + 1))
+                .collect();
+            let mut ctx = vec![0.0f32; rows * d];
+            let max_len = kv_refs.iter().map(|r| r.2).max().unwrap_or(1);
+            par_chunks_mut(&mut ctx, hd, 4 * max_len * hd, |pairs, cc| {
+                for (ci, pair) in pairs.clone().enumerate() {
+                    let (ri, hh) = (pair / h, pair % h);
+                    let (ks, vs, len) = kv_refs[ri];
+                    let o = (l * h + hh) * ring;
+                    let q = &qkv[ri * 3 * d + hh * hd..ri * 3 * d + (hh + 1) * hd];
+                    kernels::decode_attn(
+                        q,
+                        &ks[o..o + len * hd],
+                        &vs[o..o + len * hd],
+                        len,
+                        hd,
+                        inv_sqrt_hd,
+                        &mut cc[ci * hd..(ci + 1) * hd],
+                    );
+                }
+            });
+
+            let mut h2 = x.clone();
+            resident_linear_acc(&ctx, &lw.proj, rows, d, d, self.acts, &mut h2);
+            bias_add(&mut h2, &lw.proj_b, rows, d);
+
+            // --- MLP ---
+            let (mm, _, _) = layer_norm_fwd(&h2, &lw.ln2_w, &lw.ln2_b, rows, d);
+            let mut u = resident_linear(mm, &lw.fc1, rows, d, f, self.acts);
+            bias_add(&mut u, &lw.fc1_b, rows, f);
+            let g = gelu(&u);
+            let mut hout = h2.clone();
+            resident_linear_acc(&g, &lw.fc2, rows, f, d, self.acts, &mut hout);
+            bias_add(&mut hout, &lw.fc2_b, rows, d);
+            x = hout;
+        }
+
+        let (hf, _, _) = layer_norm_fwd(&x, &self.lnf_w, &self.lnf_b, rows, d);
+        matmul_nt(&hf, &self.wte, rows, d, v)
+    }
+
+    /// Run a set of requests to completion under continuous batching:
+    /// every decode step re-fills the batch from the waiting queue, so a
+    /// short request retiring immediately frees its slot (and K/V slab)
+    /// for the next one. Completions return in request order. Token
+    /// streams are identical at any `max_batch`, including 1 — batching is
+    /// a throughput decision, never a results decision.
+    pub fn run(&mut self, reqs: &[Request]) -> Result<(Vec<Completion>, ServeStats)> {
+        let t0 = Instant::now();
+        let mut queue: VecDeque<usize> = (0..reqs.len()).collect();
+        let mut active: Vec<Session> = Vec::new();
+        let mut out: Vec<Option<Completion>> = vec![None; reqs.len()];
+        let mut stats = ServeStats::default();
+
+        while !queue.is_empty() || !active.is_empty() {
+            while active.len() < self.cfg.max_batch {
+                let Some(id) = queue.pop_front() else { break };
+                active.push(self.admit(id, &reqs[id])?);
+            }
+            let logits = self.decode_rows(&mut active);
+            stats.steps += 1;
+            stats.rows += active.len();
+            stats.peak_batch = stats.peak_batch.max(active.len());
+
+            let v = self.model.vocab;
+            for (ri, sess) in active.iter_mut().enumerate() {
+                sess.fed += 1;
+                sess.steps += 1;
+                // prefill rows (fed < prompt_len) discard their logits;
+                // once every token is consumed, this row's logits predict
+                // the next position
+                if sess.fed == sess.tokens.len() && sess.generated < sess.max_new {
+                    let row = &logits[ri * v..(ri + 1) * v];
+                    let tok = sample_token(row, sess.sampler, &mut sess.rng);
+                    sess.tokens.push(tok);
+                    sess.generated += 1;
+                    sess.ttft
+                        .get_or_insert_with(|| sess.admitted.elapsed().as_secs_f64());
+                }
+                // retire when the budget is spent or the context is full
+                // (no further position can be fed)
+                sess.done = sess.generated == sess.max_new || sess.fed == self.cap;
+            }
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].done {
+                    let sess = active.swap_remove(i);
+                    stats.tokens_out += sess.generated;
+                    out[sess.id] = Some(Completion {
+                        id: sess.id,
+                        prompt_len: sess.prompt_len,
+                        generated: sess.tokens[sess.prompt_len..].to_vec(),
+                        ttft_secs: sess.ttft.unwrap_or_default(),
+                        steps: sess.steps,
+                    });
+                    self.pool.push(sess.kv);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        stats.occupancy = if stats.steps == 0 {
+            0.0
+        } else {
+            stats.rows as f64 / (stats.steps * self.cfg.max_batch) as f64
+        };
+        Ok((
+            out.into_iter()
+                .map(|c| c.expect("every request completes"))
+                .collect(),
+            stats,
+        ))
+    }
+
+    /// Single-request convenience wrapper over [`Engine::run`].
+    pub fn generate(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        sampler: Sampler,
+        seed: u64,
+    ) -> Result<Vec<i32>> {
+        let (mut done, _) = self.run(&[Request {
+            prompt: prompt.to_vec(),
+            max_new,
+            sampler,
+            seed,
+        }])?;
+        Ok(done.remove(0).generated)
+    }
+
+    /// KV-cached scoring of a fixed sequence: feed `tokens` one position
+    /// per step and return every step's logits row `(len, vocab)`. This is
+    /// the decode side of the bitwise equivalence proofs — row `s` must
+    /// equal row `s` of [`native::forward_logits`] over the same sequence.
+    pub fn decode_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.is_empty() || tokens.len() > self.cap {
+            bail!(
+                "decode_logits: sequence length {} outside 1..={}",
+                tokens.len(),
+                self.cap
+            );
+        }
+        let req = Request {
+            prompt: tokens.to_vec(),
+            max_new: 0,
+            sampler: Sampler::Greedy,
+            seed: 0,
+        };
+        let mut sess = vec![self.admit(usize::MAX, &req)?];
+        let v = self.model.vocab;
+        let mut out = Vec::with_capacity(tokens.len() * v);
+        for _ in 0..tokens.len() {
+            let logits = self.decode_rows(&mut sess);
+            debug_assert_eq!(logits.len(), v);
+            out.extend_from_slice(&logits);
+            sess[0].fed += 1;
+        }
+        self.pool.push(sess.remove(0).kv);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{forward_logits, model_info};
+    use crate::model::init_state;
+
+    fn tiny() -> ModelInfo {
+        model_info("tt", 2, 16, 2, 32, 8, 2)
+    }
+
+    #[test]
+    fn sampler_greedy_is_argmax_lowest_tie() {
+        let mut rng = Rng::new(1);
+        let logits = [0.25f32, 1.5, 1.5, -0.5];
+        assert_eq!(sample_token(&logits, Sampler::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampler_topk_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| ((i * 7) % 5) as f32 * 0.3).collect();
+        let s = Sampler::TopK {
+            temperature: 0.8,
+            k: 4,
+        };
+        let draw = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| sample_token(&logits, s, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(9), draw(9));
+        assert_ne!(draw(9), draw(10));
+        // k = 4 keeps only the four highest logits
+        let top: Vec<i32> = draw(3);
+        for t in top {
+            assert!(logits[t as usize] >= 0.9, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn rejects_batch_statistic_act_recipes() {
+        let model = tiny();
+        let st = init_state(&model, 1);
+        let bad = QuantRecipe::parse("w8_pc+a8_pt").unwrap();
+        assert!(Engine::new(&model, &st.params, &bad, ServeCfg::new(4, 8)).is_err());
+        let good = QuantRecipe::parse("w8a8").unwrap();
+        assert!(Engine::new(&model, &st.params, &good, ServeCfg::new(4, 8)).is_ok());
+    }
+
+    #[test]
+    fn w8a8_engine_keeps_weights_packed() {
+        let model = tiny();
+        let st = init_state(&model, 2);
+        let quant = Engine::new(
+            &model,
+            &st.params,
+            &QuantRecipe::parse("w8a8").unwrap(),
+            ServeCfg::new(2, 8),
+        )
+        .unwrap();
+        assert_eq!(quant.packed_linears(), 4 * model.n_layer);
+        let base = Engine::new(
+            &model,
+            &st.params,
+            &QuantRecipe::none(),
+            ServeCfg::new(2, 8),
+        )
+        .unwrap();
+        assert_eq!(base.packed_linears(), 0);
+    }
+
+    #[test]
+    fn decode_matches_full_forward_smoke() {
+        // the deep thread/simd matrix lives in tests/serve.rs; this is the
+        // in-module smoke version
+        let model = tiny();
+        let st = init_state(&model, 3);
+        let recipe = QuantRecipe::parse("w8a8").unwrap();
+        let mut rng = Rng::new(7);
+        let x: Vec<i32> = (0..model.batch * model.seq)
+            .map(|_| rng.below(model.vocab) as i32)
+            .collect();
+        let full = forward_logits(&model, &st.params, &x, &recipe.forward_only()).unwrap();
+        let mut eng =
+            Engine::new(&model, &st.params, &recipe, ServeCfg::new(2, model.seq)).unwrap();
+        let t = model.seq;
+        for b in 0..model.batch {
+            let seq = &x[b * t..(b + 1) * t];
+            let dec = eng.decode_logits(seq).unwrap();
+            assert_eq!(dec, full[b * t * model.vocab..(b + 1) * t * model.vocab]);
+        }
+    }
+
+    #[test]
+    fn batched_equals_sequential() {
+        let model = tiny();
+        let st = init_state(&model, 5);
+        let recipe = QuantRecipe::parse("w8a8").unwrap();
+        let mut rng = Rng::new(11);
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| Request {
+                prompt: (0..rng.range(1, 5)).map(|_| rng.below(model.vocab) as i32).collect(),
+                max_new: 3 + i % 3,
+                sampler: if i % 2 == 0 {
+                    Sampler::Greedy
+                } else {
+                    Sampler::TopK {
+                        temperature: 0.9,
+                        k: 8,
+                    }
+                },
+                seed: 100 + i as u64,
+            })
+            .collect();
+        let mut batched =
+            Engine::new(&model, &st.params, &recipe, ServeCfg::new(4, model.seq)).unwrap();
+        let (bc, bstats) = batched.run(&reqs).unwrap();
+        let mut seq =
+            Engine::new(&model, &st.params, &recipe, ServeCfg::new(1, model.seq)).unwrap();
+        let (sc, _) = seq.run(&reqs).unwrap();
+        for (b, s) in bc.iter().zip(&sc) {
+            assert_eq!(b.generated, s.generated, "request {}", b.id);
+        }
+        assert!(bstats.peak_batch >= 4, "peak batch {}", bstats.peak_batch);
+        assert!(bstats.steps < sc.iter().map(|c| c.steps).sum::<usize>());
+    }
+
+    #[test]
+    fn slabs_recycle_across_requests() {
+        let model = tiny();
+        let st = init_state(&model, 6);
+        let mut eng = Engine::new(
+            &model,
+            &st.params,
+            &QuantRecipe::none(),
+            ServeCfg::new(2, model.seq),
+        )
+        .unwrap();
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request {
+                prompt: vec![(i % 8) as i32],
+                max_new: 2,
+                sampler: Sampler::Greedy,
+                seed: i as u64,
+            })
+            .collect();
+        eng.run(&reqs).unwrap();
+        // at most max_batch slabs were ever alive
+        assert!(eng.pool.len() <= 2, "pool grew to {}", eng.pool.len());
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let model = tiny();
+        let st = init_state(&model, 1);
+        let mut eng = Engine::new(
+            &model,
+            &st.params,
+            &QuantRecipe::none(),
+            ServeCfg::new(2, 4),
+        )
+        .unwrap();
+        let bad = |prompt: Vec<i32>| Request {
+            prompt,
+            max_new: 1,
+            sampler: Sampler::Greedy,
+            seed: 0,
+        };
+        assert!(eng.run(&[bad(vec![])]).is_err());
+        assert!(eng.run(&[bad(vec![model.vocab as i32])]).is_err());
+        assert!(eng.run(&[bad(vec![-1])]).is_err());
+        assert!(eng.run(&[bad(vec![0; 5])]).is_err()); // beyond max_seq 4
+    }
+}

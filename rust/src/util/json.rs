@@ -161,6 +161,7 @@ pub fn parse(input: &str) -> Result<Value> {
     let mut p = Parser {
         bytes: input.as_bytes(),
         pos: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -171,9 +172,16 @@ pub fn parse(input: &str) -> Result<Value> {
     Ok(v)
 }
 
+/// Recursion ceiling for nested containers. The parser is recursive-descent,
+/// so a pathological `[[[[…` input would otherwise overflow the stack
+/// (abort, not `Err`) — found by the byte-mutation fuzz loop in
+/// `tests/fuzz.rs`. Real run-dir artifacts nest a handful of levels.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -204,8 +212,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Value> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Parser::object),
+            Some(b'[') => self.nested(Parser::array),
             Some(b'"') => Ok(Value::Str(self.string()?)),
             Some(b't') => self.lit("true", Value::Bool(true)),
             Some(b'f') => self.lit("false", Value::Bool(false)),
@@ -213,6 +221,16 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
         }
+    }
+
+    fn nested(&mut self, inner: fn(&mut Parser<'a>) -> Result<Value>) -> Result<Value> {
+        if self.depth >= MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos);
+        }
+        self.depth += 1;
+        let v = inner(self);
+        self.depth -= 1;
+        v
     }
 
     fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
@@ -382,6 +400,18 @@ mod tests {
         assert!(parse("[1 2]").is_err());
         assert!(parse("{\"a\": }").is_err());
         assert!(parse("123abc").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // 1<<16 opens would blow the thread stack without the depth ceiling
+        let deep = "[".repeat(1 << 16);
+        assert!(parse(&deep).is_err());
+        let deep_obj = "{\"k\":".repeat(1 << 16);
+        assert!(parse(&deep_obj).is_err());
+        // ... while reasonable nesting still parses
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(parse(&ok).is_ok());
     }
 
     #[test]

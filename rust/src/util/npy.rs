@@ -38,14 +38,29 @@ pub fn parse_f32(buf: &[u8]) -> Result<NpyArray> {
     }
     let (major, _minor) = (buf[6], buf[7]);
     let (hdr_len, hdr_start) = if major == 1 {
+        // the >= 10 check above already covers the two u16 length bytes
         (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10)
     } else {
+        // v2.0+ uses a u32 header length: four bytes at offset 8, so a
+        // 10- or 11-byte file must error, not index out of bounds
+        if buf.len() < 12 {
+            bail!("truncated npy v{major} header: {} bytes", buf.len());
+        }
         (
             u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
             12,
         )
     };
-    let header = std::str::from_utf8(&buf[hdr_start..hdr_start + hdr_len])?;
+    let hdr_end = hdr_start
+        .checked_add(hdr_len)
+        .filter(|&e| e <= buf.len())
+        .ok_or_else(|| {
+            anyhow!(
+                "truncated npy header: {hdr_start} + {hdr_len} exceeds {} bytes",
+                buf.len()
+            )
+        })?;
+    let header = std::str::from_utf8(&buf[hdr_start..hdr_end])?;
     if !header.contains("'descr': '<f4'") && !header.contains("\"descr\": \"<f4\"") {
         bail!("only little-endian f32 supported (header: {header})");
     }
@@ -53,12 +68,20 @@ pub fn parse_f32(buf: &[u8]) -> Result<NpyArray> {
         bail!("fortran order not supported");
     }
     let shape = parse_shape(header)?;
-    let n: usize = shape.iter().product();
-    let body = &buf[hdr_start + hdr_len..];
-    if body.len() < n * 4 {
-        bail!("truncated npy body: {} < {}", body.len(), n * 4);
+    // checked arithmetic: a fuzzed header can claim shapes whose product
+    // (or byte count) overflows usize, which would panic in debug builds
+    let n = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow!("npy shape {shape:?} overflows usize"))?;
+    let nbytes = n
+        .checked_mul(4)
+        .ok_or_else(|| anyhow!("npy byte count for shape {shape:?} overflows usize"))?;
+    let body = &buf[hdr_end..];
+    if body.len() < nbytes {
+        bail!("truncated npy body: {} < {}", body.len(), nbytes);
     }
-    let data: Vec<f32> = body[..n * 4]
+    let data: Vec<f32> = body[..nbytes]
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect();
@@ -141,5 +164,45 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(parse_f32(b"not npy at all").is_err());
+    }
+
+    #[test]
+    fn truncated_headers_error_not_panic() {
+        // v2.0 magic+version with only 2 of the 4 u32 length bytes: used to
+        // index buf[10]/buf[11] out of bounds
+        let mut v2 = Vec::from(MAGIC);
+        v2.extend_from_slice(&[2, 0, 0x10, 0x00]); // 10 bytes total
+        assert!(parse_f32(&v2).is_err());
+        v2.push(0x00); // 11 bytes
+        assert!(parse_f32(&v2).is_err());
+
+        // v1.0 with a header length that runs past the end of the buffer
+        let mut v1 = Vec::from(MAGIC);
+        v1.extend_from_slice(&[1, 0]);
+        v1.extend_from_slice(&u16::MAX.to_le_bytes());
+        v1.extend_from_slice(b"{'descr'");
+        assert!(parse_f32(&v1).is_err());
+
+        // v2.0 with a u32 header length near usize::MAX: hdr_start + hdr_len
+        // must use checked arithmetic
+        let mut big = Vec::from(MAGIC);
+        big.extend_from_slice(&[2, 0]);
+        big.extend_from_slice(&u32::MAX.to_le_bytes());
+        big.extend_from_slice(b"{}");
+        assert!(parse_f32(&big).is_err());
+    }
+
+    #[test]
+    fn oversized_shape_errors_not_panics() {
+        // header claims more elements than the body holds (and a product
+        // that would overflow a u32-ish budget) -> Err, never a panic
+        let hdr = "{'descr': '<f4', 'fortran_order': False, \
+                   'shape': (18446744073709551615, 4), }\n";
+        let mut buf = Vec::from(MAGIC);
+        buf.extend_from_slice(&[1, 0]);
+        buf.extend_from_slice(&(hdr.len() as u16).to_le_bytes());
+        buf.extend_from_slice(hdr.as_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(parse_f32(&buf).is_err());
     }
 }

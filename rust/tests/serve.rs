@@ -1,0 +1,242 @@
+//! Serve-engine determinism suite — the bitwise-equality contracts of the
+//! KV-cached decode path:
+//!
+//! * **KV decode == full re-forward** — for every serve-eligible recipe,
+//!   feeding a sequence one position at a time through the engine's K/V
+//!   ring buffers produces, at every step, the same logits bit pattern as
+//!   the training backend's full-context forward over the whole sequence —
+//!   at every thread count, with SIMD on or off.
+//! * **Load-time PTQ == train-time eval** — packing a trained w8a8g8
+//!   checkpoint's weights once at engine construction reproduces the
+//!   train-time `forward_only()` evaluation bit for bit, under both
+//!   settings of the int8-accumulator knob.
+//! * **Generation is replayable** — greedy and top-k token streams are
+//!   identical across thread counts and SIMD settings.
+//!
+//! Tests mutate process-wide knobs, so they serialize on a mutex and
+//! restore via RAII guards (same pattern as `tests/int8.rs`).
+
+use std::sync::{Mutex, MutexGuard};
+
+use qpretrain::backend::{kernels, native};
+use qpretrain::config::{QuantRecipe, TrainHp};
+use qpretrain::data::{BatchIter, CorpusCfg};
+use qpretrain::model::init_state;
+use qpretrain::runtime::{ModelInfo, Runtime};
+use qpretrain::serve::{Engine, Request, Sampler, ServeCfg};
+use qpretrain::util::rng::Rng;
+
+static KNOBS: Mutex<()> = Mutex::new(());
+
+struct Knobs(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+fn knobs() -> Knobs {
+    Knobs(KNOBS.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+impl Drop for Knobs {
+    fn drop(&mut self) {
+        kernels::force_parallel(false);
+        kernels::set_threads(0);
+        native::set_int8_gemm(native::int8_env_default());
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Small but structurally honest model: 2 layers, 2 heads, enough vocab
+/// that sampling has real choices. batch * seq tokens feed the full
+/// forward; each batch row is decoded independently.
+fn serve_model() -> ModelInfo {
+    native::model_info("sv", 2, 32, 2, 48, 10, 3)
+}
+
+fn random_tokens(model: &ModelInfo, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..model.batch * model.seq)
+        .map(|_| rng.below(model.vocab) as i32)
+        .collect()
+}
+
+/// Serve-eligible recipes spanning the dispatch space: fp32, the packed
+/// int8 fast path, and a per-token asymmetric activation recipe that must
+/// take the qdq fallback.
+const RECIPES: [&str; 3] = ["base", "w8a8", "w8_pc+a8_ptok_asym"];
+
+#[test]
+fn kv_decode_matches_full_forward_across_knobs() {
+    let _g = knobs();
+    let model = serve_model();
+    let state = init_state(&model, 41);
+    let x = random_tokens(&model, 77);
+    let t = model.seq;
+
+    for spec in RECIPES {
+        let recipe = QuantRecipe::parse(spec).unwrap().forward_only();
+        let mut reference: Option<Vec<u32>> = None;
+        for threads in [1usize, 7] {
+            for simd in [false, true] {
+                let got = kernels::with_threads(threads, || {
+                    kernels::with_simd(simd, || {
+                        let full =
+                            native::forward_logits(&model, &state.params, &x, &recipe).unwrap();
+                        let mut eng =
+                            Engine::new(&model, &state.params, &recipe, ServeCfg::new(2, t))
+                                .unwrap();
+                        let mut decoded = Vec::with_capacity(full.len());
+                        for b in 0..model.batch {
+                            decoded
+                                .extend(eng.decode_logits(&x[b * t..(b + 1) * t]).unwrap());
+                        }
+                        assert_eq!(
+                            bits(&decoded),
+                            bits(&full),
+                            "{spec}: KV decode != full forward at threads={threads} simd={simd}"
+                        );
+                        bits(&full)
+                    })
+                });
+                match &reference {
+                    None => reference = Some(got),
+                    Some(r) => assert_eq!(
+                        &got, r,
+                        "{spec}: logits drifted at threads={threads} simd={simd}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn load_time_ptq_matches_trained_eval_under_both_accumulators() {
+    let _g = knobs();
+    let rt = Runtime::native();
+    let model = rt.model("micro").unwrap().clone();
+    // short w8a8g8 training run: the checkpoint whose serving we validate
+    let hp = TrainHp {
+        steps: 4,
+        eval_every: 0,
+        log_every: usize::MAX,
+        ..TrainHp::default()
+    };
+    let cfg = qpretrain::train::TrainCfg::new("micro", QuantRecipe::parse("w8a8g8").unwrap(), hp);
+    let r = qpretrain::train::train(&rt, &cfg).unwrap();
+    let params = &r.final_state.params;
+    let recipe = QuantRecipe::parse("w8a8g8").unwrap().forward_only();
+
+    let x = random_tokens(&model, 5150);
+    let (t, v) = (model.seq, model.vocab);
+    let rows = [0usize, model.batch - 1];
+    for int8 in [true, false] {
+        native::set_int8_gemm(int8);
+        let full = native::forward_logits(&model, params, &x, &recipe).unwrap();
+        let mut eng = Engine::new(&model, params, &recipe, ServeCfg::new(1, t)).unwrap();
+        assert_eq!(
+            eng.packed_linears(),
+            4 * model.n_layer,
+            "w8a8g8 forward recipe must keep every block linear packed"
+        );
+        for &b in &rows {
+            let dec = eng.decode_logits(&x[b * t..(b + 1) * t]).unwrap();
+            assert_eq!(
+                bits(&dec),
+                bits(&full[b * t * v..(b + 1) * t * v]),
+                "trained w8a8g8 checkpoint: load-time pack != train-time eval \
+                 (row {b}, int8={int8})"
+            );
+        }
+    }
+}
+
+#[test]
+fn generate_streams_identical_across_knobs() {
+    let _g = knobs();
+    let model = serve_model();
+    let state = init_state(&model, 2718);
+    let mut it = BatchIter::new(CorpusCfg::train_default(model.vocab), 1, 4);
+    let prompt = it.next_batch().x;
+
+    for spec in ["base", "w8a8"] {
+        let recipe = QuantRecipe::parse(spec).unwrap().forward_only();
+        for sampler in [
+            Sampler::Greedy,
+            Sampler::TopK {
+                temperature: 0.8,
+                k: 8,
+            },
+        ] {
+            let mut reference: Option<Vec<i32>> = None;
+            for threads in [1usize, 7] {
+                for simd in [false, true] {
+                    let toks = kernels::with_threads(threads, || {
+                        kernels::with_simd(simd, || {
+                            let mut eng = Engine::new(
+                                &model,
+                                &state.params,
+                                &recipe,
+                                ServeCfg::new(1, model.seq),
+                            )
+                            .unwrap();
+                            eng.generate(&prompt, 5, sampler, 99).unwrap()
+                        })
+                    });
+                    assert_eq!(toks.len(), 5);
+                    match &reference {
+                        None => reference = Some(toks),
+                        Some(r) => assert_eq!(
+                            &toks, r,
+                            "{spec}: {sampler:?} stream drifted at threads={threads} simd={simd}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_run_equals_sequential_across_knobs() {
+    let _g = knobs();
+    let model = serve_model();
+    let state = init_state(&model, 314);
+    let recipe = QuantRecipe::parse("w8a8").unwrap().forward_only();
+    let mut rng = Rng::new(8);
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            prompt: (0..1 + i % 4)
+                .map(|_| rng.below(model.vocab) as i32)
+                .collect(),
+            max_new: 3 + i % 3,
+            sampler: if i % 2 == 0 {
+                Sampler::Greedy
+            } else {
+                Sampler::TopK {
+                    temperature: 1.1,
+                    k: 6,
+                }
+            },
+            seed: 1000 + i as u64,
+        })
+        .collect();
+
+    let run_with = |max_batch: usize| {
+        let mut eng =
+            Engine::new(&model, &state.params, &recipe, ServeCfg::new(max_batch, model.seq))
+                .unwrap();
+        let (done, stats) = eng.run(&reqs).unwrap();
+        (done.into_iter().map(|c| c.generated).collect::<Vec<_>>(), stats)
+    };
+
+    let (sequential, _) = run_with(1);
+    for threads in [1usize, 7] {
+        let (batched, stats) = kernels::with_threads(threads, || run_with(4));
+        assert_eq!(
+            batched, sequential,
+            "continuous batching changed token streams at threads={threads}"
+        );
+        assert!(stats.peak_batch >= 4, "batching never filled the batch");
+    }
+}

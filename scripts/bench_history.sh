@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Append the current bench reports to bench_history/.
 #
-# Runs the two floor-gated bench binaries (unless --no-run is given and
+# Runs the floor-gated bench binaries (unless --no-run is given and
 # fresh BENCH_*.json files already sit at the repo root), then snapshots
 # them under bench_history/<utc-stamp>_<git-sha>/ together with a small
 # meta record — so the perf trajectory across PRs lives in-tree and not
@@ -36,13 +36,15 @@ if [ "$run" -eq 1 ]; then
   if [ "$fast" -eq 1 ]; then
     QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_kernels
     QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_train_loop
+    QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_serve
   else
     cargo bench --bench bench_kernels
     cargo bench --bench bench_train_loop
+    cargo bench --bench bench_serve
   fi
 fi
 
-for f in BENCH_kernels.json BENCH_train_loop.json; do
+for f in BENCH_kernels.json BENCH_train_loop.json BENCH_serve.json; do
   if [ ! -f "$f" ]; then
     echo "missing $f at the repo root (run the benches, or drop --no-run)" >&2
     exit 1
@@ -53,7 +55,7 @@ sha=$(git rev-parse --short HEAD 2>/dev/null || echo nogit)
 stamp=$(date -u +%Y-%m-%dT%H%M%SZ)
 dir="bench_history/${stamp}_${sha}"
 mkdir -p "$dir"
-cp BENCH_kernels.json BENCH_train_loop.json "$dir/"
+cp BENCH_kernels.json BENCH_train_loop.json BENCH_serve.json "$dir/"
 dirty=false
 if ! git diff --quiet 2>/dev/null; then
   dirty=true
