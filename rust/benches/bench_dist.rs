@@ -1,0 +1,118 @@
+//! Dist-trainer benches (feeds §Perf): data-parallel scaling and gradient
+//! wire volume for the reduction-tree exchange.
+//!
+//! Emits `BENCH_dist.json` at the repo root (tokens/s at dp 1 and dp 2,
+//! scaling efficiency, f32-vs-int8 exchange bytes per step), then fails
+//! against the committed floors in `rust/tests/bench_baseline.json`. Set
+//! `QPRETRAIN_BENCH_FAST=1` for a smoke run with fewer steps.
+//!
+//! Floor rows carry their dp as a JSON *string* (`"dp": "1"`): the
+//! baseline matcher selects rows by string-valued fields only.
+
+use std::path::PathBuf;
+
+use qpretrain::backend::kernels;
+use qpretrain::config::{QuantRecipe, TrainHp};
+use qpretrain::dist::{dist_train, take_wire_stats};
+use qpretrain::runtime::Runtime;
+use qpretrain::train::TrainCfg;
+use qpretrain::util::bench::section;
+use qpretrain::util::json::{self, Value};
+
+fn cfg(spec: &str, steps: usize, dp: usize, out: Option<PathBuf>) -> TrainCfg {
+    let hp = TrainHp {
+        steps,
+        eval_every: 0,
+        log_every: usize::MAX,
+        dp,
+        ..TrainHp::default()
+    };
+    let mut c = TrainCfg::new("micro", QuantRecipe::parse(spec).unwrap(), hp);
+    c.out_dir = out;
+    c
+}
+
+fn main() {
+    // Workers are spawned from the CLI binary, not this bench binary.
+    std::env::set_var("QPRETRAIN_BIN", env!("CARGO_BIN_EXE_qpretrain"));
+    let rt = Runtime::open_default().expect("runtime");
+    let threads = kernels::max_threads();
+    let fast = qpretrain::util::bench::fast_mode();
+    let steps = if fast { 6 } else { 20 };
+    println!(
+        "backend: {} ({threads} kernel threads, simd {})",
+        rt.backend_name(),
+        if kernels::simd_active() { "on" } else { "off" }
+    );
+    let model = rt.model("micro").unwrap().clone();
+    let tokens_per_step = (model.batch * model.seq) as f64;
+    let out_root =
+        std::env::temp_dir().join(format!("qpretrain_bench_dist_{}", std::process::id()));
+    let mut results = Vec::new();
+
+    section("data-parallel train throughput (micro, w8a8g8, int8 gradient wire)");
+    let mut tps_by_dp = Vec::new();
+    for dp in [1usize, 2] {
+        let out = (dp > 1).then(|| out_root.join(format!("dp{dp}")));
+        take_wire_stats(); // reset counters
+        let r = dist_train(&rt, &cfg("w8a8g8", steps, dp, out)).expect("dist run");
+        let (written, read) = take_wire_stats();
+        let tps = r.steps_per_sec * tokens_per_step;
+        tps_by_dp.push(tps);
+        results.push(json::obj(vec![
+            ("name", json::s("dist_train")),
+            ("recipe", json::s("w8a8g8")),
+            ("dp", json::s(&dp.to_string())),
+            ("steps", json::num(steps as f64)),
+            ("tokens_per_sec", json::num(tps)),
+            ("wire_bytes_per_step", json::num((written + read) as f64 / steps as f64)),
+        ]));
+        println!(
+            "dp {dp}: {tps:>9.0} tokens/s   wire {:>8.0} B/step",
+            (written + read) as f64 / steps as f64
+        );
+    }
+    let efficiency = tps_by_dp[1] / tps_by_dp[0].max(1e-9);
+    results.push(json::obj(vec![
+        ("name", json::s("scaling")),
+        ("dp", json::s("2")),
+        ("scaling_efficiency", json::num(efficiency)),
+    ]));
+    println!("dp2/dp1 scaling efficiency: {efficiency:.2}");
+
+    section("gradient wire volume per step (dp 2): f32 vs int8 exchange");
+    // Same tree, same frames-per-step; only the recipe's g policy decides
+    // the encoding — so the byte ratio is the quantization win directly.
+    let mut bytes_by_kind = Vec::new();
+    for (kind, spec) in [("f32", "base"), ("i8", "w8a8g8")] {
+        take_wire_stats();
+        dist_train(&rt, &cfg(spec, steps, 2, Some(out_root.join(kind)))).expect("dist run");
+        let (written, read) = take_wire_stats();
+        let per_step = (written + read) as f64 / steps as f64;
+        bytes_by_kind.push(per_step);
+        println!("{kind:>4} wire: {per_step:>9.0} B/step");
+    }
+    let ratio = bytes_by_kind[0] / bytes_by_kind[1].max(1e-9);
+    results.push(json::obj(vec![
+        ("name", json::s("wire_bytes")),
+        ("dp", json::s("2")),
+        ("f32_bytes_per_step", json::num(bytes_by_kind[0])),
+        ("i8_bytes_per_step", json::num(bytes_by_kind[1])),
+        ("f32_over_i8", json::num(ratio)),
+    ]));
+    println!("f32/i8 wire ratio: {ratio:.2}x");
+
+    std::fs::remove_dir_all(&out_root).ok();
+
+    let report = json::obj(vec![
+        ("bench", json::s("dist")),
+        ("threads", json::num(threads as f64)),
+        ("simd", Value::Bool(kernels::simd_active())),
+        ("results", Value::Arr(results)),
+    ]);
+    let path = qpretrain::util::repo_root().join("BENCH_dist.json");
+    std::fs::write(&path, report.to_json()).expect("write BENCH_dist.json");
+    println!("\nwrote {}", path.display());
+    qpretrain::util::bench::check_against_baseline(&report, "dist")
+        .expect("bench_dist regressed below the committed perf floors");
+}

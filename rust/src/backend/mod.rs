@@ -109,6 +109,44 @@ pub trait Backend {
         t: f32,
     ) -> Result<StepOut>;
 
+    /// Half of a sharded (data-parallel) step: backward only, over a
+    /// *leaf* token batch shaped for this `model` (the dist trainer passes
+    /// a batch-1 view of the global model), with `inv_norm` folded into
+    /// the logit gradients — `1 / (global_batch * seq)` makes leaf
+    /// gradients terms of the global mean, so shards combine by pure
+    /// summation. Returns the unnormalized NLL **sum** over the leaf's
+    /// positions plus the per-parameter gradients; no state is touched.
+    /// Backends without a sharded-step path keep the default error.
+    fn grad_step(
+        &self,
+        model: &ModelInfo,
+        recipe: &QuantRecipe,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+        inv_norm: f32,
+    ) -> Result<(f64, Vec<Vec<f32>>)> {
+        let _ = (model, recipe, params, x, y, inv_norm);
+        anyhow::bail!("backend {:?} does not support sharded gradient steps", self.name())
+    }
+
+    /// The other half of a sharded step: one AdamW update from
+    /// already-combined gradients (clip, moment update, moment qdq per the
+    /// recipe, parameter update — identical to the tail of
+    /// [`Backend::train_step`]). Returns the pre-clip global grad norm.
+    fn apply_grads(
+        &self,
+        model: &ModelInfo,
+        recipe: &QuantRecipe,
+        state: &mut HostState,
+        grads: &[Vec<f32>],
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        let _ = (model, recipe, state, grads, lr, t);
+        anyhow::bail!("backend {:?} does not support sharded gradient steps", self.name())
+    }
+
     /// Forward-only scoring under the recipe's forward-pass components
     /// (implementations apply [`QuantRecipe::forward_only`] themselves, so
     /// passing a full training recipe is fine).

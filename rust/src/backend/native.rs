@@ -962,28 +962,39 @@ pub fn resident_linear_acc(
 
 struct BackOut {
     loss: f64,
+    /// Unnormalized NLL sum over the batch's positions (f64 accumulation
+    /// in position order); `loss` is this over `batch * seq`. The `dist`
+    /// leaf exchange ships the sum so shard losses combine exactly.
+    loss_sum: f64,
     grads: Vec<Vec<f32>>,
     d_ctx0: Vec<f32>,
 }
 
+/// Backward pass with an explicit gradient normalization: `inv_norm` is
+/// the factor folded into `dlogits` (the whole-batch step uses
+/// `1 / (batch * seq)`; a data-parallel *leaf* over one sequence passes
+/// `1 / (global_batch * seq)` so per-sequence gradients are already terms
+/// of the global mean and combine by pure summation).
 fn loss_and_grads(
     model: &ModelInfo,
     params: &[Vec<f32>],
     x: &[i32],
     y: &[i32],
     qs: &QuantRecipe,
+    inv_norm: Option<f32>,
 ) -> BackOut {
     let dm = Dims::of(model);
     let (d, f, m, t, h, hd, v) = (dm.d, dm.f, dm.m, dm.t, dm.h, dm.hd, dm.v);
     let fwd = forward(model, params, x, qs);
     let (per_pos, probs) = nll_rows(&fwd.logits, y, m, v);
-    let loss = per_pos.iter().map(|&l| l as f64).sum::<f64>() / m as f64;
+    let loss_sum = per_pos.iter().map(|&l| l as f64).sum::<f64>();
+    let loss = loss_sum / m as f64;
 
     let mut grads: Vec<Vec<f32>> = model.params.iter().map(|p| vec![0.0f32; p.elems()]).collect();
 
-    // dlogits = (softmax - onehot(y)) / M (row-parallel)
+    // dlogits = (softmax - onehot(y)) * inv_norm (row-parallel)
     let mut dlogits = probs;
-    let inv_m = 1.0f32 / m as f32;
+    let inv_m = inv_norm.unwrap_or(1.0f32 / m as f32);
     par_chunks_mut(&mut dlogits, v, 2 * v, |rows, dc| {
         for (ri, r) in rows.clone().enumerate() {
             let row = &mut dc[ri * v..(ri + 1) * v];
@@ -1219,6 +1230,7 @@ fn loss_and_grads(
 
     BackOut {
         loss,
+        loss_sum,
         grads,
         d_ctx0,
     }
@@ -1326,12 +1338,48 @@ impl Backend for NativeBackend {
     ) -> Result<StepOut> {
         check_inputs(model, &state.params, x)?;
         check_tokens(model, y)?;
-        let out = loss_and_grads(model, &state.params, x, y, recipe);
+        let out = loss_and_grads(model, &state.params, x, y, recipe, None);
         let gnorm = adamw_update(model, state, &out.grads, lr, t, recipe);
         Ok(StepOut {
             loss: out.loss,
             gnorm,
         })
+    }
+
+    fn grad_step(
+        &self,
+        model: &ModelInfo,
+        recipe: &QuantRecipe,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+        inv_norm: f32,
+    ) -> Result<(f64, Vec<Vec<f32>>)> {
+        check_inputs(model, params, x)?;
+        check_tokens(model, y)?;
+        let out = loss_and_grads(model, params, x, y, recipe, Some(inv_norm));
+        Ok((out.loss_sum, out.grads))
+    }
+
+    fn apply_grads(
+        &self,
+        model: &ModelInfo,
+        recipe: &QuantRecipe,
+        state: &mut HostState,
+        grads: &[Vec<f32>],
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        for (info, g) in model.params.iter().zip(grads) {
+            anyhow::ensure!(
+                g.len() == info.elems(),
+                "gradient for {} has {} elements, expected {}",
+                info.name,
+                g.len(),
+                info.elems()
+            );
+        }
+        Ok(adamw_update(model, state, grads, lr, t, recipe))
     }
 
     fn eval_step(
@@ -1384,7 +1432,7 @@ impl Backend for NativeBackend {
         check_inputs(model, params, x)?;
         check_tokens(model, y)?;
         let dm = Dims::of(model);
-        let out = loss_and_grads(model, params, x, y, &QuantRecipe::none());
+        let out = loss_and_grads(model, params, x, y, &QuantRecipe::none(), None);
         let per_layer = dm.d * 3 * dm.d;
         Ok(GradProbe {
             d_qkv_w0: out.grads[QKV_W][..per_layer].to_vec(),

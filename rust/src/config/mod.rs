@@ -561,6 +561,30 @@ pub struct TrainHp {
     /// `RAYON_NUM_THREADS`, or all cores). Results are bit-identical at
     /// every value — the knob only trades wall-clock (`backend::kernels`).
     pub threads: usize,
+    /// Data-parallel worker count for `dist-train` (1 = single process).
+    /// Like `threads`, this is a wall-clock knob, not a numerics knob: the
+    /// dist trainer combines shard gradients through a reduction tree
+    /// shaped by the global batch alone, so results are bit-identical at
+    /// every `dp` ([`shard_range`] derives each rank's leaf range).
+    pub dp: usize,
+}
+
+impl TrainHp {
+    /// The half-open range of global-batch leaves (sequences) rank `rank`
+    /// of a `self.dp`-way run owns; see [`shard_range`].
+    pub fn shard_of(&self, rank: usize, batch: usize) -> (usize, usize) {
+        shard_range(batch, self.dp.max(1), rank)
+    }
+}
+
+/// Contiguous leaf range `[rank*B/dp, (rank+1)*B/dp)` of a `dp`-way split
+/// of `batch` sequences. Ranges tile the batch exactly for every `dp <=
+/// batch` (non-divisible batches give the later ranks the larger shards),
+/// and the reduction-tree cover of any such range is well-formed — no
+/// alignment requirement.
+pub fn shard_range(batch: usize, dp: usize, rank: usize) -> (usize, usize) {
+    assert!(dp > 0 && rank < dp, "rank {rank} out of range for dp {dp}");
+    (rank * batch / dp, (rank + 1) * batch / dp)
 }
 
 impl Default for TrainHp {
@@ -576,6 +600,7 @@ impl Default for TrainHp {
             probe_every: 0,
             log_every: 10,
             threads: 0,
+            dp: 1,
         }
     }
 }
@@ -714,5 +739,31 @@ mod tests {
             assert_eq!(Granularity::parse(g.short()).unwrap(), g);
         }
         assert!(Granularity::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn shard_ranges_tile_the_batch() {
+        for batch in 1..=16 {
+            for dp in 1..=batch {
+                let mut pos = 0;
+                for rank in 0..dp {
+                    let (lo, hi) = shard_range(batch, dp, rank);
+                    assert_eq!(lo, pos, "gap/overlap at rank {rank} (B={batch} dp={dp})");
+                    assert!(hi > lo || dp > batch, "empty shard below dp==batch");
+                    pos = hi;
+                }
+                assert_eq!(pos, batch);
+            }
+        }
+        // the micro model's B=4 under dp=3: 1 + 1 + 2 leaves
+        assert_eq!(shard_range(4, 3, 0), (0, 1));
+        assert_eq!(shard_range(4, 3, 1), (1, 2));
+        assert_eq!(shard_range(4, 3, 2), (2, 4));
+        // TrainHp carries the dp knob into the same derivation
+        let hp = TrainHp {
+            dp: 2,
+            ..TrainHp::default()
+        };
+        assert_eq!(hp.shard_of(1, 4), (2, 4));
     }
 }

@@ -3,7 +3,9 @@
 //!
 //! Every training run is identified by a deterministic directory name under
 //! `runs/train/...`; completed runs leave a `result.json` + `metrics.jsonl`
-//! (+ checkpoint) and are never re-trained. Sweeps with `--jobs N > 1` spawn
+//! (+ checkpoint) capped by a terminal `DONE` marker ([`mark_done`]) and
+//! are never re-trained — a dir *without* the marker (a worker killed
+//! mid-run) is re-trained from scratch. Sweeps with `--jobs N > 1` spawn
 //! `qpretrain train ...` worker subprocesses (the PJRT client is not shared
 //! across threads; process isolation also mirrors the paper's independent
 //! training runs).
@@ -148,6 +150,20 @@ impl RunSummary {
     }
 }
 
+/// Write the terminal `DONE` marker: the run-cache token, written **only
+/// after** every other artifact (result.json, metrics, checkpoint, loss
+/// curve) has landed. A run dir without it — e.g. a worker killed between
+/// artifacts — is treated as absent and re-trained.
+pub fn mark_done(dir: &Path) -> Result<()> {
+    std::fs::write(dir.join("DONE"), "ok\n")?;
+    Ok(())
+}
+
+/// Whether `dir` holds a *complete* cached run (see [`mark_done`]).
+pub fn is_done(dir: &Path) -> bool {
+    dir.join("DONE").exists()
+}
+
 /// Execute a single training config, writing run artifacts; returns summary.
 pub fn execute_run(rt: &Runtime, mut cfg: TrainCfg, dir: &Path) -> Result<RunSummary> {
     cfg.out_dir = Some(dir.to_path_buf());
@@ -161,7 +177,24 @@ pub fn execute_run(rt: &Runtime, mut cfg: TrainCfg, dir: &Path) -> Result<RunSum
     for (i, (l, g)) in r.losses.iter().zip(&r.gnorms).enumerate() {
         writeln!(f, "{},{},{}", i + 1, l, g)?;
     }
+    mark_done(dir)?;
     Ok(summary)
+}
+
+/// Per-worker kernel thread budget when `wave_jobs` training processes run
+/// at once (sweep waves, the dist launcher): an explicit pin
+/// (`TrainHp::threads` or the process-wide `--threads`) is forwarded
+/// as-is; otherwise the machine's thread budget is split across the wave
+/// so concurrent workers neither oversubscribe (jobs * all cores) nor idle
+/// cores on a short final wave.
+pub fn worker_threads(cfg: &TrainCfg, wave_jobs: usize) -> usize {
+    if cfg.hp.threads > 0 {
+        return cfg.hp.threads;
+    }
+    match crate::backend::kernels::threads_override() {
+        0 => (crate::backend::kernels::max_threads() / wave_jobs.max(1)).max(1),
+        pinned => pinned,
+    }
 }
 
 /// Ensure all configs have completed runs; spawn up to `jobs` worker
@@ -176,7 +209,7 @@ pub fn ensure_runs(
     let mut dirs = Vec::with_capacity(configs.len());
     for (i, cfg) in configs.iter().enumerate() {
         let dir = run_dir(runs, &cfg.model, &cfg.quant, &cfg.hp);
-        if !dir.join("result.json").exists() {
+        if !is_done(&dir) {
             missing.push((i, dir.clone()));
         }
         dirs.push(dir);
@@ -190,20 +223,6 @@ pub fn ensure_runs(
             execute_run(rt, cfg.clone(), dir)?;
         }
     } else {
-        // Per-worker kernel thread budget: an explicit pin (TrainHp::threads
-        // or the process-wide --threads) is forwarded as-is; otherwise the
-        // machine's thread budget is split across this wave's workers so the
-        // sweep neither oversubscribes (jobs * all cores) nor idles cores on
-        // a short final wave.
-        let worker_threads = |cfg: &TrainCfg, wave_jobs: usize| -> usize {
-            if cfg.hp.threads > 0 {
-                return cfg.hp.threads;
-            }
-            match crate::backend::kernels::threads_override() {
-                0 => (crate::backend::kernels::max_threads() / wave_jobs.max(1)).max(1),
-                pinned => pinned,
-            }
-        };
         for wave in missing.chunks(jobs) {
             let mut children = Vec::new();
             for (i, dir) in wave {
@@ -319,6 +338,78 @@ mod tests {
         let q = QuantRecipe::parse("w8a8").unwrap();
         let d = run_dir(Path::new("runs"), "t4", &q, &hp);
         assert!(d.to_str().unwrap().contains("w8a8_s300"));
+    }
+
+    #[test]
+    fn worker_threads_splits_the_budget() {
+        let mut cfg = TrainCfg::new("micro", QuantRecipe::none(), TrainHp::default());
+        // An explicit per-run pin is forwarded as-is, whatever the wave size.
+        cfg.hp.threads = 5;
+        for jobs in [1usize, 2, 7] {
+            assert_eq!(worker_threads(&cfg, jobs), 5);
+        }
+        // Without a per-run pin: always >= 1, never more than the machine,
+        // and monotonically non-increasing in the wave size. (The
+        // process-wide --threads pin, when set — CI legs run with
+        // QPRETRAIN_THREADS=7 — wins over the split; that case is the
+        // constant function, which satisfies the same invariants.)
+        cfg.hp.threads = 0;
+        let budget = crate::backend::kernels::max_threads();
+        let pinned = crate::backend::kernels::threads_override();
+        let mut prev = usize::MAX;
+        for jobs in [1usize, 2, 7] {
+            let w = worker_threads(&cfg, jobs);
+            assert!(w >= 1, "jobs={jobs} gave zero threads");
+            assert!(w <= budget.max(pinned), "jobs={jobs} oversubscribes");
+            assert!(w <= prev, "budget must not grow with the wave size");
+            if pinned == 0 {
+                assert_eq!(w, (budget / jobs).max(1));
+            } else {
+                assert_eq!(w, pinned);
+            }
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn run_without_done_marker_is_retrained() {
+        use crate::runtime::Runtime;
+        let runs = std::env::temp_dir().join(format!(
+            "qpretrain_done_marker_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&runs).ok();
+        let hp = TrainHp {
+            steps: 1,
+            eval_every: 0,
+            log_every: usize::MAX,
+            seed: 7,
+            ..TrainHp::default()
+        };
+        let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp);
+        let rt = Runtime::native();
+
+        // Fresh run: trains, leaves result.json + DONE.
+        let s = ensure_runs(&rt, &runs, std::slice::from_ref(&cfg), 1).unwrap();
+        let dir = s[0].dir.clone();
+        assert!(is_done(&dir));
+        let stamp = |p: &Path| std::fs::metadata(p).unwrap().modified().unwrap();
+        let first = stamp(&dir.join("result.json"));
+
+        // Complete run: cache hit, nothing rewritten.
+        ensure_runs(&rt, &runs, std::slice::from_ref(&cfg), 1).unwrap();
+        assert_eq!(stamp(&dir.join("result.json")), first);
+
+        // Interrupted run (result.json present, DONE missing): re-trained.
+        std::fs::remove_file(dir.join("DONE")).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        ensure_runs(&rt, &runs, std::slice::from_ref(&cfg), 1).unwrap();
+        assert!(is_done(&dir), "re-train must restore the marker");
+        assert!(
+            stamp(&dir.join("result.json")) > first,
+            "a DONE-less run dir must be re-trained, not served from cache"
+        );
+        std::fs::remove_dir_all(&runs).ok();
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Gradient-frame wire codec: the length-prefixed binary format one rank
+//! publishes per step and every other rank reads back.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic "QDGF" | version u16 | payload_len u64 | payload | fnv1a64(payload) u64
+//!
+//! payload := step u64 | rank u32 | dp u32 | leaves u32 | node_count u32 | node*
+//! node    := level u8 | idx u32 | loss f64-bits u64 | tensor_count u16 | tensor*
+//! tensor  := kind u8 (0 = f32, 1 = i8)
+//!            f32: len u64 | len * f32-le
+//!            i8:  view_count u32 | view*
+//! view    := rows u32 | cols u32 | scale_count u32 | scale_count * f32-le
+//!            | rows*cols i8 codes (tight, no lane padding)
+//! ```
+//!
+//! The codec is **canonical**: `encode(decode(bytes)) == bytes` for every
+//! accepted input, and decode rejects anything else — wrong magic, short
+//! or long buffers, a payload length that disagrees with the buffer, an
+//! FNV-64 mismatch, counts that overflow or overrun the payload, or
+//! trailing bytes after a node list. Floats travel as raw bit patterns
+//! (`to_bits`/`from_bits`), so NaN payloads and signed zeros survive the
+//! wire bit-for-bit — the dequantized gradients a receiver reconstructs
+//! are byte-identical to the sender's, which is what the N-way == 1-way
+//! proof rests on.
+//!
+//! `decode` is a fuzz surface (`tests/fuzz.rs` mutates frames for 10k
+//! rounds): every read is bounds-checked through [`Cursor`], and every
+//! allocation is capped by the number of bytes actually present, so a
+//! corrupt count cannot allocate unbounded memory or index out of range.
+
+use anyhow::{bail, Result};
+
+use crate::util::fnv1a64;
+
+pub const MAGIC: &[u8; 4] = b"QDGF";
+pub const VERSION: u16 = 1;
+
+/// One tensor's gradient payload: raw f32 values, or int8 codes + scales
+/// per view (a view is one layer slice of a stacked tensor, or the whole
+/// matrix of a plain 2-D tensor).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireTensor {
+    F32(Vec<f32>),
+    I8(Vec<WireView>),
+}
+
+/// One quantized 2-D view: tight row-major codes plus the per-tensor
+/// (1) or per-row (`rows`) scales that dequantize them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireView {
+    pub rows: u32,
+    pub cols: u32,
+    pub scales: Vec<f32>,
+    pub codes: Vec<i8>,
+}
+
+/// One reduction-tree node: which subtree it is, the f64 loss sum over
+/// the leaves it covers, and the 16 per-parameter gradient tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireNode {
+    pub level: u8,
+    pub idx: u32,
+    pub loss: f64,
+    pub tensors: Vec<WireTensor>,
+}
+
+/// A rank's per-step shipment: its cover of the reduction tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub step: u64,
+    pub rank: u32,
+    pub dp: u32,
+    pub leaves: u32,
+    pub nodes: Vec<WireNode>,
+}
+
+// ---------------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    for v in vs {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+pub fn encode(f: &Frame) -> Vec<u8> {
+    let mut payload = Vec::new();
+    put_u64(&mut payload, f.step);
+    put_u32(&mut payload, f.rank);
+    put_u32(&mut payload, f.dp);
+    put_u32(&mut payload, f.leaves);
+    put_u32(&mut payload, f.nodes.len() as u32);
+    for n in &f.nodes {
+        payload.push(n.level);
+        put_u32(&mut payload, n.idx);
+        put_u64(&mut payload, n.loss.to_bits());
+        put_u16(&mut payload, n.tensors.len() as u16);
+        for t in &n.tensors {
+            match t {
+                WireTensor::F32(vs) => {
+                    payload.push(0);
+                    put_u64(&mut payload, vs.len() as u64);
+                    put_f32s(&mut payload, vs);
+                }
+                WireTensor::I8(views) => {
+                    payload.push(1);
+                    put_u32(&mut payload, views.len() as u32);
+                    for v in views {
+                        put_u32(&mut payload, v.rows);
+                        put_u32(&mut payload, v.cols);
+                        put_u32(&mut payload, v.scales.len() as u32);
+                        put_f32s(&mut payload, &v.scales);
+                        payload.extend(v.codes.iter().map(|&c| c as u8));
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(payload.len() + 22);
+    out.extend_from_slice(MAGIC);
+    put_u16(&mut out, VERSION);
+    put_u64(&mut out, payload.len() as u64);
+    let digest = fnv1a64(&payload);
+    out.extend_from_slice(&payload);
+    put_u64(&mut out, digest);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked reader over the payload slice. Every `take_*` returns
+/// `Err` instead of slicing past the end.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.pos {
+            bail!("frame truncated: need {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("count overflow"))?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Frame> {
+    if bytes.len() < MAGIC.len() + 2 + 8 + 8 {
+        bail!("frame shorter than the fixed header");
+    }
+    if &bytes[..4] != MAGIC {
+        bail!("bad frame magic");
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported frame version {version}");
+    }
+    let payload_len = u64::from_le_bytes(bytes[6..14].try_into().unwrap());
+    let expect = (bytes.len() - 14 - 8) as u64;
+    if payload_len != expect {
+        bail!("frame length prefix {payload_len} disagrees with buffer ({expect} payload bytes)");
+    }
+    let payload = &bytes[14..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let actual = fnv1a64(payload);
+    if stored != actual {
+        bail!("frame integrity check failed: fnv {actual:016x} != stored {stored:016x}");
+    }
+
+    let mut c = Cursor {
+        buf: payload,
+        pos: 0,
+    };
+    let step = c.u64()?;
+    let rank = c.u32()?;
+    let dp = c.u32()?;
+    let leaves = c.u32()?;
+    let node_count = c.u32()? as usize;
+    // each node costs at least 15 bytes; reject counts the payload can't hold
+    if node_count > c.remaining() / 15 {
+        bail!("frame claims {node_count} nodes in {} bytes", c.remaining());
+    }
+    let mut nodes = Vec::with_capacity(node_count);
+    for _ in 0..node_count {
+        let level = c.u8()?;
+        let idx = c.u32()?;
+        let loss = f64::from_bits(c.u64()?);
+        let tensor_count = c.u16()? as usize;
+        if tensor_count > c.remaining() {
+            bail!("frame claims {tensor_count} tensors in {} bytes", c.remaining());
+        }
+        let mut tensors = Vec::with_capacity(tensor_count);
+        for _ in 0..tensor_count {
+            match c.u8()? {
+                0 => {
+                    let n = c.u64()?;
+                    let n = usize::try_from(n)
+                        .map_err(|_| anyhow::anyhow!("f32 tensor length {n} overflows"))?;
+                    tensors.push(WireTensor::F32(c.f32s(n)?));
+                }
+                1 => {
+                    let view_count = c.u32()? as usize;
+                    if view_count > c.remaining() / 12 {
+                        bail!("frame claims {view_count} views in {} bytes", c.remaining());
+                    }
+                    let mut views = Vec::with_capacity(view_count);
+                    for _ in 0..view_count {
+                        let rows = c.u32()?;
+                        let cols = c.u32()?;
+                        let scale_count = c.u32()? as usize;
+                        if scale_count != 1 && scale_count != rows as usize {
+                            bail!("view scale count {scale_count} is neither 1 nor rows {rows}");
+                        }
+                        let scales = c.f32s(scale_count)?;
+                        let n = (rows as u64)
+                            .checked_mul(cols as u64)
+                            .and_then(|n| usize::try_from(n).ok())
+                            .filter(|&n| n <= c.remaining())
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("view {rows}x{cols} exceeds the payload")
+                            })?;
+                        let codes = c.take(n)?.iter().map(|&b| b as i8).collect();
+                        views.push(WireView {
+                            rows,
+                            cols,
+                            scales,
+                            codes,
+                        });
+                    }
+                    tensors.push(WireTensor::I8(views));
+                }
+                k => bail!("unknown tensor kind {k}"),
+            }
+        }
+        nodes.push(WireNode {
+            level,
+            idx,
+            loss,
+            tensors,
+        });
+    }
+    if c.remaining() != 0 {
+        bail!("{} trailing bytes after the node list", c.remaining());
+    }
+    Ok(Frame {
+        step,
+        rank,
+        dp,
+        leaves,
+        nodes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frame() -> Frame {
+        Frame {
+            step: 7,
+            rank: 1,
+            dp: 2,
+            leaves: 4,
+            nodes: vec![WireNode {
+                level: 1,
+                idx: 1,
+                loss: 3.25,
+                tensors: vec![
+                    WireTensor::F32(vec![1.0, -0.5, f32::MIN_POSITIVE, -0.0]),
+                    WireTensor::I8(vec![
+                        WireView {
+                            rows: 2,
+                            cols: 3,
+                            scales: vec![0.125],
+                            codes: vec![1, -2, 3, -4, 5, -6],
+                        },
+                        WireView {
+                            rows: 2,
+                            cols: 2,
+                            scales: vec![0.5, 0.25],
+                            codes: vec![127, -128, 0, 64],
+                        },
+                    ]),
+                    WireTensor::F32(vec![]),
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let f = sample_frame();
+        let bytes = encode(&f);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(encode(&back), bytes, "codec is canonical");
+    }
+
+    #[test]
+    fn nan_and_negative_zero_survive_bit_for_bit() {
+        let mut f = sample_frame();
+        f.nodes[0].loss = f64::from_bits(0x7ff8_dead_beef_0001);
+        f.nodes[0].tensors[0] = WireTensor::F32(vec![f32::from_bits(0xffc0_0001), -0.0]);
+        let back = decode(&encode(&f)).unwrap();
+        let WireTensor::F32(vs) = &back.nodes[0].tensors[0] else {
+            panic!("kind changed")
+        };
+        assert_eq!(vs[0].to_bits(), 0xffc0_0001);
+        assert_eq!(vs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(back.nodes[0].loss.to_bits(), 0x7ff8_dead_beef_0001);
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let bytes = encode(&sample_frame());
+        // flip one payload byte: FNV must catch it
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x40;
+        assert!(decode(&bad).is_err());
+        // truncate: length prefix must catch it
+        assert!(decode(&bytes[..bytes.len() - 3]).is_err());
+        // append: length prefix must catch it too
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode(&long).is_err());
+        // wrong magic
+        let mut wrong = bytes.clone();
+        wrong[0] = b'X';
+        assert!(decode(&wrong).is_err());
+        assert!(decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,966 @@
+//! N-process data-parallel trainer, bit-identical to a single process.
+//!
+//! `dist-train` shards the **global batch** (never the model) across `dp`
+//! ranks: rank `k` owns the leaf sequences
+//! [`crate::config::shard_range`]`(B, dp, k)`, runs the native backend's
+//! backward over each of its leaves ([`crate::runtime::Runtime::grad_step`]
+//! on a batch-1 view of the model), and combines gradients through a
+//! **fixed-shape pairwise reduction tree** ([`tree`]) whose shape is a
+//! function of the global batch `B` alone — never of `dp`. Every rank
+//! completes the *same* tree from the exchanged node values and applies
+//! the *same* AdamW update ([`crate::runtime::Runtime::apply_grads`]), so
+//! (params, m, v) stay in bit-lockstep on all ranks and an N-way run is
+//! byte-identical to a 1-way run at matched global batch (`qpretrain
+//! digest --dp` proves it in CI).
+//!
+//! Two design rules make that hold:
+//!
+//! 1. **The tree is the numerics.** Leaf gradients are terms of the
+//!    *global* mean (`inv_norm = 1/(B*seq)` is folded into the logit
+//!    gradients), so nodes combine by pure summation, and odd "carry"
+//!    nodes pass through *unchanged* — no combine, no re-quantization.
+//! 2. **A node's canonical value is its packed form.** When the recipe's
+//!    `g` policy is int8-eligible ([`wire_policy`]), every node value is
+//!    defined as `dequant(pack_grads_i8(sum of child values))`, the wire
+//!    ships exactly those codes + scales ([`frame`]), and a received node
+//!    is *never* re-packed (requantization is not bitwise idempotent).
+//!    Receiver dequant is therefore unconditionally bit-identical to the
+//!    sender's value. Ineligible recipes ship raw f32 — lossless either
+//!    way.
+//!
+//! Ranks exchange per-step frames over a run-dir filesystem protocol
+//! (`<out>/dist/step_<s>_rank_<k>.frame`, length-prefixed binary with an
+//! FNV-64 integrity check, published atomically via tmp+rename). The
+//! frame files double as the step barrier; a killed worker fails loudly
+//! through an `ABORT` marker, leader-side child exit polling, and a
+//! timeout ([`Exchange`]).
+
+pub mod frame;
+pub mod tree;
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::{cosine_lr, shard_range, QuantRecipe, TensorPolicy};
+use crate::coordinator::RunSummary;
+use crate::data::{BatchIter, CorpusCfg};
+use crate::model::{init_state, save_checkpoint};
+use crate::quant::{
+    dequant_acts_i8, int8_grad_eligible, operand_from_codes, pack_grads_i8, tight_codes_i8,
+    PackedGemmOperand,
+};
+use crate::runtime::{ModelInfo, ParamInfo, Runtime};
+use crate::train::{validation_loss, MetricsWriter, ProbeWriter, TrainCfg, TrainResult};
+use crate::util::stats::Ema;
+use frame::{Frame, WireNode, WireTensor, WireView};
+
+// ---------------------------------------------------------------------------
+// wire policy + gradient node algebra
+// ---------------------------------------------------------------------------
+
+/// The gradient-exchange quantization policy: the recipe's `g` policy when
+/// it is int8-eligible (8-bit symmetric per-tensor/per-token — exactly
+/// [`crate::quant::pack_grads_i8`]'s domain), `None` otherwise. Selected
+/// by the recipe alone; there is no separate knob.
+pub fn wire_policy(recipe: &QuantRecipe) -> Option<TensorPolicy> {
+    recipe.grads.filter(|p| int8_grad_eligible(*p))
+}
+
+/// The quantization view split of one parameter tensor, following the
+/// moment-qdq convention in `backend::native::adamw_update`: only >= 2-D
+/// base tensors quantize; stacked tensors split into per-layer
+/// `(shape[1], shape[2])` views, plain 2-D tensors are one view. 1-D
+/// tensors (biases, layernorm) return `None` and always travel as f32.
+fn view_dims(info: &ParamInfo) -> Option<(usize, usize, usize)> {
+    let base_ndim = info.shape.len() - usize::from(info.stacked);
+    if base_ndim < 2 {
+        return None;
+    }
+    if info.stacked {
+        Some((info.shape[0], info.shape[1], info.shape[2]))
+    } else {
+        Some((1, info.shape[0], info.shape[1]))
+    }
+}
+
+/// One per-parameter gradient tensor at a tree node: the dequantized f32
+/// value (what downstream sums / AdamW consume) plus, when the wire policy
+/// applies to this tensor, the packed views that *define* that value and
+/// are shipped verbatim.
+struct GradTensor {
+    data: Vec<f32>,
+    packed: Option<Vec<PackedGemmOperand>>,
+}
+
+impl GradTensor {
+    /// Build the canonical tensor from a raw f32 gradient: pack each view
+    /// once and take the dequant as the value (or keep raw f32 when the
+    /// policy does not apply).
+    fn from_raw(info: &ParamInfo, raw: Vec<f32>, policy: Option<TensorPolicy>) -> GradTensor {
+        match (policy, view_dims(info)) {
+            (Some(p), Some((views, rows, cols))) => {
+                debug_assert_eq!(raw.len(), views * rows * cols);
+                let mut packed = Vec::with_capacity(views);
+                let mut data = Vec::with_capacity(raw.len());
+                for v in 0..views {
+                    let view = &raw[v * rows * cols..(v + 1) * rows * cols];
+                    let op = pack_grads_i8(view, rows, cols, p);
+                    data.extend_from_slice(&dequant_acts_i8(&op));
+                    packed.push(op);
+                }
+                GradTensor { data, packed: Some(packed) }
+            }
+            _ => GradTensor { data: raw, packed: None },
+        }
+    }
+}
+
+/// One reduction-tree node: loss sum (f64) over the leaves it covers plus
+/// the per-parameter gradient tensors.
+struct GradNode {
+    loss: f64,
+    tensors: Vec<GradTensor>,
+}
+
+impl GradNode {
+    /// A leaf node from one sequence's backward output.
+    fn leaf(
+        model: &ModelInfo,
+        loss_sum: f64,
+        grads: Vec<Vec<f32>>,
+        policy: Option<TensorPolicy>,
+    ) -> GradNode {
+        let tensors = model
+            .params
+            .iter()
+            .zip(grads)
+            .map(|(info, g)| GradTensor::from_raw(info, g, policy))
+            .collect();
+        GradNode { loss: loss_sum, tensors }
+    }
+
+    /// The canonical combine: sum the child values, then re-canonicalize
+    /// (pack once) under the wire policy. Both children must be canonical.
+    fn combine(
+        model: &ModelInfo,
+        a: GradNode,
+        b: GradNode,
+        policy: Option<TensorPolicy>,
+    ) -> GradNode {
+        let tensors = model
+            .params
+            .iter()
+            .zip(a.tensors.into_iter().zip(b.tensors))
+            .map(|(info, (ta, tb))| {
+                let mut sum = ta.data;
+                for (s, x) in sum.iter_mut().zip(&tb.data) {
+                    *s += x;
+                }
+                GradTensor::from_raw(info, sum, policy)
+            })
+            .collect();
+        GradNode { loss: a.loss + b.loss, tensors }
+    }
+}
+
+/// Evaluate tree node `(level, idx)` by consuming `nodes`: a present entry
+/// (own leaf or a received wire node) is taken as-is; otherwise the node is
+/// built from its children. Carry nodes (empty right child) pass the left
+/// child through unchanged — no combine, no re-quantization.
+fn take_node(
+    level: u32,
+    idx: usize,
+    leaves: usize,
+    nodes: &mut HashMap<(u32, usize), GradNode>,
+    model: &ModelInfo,
+    policy: Option<TensorPolicy>,
+) -> Result<GradNode> {
+    if let Some(n) = nodes.remove(&(level, idx)) {
+        return Ok(n);
+    }
+    ensure!(level > 0, "missing leaf {idx} in the reduction tree");
+    let left = take_node(level - 1, 2 * idx, leaves, nodes, model, policy)?;
+    if tree::is_carry(level, idx, leaves) {
+        return Ok(left);
+    }
+    let right = take_node(level - 1, 2 * idx + 1, leaves, nodes, model, policy)?;
+    Ok(GradNode::combine(model, left, right, policy))
+}
+
+// ---------------------------------------------------------------------------
+// wire conversion
+// ---------------------------------------------------------------------------
+
+fn to_wire(level: u32, idx: usize, node: &GradNode) -> WireNode {
+    let tensors = node
+        .tensors
+        .iter()
+        .map(|t| match &t.packed {
+            Some(ops) => WireTensor::I8(
+                ops.iter()
+                    .map(|op| WireView {
+                        rows: op.rows as u32,
+                        cols: op.cols as u32,
+                        scales: op.scales.clone(),
+                        codes: tight_codes_i8(op),
+                    })
+                    .collect(),
+            ),
+            None => WireTensor::F32(t.data.clone()),
+        })
+        .collect();
+    WireNode {
+        level: level as u8,
+        idx: idx as u32,
+        loss: node.loss,
+        tensors,
+    }
+}
+
+/// Reconstruct a canonical node from the wire: exact dequant of the
+/// shipped codes + scales (never re-packed), with every dimension checked
+/// against the model so a wrong-shaped frame fails loudly.
+fn from_wire(model: &ModelInfo, wn: &WireNode, policy: Option<TensorPolicy>) -> Result<GradNode> {
+    ensure!(
+        wn.tensors.len() == model.params.len(),
+        "wire node has {} tensors, model {} has {} parameters",
+        wn.tensors.len(),
+        model.name,
+        model.params.len()
+    );
+    let mut tensors = Vec::with_capacity(wn.tensors.len());
+    for (info, wt) in model.params.iter().zip(&wn.tensors) {
+        let quantized = policy.is_some() && view_dims(info).is_some();
+        let t = match wt {
+            WireTensor::F32(data) => {
+                ensure!(!quantized, "{}: expected i8 wire tensor, got f32", info.name);
+                ensure!(
+                    data.len() == info.elems(),
+                    "{}: wire tensor has {} elements, expected {}",
+                    info.name,
+                    data.len(),
+                    info.elems()
+                );
+                GradTensor { data: data.clone(), packed: None }
+            }
+            WireTensor::I8(views) => {
+                ensure!(quantized, "{}: unexpected i8 wire tensor", info.name);
+                let (nviews, rows, cols) =
+                    view_dims(info).expect("quantized implies 2-D views");
+                ensure!(
+                    views.len() == nviews,
+                    "{}: wire tensor has {} views, expected {nviews}",
+                    info.name,
+                    views.len()
+                );
+                let mut data = Vec::with_capacity(info.elems());
+                let mut packed = Vec::with_capacity(nviews);
+                for v in views {
+                    ensure!(
+                        v.rows as usize == rows && v.cols as usize == cols,
+                        "{}: wire view is {}x{}, expected {rows}x{cols}",
+                        info.name,
+                        v.rows,
+                        v.cols
+                    );
+                    let op = operand_from_codes(&v.codes, v.scales.clone(), rows, cols);
+                    data.extend_from_slice(&dequant_acts_i8(&op));
+                    packed.push(op);
+                }
+                GradTensor { data, packed: Some(packed) }
+            }
+        };
+        tensors.push(t);
+    }
+    Ok(GradNode { loss: wn.loss, tensors })
+}
+
+// ---------------------------------------------------------------------------
+// filesystem exchange
+// ---------------------------------------------------------------------------
+
+static WIRE_WRITTEN: AtomicU64 = AtomicU64::new(0);
+static WIRE_READ: AtomicU64 = AtomicU64::new(0);
+
+/// Drain the process-global wire byte counters: (bytes published, bytes
+/// collected) since the last call. Benches use this to report f32 vs int8
+/// exchange volume.
+pub fn take_wire_stats() -> (u64, u64) {
+    (
+        WIRE_WRITTEN.swap(0, Ordering::Relaxed),
+        WIRE_READ.swap(0, Ordering::Relaxed),
+    )
+}
+
+fn dist_timeout() -> Duration {
+    let secs = std::env::var("QPRETRAIN_DIST_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(120);
+    Duration::from_secs(secs.max(1))
+}
+
+/// The per-step frame exchange over `<out>/dist`. Publishing is atomic
+/// (tmp + rename), so a frame file's existence is the step barrier.
+/// Failure is loud on three paths: any rank can drop an `ABORT` marker
+/// (peers bail with its message on their next poll), the leader polls its
+/// children's exit status, and every wait has a deadline
+/// (`QPRETRAIN_DIST_TIMEOUT_SECS`, default 120s).
+pub struct Exchange {
+    dir: PathBuf,
+    rank: usize,
+    dp: usize,
+    timeout: Duration,
+    /// Leader only: spawned worker children, polled during collect.
+    children: Vec<(usize, Child)>,
+}
+
+impl Exchange {
+    pub fn new(dir: &Path, rank: usize, dp: usize, timeout: Duration) -> Result<Exchange> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating exchange dir {dir:?}"))?;
+        Ok(Exchange {
+            dir: dir.to_path_buf(),
+            rank,
+            dp,
+            timeout,
+            children: Vec::new(),
+        })
+    }
+
+    fn attach_children(&mut self, children: Vec<(usize, Child)>) {
+        self.children = children;
+    }
+
+    fn frame_path(&self, step: u64, rank: usize) -> PathBuf {
+        self.dir.join(format!("step_{step}_rank_{rank}.frame"))
+    }
+
+    fn abort_path(&self) -> PathBuf {
+        self.dir.join("ABORT")
+    }
+
+    /// Drop the abort marker so every peer fails loudly on its next poll.
+    pub fn abort(&self, msg: &str) {
+        let tmp = self.dir.join(format!("ABORT.tmp.{}", self.rank));
+        if std::fs::write(&tmp, msg).is_ok() {
+            let _ = std::fs::rename(&tmp, self.abort_path());
+        }
+    }
+
+    /// Publish this rank's frame for `step` (atomic tmp + rename).
+    pub fn publish(&self, step: u64, frame: &Frame) -> Result<()> {
+        let bytes = frame::encode(frame);
+        WIRE_WRITTEN.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let tmp = self.dir.join(format!("step_{step}_rank_{}.tmp", self.rank));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, self.frame_path(step, self.rank))?;
+        Ok(())
+    }
+
+    /// A peer aborted, a child died, or we ran out of patience?
+    fn check_failures(&mut self) -> Result<()> {
+        let ap = self.abort_path();
+        if ap.exists() {
+            let msg = std::fs::read_to_string(&ap).unwrap_or_default();
+            bail!("dist peer aborted: {}", msg.trim());
+        }
+        let mut failed: Option<String> = None;
+        for (rank, child) in &mut self.children {
+            if let Some(status) = child.try_wait()? {
+                // A clean exit is fine (a worker legitimately finishes its
+                // final step while the leader is still collecting it).
+                if !status.success() {
+                    failed = Some(format!("dist worker rank {rank} exited: {status}"));
+                    break;
+                }
+            }
+        }
+        if let Some(msg) = failed {
+            self.abort(&msg);
+            bail!("{msg}");
+        }
+        Ok(())
+    }
+
+    /// Collect every other rank's frame for `step`, blocking with a
+    /// deadline. On success, garbage-collects this rank's `step - 1`
+    /// frame: a peer's `step` frame exists only after that peer consumed
+    /// every `step - 1` frame, so once all are seen the old frame is dead
+    /// and on-disk state stays bounded at ~2 steps.
+    pub fn collect(&mut self, step: u64) -> Result<Vec<Frame>> {
+        let deadline = Instant::now() + self.timeout;
+        let mut frames = Vec::with_capacity(self.dp - 1);
+        for r in 0..self.dp {
+            if r == self.rank {
+                continue;
+            }
+            let path = self.frame_path(step, r);
+            let bytes = loop {
+                self.check_failures()?;
+                match std::fs::read(&path) {
+                    Ok(b) => break b,
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e).context(format!("reading {path:?}")),
+                }
+                if Instant::now() > deadline {
+                    let msg = format!(
+                        "dist rank {} timed out after {:?} waiting for rank {r}'s step-{step} frame",
+                        self.rank, self.timeout
+                    );
+                    self.abort(&msg);
+                    bail!("{msg}");
+                }
+                std::thread::sleep(Duration::from_micros(300));
+            };
+            WIRE_READ.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            let f = frame::decode(&bytes).with_context(|| format!("decoding {path:?}"))?;
+            ensure!(
+                f.step == step && f.rank as usize == r && f.dp as usize == self.dp,
+                "frame {path:?} is for step {} rank {} dp {} (expected {step}/{r}/{})",
+                f.step,
+                f.rank,
+                f.dp,
+                self.dp
+            );
+            frames.push(f);
+        }
+        if step > 1 {
+            let _ = std::fs::remove_file(self.frame_path(step - 1, self.rank));
+        }
+        Ok(frames)
+    }
+
+    /// Leader: wait for all children; any non-success exit is an error.
+    fn finish(&mut self) -> Result<()> {
+        let mut err = None;
+        for (rank, child) in &mut self.children {
+            match child.wait() {
+                Ok(s) if s.success() => {}
+                Ok(s) => err = err.or(Some(anyhow!("dist worker rank {rank} exited: {s}"))),
+                Err(e) => err = err.or(Some(e.into())),
+            }
+        }
+        self.children.clear();
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn kill_children(&mut self) {
+        for (_, child) in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.children.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the rank loop (identical numerics on every rank)
+// ---------------------------------------------------------------------------
+
+/// The per-rank training loop. All ranks run the same code over the same
+/// replicated state; only leaf backwards and the wire differ. Rank 0 alone
+/// performs I/O (metrics, validation, probes, checkpoint).
+fn rank_loop(
+    rt: &Runtime,
+    cfg: &TrainCfg,
+    dp: usize,
+    rank: usize,
+    mut ex: Option<&mut Exchange>,
+) -> Result<TrainResult> {
+    struct ThreadsRestore(usize);
+    impl Drop for ThreadsRestore {
+        fn drop(&mut self) {
+            crate::backend::kernels::set_threads(self.0);
+        }
+    }
+    let _threads_guard = (cfg.hp.threads > 0).then(|| {
+        let prev = crate::backend::kernels::threads_override();
+        crate::backend::kernels::set_threads(cfg.hp.threads);
+        ThreadsRestore(prev)
+    });
+
+    let model = rt.model(&cfg.model)?.clone();
+    ensure!(dp >= 1 && rank < dp, "rank {rank} out of range for dp {dp}");
+    ensure!(
+        dp <= model.batch,
+        "dp {dp} exceeds the global batch {} of model {}",
+        model.batch,
+        model.name
+    );
+    let mut leaf_model = model.clone();
+    leaf_model.batch = 1;
+    let policy = wire_policy(&cfg.quant);
+    let (lo, hi) = shard_range(model.batch, dp, rank);
+    let seq = model.seq;
+    let global_m = model.batch * seq;
+    let inv_norm = 1.0f32 / global_m as f32;
+    let root_level = tree::root_level(model.batch);
+    let my_cover = tree::cover(lo, hi, model.batch);
+
+    // Every rank generates the *global* batch stream (cheap, deterministic)
+    // and backwards only its own leaf range — simpler and provably
+    // identical to slicing a shared stream.
+    let mut corpus = BatchIter::new(
+        CorpusCfg {
+            seed: cfg.hp.seed,
+            ..CorpusCfg::train_default(model.vocab)
+        },
+        model.batch,
+        model.seq,
+    );
+    let mut state = init_state(&model, cfg.hp.seed);
+
+    // Rank 0 keeps the run artifacts; workers write nothing.
+    let io_cfg = if rank == 0 {
+        cfg.clone()
+    } else {
+        TrainCfg {
+            out_dir: None,
+            ..cfg.clone()
+        }
+    };
+    let mut metrics = MetricsWriter::open(&io_cfg)?;
+    let mut probe = ProbeWriter::open(&io_cfg)?;
+
+    let mut losses = Vec::with_capacity(cfg.hp.steps);
+    let mut gnorms = Vec::with_capacity(cfg.hp.steps);
+    let mut val = Vec::new();
+    let mut spike_steps = Vec::new();
+    let mut ema = Ema::new(0.05);
+    let mut diverged_at: Option<usize> = None;
+    let mut min_loss = f64::INFINITY;
+
+    let t0 = Instant::now();
+    let mut steps_done = 0usize;
+
+    for i in 0..cfg.hp.steps {
+        let step = i + 1; // 1-based Adam counter
+        let batch = corpus.next_batch();
+        let lr = cosine_lr(&cfg.hp, i) as f32;
+
+        // Leaf backwards over this rank's shard.
+        let mut nodes: HashMap<(u32, usize), GradNode> = HashMap::new();
+        for leaf in lo..hi {
+            let x = &batch.x[leaf * seq..(leaf + 1) * seq];
+            let y = &batch.y[leaf * seq..(leaf + 1) * seq];
+            let (loss_sum, grads) =
+                rt.grad_step(&leaf_model, &cfg.quant, &state.params, x, y, inv_norm)?;
+            nodes.insert((0, leaf), GradNode::leaf(&model, loss_sum, grads, policy));
+        }
+
+        // Reduce the shard to its maximal tree-node cover (these exact
+        // values go on the wire, so peers never recompute them).
+        for &(l, idx) in &my_cover {
+            let n = take_node(l, idx, model.batch, &mut nodes, &model, policy)?;
+            nodes.insert((l, idx), n);
+        }
+
+        // Exchange covers with every peer.
+        if let Some(ex) = ex.as_deref_mut() {
+            if dp > 1 {
+                let wire_nodes = my_cover
+                    .iter()
+                    .map(|&(l, idx)| to_wire(l, idx, &nodes[&(l, idx)]))
+                    .collect();
+                ex.publish(
+                    step as u64,
+                    &Frame {
+                        step: step as u64,
+                        rank: rank as u32,
+                        dp: dp as u32,
+                        leaves: model.batch as u32,
+                        nodes: wire_nodes,
+                    },
+                )?;
+                for fr in ex.collect(step as u64)? {
+                    let (plo, phi) = shard_range(model.batch, dp, fr.rank as usize);
+                    let expect = tree::cover(plo, phi, model.batch);
+                    let mut got: Vec<(u32, usize)> = fr
+                        .nodes
+                        .iter()
+                        .map(|n| (n.level as u32, n.idx as usize))
+                        .collect();
+                    got.sort_unstable();
+                    let mut want = expect.clone();
+                    want.sort_unstable();
+                    ensure!(
+                        got == want,
+                        "rank {} shipped cover {got:?}, expected {want:?}",
+                        fr.rank
+                    );
+                    ensure!(
+                        fr.leaves as usize == model.batch,
+                        "rank {} frame is over {} leaves, expected {}",
+                        fr.rank,
+                        fr.leaves,
+                        model.batch
+                    );
+                    for wn in &fr.nodes {
+                        nodes.insert(
+                            (wn.level as u32, wn.idx as usize),
+                            from_wire(&model, wn, policy)?,
+                        );
+                    }
+                }
+            }
+        }
+
+        // Complete the (identical) tree and take the replicated update.
+        let root = take_node(root_level, 0, model.batch, &mut nodes, &model, policy)?;
+        let loss = root.loss / global_m as f64;
+        let grads: Vec<Vec<f32>> = root.tensors.into_iter().map(|t| t.data).collect();
+        let gnorm = rt.apply_grads(&model, &cfg.quant, &mut state, &grads, lr, step as f32)?;
+        state.step = step;
+        steps_done = i + 1;
+
+        losses.push(loss);
+        gnorms.push(gnorm);
+        min_loss = min_loss.min(if loss.is_finite() {
+            loss
+        } else {
+            f64::INFINITY
+        });
+
+        // Spike + divergence detection: pure functions of the replicated
+        // loss stream, so every rank decides (and breaks) in lockstep.
+        let ema_v = ema.update(if loss.is_finite() { loss } else { 1e9 });
+        if loss.is_finite() && i > 5 && loss > ema_v + 1.0 {
+            spike_steps.push(step);
+        }
+        if diverged_at.is_none() && (!loss.is_finite() || (i > 10 && loss > min_loss + 3.0)) {
+            diverged_at = Some(step);
+            if rank == 0 {
+                log::warn!("{}: diverged at step {step} (loss {loss})", cfg.quant.label());
+            }
+        }
+
+        if step % cfg.hp.log_every == 0 || i + 1 == cfg.hp.steps {
+            metrics.log(step, loss, gnorm, cosine_lr(&cfg.hp, i), None)?;
+        }
+        if rank == 0
+            && cfg.hp.eval_every > 0
+            && (step % cfg.hp.eval_every == 0 || i + 1 == cfg.hp.steps)
+        {
+            let vl = validation_loss(rt, cfg, &model, &state.params)?;
+            val.push((step, vl));
+            metrics.log(step, loss, gnorm, cosine_lr(&cfg.hp, i), Some(vl))?;
+        }
+        if cfg.hp.probe_every > 0 && step % cfg.hp.probe_every == 0 {
+            probe.record(rt, &model, step, &state.params)?;
+        }
+
+        if cfg.stop_on_divergence && diverged_at.is_some() {
+            break;
+        }
+    }
+    let steps_per_sec = steps_done as f64 / t0.elapsed().as_secs_f64();
+
+    if io_cfg.save_ckpt {
+        if let Some(dir) = &io_cfg.out_dir {
+            save_checkpoint(&dir.join("final.ckpt"), &model, &state)?;
+        }
+    }
+
+    Ok(TrainResult {
+        label: cfg.quant.label(),
+        losses,
+        gnorms,
+        val,
+        diverged: diverged_at.is_some(),
+        diverged_at,
+        spike_steps,
+        steps_per_sec,
+        final_state: state,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// launcher (leader) + worker entrypoint
+// ---------------------------------------------------------------------------
+
+/// The worker binary: `QPRETRAIN_BIN` override (tests and benches run from
+/// test binaries and point this at `CARGO_BIN_EXE_qpretrain`), else the
+/// current executable.
+fn worker_exe() -> Result<PathBuf> {
+    match std::env::var_os("QPRETRAIN_BIN") {
+        Some(p) => Ok(PathBuf::from(p)),
+        None => Ok(std::env::current_exe()?),
+    }
+}
+
+fn exchange_dir(out: &Path) -> PathBuf {
+    out.join("dist")
+}
+
+/// Leader entry: run `cfg` data-parallel over `cfg.hp.dp` processes (this
+/// process is rank 0). `dp <= 1` degenerates to the same sharded numerics
+/// with no exchange at all. Requires `cfg.out_dir` when `dp > 1` (the
+/// exchange protocol lives in `<out>/dist`; the dir is wiped first — stale
+/// frames or an old ABORT from a crashed run must not poison this one —
+/// and removed again on success).
+pub fn dist_train(rt: &Runtime, cfg: &TrainCfg) -> Result<TrainResult> {
+    let dp = cfg.hp.dp.max(1);
+    if dp == 1 {
+        return rank_loop(rt, cfg, 1, 0, None);
+    }
+    let out = cfg.out_dir.clone().ok_or_else(|| {
+        anyhow!("dist-train with dp > 1 needs an out dir (--out) for the exchange protocol")
+    })?;
+    let exdir = exchange_dir(&out);
+    let _ = std::fs::remove_dir_all(&exdir);
+
+    // Split the kernel thread budget across the dp processes, exactly like
+    // coordinator sweeps split it across wave workers.
+    let threads = crate::coordinator::worker_threads(cfg, dp);
+    let mut leader_cfg = cfg.clone();
+    leader_cfg.hp.threads = threads;
+
+    let exe = worker_exe()?;
+    let mut ex = Exchange::new(&exdir, 0, dp, dist_timeout())?;
+    let mut children = Vec::with_capacity(dp - 1);
+    for rank in 1..dp {
+        let mut cmd = Command::new(&exe);
+        cmd.args([
+            "dist-worker",
+            "--rank",
+            &rank.to_string(),
+            "--dp",
+            &dp.to_string(),
+            "--model",
+            &cfg.model,
+            "--quant",
+            &cfg.quant.to_string(),
+            "--steps",
+            &cfg.hp.steps.to_string(),
+            "--seed",
+            &cfg.hp.seed.to_string(),
+            "--lr",
+            &cfg.hp.lr_max.to_string(),
+            "--lr-min",
+            &cfg.hp.lr_min.to_string(),
+            "--warmup",
+            &cfg.hp.warmup.to_string(),
+            "--threads",
+            &threads.to_string(),
+            "--out",
+            out.to_str().ok_or_else(|| anyhow!("non-UTF8 out dir"))?,
+        ]);
+        if !cfg.stop_on_divergence {
+            cmd.arg("--no-early-stop");
+        }
+        // The int8-accumulator knob must reach the children even when it
+        // was set programmatically (tests) rather than via the env.
+        cmd.env(
+            "QPRETRAIN_INT8",
+            if crate::backend::native::int8_gemm_enabled() {
+                "on"
+            } else {
+                "off"
+            },
+        );
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning dist worker rank {rank}"))?;
+        children.push((rank, child));
+    }
+    ex.attach_children(children);
+
+    match rank_loop(rt, &leader_cfg, dp, 0, Some(&mut ex)) {
+        Ok(result) => {
+            ex.finish()?;
+            let _ = std::fs::remove_dir_all(&exdir);
+            Ok(result)
+        }
+        Err(e) => {
+            ex.abort(&format!("{e:#}"));
+            ex.kill_children();
+            Err(e)
+        }
+    }
+}
+
+/// Worker entry (`dist-worker` subcommand): join the exchange under
+/// `cfg.out_dir` as `rank` and run the same loop. Any error drops the
+/// ABORT marker before propagating, so the leader fails loudly too.
+pub fn dist_worker(rt: &Runtime, cfg: &TrainCfg, rank: usize) -> Result<()> {
+    let dp = cfg.hp.dp;
+    ensure!(dp > 1 && rank > 0 && rank < dp, "bad dist worker rank {rank} for dp {dp}");
+    let out = cfg
+        .out_dir
+        .clone()
+        .ok_or_else(|| anyhow!("dist-worker needs --out (the leader's run dir)"))?;
+    let mut ex = Exchange::new(&exchange_dir(&out), rank, dp, dist_timeout())?;
+    match rank_loop(rt, cfg, dp, rank, Some(&mut ex)) {
+        Ok(_) => Ok(()),
+        Err(e) => {
+            ex.abort(&format!("rank {rank}: {e:#}"));
+            Err(e)
+        }
+    }
+}
+
+/// Dist counterpart of [`crate::coordinator::execute_run`]: run `cfg`
+/// data-parallel into `dir`, persist the summary + loss curve, and mark
+/// the run `DONE` (the coordinator's cache token) only after everything
+/// else landed.
+pub fn execute_dist_run(rt: &Runtime, mut cfg: TrainCfg, dir: &Path) -> Result<RunSummary> {
+    cfg.out_dir = Some(dir.to_path_buf());
+    cfg.save_ckpt = true;
+    let r = dist_train(rt, &cfg)?;
+    let summary = RunSummary::from_result(&cfg, &r, dir);
+    summary.save()?;
+    let mut f = std::fs::File::create(dir.join("loss_curve.csv"))?;
+    writeln!(f, "step,loss,gnorm")?;
+    for (i, (l, g)) in r.losses.iter().zip(&r.gnorms).enumerate() {
+        writeln!(f, "{},{},{}", i + 1, l, g)?;
+    }
+    crate::coordinator::mark_done(dir)?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn micro() -> (Runtime, ModelInfo) {
+        let rt = Runtime::native();
+        let m = rt.model("micro").unwrap().clone();
+        (rt, m)
+    }
+
+    #[test]
+    fn wire_policy_follows_the_recipe() {
+        let p = |s: &str| wire_policy(&QuantRecipe::parse(s).unwrap());
+        assert!(p("base").is_none());
+        assert!(p("w8a8").is_none()); // no gradient component
+        assert!(p("w8a8g8").is_some()); // 8-bit symmetric per-tensor
+        assert!(p("g8_ptok").is_some());
+        assert!(p("g8_pc").is_none()); // per-channel grads are not eligible
+        assert!(p("g4_pt").is_none()); // nor 4-bit
+    }
+
+    #[test]
+    fn view_dims_follow_the_moment_qdq_convention() {
+        let (_, m) = micro();
+        for info in &m.params {
+            let v = view_dims(info);
+            let base_ndim = info.shape.len() - usize::from(info.stacked);
+            if base_ndim < 2 {
+                assert!(v.is_none(), "{} should stay f32", info.name);
+            } else {
+                let (views, rows, cols) = v.unwrap();
+                assert_eq!(views * rows * cols, info.elems(), "{}", info.name);
+                assert_eq!(views, if info.stacked { m.n_layer } else { 1 });
+            }
+        }
+        // 16 params; the 6 weight matrices quantize, biases/LN stay f32
+        let quantized = m.params.iter().filter(|p| view_dims(p).is_some()).count();
+        assert_eq!(quantized, 6);
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact_for_both_kinds() {
+        let (_, m) = micro();
+        let policy = wire_policy(&QuantRecipe::parse("w8a8g8").unwrap());
+        for pol in [None, policy] {
+            let grads: Vec<Vec<f32>> = m
+                .params
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    (0..p.elems())
+                        .map(|j| ((i * 31 + j * 7) % 13) as f32 * 0.05 - 0.3)
+                        .collect()
+                })
+                .collect();
+            let node = GradNode::leaf(&m, 1.25, grads, pol);
+            let wn = to_wire(0, 0, &node);
+            let back = from_wire(&m, &wn, pol).unwrap();
+            assert_eq!(back.loss.to_bits(), node.loss.to_bits());
+            for (a, b) in node.tensors.iter().zip(&back.tensors) {
+                assert_eq!(a.data.len(), b.data.len());
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_wire_rejects_wrong_shapes() {
+        let (_, m) = micro();
+        let node = GradNode::leaf(
+            &m,
+            0.0,
+            m.params.iter().map(|p| vec![0.0f32; p.elems()]).collect(),
+            None,
+        );
+        let mut wn = to_wire(0, 0, &node);
+        // kind mismatch: claim i8 under an f32 policy
+        wn.tensors[0] = WireTensor::I8(vec![]);
+        assert!(from_wire(&m, &wn, None).is_err());
+        // length mismatch
+        let mut wn = to_wire(0, 0, &node);
+        if let WireTensor::F32(v) = &mut wn.tensors[0] {
+            v.pop();
+        }
+        assert!(from_wire(&m, &wn, None).is_err());
+        // tensor-count mismatch
+        let mut wn = to_wire(0, 0, &node);
+        wn.tensors.pop();
+        assert!(from_wire(&m, &wn, None).is_err());
+    }
+
+    #[test]
+    fn carry_nodes_pass_through_without_requantization() {
+        // B=3: node (1,1) is a carry of leaf 2; the root combines (1,0)
+        // with it. Evaluating from leaves must equal evaluating from the
+        // exact leaf-2 value inserted at (1,1) — i.e. the carry never
+        // re-packs.
+        let (_, m) = micro();
+        let policy = wire_policy(&QuantRecipe::parse("w8a8g8").unwrap());
+        let leaf = |s: u64| {
+            GradNode::leaf(
+                &m,
+                s as f64,
+                m.params
+                    .iter()
+                    .map(|p| {
+                        (0..p.elems())
+                            .map(|j| ((j as u64).wrapping_mul(s * 2 + 1) % 17) as f32 * 0.1 - 0.8)
+                            .collect()
+                    })
+                    .collect(),
+                policy,
+            )
+        };
+        let mut nodes = HashMap::new();
+        for s in 0..3u64 {
+            nodes.insert((0, s as usize), leaf(s));
+        }
+        let root_a = take_node(2, 0, 3, &mut nodes, &m, policy).unwrap();
+
+        let mut nodes = HashMap::new();
+        nodes.insert((0, 0), leaf(0));
+        nodes.insert((0, 1), leaf(1));
+        nodes.insert((1, 1), leaf(2)); // the carry value IS leaf 2
+        let root_b = take_node(2, 0, 3, &mut nodes, &m, policy).unwrap();
+
+        assert_eq!(root_a.loss.to_bits(), root_b.loss.to_bits());
+        for (a, b) in root_a.tensors.iter().zip(&root_b.tensors) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

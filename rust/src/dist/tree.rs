@@ -1,0 +1,145 @@
+//! Fixed-shape binary reduction tree over the leaves of a global batch.
+//!
+//! This is the combine topology of the data-parallel trainer: every rank
+//! reduces gradients through the *same* pairwise tree, whose shape is a
+//! function of the leaf count alone — never of the worker count, the
+//! thread count, or arrival order. That is what makes an N-way run
+//! bit-identical to a 1-way run at matched global batch: `dp` only decides
+//! *who computes which subtree*, not *which subtrees exist*.
+//!
+//! Node `(level, idx)` covers the half-open leaf range
+//! `[idx * 2^level, min((idx + 1) * 2^level, leaves))`. Level 0 nodes are
+//! the leaves themselves; at each level, children `(l-1, 2i)` and
+//! `(l-1, 2i+1)` combine into `(l, i)`. When the right child's range is
+//! empty (odd counts), the left child **carries** to its parent unchanged —
+//! no combine happens, so a carried value is bit-identical at every level
+//! it rides through.
+
+/// Root level of the tree over `leaves` leaves: the smallest `l` with
+/// `2^l >= leaves` (a single node covering everything). One leaf is its
+/// own root.
+pub fn root_level(leaves: usize) -> u32 {
+    assert!(leaves > 0, "tree over zero leaves");
+    let mut l = 0u32;
+    while (1usize << l) < leaves {
+        l += 1;
+    }
+    l
+}
+
+/// Leaf range covered by node `(level, idx)`, clamped to `leaves`.
+/// Empty (`lo == hi`) when the node sits entirely past the last leaf.
+pub fn node_range(level: u32, idx: usize, leaves: usize) -> (usize, usize) {
+    let span = 1usize << level;
+    let lo = (idx * span).min(leaves);
+    let hi = ((idx + 1) * span).min(leaves);
+    (lo, hi)
+}
+
+/// Whether node `(level, idx)` is a carry: its right child's range is
+/// empty, so its value is its left child's value, passed through without a
+/// combine (and, on the wire, without a re-quantization).
+pub fn is_carry(level: u32, idx: usize, leaves: usize) -> bool {
+    if level == 0 {
+        return false;
+    }
+    let (lo, hi) = node_range(level - 1, 2 * idx + 1, leaves);
+    lo == hi
+}
+
+/// The maximal set of tree nodes whose ranges exactly tile `[lo, hi)`:
+/// what a rank owning that leaf range ships on the wire. Every returned
+/// node's range is fully inside `[lo, hi)`, so the rank can evaluate it
+/// from its own leaves; together with the other ranks' covers, the set
+/// tiles `[0, leaves)` and every rank completes the identical tree.
+///
+/// Deterministic: nodes come out in leaf order (depth-first left to
+/// right), highest level first within a position.
+pub fn cover(lo: usize, hi: usize, leaves: usize) -> Vec<(u32, usize)> {
+    assert!(lo <= hi && hi <= leaves, "cover range out of bounds");
+    let mut out = Vec::new();
+    if lo == hi {
+        return out;
+    }
+    let mut stack = vec![(root_level(leaves), 0usize)];
+    while let Some((l, i)) = stack.pop() {
+        let (nlo, nhi) = node_range(l, i, leaves);
+        if nhi <= lo || nlo >= hi || nlo == nhi {
+            continue;
+        }
+        if lo <= nlo && nhi <= hi {
+            out.push((l, i));
+            continue;
+        }
+        debug_assert!(l > 0, "leaf straddles the cover range");
+        // push right first so the left child pops first (leaf order)
+        stack.push((l - 1, 2 * i + 1));
+        stack.push((l - 1, 2 * i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_level_matches_ceil_log2() {
+        for (leaves, want) in [(1, 0), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4)] {
+            assert_eq!(root_level(leaves), want, "leaves={leaves}");
+        }
+    }
+
+    #[test]
+    fn node_ranges_clamp_and_tile() {
+        // B = 5: level 1 = [0,2) [2,4) [4,5) (carry) ; level 3 root = [0,5)
+        assert_eq!(node_range(1, 2, 5), (4, 5));
+        assert_eq!(node_range(1, 3, 5), (5, 5)); // empty
+        assert_eq!(node_range(3, 0, 5), (0, 5));
+        assert!(is_carry(1, 2, 5));
+        assert!(!is_carry(1, 0, 5));
+        // B = 5 level 2: [0,4) and [4,5); the latter is a carry of a carry
+        assert!(is_carry(2, 1, 5));
+        assert!(!is_carry(3, 0, 5));
+    }
+
+    #[test]
+    fn cover_tiles_any_shard_split() {
+        for leaves in 1..=17 {
+            for dp in 1..=leaves {
+                let mut tiled = Vec::new();
+                for rank in 0..dp {
+                    let lo = rank * leaves / dp;
+                    let hi = (rank + 1) * leaves / dp;
+                    for (l, i) in cover(lo, hi, leaves) {
+                        let (nlo, nhi) = node_range(l, i, leaves);
+                        assert!(lo <= nlo && nhi <= hi, "cover node escapes its shard");
+                        assert!(nlo < nhi, "empty cover node");
+                        tiled.push((nlo, nhi));
+                    }
+                }
+                tiled.sort_unstable();
+                let mut pos = 0;
+                for (nlo, nhi) in tiled {
+                    assert_eq!(nlo, pos, "gap or overlap at leaf {pos} (B={leaves} dp={dp})");
+                    pos = nhi;
+                }
+                assert_eq!(pos, leaves, "cover does not reach the last leaf");
+            }
+        }
+    }
+
+    #[test]
+    fn cover_is_maximal() {
+        // a shard owning an aligned power-of-two block ships exactly one node
+        assert_eq!(cover(0, 2, 4), vec![(1, 0)]);
+        assert_eq!(cover(2, 4, 4), vec![(1, 1)]);
+        assert_eq!(cover(0, 4, 4), vec![(2, 0)]);
+        // B=4 dp=3 shards: [0,1) [1,2) [2,4)
+        assert_eq!(cover(0, 1, 4), vec![(0, 0)]);
+        assert_eq!(cover(1, 2, 4), vec![(0, 1)]);
+        assert_eq!(cover(2, 4, 4), vec![(1, 1)]);
+        // unaligned range decomposes into O(log B) nodes
+        assert_eq!(cover(1, 5, 8), vec![(0, 1), (1, 1), (0, 4)]);
+    }
+}

@@ -22,8 +22,9 @@
 //! ([`data`]), training loop ([`train`]), evaluation ([`eval`]),
 //! post-training quantization ([`ptq`]), sharpness / outlier / gradient
 //! analyses ([`analysis`]), memory & time models ([`memmodel`],
-//! [`timemodel`]), and one experiment runner per paper table/figure
-//! ([`coordinator`]).
+//! [`timemodel`]), one experiment runner per paper table/figure
+//! ([`coordinator`]), and an N-process data-parallel trainer whose runs
+//! are bit-identical to single-process at matched global batch ([`dist`]).
 
 // Numeric-kernel code style: explicit index loops mirror the math and the
 // python reference; many hot signatures carry model + quant + state.
@@ -42,6 +43,7 @@ pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod eval;
 pub mod memmodel;
 pub mod model;

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   train        train one configuration (also the worker mode used by the
 //!                parallel sweep runner)
+//!   dist-train   N-process data-parallel training (`--dp N`), bit-identical
+//!                to single-process at matched global batch
+//!   dist-worker  internal rank-k entrypoint spawned by dist-train
 //!   eval         perplexity + few-shot suite on a checkpoint
 //!   ptq          post-training quantization of a checkpoint
 //!   sharpness    m-sharpness of a checkpoint
@@ -67,6 +70,7 @@ fn hp_from(args: &Args) -> Result<TrainHp> {
     hp.warmup = args.usize_or("warmup", hp.warmup)?;
     hp.eval_every = args.usize_or("eval-every", hp.eval_every)?;
     hp.eval_batches = args.usize_or("eval-batches", hp.eval_batches)?;
+    hp.dp = args.usize_or("dp", 1)?;
     Ok(hp)
 }
 
@@ -112,6 +116,8 @@ fn dispatch(args: &Args) -> Result<()> {
     qpretrain::backend::kernels::set_threads(args.usize_or("threads", 0)?);
     match args.subcommand.as_str() {
         "train" => cmd_train(args),
+        "dist-train" => cmd_dist_train(args),
+        "dist-worker" => cmd_dist_worker(args),
         "eval" => cmd_eval(args),
         "ptq" => cmd_ptq(args),
         "sharpness" => cmd_sharpness(args),
@@ -142,6 +148,11 @@ USAGE: qpretrain <subcommand> [--options]
   train        --model t4|micro|gpt2s --quant w8_pc --steps 300 [--out DIR]
                (--quant takes any recipe, e.g. w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc;
                 legacy --structure w_pc --wbits 8 flags still work)
+  dist-train   --model micro --quant w8a8g8 --steps 300 --dp 2 [--out DIR]
+               N-process data parallelism over the run-dir exchange
+               protocol (<out>/dist); gradients ship int8 when the
+               recipe's g policy is 8-bit symmetric pt/ptok, f32
+               otherwise. Bit-identical to --dp 1 at matched global batch.
   eval         --ckpt runs/train/t4/baseline_s300_seed1337 [--suite ppl|fewshot|all]
   ptq          --ckpt DIR --mode weights|acts --bits 8 --gran per_channel
   sharpness    --ckpt DIR [--radii 0.001,0.01,0.1]
@@ -159,9 +170,9 @@ USAGE: qpretrain <subcommand> [--options]
                int8 weights resident in memory (bitwise-equal to
                one-at-a-time decode); prints tokens/s, TTFT, occupancy
   selftest     native-backend validation against the rust quant oracle
-  digest       [--steps 8 --out digest.json] deterministic micro-train
-               digest; byte-identical across threads, QPRETRAIN_SIMD and
-               QPRETRAIN_INT8 legs
+  digest       [--steps 8 --out digest.json --dp N] deterministic
+               micro-train digest; byte-identical across threads,
+               QPRETRAIN_SIMD / QPRETRAIN_INT8 legs and every --dp
   list         models / recipe grammar / experiments
 
 Global options:
@@ -204,6 +215,55 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `dist-train`: the N-process data-parallel leader. Same interface as
+/// `train` plus `--dp N`; this process is rank 0 and spawns ranks 1..N as
+/// `dist-worker` subprocesses exchanging gradient frames under
+/// `<out>/dist`. Results are bit-identical at every `--dp` (the reduction
+/// tree is shaped by the global batch alone) — `digest --dp` proves it.
+fn cmd_dist_train(args: &Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let quant = quant_from(args)?;
+    let hp = hp_from(args)?;
+    let model = args.get_or("model", "t4");
+    let mut cfg = qpretrain::train::TrainCfg::new(&model, quant, hp);
+    cfg.stop_on_divergence = !args.flag("no-early-stop");
+
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        // Own cache namespace: the sharded trainer's tree numerics differ
+        // from the whole-batch `train` step, so the dirs must not collide.
+        let base = coordinator::run_dir(&runs_dir(args), &model, &cfg.quant, &cfg.hp);
+        let name = base.file_name().unwrap_or_default().to_string_lossy().into_owned();
+        base.with_file_name(format!("{name}_dp{}", cfg.hp.dp.max(1)))
+    });
+    let summary = qpretrain::dist::execute_dist_run(&rt, cfg.clone(), &out)?;
+    if !args.flag("quiet") {
+        println!(
+            "{} (dp={}): final loss {:.4}, val {:.4}, diverged={}, {:.2} steps/s -> {}",
+            summary.label,
+            cfg.hp.dp.max(1),
+            summary.final_loss,
+            summary.final_val_loss,
+            summary.diverged,
+            summary.steps_per_sec,
+            out.display()
+        );
+    }
+    Ok(())
+}
+
+/// `dist-worker`: internal rank-k entrypoint spawned by `dist-train`.
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let quant = quant_from(args)?;
+    let hp = hp_from(args)?;
+    let rank = args.usize_or("rank", 0)?;
+    let model = args.get_or("model", "t4");
+    let mut cfg = qpretrain::train::TrainCfg::new(&model, quant, hp);
+    cfg.stop_on_divergence = !args.flag("no-early-stop");
+    cfg.out_dir = Some(PathBuf::from(args.req("out")?));
+    qpretrain::dist::dist_worker(&rt, &cfg, rank)
 }
 
 fn open_ckpt(
@@ -737,14 +797,64 @@ fn cmd_digest(args: &Args) -> Result<()> {
         }
     }
 
+    // dist-train digest: the sharded reduction-tree trainer, fingerprinted
+    // the same way. Run at --dp N; the section's *content* is a function of
+    // the code and seed only — never of dp (the tree is shaped by the
+    // global batch alone), threads, SIMD, or the int8 knob — so CI
+    // byte-diffs a --dp 2 digest against a --dp 1 digest to prove the
+    // N-process trainer bit-matches single-process, and the thread/simd
+    // matrix legs (all --dp 1) keep covering the section too.
+    let dp = args.usize_or("dp", 1)?;
+    let mut dist_runs = Vec::new();
+    {
+        let tmp = (dp > 1).then(|| {
+            std::env::temp_dir().join(format!("qpretrain_digest_dist_{}", std::process::id()))
+        });
+        for spec in ["base", "w8a8g8"] {
+            let hp = TrainHp {
+                steps,
+                eval_every: steps,
+                eval_batches: 2,
+                log_every: usize::MAX,
+                dp,
+                ..TrainHp::default()
+            };
+            let mut cfg = qpretrain::train::TrainCfg::new("micro", QuantRecipe::parse(spec)?, hp);
+            cfg.out_dir = tmp.clone();
+            let r = qpretrain::dist::dist_train(&rt, &cfg)?;
+            let hex64 = |v: &[f64]| {
+                Value::Arr(v.iter().map(|x| json::s(&format!("{:016x}", x.to_bits()))).collect())
+            };
+            let val = Value::Arr(
+                r.val
+                    .iter()
+                    .map(|(s, l)| json::s(&format!("{s}:{:016x}", l.to_bits())))
+                    .collect(),
+            );
+            dist_runs.push(json::obj(vec![
+                ("recipe", json::s(spec)),
+                ("loss_bits", hex64(&r.losses)),
+                ("gnorm_bits", hex64(&r.gnorms)),
+                ("val_bits", val),
+                ("params_fnv", json::s(&state_hash(&r.final_state.params))),
+                ("m_fnv", json::s(&state_hash(&r.final_state.m))),
+                ("v_fnv", json::s(&state_hash(&r.final_state.v))),
+            ]));
+        }
+        if let Some(tmp) = tmp {
+            let _ = std::fs::remove_dir_all(tmp);
+        }
+    }
+
     let digest = json::obj(vec![
         ("model", json::s("micro")),
         ("steps", json::num(steps as f64)),
         ("runs", Value::Arr(runs)),
         ("generate", Value::Arr(gens)),
+        ("dist", Value::Arr(dist_runs)),
     ]);
     std::fs::write(&out, digest.to_json())?;
-    println!("wrote {out} (byte-diffable across threads/simd/int8 CI legs)");
+    println!("wrote {out} (byte-diffable across threads/simd/int8/dp CI legs)");
     Ok(())
 }
 

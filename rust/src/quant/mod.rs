@@ -500,6 +500,50 @@ pub fn dequant_weights_i8(p: &PackedGemmOperand) -> Vec<f32> {
     out
 }
 
+/// The raw integer codes of a packed operand as a tight (rows x cols) i8
+/// matrix, lane padding dropped: the canonical wire form of a quantized
+/// gradient (the `dist` exchange ships tight codes + scales and re-pads on
+/// receive with [`operand_from_codes`], so sender and receiver hold the
+/// same operand bit for bit).
+pub fn tight_codes_i8(p: &PackedGemmOperand) -> Vec<i8> {
+    assert_eq!(p.codes.len(), p.rows * p.stride);
+    let mut out = Vec::with_capacity(p.rows * p.cols);
+    for r in 0..p.rows {
+        out.extend_from_slice(&p.codes[r * p.stride..r * p.stride + p.cols]);
+    }
+    out
+}
+
+/// Rebuild a [`PackedGemmOperand`] from tight wire codes + scales: the
+/// inverse of [`tight_codes_i8`]. Re-pads each row to the lane stride with
+/// zero codes (semantically inert; see [`PackedGemmOperand`]), so
+/// `dequant_acts_i8(operand_from_codes(tight_codes_i8(p), ...))` is
+/// bitwise identical to `dequant_acts_i8(p)`.
+pub fn operand_from_codes(
+    tight: &[i8],
+    scales: Vec<f32>,
+    rows: usize,
+    cols: usize,
+) -> PackedGemmOperand {
+    assert_eq!(tight.len(), rows * cols, "tight codes must be rows x cols");
+    assert!(
+        scales.len() == 1 || scales.len() == rows,
+        "scales must be per-tensor or per-row"
+    );
+    let stride = cols.next_multiple_of(crate::backend::simd::I8_LANES);
+    let mut codes = vec![0i8; rows * stride];
+    for r in 0..rows {
+        codes[r * stride..r * stride + cols].copy_from_slice(&tight[r * cols..(r + 1) * cols]);
+    }
+    PackedGemmOperand {
+        codes,
+        scales,
+        rows,
+        cols,
+        stride,
+    }
+}
+
 /// The raw integer codes of a packed operand as a tight (rows x cols) f32
 /// matrix — **unscaled**. This is the operand of the f32-accumulation leg
 /// of the int8 GEMMs (`QPRETRAIN_INT8=off`): the f32 kernels fold the same

@@ -273,6 +273,34 @@ impl Runtime {
         self.backend.train_step(model, recipe, state, x, y, lr, t)
     }
 
+    /// Backward-only leaf step for sharded training; see
+    /// [`Backend::grad_step`].
+    pub fn grad_step(
+        &self,
+        model: &ModelInfo,
+        recipe: &QuantRecipe,
+        params: &[Vec<f32>],
+        x: &[i32],
+        y: &[i32],
+        inv_norm: f32,
+    ) -> Result<(f64, Vec<Vec<f32>>)> {
+        self.backend.grad_step(model, recipe, params, x, y, inv_norm)
+    }
+
+    /// AdamW update from pre-combined gradients; see
+    /// [`Backend::apply_grads`].
+    pub fn apply_grads(
+        &self,
+        model: &ModelInfo,
+        recipe: &QuantRecipe,
+        state: &mut HostState,
+        grads: &[Vec<f32>],
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        self.backend.apply_grads(model, recipe, state, grads, lr, t)
+    }
+
     /// Forward-only scoring; see [`Backend::eval_step`].
     pub fn eval_step(
         &self,

@@ -247,12 +247,12 @@ pub fn validation_loss(
 // metric + probe writers
 // ---------------------------------------------------------------------------
 
-struct MetricsWriter {
+pub(crate) struct MetricsWriter {
     file: Option<std::fs::File>,
 }
 
 impl MetricsWriter {
-    fn open(cfg: &TrainCfg) -> Result<MetricsWriter> {
+    pub(crate) fn open(cfg: &TrainCfg) -> Result<MetricsWriter> {
         let file = match &cfg.out_dir {
             None => None,
             Some(dir) => {
@@ -263,7 +263,7 @@ impl MetricsWriter {
         Ok(MetricsWriter { file })
     }
 
-    fn log(
+    pub(crate) fn log(
         &mut self,
         step: usize,
         loss: f64,
@@ -286,12 +286,12 @@ impl MetricsWriter {
 }
 
 /// Writes per-channel activation abs-max rows over training (Fig. 6 data).
-struct ProbeWriter {
+pub(crate) struct ProbeWriter {
     file: Option<std::fs::File>,
 }
 
 impl ProbeWriter {
-    fn open(cfg: &TrainCfg) -> Result<ProbeWriter> {
+    pub(crate) fn open(cfg: &TrainCfg) -> Result<ProbeWriter> {
         let file = match (&cfg.out_dir, cfg.hp.probe_every > 0) {
             (Some(dir), true) => {
                 std::fs::create_dir_all(dir)?;
@@ -302,7 +302,7 @@ impl ProbeWriter {
         Ok(ProbeWriter { file })
     }
 
-    fn record(
+    pub(crate) fn record(
         &mut self,
         rt: &Runtime,
         model: &crate::runtime::ModelInfo,

@@ -1,0 +1,244 @@
+//! Dist-trainer proof tests: an N-process data-parallel run must be
+//! **bit-identical** to a single-process run at matched global batch —
+//! losses, grad norms, validation, and the full final (params, m, v)
+//! state — for both the f32 and the quantized int8 gradient exchange,
+//! under both settings of the int8-accumulator knob. Plus loud-failure
+//! coverage for the filesystem exchange protocol.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use qpretrain::backend::native::{int8_gemm_enabled, set_int8_gemm};
+use qpretrain::config::{QuantRecipe, TrainHp};
+use qpretrain::dist::frame::{Frame, WireNode, WireTensor};
+use qpretrain::dist::{dist_train, wire_policy, Exchange};
+use qpretrain::runtime::Runtime;
+use qpretrain::train::{TrainCfg, TrainResult};
+
+/// The dist launcher resolves the worker binary through `QPRETRAIN_BIN`
+/// when set — tests run from the test harness binary, whose
+/// `current_exe()` is *not* the CLI.
+fn setup_bin() {
+    std::env::set_var("QPRETRAIN_BIN", env!("CARGO_BIN_EXE_qpretrain"));
+}
+
+/// `set_int8_gemm` is process-global; knob-toggling tests serialize on
+/// this so the parallel test harness can't interleave them.
+static INT8_LOCK: Mutex<()> = Mutex::new(());
+
+fn hp(steps: usize, dp: usize) -> TrainHp {
+    TrainHp {
+        steps,
+        eval_every: steps,
+        eval_batches: 2,
+        log_every: usize::MAX,
+        dp,
+        ..TrainHp::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qpretrain_dist_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn run(spec: &str, dp: usize, out: Option<PathBuf>) -> TrainResult {
+    let rt = Runtime::native();
+    let mut cfg = TrainCfg::new("micro", QuantRecipe::parse(spec).unwrap(), hp(5, dp));
+    cfg.out_dir = out;
+    dist_train(&rt, &cfg).unwrap()
+}
+
+fn assert_bit_identical(a: &TrainResult, b: &TrainResult, what: &str) {
+    let bits64 = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits64(&a.losses), bits64(&b.losses), "{what}: losses");
+    assert_eq!(bits64(&a.gnorms), bits64(&b.gnorms), "{what}: gnorms");
+    assert_eq!(
+        a.val
+            .iter()
+            .map(|(s, l)| (*s, l.to_bits()))
+            .collect::<Vec<_>>(),
+        b.val
+            .iter()
+            .map(|(s, l)| (*s, l.to_bits()))
+            .collect::<Vec<_>>(),
+        "{what}: val"
+    );
+    assert_eq!(a.diverged, b.diverged, "{what}: diverged");
+    assert_eq!(a.spike_steps, b.spike_steps, "{what}: spikes");
+    for (name, ta, tb) in [
+        ("params", &a.final_state.params, &b.final_state.params),
+        ("m", &a.final_state.m, &b.final_state.m),
+        ("v", &a.final_state.v, &b.final_state.v),
+    ] {
+        assert_eq!(ta.len(), tb.len(), "{what}: {name} tensor count");
+        for (i, (x, y)) in ta.iter().zip(tb.iter()).enumerate() {
+            let xb = x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            let yb = y.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(xb, yb, "{what}: {name}[{i}] differs");
+        }
+    }
+}
+
+/// dp in {2, 3} vs dp=1, for the f32 wire (base) and the quantized int8
+/// wire (w8a8g8), under both int8-accumulator settings. Also checks the
+/// exchange dir is cleaned up after success.
+#[test]
+fn nway_run_is_bit_identical_to_single_process() {
+    setup_bin();
+    let _g = INT8_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = int8_gemm_enabled();
+    for spec in ["base", "w8a8g8"] {
+        for int8 in [true, false] {
+            set_int8_gemm(int8);
+            let reference = run(spec, 1, None);
+            assert!(
+                !reference.losses.is_empty() && !reference.val.is_empty(),
+                "reference run produced no data"
+            );
+            for dp in [2usize, 3] {
+                let out = tmp_dir(&format!("{spec}_i{}_dp{dp}", u8::from(int8)));
+                let r = run(spec, dp, Some(out.clone()));
+                assert_bit_identical(
+                    &reference,
+                    &r,
+                    &format!("{spec} int8={int8} dp={dp}"),
+                );
+                assert!(
+                    !out.join("dist").exists(),
+                    "exchange dir must be removed after a clean run"
+                );
+                std::fs::remove_dir_all(&out).ok();
+            }
+        }
+    }
+    set_int8_gemm(prev);
+}
+
+#[test]
+fn wire_policy_is_selected_by_the_recipe_alone() {
+    let p = |s: &str| wire_policy(&QuantRecipe::parse(s).unwrap());
+    assert!(p("base").is_none());
+    assert!(p("w8a8").is_none());
+    assert!(p("w8a8g8").is_some());
+    assert!(p("g8_ptok").is_some());
+    assert!(p("g8_pc").is_none());
+    assert!(p("w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc").is_some());
+}
+
+#[test]
+fn dist_train_requires_an_out_dir_for_dp_over_1() {
+    setup_bin();
+    let rt = Runtime::native();
+    let cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(1, 2));
+    let err = dist_train(&rt, &cfg).unwrap_err().to_string();
+    assert!(err.contains("out dir"), "unexpected error: {err}");
+}
+
+#[test]
+fn dist_train_rejects_dp_beyond_the_batch() {
+    setup_bin();
+    let rt = Runtime::native();
+    // micro has a global batch of 4; dp=5 cannot shard it
+    let mut cfg = TrainCfg::new("micro", QuantRecipe::none(), hp(1, 5));
+    cfg.out_dir = Some(tmp_dir("overdp"));
+    let err = dist_train(&rt, &cfg).unwrap_err().to_string();
+    assert!(err.contains("exceeds the global batch"), "unexpected error: {err}");
+    std::fs::remove_dir_all(cfg.out_dir.unwrap()).ok();
+}
+
+fn empty_frame(step: u64, rank: u32, dp: u32) -> Frame {
+    Frame {
+        step,
+        rank,
+        dp,
+        leaves: 4,
+        nodes: vec![WireNode {
+            level: 1,
+            idx: rank,
+            loss: rank as f64,
+            tensors: vec![WireTensor::F32(vec![1.0, 2.0, 3.0])],
+        }],
+    }
+}
+
+/// Two in-process `Exchange` peers over one dir: publish/collect round-trips
+/// frames bit-exactly, and each rank's step-(s-1) frame is garbage-collected
+/// once its step-s collect completes.
+#[test]
+fn exchange_roundtrips_and_garbage_collects() {
+    let dir = tmp_dir("xchg");
+    let timeout = Duration::from_secs(30);
+    let mut ex0 = Exchange::new(&dir, 0, 2, timeout).unwrap();
+    let mut ex1 = Exchange::new(&dir, 1, 2, timeout).unwrap();
+
+    for step in 1..=2u64 {
+        let f0 = empty_frame(step, 0, 2);
+        let f1 = empty_frame(step, 1, 2);
+        ex0.publish(step, &f0).unwrap();
+        ex1.publish(step, &f1).unwrap();
+        let got0 = ex0.collect(step).unwrap();
+        let got1 = ex1.collect(step).unwrap();
+        assert_eq!(got0, vec![f1]);
+        assert_eq!(got1, vec![f0]);
+    }
+    // both ranks collected step 2, so their step-1 frames are gone
+    let left: HashSet<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(
+        !left.contains("step_1_rank_0.frame") && !left.contains("step_1_rank_1.frame"),
+        "stale frames not garbage-collected: {left:?}"
+    );
+    assert!(
+        left.contains("step_2_rank_0.frame") && left.contains("step_2_rank_1.frame"),
+        "current frames must survive: {left:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn exchange_times_out_loudly() {
+    let dir = tmp_dir("timeout");
+    let mut ex = Exchange::new(&dir, 0, 2, Duration::from_millis(60)).unwrap();
+    let err = ex.collect(1).unwrap_err().to_string();
+    assert!(err.contains("timed out"), "unexpected error: {err}");
+    // the timeout must also have dropped the ABORT marker for peers
+    assert!(dir.join("ABORT").exists(), "timeout must abort the peers too");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn exchange_propagates_peer_aborts() {
+    let dir = tmp_dir("abort");
+    let mut ex = Exchange::new(&dir, 0, 2, Duration::from_secs(30)).unwrap();
+    std::fs::write(dir.join("ABORT"), "rank 1: worker was killed").unwrap();
+    let err = ex.collect(1).unwrap_err().to_string();
+    assert!(
+        err.contains("worker was killed"),
+        "abort message must propagate: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A corrupted frame on disk must fail the collect, not feed garbage into
+/// the reduction.
+#[test]
+fn exchange_rejects_corrupt_frames() {
+    let dir = tmp_dir("corrupt");
+    let ex1 = Exchange::new(&dir, 1, 2, Duration::from_secs(30)).unwrap();
+    ex1.publish(1, &empty_frame(1, 1, 2)).unwrap();
+    // flip one payload byte behind the codec's back
+    let path = dir.join("step_1_rank_1.frame");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let mut ex0 = Exchange::new(&dir, 0, 2, Duration::from_secs(30)).unwrap();
+    assert!(ex0.collect(1).is_err(), "corrupt frame must be rejected");
+    std::fs::remove_dir_all(&dir).ok();
+}

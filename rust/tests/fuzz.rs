@@ -10,6 +10,7 @@
 //! fuzzing framework, no corpus files on disk.
 
 use qpretrain::config::QuantRecipe;
+use qpretrain::dist::frame::{self, Frame, WireNode, WireTensor, WireView};
 use qpretrain::util::json;
 use qpretrain::util::npy;
 use qpretrain::util::rng::Rng;
@@ -178,6 +179,105 @@ fn fuzz_npy_parser_never_panics() {
     }
 }
 
+/// Valid gradient-frame corpus for the dist wire codec: f32-only, mixed
+/// f32/i8 (per-tensor and per-row scales), and a minimal empty frame.
+fn frame_corpus() -> Vec<Vec<u8>> {
+    let f32_node = WireNode {
+        level: 2,
+        idx: 0,
+        loss: 1.5,
+        tensors: vec![
+            WireTensor::F32((0..24).map(|i| i as f32 * 0.5 - 6.0).collect()),
+            WireTensor::F32(vec![f32::NAN, -0.0, f32::INFINITY]),
+        ],
+    };
+    let i8_node = WireNode {
+        level: 1,
+        idx: 1,
+        loss: -2.25,
+        tensors: vec![
+            WireTensor::I8(vec![WireView {
+                rows: 3,
+                cols: 4,
+                scales: vec![0.125],
+                codes: (0..12).map(|i| (i as i8) - 6).collect(),
+            }]),
+            WireTensor::I8(vec![
+                WireView {
+                    rows: 2,
+                    cols: 5,
+                    scales: vec![0.5, 0.25],
+                    codes: (0..10).map(|i| (i as i8) * 11 - 50).collect(),
+                },
+                WireView {
+                    rows: 1,
+                    cols: 1,
+                    scales: vec![1.0],
+                    codes: vec![-128],
+                },
+            ]),
+            WireTensor::F32(vec![0.0; 7]),
+        ],
+    };
+    vec![
+        frame::encode(&Frame {
+            step: 3,
+            rank: 0,
+            dp: 2,
+            leaves: 4,
+            nodes: vec![f32_node.clone()],
+        }),
+        frame::encode(&Frame {
+            step: u64::MAX,
+            rank: 2,
+            dp: 3,
+            leaves: 7,
+            nodes: vec![f32_node, i8_node],
+        }),
+        frame::encode(&Frame {
+            step: 1,
+            rank: 1,
+            dp: 2,
+            leaves: 2,
+            nodes: vec![],
+        }),
+    ]
+}
+
+#[test]
+fn fuzz_frame_codec_never_panics() {
+    let corpus = frame_corpus();
+    let mut rng = Rng::new(0xF00D_0005);
+    let mut accepted = 0usize;
+    for round in 0..ROUNDS {
+        let base = &corpus[round % corpus.len()];
+        // the FNV-64 integrity check rejects nearly every mutation, so the
+        // accept path is pinned deterministically by interleaving pristine
+        // frames into the stream (round % 251 == 0)
+        let mutated = if round % 251 == 0 {
+            base.clone()
+        } else {
+            mutate(base, &mut rng)
+        };
+        // decode must never panic; and the codec is canonical, so any
+        // accepted byte string must re-encode to exactly itself — a
+        // mutation either breaks the frame (Err) or yields a different
+        // valid frame, never two spellings of the same frame
+        if let Ok(f) = frame::decode(&mutated) {
+            accepted += 1;
+            assert_eq!(
+                frame::encode(&f),
+                mutated,
+                "accepted frame bytes must be the canonical encoding"
+            );
+        }
+    }
+    assert!(
+        accepted >= ROUNDS / 251,
+        "accept path untested ({accepted} accepted)"
+    );
+}
+
 #[test]
 fn fuzz_unmutated_corpus_is_valid() {
     // guard the fuzz loops against a silently-broken corpus: every seed
@@ -190,4 +290,8 @@ fn fuzz_unmutated_corpus_is_valid() {
     assert_eq!(arr.shape, vec![2, 3]);
     assert_eq!(arr.data, data);
     QuantRecipe::parse("w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc").unwrap();
+    for bytes in frame_corpus() {
+        let f = frame::decode(&bytes).unwrap();
+        assert_eq!(frame::encode(&f), bytes, "frame corpus must be canonical");
+    }
 }

@@ -37,14 +37,16 @@ if [ "$run" -eq 1 ]; then
     QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_kernels
     QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_train_loop
     QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_serve
+    QPRETRAIN_BENCH_FAST=1 cargo bench --bench bench_dist
   else
     cargo bench --bench bench_kernels
     cargo bench --bench bench_train_loop
     cargo bench --bench bench_serve
+    cargo bench --bench bench_dist
   fi
 fi
 
-for f in BENCH_kernels.json BENCH_train_loop.json BENCH_serve.json; do
+for f in BENCH_kernels.json BENCH_train_loop.json BENCH_serve.json BENCH_dist.json; do
   if [ ! -f "$f" ]; then
     echo "missing $f at the repo root (run the benches, or drop --no-run)" >&2
     exit 1
@@ -55,7 +57,7 @@ sha=$(git rev-parse --short HEAD 2>/dev/null || echo nogit)
 stamp=$(date -u +%Y-%m-%dT%H%M%SZ)
 dir="bench_history/${stamp}_${sha}"
 mkdir -p "$dir"
-cp BENCH_kernels.json BENCH_train_loop.json BENCH_serve.json "$dir/"
+cp BENCH_kernels.json BENCH_train_loop.json BENCH_serve.json BENCH_dist.json "$dir/"
 dirty=false
 if ! git diff --quiet 2>/dev/null; then
   dirty=true
