@@ -2,8 +2,10 @@
 //! wire volume for the reduction-tree exchange.
 //!
 //! Emits `BENCH_dist.json` at the repo root (tokens/s at dp 1 and dp 2,
-//! scaling efficiency, f32-vs-int8 exchange bytes per step), then fails
-//! against the committed floors in `rust/tests/bench_baseline.json`. Set
+//! scaling efficiency, f32-vs-int8 exchange bytes per step, per-step
+//! exchange wall-clock for the filesystem vs the in-process channel
+//! transport, and overlap-vs-barrier publish), then fails against the
+//! committed floors in `rust/tests/bench_baseline.json`. Set
 //! `QPRETRAIN_BENCH_FAST=1` for a smoke run with fewer steps.
 //!
 //! Floor rows carry their dp as a JSON *string* (`"dp": "1"`): the
@@ -12,24 +14,37 @@
 use std::path::PathBuf;
 
 use qpretrain::backend::kernels;
-use qpretrain::config::{QuantRecipe, TrainHp};
-use qpretrain::dist::{dist_train, take_wire_stats};
+use qpretrain::config::{DistTransport, QuantRecipe, TrainHp};
+use qpretrain::dist::{dist_train, take_exchange_nanos, take_wire_stats};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::TrainCfg;
 use qpretrain::util::bench::section;
 use qpretrain::util::json::{self, Value};
 
-fn cfg(spec: &str, steps: usize, dp: usize, out: Option<PathBuf>) -> TrainCfg {
+fn cfg_t(
+    spec: &str,
+    steps: usize,
+    dp: usize,
+    out: Option<PathBuf>,
+    transport: DistTransport,
+    overlap: bool,
+) -> TrainCfg {
     let hp = TrainHp {
         steps,
         eval_every: 0,
         log_every: usize::MAX,
         dp,
+        dist_transport: transport,
+        dist_overlap: overlap,
         ..TrainHp::default()
     };
     let mut c = TrainCfg::new("micro", QuantRecipe::parse(spec).unwrap(), hp);
     c.out_dir = out;
     c
+}
+
+fn cfg(spec: &str, steps: usize, dp: usize, out: Option<PathBuf>) -> TrainCfg {
+    cfg_t(spec, steps, dp, out, DistTransport::Filesystem, true)
 }
 
 fn main() {
@@ -101,6 +116,60 @@ fn main() {
         ("f32_over_i8", json::num(ratio)),
     ]));
     println!("f32/i8 wire ratio: {ratio:.2}x");
+
+    section("per-step exchange wall-clock (dp 2, w8a8g8): filesystem vs channel");
+    // Rank 0's publish + collect time only (take_exchange_nanos counts the
+    // leader alone, so filesystem worker subprocesses don't skew it). The
+    // channel transport skips the disk, the rename barrier, and the poll
+    // loop entirely, so it should win by a wide margin.
+    let mut ex_us = Vec::new();
+    for (name, transport, out) in [
+        ("filesystem", DistTransport::Filesystem, Some(out_root.join("ex_fs"))),
+        ("channel", DistTransport::Channel, None),
+    ] {
+        take_exchange_nanos(); // reset
+        dist_train(&rt, &cfg_t("w8a8g8", steps, 2, out, transport, true)).expect("dist run");
+        let us = take_exchange_nanos() as f64 / steps as f64 / 1e3;
+        ex_us.push(us);
+        println!("{name:>10}: {us:>9.1} us/step exchange");
+    }
+    let fs_over_channel = ex_us[0] / ex_us[1].max(1e-9);
+    results.push(json::obj(vec![
+        ("name", json::s("transport")),
+        ("recipe", json::s("w8a8g8")),
+        ("dp", json::s("2")),
+        ("fs_exchange_us_per_step", json::num(ex_us[0])),
+        ("channel_exchange_us_per_step", json::num(ex_us[1])),
+        ("exchange_fs_over_channel", json::num(fs_over_channel)),
+    ]));
+    println!("filesystem/channel exchange ratio: {fs_over_channel:.2}x");
+
+    section("overlap vs barrier publish (dp 2, w8a8g8, filesystem)");
+    // At micro scale every dp-2 shard cover is a single node, so overlap
+    // and barrier ship the same one frame — this row guards that the
+    // overlap path costs nothing, not that it wins (multi-node covers
+    // only appear at larger batches).
+    let mut ov_us = Vec::new();
+    for (name, overlap) in [("overlap", true), ("barrier", false)] {
+        take_exchange_nanos(); // reset
+        let out = Some(out_root.join(format!("ov_{name}")));
+        dist_train(&rt, &cfg_t("w8a8g8", steps, 2, out, DistTransport::Filesystem, overlap))
+            .expect("dist run");
+        let us = take_exchange_nanos() as f64 / steps as f64 / 1e3;
+        ov_us.push(us);
+        println!("{name:>8}: {us:>9.1} us/step exchange");
+    }
+    let barrier_over_overlap = ov_us[1] / ov_us[0].max(1e-9);
+    results.push(json::obj(vec![
+        ("name", json::s("overlap")),
+        ("recipe", json::s("w8a8g8")),
+        ("dp", json::s("2")),
+        ("transport", json::s("filesystem")),
+        ("overlap_us_per_step", json::num(ov_us[0])),
+        ("barrier_us_per_step", json::num(ov_us[1])),
+        ("barrier_over_overlap", json::num(barrier_over_overlap)),
+    ]));
+    println!("barrier/overlap exchange ratio: {barrier_over_overlap:.2}x");
 
     std::fs::remove_dir_all(&out_root).ok();
 

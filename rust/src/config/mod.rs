@@ -544,6 +544,38 @@ impl fmt::Display for QuantRecipe {
     }
 }
 
+/// Gradient-exchange transport for the data-parallel trainer. A
+/// wall-clock knob, never a numerics knob: both transports carry the
+/// same canonical frames, so results are bit-identical across them
+/// (`digest --dp 2 --transport ...` proves it in CI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistTransport {
+    /// Run-dir frame files (`<out>/dist/step_*_rank_*_part_*.frame`),
+    /// atomic tmp+rename publish, polling collect. Ranks are separate
+    /// processes; needs an `--out` dir; survives any process topology.
+    Filesystem,
+    /// Bounded in-process MPSC channels; ranks run as threads of one
+    /// process. No disk, no poll loop, no out dir required.
+    Channel,
+}
+
+impl DistTransport {
+    pub fn parse(s: &str) -> Result<DistTransport> {
+        match s {
+            "filesystem" | "fs" => Ok(DistTransport::Filesystem),
+            "channel" | "chan" => Ok(DistTransport::Channel),
+            other => bail!("unknown dist transport {other:?} (filesystem|channel)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DistTransport::Filesystem => "filesystem",
+            DistTransport::Channel => "channel",
+        }
+    }
+}
+
 /// Training hyperparameters (paper Appendix A, nanoGPT-style).
 #[derive(Debug, Clone)]
 pub struct TrainHp {
@@ -567,6 +599,14 @@ pub struct TrainHp {
     /// shaped by the global batch alone, so results are bit-identical at
     /// every `dp` ([`shard_range`] derives each rank's leaf range).
     pub dp: usize,
+    /// How dist ranks exchange gradient frames ([`DistTransport`]).
+    /// Wall-clock only — every transport carries the same canonical bytes.
+    pub dist_transport: DistTransport,
+    /// Overlap shard backward with frame publish: ship each subtree-cover
+    /// node the moment its leaf range completes (multi-part steps) instead
+    /// of one frame after the full shard backward. The reassembled node
+    /// set is byte-identical either way, so this too is wall-clock only.
+    pub dist_overlap: bool,
 }
 
 impl TrainHp {
@@ -601,6 +641,8 @@ impl Default for TrainHp {
             log_every: 10,
             threads: 0,
             dp: 1,
+            dist_transport: DistTransport::Filesystem,
+            dist_overlap: true,
         }
     }
 }

@@ -1,0 +1,455 @@
+//! In-process channel transport: ranks are threads of one process.
+//!
+//! The wire format is identical to the filesystem exchange — the same
+//! encoded QDGF frames ([`super::frame`]) — but they travel over bounded
+//! in-memory MPSC channels instead of `<out>/dist` files, so there is no
+//! disk traffic, no poll loop, and no out-dir requirement. Each rank owns
+//! one receiver; publishing sends the encoded frame to every peer's
+//! channel. The failure semantics mirror the filesystem protocol's
+//! ABORT-marker/deadline design:
+//!
+//! * a shared first-wins **abort slot** replaces the ABORT file — any
+//!   rank's error is visible to every peer on its next send/receive;
+//! * every blocking wait (a full channel on publish, an empty one on
+//!   collect) has the same `QPRETRAIN_DIST_TIMEOUT_SECS` deadline, checked
+//!   with `>=` so a zero timeout means "must already be there";
+//! * a hung-up peer (dropped receiver, e.g. a panicked thread) fails the
+//!   sender loudly instead of blocking forever.
+//!
+//! Channel capacity is sized so that a healthy run never blocks on
+//! publish: peers run at most one step ahead (a step-`s+1` frame can only
+//! exist after its sender collected step `s`), and a step ships at most
+//! one frame per cover node, so `2 * (dp - 1) * (2 * root_level + 2)`
+//! slots bound everything in flight.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::frame::{self, Frame};
+use super::{merge_parts, tree, Transport, WIRE_READ, WIRE_WRITTEN};
+use crate::runtime::Runtime;
+use crate::train::{TrainCfg, TrainResult};
+
+/// One rank's endpoint of the in-process exchange. Build the full set with
+/// [`connect`]; each endpoint then moves to its rank's thread.
+pub struct ChannelTransport {
+    rank: usize,
+    dp: usize,
+    timeout: Duration,
+    /// First-wins abort slot shared by all ranks (the ABORT marker's
+    /// in-memory twin).
+    abort: Arc<Mutex<Option<String>>>,
+    /// Senders into each peer's receiver; `None` at this rank's own index.
+    peers: Vec<Option<SyncSender<Vec<u8>>>>,
+    rx: Receiver<Vec<u8>>,
+    /// Frames received but not yet assembled, keyed by (step, rank) — a
+    /// peer may already be shipping step `s + 1` while we collect `s`.
+    stash: HashMap<(u64, u32), Vec<Frame>>,
+}
+
+/// Wire up `dp` fully-connected endpoints. `capacity` bounds each rank's
+/// receive queue (see the module docs for sizing).
+pub fn connect(dp: usize, capacity: usize, timeout: Duration) -> Vec<ChannelTransport> {
+    let abort = Arc::new(Mutex::new(None));
+    let mut txs = Vec::with_capacity(dp);
+    let mut rxs = Vec::with_capacity(dp);
+    for _ in 0..dp {
+        let (tx, rx) = sync_channel(capacity.max(1));
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| ChannelTransport {
+            rank,
+            dp,
+            timeout,
+            abort: abort.clone(),
+            peers: txs
+                .iter()
+                .enumerate()
+                .map(|(r, tx)| (r != rank).then(|| tx.clone()))
+                .collect(),
+            rx,
+            stash: HashMap::new(),
+        })
+        .collect()
+}
+
+impl ChannelTransport {
+    fn check_abort(&self) -> Result<()> {
+        if let Some(msg) = self.abort.lock().unwrap().clone() {
+            bail!("dist peer aborted: {msg}");
+        }
+        Ok(())
+    }
+
+    /// Decode and stash one received frame, validating it comes from a
+    /// peer of this exchange and is for the current or the next step
+    /// (anything else means the lockstep protocol broke).
+    fn admit(&mut self, step: u64, bytes: &[u8]) -> Result<()> {
+        WIRE_READ.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let f = frame::decode(bytes).context("decoding channel frame")?;
+        ensure!(
+            f.dp as usize == self.dp
+                && (f.rank as usize) < self.dp
+                && f.rank as usize != self.rank,
+            "channel frame from rank {} dp {} (expected a peer of rank {} dp {})",
+            f.rank,
+            f.dp,
+            self.rank,
+            self.dp
+        );
+        ensure!(
+            f.step == step || f.step == step + 1,
+            "channel frame for step {} while collecting step {step} \
+             (peers run at most one step ahead)",
+            f.step
+        );
+        self.stash.entry((f.step, f.rank)).or_default().push(f);
+        Ok(())
+    }
+
+    /// If every peer's step-`step` shipment is complete in the stash,
+    /// merge each into its single-frame form (in rank order) and return
+    /// them; otherwise leave the stash untouched and return `None`.
+    fn try_assemble(&mut self, step: u64) -> Result<Option<Vec<Frame>>> {
+        for r in 0..self.dp as u32 {
+            if r as usize == self.rank {
+                continue;
+            }
+            let Some(parts) = self.stash.get(&(step, r)) else {
+                return Ok(None);
+            };
+            let Some(p0) = parts.iter().find(|f| f.part == 0) else {
+                return Ok(None);
+            };
+            if parts.len() < p0.parts as usize {
+                return Ok(None);
+            }
+        }
+        let mut frames = Vec::with_capacity(self.dp - 1);
+        for r in 0..self.dp as u32 {
+            if r as usize == self.rank {
+                continue;
+            }
+            let mut parts = self.stash.remove(&(step, r)).unwrap();
+            parts.sort_by_key(|f| f.part);
+            let want = parts[0].parts;
+            ensure!(
+                parts.len() as u32 == want,
+                "rank {r} shipped {} frames for step {step}, part 0 claims {want}",
+                parts.len()
+            );
+            for (i, f) in parts.iter().enumerate() {
+                ensure!(
+                    f.part as usize == i && f.parts == want,
+                    "rank {r} step {step} part framing is inconsistent \
+                     (part {} of {}, expected {i} of {want})",
+                    f.part,
+                    f.parts
+                );
+            }
+            frames.push(merge_parts(parts));
+        }
+        Ok(Some(frames))
+    }
+}
+
+impl Transport for ChannelTransport {
+    /// Send the encoded frame to every peer. A full channel backs off
+    /// (50µs doubling to 1ms) under the usual deadline; in a healthy run
+    /// the capacity bound means this never blocks at all.
+    fn publish(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame::encode(frame);
+        WIRE_WRITTEN.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let deadline = Instant::now() + self.timeout;
+        for (r, tx) in self.peers.iter().enumerate() {
+            let Some(tx) = tx else { continue };
+            let mut msg = bytes.clone();
+            let mut backoff = Duration::from_micros(50);
+            loop {
+                self.check_abort()?;
+                match tx.try_send(msg) {
+                    Ok(()) => break,
+                    Err(TrySendError::Full(m)) => {
+                        msg = m;
+                        if Instant::now() >= deadline {
+                            let e = format!(
+                                "dist rank {} timed out after {:?} publishing step {} part {} \
+                                 to rank {r}",
+                                self.rank, self.timeout, frame.step, frame.part
+                            );
+                            self.abort(&e);
+                            bail!("{e}");
+                        }
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(Duration::from_millis(1));
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        self.check_abort()?;
+                        bail!("dist rank {r} hung up (its receiver is gone)");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive until every peer's step-`step` shipment assembles.
+    /// Everything already queued is admitted before the deadline is
+    /// judged, so — like the filesystem collect — a zero timeout succeeds
+    /// when the frames have already arrived.
+    fn collect(&mut self, step: u64) -> Result<Vec<Frame>> {
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            self.check_abort()?;
+            loop {
+                match self.rx.try_recv() {
+                    Ok(bytes) => self.admit(step, &bytes)?,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        self.check_abort()?;
+                        break;
+                    }
+                }
+            }
+            if let Some(frames) = self.try_assemble(step)? {
+                return Ok(frames);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let msg = format!(
+                    "dist rank {} timed out after {:?} collecting step {step}",
+                    self.rank, self.timeout
+                );
+                self.abort(&msg);
+                bail!("{msg}");
+            }
+            match self.rx.recv_timeout((deadline - now).min(Duration::from_millis(5))) {
+                Ok(bytes) => self.admit(step, &bytes)?,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.check_abort()?;
+                    bail!("dist rank {}: all peers hung up mid-collect", self.rank);
+                }
+            }
+        }
+    }
+
+    /// First write wins — an abort caused by another abort must not mask
+    /// the root cause.
+    fn abort(&self, msg: &str) {
+        let mut slot = self.abort.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg.to_string());
+        }
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// Channel leader: run all `dp` ranks as threads of this process (rank 0
+/// on the calling thread). The kernel thread budget is split once,
+/// process-globally, exactly like the filesystem leader splits it across
+/// worker processes; rank configs carry `threads = 0` so the per-rank
+/// guard inside [`super::rank_loop`] stays a no-op (the pool knob is
+/// process-global and must not be raced from dp threads). Worker panics
+/// are caught, turned into aborts, and surfaced as errors — never a hang.
+pub(crate) fn dist_train_channel(rt: &Runtime, cfg: &TrainCfg, dp: usize) -> Result<TrainResult> {
+    struct ThreadsRestore(usize);
+    impl Drop for ThreadsRestore {
+        fn drop(&mut self) {
+            crate::backend::kernels::set_threads(self.0);
+        }
+    }
+    let threads = crate::coordinator::worker_threads(cfg, dp);
+    let prev = crate::backend::kernels::threads_override();
+    crate::backend::kernels::set_threads(threads);
+    let _threads_guard = ThreadsRestore(prev);
+
+    let model_batch = rt.model(&cfg.model)?.batch;
+    let capacity = 2 * (dp - 1) * (2 * tree::root_level(model_batch) as usize + 2);
+    let mut transports = connect(dp, capacity, super::dist_timeout());
+    let mut leader_tp = transports.remove(0);
+
+    let mut rank_cfg = cfg.clone();
+    rank_cfg.hp.threads = 0;
+    let rank_cfg = &rank_cfg;
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(dp - 1);
+        for (i, mut tp) in transports.into_iter().enumerate() {
+            let rank = i + 1;
+            handles.push(scope.spawn(move || -> Result<()> {
+                // Runtime is not Sync (backends are free-form boxed state),
+                // so every rank thread builds its own — they are
+                // stateless lookups over the same static model zoo.
+                let rt = Runtime::native();
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    super::rank_loop(&rt, rank_cfg, dp, rank, Some(&mut tp))
+                }));
+                match out {
+                    Ok(Ok(_)) => Ok(()),
+                    Ok(Err(e)) => {
+                        tp.abort(&format!("rank {rank}: {e:#}"));
+                        Err(e)
+                    }
+                    Err(p) => {
+                        let msg = panic_msg(&*p);
+                        tp.abort(&format!("rank {rank} panicked: {msg}"));
+                        bail!("dist rank {rank} panicked: {msg}");
+                    }
+                }
+            }));
+        }
+
+        let leader = match catch_unwind(AssertUnwindSafe(|| {
+            super::rank_loop(rt, rank_cfg, dp, 0, Some(&mut leader_tp))
+        })) {
+            Ok(r) => r,
+            Err(p) => {
+                let msg = panic_msg(&*p);
+                Err(anyhow!("dist rank 0 panicked: {msg}"))
+            }
+        };
+        if let Err(e) = &leader {
+            leader_tp.abort(&format!("{e:#}"));
+        }
+
+        let mut worker_err: Option<anyhow::Error> = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => worker_err = worker_err.or(Some(e)),
+                Err(_) => {
+                    worker_err = worker_err.or(Some(anyhow!("dist worker thread died")));
+                }
+            }
+        }
+        match (leader, worker_err) {
+            (Ok(r), None) => Ok(r),
+            (Ok(_), Some(e)) => Err(e),
+            (Err(e), _) => Err(e),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::frame::{encode, WireNode, WireTensor};
+    use super::*;
+
+    fn frame_with(step: u64, rank: u32, dp: u32, part: u32, parts: u32, idx: u32) -> Frame {
+        Frame {
+            step,
+            rank,
+            dp,
+            leaves: 4,
+            part,
+            parts,
+            nodes: vec![WireNode {
+                level: 0,
+                idx,
+                loss: 1.5 * (idx as f64 + 1.0),
+                tensors: vec![WireTensor::F32(vec![idx as f32, -1.0, 0.25])],
+            }],
+        }
+    }
+
+    #[test]
+    fn multi_part_shipment_assembles_in_cover_order() {
+        let mut tps = connect(2, 8, Duration::from_secs(5));
+        let mut t1 = tps.pop().unwrap();
+        let mut t0 = tps.pop().unwrap();
+        // rank 0 ships step 1 as three parts, deliberately in order (the
+        // protocol publishes parts in cover order)
+        for part in 0..3u32 {
+            t0.publish(&frame_with(1, 0, 2, part, 3, part)).unwrap();
+        }
+        let got = t1.collect(1).unwrap();
+        assert_eq!(got.len(), 1);
+        let f = &got[0];
+        assert_eq!((f.part, f.parts), (0, 1), "merged frame is part 0 of 1");
+        assert_eq!(f.nodes.len(), 3);
+        let idxs: Vec<u32> = f.nodes.iter().map(|n| n.idx).collect();
+        assert_eq!(idxs, vec![0, 1, 2], "nodes concatenate in part order");
+        // byte-identical to the same nodes shipped as one barrier frame
+        let mut barrier = frame_with(1, 0, 2, 0, 1, 0);
+        barrier.nodes = (0..3).map(|i| frame_with(1, 0, 2, 0, 1, i).nodes.remove(0)).collect();
+        assert_eq!(encode(f), encode(&barrier));
+    }
+
+    #[test]
+    fn next_step_frames_stash_without_disturbing_current() {
+        let mut tps = connect(2, 8, Duration::from_secs(5));
+        let mut t1 = tps.pop().unwrap();
+        let mut t0 = tps.pop().unwrap();
+        // rank 0 races ahead: step 1 then step 2 land before rank 1 collects
+        t0.publish(&frame_with(1, 0, 2, 0, 1, 7)).unwrap();
+        t0.publish(&frame_with(2, 0, 2, 0, 1, 9)).unwrap();
+        let s1 = t1.collect(1).unwrap();
+        assert_eq!(s1[0].step, 1);
+        assert_eq!(s1[0].nodes[0].idx, 7);
+        let s2 = t1.collect(2).unwrap();
+        assert_eq!(s2[0].step, 2);
+        assert_eq!(s2[0].nodes[0].idx, 9);
+    }
+
+    #[test]
+    fn abort_reaches_peers_and_keeps_root_cause() {
+        let mut tps = connect(3, 8, Duration::from_secs(5));
+        let t2 = tps.pop().unwrap();
+        let mut t1 = tps.pop().unwrap();
+        let _t0 = tps.pop().unwrap();
+        t2.abort("rank 2 lost its gradients");
+        t2.abort("a later, less interesting failure");
+        let err = t1.collect(1).unwrap_err().to_string();
+        assert!(err.contains("rank 2 lost its gradients"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_timeout_fails_fast_but_accepts_queued_frames() {
+        // regression: the deadline used to be checked with a strict `>`,
+        // so a zero timeout silently granted one extra poll round
+        let mut tps = connect(2, 8, Duration::ZERO);
+        let mut t1 = tps.pop().unwrap();
+        let mut t0 = tps.pop().unwrap();
+        let t = Instant::now();
+        let err = t1.collect(1).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "got: {err}");
+        assert!(t.elapsed() < Duration::from_millis(200), "zero timeout must fail fast");
+        // clear the abort the timeout dropped, then show a frame that is
+        // already queued still collects at zero patience
+        *t1.abort.lock().unwrap() = None;
+        t0.publish(&frame_with(1, 0, 2, 0, 1, 3)).unwrap();
+        let got = t1.collect(1).unwrap();
+        assert_eq!(got[0].nodes[0].idx, 3);
+    }
+
+    #[test]
+    fn hung_up_peer_fails_the_sender() {
+        let mut tps = connect(2, 8, Duration::from_secs(5));
+        let t1 = tps.pop().unwrap();
+        let mut t0 = tps.pop().unwrap();
+        drop(t1);
+        let err = t0.publish(&frame_with(1, 0, 2, 0, 1, 0)).unwrap_err().to_string();
+        assert!(err.contains("hung up"), "got: {err}");
+    }
+}

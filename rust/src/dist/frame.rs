@@ -6,7 +6,8 @@
 //! ```text
 //! magic "QDGF" | version u16 | payload_len u64 | payload | fnv1a64(payload) u64
 //!
-//! payload := step u64 | rank u32 | dp u32 | leaves u32 | node_count u32 | node*
+//! payload := step u64 | rank u32 | dp u32 | leaves u32
+//!            | part u32 | parts u32 | node_count u32 | node*
 //! node    := level u8 | idx u32 | loss f64-bits u64 | tensor_count u16 | tensor*
 //! tensor  := kind u8 (0 = f32, 1 = i8)
 //!            f32: len u64 | len * f32-le
@@ -35,7 +36,10 @@ use anyhow::{bail, Result};
 use crate::util::fnv1a64;
 
 pub const MAGIC: &[u8; 4] = b"QDGF";
-pub const VERSION: u16 = 1;
+/// v2 added the multi-part step framing (`part`/`parts` after `leaves`):
+/// overlap mode ships a rank's cover as several small frames per step
+/// instead of one, and the collector reassembles them in part order.
+pub const VERSION: u16 = 2;
 
 /// One tensor's gradient payload: raw f32 values, or int8 codes + scales
 /// per view (a view is one layer slice of a stacked tensor, or the whole
@@ -66,13 +70,20 @@ pub struct WireNode {
     pub tensors: Vec<WireTensor>,
 }
 
-/// A rank's per-step shipment: its cover of the reduction tree.
+/// A rank's per-step shipment: its cover of the reduction tree, or — in
+/// overlap mode — one slice of it. `part`/`parts` frame the slice: a
+/// barrier-mode step is a single `part 0 of 1` frame holding the whole
+/// cover; an overlap-mode step ships `parts` frames (one per cover node,
+/// in cover order), and the collector reassembles them by part index into
+/// the same node sequence.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
     pub step: u64,
     pub rank: u32,
     pub dp: u32,
     pub leaves: u32,
+    pub part: u32,
+    pub parts: u32,
     pub nodes: Vec<WireNode>,
 }
 
@@ -101,6 +112,8 @@ pub fn encode(f: &Frame) -> Vec<u8> {
     put_u32(&mut payload, f.rank);
     put_u32(&mut payload, f.dp);
     put_u32(&mut payload, f.leaves);
+    put_u32(&mut payload, f.part);
+    put_u32(&mut payload, f.parts);
     put_u32(&mut payload, f.nodes.len() as u32);
     for n in &f.nodes {
         payload.push(n.level);
@@ -213,6 +226,11 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
     let rank = c.u32()?;
     let dp = c.u32()?;
     let leaves = c.u32()?;
+    let part = c.u32()?;
+    let parts = c.u32()?;
+    if parts == 0 || part >= parts {
+        bail!("frame part {part} of {parts} is out of range");
+    }
     let node_count = c.u32()? as usize;
     // each node costs at least 15 bytes; reject counts the payload can't hold
     if node_count > c.remaining() / 15 {
@@ -285,6 +303,8 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
         rank,
         dp,
         leaves,
+        part,
+        parts,
         nodes,
     })
 }
@@ -299,6 +319,8 @@ mod tests {
             rank: 1,
             dp: 2,
             leaves: 4,
+            part: 1,
+            parts: 3,
             nodes: vec![WireNode {
                 level: 1,
                 idx: 1,
@@ -346,6 +368,26 @@ mod tests {
         assert_eq!(vs[0].to_bits(), 0xffc0_0001);
         assert_eq!(vs[1].to_bits(), (-0.0f32).to_bits());
         assert_eq!(back.nodes[0].loss.to_bits(), 0x7ff8_dead_beef_0001);
+    }
+
+    #[test]
+    fn out_of_range_part_framing_is_rejected() {
+        // parts == 0 and part >= parts cannot be expressed by encode, so
+        // forge them at the byte level (offsets 14 + 8+4+4+4 = part, +4 =
+        // parts) and re-stamp the FNV so only the framing check can fire
+        let good = encode(&sample_frame());
+        let forge = |part: u32, parts: u32| {
+            let mut b = good.clone();
+            b[34..38].copy_from_slice(&part.to_le_bytes());
+            b[38..42].copy_from_slice(&parts.to_le_bytes());
+            let end = b.len() - 8;
+            let fnv = crate::util::fnv1a64(&b[14..end]);
+            b[end..].copy_from_slice(&fnv.to_le_bytes());
+            b
+        };
+        assert!(decode(&forge(0, 0)).is_err(), "parts == 0 must be rejected");
+        assert!(decode(&forge(3, 3)).is_err(), "part >= parts must be rejected");
+        assert!(decode(&forge(0, 1)).is_ok(), "forging harness must be sound");
     }
 
     #[test]

@@ -28,13 +28,31 @@
 //!    sender's value. Ineligible recipes ship raw f32 — lossless either
 //!    way.
 //!
-//! Ranks exchange per-step frames over a run-dir filesystem protocol
-//! (`<out>/dist/step_<s>_rank_<k>.frame`, length-prefixed binary with an
-//! FNV-64 integrity check, published atomically via tmp+rename). The
-//! frame files double as the step barrier; a killed worker fails loudly
-//! through an `ABORT` marker, leader-side child exit polling, and a
-//! timeout ([`Exchange`]).
+//! Frame I/O sits behind the [`Transport`] seam, with two
+//! implementations selected by `--transport`:
+//!
+//! * **filesystem** ([`Exchange`]): ranks are separate processes; frames
+//!   land in `<out>/dist/step_<s>_rank_<k>_part_<p>.frame`
+//!   (length-prefixed binary with an FNV-64 integrity check, published
+//!   atomically via tmp+rename — the file's existence is the step
+//!   barrier, collected with a capped-exponential-backoff poll). A
+//!   killed worker fails loudly through an `ABORT` marker, leader-side
+//!   child exit polling, and a timeout.
+//! * **channel** ([`channel`]): ranks are threads of one process,
+//!   exchanging the same encoded frames over bounded in-memory MPSC
+//!   channels — no disk, no poll loop, no out dir; the same
+//!   abort/timeout/deadline semantics through a shared abort slot.
+//!
+//! On top of the seam, `--overlap on` (the default) overlaps shard
+//! backward with publish: each subtree of the rank's cover ships as its
+//! own frame part the moment its leaf range completes
+//! ([`tree::cover_schedule`]), so peers start tree completion while
+//! stragglers are still in backward. The collector reassembles parts in
+//! cover order into the identical node set, so transport and overlap are
+//! wall-clock knobs only — `digest --dp 2` is byte-identical across all
+//! of them, and to `--dp 1`.
 
+pub mod channel;
 pub mod frame;
 pub mod tree;
 
@@ -47,7 +65,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::config::{cosine_lr, shard_range, QuantRecipe, TensorPolicy};
+use crate::config::{cosine_lr, shard_range, DistTransport, QuantRecipe, TensorPolicy};
 use crate::coordinator::RunSummary;
 use crate::data::{BatchIter, CorpusCfg};
 use crate::model::{init_state, save_checkpoint};
@@ -282,11 +300,47 @@ fn from_wire(model: &ModelInfo, wn: &WireNode, policy: Option<TensorPolicy>) -> 
 }
 
 // ---------------------------------------------------------------------------
-// filesystem exchange
+// the transport seam
 // ---------------------------------------------------------------------------
+
+/// The frame-I/O seam of the dist trainer. An implementation must deliver
+/// every published frame to every other rank byte-exactly and exactly
+/// once, block `collect` until a peer's complete step shipment is in, and
+/// fail loudly — a broadcast `abort` reaches every peer, and every wait
+/// respects the deadline (`QPRETRAIN_DIST_TIMEOUT_SECS`). Nothing above
+/// the seam depends on *how* bytes move, which is what makes transport a
+/// wall-clock knob instead of a numerics knob.
+pub trait Transport {
+    /// Ship one frame — one part of this rank's step — to every peer.
+    fn publish(&mut self, frame: &Frame) -> Result<()>;
+
+    /// Block until every peer's complete step-`step` shipment arrived;
+    /// returns one reassembled frame per peer (parts merged in part
+    /// order, normalized to `part 0 of 1`), in rank order.
+    fn collect(&mut self, step: u64) -> Result<Vec<Frame>>;
+
+    /// Broadcast a fatal error so every peer fails with its message.
+    fn abort(&self, msg: &str);
+}
+
+/// Reassemble one peer's per-step shipment from its parts (already
+/// sorted by part index): concatenate the node lists in part order and
+/// normalize the framing to a single `part 0 of 1` frame — byte-identical
+/// to what a barrier-mode publish of the same cover produces, which is
+/// the overlap-correctness property `dist::tests` proves.
+fn merge_parts(mut parts: Vec<Frame>) -> Frame {
+    let mut f = parts.remove(0);
+    for p in parts {
+        f.nodes.extend(p.nodes);
+    }
+    f.part = 0;
+    f.parts = 1;
+    f
+}
 
 static WIRE_WRITTEN: AtomicU64 = AtomicU64::new(0);
 static WIRE_READ: AtomicU64 = AtomicU64::new(0);
+static EXCHANGE_NANOS: AtomicU64 = AtomicU64::new(0);
 
 /// Drain the process-global wire byte counters: (bytes published, bytes
 /// collected) since the last call. Benches use this to report f32 vs int8
@@ -298,12 +352,24 @@ pub fn take_wire_stats() -> (u64, u64) {
     )
 }
 
+/// Drain rank 0's cumulative publish+collect wall-clock (nanoseconds)
+/// since the last call. Only the rank-0 loop of the calling process
+/// records (filesystem workers are subprocesses), so the number compares
+/// fairly across transports — `bench_dist` uses it for the
+/// channel-vs-filesystem and overlap-vs-barrier rows.
+pub fn take_exchange_nanos() -> u64 {
+    EXCHANGE_NANOS.swap(0, Ordering::Relaxed)
+}
+
 fn dist_timeout() -> Duration {
+    // No lower clamp: 0 is a legitimate value meaning "frames must
+    // already be there when collect runs" (and it must fail fast, not
+    // burn a poll round — see `zero_timeout` in tests/dist.rs).
     let secs = std::env::var("QPRETRAIN_DIST_TIMEOUT_SECS")
         .ok()
         .and_then(|s| s.parse::<u64>().ok())
         .unwrap_or(120);
-    Duration::from_secs(secs.max(1))
+    Duration::from_secs(secs)
 }
 
 /// The per-step frame exchange over `<out>/dist`. Publishing is atomic
@@ -319,6 +385,11 @@ pub struct Exchange {
     timeout: Duration,
     /// Leader only: spawned worker children, polled during collect.
     children: Vec<(usize, Child)>,
+    /// Parts this rank published per step, pending GC. Driven by the
+    /// publishes actually made (not a `step - 1` guess), so every stale
+    /// step — including step 1 — is removed the moment the next collect
+    /// proves all peers consumed it.
+    published: HashMap<u64, u32>,
 }
 
 impl Exchange {
@@ -331,6 +402,7 @@ impl Exchange {
             dp,
             timeout,
             children: Vec::new(),
+            published: HashMap::new(),
         })
     }
 
@@ -338,30 +410,12 @@ impl Exchange {
         self.children = children;
     }
 
-    fn frame_path(&self, step: u64, rank: usize) -> PathBuf {
-        self.dir.join(format!("step_{step}_rank_{rank}.frame"))
+    fn frame_path(&self, step: u64, rank: usize, part: u32) -> PathBuf {
+        self.dir.join(format!("step_{step}_rank_{rank}_part_{part}.frame"))
     }
 
     fn abort_path(&self) -> PathBuf {
         self.dir.join("ABORT")
-    }
-
-    /// Drop the abort marker so every peer fails loudly on its next poll.
-    pub fn abort(&self, msg: &str) {
-        let tmp = self.dir.join(format!("ABORT.tmp.{}", self.rank));
-        if std::fs::write(&tmp, msg).is_ok() {
-            let _ = std::fs::rename(&tmp, self.abort_path());
-        }
-    }
-
-    /// Publish this rank's frame for `step` (atomic tmp + rename).
-    pub fn publish(&self, step: u64, frame: &Frame) -> Result<()> {
-        let bytes = frame::encode(frame);
-        WIRE_WRITTEN.fetch_add(bytes.len() as u64, Ordering::Relaxed);
-        let tmp = self.dir.join(format!("step_{step}_rank_{}.tmp", self.rank));
-        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
-        std::fs::rename(&tmp, self.frame_path(step, self.rank))?;
-        Ok(())
     }
 
     /// A peer aborted, a child died, or we ran out of patience?
@@ -389,54 +443,125 @@ impl Exchange {
         Ok(())
     }
 
-    /// Collect every other rank's frame for `step`, blocking with a
-    /// deadline. On success, garbage-collects this rank's `step - 1`
-    /// frame: a peer's `step` frame exists only after that peer consumed
-    /// every `step - 1` frame, so once all are seen the old frame is dead
-    /// and on-disk state stays bounded at ~2 steps.
-    pub fn collect(&mut self, step: u64) -> Result<Vec<Frame>> {
+    /// Poll `path` into existence with capped exponential backoff
+    /// (300µs doubling to 5ms — cheap frames arrive within a beat or
+    /// two, slow peers stop burning a CPU on a fixed-rate spin). The
+    /// deadline check is `>=`, so a zero timeout fails on the first miss
+    /// instead of taking an extra poll round.
+    fn read_with_deadline(&mut self, path: &Path, deadline: Instant) -> Result<Vec<u8>> {
+        let mut backoff = Duration::from_micros(300);
+        loop {
+            self.check_failures()?;
+            match std::fs::read(path) {
+                Ok(b) => return Ok(b),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e).context(format!("reading {path:?}")),
+            }
+            if Instant::now() >= deadline {
+                let msg = format!(
+                    "dist rank {} timed out after {:?} waiting for {path:?}",
+                    self.rank, self.timeout
+                );
+                self.abort(&msg);
+                bail!("{msg}");
+            }
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_millis(5));
+        }
+    }
+
+    /// Remove this rank's own frames for every published step before
+    /// `upto`: a peer's step-`upto` frame exists only after that peer
+    /// consumed every earlier frame, so once collect(`upto`) has seen all
+    /// peers, the older files are dead. Keeps the dir bounded at ≤ 2
+    /// steps of live frames (2·dp single-part, 2·Σparts with overlap)
+    /// regardless of run length.
+    fn gc(&mut self, upto: u64) {
+        let dead: Vec<u64> = self.published.keys().copied().filter(|&s| s < upto).collect();
+        for s in dead {
+            let parts = self.published.remove(&s).unwrap_or(0);
+            for p in 0..parts {
+                let _ = std::fs::remove_file(self.frame_path(s, self.rank, p));
+            }
+        }
+    }
+}
+
+impl Transport for Exchange {
+    /// Publish one part of this rank's step (atomic tmp + rename).
+    fn publish(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame::encode(frame);
+        WIRE_WRITTEN.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let tmp = self
+            .dir
+            .join(format!("step_{}_rank_{}_part_{}.tmp", frame.step, self.rank, frame.part));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, self.frame_path(frame.step, self.rank, frame.part))?;
+        *self.published.entry(frame.step).or_insert(0) += 1;
+        Ok(())
+    }
+
+    /// Collect every other rank's complete step-`step` shipment, blocking
+    /// with a deadline: part 0 announces how many parts the peer ships
+    /// this step (1 in barrier mode, one per cover node with overlap),
+    /// then the remaining parts are read in order and merged. On success,
+    /// garbage-collects every own frame older than `step`.
+    fn collect(&mut self, step: u64) -> Result<Vec<Frame>> {
         let deadline = Instant::now() + self.timeout;
         let mut frames = Vec::with_capacity(self.dp - 1);
         for r in 0..self.dp {
             if r == self.rank {
                 continue;
             }
-            let path = self.frame_path(step, r);
-            let bytes = loop {
-                self.check_failures()?;
-                match std::fs::read(&path) {
-                    Ok(b) => break b,
-                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-                    Err(e) => return Err(e).context(format!("reading {path:?}")),
-                }
-                if Instant::now() > deadline {
-                    let msg = format!(
-                        "dist rank {} timed out after {:?} waiting for rank {r}'s step-{step} frame",
-                        self.rank, self.timeout
+            let mut parts: Vec<Frame> = Vec::new();
+            let mut want = 1u32;
+            let mut part = 0u32;
+            while part < want {
+                let path = self.frame_path(step, r, part);
+                let bytes = self.read_with_deadline(&path, deadline)?;
+                WIRE_READ.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                let f = frame::decode(&bytes).with_context(|| format!("decoding {path:?}"))?;
+                ensure!(
+                    f.step == step
+                        && f.rank as usize == r
+                        && f.dp as usize == self.dp
+                        && f.part == part,
+                    "frame {path:?} is for step {} rank {} dp {} part {} \
+                     (expected {step}/{r}/{}/{part})",
+                    f.step,
+                    f.rank,
+                    f.dp,
+                    f.part,
+                    self.dp
+                );
+                if part == 0 {
+                    want = f.parts;
+                } else {
+                    ensure!(
+                        f.parts == want,
+                        "frame {path:?} claims {} parts, part 0 claimed {want}",
+                        f.parts
                     );
-                    self.abort(&msg);
-                    bail!("{msg}");
                 }
-                std::thread::sleep(Duration::from_micros(300));
-            };
-            WIRE_READ.fetch_add(bytes.len() as u64, Ordering::Relaxed);
-            let f = frame::decode(&bytes).with_context(|| format!("decoding {path:?}"))?;
-            ensure!(
-                f.step == step && f.rank as usize == r && f.dp as usize == self.dp,
-                "frame {path:?} is for step {} rank {} dp {} (expected {step}/{r}/{})",
-                f.step,
-                f.rank,
-                f.dp,
-                self.dp
-            );
-            frames.push(f);
+                parts.push(f);
+                part += 1;
+            }
+            frames.push(merge_parts(parts));
         }
-        if step > 1 {
-            let _ = std::fs::remove_file(self.frame_path(step - 1, self.rank));
-        }
+        self.gc(step);
         Ok(frames)
     }
 
+    /// Drop the abort marker so every peer fails loudly on its next poll.
+    fn abort(&self, msg: &str) {
+        let tmp = self.dir.join(format!("ABORT.tmp.{}", self.rank));
+        if std::fs::write(&tmp, msg).is_ok() {
+            let _ = std::fs::rename(&tmp, self.abort_path());
+        }
+    }
+}
+
+impl Exchange {
     /// Leader: wait for all children; any non-success exit is an error.
     fn finish(&mut self) -> Result<()> {
         let mut err = None;
@@ -475,7 +600,7 @@ fn rank_loop(
     cfg: &TrainCfg,
     dp: usize,
     rank: usize,
-    mut ex: Option<&mut Exchange>,
+    mut ex: Option<&mut dyn Transport>,
 ) -> Result<TrainResult> {
     struct ThreadsRestore(usize);
     impl Drop for ThreadsRestore {
@@ -506,6 +631,13 @@ fn rank_loop(
     let inv_norm = 1.0f32 / global_m as f32;
     let root_level = tree::root_level(model.batch);
     let my_cover = tree::cover(lo, hi, model.batch);
+    let schedule = tree::cover_schedule(lo, hi, model.batch);
+    // With overlap on, each cover node ships the moment its leaf range
+    // completes — `parts` frames per step instead of one. The wire content
+    // is identical either way (same nodes, same canonical packed values),
+    // so the received tree — and the training trajectory — is bit-equal.
+    let overlap = cfg.hp.dist_overlap && dp > 1;
+    let parts = schedule.len().max(1) as u32;
 
     // Every rank generates the *global* batch stream (cheap, deterministic)
     // and backwards only its own leaf range — simpler and provably
@@ -548,41 +680,70 @@ fn rank_loop(
         let batch = corpus.next_batch();
         let lr = cosine_lr(&cfg.hp, i) as f32;
 
-        // Leaf backwards over this rank's shard.
+        // Leaf backwards over this rank's shard, reducing to the maximal
+        // tree-node cover as leaf ranges complete (these exact values go
+        // on the wire, so peers never recompute them). With overlap on,
+        // each finished cover node is published immediately — the publish
+        // rides inside the remaining shard backward instead of after it.
         let mut nodes: HashMap<(u32, usize), GradNode> = HashMap::new();
+        let mut next = 0usize;
         for leaf in lo..hi {
             let x = &batch.x[leaf * seq..(leaf + 1) * seq];
             let y = &batch.y[leaf * seq..(leaf + 1) * seq];
             let (loss_sum, grads) =
                 rt.grad_step(&leaf_model, &cfg.quant, &state.params, x, y, inv_norm)?;
             nodes.insert((0, leaf), GradNode::leaf(&model, loss_sum, grads, policy));
+            while next < schedule.len() && schedule[next].1 == leaf + 1 {
+                let (l, idx) = schedule[next].0;
+                let n = take_node(l, idx, model.batch, &mut nodes, &model, policy)?;
+                if overlap {
+                    if let Some(ex) = ex.as_deref_mut() {
+                        let t = Instant::now();
+                        ex.publish(&Frame {
+                            step: step as u64,
+                            rank: rank as u32,
+                            dp: dp as u32,
+                            leaves: model.batch as u32,
+                            part: next as u32,
+                            parts,
+                            nodes: vec![to_wire(l, idx, &n)],
+                        })?;
+                        if rank == 0 {
+                            EXCHANGE_NANOS
+                                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+                nodes.insert((l, idx), n);
+                next += 1;
+            }
         }
 
-        // Reduce the shard to its maximal tree-node cover (these exact
-        // values go on the wire, so peers never recompute them).
-        for &(l, idx) in &my_cover {
-            let n = take_node(l, idx, model.batch, &mut nodes, &model, policy)?;
-            nodes.insert((l, idx), n);
-        }
-
-        // Exchange covers with every peer.
+        // Exchange covers with every peer (barrier mode publishes the
+        // whole cover as a single frame here; overlap mode already did).
         if let Some(ex) = ex.as_deref_mut() {
             if dp > 1 {
-                let wire_nodes = my_cover
-                    .iter()
-                    .map(|&(l, idx)| to_wire(l, idx, &nodes[&(l, idx)]))
-                    .collect();
-                ex.publish(
-                    step as u64,
-                    &Frame {
+                let t = Instant::now();
+                if !overlap {
+                    let wire_nodes = my_cover
+                        .iter()
+                        .map(|&(l, idx)| to_wire(l, idx, &nodes[&(l, idx)]))
+                        .collect();
+                    ex.publish(&Frame {
                         step: step as u64,
                         rank: rank as u32,
                         dp: dp as u32,
                         leaves: model.batch as u32,
+                        part: 0,
+                        parts: 1,
                         nodes: wire_nodes,
-                    },
-                )?;
-                for fr in ex.collect(step as u64)? {
+                    })?;
+                }
+                let collected = ex.collect(step as u64)?;
+                if rank == 0 {
+                    EXCHANGE_NANOS.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+                for fr in collected {
                     let (plo, phi) = shard_range(model.batch, dp, fr.rank as usize);
                     let expect = tree::cover(plo, phi, model.batch);
                     let mut got: Vec<(u32, usize)> = fr
@@ -702,17 +863,28 @@ fn exchange_dir(out: &Path) -> PathBuf {
     out.join("dist")
 }
 
-/// Leader entry: run `cfg` data-parallel over `cfg.hp.dp` processes (this
-/// process is rank 0). `dp <= 1` degenerates to the same sharded numerics
-/// with no exchange at all. Requires `cfg.out_dir` when `dp > 1` (the
-/// exchange protocol lives in `<out>/dist`; the dir is wiped first — stale
-/// frames or an old ABORT from a crashed run must not poison this one —
-/// and removed again on success).
+/// Leader entry: run `cfg` data-parallel over `cfg.hp.dp` ranks. `dp <= 1`
+/// degenerates to the same sharded numerics with no exchange at all;
+/// otherwise `cfg.hp.dist_transport` picks the topology — worker processes
+/// over the filesystem exchange, or worker threads over in-process
+/// channels. The trajectory is bit-identical across transports.
 pub fn dist_train(rt: &Runtime, cfg: &TrainCfg) -> Result<TrainResult> {
     let dp = cfg.hp.dp.max(1);
     if dp == 1 {
         return rank_loop(rt, cfg, 1, 0, None);
     }
+    match cfg.hp.dist_transport {
+        DistTransport::Filesystem => dist_train_fs(rt, cfg, dp),
+        DistTransport::Channel => channel::dist_train_channel(rt, cfg, dp),
+    }
+}
+
+/// Filesystem leader: spawn `dp - 1` `dist-worker` processes (this process
+/// is rank 0). Requires `cfg.out_dir` (the exchange protocol lives in
+/// `<out>/dist`; the dir is wiped first — stale frames or an old ABORT
+/// from a crashed run must not poison this one — and removed again on
+/// success).
+fn dist_train_fs(rt: &Runtime, cfg: &TrainCfg, dp: usize) -> Result<TrainResult> {
     let out = cfg.out_dir.clone().ok_or_else(|| {
         anyhow!("dist-train with dp > 1 needs an out dir (--out) for the exchange protocol")
     })?;
@@ -752,6 +924,8 @@ pub fn dist_train(rt: &Runtime, cfg: &TrainCfg) -> Result<TrainResult> {
             &cfg.hp.warmup.to_string(),
             "--threads",
             &threads.to_string(),
+            "--overlap",
+            if cfg.hp.dist_overlap { "on" } else { "off" },
             "--out",
             out.to_str().ok_or_else(|| anyhow!("non-UTF8 out dir"))?,
         ]);
@@ -919,6 +1093,92 @@ mod tests {
         let mut wn = to_wire(0, 0, &node);
         wn.tensors.pop();
         assert!(from_wire(&m, &wn, None).is_err());
+    }
+
+    #[test]
+    fn incremental_publish_is_byte_identical_to_single_shot() {
+        // overlap mode ships the cover one node per frame as leaf ranges
+        // complete; barrier mode ships it whole. After reassembly the two
+        // must be the same bytes on the wire — for raw-f32 and packed-i8
+        // policies alike — or transports could not mix freely with the
+        // overlap knob.
+        let (_, m) = micro();
+        let i8_policy = wire_policy(&QuantRecipe::parse("w8a8g8").unwrap());
+        let leaf = |s: usize| {
+            GradNode::leaf(
+                &m,
+                s as f64 + 0.5,
+                m.params
+                    .iter()
+                    .map(|p| {
+                        (0..p.elems())
+                            .map(|j| ((j * (2 * s + 3)) % 19) as f32 * 0.07 - 0.6)
+                            .collect()
+                    })
+                    .collect(),
+                i8_policy,
+            )
+        };
+        for policy in [None, i8_policy] {
+            for (lo, hi, leaves) in [(1usize, 5usize, 8usize), (0, 8, 8), (2, 5, 5), (0, 2, 4)] {
+                let cover = tree::cover(lo, hi, leaves);
+
+                // single-shot: all leaves first, then the whole cover
+                let mut nodes = HashMap::new();
+                for s in lo..hi {
+                    nodes.insert((0, s), leaf(s));
+                }
+                let mut wire_nodes = Vec::new();
+                for &(l, idx) in &cover {
+                    let n = take_node(l, idx, leaves, &mut nodes, &m, policy).unwrap();
+                    wire_nodes.push(to_wire(l, idx, &n));
+                    nodes.insert((l, idx), n);
+                }
+                let barrier = Frame {
+                    step: 3,
+                    rank: 1,
+                    dp: 2,
+                    leaves: leaves as u32,
+                    part: 0,
+                    parts: 1,
+                    nodes: wire_nodes,
+                };
+
+                // incremental: evaluate + emit each node at its ready point
+                let schedule = tree::cover_schedule(lo, hi, leaves);
+                let parts = schedule.len() as u32;
+                let mut nodes = HashMap::new();
+                let mut next = 0usize;
+                let mut shipped = Vec::new();
+                for s in lo..hi {
+                    nodes.insert((0, s), leaf(s));
+                    while next < schedule.len() && schedule[next].1 == s + 1 {
+                        let (l, idx) = schedule[next].0;
+                        let n = take_node(l, idx, leaves, &mut nodes, &m, policy).unwrap();
+                        shipped.push(frame::encode(&Frame {
+                            step: 3,
+                            rank: 1,
+                            dp: 2,
+                            leaves: leaves as u32,
+                            part: next as u32,
+                            parts,
+                            nodes: vec![to_wire(l, idx, &n)],
+                        }));
+                        nodes.insert((l, idx), n);
+                        next += 1;
+                    }
+                }
+                assert_eq!(shipped.len(), cover.len(), "one frame per cover node");
+
+                let reassembled =
+                    merge_parts(shipped.iter().map(|b| frame::decode(b).unwrap()).collect());
+                assert_eq!(
+                    frame::encode(&reassembled),
+                    frame::encode(&barrier),
+                    "shard [{lo},{hi}) of {leaves} leaves, policy {policy:?}"
+                );
+            }
+        }
     }
 
     #[test]

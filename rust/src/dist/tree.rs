@@ -79,6 +79,20 @@ pub fn cover(lo: usize, hi: usize, leaves: usize) -> Vec<(u32, usize)> {
     out
 }
 
+/// [`cover`] plus, per node, the first leaf index at which the node
+/// becomes evaluable: a rank that has completed leaf backwards
+/// `[lo, ready)` can evaluate (and publish) every cover node whose
+/// `ready_at <= ready`. Because the cover tiles `[lo, hi)` in leaf order,
+/// `ready_at` values are strictly increasing and the last one is `hi` —
+/// the overlap emission loop walks this schedule front to back, shipping
+/// each subtree the moment its leaf range completes.
+pub fn cover_schedule(lo: usize, hi: usize, leaves: usize) -> Vec<((u32, usize), usize)> {
+    cover(lo, hi, leaves)
+        .into_iter()
+        .map(|(l, i)| ((l, i), node_range(l, i, leaves).1))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +155,44 @@ mod tests {
         assert_eq!(cover(2, 4, 4), vec![(1, 1)]);
         // unaligned range decomposes into O(log B) nodes
         assert_eq!(cover(1, 5, 8), vec![(0, 1), (1, 1), (0, 4)]);
+    }
+
+    #[test]
+    fn cover_schedule_ready_points_ascend_and_end_at_hi() {
+        for leaves in 1..=17 {
+            for dp in 1..=leaves {
+                for rank in 0..dp {
+                    let lo = rank * leaves / dp;
+                    let hi = (rank + 1) * leaves / dp;
+                    let sched = cover_schedule(lo, hi, leaves);
+                    assert_eq!(
+                        sched.iter().map(|&(n, _)| n).collect::<Vec<_>>(),
+                        cover(lo, hi, leaves),
+                        "schedule must be the cover in emission order"
+                    );
+                    let mut prev = lo;
+                    for &((l, i), ready) in &sched {
+                        let (nlo, nhi) = node_range(l, i, leaves);
+                        assert_eq!(ready, nhi, "ready point is the node's range end");
+                        assert_eq!(nlo, prev, "nodes tile in leaf order");
+                        assert!(ready > prev, "ready points strictly ascend");
+                        prev = ready;
+                    }
+                    if lo < hi {
+                        assert_eq!(prev, hi, "last node completes the shard");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cover_schedule_multi_node_shard() {
+        // the 8-leaf [1,5) shard emits leaf 1 after leaf 1 completes,
+        // subtree (1,1)=[2,4) after leaf 3, and leaf 4 after leaf 4
+        assert_eq!(
+            cover_schedule(1, 5, 8),
+            vec![((0, 1), 2), ((1, 1), 4), ((0, 4), 5)]
+        );
     }
 }

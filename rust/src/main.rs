@@ -30,7 +30,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use qpretrain::config::{Granularity, QuantRecipe, TrainHp};
+use qpretrain::config::{DistTransport, Granularity, QuantRecipe, TrainHp};
 use qpretrain::coordinator::{self, experiments};
 use qpretrain::model::load_checkpoint;
 use qpretrain::runtime::Runtime;
@@ -71,7 +71,18 @@ fn hp_from(args: &Args) -> Result<TrainHp> {
     hp.eval_every = args.usize_or("eval-every", hp.eval_every)?;
     hp.eval_batches = args.usize_or("eval-batches", hp.eval_batches)?;
     hp.dp = args.usize_or("dp", 1)?;
+    hp.dist_transport = DistTransport::parse(&args.get_or("transport", "filesystem"))?;
+    hp.dist_overlap = on_off(args, "overlap", hp.dist_overlap)?;
     Ok(hp)
+}
+
+fn on_off(args: &Args, key: &str, default: bool) -> Result<bool> {
+    match args.get(key) {
+        None => Ok(default),
+        Some("on") => Ok(true),
+        Some("off") => Ok(false),
+        Some(v) => bail!("--{key} expects on|off, got {v:?}"),
+    }
 }
 
 /// Recipe from the CLI: `--quant <recipe>` is the primary interface; the
@@ -83,11 +94,11 @@ fn quant_from(args: &Args) -> Result<QuantRecipe> {
         .map(str::to_string)
         .unwrap_or_else(|| args.get_or("structure", "base"));
     QuantRecipe::parse(&spec)?.with_bits(
-        args.usize_or("wbits", 0)? as u32,
-        args.usize_or("abits", 0)? as u32,
-        args.usize_or("gbits", 0)? as u32,
-        args.usize_or("m1bits", 0)? as u32,
-        args.usize_or("m2bits", 0)? as u32,
+        args.bits_or("wbits", 0)?,
+        args.bits_or("abits", 0)?,
+        args.bits_or("gbits", 0)?,
+        args.bits_or("m1bits", 0)?,
+        args.bits_or("m2bits", 0)?,
     )
 }
 
@@ -149,10 +160,16 @@ USAGE: qpretrain <subcommand> [--options]
                (--quant takes any recipe, e.g. w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc;
                 legacy --structure w_pc --wbits 8 flags still work)
   dist-train   --model micro --quant w8a8g8 --steps 300 --dp 2 [--out DIR]
-               N-process data parallelism over the run-dir exchange
-               protocol (<out>/dist); gradients ship int8 when the
+               [--transport filesystem|channel] [--overlap on|off]
+               N-way data parallelism: worker processes over the run-dir
+               exchange protocol (<out>/dist), or — with
+               --transport channel — worker threads of this process over
+               in-memory channels (no out dir needed). --overlap on (the
+               default) publishes each cover subtree the moment its leaf
+               range finishes backward. Gradients ship int8 when the
                recipe's g policy is 8-bit symmetric pt/ptok, f32
-               otherwise. Bit-identical to --dp 1 at matched global batch.
+               otherwise. Bit-identical to --dp 1 at matched global batch
+               on every transport/overlap combination.
   eval         --ckpt runs/train/t4/baseline_s300_seed1337 [--suite ppl|fewshot|all]
   ptq          --ckpt DIR --mode weights|acts --bits 8 --gran per_channel
   sharpness    --ckpt DIR [--radii 0.001,0.01,0.1]
@@ -170,9 +187,11 @@ USAGE: qpretrain <subcommand> [--options]
                int8 weights resident in memory (bitwise-equal to
                one-at-a-time decode); prints tokens/s, TTFT, occupancy
   selftest     native-backend validation against the rust quant oracle
-  digest       [--steps 8 --out digest.json --dp N] deterministic
-               micro-train digest; byte-identical across threads,
-               QPRETRAIN_SIMD / QPRETRAIN_INT8 legs and every --dp
+  digest       [--steps 8 --out digest.json --dp N]
+               [--transport filesystem|channel] [--overlap on|off]
+               deterministic micro-train digest; byte-identical across
+               threads, QPRETRAIN_SIMD / QPRETRAIN_INT8 legs, every --dp,
+               both transports and both overlap settings
   list         models / recipe grammar / experiments
 
 Global options:
@@ -181,7 +200,9 @@ Global options:
 
 Env knobs: QPRETRAIN_SIMD=off pins the scalar lane emulation;
 QPRETRAIN_INT8=off pins the f32 fold of the packed-GEMM integer code
-products (both are bit-transparency switches, not numerics changes).
+products (both are bit-transparency switches, not numerics changes);
+QPRETRAIN_DIST_TIMEOUT_SECS sets the dist exchange deadline (default
+120; 0 = frames must already be available — fail instead of waiting).
 
 The default build uses the pure-rust native backend. Build with
 `--features pjrt` (plus `make artifacts`) to execute AOT HLO artifacts."
@@ -296,8 +317,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
     let (model, state, eval_recipe) = open_ckpt(args, &rt)?;
     let recipe = eval_recipe.with_bits(
-        args.usize_or("wbits", 0)? as u32,
-        args.usize_or("abits", 0)? as u32,
+        args.bits_or("wbits", 0)?,
+        args.bits_or("abits", 0)?,
         0,
         0,
         0,
@@ -335,7 +356,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_ptq(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
     let (model, state, _) = open_ckpt(args, &rt)?;
-    let bits = args.usize_or("bits", 8)? as u32;
+    let bits = args.bits_or("bits", 8)?;
     let gran = Granularity::parse(&args.get_or("gran", "per_channel"))?;
     let n_batches = args.usize_or("eval-batches", 8)?;
     let mode = args.get_or("mode", "weights");
@@ -360,8 +381,8 @@ fn cmd_sharpness(args: &Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| anyhow!("bad radius {s:?}")))
         .collect::<Result<_>>()?;
     let recipe = eval_recipe.with_bits(
-        args.usize_or("wbits", 0)? as u32,
-        args.usize_or("abits", 0)? as u32,
+        args.bits_or("wbits", 0)?,
+        args.bits_or("abits", 0)?,
         0,
         0,
         0,
@@ -386,8 +407,8 @@ fn cmd_losssurface(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
     let (model, state, eval_recipe) = open_ckpt(args, &rt)?;
     let recipe = eval_recipe.with_bits(
-        args.usize_or("wbits", 0)? as u32,
-        args.usize_or("abits", 0)? as u32,
+        args.bits_or("wbits", 0)?,
+        args.bits_or("abits", 0)?,
         0,
         0,
         0,
@@ -486,7 +507,7 @@ fn serve_state(
         let state = qpretrain::model::init_state(&model, args.u64_or("init-seed", 1337)?);
         (model, state, quant_from(args)?.forward_only())
     };
-    let ptq_bits = args.usize_or("ptq-bits", 0)? as u32;
+    let ptq_bits = args.bits_or("ptq-bits", 0)?;
     if ptq_bits > 0 {
         let gran = Granularity::parse(&args.get_or("ptq-gran", "per_channel"))?;
         qpretrain::ptq::quantize_weights(
@@ -800,14 +821,20 @@ fn cmd_digest(args: &Args) -> Result<()> {
     // dist-train digest: the sharded reduction-tree trainer, fingerprinted
     // the same way. Run at --dp N; the section's *content* is a function of
     // the code and seed only — never of dp (the tree is shaped by the
-    // global batch alone), threads, SIMD, or the int8 knob — so CI
-    // byte-diffs a --dp 2 digest against a --dp 1 digest to prove the
-    // N-process trainer bit-matches single-process, and the thread/simd
-    // matrix legs (all --dp 1) keep covering the section too.
+    // global batch alone), the transport, the overlap knob, threads, SIMD,
+    // or the int8 knob — so CI byte-diffs --dp 2 digests across
+    // {filesystem, channel} x {overlap on, off} against a --dp 1 digest to
+    // prove the N-way trainer bit-matches single-process on every
+    // topology, and the thread/simd matrix legs (all --dp 1) keep covering
+    // the section too.
     let dp = args.usize_or("dp", 1)?;
+    let transport = DistTransport::parse(&args.get_or("transport", "filesystem"))?;
+    let overlap = on_off(args, "overlap", TrainHp::default().dist_overlap)?;
     let mut dist_runs = Vec::new();
     {
-        let tmp = (dp > 1).then(|| {
+        // only the filesystem transport needs a scratch dir for the
+        // exchange protocol; channel ranks talk through memory
+        let tmp = (dp > 1 && transport == DistTransport::Filesystem).then(|| {
             std::env::temp_dir().join(format!("qpretrain_digest_dist_{}", std::process::id()))
         });
         for spec in ["base", "w8a8g8"] {
@@ -817,6 +844,8 @@ fn cmd_digest(args: &Args) -> Result<()> {
                 eval_batches: 2,
                 log_every: usize::MAX,
                 dp,
+                dist_transport: transport,
+                dist_overlap: overlap,
                 ..TrainHp::default()
             };
             let mut cfg = qpretrain::train::TrainCfg::new("micro", QuantRecipe::parse(spec)?, hp);

@@ -85,6 +85,23 @@ impl Args {
         }
     }
 
+    /// A bit-width option: 0 (= no override / disabled) or 2..=32. Parsed
+    /// through u64 and range-checked *before* any narrowing, so an
+    /// out-of-range value is a CLI error — never a silent `as u32`
+    /// truncation (4294967297 must not become 1).
+    pub fn bits_or(&self, key: &str, default: u32) -> Result<u32> {
+        let Some(v) = self.get(key) else {
+            return Ok(default);
+        };
+        let bits: u64 = v
+            .parse()
+            .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}"))?;
+        match bits {
+            0 | 2..=32 => Ok(bits as u32),
+            _ => bail!("--{key} expects a bit width of 0 (off) or 2..=32, got {bits}"),
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -127,5 +144,21 @@ mod tests {
     fn numeric_errors() {
         let a = Args::parse(argv("x --n abc")).unwrap();
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn bits_range_checked_before_narrowing() {
+        // regression: these used to flow through `usize_or(..)? as u32`,
+        // so 2^32+1 silently truncated to a *valid* width of 1 (and
+        // 2^32+2 to 2) instead of erroring
+        for v in ["4294967297", "4294967298", "1", "33", "64", "-8", "8.5"] {
+            let a = Args::parse(argv(&format!("x --wbits {v}"))).unwrap();
+            assert!(a.bits_or("wbits", 0).is_err(), "--wbits {v} must be rejected");
+        }
+        for (v, want) in [("0", 0u32), ("2", 2), ("8", 8), ("32", 32)] {
+            let a = Args::parse(argv(&format!("x --wbits {v}"))).unwrap();
+            assert_eq!(a.bits_or("wbits", 0).unwrap(), want);
+        }
+        assert_eq!(Args::parse(argv("x")).unwrap().bits_or("wbits", 0).unwrap(), 0);
     }
 }

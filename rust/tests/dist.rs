@@ -1,9 +1,11 @@
-//! Dist-trainer proof tests: an N-process data-parallel run must be
+//! Dist-trainer proof tests: an N-way data-parallel run must be
 //! **bit-identical** to a single-process run at matched global batch —
 //! losses, grad norms, validation, and the full final (params, m, v)
 //! state — for both the f32 and the quantized int8 gradient exchange,
-//! under both settings of the int8-accumulator knob. Plus loud-failure
-//! coverage for the filesystem exchange protocol.
+//! under both settings of the int8-accumulator knob, on both transports
+//! (filesystem processes, in-process channels) and with publish/backward
+//! overlap on or off. Plus loud-failure coverage for the exchange
+//! protocols.
 
 use std::collections::HashSet;
 use std::path::PathBuf;
@@ -11,9 +13,9 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use qpretrain::backend::native::{int8_gemm_enabled, set_int8_gemm};
-use qpretrain::config::{QuantRecipe, TrainHp};
+use qpretrain::config::{DistTransport, QuantRecipe, TrainHp};
 use qpretrain::dist::frame::{Frame, WireNode, WireTensor};
-use qpretrain::dist::{dist_train, wire_policy, Exchange};
+use qpretrain::dist::{dist_train, wire_policy, Exchange, Transport};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{TrainCfg, TrainResult};
 
@@ -45,11 +47,24 @@ fn tmp_dir(tag: &str) -> PathBuf {
     d
 }
 
-fn run(spec: &str, dp: usize, out: Option<PathBuf>) -> TrainResult {
+fn run_t(
+    spec: &str,
+    dp: usize,
+    out: Option<PathBuf>,
+    transport: DistTransport,
+    overlap: bool,
+) -> TrainResult {
     let rt = Runtime::native();
-    let mut cfg = TrainCfg::new("micro", QuantRecipe::parse(spec).unwrap(), hp(5, dp));
+    let mut h = hp(5, dp);
+    h.dist_transport = transport;
+    h.dist_overlap = overlap;
+    let mut cfg = TrainCfg::new("micro", QuantRecipe::parse(spec).unwrap(), h);
     cfg.out_dir = out;
     dist_train(&rt, &cfg).unwrap()
+}
+
+fn run(spec: &str, dp: usize, out: Option<PathBuf>) -> TrainResult {
+    run_t(spec, dp, out, DistTransport::Filesystem, true)
 }
 
 fn assert_bit_identical(a: &TrainResult, b: &TrainResult, what: &str) {
@@ -118,6 +133,45 @@ fn nway_run_is_bit_identical_to_single_process() {
     set_int8_gemm(prev);
 }
 
+/// The transport and the overlap knob are wall-clock choices only: every
+/// {filesystem, channel} x {overlap on, off} combination at dp=2 — plus
+/// channel at dp=3 and the f32 wire on channel — reproduces the dp=1
+/// trajectory bit-for-bit. The channel transport needs no out dir at all.
+#[test]
+fn every_transport_and_overlap_combination_is_bit_identical() {
+    setup_bin();
+    let _g = INT8_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = int8_gemm_enabled();
+    set_int8_gemm(true);
+
+    let reference = run_t("w8a8g8", 1, None, DistTransport::Filesystem, true);
+    for transport in [DistTransport::Filesystem, DistTransport::Channel] {
+        for overlap in [true, false] {
+            let out = (transport == DistTransport::Filesystem).then(|| {
+                tmp_dir(&format!("matrix_{}_{}", transport.as_str(), u8::from(overlap)))
+            });
+            let r = run_t("w8a8g8", 2, out.clone(), transport, overlap);
+            assert_bit_identical(
+                &reference,
+                &r,
+                &format!("w8a8g8 dp=2 {} overlap={overlap}", transport.as_str()),
+            );
+            if let Some(out) = out {
+                std::fs::remove_dir_all(&out).ok();
+            }
+        }
+    }
+    // channel at dp=3 (odd shard split -> carry nodes on the wire)
+    let r = run_t("w8a8g8", 3, None, DistTransport::Channel, true);
+    assert_bit_identical(&reference, &r, "w8a8g8 dp=3 channel");
+    // f32 wire over channels
+    let f32_ref = run_t("base", 1, None, DistTransport::Filesystem, true);
+    let r = run_t("base", 2, None, DistTransport::Channel, true);
+    assert_bit_identical(&f32_ref, &r, "base dp=2 channel");
+
+    set_int8_gemm(prev);
+}
+
 #[test]
 fn wire_policy_is_selected_by_the_recipe_alone() {
     let p = |s: &str| wire_policy(&QuantRecipe::parse(s).unwrap());
@@ -156,6 +210,8 @@ fn empty_frame(step: u64, rank: u32, dp: u32) -> Frame {
         rank,
         dp,
         leaves: 4,
+        part: 0,
+        parts: 1,
         nodes: vec![WireNode {
             level: 1,
             idx: rank,
@@ -165,9 +221,17 @@ fn empty_frame(step: u64, rank: u32, dp: u32) -> Frame {
     }
 }
 
+fn frame_files(dir: &std::path::Path) -> HashSet<String> {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".frame"))
+        .collect()
+}
+
 /// Two in-process `Exchange` peers over one dir: publish/collect round-trips
-/// frames bit-exactly, and each rank's step-(s-1) frame is garbage-collected
-/// once its step-s collect completes.
+/// frames bit-exactly, and each rank's older frames are garbage-collected
+/// once its next collect completes.
 #[test]
 fn exchange_roundtrips_and_garbage_collects() {
     let dir = tmp_dir("xchg");
@@ -178,26 +242,100 @@ fn exchange_roundtrips_and_garbage_collects() {
     for step in 1..=2u64 {
         let f0 = empty_frame(step, 0, 2);
         let f1 = empty_frame(step, 1, 2);
-        ex0.publish(step, &f0).unwrap();
-        ex1.publish(step, &f1).unwrap();
+        ex0.publish(&f0).unwrap();
+        ex1.publish(&f1).unwrap();
         let got0 = ex0.collect(step).unwrap();
         let got1 = ex1.collect(step).unwrap();
         assert_eq!(got0, vec![f1]);
         assert_eq!(got1, vec![f0]);
     }
     // both ranks collected step 2, so their step-1 frames are gone
-    let left: HashSet<String> = std::fs::read_dir(&dir)
-        .unwrap()
-        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
-        .collect();
+    let left = frame_files(&dir);
     assert!(
-        !left.contains("step_1_rank_0.frame") && !left.contains("step_1_rank_1.frame"),
+        !left.contains("step_1_rank_0_part_0.frame")
+            && !left.contains("step_1_rank_1_part_0.frame"),
         "stale frames not garbage-collected: {left:?}"
     );
     assert!(
-        left.contains("step_2_rank_0.frame") && left.contains("step_2_rank_1.frame"),
+        left.contains("step_2_rank_0_part_0.frame")
+            && left.contains("step_2_rank_1_part_0.frame"),
         "current frames must survive: {left:?}"
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression for the garbage collector: over a longer run — including
+/// multi-part (overlap-style) steps — the exchange dir must never hold
+/// more than two steps' worth of live frames (2 * dp * parts files), and
+/// step 1 must be collected like any other step, not special-cased away.
+#[test]
+fn exchange_dir_stays_bounded_over_a_run() {
+    let dir = tmp_dir("gc_bound");
+    let timeout = Duration::from_secs(30);
+    let dp = 2u32;
+    let parts = 2u32;
+    let mut exs = [
+        Exchange::new(&dir, 0, dp as usize, timeout).unwrap(),
+        Exchange::new(&dir, 1, dp as usize, timeout).unwrap(),
+    ];
+    for step in 1..=4u64 {
+        for (rank, ex) in exs.iter_mut().enumerate() {
+            for part in 0..parts {
+                let mut f = empty_frame(step, rank as u32, dp);
+                f.part = part;
+                f.parts = parts;
+                ex.publish(&f).unwrap();
+            }
+        }
+        // the high-water mark: this step's frames are published, last
+        // step's are not yet collected away
+        let live = frame_files(&dir).len() as u32;
+        assert!(
+            live <= 2 * dp * parts,
+            "step {step}: {live} live frames exceed the 2-step bound of {}",
+            2 * dp * parts
+        );
+        for ex in exs.iter_mut() {
+            let got = ex.collect(step).unwrap();
+            assert_eq!(got.len(), 1);
+            assert_eq!(got[0].nodes.len(), parts as usize, "parts must merge");
+        }
+        // from step 2 on, everything older than the current step is gone
+        let stale: Vec<String> = frame_files(&dir)
+            .into_iter()
+            .filter(|n| !n.starts_with(&format!("step_{step}_")))
+            .collect();
+        if step > 1 {
+            assert!(stale.is_empty(), "step {step}: stale frames survive: {stale:?}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A zero timeout means "the frame must already be there": a missing
+/// frame fails immediately (no silent extra poll round — the deadline
+/// check is `>=`, not `>`), while an already-published frame still
+/// collects fine.
+#[test]
+fn zero_timeout_fails_fast_but_reads_published_frames() {
+    let dir = tmp_dir("zero_to_miss");
+    let mut ex = Exchange::new(&dir, 0, 2, Duration::ZERO).unwrap();
+    let t = std::time::Instant::now();
+    let err = ex.collect(1).unwrap_err().to_string();
+    assert!(err.contains("timed out"), "unexpected error: {err}");
+    assert!(
+        t.elapsed() < Duration::from_millis(200),
+        "zero timeout must not wait ({:?})",
+        t.elapsed()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    let dir = tmp_dir("zero_to_hit");
+    let mut ex1 = Exchange::new(&dir, 1, 2, Duration::ZERO).unwrap();
+    ex1.publish(&empty_frame(1, 1, 2)).unwrap();
+    let mut ex0 = Exchange::new(&dir, 0, 2, Duration::ZERO).unwrap();
+    let got = ex0.collect(1).unwrap();
+    assert_eq!(got, vec![empty_frame(1, 1, 2)]);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -230,10 +368,10 @@ fn exchange_propagates_peer_aborts() {
 #[test]
 fn exchange_rejects_corrupt_frames() {
     let dir = tmp_dir("corrupt");
-    let ex1 = Exchange::new(&dir, 1, 2, Duration::from_secs(30)).unwrap();
-    ex1.publish(1, &empty_frame(1, 1, 2)).unwrap();
+    let mut ex1 = Exchange::new(&dir, 1, 2, Duration::from_secs(30)).unwrap();
+    ex1.publish(&empty_frame(1, 1, 2)).unwrap();
     // flip one payload byte behind the codec's back
-    let path = dir.join("step_1_rank_1.frame");
+    let path = dir.join("step_1_rank_1_part_0.frame");
     let mut bytes = std::fs::read(&path).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x40;

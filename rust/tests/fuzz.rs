@@ -180,7 +180,8 @@ fn fuzz_npy_parser_never_panics() {
 }
 
 /// Valid gradient-frame corpus for the dist wire codec: f32-only, mixed
-/// f32/i8 (per-tensor and per-row scales), and a minimal empty frame.
+/// f32/i8 (per-tensor and per-row scales), overlap-style multi-part step
+/// framing (part k of n), and a minimal empty frame.
 fn frame_corpus() -> Vec<Vec<u8>> {
     let f32_node = WireNode {
         level: 2,
@@ -225,6 +226,8 @@ fn frame_corpus() -> Vec<Vec<u8>> {
             rank: 0,
             dp: 2,
             leaves: 4,
+            part: 0,
+            parts: 1,
             nodes: vec![f32_node.clone()],
         }),
         frame::encode(&Frame {
@@ -232,13 +235,37 @@ fn frame_corpus() -> Vec<Vec<u8>> {
             rank: 2,
             dp: 3,
             leaves: 7,
-            nodes: vec![f32_node, i8_node],
+            part: 0,
+            parts: 1,
+            nodes: vec![f32_node.clone(), i8_node.clone()],
+        }),
+        // overlap-style multi-frame step: one cover node per frame, with
+        // part/parts framing in the middle and at the end of the shipment
+        frame::encode(&Frame {
+            step: 12,
+            rank: 1,
+            dp: 3,
+            leaves: 8,
+            part: 1,
+            parts: 3,
+            nodes: vec![i8_node],
+        }),
+        frame::encode(&Frame {
+            step: 12,
+            rank: 1,
+            dp: 3,
+            leaves: 8,
+            part: 2,
+            parts: 3,
+            nodes: vec![f32_node],
         }),
         frame::encode(&Frame {
             step: 1,
             rank: 1,
             dp: 2,
             leaves: 2,
+            part: 0,
+            parts: 1,
             nodes: vec![],
         }),
     ]
