@@ -3,10 +3,11 @@
 //!
 //! Emits `BENCH_dist.json` at the repo root (tokens/s at dp 1 and dp 2,
 //! scaling efficiency, f32-vs-int8 exchange bytes per step, per-step
-//! exchange wall-clock for the filesystem vs the in-process channel
-//! transport, and overlap-vs-barrier publish), then fails against the
-//! committed floors in `rust/tests/bench_baseline.json`. Set
-//! `QPRETRAIN_BENCH_FAST=1` for a smoke run with fewer steps.
+//! exchange wall-clock for the filesystem vs the in-process channel vs
+//! the loopback TCP socket transport, and overlap-vs-barrier publish),
+//! then fails against the committed floors in
+//! `rust/tests/bench_baseline.json`. Set `QPRETRAIN_BENCH_FAST=1` for a
+//! smoke run with fewer steps.
 //!
 //! Floor rows carry their dp as a JSON *string* (`"dp": "1"`): the
 //! baseline matcher selects rows by string-valued fields only.
@@ -117,15 +118,18 @@ fn main() {
     ]));
     println!("f32/i8 wire ratio: {ratio:.2}x");
 
-    section("per-step exchange wall-clock (dp 2, w8a8g8): filesystem vs channel");
+    section("per-step exchange wall-clock (dp 2, w8a8g8): filesystem vs channel vs socket");
     // Rank 0's publish + collect time only (take_exchange_nanos counts the
-    // leader alone, so filesystem worker subprocesses don't skew it). The
-    // channel transport skips the disk, the rename barrier, and the poll
-    // loop entirely, so it should win by a wide margin.
+    // leader alone, so worker subprocesses don't skew it). The channel
+    // transport skips the disk, the rename barrier, and the poll loop
+    // entirely, so it should win by a wide margin; the socket transport
+    // rides loopback TCP — no disk, but real syscalls and a hub hop — and
+    // should land between the two.
     let mut ex_us = Vec::new();
     for (name, transport, out) in [
         ("filesystem", DistTransport::Filesystem, Some(out_root.join("ex_fs"))),
         ("channel", DistTransport::Channel, None),
+        ("socket", DistTransport::Socket, None),
     ] {
         take_exchange_nanos(); // reset
         dist_train(&rt, &cfg_t("w8a8g8", steps, 2, out, transport, true)).expect("dist run");
@@ -134,15 +138,19 @@ fn main() {
         println!("{name:>10}: {us:>9.1} us/step exchange");
     }
     let fs_over_channel = ex_us[0] / ex_us[1].max(1e-9);
+    let fs_over_socket = ex_us[0] / ex_us[2].max(1e-9);
     results.push(json::obj(vec![
         ("name", json::s("transport")),
         ("recipe", json::s("w8a8g8")),
         ("dp", json::s("2")),
         ("fs_exchange_us_per_step", json::num(ex_us[0])),
         ("channel_exchange_us_per_step", json::num(ex_us[1])),
+        ("socket_exchange_us_per_step", json::num(ex_us[2])),
         ("exchange_fs_over_channel", json::num(fs_over_channel)),
+        ("exchange_fs_over_socket", json::num(fs_over_socket)),
     ]));
     println!("filesystem/channel exchange ratio: {fs_over_channel:.2}x");
+    println!("filesystem/socket   exchange ratio: {fs_over_socket:.2}x");
 
     section("overlap vs barrier publish (dp 2, w8a8g8, filesystem)");
     // At micro scale every dp-2 shard cover is a single node, so overlap

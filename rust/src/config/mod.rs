@@ -557,6 +557,11 @@ pub enum DistTransport {
     /// Bounded in-process MPSC channels; ranks run as threads of one
     /// process. No disk, no poll loop, no out dir required.
     Channel,
+    /// Length-prefixed QDGF frames over TCP: rank 0 listens
+    /// (`--listen`), workers dial (`--connect`) after a versioned `QDGH`
+    /// handshake. Ranks are separate processes — loopback multi-process
+    /// today, multi-host tomorrow. No out dir required.
+    Socket,
 }
 
 impl DistTransport {
@@ -564,7 +569,8 @@ impl DistTransport {
         match s {
             "filesystem" | "fs" => Ok(DistTransport::Filesystem),
             "channel" | "chan" => Ok(DistTransport::Channel),
-            other => bail!("unknown dist transport {other:?} (filesystem|channel)"),
+            "socket" | "tcp" => Ok(DistTransport::Socket),
+            other => bail!("unknown dist transport {other:?} (filesystem|channel|socket)"),
         }
     }
 
@@ -572,6 +578,7 @@ impl DistTransport {
         match self {
             DistTransport::Filesystem => "filesystem",
             DistTransport::Channel => "channel",
+            DistTransport::Socket => "socket",
         }
     }
 }
@@ -607,6 +614,13 @@ pub struct TrainHp {
     /// of one frame after the full shard backward. The reassembled node
     /// set is byte-identical either way, so this too is wall-clock only.
     pub dist_overlap: bool,
+    /// Socket transport only: the `host:port` rank 0 binds (`--listen`).
+    /// `None` defaults to `127.0.0.1:0` — loopback, OS-assigned port —
+    /// which is what the spawned-worker single-machine path wants.
+    pub dist_listen: Option<String>,
+    /// Socket transport only: the `host:port` a `dist-worker` dials
+    /// (`--connect`). Required for socket workers; unused on rank 0.
+    pub dist_connect: Option<String>,
 }
 
 impl TrainHp {
@@ -643,6 +657,8 @@ impl Default for TrainHp {
             dp: 1,
             dist_transport: DistTransport::Filesystem,
             dist_overlap: true,
+            dist_listen: None,
+            dist_connect: None,
         }
     }
 }

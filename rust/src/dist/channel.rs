@@ -22,7 +22,6 @@
 //! one frame per cover node, so `2 * (dp - 1) * (2 * root_level + 2)`
 //! slots bound everything in flight.
 
-use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{
@@ -31,10 +30,10 @@ use std::sync::mpsc::{
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::frame::{self, Frame};
-use super::{merge_parts, tree, Transport, WIRE_READ, WIRE_WRITTEN};
+use super::{tree, Stash, Transport, WIRE_WRITTEN};
 use crate::runtime::Runtime;
 use crate::train::{TrainCfg, TrainResult};
 
@@ -50,9 +49,9 @@ pub struct ChannelTransport {
     /// Senders into each peer's receiver; `None` at this rank's own index.
     peers: Vec<Option<SyncSender<Vec<u8>>>>,
     rx: Receiver<Vec<u8>>,
-    /// Frames received but not yet assembled, keyed by (step, rank) — a
-    /// peer may already be shipping step `s + 1` while we collect `s`.
-    stash: HashMap<(u64, u32), Vec<Frame>>,
+    /// Frames received but not yet assembled ([`Stash`], shared with the
+    /// socket transport).
+    stash: Stash,
 }
 
 /// Wire up `dp` fully-connected endpoints. `capacity` bounds each rank's
@@ -79,7 +78,7 @@ pub fn connect(dp: usize, capacity: usize, timeout: Duration) -> Vec<ChannelTran
                 .map(|(r, tx)| (r != rank).then(|| tx.clone()))
                 .collect(),
             rx,
-            stash: HashMap::new(),
+            stash: Stash::new(rank, dp),
         })
         .collect()
 }
@@ -90,77 +89,6 @@ impl ChannelTransport {
             bail!("dist peer aborted: {msg}");
         }
         Ok(())
-    }
-
-    /// Decode and stash one received frame, validating it comes from a
-    /// peer of this exchange and is for the current or the next step
-    /// (anything else means the lockstep protocol broke).
-    fn admit(&mut self, step: u64, bytes: &[u8]) -> Result<()> {
-        WIRE_READ.fetch_add(bytes.len() as u64, Ordering::Relaxed);
-        let f = frame::decode(bytes).context("decoding channel frame")?;
-        ensure!(
-            f.dp as usize == self.dp
-                && (f.rank as usize) < self.dp
-                && f.rank as usize != self.rank,
-            "channel frame from rank {} dp {} (expected a peer of rank {} dp {})",
-            f.rank,
-            f.dp,
-            self.rank,
-            self.dp
-        );
-        ensure!(
-            f.step == step || f.step == step + 1,
-            "channel frame for step {} while collecting step {step} \
-             (peers run at most one step ahead)",
-            f.step
-        );
-        self.stash.entry((f.step, f.rank)).or_default().push(f);
-        Ok(())
-    }
-
-    /// If every peer's step-`step` shipment is complete in the stash,
-    /// merge each into its single-frame form (in rank order) and return
-    /// them; otherwise leave the stash untouched and return `None`.
-    fn try_assemble(&mut self, step: u64) -> Result<Option<Vec<Frame>>> {
-        for r in 0..self.dp as u32 {
-            if r as usize == self.rank {
-                continue;
-            }
-            let Some(parts) = self.stash.get(&(step, r)) else {
-                return Ok(None);
-            };
-            let Some(p0) = parts.iter().find(|f| f.part == 0) else {
-                return Ok(None);
-            };
-            if parts.len() < p0.parts as usize {
-                return Ok(None);
-            }
-        }
-        let mut frames = Vec::with_capacity(self.dp - 1);
-        for r in 0..self.dp as u32 {
-            if r as usize == self.rank {
-                continue;
-            }
-            let mut parts = self.stash.remove(&(step, r)).unwrap();
-            parts.sort_by_key(|f| f.part);
-            let want = parts[0].parts;
-            ensure!(
-                parts.len() as u32 == want,
-                "rank {r} shipped {} frames for step {step}, part 0 claims {want}",
-                parts.len()
-            );
-            for (i, f) in parts.iter().enumerate() {
-                ensure!(
-                    f.part as usize == i && f.parts == want,
-                    "rank {r} step {step} part framing is inconsistent \
-                     (part {} of {}, expected {i} of {want})",
-                    f.part,
-                    f.parts
-                );
-            }
-            frames.push(merge_parts(parts));
-        }
-        Ok(Some(frames))
     }
 }
 
@@ -214,7 +142,7 @@ impl Transport for ChannelTransport {
             self.check_abort()?;
             loop {
                 match self.rx.try_recv() {
-                    Ok(bytes) => self.admit(step, &bytes)?,
+                    Ok(bytes) => self.stash.admit(step, &bytes)?,
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         self.check_abort()?;
@@ -222,7 +150,7 @@ impl Transport for ChannelTransport {
                     }
                 }
             }
-            if let Some(frames) = self.try_assemble(step)? {
+            if let Some(frames) = self.stash.try_assemble(step)? {
                 return Ok(frames);
             }
             let now = Instant::now();
@@ -235,7 +163,7 @@ impl Transport for ChannelTransport {
                 bail!("{msg}");
             }
             match self.rx.recv_timeout((deadline - now).min(Duration::from_millis(5))) {
-                Ok(bytes) => self.admit(step, &bytes)?,
+                Ok(bytes) => self.stash.admit(step, &bytes)?,
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     self.check_abort()?;

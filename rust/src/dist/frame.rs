@@ -40,6 +40,14 @@ pub const MAGIC: &[u8; 4] = b"QDGF";
 /// overlap mode ships a rank's cover as several small frames per step
 /// instead of one, and the collector reassembles them in part order.
 pub const VERSION: u16 = 2;
+/// Hard cap on the declared payload length (256 MiB). A frame for the
+/// study models is a few MiB at most; anything bigger is a corrupt or
+/// hostile length prefix. The cap is checked *before* any allocation is
+/// sized from the prefix — critical for the socket transport, whose
+/// reader allocates the receive buffer from the declared length before it
+/// has the bytes, so an unchecked prefix would be an OOM lever for any
+/// TCP peer.
+pub const MAX_PAYLOAD: u64 = 256 << 20;
 
 /// One tensor's gradient payload: raw f32 values, or int8 codes + scales
 /// per view (a view is one layer slice of a stacked tensor, or the whole
@@ -207,6 +215,9 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
         bail!("unsupported frame version {version}");
     }
     let payload_len = u64::from_le_bytes(bytes[6..14].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD {
+        bail!("frame declares a {payload_len}-byte payload (cap {MAX_PAYLOAD}): rejecting");
+    }
     let expect = (bytes.len() - 14 - 8) as u64;
     if payload_len != expect {
         bail!("frame length prefix {payload_len} disagrees with buffer ({expect} payload bytes)");
@@ -388,6 +399,24 @@ mod tests {
         assert!(decode(&forge(0, 0)).is_err(), "parts == 0 must be rejected");
         assert!(decode(&forge(3, 3)).is_err(), "part >= parts must be rejected");
         assert!(decode(&forge(0, 1)).is_ok(), "forging harness must be sound");
+    }
+
+    #[test]
+    fn adversarial_length_prefix_is_capped_before_allocation() {
+        // a hostile peer declares a huge payload; decode must reject on the
+        // cap alone — before sizing anything from the prefix — even when
+        // the buffer is tiny and even when the prefix matches the buffer
+        let mut b = encode(&sample_frame());
+        b[6..14].copy_from_slice(&(300u64 << 20).to_le_bytes());
+        let err = decode(&b).unwrap_err().to_string();
+        assert!(err.contains("cap"), "want the cap error, got {err:?}");
+        assert!(decode(&u64::MAX.to_le_bytes().repeat(4)).is_err());
+        // exactly at the cap the prefix check falls through to the
+        // buffer-length comparison (no 256 MiB test allocation needed)
+        let mut at_cap = encode(&sample_frame());
+        at_cap[6..14].copy_from_slice(&MAX_PAYLOAD.to_le_bytes());
+        let err = decode(&at_cap).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "cap boundary is inclusive, got {err:?}");
     }
 
     #[test]

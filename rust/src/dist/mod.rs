@@ -28,7 +28,7 @@
 //!    sender's value. Ineligible recipes ship raw f32 — lossless either
 //!    way.
 //!
-//! Frame I/O sits behind the [`Transport`] seam, with two
+//! Frame I/O sits behind the [`Transport`] seam, with three
 //! implementations selected by `--transport`:
 //!
 //! * **filesystem** ([`Exchange`]): ranks are separate processes; frames
@@ -42,6 +42,13 @@
 //!   exchanging the same encoded frames over bounded in-memory MPSC
 //!   channels — no disk, no poll loop, no out dir; the same
 //!   abort/timeout/deadline semantics through a shared abort slot.
+//! * **socket** ([`socket`]): ranks are separate processes exchanging the
+//!   same encoded frames over TCP — rank 0 listens (`--listen`, default
+//!   loopback + OS port), workers dial (`--connect`) after a versioned
+//!   `QDGH` handshake, and rank 0 relays every worker frame to the other
+//!   workers. Loopback multi-process today, multi-host tomorrow; same
+//!   loudness contract (`ABRT` control frames, deadline, hung-up-peer
+//!   detection, graceful FIN + drain on success).
 //!
 //! On top of the seam, `--overlap on` (the default) overlaps shard
 //! backward with publish: each subtree of the rank's cover ships as its
@@ -54,6 +61,7 @@
 
 pub mod channel;
 pub mod frame;
+pub mod socket;
 pub mod tree;
 
 use std::collections::HashMap;
@@ -336,6 +344,97 @@ fn merge_parts(mut parts: Vec<Frame>) -> Frame {
     f.part = 0;
     f.parts = 1;
     f
+}
+
+/// Per-step reassembly state shared by the push-style transports (channel
+/// and socket): received frames decode into a stash keyed by
+/// `(step, rank)` — a peer may already be shipping step `s + 1` while we
+/// collect `s` — and a peer's shipment merges once all its parts are in.
+/// The filesystem transport reads parts in order from disk and needs no
+/// stash.
+pub(crate) struct Stash {
+    rank: usize,
+    dp: usize,
+    map: HashMap<(u64, u32), Vec<Frame>>,
+}
+
+impl Stash {
+    fn new(rank: usize, dp: usize) -> Stash {
+        Stash { rank, dp, map: HashMap::new() }
+    }
+
+    /// Decode and stash one received frame, validating it comes from a
+    /// peer of this exchange and is for the current or the next step
+    /// (anything else means the lockstep protocol broke).
+    fn admit(&mut self, step: u64, bytes: &[u8]) -> Result<()> {
+        WIRE_READ.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let f = frame::decode(bytes).context("decoding transport frame")?;
+        ensure!(
+            f.dp as usize == self.dp
+                && (f.rank as usize) < self.dp
+                && f.rank as usize != self.rank,
+            "transport frame from rank {} dp {} (expected a peer of rank {} dp {})",
+            f.rank,
+            f.dp,
+            self.rank,
+            self.dp
+        );
+        ensure!(
+            f.step == step || f.step == step + 1,
+            "transport frame for step {} while collecting step {step} \
+             (peers run at most one step ahead)",
+            f.step
+        );
+        self.map.entry((f.step, f.rank)).or_default().push(f);
+        Ok(())
+    }
+
+    /// Is rank `r`'s step-`step` shipment fully stashed? (Part 0 announces
+    /// how many parts the shipment has.)
+    fn is_complete(&self, step: u64, r: u32) -> bool {
+        self.map.get(&(step, r)).is_some_and(|parts| {
+            parts
+                .iter()
+                .find(|f| f.part == 0)
+                .is_some_and(|p0| parts.len() >= p0.parts as usize)
+        })
+    }
+
+    /// If every peer's step-`step` shipment is complete in the stash,
+    /// merge each into its single-frame form (in rank order) and return
+    /// them; otherwise leave the stash untouched and return `None`.
+    fn try_assemble(&mut self, step: u64) -> Result<Option<Vec<Frame>>> {
+        for r in 0..self.dp as u32 {
+            if r as usize != self.rank && !self.is_complete(step, r) {
+                return Ok(None);
+            }
+        }
+        let mut frames = Vec::with_capacity(self.dp - 1);
+        for r in 0..self.dp as u32 {
+            if r as usize == self.rank {
+                continue;
+            }
+            let mut parts = self.map.remove(&(step, r)).unwrap();
+            parts.sort_by_key(|f| f.part);
+            let want = parts[0].parts;
+            ensure!(
+                parts.len() as u32 == want,
+                "rank {r} shipped {} frames for step {step}, part 0 claims {want}",
+                parts.len()
+            );
+            for (i, f) in parts.iter().enumerate() {
+                ensure!(
+                    f.part as usize == i && f.parts == want,
+                    "rank {r} step {step} part framing is inconsistent \
+                     (part {} of {}, expected {i} of {want})",
+                    f.part,
+                    f.parts
+                );
+            }
+            frames.push(merge_parts(parts));
+        }
+        Ok(Some(frames))
+    }
 }
 
 static WIRE_WRITTEN: AtomicU64 = AtomicU64::new(0);
@@ -866,8 +965,9 @@ fn exchange_dir(out: &Path) -> PathBuf {
 /// Leader entry: run `cfg` data-parallel over `cfg.hp.dp` ranks. `dp <= 1`
 /// degenerates to the same sharded numerics with no exchange at all;
 /// otherwise `cfg.hp.dist_transport` picks the topology — worker processes
-/// over the filesystem exchange, or worker threads over in-process
-/// channels. The trajectory is bit-identical across transports.
+/// over the filesystem exchange, worker threads over in-process channels,
+/// or worker processes dialing rank 0 over TCP. The trajectory is
+/// bit-identical across transports.
 pub fn dist_train(rt: &Runtime, cfg: &TrainCfg) -> Result<TrainResult> {
     let dp = cfg.hp.dp.max(1);
     if dp == 1 {
@@ -876,7 +976,57 @@ pub fn dist_train(rt: &Runtime, cfg: &TrainCfg) -> Result<TrainResult> {
     match cfg.hp.dist_transport {
         DistTransport::Filesystem => dist_train_fs(rt, cfg, dp),
         DistTransport::Channel => channel::dist_train_channel(rt, cfg, dp),
+        DistTransport::Socket => socket::dist_train_socket(rt, cfg, dp),
     }
+}
+
+/// The `dist-worker` spawn command shared by the multi-process leaders
+/// (filesystem and socket): everything that must replicate bit-exactly —
+/// model, recipe, schedule, seed, thread split, overlap — travels as
+/// args, and the int8-accumulator knob as env (it may have been set
+/// programmatically by a test rather than via the environment). The
+/// caller appends its transport-specific args (`--out` / `--connect`).
+fn worker_cmd(exe: &Path, cfg: &TrainCfg, rank: usize, dp: usize, threads: usize) -> Command {
+    let mut cmd = Command::new(exe);
+    cmd.args([
+        "dist-worker",
+        "--rank",
+        &rank.to_string(),
+        "--dp",
+        &dp.to_string(),
+        "--model",
+        &cfg.model,
+        "--quant",
+        &cfg.quant.to_string(),
+        "--steps",
+        &cfg.hp.steps.to_string(),
+        "--seed",
+        &cfg.hp.seed.to_string(),
+        "--lr",
+        &cfg.hp.lr_max.to_string(),
+        "--lr-min",
+        &cfg.hp.lr_min.to_string(),
+        "--warmup",
+        &cfg.hp.warmup.to_string(),
+        "--threads",
+        &threads.to_string(),
+        "--overlap",
+        if cfg.hp.dist_overlap { "on" } else { "off" },
+        "--transport",
+        cfg.hp.dist_transport.as_str(),
+    ]);
+    if !cfg.stop_on_divergence {
+        cmd.arg("--no-early-stop");
+    }
+    cmd.env(
+        "QPRETRAIN_INT8",
+        if crate::backend::native::int8_gemm_enabled() {
+            "on"
+        } else {
+            "off"
+        },
+    );
+    cmd
 }
 
 /// Filesystem leader: spawn `dp - 1` `dist-worker` processes (this process
@@ -901,47 +1051,8 @@ fn dist_train_fs(rt: &Runtime, cfg: &TrainCfg, dp: usize) -> Result<TrainResult>
     let mut ex = Exchange::new(&exdir, 0, dp, dist_timeout())?;
     let mut children = Vec::with_capacity(dp - 1);
     for rank in 1..dp {
-        let mut cmd = Command::new(&exe);
-        cmd.args([
-            "dist-worker",
-            "--rank",
-            &rank.to_string(),
-            "--dp",
-            &dp.to_string(),
-            "--model",
-            &cfg.model,
-            "--quant",
-            &cfg.quant.to_string(),
-            "--steps",
-            &cfg.hp.steps.to_string(),
-            "--seed",
-            &cfg.hp.seed.to_string(),
-            "--lr",
-            &cfg.hp.lr_max.to_string(),
-            "--lr-min",
-            &cfg.hp.lr_min.to_string(),
-            "--warmup",
-            &cfg.hp.warmup.to_string(),
-            "--threads",
-            &threads.to_string(),
-            "--overlap",
-            if cfg.hp.dist_overlap { "on" } else { "off" },
-            "--out",
-            out.to_str().ok_or_else(|| anyhow!("non-UTF8 out dir"))?,
-        ]);
-        if !cfg.stop_on_divergence {
-            cmd.arg("--no-early-stop");
-        }
-        // The int8-accumulator knob must reach the children even when it
-        // was set programmatically (tests) rather than via the env.
-        cmd.env(
-            "QPRETRAIN_INT8",
-            if crate::backend::native::int8_gemm_enabled() {
-                "on"
-            } else {
-                "off"
-            },
-        );
+        let mut cmd = worker_cmd(&exe, cfg, rank, dp, threads);
+        cmd.args(["--out", out.to_str().ok_or_else(|| anyhow!("non-UTF8 out dir"))?]);
         let child = cmd
             .spawn()
             .with_context(|| format!("spawning dist worker rank {rank}"))?;
@@ -963,23 +1074,57 @@ fn dist_train_fs(rt: &Runtime, cfg: &TrainCfg, dp: usize) -> Result<TrainResult>
     }
 }
 
-/// Worker entry (`dist-worker` subcommand): join the exchange under
-/// `cfg.out_dir` as `rank` and run the same loop. Any error drops the
-/// ABORT marker before propagating, so the leader fails loudly too.
+/// Worker entry (`dist-worker` subcommand): join the leader's exchange as
+/// `rank` — over the filesystem protocol under `cfg.out_dir`, or by
+/// dialing the leader's socket (`--connect`) — and run the same loop. Any
+/// error reaches the leader loudly (ABORT marker / `ABRT` control frame)
+/// before propagating.
 pub fn dist_worker(rt: &Runtime, cfg: &TrainCfg, rank: usize) -> Result<()> {
     let dp = cfg.hp.dp;
     ensure!(dp > 1 && rank > 0 && rank < dp, "bad dist worker rank {rank} for dp {dp}");
-    let out = cfg
-        .out_dir
-        .clone()
-        .ok_or_else(|| anyhow!("dist-worker needs --out (the leader's run dir)"))?;
-    let mut ex = Exchange::new(&exchange_dir(&out), rank, dp, dist_timeout())?;
-    match rank_loop(rt, cfg, dp, rank, Some(&mut ex)) {
-        Ok(_) => Ok(()),
-        Err(e) => {
-            ex.abort(&format!("rank {rank}: {e:#}"));
-            Err(e)
+    match cfg.hp.dist_transport {
+        DistTransport::Filesystem => {
+            let out = cfg
+                .out_dir
+                .clone()
+                .ok_or_else(|| anyhow!("dist-worker needs --out (the leader's run dir)"))?;
+            let mut ex = Exchange::new(&exchange_dir(&out), rank, dp, dist_timeout())?;
+            match rank_loop(rt, cfg, dp, rank, Some(&mut ex)) {
+                Ok(_) => Ok(()),
+                Err(e) => {
+                    ex.abort(&format!("rank {rank}: {e:#}"));
+                    Err(e)
+                }
+            }
         }
+        DistTransport::Socket => {
+            let spec = cfg.hp.dist_connect.as_deref().ok_or_else(|| {
+                anyhow!(
+                    "dist-worker --transport socket needs --connect <host:port> \
+                     (the leader's --listen address)"
+                )
+            })?;
+            let addr = crate::util::net::parse_addr(spec)?;
+            let mut tp = socket::connect(
+                addr,
+                rank,
+                dp,
+                dist_timeout(),
+                socket::epoch_nonce(cfg),
+                &cfg.quant.label(),
+            )?;
+            match rank_loop(rt, cfg, dp, rank, Some(&mut tp)) {
+                Ok(_) => tp.finish(),
+                Err(e) => {
+                    tp.abort(&format!("rank {rank}: {e:#}"));
+                    Err(e)
+                }
+            }
+        }
+        DistTransport::Channel => bail!(
+            "dist-worker is for multi-process transports; channel ranks are threads \
+             (run dist-train --transport channel)"
+        ),
     }
 }
 

@@ -1,0 +1,1128 @@
+//! TCP socket transport: rank 0 listens, workers dial.
+//!
+//! The wire format is the same encoded QDGF frames as every other
+//! transport ([`super::frame`], FNV-64 integrity included — TCP checksums
+//! do not replace it), carried as length-prefixed messages over TCP in a
+//! hub topology: rank 0 (`--listen`, default `127.0.0.1:0` — loopback,
+//! OS-assigned port) accepts one connection per worker (`--connect
+//! host:port`), and **relays** every worker frame to the other workers,
+//! so a worker needs exactly one address no matter the dp. Same-machine
+//! multi-process rides loopback today; the handshake and framing are
+//! host-agnostic, so multi-host is "point `--connect` somewhere else"
+//! tomorrow.
+//!
+//! A join opens with a versioned `QDGH` handshake — protocol version, dp,
+//! rank, a step-0 **epoch nonce** (a config fingerprint both ends derive
+//! independently, [`epoch_nonce`]), and the recipe label. Any mismatch is
+//! a loud typed error on both ends (the leader replies with an `ABRT`
+//! control frame before closing), never a hang: a stray worker from a
+//! different run, a version-skewed binary, or a recipe drift is caught
+//! before a single gradient byte moves.
+//!
+//! After the join, each connection gets a reader thread that feeds
+//! decoded-frame bytes into the same [`Stash`]/`merge_parts` collect path
+//! as the channel transport. The loudness contract matches the other
+//! transports:
+//!
+//! * aborts broadcast as `ABRT` control frames (first-wins slot locally,
+//!   relayed through the hub), so every rank fails with the root cause;
+//! * every wait respects `QPRETRAIN_DIST_TIMEOUT_SECS` (0 = frames must
+//!   already be queued — fail-fast), via read timeouts on the reader poll
+//!   and capped-backoff reconnect while a worker joins;
+//! * a peer disconnect maps to the hung-up-peer error: a reader's EOF
+//!   with an incomplete step shipment fails `collect` immediately (no
+//!   timeout burn), and the leader additionally polls its spawned
+//!   children's exit status;
+//! * success tears down gracefully: FIN the write half, drain until the
+//!   peer FINs back, so no frame in flight ever dies to an RST.
+//!
+//! Message framing is `kind u8 | len u32 | payload`: kind 0 a QDGF frame,
+//! kind 1 an `ABRT` (payload = error text), kind 2 the `QDGH` handshake.
+//! The declared length is capped ([`frame::MAX_PAYLOAD`]) *before* the
+//! receive buffer is allocated — a hostile or corrupt peer cannot OOM the
+//! receiver with a length prefix.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::process::Child;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::frame::{self, Frame, MAX_PAYLOAD};
+use super::{Stash, Transport, WIRE_WRITTEN};
+use crate::runtime::Runtime;
+use crate::train::{TrainCfg, TrainResult};
+use crate::util::fnv1a64;
+use crate::util::net::parse_addr;
+
+pub const HS_MAGIC: &[u8; 4] = b"QDGH";
+pub const HS_VERSION: u16 = 1;
+
+/// Message kinds on the stream.
+pub const MSG_FRAME: u8 = 0;
+pub const MSG_ABORT: u8 = 1;
+pub const MSG_HELLO: u8 = 2;
+
+/// Reader-thread poll granularity: how long a blocked read sleeps before
+/// rechecking the shutdown flag. Not a protocol timeout — deadlines are
+/// enforced by the callers.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+// ---------------------------------------------------------------------------
+// QDGH handshake codec
+// ---------------------------------------------------------------------------
+
+/// The `QDGH` join handshake. Canonical codec
+/// (`encode_handshake(decode_handshake(b)) == b` for every accepted
+/// input — `tests/fuzz.rs` mutates it for 10k rounds); *validation*
+/// against the run's identity happens separately on each end.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Handshake {
+    pub version: u16,
+    pub dp: u32,
+    pub rank: u32,
+    /// Step-0 epoch nonce: both ends derive it from their own config
+    /// ([`epoch_nonce`]), so equality proves the dialer belongs to this
+    /// run — not a stray worker from a crashed or concurrent one.
+    pub nonce: u64,
+    /// Recipe label, so a recipe drift fails at join, not at frame decode.
+    pub recipe: String,
+}
+
+/// `magic "QDGH" | version u16 | dp u32 | rank u32 | nonce u64
+///  | recipe_len u16 | recipe bytes` (integers little-endian).
+pub fn encode_handshake(h: &Handshake) -> Vec<u8> {
+    debug_assert!(h.recipe.len() <= u16::MAX as usize);
+    let mut b = Vec::with_capacity(24 + h.recipe.len());
+    b.extend_from_slice(HS_MAGIC);
+    b.extend_from_slice(&h.version.to_le_bytes());
+    b.extend_from_slice(&h.dp.to_le_bytes());
+    b.extend_from_slice(&h.rank.to_le_bytes());
+    b.extend_from_slice(&h.nonce.to_le_bytes());
+    b.extend_from_slice(&(h.recipe.len() as u16).to_le_bytes());
+    b.extend_from_slice(h.recipe.as_bytes());
+    b
+}
+
+pub fn decode_handshake(bytes: &[u8]) -> Result<Handshake> {
+    if bytes.len() < 24 {
+        bail!("handshake truncated: {} bytes, fixed part is 24", bytes.len());
+    }
+    if &bytes[..4] != HS_MAGIC {
+        bail!("bad handshake magic (expected QDGH)");
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    if version != HS_VERSION {
+        bail!("unsupported handshake version {version} (this build speaks {HS_VERSION})");
+    }
+    let dp = u32::from_le_bytes(bytes[6..10].try_into().unwrap());
+    let rank = u32::from_le_bytes(bytes[10..14].try_into().unwrap());
+    let nonce = u64::from_le_bytes(bytes[14..22].try_into().unwrap());
+    let recipe_len = u16::from_le_bytes(bytes[22..24].try_into().unwrap()) as usize;
+    if bytes.len() != 24 + recipe_len {
+        bail!(
+            "handshake recipe length {recipe_len} disagrees with buffer ({} bytes after header)",
+            bytes.len() - 24
+        );
+    }
+    let recipe = std::str::from_utf8(&bytes[24..])
+        .context("handshake recipe is not UTF-8")?
+        .to_string();
+    Ok(Handshake { version, dp, rank, nonce, recipe })
+}
+
+/// The step-0 epoch nonce: an FNV-64 fingerprint of everything that must
+/// agree for ranks to be bit-identical replicas of one run. Leader and
+/// workers compute it independently from their own configs, so a worker
+/// spawned with drifted args — or dialed into the wrong leader — fails
+/// the handshake instead of training a subtly different model.
+pub fn epoch_nonce(cfg: &TrainCfg) -> u64 {
+    fnv1a64(
+        format!(
+            "{}|{}|{}|{}|{}",
+            cfg.model,
+            cfg.quant.label(),
+            cfg.hp.seed,
+            cfg.hp.steps,
+            cfg.hp.dp.max(1)
+        )
+        .as_bytes(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// message framing over the stream
+// ---------------------------------------------------------------------------
+
+/// Why a receive stopped without yielding a message.
+enum RecvFail {
+    /// Connection-level failure (EOF mid-message, reset, shutdown, a join
+    /// deadline): the peer is gone as far as this stream is concerned.
+    Closed(String),
+    /// The peer spoke, but spoke garbage (oversized length prefix): a
+    /// protocol violation worth surfacing verbatim.
+    Protocol(String),
+}
+
+impl RecvFail {
+    fn into_error(self) -> anyhow::Error {
+        match self {
+            RecvFail::Closed(m) | RecvFail::Protocol(m) => anyhow!("{m}"),
+        }
+    }
+}
+
+/// Fill `buf` exactly, riding out read-timeout wakeups (used to poll
+/// `shutdown` / `deadline` between chunks). `Ok(false)` is a clean EOF at
+/// offset 0 — the peer FIN'd at a message boundary.
+fn read_full(
+    s: &mut TcpStream,
+    buf: &mut [u8],
+    shutdown: &AtomicBool,
+    deadline: Option<Instant>,
+) -> Result<bool, RecvFail> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match s.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(RecvFail::Closed(format!(
+                    "connection closed mid-message ({filled} of {} bytes)",
+                    buf.len()
+                )));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Err(RecvFail::Closed("shutting down".to_string()));
+                }
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    return Err(RecvFail::Closed("timed out waiting for bytes".to_string()));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(RecvFail::Closed(format!("socket read failed: {e}"))),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one `kind u8 | len u32 | payload` message. `Ok(None)` is a clean
+/// FIN at a message boundary. The declared length is checked against
+/// [`MAX_PAYLOAD`] *before* the payload buffer is allocated.
+fn read_msg(
+    s: &mut TcpStream,
+    shutdown: &AtomicBool,
+    deadline: Option<Instant>,
+) -> Result<Option<(u8, Vec<u8>)>, RecvFail> {
+    let mut hdr = [0u8; 5];
+    if !read_full(s, &mut hdr, shutdown, deadline)? {
+        return Ok(None);
+    }
+    let kind = hdr[0];
+    let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as u64;
+    if len > MAX_PAYLOAD {
+        return Err(RecvFail::Protocol(format!(
+            "peer declared a {len}-byte message (cap {MAX_PAYLOAD}): rejecting before allocation"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    if !read_full(s, &mut payload, shutdown, deadline)? {
+        return Err(RecvFail::Closed("connection closed before the message body".to_string()));
+    }
+    Ok(Some((kind, payload)))
+}
+
+fn write_msg(s: &mut TcpStream, kind: u8, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() as u64 <= MAX_PAYLOAD);
+    let mut hdr = [0u8; 5];
+    hdr[0] = kind;
+    hdr[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    s.write_all(&hdr)?;
+    s.write_all(payload)
+}
+
+fn send_msg(w: &Mutex<TcpStream>, kind: u8, payload: &[u8]) -> std::io::Result<()> {
+    let mut s = w.lock().unwrap_or_else(|p| p.into_inner());
+    write_msg(&mut s, kind, payload)
+}
+
+fn set_abort(slot: &Mutex<Option<String>>, msg: &str) {
+    let mut s = slot.lock().unwrap_or_else(|p| p.into_inner());
+    if s.is_none() {
+        *s = Some(msg.to_string());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the transport
+// ---------------------------------------------------------------------------
+
+/// One rank's endpoint of the TCP exchange. Rank 0 holds one connection
+/// per worker (and relays between them); a worker holds exactly one, to
+/// rank 0. Built with [`listen`] / [`connect`].
+pub struct SocketTransport {
+    rank: usize,
+    timeout: Duration,
+    /// First-wins abort slot (the ABORT marker's in-memory twin); fed
+    /// locally by [`Transport::abort`] and remotely by `ABRT` frames.
+    abort: Arc<Mutex<Option<String>>>,
+    /// Tells reader threads to stop riding out read timeouts.
+    shutdown: Arc<AtomicBool>,
+    /// `(peer rank, write half)`.
+    writers: Vec<(usize, Arc<Mutex<TcpStream>>)>,
+    /// `(peer rank, reader-saw-EOF flag)` — the hung-up-peer signal.
+    eofs: Vec<(usize, Arc<AtomicBool>)>,
+    readers: Vec<JoinHandle<()>>,
+    rx: Receiver<Vec<u8>>,
+    stash: Stash,
+    /// Leader-spawn path only: worker children, polled during collect.
+    children: Vec<(usize, Child)>,
+}
+
+/// Rank 0: accept and validate `dp - 1` worker joins on `listener`, then
+/// start the per-connection reader threads. A handshake mismatch — wrong
+/// version, dp, rank, nonce, or recipe — fails the run (after telling the
+/// dialer why with an `ABRT`); it never hangs, and the deadline bounds
+/// even a dialer that connects and says nothing.
+pub fn listen(
+    listener: TcpListener,
+    dp: usize,
+    timeout: Duration,
+    nonce: u64,
+    recipe: &str,
+) -> Result<SocketTransport> {
+    listen_with(listener, dp, timeout, nonce, recipe, Vec::new())
+}
+
+pub(crate) fn listen_with(
+    listener: TcpListener,
+    dp: usize,
+    timeout: Duration,
+    nonce: u64,
+    recipe: &str,
+    mut children: Vec<(usize, Child)>,
+) -> Result<SocketTransport> {
+    let accepted = accept_all(&listener, dp, timeout, nonce, recipe, &mut children);
+    match accepted {
+        Ok(conns) => SocketTransport::build(0, dp, timeout, conns, children),
+        Err(e) => {
+            for (_, child) in &mut children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            Err(e)
+        }
+    }
+}
+
+fn accept_all(
+    listener: &TcpListener,
+    dp: usize,
+    timeout: Duration,
+    nonce: u64,
+    recipe: &str,
+    children: &mut [(usize, Child)],
+) -> Result<Vec<(usize, TcpStream)>> {
+    ensure!(dp >= 2, "socket transport needs dp >= 2, got {dp}");
+    let ours = Handshake {
+        version: HS_VERSION,
+        dp: dp as u32,
+        rank: 0,
+        nonce,
+        recipe: recipe.to_string(),
+    };
+    listener.set_nonblocking(true).context("making the dist listener pollable")?;
+    let deadline = Instant::now() + timeout;
+    let mut conns: Vec<(usize, TcpStream)> = Vec::with_capacity(dp - 1);
+    while conns.len() < dp - 1 {
+        for (rank, child) in children.iter_mut() {
+            if let Some(status) = child.try_wait()? {
+                if !status.success() {
+                    bail!("dist worker rank {rank} exited before joining: {status}");
+                }
+            }
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let hs = handshake_accept(&mut stream, &ours, deadline)?;
+                let r = hs.rank as usize;
+                ensure!(
+                    !conns.iter().any(|(cr, _)| *cr == r),
+                    "duplicate join for rank {r}"
+                );
+                conns.push((r, stream));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "rank 0 timed out after {timeout:?} waiting for worker joins \
+                         ({} of {} joined)",
+                        conns.len(),
+                        dp - 1
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e).context("accepting a worker join"),
+        }
+    }
+    Ok(conns)
+}
+
+/// Leader side of one join: read the dialer's `QDGH`, validate it against
+/// this run, reply with ours (or an `ABRT` naming the mismatch).
+fn handshake_accept(
+    stream: &mut TcpStream,
+    ours: &Handshake,
+    deadline: Instant,
+) -> Result<Handshake> {
+    stream.set_nonblocking(false).context("configuring a joined socket")?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(50))).context("setting join timeout")?;
+    let never = AtomicBool::new(false);
+    let msg = read_msg(stream, &never, Some(deadline))
+        .map_err(|e| e.into_error().context("reading a worker handshake"))?;
+    let Some((kind, payload)) = msg else {
+        bail!("worker closed the connection before its handshake");
+    };
+    let check = || -> Result<Handshake> {
+        ensure!(
+            kind == MSG_HELLO,
+            "expected a QDGH handshake, got message kind {kind}"
+        );
+        let hs = decode_handshake(&payload)?;
+        ensure!(
+            hs.dp == ours.dp,
+            "handshake dp mismatch: worker says {}, this run is dp {}",
+            hs.dp,
+            ours.dp
+        );
+        ensure!(
+            hs.rank >= 1 && hs.rank < ours.dp,
+            "handshake rank {} out of range for dp {}",
+            hs.rank,
+            ours.dp
+        );
+        ensure!(
+            hs.nonce == ours.nonce,
+            "handshake epoch nonce mismatch (worker {:#018x}, run {:#018x}) — \
+             the dialer belongs to a different run",
+            hs.nonce,
+            ours.nonce
+        );
+        ensure!(
+            hs.recipe == ours.recipe,
+            "handshake recipe mismatch (worker {:?}, run {:?})",
+            hs.recipe,
+            ours.recipe
+        );
+        Ok(hs)
+    };
+    match check() {
+        Ok(hs) => {
+            write_msg(stream, MSG_HELLO, &encode_handshake(ours))
+                .context("replying to a worker handshake")?;
+            Ok(hs)
+        }
+        Err(e) => {
+            // tell the dialer why before hanging up — typed error, no hang
+            let _ = write_msg(stream, MSG_ABORT, format!("{e:#}").as_bytes());
+            let _ = stream.shutdown(Shutdown::Both);
+            Err(e.context("rejecting a worker join"))
+        }
+    }
+}
+
+/// Worker rank `rank`: dial the leader with capped-backoff reconnect (the
+/// leader may still be binding), handshake, and start the reader thread.
+pub fn connect(
+    addr: SocketAddr,
+    rank: usize,
+    dp: usize,
+    timeout: Duration,
+    nonce: u64,
+    recipe: &str,
+) -> Result<SocketTransport> {
+    ensure!(
+        dp >= 2 && rank >= 1 && rank < dp,
+        "bad socket worker rank {rank} for dp {dp}"
+    );
+    let ours = Handshake {
+        version: HS_VERSION,
+        dp: dp as u32,
+        rank: rank as u32,
+        nonce,
+        recipe: recipe.to_string(),
+    };
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(20);
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("dist rank {rank} could not join {addr} within {timeout:?}: {e}");
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(50))).context("setting join timeout")?;
+    write_msg(&mut stream, MSG_HELLO, &encode_handshake(&ours))
+        .with_context(|| format!("dist rank {rank}: sending handshake"))?;
+    let never = AtomicBool::new(false);
+    let reply = read_msg(&mut stream, &never, Some(deadline))
+        .map_err(|e| e.into_error().context(format!("dist rank {rank}: handshake reply")))?;
+    match reply {
+        Some((MSG_HELLO, payload)) => {
+            let hs = decode_handshake(&payload)?;
+            ensure!(
+                hs.rank == 0 && hs.dp == ours.dp && hs.nonce == nonce && hs.recipe == recipe,
+                "dist rank {rank}: leader handshake mismatch \
+                 (rank {} dp {} nonce {:#018x} recipe {:?}; \
+                  expected 0/{dp}/{nonce:#018x}/{recipe:?})",
+                hs.rank,
+                hs.dp,
+                hs.nonce,
+                hs.recipe
+            );
+        }
+        Some((MSG_ABORT, payload)) => {
+            bail!(
+                "dist rank {rank} rejected at join: {}",
+                String::from_utf8_lossy(&payload)
+            );
+        }
+        Some((kind, _)) => bail!("dist rank {rank}: unexpected message kind {kind} during join"),
+        None => bail!("dist rank {rank}: leader closed the connection during the handshake"),
+    }
+    SocketTransport::build(rank, dp, timeout, vec![(0, stream)], Vec::new())
+}
+
+fn spawn_reader(
+    mut stream: TcpStream,
+    src: usize,
+    relay: Vec<(usize, Arc<Mutex<TcpStream>>)>,
+    tx: Sender<Vec<u8>>,
+    abort: Arc<Mutex<Option<String>>>,
+    eof: Arc<AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        loop {
+            match read_msg(&mut stream, &shutdown, None) {
+                Ok(Some((MSG_FRAME, payload))) => {
+                    // hub relay: rank 0 forwards worker frames to the other
+                    // workers verbatim (workers spawn with an empty relay
+                    // list). A failed forward is not fatal here — the dead
+                    // target's own reader flags the hangup.
+                    for (_, w) in &relay {
+                        let _ = send_msg(w, MSG_FRAME, &payload);
+                    }
+                    if tx.send(payload).is_err() {
+                        break; // transport dropped; nothing left to feed
+                    }
+                }
+                Ok(Some((MSG_ABORT, payload))) => {
+                    let msg = String::from_utf8_lossy(&payload).into_owned();
+                    for (_, w) in &relay {
+                        let _ = send_msg(w, MSG_ABORT, msg.as_bytes());
+                    }
+                    set_abort(&abort, &msg);
+                    // keep draining: the peer may still FIN cleanly
+                }
+                Ok(Some((kind, _))) => {
+                    set_abort(
+                        &abort,
+                        &format!("dist rank {src} sent an unknown message kind {kind}"),
+                    );
+                    break;
+                }
+                Ok(None) => break, // clean FIN at a message boundary
+                Err(RecvFail::Closed(_)) => break, // collect classifies via the EOF flag
+                Err(RecvFail::Protocol(msg)) => {
+                    set_abort(&abort, &format!("dist rank {src}: {msg}"));
+                    break;
+                }
+            }
+        }
+        eof.store(true, Ordering::SeqCst);
+    })
+}
+
+impl SocketTransport {
+    fn build(
+        rank: usize,
+        dp: usize,
+        timeout: Duration,
+        conns: Vec<(usize, TcpStream)>,
+        children: Vec<(usize, Child)>,
+    ) -> Result<SocketTransport> {
+        let abort = Arc::new(Mutex::new(None));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel();
+        // writers first, so each reader can relay to all *other* peers
+        let mut writers = Vec::with_capacity(conns.len());
+        let mut streams = Vec::with_capacity(conns.len());
+        for (r, s) in conns {
+            // A write timeout bounds publish/relay against a stalled peer;
+            // zero-timeout mode leaves writes blocking (0 is rejected by
+            // set_write_timeout, and fail-fast is about collect anyway).
+            if !timeout.is_zero() {
+                s.set_write_timeout(Some(timeout)).context("setting socket write timeout")?;
+            }
+            let writer = Arc::new(Mutex::new(s.try_clone().context("cloning socket writer")?));
+            writers.push((r, writer));
+            streams.push((r, s));
+        }
+        let mut eofs = Vec::with_capacity(streams.len());
+        let mut readers = Vec::with_capacity(streams.len());
+        for (r, s) in streams {
+            s.set_read_timeout(Some(READ_POLL)).context("setting reader poll timeout")?;
+            let eof = Arc::new(AtomicBool::new(false));
+            let relay: Vec<_> = writers.iter().filter(|(wr, _)| *wr != r).cloned().collect();
+            readers.push(spawn_reader(
+                s,
+                r,
+                relay,
+                tx.clone(),
+                abort.clone(),
+                eof.clone(),
+                shutdown.clone(),
+            ));
+            eofs.push((r, eof));
+        }
+        Ok(SocketTransport {
+            rank,
+            timeout,
+            abort,
+            shutdown,
+            writers,
+            eofs,
+            readers,
+            rx,
+            stash: Stash::new(rank, dp),
+            children,
+        })
+    }
+
+    fn check_abort(&self) -> Result<()> {
+        let slot = self.abort.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        if let Some(msg) = slot {
+            bail!("dist peer aborted: {msg}");
+        }
+        Ok(())
+    }
+
+    fn check_children(&mut self) -> Result<()> {
+        let mut failed: Option<String> = None;
+        for (rank, child) in &mut self.children {
+            if let Some(status) = child.try_wait()? {
+                if !status.success() {
+                    failed = Some(format!("dist worker rank {rank} exited: {status}"));
+                    break;
+                }
+            }
+        }
+        if let Some(msg) = failed {
+            self.abort(&msg);
+            bail!("{msg}");
+        }
+        Ok(())
+    }
+
+    /// Tests only: shrink the collect deadline after the join completed
+    /// (join and collect share the construction-time timeout otherwise).
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    /// Graceful success-path teardown: FIN our write half so each peer's
+    /// drain sees EOF, drain our side until the peer FINs back (bounded —
+    /// a peer that never FINs can only cost the grace window, not a
+    /// hang), then reap children (leader-spawn path).
+    pub(crate) fn finish(&mut self) -> Result<()> {
+        for (_, w) in &self.writers {
+            let s = w.lock().unwrap_or_else(|p| p.into_inner());
+            let _ = s.shutdown(Shutdown::Write);
+        }
+        let grace = Instant::now()
+            + self
+                .timeout
+                .min(Duration::from_secs(10))
+                .max(Duration::from_millis(100));
+        while self.eofs.iter().any(|(_, e)| !e.load(Ordering::SeqCst)) && Instant::now() < grace
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        let mut err: Option<anyhow::Error> = None;
+        for (rank, child) in &mut self.children {
+            match child.wait() {
+                Ok(s) if s.success() => {}
+                Ok(s) => err = err.or(Some(anyhow!("dist worker rank {rank} exited: {s}"))),
+                Err(e) => err = err.or(Some(e.into())),
+            }
+        }
+        self.children.clear();
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    pub(crate) fn kill_children(&mut self) {
+        for (_, child) in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.children.clear();
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for (_, w) in &self.writers {
+            let s = w.lock().unwrap_or_else(|p| p.into_inner());
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        self.kill_children();
+    }
+}
+
+impl Transport for SocketTransport {
+    /// Send the encoded frame to every connection this rank holds (a
+    /// worker's single leader connection is enough — the hub relays). A
+    /// failed send maps to the hung-up-peer error, unless a peer abort is
+    /// already pending (the root cause wins).
+    fn publish(&mut self, frame: &Frame) -> Result<()> {
+        self.check_abort()?;
+        let bytes = frame::encode(frame);
+        WIRE_WRITTEN.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        for (r, w) in &self.writers {
+            if let Err(e) = send_msg(w, MSG_FRAME, &bytes) {
+                self.check_abort()?;
+                let msg = format!(
+                    "dist rank {r} hung up (step {} part {} send failed: {e})",
+                    frame.step, frame.part
+                );
+                self.abort(&msg);
+                bail!("{msg}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive until every peer's step-`step` shipment assembles.
+    /// Everything already queued is admitted before the deadline is
+    /// judged (zero timeout succeeds on queued frames, fails fast
+    /// otherwise), and an EOF'd peer with an incomplete shipment fails
+    /// immediately — after one extra drain round, closing the race where
+    /// the reader's final frames are still in the queue when its EOF flag
+    /// flips.
+    fn collect(&mut self, step: u64) -> Result<Vec<Frame>> {
+        let deadline = Instant::now() + self.timeout;
+        let mut suspects: Vec<usize> = Vec::new();
+        loop {
+            self.check_abort()?;
+            loop {
+                match self.rx.try_recv() {
+                    Ok(bytes) => self.stash.admit(step, &bytes)?,
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+            if let Some(frames) = self.stash.try_assemble(step)? {
+                return Ok(frames);
+            }
+            self.check_children()?;
+            for (r, eof) in &self.eofs {
+                if eof.load(Ordering::SeqCst) && !self.stash.is_complete(step, *r as u32) {
+                    if suspects.contains(r) {
+                        let msg = format!(
+                            "dist rank {r} hung up mid-run (connection closed before its \
+                             step {step} shipment completed)"
+                        );
+                        self.abort(&msg);
+                        bail!("{msg}");
+                    }
+                    suspects.push(*r);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let msg = format!(
+                    "dist rank {} timed out after {:?} collecting step {step}",
+                    self.rank, self.timeout
+                );
+                self.abort(&msg);
+                bail!("{msg}");
+            }
+            match self.rx.recv_timeout((deadline - now).min(Duration::from_millis(5))) {
+                Ok(bytes) => self.stash.admit(step, &bytes)?,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    // all readers exited; the suspects pass above will
+                    // classify the hangup — just avoid a busy spin
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// First-wins locally, broadcast as `ABRT` control frames to every
+    /// connection (the hub relays a worker's abort to the other workers).
+    fn abort(&self, msg: &str) {
+        set_abort(&self.abort, msg);
+        for (_, w) in &self.writers {
+            let _ = send_msg(w, MSG_ABORT, msg.as_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// leader entry
+// ---------------------------------------------------------------------------
+
+/// Socket leader: bind `--listen` (default `127.0.0.1:0`), spawn `dp - 1`
+/// `dist-worker` processes dialing the *actual* bound address, accept
+/// their joins, and run rank 0. No out dir is required — the exchange
+/// lives on the wire (run artifacts still land in `--out` when given).
+pub(crate) fn dist_train_socket(rt: &Runtime, cfg: &TrainCfg, dp: usize) -> Result<TrainResult> {
+    let spec = cfg.hp.dist_listen.as_deref().unwrap_or("127.0.0.1:0");
+    let addr = parse_addr(spec)?;
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding dist listener on {addr}"))?;
+    let actual = listener.local_addr().context("reading the bound listener address")?;
+
+    let threads = crate::coordinator::worker_threads(cfg, dp);
+    let mut leader_cfg = cfg.clone();
+    leader_cfg.hp.threads = threads;
+
+    let exe = super::worker_exe()?;
+    let mut children = Vec::with_capacity(dp - 1);
+    for rank in 1..dp {
+        let mut cmd = super::worker_cmd(&exe, cfg, rank, dp, threads);
+        cmd.args(["--connect", &actual.to_string()]);
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning dist worker rank {rank}"))?;
+        children.push((rank, child));
+    }
+
+    let nonce = epoch_nonce(cfg);
+    let mut tp = listen_with(
+        listener,
+        dp,
+        super::dist_timeout(),
+        nonce,
+        &cfg.quant.label(),
+        children,
+    )?;
+    match super::rank_loop(rt, &leader_cfg, dp, 0, Some(&mut tp)) {
+        Ok(result) => {
+            tp.finish()?;
+            Ok(result)
+        }
+        Err(e) => {
+            tp.abort(&format!("{e:#}"));
+            tp.kill_children();
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::frame::{WireNode, WireTensor};
+    use super::*;
+
+    fn frame_with(step: u64, rank: u32, dp: u32, part: u32, parts: u32, idx: u32) -> Frame {
+        Frame {
+            step,
+            rank,
+            dp,
+            leaves: 4,
+            part,
+            parts,
+            nodes: vec![WireNode {
+                level: 0,
+                idx,
+                loss: 0.5 * (idx as f64 + 1.0),
+                tensors: vec![WireTensor::F32(vec![idx as f32, -2.0, 0.125])],
+            }],
+        }
+    }
+
+    fn pair(timeout: Duration) -> (SocketTransport, SocketTransport) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let join = Duration::from_secs(20).max(timeout);
+        let worker =
+            std::thread::spawn(move || connect(addr, 1, 2, join, 0xA11CE, "w8a8g8"));
+        let mut leader = listen(listener, 2, join, 0xA11CE, "w8a8g8").unwrap();
+        leader.set_timeout(timeout);
+        let mut worker = worker.join().unwrap().unwrap();
+        worker.set_timeout(timeout);
+        (leader, worker)
+    }
+
+    #[test]
+    fn handshake_codec_is_canonical() {
+        let h = Handshake {
+            version: HS_VERSION,
+            dp: 3,
+            rank: 2,
+            nonce: 0xDEAD_BEEF_0BAD_F00D,
+            recipe: "w8a8g8".to_string(),
+        };
+        let b = encode_handshake(&h);
+        let back = decode_handshake(&b).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(encode_handshake(&back), b);
+        // skew/truncate/trail are rejected
+        assert!(decode_handshake(&b[..b.len() - 1]).is_err(), "truncated recipe");
+        assert!(decode_handshake(&b[..10]).is_err(), "truncated header");
+        let mut trailing = b.clone();
+        trailing.push(0);
+        assert!(decode_handshake(&trailing).is_err(), "trailing byte");
+        let mut skew = b.clone();
+        skew[4] = 99;
+        let err = decode_handshake(&skew).unwrap_err().to_string();
+        assert!(err.contains("version"), "got: {err}");
+        let mut magic = b;
+        magic[0] = b'X';
+        assert!(decode_handshake(&magic).is_err(), "bad magic");
+    }
+
+    #[test]
+    fn frames_cross_the_wire_and_assemble() {
+        let (mut leader, mut worker) = pair(Duration::from_secs(10));
+        for part in 0..3u32 {
+            worker.publish(&frame_with(1, 1, 2, part, 3, part)).unwrap();
+        }
+        let got = leader.collect(1).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].part, got[0].parts), (0, 1));
+        let idxs: Vec<u32> = got[0].nodes.iter().map(|n| n.idx).collect();
+        assert_eq!(idxs, vec![0, 1, 2]);
+        // and the other direction, one step ahead stashes fine
+        leader.publish(&frame_with(1, 0, 2, 0, 1, 7)).unwrap();
+        leader.publish(&frame_with(2, 0, 2, 0, 1, 9)).unwrap();
+        assert_eq!(worker.collect(1).unwrap()[0].nodes[0].idx, 7);
+        assert_eq!(worker.collect(2).unwrap()[0].nodes[0].idx, 9);
+    }
+
+    #[test]
+    fn abort_broadcasts_as_abrt_and_keeps_root_cause() {
+        let (mut leader, worker) = pair(Duration::from_secs(10));
+        worker.abort("rank 1 lost its gradients");
+        worker.abort("a later, less interesting failure");
+        let err = leader.collect(1).unwrap_err().to_string();
+        assert!(err.contains("rank 1 lost its gradients"), "got: {err}");
+    }
+
+    #[test]
+    fn hub_relays_worker_frames_and_aborts_to_other_workers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = Duration::from_secs(20);
+        let w1 = std::thread::spawn(move || connect(addr, 1, 3, t, 7, "base"));
+        let w2 = std::thread::spawn(move || connect(addr, 2, 3, t, 7, "base"));
+        let _leader = listen(listener, 3, t, 7, "base").unwrap();
+        let mut w1 = w1.join().unwrap().unwrap();
+        let mut w2 = w2.join().unwrap().unwrap();
+        // w1's frame reaches w2 through the hub without the leader's loop
+        // running at all (the relay lives in the reader threads)
+        w1.publish(&frame_with(1, 1, 3, 0, 1, 5)).unwrap();
+        w2.set_timeout(Duration::from_secs(5));
+        // w2 needs frames from ranks 0 and 1; only 1's arrives, so wait for
+        // the stash then check it via a peeked collect timeout
+        let t0 = Instant::now();
+        let err = w2.collect(1).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "got: {err}");
+        assert!(t0.elapsed() >= Duration::from_secs(5), "waited the deadline");
+        assert!(w2.stash.is_complete(1, 1), "rank 1's relayed frame is stashed");
+        // the timeout above broadcast an ABRT through the hub: w1 sees it
+        let err = w1.collect(1).unwrap_err().to_string();
+        assert!(err.contains("aborted"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_timeout_fails_fast_but_accepts_queued_frames() {
+        let (mut leader, _worker) = pair(Duration::ZERO);
+        let t = Instant::now();
+        let err = leader.collect(1).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "got: {err}");
+        assert!(t.elapsed() < Duration::from_millis(200), "zero timeout must fail fast");
+
+        // fresh pair: a frame that already crossed the wire still collects
+        // at zero patience
+        let (mut leader, mut worker) = pair(Duration::from_secs(10));
+        worker.publish(&frame_with(1, 1, 2, 0, 1, 3)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            // wait for the reader thread to surface the bytes, then collect
+            // with zero patience
+            leader.set_timeout(Duration::ZERO);
+            match leader.collect(1) {
+                Ok(got) => {
+                    assert_eq!(got[0].nodes[0].idx, 3);
+                    break;
+                }
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "frame never surfaced");
+                    *leader.abort.lock().unwrap() = None; // clear the timeout's abort
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_peer_is_a_hung_up_error_not_a_timeout() {
+        let (mut leader, mut worker) = pair(Duration::from_secs(30));
+        worker.publish(&frame_with(1, 1, 2, 0, 1, 4)).unwrap();
+        drop(worker); // "mid-step worker kill" at the transport level
+        assert_eq!(leader.collect(1).unwrap()[0].nodes[0].idx, 4, "pre-kill frame survives");
+        let t = Instant::now();
+        let err = leader.collect(2).unwrap_err().to_string();
+        assert!(err.contains("hung up"), "got: {err}");
+        assert!(
+            t.elapsed() < Duration::from_secs(5),
+            "EOF detection must not burn the 30s deadline (took {:?})",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn oversized_message_length_is_rejected_before_allocation() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let evil = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let hello = encode_handshake(&Handshake {
+                version: HS_VERSION,
+                dp: 2,
+                rank: 1,
+                nonce: 42,
+                recipe: "base".to_string(),
+            });
+            write_msg(&mut s, MSG_HELLO, &hello).unwrap();
+            let never = AtomicBool::new(false);
+            let (kind, _) = read_msg(&mut s, &never, None).unwrap().unwrap();
+            assert_eq!(kind, MSG_HELLO);
+            // declare a 2 GiB frame; never send it
+            let mut hdr = [0u8; 5];
+            hdr[0] = MSG_FRAME;
+            hdr[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+            s.write_all(&hdr).unwrap();
+            s // keep the socket open so only the cap can fire
+        });
+        let mut leader = listen(listener, 2, Duration::from_secs(20), 42, "base").unwrap();
+        let _s = evil.join().unwrap();
+        leader.set_timeout(Duration::from_secs(10));
+        let err = leader.collect(1).unwrap_err().to_string();
+        assert!(err.contains("cap"), "got: {err}");
+    }
+
+    #[test]
+    fn corrupt_frame_over_tcp_is_rejected() {
+        let (mut leader, worker) = pair(Duration::from_secs(10));
+        let mut bytes = frame::encode(&frame_with(1, 1, 2, 0, 1, 0));
+        bytes[20] ^= 0x40; // payload flip: FNV must catch it after the trip
+        send_msg(&worker.writers[0].1, MSG_FRAME, &bytes).unwrap();
+        let err = format!("{:#}", leader.collect(1).unwrap_err());
+        assert!(err.contains("integrity"), "got: {err}");
+    }
+
+    #[test]
+    fn handshake_mismatches_are_rejected_loudly() {
+        let cases: Vec<(&str, Box<dyn Fn(&mut Handshake) + Send>, &str)> = vec![
+            ("dp", Box::new(|h: &mut Handshake| h.dp = 3), "dp mismatch"),
+            ("rank", Box::new(|h: &mut Handshake| h.rank = 0), "out of range"),
+            ("nonce", Box::new(|h: &mut Handshake| h.nonce ^= 1), "nonce mismatch"),
+            (
+                "recipe",
+                Box::new(|h: &mut Handshake| h.recipe = "w4a4".to_string()),
+                "recipe mismatch",
+            ),
+        ];
+        for (name, skew, want) in cases {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let dialer = std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let mut h = Handshake {
+                    version: HS_VERSION,
+                    dp: 2,
+                    rank: 1,
+                    nonce: 77,
+                    recipe: "w8a8g8".to_string(),
+                };
+                skew(&mut h);
+                write_msg(&mut s, MSG_HELLO, &encode_handshake(&h)).unwrap();
+                let never = AtomicBool::new(false);
+                read_msg(&mut s, &never, Some(Instant::now() + Duration::from_secs(20)))
+            });
+            let err = listen(listener, 2, Duration::from_secs(20), 77, "w8a8g8")
+                .map(|_| ())
+                .unwrap_err();
+            let err = format!("{err:#}");
+            assert!(err.contains(want), "case {name}: got {err:?}");
+            // the dialer was told why before the close — typed, not a hang
+            let reply = dialer.join().unwrap();
+            match reply {
+                Ok(Some((kind, payload))) => {
+                    assert_eq!(kind, MSG_ABORT, "case {name}");
+                    let text = String::from_utf8_lossy(&payload).into_owned();
+                    assert!(text.contains(want), "case {name}: dialer saw {text:?}");
+                }
+                other => panic!("case {name}: dialer got {:?}", other.map(|o| o.map(|(k, _)| k))),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_side_rejects_a_skewed_leader() {
+        // a "leader" that answers the handshake with the wrong nonce
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let fake = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let never = AtomicBool::new(false);
+            let _ = read_msg(&mut s, &never, None).unwrap();
+            let reply = Handshake {
+                version: HS_VERSION,
+                dp: 2,
+                rank: 0,
+                nonce: 999, // wrong run
+                recipe: "w8a8g8".to_string(),
+            };
+            write_msg(&mut s, MSG_HELLO, &encode_handshake(&reply)).unwrap();
+            s
+        });
+        let err = connect(addr, 1, 2, Duration::from_secs(20), 77, "w8a8g8")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("leader handshake mismatch"), "got: {err}");
+        let _ = fake.join();
+    }
+}

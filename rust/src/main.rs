@@ -73,6 +73,8 @@ fn hp_from(args: &Args) -> Result<TrainHp> {
     hp.dp = args.usize_or("dp", 1)?;
     hp.dist_transport = DistTransport::parse(&args.get_or("transport", "filesystem"))?;
     hp.dist_overlap = on_off(args, "overlap", hp.dist_overlap)?;
+    hp.dist_listen = args.get("listen").map(str::to_string);
+    hp.dist_connect = args.get("connect").map(str::to_string);
     Ok(hp)
 }
 
@@ -160,16 +162,20 @@ USAGE: qpretrain <subcommand> [--options]
                (--quant takes any recipe, e.g. w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc;
                 legacy --structure w_pc --wbits 8 flags still work)
   dist-train   --model micro --quant w8a8g8 --steps 300 --dp 2 [--out DIR]
-               [--transport filesystem|channel] [--overlap on|off]
+               [--transport filesystem|channel|socket] [--overlap on|off]
+               [--listen HOST:PORT]
                N-way data parallelism: worker processes over the run-dir
-               exchange protocol (<out>/dist), or — with
-               --transport channel — worker threads of this process over
-               in-memory channels (no out dir needed). --overlap on (the
-               default) publishes each cover subtree the moment its leaf
-               range finishes backward. Gradients ship int8 when the
-               recipe's g policy is 8-bit symmetric pt/ptok, f32
-               otherwise. Bit-identical to --dp 1 at matched global batch
-               on every transport/overlap combination.
+               exchange protocol (<out>/dist), worker threads of this
+               process over in-memory channels (--transport channel, no
+               out dir needed), or worker processes dialing rank 0 over
+               TCP (--transport socket: rank 0 binds --listen, default
+               127.0.0.1:0, and spawns workers pointed at the bound
+               address; a versioned QDGH handshake rejects strangers).
+               --overlap on (the default) publishes each cover subtree
+               the moment its leaf range finishes backward. Gradients
+               ship int8 when the recipe's g policy is 8-bit symmetric
+               pt/ptok, f32 otherwise. Bit-identical to --dp 1 at matched
+               global batch on every transport/overlap combination.
   eval         --ckpt runs/train/t4/baseline_s300_seed1337 [--suite ppl|fewshot|all]
   ptq          --ckpt DIR --mode weights|acts --bits 8 --gran per_channel
   sharpness    --ckpt DIR [--radii 0.001,0.01,0.1]
@@ -188,10 +194,10 @@ USAGE: qpretrain <subcommand> [--options]
                one-at-a-time decode); prints tokens/s, TTFT, occupancy
   selftest     native-backend validation against the rust quant oracle
   digest       [--steps 8 --out digest.json --dp N]
-               [--transport filesystem|channel] [--overlap on|off]
+               [--transport filesystem|channel|socket] [--overlap on|off]
                deterministic micro-train digest; byte-identical across
                threads, QPRETRAIN_SIMD / QPRETRAIN_INT8 legs, every --dp,
-               both transports and both overlap settings
+               all three transports and both overlap settings
   list         models / recipe grammar / experiments
 
 Global options:
@@ -275,6 +281,9 @@ fn cmd_dist_train(args: &Args) -> Result<()> {
 }
 
 /// `dist-worker`: internal rank-k entrypoint spawned by `dist-train`.
+/// Filesystem workers need `--out` (the leader's run dir holds the
+/// exchange protocol); socket workers need `--connect` instead (the
+/// leader's bound address) — `dist_worker` rejects a missing one loudly.
 fn cmd_dist_worker(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
     let quant = quant_from(args)?;
@@ -283,7 +292,7 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     let model = args.get_or("model", "t4");
     let mut cfg = qpretrain::train::TrainCfg::new(&model, quant, hp);
     cfg.stop_on_divergence = !args.flag("no-early-stop");
-    cfg.out_dir = Some(PathBuf::from(args.req("out")?));
+    cfg.out_dir = args.get("out").map(PathBuf::from);
     qpretrain::dist::dist_worker(&rt, &cfg, rank)
 }
 

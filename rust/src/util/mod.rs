@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod net;
 pub mod npy;
 pub mod quickcheck;
 pub mod rng;

@@ -1,0 +1,86 @@
+//! Socket-address parsing for the dist socket transport (`--listen` /
+//! `--connect`). The offline crate set has no url/clap helpers, so this is
+//! a thin, loudly-erroring wrapper over `std::net`.
+
+use std::net::{SocketAddr, ToSocketAddrs};
+
+use anyhow::{bail, Context, Result};
+
+/// Parse a `host:port` string into a [`SocketAddr`].
+///
+/// Accepted spellings:
+/// - `127.0.0.1:9000`, `[::1]:9000` — literal IP + port (no resolution);
+/// - `:9000` — shorthand for `127.0.0.1:9000` (loopback, the single-machine
+///   dist default);
+/// - `somehost:9000` — resolved through the system resolver (`/etc/hosts`
+///   works offline); the first resolved address wins.
+///
+/// A missing or non-numeric port is a loud error — the dist transport never
+/// guesses a port (rank 0 binds `127.0.0.1:0` to *ask the OS* for one, which
+/// is different from the user omitting it).
+pub fn parse_addr(spec: &str) -> Result<SocketAddr> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        bail!("empty socket address (expected host:port)");
+    }
+    let full = if spec.starts_with(':') && spec[1..].bytes().all(|b| b.is_ascii_digit()) {
+        format!("127.0.0.1{spec}")
+    } else {
+        spec.to_string()
+    };
+    // Literal ip:port first: no resolver involved, exact error messages.
+    if let Ok(addr) = full.parse::<SocketAddr>() {
+        return Ok(addr);
+    }
+    let Some((host, port)) = full.rsplit_once(':') else {
+        bail!("socket address {spec:?} has no port (expected host:port)");
+    };
+    if host.is_empty() || port.is_empty() || !port.bytes().all(|b| b.is_ascii_digit()) {
+        bail!("socket address {spec:?} is malformed (expected host:port with a numeric port)");
+    }
+    full.to_socket_addrs()
+        .with_context(|| format!("resolving socket address {spec:?}"))?
+        .next()
+        .with_context(|| format!("socket address {spec:?} resolved to no addresses"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_v4_and_v6_parse() {
+        assert_eq!(parse_addr("127.0.0.1:9000").unwrap(), "127.0.0.1:9000".parse().unwrap());
+        assert_eq!(parse_addr(" 10.0.0.2:1 ").unwrap(), "10.0.0.2:1".parse().unwrap());
+        assert_eq!(parse_addr("[::1]:4000").unwrap(), "[::1]:4000".parse().unwrap());
+    }
+
+    #[test]
+    fn bare_port_defaults_to_loopback() {
+        assert_eq!(parse_addr(":9000").unwrap(), "127.0.0.1:9000".parse().unwrap());
+    }
+
+    #[test]
+    fn port_zero_is_legal_for_os_assignment() {
+        assert_eq!(parse_addr("127.0.0.1:0").unwrap().port(), 0);
+    }
+
+    #[test]
+    fn hostnames_resolve() {
+        // /etc/hosts carries localhost even offline.
+        let addr = parse_addr("localhost:8125").unwrap();
+        assert_eq!(addr.port(), 8125);
+        assert!(addr.ip().is_loopback());
+    }
+
+    #[test]
+    fn malformed_specs_are_loud_errors() {
+        for bad in ["", "   ", "127.0.0.1", "host", "host:", ":", "host:port", "1.2.3.4:99x"] {
+            let err = parse_addr(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("socket address") || err.contains("empty socket address"),
+                "bad spec {bad:?} gave unexpected error {err:?}"
+            );
+        }
+    }
+}

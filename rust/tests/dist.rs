@@ -2,19 +2,25 @@
 //! **bit-identical** to a single-process run at matched global batch —
 //! losses, grad norms, validation, and the full final (params, m, v)
 //! state — for both the f32 and the quantized int8 gradient exchange,
-//! under both settings of the int8-accumulator knob, on both transports
-//! (filesystem processes, in-process channels) and with publish/backward
-//! overlap on or off. Plus loud-failure coverage for the exchange
-//! protocols.
+//! under both settings of the int8-accumulator knob, on all three
+//! transports (filesystem processes, in-process channels, TCP sockets)
+//! and with publish/backward overlap on or off. Plus loud-failure
+//! coverage for the exchange protocols, including the socket join
+//! handshake and mid-run peer death.
 
 use std::collections::HashSet;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use qpretrain::backend::native::{int8_gemm_enabled, set_int8_gemm};
 use qpretrain::config::{DistTransport, QuantRecipe, TrainHp};
-use qpretrain::dist::frame::{Frame, WireNode, WireTensor};
+use qpretrain::dist::frame::{self, Frame, WireNode, WireTensor};
+use qpretrain::dist::socket::{
+    self, encode_handshake, epoch_nonce, Handshake, HS_VERSION, MSG_ABORT, MSG_FRAME, MSG_HELLO,
+};
 use qpretrain::dist::{dist_train, wire_policy, Exchange, Transport};
 use qpretrain::runtime::Runtime;
 use qpretrain::train::{TrainCfg, TrainResult};
@@ -134,9 +140,11 @@ fn nway_run_is_bit_identical_to_single_process() {
 }
 
 /// The transport and the overlap knob are wall-clock choices only: every
-/// {filesystem, channel} x {overlap on, off} combination at dp=2 — plus
-/// channel at dp=3 and the f32 wire on channel — reproduces the dp=1
-/// trajectory bit-for-bit. The channel transport needs no out dir at all.
+/// {filesystem, channel, socket} x {overlap on, off} combination at dp=2
+/// — plus channel and socket at dp=3 and the f32 wire on channel and
+/// socket — reproduces the dp=1 trajectory bit-for-bit. The channel and
+/// socket transports need no out dir at all (the socket legs spawn real
+/// `dist-worker` subprocesses dialing rank 0 over loopback).
 #[test]
 fn every_transport_and_overlap_combination_is_bit_identical() {
     setup_bin();
@@ -145,7 +153,11 @@ fn every_transport_and_overlap_combination_is_bit_identical() {
     set_int8_gemm(true);
 
     let reference = run_t("w8a8g8", 1, None, DistTransport::Filesystem, true);
-    for transport in [DistTransport::Filesystem, DistTransport::Channel] {
+    for transport in [
+        DistTransport::Filesystem,
+        DistTransport::Channel,
+        DistTransport::Socket,
+    ] {
         for overlap in [true, false] {
             let out = (transport == DistTransport::Filesystem).then(|| {
                 tmp_dir(&format!("matrix_{}_{}", transport.as_str(), u8::from(overlap)))
@@ -161,13 +173,22 @@ fn every_transport_and_overlap_combination_is_bit_identical() {
             }
         }
     }
-    // channel at dp=3 (odd shard split -> carry nodes on the wire)
-    let r = run_t("w8a8g8", 3, None, DistTransport::Channel, true);
-    assert_bit_identical(&reference, &r, "w8a8g8 dp=3 channel");
-    // f32 wire over channels
+    // channel and socket at dp=3 (odd shard split -> carry nodes on the
+    // wire, and on socket the hub relays worker<->worker frames)
+    for transport in [DistTransport::Channel, DistTransport::Socket] {
+        let r = run_t("w8a8g8", 3, None, transport, true);
+        assert_bit_identical(
+            &reference,
+            &r,
+            &format!("w8a8g8 dp=3 {}", transport.as_str()),
+        );
+    }
+    // f32 wire over channels and sockets
     let f32_ref = run_t("base", 1, None, DistTransport::Filesystem, true);
-    let r = run_t("base", 2, None, DistTransport::Channel, true);
-    assert_bit_identical(&f32_ref, &r, "base dp=2 channel");
+    for transport in [DistTransport::Channel, DistTransport::Socket] {
+        let r = run_t("base", 2, None, transport, true);
+        assert_bit_identical(&f32_ref, &r, &format!("base dp=2 {}", transport.as_str()));
+    }
 
     set_int8_gemm(prev);
 }
@@ -379,4 +400,181 @@ fn exchange_rejects_corrupt_frames() {
     let mut ex0 = Exchange::new(&dir, 0, 2, Duration::from_secs(30)).unwrap();
     assert!(ex0.collect(1).is_err(), "corrupt frame must be rejected");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// socket transport: loud-failure coverage over real TCP
+// ---------------------------------------------------------------------------
+
+/// Write one `kind u8 | len u32 | payload` socket message (the raw-client
+/// side of the transport's stream framing, hand-rolled so these tests
+/// exercise the wire format itself, not the transport's own writer).
+fn wmsg(s: &mut TcpStream, kind: u8, payload: &[u8]) {
+    let mut b = vec![kind];
+    b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    b.extend_from_slice(payload);
+    s.write_all(&b).unwrap();
+}
+
+fn read_exact_or_eof(s: &mut TcpStream, buf: &mut [u8]) -> Option<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match s.read(&mut buf[filled..]) {
+            Ok(0) => return None,
+            Ok(n) => filled += n,
+            Err(e) => panic!("test socket read failed: {e}"),
+        }
+    }
+    Some(())
+}
+
+/// Read one socket message; `None` on a clean close.
+fn rmsg(s: &mut TcpStream) -> Option<(u8, Vec<u8>)> {
+    let mut hdr = [0u8; 5];
+    read_exact_or_eof(s, &mut hdr)?;
+    let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+    let mut payload = vec![0u8; len];
+    read_exact_or_eof(s, &mut payload)?;
+    Some((hdr[0], payload))
+}
+
+/// A real `dist-worker` subprocess killed mid-step: the leader's next
+/// collect must fail with the hung-up-peer error as soon as the kernel
+/// delivers the dead process's FIN — not by burning the 60 s deadline.
+#[test]
+fn socket_worker_killed_mid_step_dies_loudly_not_by_timeout() {
+    setup_bin();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = TrainCfg::new("micro", QuantRecipe::parse("base").unwrap(), hp(5, 2));
+    let nonce = epoch_nonce(&cfg);
+    let label = cfg.quant.label();
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_qpretrain"))
+        .args([
+            "dist-worker",
+            "--rank",
+            "1",
+            "--dp",
+            "2",
+            "--model",
+            "micro",
+            "--quant",
+            "base",
+            "--steps",
+            "5",
+            "--seed",
+            &cfg.hp.seed.to_string(),
+            "--threads",
+            "1",
+            "--transport",
+            "socket",
+            "--connect",
+            &addr.to_string(),
+        ])
+        .spawn()
+        .unwrap();
+    let mut leader = socket::listen(listener, 2, Duration::from_secs(60), nonce, &label).unwrap();
+    // step 1: the worker publishes its shipment, then blocks collecting
+    // ours (which never comes) — exactly mid-step
+    let got = leader.collect(1).unwrap();
+    assert_eq!(got.len(), 1, "one merged frame from the one worker");
+    assert!(got.iter().all(|f| f.step == 1 && f.rank == 1));
+    child.kill().unwrap();
+    child.wait().unwrap();
+    let t = Instant::now();
+    let err = leader.collect(2).unwrap_err().to_string();
+    assert!(err.contains("hung up"), "got: {err}");
+    assert!(
+        t.elapsed() < Duration::from_secs(10),
+        "peer death must be detected by EOF, not the 60s deadline ({:?})",
+        t.elapsed()
+    );
+}
+
+/// A dialer carrying another run's epoch nonce is rejected with a typed
+/// error on the leader, and told why over the wire (`ABRT`) — not left to
+/// hang or silently dropped.
+#[test]
+fn socket_listen_rejects_a_dialer_from_a_different_run() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let dialer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let hello = encode_handshake(&Handshake {
+            version: HS_VERSION,
+            dp: 2,
+            rank: 1,
+            nonce: 0xBAD,
+            recipe: "w8a8g8".to_string(),
+        });
+        wmsg(&mut s, MSG_HELLO, &hello);
+        rmsg(&mut s)
+    });
+    let err = socket::listen(listener, 2, Duration::from_secs(30), 0x600D, "w8a8g8")
+        .map(|_| ())
+        .unwrap_err();
+    let err = format!("{err:#}");
+    assert!(err.contains("nonce mismatch"), "got: {err}");
+    match dialer.join().unwrap() {
+        Some((kind, text)) => {
+            assert_eq!(kind, MSG_ABORT, "the rejection must be a typed ABRT");
+            let text = String::from_utf8_lossy(&text).into_owned();
+            assert!(text.contains("nonce mismatch"), "dialer saw: {text}");
+        }
+        None => panic!("dialer saw a silent close, not a typed ABRT"),
+    }
+}
+
+/// A bit flip inside a QDGF frame that crossed TCP intact as far as the
+/// stream framing is concerned must still die on the frame's own FNV-64
+/// integrity check at collect.
+#[test]
+fn socket_rejects_a_corrupt_frame_after_a_valid_join() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let hello = encode_handshake(&Handshake {
+            version: HS_VERSION,
+            dp: 2,
+            rank: 1,
+            nonce: 9,
+            recipe: "base".to_string(),
+        });
+        wmsg(&mut s, MSG_HELLO, &hello);
+        let (kind, _) = rmsg(&mut s).expect("leader must answer the valid handshake");
+        assert_eq!(kind, MSG_HELLO);
+        let mut bytes = frame::encode(&empty_frame(1, 1, 2));
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        wmsg(&mut s, MSG_FRAME, &bytes);
+        s // keep the connection open: the failure must be the integrity check
+    });
+    let mut leader = socket::listen(listener, 2, Duration::from_secs(30), 9, "base").unwrap();
+    let _s = client.join().unwrap();
+    leader.set_timeout(Duration::from_secs(30));
+    let err = format!("{:#}", leader.collect(1).unwrap_err());
+    assert!(err.contains("integrity"), "got: {err}");
+}
+
+/// `QPRETRAIN_DIST_TIMEOUT_SECS=0` semantics on the socket transport: a
+/// collect with nothing queued fails immediately, it does not poll.
+#[test]
+fn socket_zero_timeout_fails_fast() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let w = std::thread::spawn(move || {
+        socket::connect(addr, 1, 2, Duration::from_secs(30), 5, "base")
+    });
+    let mut leader = socket::listen(listener, 2, Duration::from_secs(30), 5, "base").unwrap();
+    let _worker = w.join().unwrap().unwrap();
+    leader.set_timeout(Duration::ZERO);
+    let t = Instant::now();
+    let err = leader.collect(1).unwrap_err().to_string();
+    assert!(err.contains("timed out"), "got: {err}");
+    assert!(
+        t.elapsed() < Duration::from_millis(200),
+        "zero timeout must not wait ({:?})",
+        t.elapsed()
+    );
 }

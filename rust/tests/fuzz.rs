@@ -11,6 +11,7 @@
 
 use qpretrain::config::QuantRecipe;
 use qpretrain::dist::frame::{self, Frame, WireNode, WireTensor, WireView};
+use qpretrain::dist::socket::{decode_handshake, encode_handshake, Handshake, HS_VERSION};
 use qpretrain::util::json;
 use qpretrain::util::npy;
 use qpretrain::util::rng::Rng;
@@ -305,6 +306,80 @@ fn fuzz_frame_codec_never_panics() {
     );
 }
 
+/// Valid `QDGH` socket-join handshakes: the dp-2 common case, a
+/// higher-rank worker, an empty recipe label, and a long composite one.
+fn handshake_corpus() -> Vec<Vec<u8>> {
+    [
+        Handshake {
+            version: HS_VERSION,
+            dp: 2,
+            rank: 1,
+            nonce: 0xDEAD_BEEF_0BAD_F00D,
+            recipe: "w8a8g8".to_string(),
+        },
+        Handshake {
+            version: HS_VERSION,
+            dp: 7,
+            rank: 6,
+            nonce: 1,
+            recipe: "base".to_string(),
+        },
+        Handshake {
+            version: HS_VERSION,
+            dp: 2,
+            rank: 1,
+            nonce: 0,
+            recipe: String::new(),
+        },
+        Handshake {
+            version: HS_VERSION,
+            dp: 3,
+            rank: 2,
+            nonce: u64::MAX,
+            recipe: "w4_pc+a8_ptok+g8_ptok+m1_8_pt+m2_8_pc".to_string(),
+        },
+    ]
+    .iter()
+    .map(encode_handshake)
+    .collect()
+}
+
+/// The socket transport's `QDGH` join handshake under the same 10k-round
+/// mutation loop: truncations, version skews, oversized recipe-length
+/// prefixes and flipped magic must all return `Err` (never panic, never
+/// over-index), and any *accepted* byte string must re-encode to exactly
+/// itself — the codec has one spelling per handshake.
+#[test]
+fn fuzz_handshake_codec_never_panics() {
+    let corpus = handshake_corpus();
+    let mut rng = Rng::new(0xF00D_0006);
+    let mut accepted = 0usize;
+    for round in 0..ROUNDS {
+        let base = &corpus[round % corpus.len()];
+        // unlike the frame codec there is no checksum, so plenty of
+        // mutations stay valid; the pristine interleave still pins the
+        // accept path deterministically
+        let mutated = if round % 251 == 0 {
+            base.clone()
+        } else {
+            mutate(base, &mut rng)
+        };
+        if let Ok(h) = decode_handshake(&mutated) {
+            accepted += 1;
+            assert_eq!(h.version, HS_VERSION, "only the spoken version is accepted");
+            assert_eq!(
+                encode_handshake(&h),
+                mutated,
+                "accepted handshake bytes must be the canonical encoding"
+            );
+        }
+    }
+    assert!(
+        accepted >= ROUNDS / 251,
+        "accept path untested ({accepted} accepted)"
+    );
+}
+
 #[test]
 fn fuzz_unmutated_corpus_is_valid() {
     // guard the fuzz loops against a silently-broken corpus: every seed
@@ -320,5 +395,13 @@ fn fuzz_unmutated_corpus_is_valid() {
     for bytes in frame_corpus() {
         let f = frame::decode(&bytes).unwrap();
         assert_eq!(frame::encode(&f), bytes, "frame corpus must be canonical");
+    }
+    for bytes in handshake_corpus() {
+        let h = decode_handshake(&bytes).unwrap();
+        assert_eq!(
+            encode_handshake(&h),
+            bytes,
+            "handshake corpus must be canonical"
+        );
     }
 }
